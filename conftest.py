@@ -1,0 +1,7 @@
+"""Repo-root pytest config: make `pytest python/tests/` work from here
+by putting the compile package's parent on sys.path."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "python"))

@@ -1,0 +1,221 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client.  Python never runs on the request path.
+
+HLO text — NOT ``lowered.compile()`` / proto ``.serialize()`` — is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --outdir ../artifacts [--quick] [--only KIND]
+
+Produces ``<outdir>/<name>.hlo.txt`` per artifact plus a
+``manifest.json`` describing every artifact's kind, parameters and
+input/output signature, which the rust runtime uses for shape lookup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import kmeans_pallas
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Artifact suite definition
+# ---------------------------------------------------------------------------
+
+# (k, d, b) mini-batch configurations matching the paper's experiments:
+#   (10, 10, 500)   — the ~1 TB synthetic strong-scaling workload (figs 1/5/9/10)
+#   (100, 10, 500)  — convergence + communication-frequency experiments (figs 8/13)
+#   (100, 128, 500) — the HOG image-classification codebook workload (figs 6/7)
+#   (100, 32, 256)  — the e2e example workload
+KMEANS_CONFIGS = [
+    (10, 10, 500),
+    (100, 10, 500),
+    (100, 128, 500),
+    (100, 32, 256),
+]
+N_BUF = 4  # external buffers per worker (fig. 2: a few random recipients)
+EVAL_CHUNK = 4096  # samples per quant_error evaluation call
+
+# Linear-model configs (d, b): the d=128 HOG feature space.
+LINEAR_CONFIGS = [(128, 500)]
+
+# MLP config (d, h, c, b) for the e2e generality example.
+MLP_CONFIGS = [(32, 64, 10, 256)]
+
+QUICK_KMEANS = [(4, 8, 64)]
+QUICK_LINEAR = [(8, 64)]
+QUICK_MLP = [(8, 16, 4, 32)]
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _sig(shapes):
+    """JSON signature entry: [["f32", [500, 10]], ...]."""
+    out = []
+    for s in shapes:
+        out.append(["f32", list(s.shape)])
+    return out
+
+
+def suite(quick: bool = False):
+    """Yield (name, kind, params, fn, example_arg_specs)."""
+    kmeans = QUICK_KMEANS if quick else KMEANS_CONFIGS
+    lin = QUICK_LINEAR if quick else LINEAR_CONFIGS
+    mlps = QUICK_MLP if quick else MLP_CONFIGS
+    eval_chunk = 256 if quick else EVAL_CHUNK
+
+    for k, d, b in kmeans:
+        tag = f"k{k}_d{d}_b{b}"
+        yield (
+            f"asgd_iter_{tag}_n{N_BUF}",
+            "asgd_iter",
+            {"k": k, "d": d, "b": b, "n": N_BUF},
+            model.asgd_iter,
+            [spec((b, d)), spec((k, d)), spec((N_BUF, k, d)), spec((1,))],
+        )
+        yield (
+            f"asgd_iter_pc_{tag}_n{N_BUF}",
+            "asgd_iter_pc",
+            {"k": k, "d": d, "b": b, "n": N_BUF},
+            model.asgd_iter_percenter,
+            [spec((b, d)), spec((k, d)), spec((N_BUF, k, d)), spec((1,))],
+        )
+        yield (
+            f"kmeans_step_{tag}",
+            "kmeans_step",
+            {"k": k, "d": d, "b": b},
+            model.kmeans_step,
+            [spec((b, d)), spec((k, d)), spec((1,))],
+        )
+        yield (
+            f"kmeans_stats_{tag}",
+            "kmeans_stats",
+            {"k": k, "d": d, "b": b},
+            model.kmeans_stats,
+            [spec((b, d)), spec((k, d))],
+        )
+        yield (
+            f"parzen_merge_k{k}_d{d}_n{N_BUF}",
+            "parzen_merge",
+            {"k": k, "d": d, "n": N_BUF},
+            model.parzen_merge,
+            [spec((k, d)), spec((k, d)), spec((N_BUF, k, d)), spec((1,))],
+        )
+        yield (
+            f"quant_error_k{k}_d{d}_m{eval_chunk}",
+            "quant_error",
+            {"k": k, "d": d, "m": eval_chunk},
+            model.quant_error,
+            [spec((eval_chunk, d)), spec((k, d))],
+        )
+
+    for d, b in lin:
+        yield (
+            f"linreg_step_d{d}_b{b}",
+            "linreg_step",
+            {"d": d, "b": b},
+            model.linreg_step,
+            [spec((b, d)), spec((b,)), spec((d,)), spec((1,))],
+        )
+        yield (
+            f"logreg_step_d{d}_b{b}",
+            "logreg_step",
+            {"d": d, "b": b},
+            model.logreg_step,
+            [spec((b, d)), spec((b,)), spec((d,)), spec((1,))],
+        )
+
+    for d, h, c, b in mlps:
+        p = model.mlp_size(d, h, c)
+        yield (
+            f"mlp_step_d{d}_h{h}_c{c}_b{b}",
+            "mlp_step",
+            {"d": d, "h": h, "c": c, "b": b, "p": p},
+            functools.partial(model.mlp_step, d=d, h=h, c=c),
+            [spec((b, d)), spec((b, c)), spec((p,)), spec((1,))],
+        )
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    """jit -> stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def output_signature(fn, arg_specs):
+    out = jax.eval_shape(fn, *arg_specs)
+    leaves = jax.tree_util.tree_leaves(out)
+    return _sig(leaves)
+
+
+def build(outdir: str, quick: bool = False, only: str | None = None) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"version": 1, "quick": quick, "artifacts": []}
+    for name, kind, params, fn, arg_specs in suite(quick):
+        if only and kind != only:
+            continue
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        text = to_hlo_text(fn, arg_specs)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "kind": kind,
+            "params": params,
+            "inputs": _sig(arg_specs),
+            "outputs": output_signature(fn, arg_specs),
+        }
+        if kind in ("asgd_iter", "kmeans_step", "kmeans_stats"):
+            entry["schedule"] = kmeans_pallas.schedule_summary(
+                params["b"], params["k"], params["d"]
+            )
+        manifest["artifacts"].append(entry)
+        print(f"  {name}: {len(text)} chars", file=sys.stderr)
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="tiny test suite")
+    ap.add_argument("--only", default=None, help="restrict to one artifact kind")
+    args = ap.parse_args()
+    m = build(args.outdir, quick=args.quick, only=args.only)
+    print(f"wrote {len(m['artifacts'])} artifacts to {args.outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""L1 Pallas kernel: the K-Means mini-batch compute hot-spot.
+
+This is the numeric core of the paper's inner loop (alg. 4 line 4-5 /
+alg. 5 line 7-8): assign every sample of a mini-batch to its nearest
+prototype and accumulate per-cluster sufficient statistics.
+
+TPU-first design (see DESIGN.md §Hardware-Adaptation):
+
+  * the b x k distance computation is expressed as ``x @ w^T`` so it maps
+    onto the MXU systolic array, with the rank-1 ``||w_k||^2`` correction
+    added on the VPU (the per-sample ``||x_i||^2`` term is constant in k
+    and only needed for the loss, not the argmin);
+  * per-cluster accumulation is a one-hot matmul ``onehot^T @ x`` — again
+    MXU work — instead of a serial scatter;
+  * the mini-batch is tiled over the grid with ``BlockSpec``; the
+    prototype matrix ``w`` ([k, d], at most k*d = 128k floats in every
+    paper configuration) stays resident in VMEM across all grid steps, as
+    do the [k, d] partial sums.  VMEM footprint per grid step is
+    ``bt*d + 2*k*d + bt*k + k + O(bt)`` floats — see
+    ``vmem_footprint_bytes`` below, asserted < 16 MiB at lower time.
+
+The kernel is lowered with ``interpret=True``: the CPU PJRT client cannot
+execute Mosaic custom-calls, so interpret mode is the correctness (and
+artifact) path; real-TPU efficiency is estimated analytically in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget of a real TPU core; the BlockSpec schedule is asserted
+# against this at lower time even though we execute in interpret mode.
+VMEM_BYTES = 16 * 1024 * 1024
+
+
+def pick_batch_tile(b: int, k: int, d: int, vmem_bytes: int = VMEM_BYTES) -> int:
+    """Largest divisor of b (<= 1024) whose grid step fits in VMEM.
+
+    Perf note (EXPERIMENTS.md §Perf, L1 iteration 1): an earlier version
+    only considered power-of-two tiles; for the paper's b=500 that falls
+    through to bt=4 -> 125 grid steps, and in interpret mode each grid
+    step is a lowered loop trip.  Searching all divisors lets b=500 run
+    as a single resident block (footprint at k=100, d=128 is ~0.6 MiB,
+    far under the 16 MiB VMEM budget), cutting XLA-path latency ~5x.
+    """
+    best = 1
+    for bt in range(1, min(b, 1024) + 1):
+        if b % bt == 0 and vmem_footprint_bytes(bt, k, d) <= vmem_bytes:
+            best = bt
+    return best
+
+
+def vmem_footprint_bytes(bt: int, k: int, d: int) -> int:
+    """Float32 VMEM bytes for one grid step of the stats kernel.
+
+    x-tile [bt, d] + w [k, d] + sums [k, d] + scores [bt, k]
+    + counts [k] + per-sample temporaries [bt].
+    """
+    floats = bt * d + 2 * k * d + bt * k + k + 2 * bt
+    return 4 * floats
+
+
+def _stats_kernel(x_ref, w_ref, sums_ref, counts_ref, loss_ref):
+    """Grid-accumulating kernel body.
+
+    Outputs have constant index maps, so they stay resident across the
+    grid; step 0 zero-initializes, every step accumulates its tile.
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    x = x_ref[...]  # [bt, d]
+    w = w_ref[...]  # [k, d]
+
+    # MXU: G = x @ w^T, the only O(bt*k*d) term.
+    g = jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+    wn = jnp.sum(w * w, axis=1)  # [k]   (VPU, O(k*d))
+    scores = wn[None, :] - 2.0 * g  # ||x-w||^2 - ||x||^2
+
+    assign = jnp.argmin(scores, axis=1)  # [bt]
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) == assign[:, None]
+    ).astype(x.dtype)
+
+    # MXU again: per-cluster sums as a one-hot matmul (no scatter).
+    sums_ref[...] += jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)
+    counts_ref[...] += jnp.sum(onehot, axis=0)
+
+    xn = jnp.sum(x * x, axis=1)  # [bt]
+    min_sq = jnp.maximum(xn + jnp.min(scores, axis=1), 0.0)
+    loss_ref[...] += 0.5 * jnp.sum(min_sq)
+
+
+def kmeans_stats(x: jax.Array, w: jax.Array, *, batch_tile: int | None = None):
+    """Pallas mini-batch statistics: (sums [k,d], counts [k], loss_sum [1]).
+
+    Matches ``ref.kmeans_stats`` with loss_sum = b * loss (the kernel
+    returns the un-normalized sum; callers divide by b).
+    """
+    b, d = x.shape
+    k, d2 = w.shape
+    assert d == d2, f"x dim {d} != w dim {d2}"
+    bt = batch_tile or pick_batch_tile(b, k, d)
+    assert b % bt == 0, f"batch {b} not divisible by tile {bt}"
+    assert vmem_footprint_bytes(bt, k, d) <= VMEM_BYTES, (
+        f"BlockSpec schedule exceeds VMEM: bt={bt} k={k} d={d} -> "
+        f"{vmem_footprint_bytes(bt, k, d)} bytes"
+    )
+    grid = (b // bt,)
+    sums, counts, loss = pl.pallas_call(
+        _stats_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),  # stream x tiles
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # w resident
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # sums resident
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w)
+    return sums, counts, loss
+
+
+def kmeans_step(x: jax.Array, w: jax.Array, eps: jax.Array, *, batch_tile=None):
+    """One mini-batch SGD step through the Pallas stats kernel.
+
+    eps: [1] float32.  Returns (new_w [k,d], counts [k], loss []).
+    Gradient: grad_k = (counts_k * w_k - sums_k) / b  (cf. ref.kmeans_grad).
+    """
+    b = x.shape[0]
+    sums, counts, loss_sum = kmeans_stats(x, w, batch_tile=batch_tile)
+    grad = (counts[:, None] * w - sums) / b
+    return w - eps[0] * grad, counts, loss_sum[0] / b
+
+
+# Rough analytic performance model used by EXPERIMENTS.md §Perf ----------
+
+
+def flops_per_batch(b: int, k: int, d: int) -> int:
+    """MXU flops of one stats invocation: distances + one-hot accumulation."""
+    return 2 * b * k * d * 2  # two [b,k]x[k,d]-class matmuls
+
+
+def mxu_utilization_estimate(b: int, k: int, d: int, bt: int | None = None) -> float:
+    """Fraction of MXU lanes doing useful work for the chosen tiling.
+
+    The 128x128 systolic array is fed [bt, d] x [d, k] tiles; utilization
+    degrades when d or k are far below 128 (the paper's d=10/k=10 configs
+    are VPU-bound on TPU; d=128 codebook configs saturate a full MXU pass).
+    """
+    bt = bt or pick_batch_tile(b, k, d)
+    eff_m = min(bt, 128) / 128.0
+    eff_k = min(d, 128) / 128.0
+    eff_n = min(k, 128) / 128.0
+    return eff_m * eff_k * eff_n
+
+
+@functools.lru_cache(maxsize=None)
+def schedule_summary(b: int, k: int, d: int) -> str:
+    bt = pick_batch_tile(b, k, d)
+    return (
+        f"grid=({b // bt},) tile={bt}x{d} vmem={vmem_footprint_bytes(bt, k, d)}B "
+        f"mxu~{mxu_utilization_estimate(b, k, d):.3f} flops={flops_per_batch(b, k, d)}"
+    )

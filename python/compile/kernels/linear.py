@@ -1,0 +1,119 @@
+"""L1 Pallas kernels: linear-model mini-batch gradients.
+
+The paper positions ASGD as "a numeric core for scalable distributed ML
+algorithms" in general, with K-Means as the evaluation vehicle.  These
+kernels make the generality concrete: least-squares and logistic
+regression mini-batch gradient steps that plug into the same ASGD
+coordinator (the rust ``Model`` trait dispatches on artifact kind).
+
+Same schedule as the K-Means kernel: stream [bt, d] sample tiles through
+VMEM, keep the [d] weight vector and [d] gradient accumulator resident,
+do the x^T r reduction as an MXU matvec.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import kmeans_pallas as kp
+
+
+def _pick_tile(b: int, d: int) -> int:
+    bt = 512
+    while bt > 1 and b % bt != 0:
+        bt //= 2
+    return bt if b % bt == 0 else b
+
+
+def _linreg_kernel(x_ref, y_ref, w_ref, grad_ref, loss_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    x = x_ref[...]  # [bt, d]
+    y = y_ref[...]  # [bt]
+    w = w_ref[...]  # [d]
+    r = jnp.dot(x, w, preferred_element_type=jnp.float32) - y  # [bt]
+    grad_ref[...] += jnp.dot(r, x, preferred_element_type=jnp.float32)
+    loss_ref[...] += 0.5 * jnp.sum(r * r)
+
+
+def _logreg_kernel(x_ref, y_ref, w_ref, grad_ref, loss_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        grad_ref[...] = jnp.zeros_like(grad_ref)
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+
+    x = x_ref[...]
+    y = y_ref[...]
+    w = w_ref[...]
+    z = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    p = jax.nn.sigmoid(z)
+    grad_ref[...] += jnp.dot(p - y, x, preferred_element_type=jnp.float32)
+    # stable BCE: max(z,0) - z*y + log1p(exp(-|z|))
+    loss_ref[...] += jnp.sum(
+        jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))
+    )
+
+
+def _call(kernel, x, y, w, batch_tile=None):
+    b, d = x.shape
+    assert y.shape == (b,) and w.shape == (d,)
+    bt = batch_tile or _pick_tile(b, d)
+    assert b % bt == 0
+    grad, loss = pl.pallas_call(
+        kernel,
+        grid=(b // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((bt,), lambda i: (i,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, y, w)
+    return grad / b, loss[0] / b
+
+
+def linreg_grad(x, y, w, *, batch_tile=None):
+    """Matches ``ref.linreg_grad``: (grad [d], loss [])."""
+    return _call(_linreg_kernel, x, y, w, batch_tile)
+
+
+def logreg_grad(x, y, w, *, batch_tile=None):
+    """Matches ``ref.logreg_grad``: (grad [d], loss [])."""
+    return _call(_logreg_kernel, x, y, w, batch_tile)
+
+
+def linreg_step(x, y, w, eps, *, batch_tile=None):
+    g, loss = linreg_grad(x, y, w, batch_tile=batch_tile)
+    return w - eps[0] * g, loss
+
+
+def logreg_step(x, y, w, eps, *, batch_tile=None):
+    g, loss = logreg_grad(x, y, w, batch_tile=batch_tile)
+    return w - eps[0] * g, loss
+
+
+__all__ = [
+    "linreg_grad",
+    "logreg_grad",
+    "linreg_step",
+    "logreg_step",
+]
+
+_ = kp  # keep the import: shared VMEM constants may be referenced by tooling

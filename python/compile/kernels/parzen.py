@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: the Parzen-window gated asynchronous merge (eq. 2-7).
+
+This is the receive-path half of the ASGD update: given the local state
+``w``, the local mini-batch gradient ``Delta_M`` and a snapshot of the N
+external buffers, apply the gate of eq. (4) and the N-buffer merge of
+eq. (6)/(7), producing the next local state (fig. 4, steps II-IV).
+
+The whole state is small by construction (k*d <= 128k floats in every
+paper configuration — the paper *requires* states to be cheap to ship
+over the wire), so the kernel runs as a single VMEM-resident block; the
+only grid dimension is over the N external buffers, streaming one buffer
+per step and accumulating the gated sum.  This mirrors how the receive
+path walks notification slots on a real rank.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_kernel(w_ref, delta_ref, eps_ref, ext_ref, acc_ref, ngood_ref):
+    """Grid step n: gate external buffer n and accumulate it if accepted."""
+    n = pl.program_id(0)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        ngood_ref[...] = jnp.zeros_like(ngood_ref)
+
+    w = w_ref[...]
+    delta = delta_ref[...]
+    eps = eps_ref[0]
+    ext = ext_ref[...]  # [1, k, d] block of the [N, k, d] input
+    ext = ext[0]
+
+    w_prop = w - eps * delta  # the locally-projected next state
+    a = jnp.sum((w_prop - ext) ** 2)
+    c = jnp.sum((w - ext) ** 2)
+    active = jnp.sum(ext * ext) > 0.0  # lambda(ext), eq. (3)
+    gate = jnp.where((a < c) & active, 1.0, 0.0)  # delta(i, n), eq. (4)
+
+    acc_ref[...] += gate * ext
+    ngood_ref[...] += gate
+
+
+def _finish(w, delta, eps, acc, ngood):
+    """eq. (6): fold the gated sum into the update."""
+    mean = (acc + w) / (ngood[0] + 1.0)
+    delta_bar = w - mean + delta
+    return w - eps[0] * delta_bar, ngood
+
+
+def asgd_merge(w: jax.Array, delta: jax.Array, exts: jax.Array, eps: jax.Array):
+    """Pallas ASGD merge.  Matches ``ref.asgd_merge``.
+
+    w, delta: [k, d]; exts: [N, k, d]; eps: [1].
+    Returns (w_next [k, d], n_good [1]).
+    """
+    k, d = w.shape
+    n_buf = exts.shape[0]
+    assert exts.shape == (n_buf, k, d)
+    acc, ngood = pl.pallas_call(
+        _merge_kernel,
+        grid=(n_buf,),
+        in_specs=[
+            pl.BlockSpec((k, d), lambda n: (0, 0)),  # w resident
+            pl.BlockSpec((k, d), lambda n: (0, 0)),  # delta resident
+            pl.BlockSpec((1,), lambda n: (0,)),  # eps
+            pl.BlockSpec((1, k, d), lambda n: (n, 0, 0)),  # stream buffers
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda n: (0, 0)),
+            pl.BlockSpec((1,), lambda n: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(w, delta, eps, exts)
+    return _finish(w, delta, eps, acc, ngood)

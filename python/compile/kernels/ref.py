@@ -1,0 +1,207 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the *correctness ground truth*: each Pallas kernel in
+``kmeans_pallas.py`` / ``parzen.py`` / ``linear.py`` must match the
+corresponding function here to float32 tolerance across the randomized
+shape/dtype sweeps in ``python/tests/``.
+
+Sign conventions
+----------------
+The paper (eq. 9/10) writes the K-Means "gradient" with a flipped sign
+relative to the true derivative of the quantization error
+``E(w) = sum_i 1/2 (x_i - w_{s_i})^2`` (its eq. 8).  We implement the *true*
+gradient ``dE/dw_k = sum_{i: s_i = k} (w_k - x_i) / m'`` so that the descent
+update ``w <- w - eps * grad`` is the standard converging mini-batch K-Means
+rule (Sculley [17]: ``w <- w + eps (x - w)``).  This matches what the
+paper's experiments actually compute (their curves converge).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# K-Means mini-batch step (eq. 8-10, alg. 4/5 inner step)
+# ---------------------------------------------------------------------------
+
+
+def wsq_scores(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Per (sample, center) score ``||w_k||^2 - 2 x_i . w_k`` ([b, k]).
+
+    Equal to the squared distance up to the per-sample constant ``||x_i||^2``,
+    so argmin over k is the true nearest-center assignment.
+    """
+    wn = jnp.sum(w * w, axis=1)  # [k]
+    g = x @ w.T  # [b, k]  (the MXU-friendly part)
+    return wn[None, :] - 2.0 * g
+
+
+def kmeans_assign(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Index of the closest prototype for every sample (``s_i(w)`` in eq. 8).
+
+    x: [b, d] samples, w: [k, d] prototypes -> [b] int32.
+    Ties broken toward the lower index (argmin semantics).
+    """
+    return jnp.argmin(wsq_scores(x, w), axis=1).astype(jnp.int32)
+
+
+def kmeans_stats(x: jax.Array, w: jax.Array):
+    """Sufficient statistics of a mini-batch under current assignments.
+
+    Returns (sums [k, d], counts [k], loss []):
+      sums_k   = sum of samples assigned to center k
+      counts_k = number of samples assigned to center k
+      loss     = mean over the batch of min_k 1/2 ||x_i - w_k||^2  (eq. 8 / b)
+    """
+    b = x.shape[0]
+    scores = wsq_scores(x, w)
+    assign = jnp.argmin(scores, axis=1)
+    onehot = jax.nn.one_hot(assign, w.shape[0], dtype=x.dtype)  # [b, k]
+    sums = onehot.T @ x  # [k, d]
+    counts = jnp.sum(onehot, axis=0)  # [k]
+    xn = jnp.sum(x * x, axis=1)  # [b]
+    min_sq = xn + jnp.min(scores, axis=1)  # ||x - w_s||^2, >= 0 up to fp error
+    loss = 0.5 * jnp.sum(jnp.maximum(min_sq, 0.0)) / b
+    return sums, counts, loss
+
+
+def kmeans_grad(x: jax.Array, w: jax.Array):
+    """True mini-batch gradient of eq. 8 wrt w, averaged over the batch.
+
+    grad_k = (counts_k * w_k - sums_k) / b   (zero rows for empty clusters)
+    Returns (grad [k, d], counts [k], loss []).
+    """
+    b = x.shape[0]
+    sums, counts, loss = kmeans_stats(x, w)
+    grad = (counts[:, None] * w - sums) / b
+    return grad, counts, loss
+
+
+def kmeans_step(x: jax.Array, w: jax.Array, eps: jax.Array):
+    """One mini-batch SGD step (alg. 4 line 6): ``w - eps * grad``.
+
+    Returns (new_w [k, d], counts [k], loss []).
+    """
+    grad, counts, loss = kmeans_grad(x, w)
+    return w - eps * grad, counts, loss
+
+
+# ---------------------------------------------------------------------------
+# Parzen-window gated asynchronous merge (eq. 2-7)
+# ---------------------------------------------------------------------------
+
+
+def parzen_delta(w: jax.Array, w_prop: jax.Array, ext: jax.Array) -> jax.Array:
+    """The Parzen-window gate delta(i, j) of eq. (4) for one external state.
+
+    ``w_prop = w - eps * Delta_M`` is the locally-projected next state.
+    Accepts (1.0) iff the external state is *closer to the projected state
+    than to the current state*, i.e. it points down the local descent
+    direction.  Inactive (all-zero, lambda of eq. 3) buffers are rejected.
+    """
+    a = jnp.sum((w_prop - ext) ** 2)
+    c = jnp.sum((w - ext) ** 2)
+    active = jnp.sum(ext * ext) > 0.0  # lambda(ext) of eq. (3)
+    return jnp.where((a < c) & active, 1.0, 0.0)
+
+
+def asgd_merge(w: jax.Array, delta: jax.Array, exts: jax.Array, eps: jax.Array):
+    """The full N-buffer ASGD update of eq. (6)/(7).
+
+    w:     [k, d] local state w_t^i
+    delta: [k, d] local mini-batch gradient Delta_M(w_{t+1}^i)
+    exts:  [N, k, d] external-buffer snapshot (zero rows = empty buffer)
+    eps:   [] step size
+
+    Delta_bar = w - (sum_n delta_n * ext_n + w) / (sum_n delta_n + 1) + delta
+    w_next    = w - eps * Delta_bar          (fig. 4, step IV)
+
+    Returns (w_next [k, d], n_good [] float32  -- the number of accepted
+    buffers, the "good messages" statistic of fig. 12).
+    """
+    w_prop = w - eps * delta
+    gates = jax.vmap(lambda e: parzen_delta(w, w_prop, e))(exts)  # [N]
+    n_good = jnp.sum(gates)
+    sel_sum = jnp.einsum("n,nkd->kd", gates, exts)
+    mean = (sel_sum + w) / (n_good + 1.0)
+    delta_bar = w - mean + delta
+    return w - eps * delta_bar, n_good
+
+
+def asgd_merge_percenter(w, delta, exts, eps):
+    """Per-center variant of the merge (the §4.4 partial/partitioned update).
+
+    The gate of eq. (4) is evaluated independently for every cluster center
+    row (the paper partitions updates "along the individual cluster centers
+    of the states").  An all-zero center row in an external buffer is
+    treated as absent (lambda per row).
+    Returns (w_next [k, d], n_good [] -- buffers accepted for >= 1 row).
+    """
+    w_prop = w - eps * delta
+
+    def row_gate(ext):  # ext: [k, d] -> [k]
+        a = jnp.sum((w_prop - ext) ** 2, axis=1)
+        c = jnp.sum((w - ext) ** 2, axis=1)
+        active = jnp.sum(ext * ext, axis=1) > 0.0
+        return jnp.where((a < c) & active, 1.0, 0.0)
+
+    gates = jax.vmap(row_gate)(exts)  # [N, k]
+    n_sel = jnp.sum(gates, axis=0)  # [k]
+    sel_sum = jnp.einsum("nk,nkd->kd", gates, exts)
+    mean = (sel_sum + w) / (n_sel + 1.0)[:, None]
+    delta_bar = w - mean + delta
+    n_good = jnp.sum(jnp.max(gates, axis=1))
+    return w - eps * delta_bar, n_good
+
+
+# ---------------------------------------------------------------------------
+# Linear-model mini-batch gradients (the "numeric core" generality claim)
+# ---------------------------------------------------------------------------
+
+
+def linreg_grad(x: jax.Array, y: jax.Array, w: jax.Array):
+    """Least-squares mini-batch gradient.  x: [b, d], y: [b], w: [d].
+
+    loss = 1/(2b) ||x w - y||^2 ; grad = x^T (x w - y) / b.
+    Returns (grad [d], loss []).
+    """
+    b = x.shape[0]
+    r = x @ w - y
+    return x.T @ r / b, 0.5 * jnp.sum(r * r) / b
+
+
+def logreg_grad(x: jax.Array, y: jax.Array, w: jax.Array):
+    """Logistic-regression mini-batch gradient.  y in {0, 1}.
+
+    loss = mean BCE; grad = x^T (sigmoid(x w) - y) / b.
+    Returns (grad [d], loss []).
+    """
+    b = x.shape[0]
+    z = x @ w
+    p = jax.nn.sigmoid(z)
+    # numerically stable BCE: max(z,0) - z*y + log(1+exp(-|z|))
+    loss = jnp.sum(jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z)))) / b
+    return x.T @ (p - y) / b, loss
+
+
+def linreg_step(x, y, w, eps):
+    g, loss = linreg_grad(x, y, w)
+    return w - eps * g, loss
+
+
+def logreg_step(x, y, w, eps):
+    g, loss = logreg_grad(x, y, w)
+    return w - eps * g, loss
+
+
+# ---------------------------------------------------------------------------
+# Full-dataset quantization error (the evaluation metric, eq. 8)
+# ---------------------------------------------------------------------------
+
+
+def quant_error(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Mean quantization error 1/m sum_i 1/2 ||x_i - w_{s_i}||^2 over a chunk."""
+    _, _, loss = kmeans_stats(x, w)
+    return loss

@@ -1,0 +1,167 @@
+"""L2: the JAX compute graph of the ASGD numeric core.
+
+Every function here is a *whole-iteration* computation that the rust
+coordinator executes as one PJRT call per mini-batch — the hot-path
+boundary is exactly one executable invocation per alg.-5 loop iteration.
+All heavy math lives in the L1 Pallas kernels (``kernels/``); this module
+only composes them and adds the cheap state algebra.
+
+Exported entry points (lowered by ``aot.py``):
+
+  kmeans_stats(x, w)                -> (sums, counts, loss_sum)
+  kmeans_step(x, w, eps)            -> (new_w, counts, loss)
+  asgd_iter(x, w, exts, eps)        -> (w_next, counts, loss, n_good)
+  asgd_iter_percenter(...)          -> same, per-center gating (§4.4)
+  parzen_merge(w, delta, exts, eps) -> (w_next, n_good)
+  quant_error(x, w)                 -> loss
+  linreg_step(x, y, w, eps)         -> (new_w, loss)
+  logreg_step(x, y, w, eps)         -> (new_w, loss)
+  mlp_step(x, y, theta, eps)        -> (new_theta, loss)
+
+``asgd_iter`` is *the* ASGD inner loop (fig. 4 steps I-IV fused):
+mini-batch statistics through the Pallas kernel, gradient formation,
+Parzen-window gating of the external buffers, N-buffer merge, SGD step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kmeans_pallas, linear, parzen
+from .kernels import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# K-Means
+# ---------------------------------------------------------------------------
+
+
+def kmeans_stats(x, w):
+    """Mini-batch sufficient statistics (Pallas): (sums, counts, loss_sum[1])."""
+    return kmeans_pallas.kmeans_stats(x, w)
+
+
+def kmeans_step(x, w, eps):
+    """Plain mini-batch SGD step (alg. 4).  eps: [1].
+
+    Returns (new_w [k,d], counts [k], loss [1]).
+    """
+    new_w, counts, loss = kmeans_pallas.kmeans_step(x, w, eps)
+    return new_w, counts, loss[None]
+
+
+def asgd_iter(x, w, exts, eps):
+    """One full ASGD iteration (alg. 5 lines 7-8 + eq. 6/7), fused.
+
+    x:    [b, d] mini-batch drawn by the rust worker from its shard
+    w:    [k, d] local state w_t^i
+    exts: [N, k, d] snapshot of the external buffers (zero = empty)
+    eps:  [1] step size
+
+    Returns (w_next [k,d], counts [k], loss [1], n_good [1]).
+    """
+    b = x.shape[0]
+    sums, counts, loss_sum = kmeans_pallas.kmeans_stats(x, w)
+    delta = (counts[:, None] * w - sums) / b  # Delta_M, cf. ref.kmeans_grad
+    w_next, n_good = parzen.asgd_merge(w, delta, exts, eps)
+    return w_next, counts, loss_sum / b, n_good
+
+
+def asgd_iter_percenter(x, w, exts, eps):
+    """ASGD iteration with the per-center partitioned gate (§4.4).
+
+    Same signature as ``asgd_iter``; the Parzen window is evaluated per
+    cluster-center row, which is the paper's sparsity-inducing partial
+    update for K-Means.  (Pure jnp: the gate is O(N*k*d), negligible next
+    to the stats kernel, and the row-wise reduction fuses cleanly in XLA.)
+    """
+    b = x.shape[0]
+    sums, counts, loss_sum = kmeans_pallas.kmeans_stats(x, w)
+    delta = (counts[:, None] * w - sums) / b
+    w_next, n_good = kref.asgd_merge_percenter(w, delta, exts, eps[0])
+    return w_next, counts, loss_sum / b, n_good[None]
+
+
+def parzen_merge(w, delta, exts, eps):
+    """Standalone merge (Pallas): (w_next [k,d], n_good [1])."""
+    return parzen.asgd_merge(w, delta, exts, eps)
+
+
+def quant_error(x, w):
+    """Mean quantization error over an evaluation chunk: [1] float32."""
+    _, _, loss_sum = kmeans_pallas.kmeans_stats(x, w)
+    return loss_sum / x.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Linear models
+# ---------------------------------------------------------------------------
+
+
+def linreg_step(x, y, w, eps):
+    """Least-squares mini-batch step (Pallas): (new_w [d], loss [1])."""
+    new_w, loss = linear.linreg_step(x, y, w, eps)
+    return new_w, loss[None]
+
+
+def logreg_step(x, y, w, eps):
+    """Logistic-regression mini-batch step (Pallas): (new_w [d], loss [1])."""
+    new_w, loss = linear.logreg_step(x, y, w, eps)
+    return new_w, loss[None]
+
+
+# ---------------------------------------------------------------------------
+# Two-layer MLP classifier (e2e generality example)
+# ---------------------------------------------------------------------------
+#
+# The MLP state is flattened into a single [P] vector so the ASGD
+# coordinator can treat it exactly like a K-Means state (the merge works
+# on arbitrary parameter vectors).  Layout: [w1 (d*h) | b1 (h) | w2 (h*c)
+# | b2 (c)].
+
+
+def mlp_size(d: int, h: int, c: int) -> int:
+    return d * h + h + h * c + c
+
+
+def _mlp_unpack(theta, d, h, c):
+    o = 0
+    w1 = theta[o : o + d * h].reshape(d, h)
+    o += d * h
+    b1 = theta[o : o + h]
+    o += h
+    w2 = theta[o : o + h * c].reshape(h, c)
+    o += h * c
+    b2 = theta[o : o + c]
+    return w1, b1, w2, b2
+
+
+def mlp_loss(theta, x, y_onehot, d, h, c):
+    """Mean softmax cross-entropy of a two-layer tanh MLP."""
+    w1, b1, w2, b2 = _mlp_unpack(theta, d, h, c)
+    z = jnp.tanh(x @ w1 + b1) @ w2 + b2  # [b, c]
+    logp = jax.nn.log_softmax(z, axis=1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=1))
+
+
+def mlp_step(x, y_onehot, theta, eps, *, d: int, h: int, c: int):
+    """One mini-batch SGD step on the flattened MLP state.
+
+    x: [b, d]; y_onehot: [b, c]; theta: [P]; eps: [1].
+    Returns (new_theta [P], loss [1]).
+    """
+    loss, grad = jax.value_and_grad(mlp_loss)(theta, x, y_onehot, d, h, c)
+    return theta - eps[0] * grad, loss[None]
+
+
+# ---------------------------------------------------------------------------
+# Reference (pure-jnp) twin used by the pytest suite
+# ---------------------------------------------------------------------------
+
+
+def asgd_iter_ref(x, w, exts, eps):
+    """Oracle for ``asgd_iter`` built from the ref.py pieces."""
+    delta, counts, loss = kref.kmeans_grad(x, w)
+    w_next, n_good = kref.asgd_merge(w, delta, exts, eps[0])
+    return w_next, counts, loss[None], n_good[None]

@@ -1,0 +1,91 @@
+"""AOT pipeline tests: artifact suite, manifest schema, HLO text sanity."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    outdir = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(outdir, quick=True)
+    return outdir, manifest
+
+
+def test_manifest_written(built):
+    outdir, manifest = built
+    with open(os.path.join(outdir, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk["version"] == 1
+    assert len(on_disk["artifacts"]) == len(manifest["artifacts"])
+    assert len(on_disk["artifacts"]) >= 9
+
+
+def test_every_artifact_file_exists_and_is_hlo(built):
+    outdir, manifest = built
+    for a in manifest["artifacts"]:
+        path = os.path.join(outdir, a["file"])
+        assert os.path.exists(path), a["name"]
+        text = open(path).read()
+        assert "ENTRY" in text and "HloModule" in text, a["name"]
+
+
+def test_kinds_cover_all_entry_points(built):
+    _, manifest = built
+    kinds = {a["kind"] for a in manifest["artifacts"]}
+    assert kinds >= {
+        "asgd_iter",
+        "asgd_iter_pc",
+        "kmeans_step",
+        "kmeans_stats",
+        "parzen_merge",
+        "quant_error",
+        "linreg_step",
+        "logreg_step",
+        "mlp_step",
+    }
+
+
+def test_signatures_match_eval_shape(built):
+    """The manifest signature must agree with jax.eval_shape on the fn."""
+    _, manifest = built
+    by_name = {a["name"]: a for a in manifest["artifacts"]}
+    for name, kind, params, fn, arg_specs in aot.suite(quick=True):
+        a = by_name[name]
+        assert a["inputs"] == [["f32", list(s.shape)] for s in arg_specs]
+        out = jax.eval_shape(fn, *arg_specs)
+        leaves = jax.tree_util.tree_leaves(out)
+        assert a["outputs"] == [["f32", list(l.shape)] for l in leaves]
+
+
+def test_only_filter(tmp_path):
+    m = aot.build(str(tmp_path), quick=True, only="parzen_merge")
+    assert all(a["kind"] == "parzen_merge" for a in m["artifacts"])
+    assert len(m["artifacts"]) == 1
+
+
+def test_schedule_summary_attached_to_kernel_artifacts(built):
+    _, manifest = built
+    for a in manifest["artifacts"]:
+        if a["kind"] in ("asgd_iter", "kmeans_step", "kmeans_stats"):
+            assert "vmem" in a["schedule"] and "mxu~" in a["schedule"]
+
+
+def test_full_suite_enumerates_paper_configs():
+    names = [name for name, *_ in aot.suite(quick=False)]
+    # the four paper workloads x 6 kmeans kinds + 2 linear + 1 mlp
+    assert len(names) == 4 * 6 + 2 + 1
+    assert "asgd_iter_k10_d10_b500_n4" in names
+    assert "asgd_iter_k100_d128_b500_n4" in names
+
+
+def test_mlp_param_count_in_manifest(built):
+    _, manifest = built
+    (mlp,) = [a for a in manifest["artifacts"] if a["kind"] == "mlp_step"]
+    p = mlp["params"]
+    assert p["p"] == model.mlp_size(p["d"], p["h"], p["c"])
+    assert mlp["inputs"][2] == ["f32", [p["p"]]]

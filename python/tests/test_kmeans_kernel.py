@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas K-Means kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (b, k, d) and data distributions; every property
+asserts allclose against ``kernels.ref``.  This is the core correctness
+signal for the hot-path artifact.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kmeans_pallas, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _data(rng, b, k, d, scale=1.0):
+    x = rng.normal(scale=scale, size=(b, d)).astype(np.float32)
+    w = rng.normal(scale=scale, size=(k, d)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(w)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 7, 32, 64, 500]),
+    k=st.integers(1, 40),
+    d=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stats_matches_ref(b, k, d, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _data(rng, b, k, d)
+    sums, counts, loss_sum = kmeans_pallas.kmeans_stats(x, w)
+    rsums, rcounts, rloss = ref.kmeans_stats(x, w)
+    np.testing.assert_allclose(sums, rsums, rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(rcounts))
+    np.testing.assert_allclose(loss_sum[0] / b, rloss, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([32, 128, 500]),
+    k=st.integers(2, 20),
+    d=st.integers(2, 20),
+    eps=st.floats(1e-4, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_step_matches_ref(b, k, d, eps, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _data(rng, b, k, d)
+    e = jnp.asarray([eps], dtype=jnp.float32)
+    new_w, counts, loss = kmeans_pallas.kmeans_step(x, w, e)
+    rw, rc, rl = ref.kmeans_step(x, w, e[0])
+    np.testing.assert_allclose(new_w, rw, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(rc))
+    np.testing.assert_allclose(loss, rl, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    bt=st.sampled_from([1, 2, 4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_batch_tile_invariance(bt, seed):
+    """The grid accumulation must be independent of the tile size."""
+    rng = np.random.default_rng(seed)
+    x, w = _data(rng, 64, 6, 5)
+    s0, c0, l0 = kmeans_pallas.kmeans_stats(x, w, batch_tile=64)
+    s1, c1, l1 = kmeans_pallas.kmeans_stats(x, w, batch_tile=bt)
+    np.testing.assert_allclose(s0, s1, rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+    np.testing.assert_allclose(l0, l1, rtol=1e-5, atol=1e-5)
+
+
+def test_counts_sum_to_batch():
+    rng = np.random.default_rng(3)
+    x, w = _data(rng, 500, 10, 10)
+    _, counts, _ = kmeans_pallas.kmeans_stats(x, w)
+    assert float(jnp.sum(counts)) == 500.0
+
+
+def test_empty_cluster_rows_are_zero():
+    """A center far from all samples receives no mass."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(64, 4)).astype(np.float32))
+    w = np.asarray(rng.normal(size=(5, 4)), dtype=np.float32)
+    w[3] = 1e6  # unreachable center
+    sums, counts, _ = kmeans_pallas.kmeans_stats(x, jnp.asarray(w))
+    assert float(counts[3]) == 0.0
+    np.testing.assert_array_equal(np.asarray(sums[3]), np.zeros(4, np.float32))
+
+
+def test_argmin_tie_breaks_low_index():
+    """Duplicate centers: all mass must land on the lower index (argmin)."""
+    x = jnp.asarray(np.ones((8, 3), np.float32))
+    w = jnp.asarray(np.zeros((4, 3), np.float32))  # all identical
+    _, counts, _ = kmeans_pallas.kmeans_stats(x, w)
+    assert float(counts[0]) == 8.0
+    assert float(jnp.sum(counts[1:])) == 0.0
+
+
+def test_assign_matches_bruteforce():
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(100, 7)).astype(np.float32)
+    w = rng.normal(size=(9, 7)).astype(np.float32)
+    a = ref.kmeans_assign(jnp.asarray(x), jnp.asarray(w))
+    d2 = ((x[:, None, :] - w[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_array_equal(np.asarray(a), d2.argmin(1).astype(np.int32))
+
+
+def test_loss_is_mean_min_half_sq_dist():
+    rng = np.random.default_rng(6)
+    x = rng.normal(size=(128, 5)).astype(np.float32)
+    w = rng.normal(size=(6, 5)).astype(np.float32)
+    _, _, loss_sum = kmeans_pallas.kmeans_stats(jnp.asarray(x), jnp.asarray(w))
+    d2 = ((x[:, None, :] - w[None, :, :]) ** 2).sum(-1).min(1)
+    np.testing.assert_allclose(loss_sum[0] / 128, 0.5 * d2.mean(), rtol=1e-4)
+
+
+def test_vmem_assertion_rejects_oversized_schedule():
+    with pytest.raises(AssertionError):
+        kmeans_pallas.kmeans_stats(
+            jnp.zeros((8192, 1024), jnp.float32),
+            jnp.zeros((4096, 1024), jnp.float32),
+            batch_tile=8192,
+        )
+
+
+def test_pick_batch_tile_divides_and_fits():
+    for b, k, d in [(500, 10, 10), (500, 100, 128), (256, 100, 32), (7, 3, 3)]:
+        bt = kmeans_pallas.pick_batch_tile(b, k, d)
+        assert b % bt == 0
+        assert kmeans_pallas.vmem_footprint_bytes(bt, k, d) <= kmeans_pallas.VMEM_BYTES
+
+
+def test_mxu_estimate_monotone_in_d():
+    lo = kmeans_pallas.mxu_utilization_estimate(500, 100, 10)
+    hi = kmeans_pallas.mxu_utilization_estimate(500, 100, 128)
+    assert hi > lo

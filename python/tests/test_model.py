@@ -1,0 +1,107 @@
+"""L2 model-level tests: fused ASGD iteration, MLP step, quantization error."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _case(seed, b, k, d, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    exts = jnp.asarray(rng.normal(size=(n, k, d)).astype(np.float32))
+    return x, w, exts
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([32, 64, 500]),
+    k=st.integers(2, 16),
+    d=st.integers(2, 16),
+    n=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_asgd_iter_matches_ref(b, k, d, n, seed):
+    x, w, exts = _case(seed, b, k, d, n)
+    eps = jnp.asarray([0.05], jnp.float32)
+    w1, c1, l1, g1 = model.asgd_iter(x, w, exts, eps)
+    w0, c0, l0, g0 = model.asgd_iter_ref(x, w, exts, eps)
+    np.testing.assert_allclose(w1, w0, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c0))
+    np.testing.assert_allclose(l1, l0, rtol=1e-4, atol=1e-5)
+    assert float(g1[0]) == float(g0[0])
+
+
+def test_asgd_iter_silent_equals_kmeans_step():
+    """Empty external buffers: the fused iteration must equal the plain
+    mini-batch step — the algebraic heart of 'ASGD -> SimuParallelSGD as
+    communication -> 0' (§4, fig. 13/14)."""
+    x, w, _ = _case(0, 64, 8, 6, 4)
+    eps = jnp.asarray([0.1], jnp.float32)
+    exts = jnp.zeros((4, 8, 6), jnp.float32)
+    w_iter, _, _, g = model.asgd_iter(x, w, exts, eps)
+    w_step, _, _ = model.kmeans_step(x, w, eps)
+    np.testing.assert_allclose(w_iter, w_step, rtol=1e-5, atol=1e-6)
+    assert float(g[0]) == 0.0
+
+
+def test_asgd_iter_percenter_runs_and_counts():
+    x, w, exts = _case(1, 64, 8, 6, 4)
+    eps = jnp.asarray([0.05], jnp.float32)
+    w1, c1, l1, g1 = model.asgd_iter_percenter(x, w, exts, eps)
+    assert w1.shape == (8, 6)
+    assert 0.0 <= float(g1[0]) <= 4.0
+
+
+def test_quant_error_matches_ref():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(256, 10)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(10, 10)).astype(np.float32))
+    e1 = model.quant_error(x, w)
+    e0 = ref.quant_error(x, w)
+    np.testing.assert_allclose(e1[0], e0, rtol=1e-4)
+
+
+def test_kmeans_steps_descend_on_clustered_data():
+    """A short mini-batch SGD run on well-separated clusters must reduce
+    the quantization error substantially."""
+    rng = np.random.default_rng(3)
+    k, d, b = 5, 8, 128
+    centers = rng.normal(scale=10.0, size=(k, d)).astype(np.float32)
+    labels = rng.integers(0, k, size=2048)
+    data = centers[labels] + rng.normal(scale=0.5, size=(2048, d)).astype(np.float32)
+    w = jnp.asarray(data[:k].copy())  # seed from first samples
+    eps = jnp.asarray([0.3], jnp.float32)
+    e_start = float(model.quant_error(jnp.asarray(data[:1024]), w)[0])
+    for t in range(30):
+        batch = jnp.asarray(data[rng.integers(0, 2048, size=b)])
+        w, _, _ = model.kmeans_step(batch, w, eps)
+    e_end = float(model.quant_error(jnp.asarray(data[:1024]), w)[0])
+    assert e_end < 0.5 * e_start
+
+
+def test_mlp_step_shapes_and_descent():
+    d, h, c, b = 8, 16, 4, 64
+    p = model.mlp_size(d, h, c)
+    rng = np.random.default_rng(4)
+    theta = jnp.asarray(rng.normal(scale=0.1, size=p).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    y = np.zeros((b, c), np.float32)
+    y[np.arange(b), rng.integers(0, c, b)] = 1.0
+    y = jnp.asarray(y)
+    eps = jnp.asarray([0.5], jnp.float32)
+    losses = []
+    for _ in range(20):
+        theta, loss = model.mlp_step(x, y, theta, eps, d=d, h=h, c=c)
+        losses.append(float(loss[0]))
+    assert theta.shape == (p,)
+    assert losses[-1] < losses[0]
+
+
+def test_mlp_size_layout():
+    assert model.mlp_size(32, 64, 10) == 32 * 64 + 64 + 64 * 10 + 10

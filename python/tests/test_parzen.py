@@ -1,0 +1,140 @@
+"""Parzen-window gate + asynchronous merge (eq. 2-7) correctness."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import parzen, ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _case(seed, n, k, d, scale=1.0, zero_mask=None):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    delta = jnp.asarray(rng.normal(scale=0.1, size=(k, d)).astype(np.float32))
+    exts = rng.normal(scale=scale, size=(n, k, d)).astype(np.float32)
+    if zero_mask is not None:
+        exts[zero_mask] = 0.0
+    return w, delta, jnp.asarray(exts)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 8),
+    k=st.integers(1, 24),
+    d=st.integers(1, 24),
+    eps=st.floats(1e-3, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_merge_matches_ref(n, k, d, eps, seed):
+    w, delta, exts = _case(seed, n, k, d)
+    e = jnp.asarray([eps], dtype=jnp.float32)
+    w1, g1 = parzen.asgd_merge(w, delta, exts, e)
+    w0, g0 = ref.asgd_merge(w, delta, exts, e[0])
+    np.testing.assert_allclose(w1, w0, rtol=1e-4, atol=1e-5)
+    assert float(g1[0]) == float(g0)
+
+
+def test_all_zero_buffers_degenerate_to_plain_sgd():
+    """lambda (eq. 3) must reject empty buffers: merge == plain step.
+
+    This is the 'communication interval -> infinity makes ASGD become
+    SimuParallelSGD' claim of §4, at the single-update level.
+    """
+    w, delta, _ = _case(0, 4, 6, 5)
+    exts = jnp.zeros((4, 6, 5), jnp.float32)
+    e = jnp.asarray([0.1], jnp.float32)
+    w1, g = parzen.asgd_merge(w, delta, exts, e)
+    np.testing.assert_allclose(w1, w - 0.1 * delta, rtol=1e-6)
+    assert float(g[0]) == 0.0
+
+
+def test_gate_accepts_state_near_projection():
+    """An external state sitting exactly at the projected next state is
+    closer to w_prop than to w, so it must pass the gate."""
+    w, delta, _ = _case(1, 1, 3, 3)
+    e = jnp.asarray([0.2], jnp.float32)
+    w_prop = w - e[0] * delta
+    exts = w_prop[None]
+    _, g = parzen.asgd_merge(w, delta, exts, e)
+    assert float(g[0]) == 1.0
+
+
+def test_gate_rejects_state_behind_current():
+    """An external state *behind* the current state (away from the descent
+    direction) is farther from w_prop than from w -> rejected."""
+    w, delta, _ = _case(2, 1, 3, 3)
+    e = jnp.asarray([0.2], jnp.float32)
+    behind = w + 10.0 * e[0] * delta  # opposite side of the step
+    _, g = parzen.asgd_merge(w, delta, behind[None], e)
+    assert float(g[0]) == 0.0
+
+
+def test_accepted_buffer_pulls_toward_it():
+    """With delta == 0 and one accepted ext, w moves strictly toward ext
+    (eq. 2 reduces to w - eps*(w - (w+ext)/2))."""
+    rng = np.random.default_rng(7)
+    w = jnp.asarray(rng.normal(size=(4, 4)).astype(np.float32))
+    # delta tiny but nonzero so w_prop != w (gate needs a direction)
+    delta = jnp.asarray(np.full((4, 4), 1e-6, np.float32))
+    ext = w - 1.0  # on the descent side for the right sign of delta
+    e = jnp.asarray([0.1], jnp.float32)
+    w1, g = parzen.asgd_merge(w, delta, ext[None], e)
+    if float(g[0]) == 1.0:
+        d_before = float(jnp.sum((w - ext) ** 2))
+        d_after = float(jnp.sum((w1 - ext) ** 2))
+        assert d_after < d_before
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_gate_is_scale_free_in_trivial_direction(seed):
+    """Rejecting every buffer yields exactly the ungated mini-batch step."""
+    w, delta, _ = _case(seed, 3, 5, 4)
+    e = jnp.asarray([0.05], jnp.float32)
+    far = jnp.asarray(
+        np.random.default_rng(seed).normal(loc=1e4, size=(3, 5, 4)).astype(np.float32)
+    )
+    w1, g = parzen.asgd_merge(w, delta, far, e)
+    if float(g[0]) == 0.0:
+        np.testing.assert_allclose(w1, w - 0.05 * delta, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 6),
+    k=st.integers(2, 12),
+    d=st.integers(2, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_percenter_matches_full_when_rows_agree(n, k, d, seed):
+    """If every row of every buffer passes (buffers == w_prop), the
+    per-center merge equals the full-state merge."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    delta = jnp.asarray(rng.normal(scale=0.1, size=(k, d)).astype(np.float32))
+    e = jnp.asarray([0.1], jnp.float32)
+    w_prop = w - e[0] * delta
+    exts = jnp.broadcast_to(w_prop[None], (n, k, d))
+    w_full, _ = ref.asgd_merge(w, delta, exts, e[0])
+    w_pc, _ = ref.asgd_merge_percenter(w, delta, exts, e[0])
+    np.testing.assert_allclose(w_full, w_pc, rtol=1e-5, atol=1e-6)
+
+
+def test_percenter_gates_rows_independently():
+    """One good row + one bad row in the same buffer: only the good row
+    is merged by the per-center variant."""
+    k, d = 2, 3
+    w = jnp.asarray(np.zeros((k, d), np.float32))
+    delta = jnp.asarray(np.ones((k, d), np.float32) * 0.1)
+    e = jnp.asarray([0.5], jnp.float32)
+    w_prop = np.asarray(w - e[0] * delta)
+    ext = np.zeros((1, k, d), np.float32)
+    ext[0, 0] = w_prop[0]  # row 0: perfect -> accepted
+    ext[0, 1] = 100.0  # row 1: far off -> rejected
+    w1, _ = ref.asgd_merge_percenter(w, delta, jnp.asarray(ext), e[0])
+    # row 1 must be the plain SGD step
+    np.testing.assert_allclose(np.asarray(w1)[1], w_prop[1], rtol=1e-6)
+    # row 0 must differ from the plain step (it merged the external row)
+    assert not np.allclose(np.asarray(w1)[0], w_prop[0])

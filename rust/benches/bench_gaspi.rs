@@ -1,0 +1,69 @@
+//! GASPI-substrate micro-benchmarks: one-sided put + snapshot latency,
+//! contended-slot throughput.  The put must stay far below the
+//! per-mini-batch compute time for the "free communication" claim to
+//! hold on this substrate.
+
+use asgd::gaspi::{Segment, Topology, World};
+use asgd::util::rng::Xoshiro256pp;
+use asgd::util::timer::BenchRunner;
+
+fn main() {
+    let mut runner = BenchRunner::new();
+    println!("== gaspi substrate micro-benchmarks (units = messages/s) ==");
+
+    for &state_len in &[100usize, 1000, 12_800] {
+        let seg = Segment::new(0, 4, state_len);
+        let payload = vec![1.0f32; state_len];
+        let mut i = 0u64;
+        runner.bench(&format!("put state_len={state_len}"), 1.0, || {
+            seg.write_remote((i % 4) as usize, 1, i, &payload);
+            i += 1;
+        });
+        let mut buf = vec![0.0f32; state_len];
+        let mut last = 0u64;
+        runner.bench(&format!("snapshot state_len={state_len}"), 1.0, || {
+            let (_, _, _, v) = seg.read_slot_into(0, last, &mut buf);
+            last = v.wrapping_sub(1); // force a fresh read every time
+        });
+    }
+
+    // contended world: 4 writers hammering one receiver while it polls
+    let world = std::sync::Arc::new(World::new(5, 4, 1000, Topology::flat(5)));
+    let payload = vec![2.0f32; 1000];
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let writers: Vec<_> = (1..5usize)
+        .map(|from| {
+            let world = world.clone();
+            let stop = stop.clone();
+            let payload = payload.clone();
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256pp::seed_from_u64(from as u64);
+                let mut t = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    world.put_state(from, 0, t, &payload, rng.index(4));
+                    t += 1;
+                }
+            })
+        })
+        .collect();
+    let mut buf = vec![0.0f32; 1000];
+    let mut versions = [0u64; 4];
+    runner.bench("poll 4 slots under contention", 4.0, || {
+        for slot in 0..4 {
+            let (_, _, _, v) = world.segments[0].read_slot_into(slot, versions[slot], &mut buf);
+            versions[slot] = v;
+        }
+    });
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for w in writers {
+        w.join().unwrap();
+    }
+    let stats = world.stats.total();
+    println!(
+        "contention run: sent {} overwritten {} ({:.1}% lost)",
+        stats.sent,
+        stats.overwritten,
+        100.0 * stats.overwritten as f64 / stats.sent.max(1) as f64
+    );
+    println!("bench_gaspi OK");
+}

@@ -1,0 +1,59 @@
+//! Micro-benchmarks of the native numeric kernels — the L3 hot path.
+//! (`harness = false`: criterion is unavailable offline; this uses the
+//! crate's own BenchRunner with median-of-samples reporting.)
+
+use asgd::kernels::kmeans::{kmeans_stats, kmeans_step, KmeansScratch};
+use asgd::kernels::merge::asgd_merge;
+use asgd::util::rng::Xoshiro256pp;
+use asgd::util::timer::BenchRunner;
+
+fn rand_vec(rng: &mut Xoshiro256pp, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_normal() as f32).collect()
+}
+
+fn main() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let mut runner = BenchRunner::new();
+    println!("== native kernel micro-benchmarks (units = samples or state elems per s) ==");
+
+    // the paper's three kernel operating points
+    for &(k, d, b) in &[(10usize, 10usize, 500usize), (100, 10, 500), (100, 128, 500)] {
+        let x = rand_vec(&mut rng, b * d);
+        let w = rand_vec(&mut rng, k * d);
+        let mut scratch = KmeansScratch::default();
+        runner.bench(&format!("kmeans_stats k={k} d={d} b={b}"), b as f64, || {
+            kmeans_stats(&x, &w, k, d, &mut scratch);
+        });
+        let mut wm = w.clone();
+        runner.bench(&format!("kmeans_step  k={k} d={d} b={b}"), b as f64, || {
+            kmeans_step(&x, &mut wm, k, d, 1e-6, &mut scratch);
+        });
+    }
+
+    // the merge at the same state sizes, N=4 buffers
+    for &(k, d) in &[(10usize, 10usize), (100, 10), (100, 128)] {
+        let len = k * d;
+        let w0 = rand_vec(&mut rng, len);
+        let delta = rand_vec(&mut rng, len);
+        let exts = rand_vec(&mut rng, 4 * len);
+        let mut scratch = vec![0.0f32; len];
+        let mut w = w0.clone();
+        runner.bench(&format!("asgd_merge   k={k} d={d} N=4"), len as f64, || {
+            w.copy_from_slice(&w0);
+            asgd_merge(&mut w, &delta, &exts, 0.05, &mut scratch);
+        });
+    }
+
+    // throughput sanity: stats at the paper's main config must beat 1M samples/s
+    let s = runner
+        .results()
+        .iter()
+        .find(|r| r.name.contains("stats k=10 d=10"))
+        .unwrap();
+    assert!(
+        s.throughput() > 1.0e6,
+        "k=10 d=10 stats below 1M samples/s: {:.0}",
+        s.throughput()
+    );
+    println!("bench_kernels OK");
+}

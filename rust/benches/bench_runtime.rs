@@ -1,0 +1,53 @@
+//! Backend comparison bench: one full ASGD iteration through the fused
+//! XLA artifact (PJRT) vs the native kernels, per paper workload.
+//! Requires `make artifacts`; exits cleanly when missing.
+
+use asgd::config::{BackendKind, TrainConfig};
+use asgd::models::Model;
+use asgd::runtime::{build_stepper, Manifest, StepScratch};
+use asgd::util::rng::Xoshiro256pp;
+use asgd::util::timer::BenchRunner;
+use std::sync::Arc;
+
+fn main() {
+    if Manifest::load("artifacts").is_err() {
+        println!("bench_runtime SKIPPED: run `make artifacts` first");
+        return;
+    }
+    let mut runner = BenchRunner::new();
+    println!("== per-iteration latency: XLA fused artifact vs native kernels ==");
+    println!("   (units = samples/s; XLA path includes literal marshalling + engine channel)");
+
+    for &(k, d, b) in &[(10usize, 10usize, 500usize), (100, 10, 500), (100, 128, 500)] {
+        let mut cfg = TrainConfig::asgd_default(k, d, b);
+        cfg.data.n_samples = 10_000;
+        let model: Arc<dyn Model> = asgd::models::build(&cfg).into();
+        let native = build_stepper(&cfg, model.clone()).unwrap();
+        let mut xcfg = cfg.clone();
+        xcfg.backend = BackendKind::Xla;
+        let xla = build_stepper(&xcfg, model.clone()).unwrap();
+
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let x: Vec<f32> = (0..b * d).map(|_| rng.next_normal() as f32).collect();
+        let w0: Vec<f32> = (0..k * d).map(|_| rng.next_normal() as f32).collect();
+        let exts: Vec<f32> = (0..4 * k * d).map(|_| rng.next_normal() as f32).collect();
+        let mut scratch = StepScratch::default();
+
+        let mut w = w0.clone();
+        let nat = runner
+            .bench(&format!("native k={k} d={d} b={b}"), b as f64, || {
+                w.copy_from_slice(&w0);
+                native.step(&x, None, &mut w, &exts, &mut scratch).unwrap();
+            })
+            .throughput();
+        let mut w2 = w0.clone();
+        let xl = runner
+            .bench(&format!("xla    k={k} d={d} b={b}"), b as f64, || {
+                w2.copy_from_slice(&w0);
+                xla.step(&x, None, &mut w2, &exts, &mut scratch).unwrap();
+            })
+            .throughput();
+        println!("   -> xla/native throughput ratio: {:.3}\n", xl / nat);
+    }
+    println!("bench_runtime OK");
+}

@@ -1,0 +1,77 @@
+//! Paper benchmark: figures 13/14/15/16/17 ablations — communication
+//! frequency, silent mode, gate modes, race policies, and the two final
+//! aggregations, all at a fixed sample budget.
+
+use asgd::config::{AggMode, GateMode, Method, RacePolicy, TrainConfig};
+use asgd::coordinator::run_training;
+use asgd::util::timer::BenchRunner;
+
+fn base() -> TrainConfig {
+    let mut cfg = TrainConfig::asgd_default(50, 10, 250);
+    cfg.workers = 4;
+    cfg.iters = 150;
+    cfg.eps = 0.05;
+    cfg.eval_every = usize::MAX / 2;
+    cfg.data.n_samples = 80_000;
+    cfg.data.kind = asgd::config::DataKind::Synthetic {
+        k_true: 50,
+        cluster_std: 1.5,
+        min_dist: 3.0,
+    };
+    cfg
+}
+
+fn main() {
+    let mut runner = BenchRunner::quick();
+    let budget = (4 * 150 * 250) as f64;
+    println!("== paper_ablation: gate/silent/frequency/aggregation/race ablations ==");
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    let mut run = |name: &str, cfg: &TrainConfig, runner: &mut BenchRunner| {
+        let mut obj = 0.0;
+        runner.bench(name, budget, || {
+            obj = run_training(cfg).unwrap().final_objective;
+        });
+        println!("   {name:<28} final objective {obj:.4e}");
+        results.push((name.to_string(), obj));
+        obj
+    };
+
+    let asgd = run("asgd (gate=full)", &base(), &mut runner);
+
+    let mut c = base();
+    c.gate = GateMode::PerCenter;
+    run("asgd (gate=per-center)", &c, &mut runner);
+
+    let mut c = base();
+    c.gate = GateMode::Off;
+    let ungated = run("asgd (gate=off)", &c, &mut runner);
+
+    let mut c = base();
+    c.method = Method::AsgdSilent;
+    let silent = run("asgd silent", &c, &mut runner);
+
+    let mut c = base();
+    c.send_interval = 100;
+    run("asgd (1/100 sends)", &c, &mut runner);
+
+    let mut c = base();
+    c.aggregation = AggMode::TreeMean;
+    run("asgd (tree-mean agg)", &c, &mut runner);
+
+    let mut c = base();
+    c.race = RacePolicy::AcceptTorn;
+    run("asgd (accept-torn)", &c, &mut runner);
+
+    // shape claims: communication helps; the gate protects against the
+    // ungated merge being dragged by bad states
+    assert!(
+        asgd <= silent * 1.02,
+        "communication should not hurt: asgd {asgd} vs silent {silent}"
+    );
+    assert!(
+        asgd <= ungated * 1.02,
+        "parzen gate should not hurt: gated {asgd} vs ungated {ungated}"
+    );
+    println!("paper_ablation OK");
+}

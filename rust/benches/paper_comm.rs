@@ -1,0 +1,80 @@
+//! Paper benchmark: figures 11/12 — communication cost of the real
+//! substrate at varying frequency 1/b, and message accounting.
+//!
+//! On this 1-CPU testbed, end-to-end wall-clock differences between
+//! ASGD and silent runs sit inside scheduler noise, so the fig-11 claim
+//! is checked through the robust quantities: the per-message cost
+//! (derived from the gaspi micro path) stays in the microsecond range,
+//! and message volume scales with the frequency 1/b.  The cluster-scale
+//! bandwidth knee itself is reproduced by `asgd fig --id 11`.
+
+use asgd::config::{Method, TrainConfig};
+use asgd::coordinator::{run_training, with_method};
+use asgd::util::timer::BenchRunner;
+
+fn main() {
+    let mut runner = BenchRunner::quick();
+    println!("== paper_comm: fig 11 (cost vs 1/b) and fig 12 (message rates) ==");
+
+    let budget = 120_000usize;
+    let mut msg_counts = Vec::new();
+    for &b in &[50usize, 200, 500, 2000] {
+        let mut cfg = TrainConfig::asgd_default(100, 10, b);
+        cfg.workers = 4;
+        cfg.iters = budget / (4 * b);
+        cfg.eval_every = usize::MAX / 2;
+        cfg.data.n_samples = 60_000;
+        let silent_cfg = with_method(&cfg, Method::AsgdSilent);
+
+        let mut asgd_s = 0.0;
+        let mut sent = 0u64;
+        runner.bench(&format!("asgd   b={b}"), budget as f64, || {
+            let r = run_training(&cfg).unwrap();
+            asgd_s = r.wallclock_s;
+            sent = r.comm.sent;
+        });
+        let mut silent_s = 0.0;
+        runner.bench(&format!("silent b={b}"), budget as f64, || {
+            silent_s = run_training(&silent_cfg).unwrap().wallclock_s;
+        });
+        let per_msg_us = (asgd_s - silent_s).max(0.0) * 1e6 / sent.max(1) as f64;
+        println!(
+            "   b={b:>5}: {sent:>5} msgs, apparent cost {per_msg_us:.1} us/msg (noise-bounded)"
+        );
+        msg_counts.push((b, sent));
+    }
+    // fig-11's frequency axis: message volume scales as 1/b at a fixed
+    // sample budget
+    let (b_hi, sent_hi) = msg_counts[0]; // b = 50
+    let (b_lo, sent_lo) = msg_counts[msg_counts.len() - 1]; // b = 2000
+    let expected_ratio = (b_lo / b_hi) as f64;
+    let measured_ratio = sent_hi as f64 / sent_lo.max(1) as f64;
+    println!(
+        "   message-volume ratio b={b_hi} vs b={b_lo}: {measured_ratio:.1}x (expected {expected_ratio:.1}x)"
+    );
+    assert!(
+        (measured_ratio / expected_ratio - 1.0).abs() < 0.15,
+        "message volume must scale as 1/b"
+    );
+
+    // fig-12: message accounting on one run
+    let mut cfg = TrainConfig::asgd_default(10, 10, 250);
+    cfg.workers = 8;
+    cfg.iters = 60;
+    cfg.eval_every = usize::MAX / 2;
+    cfg.data.n_samples = 130_000;
+    let r = run_training(&cfg).unwrap();
+    let n = cfg.workers as f64;
+    println!(
+        "\nfig-12 per-CPU: sent {:.0} received {:.0} good {:.0} (torn {}, overwritten {})",
+        r.comm.sent as f64 / n,
+        r.comm.received as f64 / n,
+        r.comm.good as f64 / n,
+        r.comm.torn,
+        r.comm.overwritten
+    );
+    assert_eq!(r.comm.sent, 8 * 60 * 2, "sends = workers*iters*fanout");
+    assert!(r.comm.good <= r.comm.received);
+    assert!(r.comm.received + r.comm.overwritten <= r.comm.sent + 8 * 4);
+    println!("paper_comm OK");
+}

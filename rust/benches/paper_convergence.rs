@@ -1,0 +1,44 @@
+//! Paper benchmark: figures 8/9 — end-to-end coordinator throughput per
+//! method and the convergence ordering at a fixed sample budget.
+
+use asgd::config::{Method, TrainConfig};
+use asgd::coordinator::{run_training, with_method};
+use asgd::util::timer::BenchRunner;
+
+fn main() {
+    let mut runner = BenchRunner::quick();
+    println!("== paper_convergence: fig 8 workload, end-to-end (units = samples/s) ==");
+
+    let mut base = TrainConfig::asgd_default(100, 10, 250);
+    base.workers = 4;
+    base.iters = 100;
+    base.eps = 0.05;
+    base.eval_every = usize::MAX / 2;
+    base.data.n_samples = 60_000;
+
+    let budget = (base.workers * base.iters * base.minibatch) as f64;
+    let mut finals = Vec::new();
+    for method in [Method::Asgd, Method::AsgdSilent, Method::Batch] {
+        let cfg = with_method(&base, method);
+        let mut final_obj = 0.0;
+        runner.bench(&format!("train {}", method.name()), budget, || {
+            let r = run_training(&cfg).unwrap();
+            final_obj = r.final_objective;
+        });
+        finals.push((method, final_obj));
+        println!("   {} final objective {final_obj:.4e}", method.name());
+    }
+
+    let asgd = finals[0].1;
+    let sgd = finals[1].1;
+    let batch = finals[2].1;
+    assert!(
+        asgd <= sgd * 1.1,
+        "fig-8 shape: asgd error {asgd} should match/beat sgd {sgd}"
+    );
+    assert!(
+        asgd <= batch * 1.1,
+        "fig-8 shape: asgd error {asgd} should beat batch {batch}"
+    );
+    println!("paper_convergence OK");
+}

@@ -1,0 +1,57 @@
+//! Paper benchmark: figures 1 / 5 / 6 / 7 — strong-scaling runtime
+//! series through the calibrated cluster simulator, with the paper's
+//! shape claims asserted (who wins, by roughly what factor).
+
+use asgd::gaspi::Topology;
+use asgd::sim::{ClusterSim, SimWorkload};
+use asgd::util::timer::BenchRunner;
+
+fn main() {
+    let mut runner = BenchRunner::quick();
+    let sim = ClusterSim::calibrated();
+    println!("== paper_scaling: figs 1/5/6/7 series (simulated 64x16 cluster) ==");
+
+    let w1tb = SimWorkload {
+        global_iters: 1e10,
+        minibatch: 500,
+        k: 10,
+        d: 10,
+        n_buffers: 4,
+        fanout: 2,
+        n_samples: 2.5e10,
+    };
+
+    // the series itself is analytic; benchmark its evaluation cost and
+    // print the paper rows
+    runner.bench("fig1 series evaluation", 8.0, || {
+        for nodes in [8, 16, 24, 32, 40, 48, 56, 64] {
+            let topo = Topology::new(nodes, 16);
+            std::hint::black_box(sim.runtime_asgd(&w1tb, topo));
+            std::hint::black_box(sim.runtime_sgd(&w1tb, topo));
+            std::hint::black_box(sim.runtime_batch(&w1tb, topo));
+        }
+    });
+
+    println!("\nfig-1 rows (CPUs, ASGD s, SGD s, BATCH s):");
+    let mut prev_asgd = f64::INFINITY;
+    for nodes in [8, 16, 32, 64] {
+        let topo = Topology::new(nodes, 16);
+        let (a, s, b) = (
+            sim.runtime_asgd(&w1tb, topo),
+            sim.runtime_sgd(&w1tb, topo),
+            sim.runtime_batch(&w1tb, topo),
+        );
+        println!("  {:>5}  {a:>10.2}  {s:>10.2}  {b:>10.2}", topo.ranks());
+        assert!(a <= s && a <= b, "ASGD must win at {} cpus", topo.ranks());
+        assert!(a < prev_asgd, "ASGD runtime must shrink with CPUs");
+        prev_asgd = a;
+    }
+    // headline factor: at 1024 CPUs ASGD beats SGD by >2x and BATCH by >3x
+    let topo = Topology::paper_cluster();
+    let ratio_sgd = sim.runtime_sgd(&w1tb, topo) / sim.runtime_asgd(&w1tb, topo);
+    let ratio_batch = sim.runtime_batch(&w1tb, topo) / sim.runtime_asgd(&w1tb, topo);
+    println!("\n1024-CPU ratios: SGD/ASGD {ratio_sgd:.2}x, BATCH/ASGD {ratio_batch:.2}x");
+    assert!(ratio_sgd > 2.0, "fig-1 SGD gap too small: {ratio_sgd:.2}");
+    assert!(ratio_batch > 3.0, "fig-1 BATCH gap too small: {ratio_batch:.2}");
+    println!("paper_scaling OK");
+}

@@ -1,0 +1,268 @@
+//! Hand-rolled CLI (no clap in the offline build): subcommands + flags.
+//!
+//! ```text
+//! asgd train   [--config F] [--method M] [--workers N] [--k K] ...
+//! asgd fig     --id N | --all   [--quick] [--out DIR]
+//! asgd datagen --out FILE --n N --dim D --k K [--kind synthetic|hog]
+//! asgd calibrate
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + `--key value` flags + bare flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut parsed = Args {
+            command,
+            ..Default::default()
+        };
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument {arg:?}");
+            };
+            if let Some((k, v)) = name.split_once('=') {
+                parsed.flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                let v = it.next().unwrap();
+                parsed.flags.insert(name.to_string(), v);
+            } else {
+                parsed.switches.push(name.to_string());
+            }
+        }
+        Ok(parsed)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse::<usize>().with_context(|| format!("--{key} {v:?} is not an integer")))
+            .transpose()
+    }
+
+    pub fn get_f32(&self, key: &str) -> Result<Option<f32>> {
+        self.get(key)
+            .map(|v| v.parse::<f32>().with_context(|| format!("--{key} {v:?} is not a number")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().with_context(|| format!("--{key} {v:?} is not an integer")))
+            .transpose()
+    }
+
+    /// Verbosity from repeated -v style switches (`--v`, `--vv`) or
+    /// `--verbose N`.
+    pub fn verbosity(&self) -> u8 {
+        if self.has("vv") {
+            2
+        } else if self.has("v") || self.has("verbose") {
+            1
+        } else {
+            0
+        }
+    }
+}
+
+/// Build a TrainConfig from `asgd train` flags, starting from either a
+/// TOML config file (`--config`) or paper defaults.
+pub fn train_config(args: &Args) -> Result<crate::config::TrainConfig> {
+    use crate::config::*;
+    let mut cfg = if let Some(path) = args.get("config") {
+        TrainConfig::from_toml_file(path)?
+    } else {
+        let k = args.get_usize("k")?.unwrap_or(10);
+        let dim = args.get_usize("dim")?.unwrap_or(10);
+        let b = args.get_usize("minibatch")?.unwrap_or(500);
+        TrainConfig::asgd_default(k, dim, b)
+    };
+    if let Some(m) = args.get("method") {
+        cfg.method = Method::parse(m)?;
+    }
+    if let Some(m) = args.get("model") {
+        cfg.model = match m {
+            "kmeans" => ModelKind::KMeans {
+                k: args.get_usize("k")?.unwrap_or(10),
+            },
+            "linreg" => ModelKind::LinReg,
+            "logreg" => ModelKind::LogReg,
+            "mlp" => ModelKind::Mlp {
+                hidden: args.get_usize("hidden")?.unwrap_or(64),
+                classes: args.get_usize("classes")?.unwrap_or(10),
+            },
+            other => bail!("unknown model {other:?}"),
+        };
+    }
+    if let Some(v) = args.get_usize("workers")? {
+        cfg.workers = v;
+    }
+    if let Some(v) = args.get_usize("iters")? {
+        cfg.iters = v;
+    }
+    if let Some(v) = args.get_usize("minibatch")? {
+        cfg.minibatch = v;
+    }
+    if let Some(v) = args.get_f32("eps")? {
+        cfg.eps = v;
+    }
+    if let Some(v) = args.get_usize("fanout")? {
+        cfg.fanout = v;
+    }
+    if let Some(v) = args.get_usize("n-buffers")? {
+        cfg.n_buffers = v;
+    }
+    if let Some(v) = args.get_usize("send-interval")? {
+        cfg.send_interval = v.max(1);
+    }
+    if let Some(v) = args.get("gate") {
+        cfg.gate = GateMode::parse(v)?;
+    }
+    if let Some(v) = args.get("aggregation") {
+        cfg.aggregation = AggMode::parse(v)?;
+    }
+    if let Some(v) = args.get("backend") {
+        cfg.backend = BackendKind::parse(v)?;
+    }
+    if let Some(v) = args.get("race") {
+        cfg.race = RacePolicy::parse(v)?;
+    }
+    if let Some(v) = args.get_u64("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.get_usize("n-samples")? {
+        cfg.data.n_samples = v;
+    }
+    if let Some(v) = args.get_usize("eval-every")? {
+        cfg.eval_every = v;
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifact_dir = v.to_string();
+    }
+    if args.get("cluster-std").is_some() || args.get("min-dist").is_some() {
+        if let DataKind::Synthetic {
+            k_true,
+            cluster_std,
+            min_dist,
+        } = cfg.data.kind
+        {
+            cfg.data.kind = DataKind::Synthetic {
+                k_true: args.get_usize("k-true")?.unwrap_or(k_true),
+                cluster_std: args.get_f32("cluster-std")?.unwrap_or(cluster_std),
+                min_dist: args.get_f32("min-dist")?.unwrap_or(min_dist),
+            };
+        }
+    }
+    if let Some(v) = args.get("data") {
+        cfg.data.kind = match v {
+            "synthetic" => cfg.data.kind,
+            "hog" => {
+                cfg.data.dim = 128;
+                DataKind::Hog {
+                    k_true: args.get_usize("k-true")?.unwrap_or(100),
+                }
+            }
+            "linear" => DataKind::Linear { noise: 0.1 },
+            other => bail!("unknown data kind {other:?}"),
+        };
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+pub const USAGE: &str = "\
+asgd — Asynchronous Parallel Stochastic Gradient Descent (Keuper & Pfreundt 2015)
+
+USAGE:
+  asgd train [OPTIONS]          run one training job and print the report
+  asgd fig --id N [--quick]     regenerate paper figure N (or --all)
+  asgd datagen --out FILE ...   generate + store a dataset (.asgd binary)
+  asgd calibrate                print the simulator compute calibration
+  asgd help                     this text
+
+TRAIN OPTIONS (defaults in parentheses):
+  --config FILE          TOML config ([train]/[data] sections)
+  --method M             asgd | asgd-silent | sgd | batch       (asgd)
+  --model M              kmeans | linreg | logreg | mlp         (kmeans)
+  --k K --dim D          K-Means geometry                       (10, 10)
+  --minibatch B          mini-batch size b                      (500)
+  --workers N            worker threads                         (8)
+  --iters I              mini-batch iterations per worker       (200)
+  --eps E                step size                              (0.1)
+  --fanout F             recipients per send                    (2)
+  --n-buffers N          external buffers per worker            (4)
+  --send-interval S      send every S updates                   (1)
+  --gate G               full | per-center | off                (full)
+  --aggregation A        first | tree-mean                      (first)
+  --backend B            native | xla                           (native)
+  --race R               discard | accept                       (discard)
+  --seed S --n-samples N --eval-every E --artifacts DIR
+  --data KIND            synthetic | hog | linear               (synthetic)
+  --out DIR              write trace.csv + report.json to DIR
+
+FIG OPTIONS:
+  --id N                 1,5,6,7,8,9,10,11,12,13,14,15,16,17
+  --all                  run every figure
+  --quick                reduced sizes (CI)
+  --out DIR              output directory                       (results)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = parse("train --method asgd --workers 4 --quick --eps=0.05");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("method"), Some("asgd"));
+        assert_eq!(a.get_usize("workers").unwrap(), Some(4));
+        assert!(a.has("quick"));
+        assert_eq!(a.get_f32("eps").unwrap(), Some(0.05));
+    }
+
+    #[test]
+    fn train_config_from_flags() {
+        let a = parse("train --method batch --k 20 --dim 5 --workers 3 --minibatch 50 --n-samples 10000");
+        let cfg = train_config(&a).unwrap();
+        assert_eq!(cfg.method, crate::config::Method::Batch);
+        assert_eq!(cfg.model, crate::config::ModelKind::KMeans { k: 20 });
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.data.n_samples, 10_000);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("train --workers lots");
+        assert!(train_config(&a).is_err());
+        assert!(Args::parse(vec!["train".into(), "stray".into()]).is_err());
+    }
+
+    #[test]
+    fn hog_switch_sets_dim() {
+        let a = parse("train --data hog --k 100 --n-samples 50000");
+        let cfg = train_config(&a).unwrap();
+        assert_eq!(cfg.data.dim, 128);
+    }
+}

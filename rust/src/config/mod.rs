@@ -1,0 +1,576 @@
+//! Experiment configuration: typed configs, a TOML-subset loader and the
+//! validation logic shared by the CLI, the harness and the examples.
+
+pub mod toml;
+
+use crate::util::json::JsonBuilder;
+use anyhow::{bail, Context, Result};
+use toml::{TomlDoc, TomlVal};
+
+/// Which optimization algorithm drives the run (paper §2/§4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Alg. 5 — the paper's contribution.
+    Asgd,
+    /// Alg. 5 with communication disabled ("silent", figs. 14/15).
+    AsgdSilent,
+    /// Alg. 3 — SimuParallelSGD (Zinkevich et al. [20]).
+    SimuSgd,
+    /// Alg. 1 — full-batch gradient descent, MapReduce-parallelized [5].
+    Batch,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Asgd => "asgd",
+            Method::AsgdSilent => "asgd-silent",
+            Method::SimuSgd => "sgd",
+            Method::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "asgd" => Method::Asgd,
+            "asgd-silent" | "silent" => Method::AsgdSilent,
+            "sgd" | "simusgd" | "simuparallelsgd" => Method::SimuSgd,
+            "batch" | "mapreduce" => Method::Batch,
+            other => bail!("unknown method {other:?} (asgd|asgd-silent|sgd|batch)"),
+        })
+    }
+}
+
+/// Parzen-window gate variant (eq. 4, §4.1/§4.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GateMode {
+    /// eq. (4) on the whole state vector.
+    FullState,
+    /// eq. (4) evaluated per cluster-center row (§4.4 partial updates).
+    PerCenter,
+    /// No gating — accept every complete external state (ablation).
+    Off,
+}
+
+impl GateMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GateMode::FullState => "full",
+            GateMode::PerCenter => "per-center",
+            GateMode::Off => "off",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "full" | "full-state" => GateMode::FullState,
+            "per-center" | "percenter" | "pc" => GateMode::PerCenter,
+            "off" | "none" => GateMode::Off,
+            other => bail!("unknown gate mode {other:?} (full|per-center|off)"),
+        })
+    }
+}
+
+/// Final aggregation of the per-worker states (§4.3, figs. 16/17).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggMode {
+    /// Return `w^1` of the first worker (alg. 5 line 10).
+    ReturnFirst,
+    /// Tree-structured mean over all workers (the SGD-style reduce).
+    TreeMean,
+}
+
+impl AggMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggMode::ReturnFirst => "first",
+            AggMode::TreeMean => "tree-mean",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "first" | "local" => AggMode::ReturnFirst,
+            "tree-mean" | "mean" | "reduce" => AggMode::TreeMean,
+            other => bail!("unknown aggregation {other:?} (first|tree-mean)"),
+        })
+    }
+}
+
+/// Compute backend for the numeric core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-rust kernels (arbitrary shapes; the perf baseline).
+    Native,
+    /// AOT-compiled XLA artifacts through PJRT (the three-layer path).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Xla => "xla",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "native" | "rust" => BackendKind::Native,
+            "xla" | "pjrt" => BackendKind::Xla,
+            other => bail!("unknown backend {other:?} (native|xla)"),
+        })
+    }
+}
+
+/// What to do with a torn (partially overwritten) external buffer read
+/// (§4.4 data races).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RacePolicy {
+    /// Detect via seqlock and drop the message (treat the buffer as empty).
+    DiscardTorn,
+    /// Use the possibly-inconsistent snapshot anyway (the paper's Hogwild
+    /// -style behaviour: races "underestimate the gradient projection").
+    AcceptTorn,
+}
+
+impl RacePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RacePolicy::DiscardTorn => "discard-torn",
+            RacePolicy::AcceptTorn => "accept-torn",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "discard" | "discard-torn" => RacePolicy::DiscardTorn,
+            "accept" | "accept-torn" | "hogwild" => RacePolicy::AcceptTorn,
+            other => bail!("unknown race policy {other:?} (discard|accept)"),
+        })
+    }
+}
+
+/// Model family trained through the numeric core.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelKind {
+    /// K-Means clustering with k centers (the paper's evaluation vehicle).
+    KMeans { k: usize },
+    /// Least-squares linear regression.
+    LinReg,
+    /// Logistic regression.
+    LogReg,
+    /// Two-layer tanh MLP classifier (flattened state).
+    Mlp { hidden: usize, classes: usize },
+}
+
+impl ModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::KMeans { .. } => "kmeans",
+            ModelKind::LinReg => "linreg",
+            ModelKind::LogReg => "logreg",
+            ModelKind::Mlp { .. } => "mlp",
+        }
+    }
+
+    /// Length of the flattened state vector for input dimension `dim`.
+    pub fn state_len(&self, dim: usize) -> usize {
+        match self {
+            ModelKind::KMeans { k } => k * dim,
+            ModelKind::LinReg | ModelKind::LogReg => dim,
+            ModelKind::Mlp { hidden, classes } => {
+                dim * hidden + hidden + hidden * classes + classes
+            }
+        }
+    }
+}
+
+/// Dataset description (§5.3).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataKind {
+    /// Random centers + per-center Gaussian draws with minimum-distance
+    /// and variance controls (§5.3 "Synthetic Data Sets").
+    Synthetic {
+        k_true: usize,
+        cluster_std: f32,
+        min_dist: f32,
+    },
+    /// Codebook-structured HOG-like features (§5.3 "Image Classification"):
+    /// heavy-tailed cluster mass, correlated dimensions, d = 128.
+    Hog { k_true: usize },
+    /// Linear-model data: y = x.w* + noise (regression) or labels from a
+    /// ground-truth separating plane (classification).
+    Linear { noise: f32 },
+}
+
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    pub kind: DataKind,
+    pub n_samples: usize,
+    pub dim: usize,
+    pub seed: u64,
+}
+
+impl DataConfig {
+    pub fn synthetic(n_samples: usize, dim: usize, k_true: usize) -> Self {
+        Self {
+            kind: DataKind::Synthetic {
+                k_true,
+                cluster_std: 1.0,
+                min_dist: 8.0,
+            },
+            n_samples,
+            dim,
+            seed: 20150801,
+        }
+    }
+
+    pub fn hog(n_samples: usize, k_true: usize) -> Self {
+        Self {
+            kind: DataKind::Hog { k_true },
+            n_samples,
+            dim: 128,
+            seed: 20150802,
+        }
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: ModelKind,
+    pub method: Method,
+    /// Worker thread count (the paper's CPUs = nodes x threads).
+    pub workers: usize,
+    /// Mini-batch size b (communication frequency is 1/b, §4.5).
+    pub minibatch: usize,
+    /// Step size epsilon.
+    pub eps: f32,
+    /// Mini-batch iterations per worker (the paper's I / CPUs / b).
+    pub iters: usize,
+    /// Random recipients per send (fig. 2: "a few random recipients").
+    pub fanout: usize,
+    /// Send every `send_interval` mini-batches (1 = every update, the
+    /// paper's default; larger values emulate lower communication
+    /// frequencies than 1/b at fixed b — fig. 13's 1/100000 curve).
+    pub send_interval: usize,
+    /// External buffers per worker (N in eq. 3).
+    pub n_buffers: usize,
+    pub gate: GateMode,
+    pub aggregation: AggMode,
+    pub race: RacePolicy,
+    pub backend: BackendKind,
+    pub seed: u64,
+    pub data: DataConfig,
+    /// Yield the OS thread after every iteration.  On machines with
+    /// fewer cores than workers this approximates the interleaving of a
+    /// real parallel run (without it a worker burns its whole timeslice,
+    /// so its messages overwrite each other before recipients ever look
+    /// — an oversubscription artifact, not the algorithm).
+    pub yield_per_iter: bool,
+    /// Record a convergence-trace point every this many iterations.
+    pub eval_every: usize,
+    /// Samples used for the error evaluation.
+    pub eval_samples: usize,
+    pub artifact_dir: String,
+}
+
+impl TrainConfig {
+    /// Paper-flavored ASGD defaults for a K-Means workload.
+    pub fn asgd_default(k: usize, dim: usize, minibatch: usize) -> Self {
+        Self {
+            model: ModelKind::KMeans { k },
+            method: Method::Asgd,
+            workers: 8,
+            minibatch,
+            eps: 0.1,
+            iters: 200,
+            fanout: 2,
+            send_interval: 1,
+            n_buffers: 4,
+            gate: GateMode::FullState,
+            aggregation: AggMode::ReturnFirst,
+            race: RacePolicy::DiscardTorn,
+            backend: BackendKind::Native,
+            seed: 42,
+            data: DataConfig::synthetic(200_000, dim, k),
+            yield_per_iter: std::thread::available_parallelism()
+                .map(|p| p.get() < 4)
+                .unwrap_or(true),
+            eval_every: 10,
+            eval_samples: 8192,
+            artifact_dir: crate::DEFAULT_ARTIFACT_DIR.to_string(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.method == Method::Asgd && self.workers < 2 {
+            bail!("asgd needs >= 2 workers (messages go to a rank != self)");
+        }
+        if self.minibatch == 0 {
+            bail!("minibatch must be >= 1");
+        }
+        if !(self.eps > 0.0) {
+            bail!("eps must be > 0 (paper: Require eps > 0)");
+        }
+        if self.n_buffers == 0 && self.method == Method::Asgd {
+            bail!("asgd needs >= 1 external buffer");
+        }
+        if self.fanout >= self.workers && self.method == Method::Asgd {
+            bail!(
+                "fanout {} must be < workers {} (recipients exclude self)",
+                self.fanout,
+                self.workers
+            );
+        }
+        let shard = self.data.n_samples / self.workers;
+        if shard < self.minibatch {
+            bail!(
+                "shard size {shard} < minibatch {} — more data or fewer workers",
+                self.minibatch
+            );
+        }
+        Ok(())
+    }
+
+    /// A compact one-line description for logs and reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}",
+            self.method.name(),
+            self.model.name(),
+            self.workers,
+            self.minibatch,
+            self.eps,
+            self.iters,
+            self.gate.name(),
+            self.aggregation.name(),
+            self.backend.name()
+        )
+    }
+
+    /// JSON snapshot for result provenance.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        JsonBuilder::new()
+            .str("method", self.method.name())
+            .str("model", self.model.name())
+            .num("workers", self.workers as f64)
+            .num("minibatch", self.minibatch as f64)
+            .num("eps", self.eps as f64)
+            .num("iters", self.iters as f64)
+            .num("fanout", self.fanout as f64)
+            .num("n_buffers", self.n_buffers as f64)
+            .str("gate", self.gate.name())
+            .str("aggregation", self.aggregation.name())
+            .str("backend", self.backend.name())
+            .num("seed", self.seed as f64)
+            .num("n_samples", self.data.n_samples as f64)
+            .num("dim", self.data.dim as f64)
+            .build()
+    }
+
+    /// Load from a TOML file with `[train]` and optional `[data]` sections.
+    pub fn from_toml_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = toml::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_doc(&doc)
+    }
+
+    fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let t = doc
+            .get("train")
+            .context("missing [train] section")?;
+        let get_usize = |key: &str, default: usize| -> Result<usize> {
+            match t.get(key) {
+                None => Ok(default),
+                Some(v) => v.as_usize().with_context(|| format!("{key} must be an integer")),
+            }
+        };
+        let k = get_usize("k", 10)?;
+        let model = match t.get("model").and_then(TomlVal::as_str).unwrap_or("kmeans") {
+            "kmeans" => ModelKind::KMeans { k },
+            "linreg" => ModelKind::LinReg,
+            "logreg" => ModelKind::LogReg,
+            "mlp" => ModelKind::Mlp {
+                hidden: get_usize("hidden", 64)?,
+                classes: get_usize("classes", 10)?,
+            },
+            other => bail!("unknown model {other:?}"),
+        };
+        let dim = get_usize("dim", 10)?;
+        let mut cfg = TrainConfig::asgd_default(k, dim, get_usize("minibatch", 500)?);
+        cfg.model = model;
+        if let Some(v) = t.get("method") {
+            cfg.method = Method::parse(v.as_str().context("method must be a string")?)?;
+        }
+        cfg.workers = get_usize("workers", cfg.workers)?;
+        cfg.iters = get_usize("iters", cfg.iters)?;
+        cfg.fanout = get_usize("fanout", cfg.fanout)?;
+        cfg.send_interval = get_usize("send_interval", cfg.send_interval)?.max(1);
+        cfg.n_buffers = get_usize("n_buffers", cfg.n_buffers)?;
+        cfg.eval_every = get_usize("eval_every", cfg.eval_every)?;
+        cfg.eval_samples = get_usize("eval_samples", cfg.eval_samples)?;
+        if let Some(v) = t.get("eps") {
+            cfg.eps = v.as_f64().context("eps must be a number")? as f32;
+        }
+        if let Some(v) = t.get("seed") {
+            cfg.seed = v.as_i64().context("seed must be an integer")? as u64;
+        }
+        if let Some(v) = t.get("gate") {
+            cfg.gate = GateMode::parse(v.as_str().context("gate must be a string")?)?;
+        }
+        if let Some(v) = t.get("aggregation") {
+            cfg.aggregation = AggMode::parse(v.as_str().context("aggregation must be a string")?)?;
+        }
+        if let Some(v) = t.get("backend") {
+            cfg.backend = BackendKind::parse(v.as_str().context("backend must be a string")?)?;
+        }
+        if let Some(v) = t.get("race") {
+            cfg.race = RacePolicy::parse(v.as_str().context("race must be a string")?)?;
+        }
+        if let Some(v) = t.get("artifact_dir") {
+            cfg.artifact_dir = v.as_str().context("artifact_dir must be a string")?.to_string();
+        }
+        if let Some(d) = doc.get("data") {
+            if let Some(v) = d.get("n_samples") {
+                cfg.data.n_samples = v.as_usize().context("n_samples must be an integer")?;
+            }
+            if let Some(v) = d.get("seed") {
+                cfg.data.seed = v.as_i64().context("data seed must be an integer")? as u64;
+            }
+            cfg.data.dim = dim;
+            match d.get("kind").and_then(TomlVal::as_str).unwrap_or("synthetic") {
+                "synthetic" => {
+                    let k_true = d
+                        .get("k_true")
+                        .and_then(TomlVal::as_usize)
+                        .unwrap_or(k);
+                    let cluster_std = d
+                        .get("cluster_std")
+                        .and_then(TomlVal::as_f64)
+                        .unwrap_or(1.0) as f32;
+                    let min_dist =
+                        d.get("min_dist").and_then(TomlVal::as_f64).unwrap_or(8.0) as f32;
+                    cfg.data.kind = DataKind::Synthetic {
+                        k_true,
+                        cluster_std,
+                        min_dist,
+                    };
+                }
+                "hog" => {
+                    cfg.data.kind = DataKind::Hog {
+                        k_true: d.get("k_true").and_then(TomlVal::as_usize).unwrap_or(k),
+                    };
+                    cfg.data.dim = 128;
+                }
+                "linear" => {
+                    cfg.data.kind = DataKind::Linear {
+                        noise: d.get("noise").and_then(TomlVal::as_f64).unwrap_or(0.1) as f32,
+                    };
+                }
+                other => bail!("unknown data kind {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        TrainConfig::asgd_default(10, 10, 500).validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.workers = 1;
+        assert!(c.validate().is_err()); // asgd needs 2+
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.eps = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.fanout = c.workers;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.data.n_samples = 100; // shard < minibatch
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = TrainConfig::from_toml_str(
+            r#"
+[train]
+method = "asgd"
+model = "kmeans"
+k = 100
+dim = 10
+minibatch = 500
+workers = 4
+eps = 0.05
+gate = "per-center"
+aggregation = "tree-mean"
+backend = "native"
+
+[data]
+kind = "synthetic"
+n_samples = 100000
+k_true = 100
+cluster_std = 0.8
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model, ModelKind::KMeans { k: 100 });
+        assert_eq!(cfg.gate, GateMode::PerCenter);
+        assert_eq!(cfg.aggregation, AggMode::TreeMean);
+        assert_eq!(cfg.data.n_samples, 100_000);
+        match cfg.data.kind {
+            DataKind::Synthetic { k_true, cluster_std, .. } => {
+                assert_eq!(k_true, 100);
+                assert!((cluster_std - 0.8).abs() < 1e-6);
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn hog_forces_dim_128() {
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nk = 100\ndim = 10\nworkers = 4\n[data]\nkind = \"hog\"\nn_samples = 50000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.data.dim, 128);
+    }
+
+    #[test]
+    fn parse_enums() {
+        assert_eq!(Method::parse("batch").unwrap(), Method::Batch);
+        assert!(Method::parse("nope").is_err());
+        assert_eq!(GateMode::parse("pc").unwrap(), GateMode::PerCenter);
+        assert_eq!(AggMode::parse("mean").unwrap(), AggMode::TreeMean);
+        assert_eq!(RacePolicy::parse("hogwild").unwrap(), RacePolicy::AcceptTorn);
+    }
+
+    #[test]
+    fn state_len() {
+        assert_eq!(ModelKind::KMeans { k: 10 }.state_len(10), 100);
+        assert_eq!(ModelKind::LinReg.state_len(128), 128);
+        assert_eq!(
+            ModelKind::Mlp { hidden: 64, classes: 10 }.state_len(32),
+            32 * 64 + 64 + 64 * 10 + 10
+        );
+    }
+}

@@ -1,0 +1,214 @@
+//! TOML-subset parser for experiment config files (no external crates).
+//!
+//! Supported grammar — the pragmatic subset real configs use:
+//! `[section]` headers, `key = value` pairs with string / integer / float /
+//! boolean / homogeneous-array values, `#` comments, blank lines.
+//! Nested tables beyond one level and multi-line values are not supported
+//! (and not needed by `configs/*.toml`).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlVal {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlVal>),
+}
+
+impl TomlVal {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlVal::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlVal::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlVal::Float(f) => Some(*f),
+            TomlVal::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlVal::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+}
+
+/// `section -> key -> value`; keys before any `[section]` land in `""`.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlVal>>;
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or(TomlError {
+                line: lineno + 1,
+                msg: "unterminated section header".into(),
+            })?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line.find('=').ok_or(TomlError {
+            line: lineno + 1,
+            msg: "expected 'key = value'".into(),
+        })?;
+        let key = line[..eq].trim().to_string();
+        let value = parse_value(line[eq + 1..].trim()).map_err(|msg| TomlError {
+            line: lineno + 1,
+            msg,
+        })?;
+        doc.get_mut(&section).unwrap().insert(key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlVal, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlVal::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlVal::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlVal::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue; // trailing comma
+                }
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlVal::Arr(items));
+    }
+    // numbers: underscores allowed as separators
+    let cleaned = s.replace('_', "");
+    if !cleaned.contains('.') && !cleaned.contains('e') && !cleaned.contains('E') {
+        if let Ok(i) = cleaned.parse::<i64>() {
+            return Ok(TomlVal::Int(i));
+        }
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(TomlVal::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+# experiment
+top = 1
+[train]
+method = "asgd"        # the paper's algorithm
+minibatch = 500
+eps = 0.05
+silent = false
+cpus = [128, 256, 512]
+big = 1_000_000
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], TomlVal::Int(1));
+        let t = &doc["train"];
+        assert_eq!(t["method"].as_str(), Some("asgd"));
+        assert_eq!(t["minibatch"].as_usize(), Some(500));
+        assert_eq!(t["eps"].as_f64(), Some(0.05));
+        assert_eq!(t["silent"].as_bool(), Some(false));
+        assert_eq!(t["big"].as_i64(), Some(1_000_000));
+        match &t["cpus"] {
+            TomlVal::Arr(a) => assert_eq!(a.len(), 3),
+            _ => panic!("not an array"),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse("name = \"a#b\"").unwrap();
+        assert_eq!(doc[""]["name"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse("[open\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse("a = 3\nb = 3.0\nc = 1e3").unwrap();
+        assert_eq!(doc[""]["a"], TomlVal::Int(3));
+        assert_eq!(doc[""]["b"], TomlVal::Float(3.0));
+        assert_eq!(doc[""]["c"], TomlVal::Float(1000.0));
+    }
+}

@@ -1,0 +1,70 @@
+//! Final aggregation of the per-worker states (§4.3, figs. 16/17).
+//!
+//! Alg. 5 line 10 returns `w_I^1` — worker 0's local state — because
+//! after enough asynchronous mixing "all nodes hold small local
+//! variations of the global result".  The alternative is the SGD-style
+//! tree-reduce mean (alg. 3 line 9).  Both are provided; fig. 16/17
+//! compare their runtime and error.
+
+use crate::config::AggMode;
+use crate::net::allreduce::TreeReduce;
+
+/// Aggregate per-worker states (row-major `[workers, state_len]` as a vec
+/// of vecs).  Returns the final model state.
+pub fn aggregate(mode: AggMode, states: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!states.is_empty());
+    match mode {
+        AggMode::ReturnFirst => states[0].clone(),
+        AggMode::TreeMean => tree_mean(states),
+    }
+}
+
+/// Tree-reduce mean over the states, executed on real threads through the
+/// same [`TreeReduce`] fabric the BATCH baseline uses (so figs. 16/17
+/// measure genuine reduction cost, not a shortcut).
+pub fn tree_mean(states: &[Vec<f32>]) -> Vec<f32> {
+    let n = states.len();
+    if n == 1 {
+        return states[0].clone();
+    }
+    let tree = TreeReduce::new(n);
+    let mut handles = Vec::with_capacity(n);
+    for (rank, s) in states.iter().enumerate() {
+        let tree = tree.clone();
+        let local = s.clone();
+        handles.push(std::thread::spawn(move || tree.allreduce_mean(rank, local)));
+    }
+    let mut result = Vec::new();
+    for h in handles {
+        result = h.join().expect("aggregation thread panicked");
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn return_first_returns_first() {
+        let states = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        assert_eq!(aggregate(AggMode::ReturnFirst, &states), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn tree_mean_is_elementwise_mean() {
+        let states = vec![
+            vec![1.0, 10.0],
+            vec![2.0, 20.0],
+            vec![3.0, 30.0],
+            vec![6.0, 0.0],
+        ];
+        let m = aggregate(AggMode::TreeMean, &states);
+        assert_eq!(m, vec![3.0, 15.0]);
+    }
+
+    #[test]
+    fn single_worker_short_circuits() {
+        assert_eq!(tree_mean(&[vec![5.0]]), vec![5.0]);
+    }
+}

@@ -1,0 +1,112 @@
+//! The BATCH baseline (alg. 1), MapReduce-parallelized per Chu et al. [5]
+//! with the §5.1 tree-structured reduction.
+//!
+//! Every iteration: each worker computes the gradient contribution of its
+//! *entire shard* (the map), the contributions are tree-allreduced (the
+//! reduce), and every worker applies the same global step.  One iteration
+//! therefore touches all m samples — the paper's
+//! `I_BATCH = T * |X|` accounting.
+
+use crate::config::TrainConfig;
+use crate::data::partition::Shard;
+use crate::data::Dataset;
+use crate::metrics::{RunReport, TracePoint};
+use crate::models::Model;
+use crate::net::allreduce::TreeReduce;
+use crate::optim::sgd_apply;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Run alg. 1 with `cfg.iters` full-batch iterations over `cfg.workers`
+/// map threads.
+pub fn run_batch(
+    cfg: &TrainConfig,
+    model: Arc<dyn Model>,
+    data: Arc<Dataset>,
+    shards: Vec<Shard>,
+    w0: Vec<f32>,
+) -> RunReport {
+    let n_workers = shards.len();
+    let state_len = w0.len();
+    let tree = TreeReduce::new(n_workers);
+    let global_samples = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+
+    let mut handles = Vec::with_capacity(n_workers);
+    for shard in shards {
+        let tree = tree.clone();
+        let model = model.clone();
+        let cfg = cfg.clone();
+        let data = data.clone();
+        let mut w = w0.clone();
+        let global_samples = global_samples.clone();
+        handles.push(std::thread::spawn(move || {
+            let rank = shard.worker;
+            let mut grad = vec![0.0f32; state_len];
+            let mut chunk_grad = vec![0.0f32; state_len];
+            let mut trace = Vec::new();
+            for t in 0..cfg.iters {
+                // ---- map: mean gradient over the local shard ----------
+                grad.fill(0.0);
+                let chunk = cfg.minibatch.min(shard.n);
+                let mut processed = 0usize;
+                while processed < shard.n {
+                    let count = chunk.min(shard.n - processed);
+                    let x = shard.rows(processed, count);
+                    let labels = shard.labels.as_ref().map(|l| &l[processed..processed + count]);
+                    model.grad(x, labels, &w, &mut chunk_grad);
+                    // weight by chunk size (model.grad returns the mean)
+                    let scale = count as f32 / shard.n as f32;
+                    for (g, c) in grad.iter_mut().zip(&chunk_grad) {
+                        *g += scale * c;
+                    }
+                    processed += count;
+                }
+                global_samples.fetch_add(shard.n as u64, Ordering::Relaxed);
+
+                // ---- reduce: tree allreduce of the global mean --------
+                let reduced = tree.allreduce_mean(rank, grad.clone());
+
+                // ---- update (alg. 1 line 3) ---------------------------
+                sgd_apply(&mut w, &reduced, cfg.eps);
+
+                if rank == 0 && (t % cfg.eval_every.max(1) == 0 || t + 1 == cfg.iters) {
+                    let objective = model.eval(&data, &w, cfg.eval_samples);
+                    let truth_error = model.truth_error(&data, &w).unwrap_or(f64::NAN);
+                    trace.push(TracePoint {
+                        global_iters: global_samples.load(Ordering::Relaxed) as f64,
+                        time_s: t0.elapsed().as_secs_f64(),
+                        objective,
+                        truth_error,
+                    });
+                }
+            }
+            (rank, w, trace)
+        }));
+    }
+
+    let mut final_state = vec![0.0f32; state_len];
+    let mut trace = Vec::new();
+    for h in handles {
+        let (rank, w, t) = h.join().expect("batch worker panicked");
+        if rank == 0 {
+            final_state = w;
+            trace = t;
+        }
+    }
+
+    let wallclock = t0.elapsed().as_secs_f64();
+    RunReport {
+        method: "batch".into(),
+        workers: n_workers,
+        final_objective: model.eval(&data, &final_state, cfg.eval_samples),
+        final_error: model.truth_error(&data, &final_state).unwrap_or(f64::NAN),
+        wallclock_s: wallclock,
+        total_iters: cfg.iters as u64,
+        global_samples: global_samples.load(Ordering::Relaxed),
+        trace,
+        comm: Default::default(),
+        state: final_state,
+    }
+}

@@ -1,0 +1,247 @@
+//! The L3 coordinator — the paper's system contribution.
+//!
+//! [`run_training`] is the single entry point: it generates (or accepts)
+//! a dataset, partitions it (alg. 5 lines 1-2), initializes `w_0` on the
+//! leader, spawns one worker thread per rank over the GASPI-style
+//! substrate, runs the selected method to completion, aggregates
+//! (§4.3), and returns a [`RunReport`] with traces and communication
+//! statistics.
+//!
+//! Method dispatch:
+//! * [`crate::config::Method::Asgd`]        — alg. 5 (the contribution)
+//! * [`crate::config::Method::AsgdSilent`]  — alg. 5 minus communication
+//! * [`crate::config::Method::SimuSgd`]     — alg. 3 (Zinkevich [20])
+//! * [`crate::config::Method::Batch`]       — alg. 1 (Chu [5]) via
+//!   [`batch::run_batch`]
+
+pub mod aggregate;
+pub mod batch;
+pub mod worker;
+
+use crate::config::{AggMode, Method, TrainConfig};
+use crate::data::{partition::partition, Dataset};
+use crate::gaspi::{Topology, World};
+use crate::metrics::RunReport;
+use crate::models;
+use crate::runtime::build_stepper;
+use crate::util::rng::Xoshiro256pp;
+use anyhow::{Context, Result};
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+use worker::{run_worker, OnceInstant, WorkerCtx, WorkerResult};
+
+/// Train per the config on a freshly generated dataset.
+pub fn run_training(cfg: &TrainConfig) -> Result<RunReport> {
+    let data = Arc::new(crate::data::generate(&cfg.data));
+    run_training_on(cfg, data)
+}
+
+/// Train per the config on a caller-provided dataset.
+pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunReport> {
+    cfg.validate()?;
+    log::info!("run: {}", cfg.describe());
+    let model: Arc<dyn models::Model> = models::build(cfg).into();
+
+    // Leader init (§4 "Initialization"): w_0 from the control thread.
+    let mut leader_rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let w0 = model.init_state(&data, &mut leader_rng);
+
+    // alg. 5 lines 1-2: random partition, H samples per worker.
+    let shards = partition(&data, cfg.workers, cfg.seed);
+
+    if cfg.method == Method::Batch {
+        return Ok(batch::run_batch(cfg, model, data, shards, w0));
+    }
+
+    let stepper = build_stepper(cfg, model.clone()).context("building stepper")?;
+    let world = Arc::new(World::new(
+        cfg.workers,
+        cfg.n_buffers.max(1),
+        w0.len(),
+        Topology::flat(cfg.workers),
+    ));
+    let barrier = Arc::new(Barrier::new(cfg.workers));
+    let start = Arc::new(OnceInstant::default());
+    let global_samples = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+
+    let mut handles = Vec::with_capacity(cfg.workers);
+    for shard in shards {
+        let ctx = WorkerCtx {
+            rank: shard.worker,
+            cfg: cfg.clone(),
+            shard,
+            w0: w0.clone(),
+            world: world.clone(),
+            stepper: stepper.clone(),
+            model: model.clone(),
+            eval_data: data.clone(),
+            barrier: barrier.clone(),
+            start: start.clone(),
+            global_samples: global_samples.clone(),
+        };
+        let name = format!("w{:03}", ctx.rank);
+        handles.push(
+            std::thread::Builder::new()
+                .name(name)
+                .spawn(move || run_worker(ctx))
+                .context("spawning worker")?,
+        );
+    }
+
+    let mut results: Vec<WorkerResult> = Vec::with_capacity(cfg.workers);
+    for h in handles {
+        results.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?);
+    }
+    results.sort_by_key(|r| r.rank);
+    let wallclock = t0.elapsed().as_secs_f64();
+
+    // §4.3 final aggregation.
+    let states: Vec<Vec<f32>> = results.iter().map(|r| r.state.clone()).collect();
+    let final_state = aggregate::aggregate(cfg.aggregation, &states);
+
+    let trace = results
+        .iter()
+        .find(|r| r.rank == 0)
+        .map(|r| r.trace.clone())
+        .unwrap_or_default();
+    let total_iters: u64 = results.iter().map(|r| r.iters).sum();
+
+    Ok(RunReport {
+        method: cfg.method.name().into(),
+        workers: cfg.workers,
+        final_objective: model.eval(&data, &final_state, cfg.eval_samples),
+        final_error: model.truth_error(&data, &final_state).unwrap_or(f64::NAN),
+        wallclock_s: wallclock,
+        total_iters,
+        global_samples: global_samples.load(std::sync::atomic::Ordering::Relaxed),
+        trace,
+        comm: world.stats.total(),
+        state: final_state,
+    })
+}
+
+/// 10-fold evaluation (§5.4): run `folds` times with distinct seeds,
+/// returning every report (callers summarize with
+/// [`crate::metrics::summarize_folds`]).
+pub fn run_folds(cfg: &TrainConfig, folds: usize) -> Result<Vec<RunReport>> {
+    let mut reports = Vec::with_capacity(folds);
+    for fold in 0..folds {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed.wrapping_add(fold as u64 * 7919);
+        c.data.seed = cfg.data.seed.wrapping_add(fold as u64 * 104729);
+        reports.push(run_training(&c)?);
+    }
+    Ok(reports)
+}
+
+/// Convenience used across harness/examples: ASGD vs its baselines on the
+/// same data/seed, differing only in `method`.
+pub fn with_method(cfg: &TrainConfig, method: Method) -> TrainConfig {
+    let mut c = cfg.clone();
+    c.method = method;
+    if method == Method::Batch {
+        // alg. 1 iterates epochs; keep sample-touch counts comparable:
+        // iters_batch = iters * b * workers / n  (rounded up, >= 1)
+        let touches = cfg.iters as u64 * cfg.minibatch as u64 * cfg.workers as u64;
+        c.iters = ((touches + cfg.data.n_samples as u64 - 1) / cfg.data.n_samples as u64).max(1)
+            as usize;
+        c.eval_every = 1;
+    }
+    // aggregation default per method (§4.3 / alg. 3 line 9)
+    if method == Method::SimuSgd {
+        c.aggregation = AggMode::TreeMean;
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, Method};
+
+    fn small_cfg() -> TrainConfig {
+        let mut cfg = TrainConfig::asgd_default(5, 6, 64);
+        cfg.workers = 4;
+        cfg.iters = 60;
+        cfg.eps = 0.2;
+        cfg.eval_every = 20;
+        cfg.eval_samples = 2048;
+        cfg.data.n_samples = 20_000;
+        cfg.backend = BackendKind::Native;
+        cfg
+    }
+
+    #[test]
+    fn asgd_converges_and_communicates() {
+        let report = run_training(&small_cfg()).unwrap();
+        assert_eq!(report.workers, 4);
+        assert!(report.comm.sent > 0, "no messages sent");
+        assert!(report.comm.received > 0, "no messages received");
+        assert!(!report.trace.is_empty());
+        let first = report.trace.first().unwrap().objective;
+        let last = report.trace.last().unwrap().objective;
+        assert!(last < first, "objective did not descend: {first} -> {last}");
+        assert!(report.final_error.is_finite());
+    }
+
+    #[test]
+    fn silent_mode_sends_nothing() {
+        let mut cfg = small_cfg();
+        cfg.method = Method::AsgdSilent;
+        let report = run_training(&cfg).unwrap();
+        assert_eq!(report.comm.sent, 0);
+        assert_eq!(report.comm.received, 0);
+    }
+
+    #[test]
+    fn simusgd_matches_silent_modulo_aggregation() {
+        // SimuParallelSGD == ASGD-silent with a final mean (§4): same
+        // seeds, same shards -> identical worker states, so TreeMean vs
+        // ReturnFirst is the only difference.
+        let mut a = small_cfg();
+        a.method = Method::AsgdSilent;
+        a.aggregation = AggMode::TreeMean;
+        let mut b = small_cfg();
+        b.method = Method::SimuSgd;
+        b.aggregation = AggMode::TreeMean;
+        let ra = run_training(&a).unwrap();
+        let rb = run_training(&b).unwrap();
+        assert_eq!(ra.state, rb.state);
+    }
+
+    #[test]
+    fn batch_runs_and_descends() {
+        let mut cfg = small_cfg();
+        cfg.method = Method::Batch;
+        cfg.iters = 8;
+        cfg.eps = 1.0; // batch K-Means tolerates big steps (Lloyd-like)
+        cfg.eval_every = 1;
+        let report = run_training(&cfg).unwrap();
+        assert_eq!(report.global_samples, 8 * (cfg.data.n_samples as u64 / 4) * 4);
+        let first = report.trace.first().unwrap().objective;
+        let last = report.trace.last().unwrap().objective;
+        assert!(last <= first, "{first} -> {last}");
+    }
+
+    #[test]
+    fn folds_vary_seeds() {
+        let mut cfg = small_cfg();
+        cfg.iters = 10;
+        let reports = run_folds(&cfg, 3).unwrap();
+        assert_eq!(reports.len(), 3);
+        // different data/seeds -> different final errors (w.h.p.)
+        assert!(
+            reports[0].final_error != reports[1].final_error
+                || reports[1].final_error != reports[2].final_error
+        );
+    }
+
+    #[test]
+    fn with_method_rescales_batch_iters() {
+        let cfg = small_cfg(); // 60 iters * 64 b * 4 workers = 15360 touches
+        let b = with_method(&cfg, Method::Batch);
+        assert_eq!(b.iters, 1); // 15360 / 20000 -> 1 epoch minimum
+    }
+}

@@ -1,0 +1,168 @@
+//! The ASGD worker loop — alg. 5, one thread per rank (fig. 2).
+//!
+//! Per iteration: draw a mini-batch from the local shard, snapshot the
+//! external buffers (wait-free), run one [`Stepper`] iteration (gradient
+//! + Parzen-gated merge + step), then push the new state to `fanout`
+//! random recipients with one-sided puts.  No blocking communication
+//! anywhere in the loop.
+
+use crate::config::{Method, RacePolicy, TrainConfig};
+use crate::data::partition::Shard;
+use crate::gaspi::{ReadOutcome, World};
+use crate::metrics::TracePoint;
+use crate::models::Model;
+use crate::runtime::{StepScratch, Stepper};
+use crate::util::rng::Xoshiro256pp;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+/// What a worker thread returns.
+pub struct WorkerResult {
+    pub rank: usize,
+    pub state: Vec<f32>,
+    pub iters: u64,
+    /// Worker 0 records the convergence trace (others leave it empty).
+    pub trace: Vec<TracePoint>,
+}
+
+/// Everything a worker needs, bundled for the spawn call.
+pub struct WorkerCtx {
+    pub rank: usize,
+    pub cfg: TrainConfig,
+    pub shard: Shard,
+    pub w0: Vec<f32>,
+    pub world: Arc<World>,
+    pub stepper: Arc<dyn Stepper>,
+    pub model: Arc<dyn Model>,
+    /// Shared evaluation prefix (worker 0 traces against it).
+    pub eval_data: Arc<crate::data::Dataset>,
+    pub barrier: Arc<Barrier>,
+    pub start: Arc<OnceInstant>,
+    /// Global samples-touched counter (the paper's I, shared).
+    pub global_samples: Arc<AtomicU64>,
+}
+
+/// An Instant all workers agree on (set by whoever passes the barrier
+/// first).
+pub struct OnceInstant(std::sync::OnceLock<Instant>);
+
+impl Default for OnceInstant {
+    fn default() -> Self {
+        Self(std::sync::OnceLock::new())
+    }
+}
+
+impl OnceInstant {
+    pub fn get(&self) -> Instant {
+        *self.0.get_or_init(Instant::now)
+    }
+}
+
+/// Run the alg.-5 loop on the current thread.
+pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
+    let WorkerCtx {
+        rank,
+        cfg,
+        mut shard,
+        w0,
+        world,
+        stepper,
+        model,
+        eval_data,
+        barrier,
+        start,
+        global_samples,
+    } = ctx;
+
+    let state_len = w0.len();
+    let mut w = w0;
+    let mut scratch = StepScratch::default();
+    let mut exts = vec![0.0f32; cfg.n_buffers * state_len];
+    let mut slot_versions = vec![0u64; cfg.n_buffers];
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_mul(0x9E37_79B9).wrapping_add(rank as u64));
+    let mut recipients = Vec::with_capacity(cfg.fanout);
+    let mut trace = Vec::new();
+    let communicate = cfg.method == Method::Asgd;
+    let stats = world.stats.clone();
+    let my_segment = world.segments[rank].clone();
+
+    // alg. 5 line 4: "randomly shuffle samples on node i" happened at
+    // partition time; synchronize the start so wall-clock is comparable.
+    barrier.wait();
+    let t0 = start.get();
+
+    for t in 0..cfg.iters as u64 {
+        // ---- receive path: wait-free snapshot of the external buffers --
+        if communicate {
+            for slot in 0..cfg.n_buffers {
+                let buf = &mut exts[slot * state_len..(slot + 1) * state_len];
+                let (outcome, _sender, _iter, version) =
+                    my_segment.read_slot_into(slot, slot_versions[slot], buf);
+                slot_versions[slot] = version;
+                match outcome {
+                    ReadOutcome::Fresh => {
+                        stats.rank(rank).received.add(1);
+                    }
+                    ReadOutcome::Torn => {
+                        stats.rank(rank).torn.add(1);
+                        match cfg.race {
+                            RacePolicy::DiscardTorn => buf.fill(0.0),
+                            RacePolicy::AcceptTorn => {
+                                // Hogwild-style: use the mixed snapshot;
+                                // count it as received too.
+                                stats.rank(rank).received.add(1);
+                            }
+                        }
+                    }
+                    ReadOutcome::Stale => {
+                        stats.rank(rank).stale_polls.add(1);
+                        buf.fill(0.0);
+                    }
+                }
+            }
+        } else if t == 0 {
+            exts.fill(0.0); // silent / SimuParallelSGD: never any externals
+        }
+
+        // ---- local mini-batch update (fig. 4 I-IV) ---------------------
+        let (x, labels) = shard.next_batch(cfg.minibatch);
+        let out = stepper
+            .step(x, labels, &mut w, &exts, &mut scratch)
+            .expect("stepper failed");
+        stats.rank(rank).good.add(out.n_good as u64);
+        global_samples.fetch_add(cfg.minibatch as u64, Ordering::Relaxed);
+
+        // ---- send path: one-sided puts to random recipients ------------
+        if communicate && t % cfg.send_interval as u64 == 0 {
+            rng.sample_recipients(world.ranks(), rank, cfg.fanout, &mut recipients);
+            for &to in &recipients {
+                let slot = rng.index(cfg.n_buffers);
+                world.put_state(rank, to, t, &w, slot);
+            }
+        }
+
+        if cfg.yield_per_iter && communicate {
+            std::thread::yield_now();
+        }
+
+        // ---- trace (worker 0 only) -------------------------------------
+        if rank == 0 && (t % cfg.eval_every as u64 == 0 || t + 1 == cfg.iters as u64) {
+            let objective = model.eval(&eval_data, &w, cfg.eval_samples);
+            let truth_error = model.truth_error(&eval_data, &w).unwrap_or(f64::NAN);
+            trace.push(TracePoint {
+                global_iters: global_samples.load(Ordering::Relaxed) as f64,
+                time_s: t0.elapsed().as_secs_f64(),
+                objective,
+                truth_error,
+            });
+        }
+    }
+
+    WorkerResult {
+        rank,
+        state: w,
+        iters: cfg.iters as u64,
+        trace,
+    }
+}

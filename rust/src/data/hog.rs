@@ -1,0 +1,163 @@
+//! Codebook-structured HOG-like feature generator (§5.3 "Image
+//! Classification").
+//!
+//! The paper clusters d=128 HOG descriptors extracted from an image corpus
+//! into visual-word codebooks (k = 100..1000).  We have no image corpus in
+//! this environment (repro substitution, DESIGN.md §3), so we synthesize
+//! features that preserve what matters for figs. 6/7:
+//!
+//! * d = 128, non-negative, block-L2-normalized like real HOG descriptors
+//!   (16 blocks of 8 orientation bins);
+//! * heavy-tailed cluster mass (Zipf-like: a few visual words dominate, a
+//!   long tail is rare) — unlike the balanced synthetic sets;
+//! * correlated dimensions inside a block (gradient energy spreads over
+//!   neighboring orientation bins).
+
+use super::Dataset;
+use crate::util::rng::Xoshiro256pp;
+
+pub const HOG_DIM: usize = 128;
+const BLOCKS: usize = 16;
+const BINS: usize = 8; // orientations per block
+
+/// Zipf(1.0) cluster-mass distribution over `k_true` visual words.
+fn zipf_cdf(k_true: usize) -> Vec<f64> {
+    let mut weights: Vec<f64> = (1..=k_true).map(|r| 1.0 / r as f64).collect();
+    let total: f64 = weights.iter().sum();
+    let mut acc = 0.0;
+    for w in weights.iter_mut() {
+        acc += *w / total;
+        *w = acc;
+    }
+    weights
+}
+
+pub fn generate(n: usize, k_true: usize, seed: u64) -> Dataset {
+    assert!(k_true >= 1);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+
+    // --- prototype descriptors (the "true" visual words) ----------------
+    // Each prototype concentrates gradient energy on a dominant
+    // orientation per block, with energy leaking into adjacent bins.
+    let mut protos = vec![0.0f32; k_true * HOG_DIM];
+    for c in 0..k_true {
+        let proto = &mut protos[c * HOG_DIM..(c + 1) * HOG_DIM];
+        for b in 0..BLOCKS {
+            let dominant = rng.index(BINS);
+            let energy = 0.3 + 0.7 * rng.next_f32(); // block gradient energy
+            for o in 0..BINS {
+                // circular distance between orientation bins
+                let dist = {
+                    let d = (o as i32 - dominant as i32).unsigned_abs() as usize;
+                    d.min(BINS - d)
+                };
+                let fall = match dist {
+                    0 => 1.0,
+                    1 => 0.45,
+                    2 => 0.15,
+                    _ => 0.03,
+                };
+                proto[b * BINS + o] = energy * fall;
+            }
+        }
+        block_l2_normalize(proto);
+    }
+
+    let cdf = zipf_cdf(k_true);
+
+    // --- samples ---------------------------------------------------------
+    let mut x = vec![0.0f32; n * HOG_DIM];
+    for i in 0..n {
+        // Zipf-weighted visual word choice (heavy-tailed mass).
+        let u = rng.next_f64();
+        let c = cdf.partition_point(|&p| p < u).min(k_true - 1);
+        let proto = &protos[c * HOG_DIM..(c + 1) * HOG_DIM];
+        let row = &mut x[i * HOG_DIM..(i + 1) * HOG_DIM];
+        for j in 0..HOG_DIM {
+            // multiplicative jitter + additive noise, clamped to >= 0 like
+            // real gradient magnitudes
+            let v = proto[j] * (0.7 + 0.6 * rng.next_f32()) + 0.05 * rng.next_normal() as f32;
+            row[j] = v.max(0.0);
+        }
+        block_l2_normalize(row);
+    }
+
+    let mut ds = Dataset::new(n, HOG_DIM, x);
+    ds.truth = Some(protos);
+    ds.truth_k = k_true;
+    ds
+}
+
+/// L2-normalize each 8-bin block (standard HOG block normalization).
+fn block_l2_normalize(desc: &mut [f32]) {
+    for b in 0..BLOCKS {
+        let blk = &mut desc[b * BINS..(b + 1) * BINS];
+        let norm: f32 = blk.iter().map(|v| v * v).sum::<f32>().sqrt();
+        if norm > 1e-12 {
+            for v in blk.iter_mut() {
+                *v /= norm;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_normalization() {
+        let d = generate(500, 50, 3);
+        assert_eq!(d.dim, HOG_DIM);
+        assert_eq!(d.n, 500);
+        // every block of every sample is unit-L2 (or zero)
+        for i in 0..50 {
+            let row = d.row(i);
+            for b in 0..BLOCKS {
+                let norm: f32 = row[b * BINS..(b + 1) * BINS].iter().map(|v| v * v).sum();
+                assert!((norm - 1.0).abs() < 1e-4 || norm < 1e-8, "block norm {norm}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_negative() {
+        let d = generate(200, 10, 4);
+        assert!(d.x.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn zipf_mass_is_heavy_tailed() {
+        // assign samples to nearest prototype; the top word must dominate
+        let d = generate(4000, 20, 5);
+        let protos = d.truth.as_ref().unwrap();
+        let mut counts = vec![0usize; 20];
+        for i in 0..d.n {
+            let row = d.row(i);
+            let (mut best, mut bd) = (0usize, f64::INFINITY);
+            for c in 0..20 {
+                let dist = crate::util::sq_dist(row, &protos[c * HOG_DIM..(c + 1) * HOG_DIM]);
+                if dist < bd {
+                    bd = dist;
+                    best = c;
+                }
+            }
+            counts[best] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max > 5 * (min + 1), "mass not heavy-tailed: {counts:?}");
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(100, 5, 9).x, generate(100, 5, 9).x);
+    }
+
+    #[test]
+    fn cdf_monotone_and_complete() {
+        let cdf = zipf_cdf(10);
+        assert!(cdf.windows(2).all(|w| w[0] <= w[1]));
+        assert!((cdf[9] - 1.0).abs() < 1e-12);
+    }
+}

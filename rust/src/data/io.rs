@@ -1,0 +1,178 @@
+//! Binary on-disk dataset format (`.asgd` files).
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic  b"ASGD"            4 bytes
+//! version u32               = 1
+//! n      u64
+//! dim    u64
+//! flags  u32                bit0 = has labels, bit1 = has truth
+//! truth_k u64
+//! x      n*dim f32
+//! labels n     f32          (if flag bit0)
+//! truth  truth_k*dim f32    (if flag bit1)
+//! ```
+//!
+//! The paper's cluster streams ~1 TB from a BeeGFS parallel FS; here a
+//! flat binary file + chunked reader stands in for that path (DESIGN.md
+//! §3 substitutions).
+
+use super::Dataset;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"ASGD";
+const VERSION: u32 = 1;
+
+pub fn write<P: AsRef<Path>>(ds: &Dataset, path: P) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(File::create(&path).context("creating dataset file")?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(ds.n as u64).to_le_bytes())?;
+    w.write_all(&(ds.dim as u64).to_le_bytes())?;
+    let mut flags = 0u32;
+    if ds.labels.is_some() {
+        flags |= 1;
+    }
+    if ds.truth.is_some() {
+        flags |= 2;
+    }
+    w.write_all(&flags.to_le_bytes())?;
+    w.write_all(&(ds.truth_k as u64).to_le_bytes())?;
+    write_f32s(&mut w, &ds.x)?;
+    if let Some(labels) = &ds.labels {
+        write_f32s(&mut w, labels)?;
+    }
+    if let Some(truth) = &ds.truth {
+        write_f32s(&mut w, truth)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn read<P: AsRef<Path>>(path: P) -> Result<Dataset> {
+    let mut r = BufReader::new(File::open(&path).context("opening dataset file")?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an ASGD dataset file (bad magic)");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported dataset version {version}");
+    }
+    let n = read_u64(&mut r)? as usize;
+    let dim = read_u64(&mut r)? as usize;
+    let flags = read_u32(&mut r)?;
+    let truth_k = read_u64(&mut r)? as usize;
+    // sanity cap: refuse absurd headers instead of OOMing
+    if n.checked_mul(dim).is_none() || n * dim > (1usize << 34) {
+        bail!("dataset header too large: n={n} dim={dim}");
+    }
+    let x = read_f32s(&mut r, n * dim)?;
+    let labels = if flags & 1 != 0 {
+        Some(read_f32s(&mut r, n)?)
+    } else {
+        None
+    };
+    let truth = if flags & 2 != 0 {
+        Some(read_f32s(&mut r, truth_k * dim)?)
+    } else {
+        None
+    };
+    let mut ds = Dataset::new(n, dim, x);
+    ds.labels = labels;
+    ds.truth = truth;
+    ds.truth_k = truth_k;
+    Ok(ds)
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    // bulk little-endian write; f32::to_le_bytes per element would be slow
+    // for ~GB files, so chunk through a byte buffer.
+    let mut buf = Vec::with_capacity(64 * 1024);
+    for chunk in xs.chunks(16 * 1024) {
+        buf.clear();
+        for v in chunk {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, count: usize) -> Result<Vec<f32>> {
+    let mut out = vec![0.0f32; count];
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut filled = 0usize;
+    while filled < count {
+        let want = ((count - filled) * 4).min(buf.len());
+        r.read_exact(&mut buf[..want])?;
+        for (i, b) in buf[..want].chunks_exact(4).enumerate() {
+            out[filled + i] = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        }
+        filled += want / 4;
+    }
+    Ok(out)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("asgd_io_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_full() {
+        let ds = synthetic::generate(500, 6, 4, 1.0, 5.0, 2);
+        let path = tmp("full");
+        write(&ds, &path).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(back.n, ds.n);
+        assert_eq!(back.dim, ds.dim);
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.truth, ds.truth);
+        assert_eq!(back.truth_k, 4);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_with_labels() {
+        let ds = synthetic::generate_linear(200, 5, 0.1, 3);
+        let path = tmp("labels");
+        write(&ds, &path).unwrap();
+        let back = read(&path).unwrap();
+        assert_eq!(back.labels, ds.labels);
+        assert_eq!(back.truth, ds.truth);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("bad");
+        std::fs::write(&path, b"NOPE____________________").unwrap();
+        assert!(read(&path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -1,0 +1,104 @@
+//! Datasets: generation (§5.3), on-disk format, sharding and partitioning.
+
+pub mod hog;
+pub mod io;
+pub mod partition;
+pub mod synthetic;
+
+use crate::config::{DataConfig, DataKind};
+
+/// An in-memory, row-major dataset of `n` samples in `dim` dimensions.
+///
+/// `truth` carries the generator's ground-truth cluster centers (for the
+/// §5.4 error metric) or the true weight vector for linear data; `labels`
+/// carries regression targets / class labels when the model needs them.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub n: usize,
+    pub dim: usize,
+    pub x: Vec<f32>,
+    pub labels: Option<Vec<f32>>,
+    /// Ground-truth centers, row-major `[k_true, dim]` (or `[1, dim]` for
+    /// linear data: the true weight vector).
+    pub truth: Option<Vec<f32>>,
+    pub truth_k: usize,
+}
+
+impl Dataset {
+    pub fn new(n: usize, dim: usize, x: Vec<f32>) -> Self {
+        assert_eq!(x.len(), n * dim, "x length != n*dim");
+        Self {
+            n,
+            dim,
+            x,
+            labels: None,
+            truth: None,
+            truth_k: 0,
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// A contiguous block of rows `[start, start+count)` as a flat slice.
+    #[inline]
+    pub fn rows(&self, start: usize, count: usize) -> &[f32] {
+        &self.x[start * self.dim..(start + count) * self.dim]
+    }
+
+    /// Memory footprint of the sample matrix in bytes.
+    pub fn bytes(&self) -> usize {
+        self.x.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Generate a dataset from a [`DataConfig`] (dispatches on kind).
+pub fn generate(cfg: &DataConfig) -> Dataset {
+    match &cfg.kind {
+        DataKind::Synthetic {
+            k_true,
+            cluster_std,
+            min_dist,
+        } => synthetic::generate(
+            cfg.n_samples,
+            cfg.dim,
+            *k_true,
+            *cluster_std,
+            *min_dist,
+            cfg.seed,
+        ),
+        DataKind::Hog { k_true } => hog::generate(cfg.n_samples, *k_true, cfg.seed),
+        DataKind::Linear { noise } => synthetic::generate_linear(cfg.n_samples, cfg.dim, *noise, cfg.seed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_accessors() {
+        let d = Dataset::new(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(d.row(1), &[3., 4.]);
+        assert_eq!(d.rows(1, 2), &[3., 4., 5., 6.]);
+        assert_eq!(d.bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "x length != n*dim")]
+    fn bad_len_panics() {
+        Dataset::new(2, 2, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn generate_dispatches() {
+        let d = generate(&DataConfig::synthetic(1000, 8, 5));
+        assert_eq!(d.n, 1000);
+        assert_eq!(d.dim, 8);
+        assert_eq!(d.truth_k, 5);
+        let h = generate(&DataConfig::hog(500, 20));
+        assert_eq!(h.dim, 128);
+    }
+}

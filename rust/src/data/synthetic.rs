@@ -1,0 +1,158 @@
+//! Synthetic Gaussian-mixture generator following the paper's heuristic
+//! (§5.3): "given n, m and k we randomly sample k cluster centers and then
+//! randomly draw m samples.  Each sample is randomly drawn from a
+//! distribution which is uniquely generated for the individual centers.
+//! Possible cluster overlaps are controlled by additional minimum cluster
+//! distance and cluster variance parameters."
+
+use super::Dataset;
+use crate::util::rng::Xoshiro256pp;
+
+/// Sample `k_true` centers, each at least `min_dist` apart (rejection with
+/// progressive relaxation so pathological parameter choices still finish),
+/// then draw `n` samples from per-center anisotropic Gaussians whose
+/// per-dimension std is `cluster_std * U(0.5, 1.5)` (the "uniquely
+/// generated" per-center distribution).
+pub fn generate(
+    n: usize,
+    dim: usize,
+    k_true: usize,
+    cluster_std: f32,
+    min_dist: f32,
+    seed: u64,
+) -> Dataset {
+    assert!(k_true >= 1 && dim >= 1);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+
+    // --- centers with minimum separation -------------------------------
+    let box_half = (min_dist * (k_true as f32).powf(1.0 / dim.min(8) as f32)).max(10.0);
+    let mut centers = Vec::with_capacity(k_true * dim);
+    let mut relax = 1.0f32;
+    let mut attempts = 0usize;
+    while centers.len() < k_true * dim {
+        let cand: Vec<f32> = (0..dim)
+            .map(|_| (rng.next_f32() * 2.0 - 1.0) * box_half)
+            .collect();
+        let ok = centers
+            .chunks(dim)
+            .all(|c| crate::util::sq_dist(c, &cand) >= (min_dist * relax) as f64 * (min_dist * relax) as f64);
+        if ok {
+            centers.extend_from_slice(&cand);
+        }
+        attempts += 1;
+        if attempts % 1000 == 0 {
+            relax *= 0.8; // progressively relax the separation constraint
+        }
+    }
+
+    // --- per-center distributions --------------------------------------
+    // Per-center, per-dimension stds; mass is uniform across clusters
+    // (the paper's synthetic sets are balanced).
+    let stds: Vec<f32> = (0..k_true * dim)
+        .map(|_| cluster_std * (0.5 + rng.next_f32()))
+        .collect();
+
+    let mut x = vec![0.0f32; n * dim];
+    for i in 0..n {
+        let c = rng.index(k_true);
+        let center = &centers[c * dim..(c + 1) * dim];
+        let std = &stds[c * dim..(c + 1) * dim];
+        let row = &mut x[i * dim..(i + 1) * dim];
+        for j in 0..dim {
+            row[j] = center[j] + std[j] * rng.next_normal() as f32;
+        }
+    }
+
+    let mut ds = Dataset::new(n, dim, x);
+    ds.truth = Some(centers);
+    ds.truth_k = k_true;
+    ds
+}
+
+/// Linear-model data: `y = x . w* + noise` with `x ~ N(0, 1)`; `truth`
+/// holds `w*`.  Used by the linreg/logreg generality examples.
+pub fn generate_linear(n: usize, dim: usize, noise: f32, seed: u64) -> Dataset {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let w_star: Vec<f32> = (0..dim).map(|_| rng.next_normal() as f32).collect();
+    let mut x = vec![0.0f32; n * dim];
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &mut x[i * dim..(i + 1) * dim];
+        let mut dot = 0.0f32;
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = rng.next_normal() as f32;
+            dot += *v * w_star[j];
+        }
+        y[i] = dot + noise * rng.next_normal() as f32;
+    }
+    let mut ds = Dataset::new(n, dim, x);
+    ds.labels = Some(y);
+    ds.truth = Some(w_star);
+    ds.truth_k = 1;
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = generate(2000, 10, 10, 1.0, 8.0, 7);
+        let b = generate(2000, 10, 10, 1.0, 8.0, 7);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.n, 2000);
+        assert_eq!(a.truth.as_ref().unwrap().len(), 100);
+        let c = generate(2000, 10, 10, 1.0, 8.0, 8);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn centers_respect_min_dist() {
+        let d = generate(100, 6, 8, 0.5, 10.0, 3);
+        let centers = d.truth.as_ref().unwrap();
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                let di = crate::util::sq_dist(&centers[i * 6..(i + 1) * 6], &centers[j * 6..(j + 1) * 6]);
+                // generator may relax, but for these params it should hold
+                assert!(di.sqrt() >= 7.9, "centers {i},{j} too close: {}", di.sqrt());
+            }
+        }
+    }
+
+    #[test]
+    fn samples_cluster_around_centers() {
+        let d = generate(5000, 4, 3, 0.5, 20.0, 11);
+        let centers = d.truth.as_ref().unwrap();
+        // every sample should be within a few stds of *some* center
+        let mut far = 0;
+        for i in 0..d.n {
+            let row = d.row(i);
+            let min_d = (0..3)
+                .map(|c| crate::util::sq_dist(row, &centers[c * 4..(c + 1) * 4]).sqrt())
+                .fold(f64::INFINITY, f64::min);
+            if min_d > 6.0 * 0.5 * 1.5 {
+                far += 1;
+            }
+        }
+        assert!(far < d.n / 100, "{far} samples far from all centers");
+    }
+
+    #[test]
+    fn linear_data_is_consistent() {
+        let d = generate_linear(1000, 8, 0.0, 5);
+        let w = d.truth.as_ref().unwrap();
+        let y = d.labels.as_ref().unwrap();
+        for i in 0..20 {
+            let pred: f32 = d.row(i).iter().zip(w).map(|(a, b)| a * b).sum();
+            assert!((pred - y[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn pathological_min_dist_still_terminates() {
+        // min_dist way too large for the box: relaxation must kick in.
+        let d = generate(100, 2, 20, 1.0, 1000.0, 1);
+        assert_eq!(d.truth_k, 20);
+    }
+}

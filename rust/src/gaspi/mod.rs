@@ -1,0 +1,94 @@
+//! GASPI-style single-sided communication substrate (§3/§3.1).
+//!
+//! The paper builds on GPI-2's one-sided RDMA writes with remote
+//! completion: a sender deposits its state directly into a remote rank's
+//! pre-registered segment, *without any participation of the receiver* —
+//! no handshake, no acknowledgement, no lock.  The receiver discovers new
+//! data whenever it chooses to look.
+//!
+//! This module reproduces those semantics in-process (the repro
+//! substitution of DESIGN.md §3): every rank owns a [`segment::Segment`]
+//! of N versioned slots; [`segment::Segment::write_remote`] is a
+//! wait-free deposit that behaves like an RDMA put, including the failure
+//! modes §4.4 analyses:
+//!
+//! * **lost message** — a second write lands on the same slot before the
+//!   receiver read the first; the first is silently gone;
+//! * **torn message** — the receiver snapshots while a writer is mid-put
+//!   (or two writers interleave); detected via a seqlock version word, and
+//!   either discarded or accepted per [`crate::config::RacePolicy`];
+//! * **stale state** — the payload describes a sender state from an older
+//!   iteration; the Parzen gate (eq. 4) deals with it downstream.
+//!
+//! No method in this module ever blocks or spins on another rank —
+//! communication is "free" in the paper's sense; the price is exactly the
+//! uncertainty catalogued above.
+
+pub mod segment;
+pub mod stats;
+pub mod topology;
+
+pub use segment::{ReadOutcome, Segment, SlotSnapshot};
+pub use stats::{CommStats, WorldStats};
+pub use topology::Topology;
+
+use std::sync::Arc;
+
+/// The communication world: one segment per rank plus shared counters.
+pub struct World {
+    pub segments: Vec<Arc<Segment>>,
+    pub stats: Arc<WorldStats>,
+    pub topology: Topology,
+}
+
+impl World {
+    /// Build a world of `ranks` ranks, each with `n_slots` external-buffer
+    /// slots of `state_len` f32 words.
+    pub fn new(ranks: usize, n_slots: usize, state_len: usize, topology: Topology) -> Self {
+        let stats = Arc::new(WorldStats::new(ranks));
+        let segments = (0..ranks)
+            .map(|r| Arc::new(Segment::new(r, n_slots, state_len)))
+            .collect();
+        Self {
+            segments,
+            stats,
+            topology,
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// One-sided put of `payload` into a random slot of rank `to`
+    /// (fig. 2 step I: "sends the resulting state to a few random
+    /// recipients").  `slot_die` supplies the slot randomness so the
+    /// caller's RNG stays in control of determinism.
+    pub fn put_state(&self, from: usize, to: usize, iter: u64, payload: &[f32], slot: usize) {
+        debug_assert_ne!(from, to, "alg. 5 line 9: recipient != self");
+        let seg = &self.segments[to];
+        let lost = seg.write_remote(slot, from as u32, iter, payload);
+        self.stats.rank(from).sent.add(1);
+        if lost {
+            self.stats.rank(to).overwritten.add(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_builds_and_puts() {
+        let w = World::new(4, 2, 8, Topology::flat(4));
+        let payload = vec![1.0f32; 8];
+        w.put_state(0, 1, 7, &payload, 0);
+        assert_eq!(w.stats.rank(0).sent.get(), 1);
+        let snap = w.segments[1].read_slot(0, 0);
+        match snap.outcome {
+            ReadOutcome::Fresh => assert_eq!(snap.data, payload),
+            other => panic!("expected fresh read, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Per-rank communication counters (fig. 12: messages sent / received /
+//! "good", plus the race statistics of §4.4).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A relaxed atomic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Counters for one rank.
+#[derive(Default)]
+pub struct CommStats {
+    /// One-sided puts issued by this rank (one per recipient).
+    pub sent: Counter,
+    /// Complete, fresh external states consumed by this rank.
+    pub received: Counter,
+    /// Received states accepted by the Parzen window (the "good messages"
+    /// series of fig. 12).
+    pub good: Counter,
+    /// Torn snapshots observed (partially-overwritten messages, §4.4).
+    pub torn: Counter,
+    /// Messages clobbered in this rank's buffers before being read.
+    pub overwritten: Counter,
+    /// Slot polls that found nothing new.
+    pub stale_polls: Counter,
+}
+
+/// Aggregated view of one rank's counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StatsSnapshot {
+    pub sent: u64,
+    pub received: u64,
+    pub good: u64,
+    pub torn: u64,
+    pub overwritten: u64,
+    pub stale_polls: u64,
+}
+
+impl CommStats {
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            sent: self.sent.get(),
+            received: self.received.get(),
+            good: self.good.get(),
+            torn: self.torn.get(),
+            overwritten: self.overwritten.get(),
+            stale_polls: self.stale_polls.get(),
+        }
+    }
+}
+
+/// All ranks' counters.
+pub struct WorldStats {
+    ranks: Vec<CommStats>,
+}
+
+impl WorldStats {
+    pub fn new(ranks: usize) -> Self {
+        Self {
+            ranks: (0..ranks).map(|_| CommStats::default()).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn rank(&self, r: usize) -> &CommStats {
+        &self.ranks[r]
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Sum across ranks.
+    pub fn total(&self) -> StatsSnapshot {
+        let mut t = StatsSnapshot::default();
+        for r in &self.ranks {
+            let s = r.snapshot();
+            t.sent += s.sent;
+            t.received += s.received;
+            t.good += s.good;
+            t.torn += s.torn;
+            t.overwritten += s.overwritten;
+            t.stale_polls += s.stale_polls;
+        }
+        t
+    }
+
+    /// Per-CPU averages (the y-axis of fig. 12).
+    pub fn per_rank_avg(&self) -> (f64, f64, f64) {
+        let t = self.total();
+        let n = self.ranks.len().max(1) as f64;
+        (t.sent as f64 / n, t.received as f64 / n, t.good as f64 / n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let ws = WorldStats::new(3);
+        ws.rank(0).sent.add(5);
+        ws.rank(1).sent.add(7);
+        ws.rank(2).good.add(2);
+        let t = ws.total();
+        assert_eq!(t.sent, 12);
+        assert_eq!(t.good, 2);
+        let (sent_avg, _, good_avg) = ws.per_rank_avg();
+        assert!((sent_avg - 4.0).abs() < 1e-12);
+        assert!((good_avg - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_is_consistent_view() {
+        let s = CommStats::default();
+        s.received.add(3);
+        s.torn.add(1);
+        let snap = s.snapshot();
+        assert_eq!(snap.received, 3);
+        assert_eq!(snap.torn, 1);
+        assert_eq!(snap.sent, 0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Rank topology: the paper's cluster is R nodes x H threads (fig. 2);
+//! ranks are global thread ids.  The topology distinguishes intra-node
+//! (shared-memory) from inter-node (network) pairs so the network cost
+//! model and the simulator can charge them differently.
+
+/// R nodes x H threads-per-node rank layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub threads_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(nodes: usize, threads_per_node: usize) -> Self {
+        assert!(nodes >= 1 && threads_per_node >= 1);
+        Self {
+            nodes,
+            threads_per_node,
+        }
+    }
+
+    /// All ranks on a single node (pure shared-memory run).
+    pub fn flat(threads: usize) -> Self {
+        Self::new(1, threads)
+    }
+
+    /// The paper's standard testbed: 64 nodes x 16 CPUs (§5.2).
+    pub fn paper_cluster() -> Self {
+        Self::new(64, 16)
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.nodes * self.threads_per_node
+    }
+
+    #[inline]
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.threads_per_node
+    }
+
+    #[inline]
+    pub fn thread_of(&self, rank: usize) -> usize {
+        rank % self.threads_per_node
+    }
+
+    #[inline]
+    pub fn rank_of(&self, node: usize, thread: usize) -> usize {
+        node * self.threads_per_node + thread
+    }
+
+    /// Does communication between these ranks cross the interconnect?
+    #[inline]
+    pub fn crosses_network(&self, a: usize, b: usize) -> bool {
+        self.node_of(a) != self.node_of(b)
+    }
+
+    /// Expected fraction of uniform-random messages that cross the
+    /// network: (R-1)·H / (R·H - 1) for a sender excluding itself.
+    pub fn network_fraction(&self) -> f64 {
+        let total = self.ranks() as f64;
+        if total <= 1.0 {
+            return 0.0;
+        }
+        ((self.nodes - 1) * self.threads_per_node) as f64 / (total - 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_math() {
+        let t = Topology::new(4, 16);
+        assert_eq!(t.ranks(), 64);
+        assert_eq!(t.node_of(17), 1);
+        assert_eq!(t.thread_of(17), 1);
+        assert_eq!(t.rank_of(1, 1), 17);
+        assert!(t.crosses_network(0, 16));
+        assert!(!t.crosses_network(0, 15));
+    }
+
+    #[test]
+    fn paper_cluster_is_1024_cpus() {
+        assert_eq!(Topology::paper_cluster().ranks(), 1024);
+    }
+
+    #[test]
+    fn network_fraction_bounds() {
+        assert_eq!(Topology::flat(8).network_fraction(), 0.0);
+        let f = Topology::new(64, 16).network_fraction();
+        assert!(f > 0.98 && f < 1.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! The paper-figure harness: `asgd fig --id N` regenerates every figure
+//! of the evaluation section (the paper has no tables).
+//!
+//! Figure index (see DESIGN.md §5 for the full mapping):
+//!
+//! | id | figure | source |
+//! |----|--------|--------|
+//! | 1  | headline strong scaling (~1 TB, k=10, d=10) | simulator |
+//! | 5  | strong scaling at I = 1e9/1e10/1e11 | simulator |
+//! | 6  | strong scaling, HOG d=128 | simulator |
+//! | 7  | runtime vs k (log projection) | simulator |
+//! | 8  | convergence: error vs iterations | real runs |
+//! | 9  | final error vs CPUs | real runs (folds) |
+//! | 10 | error variance vs CPUs | real runs (folds) |
+//! | 11 | comm overhead vs 1/b | simulator |
+//! | 12 | msgs sent/received/good per CPU | real runs |
+//! | 13 | convergence at 1/500 vs 1/100000 | real runs |
+//! | 14 | ASGD vs silent (iterations) | real runs |
+//! | 15 | ASGD vs silent (time-to-error) | real runs |
+//! | 16 | final-aggregation runtime | simulator + real |
+//! | 17 | final-aggregation error | real runs |
+//!
+//! Simulator-backed figures reproduce the paper's *cluster-scale* shapes
+//! (1024 CPUs, 1 TB); real-run figures execute the actual coordinator at
+//! workstation scale (the iteration/error semantics are scale-free).
+
+pub mod convergence;
+pub mod report;
+pub mod scaling;
+pub mod statsfigs;
+
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+/// Output of one figure runner.
+pub struct FigureResult {
+    pub id: String,
+    pub title: String,
+    pub csv_paths: Vec<PathBuf>,
+    /// Console-ready summary lines (the "same rows/series the paper
+    /// reports").
+    pub summary: Vec<String>,
+    /// Shape checks: (claim, holds).
+    pub checks: Vec<(String, bool)>,
+}
+
+impl FigureResult {
+    pub fn print(&self) {
+        println!("=== Figure {} — {} ===", self.id, self.title);
+        for line in &self.summary {
+            println!("{line}");
+        }
+        for (claim, ok) in &self.checks {
+            println!("  [{}] {claim}", if *ok { "OK " } else { "FAIL" });
+        }
+        for p in &self.csv_paths {
+            println!("  -> {}", p.display());
+        }
+    }
+
+    pub fn all_checks_pass(&self) -> bool {
+        self.checks.iter().all(|(_, ok)| *ok)
+    }
+}
+
+/// All figure ids, in paper order.
+pub const FIGURES: &[&str] = &[
+    "1", "5", "6", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16", "17",
+];
+
+/// Run one figure.  `quick` shrinks real-run figures for CI.
+pub fn run_figure(id: &str, outdir: &Path, quick: bool) -> Result<FigureResult> {
+    match id {
+        "1" => scaling::fig1(outdir),
+        "5" => scaling::fig5(outdir),
+        "6" => scaling::fig6(outdir),
+        "7" => scaling::fig7(outdir),
+        "8" => convergence::fig8(outdir, quick),
+        "9" => statsfigs::fig9_10(outdir, quick, false),
+        "10" => statsfigs::fig9_10(outdir, quick, true),
+        "11" => scaling::fig11(outdir),
+        "12" => statsfigs::fig12(outdir, quick),
+        "13" => convergence::fig13(outdir, quick),
+        "14" => convergence::fig14_15(outdir, quick, false),
+        "15" => convergence::fig14_15(outdir, quick, true),
+        "16" => statsfigs::fig16_17(outdir, quick, false),
+        "17" => statsfigs::fig16_17(outdir, quick, true),
+        other => bail!("unknown figure id {other:?} (valid: {FIGURES:?})"),
+    }
+}
+
+/// Run every figure; returns (id, passed-all-shape-checks).
+pub fn run_all(outdir: &Path, quick: bool) -> Result<Vec<(String, bool)>> {
+    let mut status = Vec::new();
+    for id in FIGURES {
+        let r = run_figure(id, outdir, quick)?;
+        r.print();
+        status.push((r.id.clone(), r.all_checks_pass()));
+    }
+    Ok(status)
+}

@@ -1,0 +1,286 @@
+//! Simulator-backed figures: 1, 5, 6, 7 (runtime scaling) and 11
+//! (communication overhead).
+
+use super::FigureResult;
+use crate::gaspi::Topology;
+use crate::sim::{ClusterSim, SimWorkload};
+use crate::util::csv::CsvTable;
+use anyhow::Result;
+use std::path::Path;
+
+/// ~1 TB of d-dim f32 samples.
+fn terabyte_samples(d: usize) -> f64 {
+    1e12 / (d as f64 * 4.0)
+}
+
+fn synthetic_workload(k: usize, d: usize, global_iters: f64) -> SimWorkload {
+    SimWorkload {
+        global_iters,
+        minibatch: 500,
+        k,
+        d,
+        n_buffers: 4,
+        fanout: 2,
+        n_samples: terabyte_samples(d),
+    }
+}
+
+const CPU_GRID: &[usize] = &[128, 256, 384, 512, 640, 768, 896, 1024];
+
+fn topo_for(cpus: usize) -> Topology {
+    Topology::new(cpus / 16, 16)
+}
+
+/// Shared engine for figs 1/5/6: strong-scaling runtime series.
+fn scaling_series(
+    sim: &ClusterSim,
+    w: &SimWorkload,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut asgd = Vec::new();
+    let mut sgd = Vec::new();
+    let mut batch = Vec::new();
+    let mut linear = Vec::new();
+    let base = sim.runtime_asgd(w, topo_for(CPU_GRID[0]));
+    for &cpus in CPU_GRID {
+        let topo = topo_for(cpus);
+        asgd.push(sim.runtime_asgd(w, topo));
+        sgd.push(sim.runtime_sgd(w, topo));
+        batch.push(sim.runtime_batch(w, topo));
+        linear.push(base * CPU_GRID[0] as f64 / cpus as f64);
+    }
+    (asgd, sgd, batch, linear)
+}
+
+fn shape_checks(
+    asgd: &[f64],
+    sgd: &[f64],
+    batch: &[f64],
+    linear: &[f64],
+    expect_sgd_departure: bool,
+) -> Vec<(String, bool)> {
+    let n = asgd.len();
+    let mut checks = vec![
+        (
+            "ASGD is the fastest method at every CPU count".into(),
+            (0..n).all(|i| asgd[i] <= sgd[i] && asgd[i] <= batch[i]),
+        ),
+        (
+            "ASGD scales linearly or better (<= linear projection at max CPUs)".into(),
+            asgd[n - 1] <= linear[n - 1] * 1.05,
+        ),
+        (
+            "BATCH is the slowest method".into(),
+            (0..n).all(|i| batch[i] >= sgd[i]),
+        ),
+    ];
+    if expect_sgd_departure {
+        // the paper notes this effect "is dominant for smaller numbers of
+        // iterations and softens proportionally with increasing I" — only
+        // asserted where the collective cost is not amortized away.
+        checks.push((
+            "SGD departs from linear scaling (communication overhead)".into(),
+            sgd[n - 1] > linear[n - 1] * (sgd[0] / linear[0]) * 1.2,
+        ));
+    }
+    checks
+}
+
+pub fn fig1(outdir: &Path) -> Result<FigureResult> {
+    let sim = ClusterSim::calibrated();
+    let w = synthetic_workload(10, 10, 1e10);
+    let (asgd, sgd, batch, linear) = scaling_series(&sim, &w);
+    let mut csv = CsvTable::new(&["cpus", "asgd_s", "sgd_s", "batch_s", "linear_s"]);
+    let mut summary = vec![format!(
+        "{:>6} {:>12} {:>12} {:>12} {:>12}",
+        "CPUs", "ASGD(s)", "SGD(s)", "BATCH(s)", "linear(s)"
+    )];
+    for (i, &cpus) in CPU_GRID.iter().enumerate() {
+        csv.row_f64(&[cpus as f64, asgd[i], sgd[i], batch[i], linear[i]]);
+        summary.push(format!(
+            "{cpus:>6} {:>12.2} {:>12.2} {:>12.2} {:>12.2}",
+            asgd[i], sgd[i], batch[i], linear[i]
+        ));
+    }
+    let path = outdir.join("fig1_scaling.csv");
+    csv.write_file(&path)?;
+    Ok(FigureResult {
+        id: "1".into(),
+        title: "strong scaling, K-Means k=10 d=10, ~1 TB (simulated cluster)".into(),
+        csv_paths: vec![path],
+        summary,
+        checks: shape_checks(&asgd, &sgd, &batch, &linear, true),
+    })
+}
+
+pub fn fig5(outdir: &Path) -> Result<FigureResult> {
+    let sim = ClusterSim::calibrated();
+    let mut csv = CsvTable::new(&["iters", "cpus", "asgd_s", "sgd_s", "batch_s", "linear_s"]);
+    let mut summary = Vec::new();
+    let mut checks = Vec::new();
+    for &iters in &[1e9, 1e10, 1e11] {
+        let w = synthetic_workload(10, 10, iters);
+        let (asgd, sgd, batch, linear) = scaling_series(&sim, &w);
+        summary.push(format!("I = {iters:.0e}:"));
+        for (i, &cpus) in CPU_GRID.iter().enumerate() {
+            csv.row_f64(&[iters, cpus as f64, asgd[i], sgd[i], batch[i], linear[i]]);
+            if i % 3 == 0 || i == CPU_GRID.len() - 1 {
+                summary.push(format!(
+                    "  {cpus:>5} cpus: asgd {:>10.2}s  sgd {:>10.2}s  batch {:>10.2}s",
+                    asgd[i], sgd[i], batch[i]
+                ));
+            }
+        }
+        for (claim, ok) in shape_checks(&asgd, &sgd, &batch, &linear, iters <= 1e9) {
+            checks.push((format!("[I={iters:.0e}] {claim}"), ok));
+        }
+        // fig. 5 annotation: SGD's overhead softens as I grows
+        let w_small = synthetic_workload(10, 10, 1e9);
+        let w_big = synthetic_workload(10, 10, 1e11);
+        let topo = topo_for(1024);
+        let rel_small = sim.runtime_sgd(&w_small, topo) / sim.runtime_asgd(&w_small, topo);
+        let rel_big = sim.runtime_sgd(&w_big, topo) / sim.runtime_asgd(&w_big, topo);
+        if iters == 1e11 {
+            checks.push((
+                "SGD overhead (vs ASGD) shrinks with growing I".into(),
+                rel_big < rel_small,
+            ));
+        }
+    }
+    let path = outdir.join("fig5_scaling_iters.csv");
+    csv.write_file(&path)?;
+    Ok(FigureResult {
+        id: "5".into(),
+        title: "strong scaling across iteration budgets (simulated cluster)".into(),
+        csv_paths: vec![path],
+        summary,
+        checks,
+    })
+}
+
+pub fn fig6(outdir: &Path) -> Result<FigureResult> {
+    let sim = ClusterSim::calibrated();
+    // HOG codebook workload: d=128, k=100 representative, data scaled to
+    // the image corpus (~100 GB of descriptors)
+    let mut w = synthetic_workload(100, 128, 1e10);
+    w.n_samples = 1e11 / (128.0 * 4.0);
+    let (asgd, sgd, batch, linear) = scaling_series(&sim, &w);
+    let mut csv = CsvTable::new(&["cpus", "asgd_s", "sgd_s", "batch_s", "linear_s"]);
+    let mut summary = vec!["HOG image-classification workload (d=128, k=100):".into()];
+    for (i, &cpus) in CPU_GRID.iter().enumerate() {
+        csv.row_f64(&[cpus as f64, asgd[i], sgd[i], batch[i], linear[i]]);
+        summary.push(format!(
+            "{cpus:>6} cpus: asgd {:>10.2}s  sgd {:>10.2}s  batch {:>10.2}s",
+            asgd[i], sgd[i], batch[i]
+        ));
+    }
+    let path = outdir.join("fig6_scaling_hog.csv");
+    csv.write_file(&path)?;
+    Ok(FigureResult {
+        id: "6".into(),
+        title: "strong scaling on real (HOG) data (simulated cluster)".into(),
+        csv_paths: vec![path],
+        summary,
+        checks: shape_checks(&asgd, &sgd, &batch, &linear, false),
+    })
+}
+
+pub fn fig7(outdir: &Path) -> Result<FigureResult> {
+    let sim = ClusterSim::calibrated();
+    let topo = topo_for(1024);
+    let ks = [10usize, 50, 100, 250, 500, 1000];
+    let mut csv = CsvTable::new(&["k", "asgd_s", "sgd_s", "batch_s", "log_proj_s"]);
+    let mut summary = vec![format!(
+        "{:>6} {:>12} {:>12} {:>12} {:>14}",
+        "k", "ASGD(s)", "SGD(s)", "BATCH(s)", "log-projection"
+    )];
+    let mut asgd = Vec::new();
+    let mut sgd = Vec::new();
+    let mut batch = Vec::new();
+    for &k in &ks {
+        let mut w = synthetic_workload(k, 128, 1e10);
+        w.n_samples = 1e11 / (128.0 * 4.0);
+        asgd.push(sim.runtime_asgd(&w, topo));
+        sgd.push(sim.runtime_sgd(&w, topo));
+        batch.push(sim.runtime_batch(&w, topo));
+    }
+    // paper: "all methods scale better than O(log k)" — projection from
+    // the first point: t(k) = t(k0) * log(k)/log(k0)... the dotted lines
+    // in fig. 7 project logarithmic growth; methods staying *below* a
+    // fitted log curve through the last point is the claim we check.
+    let log_proj: Vec<f64> = ks
+        .iter()
+        .map(|&k| asgd[0] * ((k as f64).ln() / (ks[0] as f64).ln()).max(1.0))
+        .collect();
+    for (i, &k) in ks.iter().enumerate() {
+        csv.row_f64(&[k as f64, asgd[i], sgd[i], batch[i], log_proj[i]]);
+        summary.push(format!(
+            "{k:>6} {:>12.2} {:>12.2} {:>12.2} {:>14.2}",
+            asgd[i], sgd[i], batch[i], log_proj[i]
+        ));
+    }
+    // runtime grows with k but sublinearly in k (compute is linear in k;
+    // the check targets the *relative ordering* + ASGD staying fastest)
+    let checks = vec![
+        (
+            "ASGD fastest at every k".into(),
+            (0..ks.len()).all(|i| asgd[i] <= sgd[i] && asgd[i] <= batch[i]),
+        ),
+        (
+            "runtime increases with k".into(),
+            asgd.windows(2).all(|w2| w2[1] >= w2[0]),
+        ),
+        (
+            "ASGD k-scaling slightly worse than SGD's (sparsity cost, §5.5)".into(),
+            asgd[ks.len() - 1] / asgd[0] >= sgd[ks.len() - 1] / sgd[0] * 0.99,
+        ),
+    ];
+    let path = outdir.join("fig7_scaling_k.csv");
+    csv.write_file(&path)?;
+    Ok(FigureResult {
+        id: "7".into(),
+        title: "runtime scaling in the number of clusters k (simulated)".into(),
+        csv_paths: vec![path],
+        summary,
+        checks,
+    })
+}
+
+pub fn fig11(outdir: &Path) -> Result<FigureResult> {
+    let sim = ClusterSim::calibrated();
+    let topo = topo_for(1024);
+    let bs = [50usize, 100, 200, 500, 1000, 2000, 10_000, 100_000];
+    let mut csv = CsvTable::new(&["b", "freq", "overhead_pct"]);
+    let mut summary = vec![format!("{:>8} {:>12} {:>12}", "b", "freq 1/b", "overhead %")];
+    let mut overheads = Vec::new();
+    for &b in &bs {
+        let mut w = synthetic_workload(100, 10, 1e10);
+        w.minibatch = b;
+        let ov = (sim.asgd_overhead(&w, topo) - 1.0) * 100.0;
+        overheads.push(ov);
+        csv.row_f64(&[b as f64, 1.0 / b as f64, ov]);
+        summary.push(format!("{b:>8} {:>12.2e} {:>11.1}%", 1.0 / b as f64, ov));
+    }
+    let checks = vec![
+        (
+            "overhead marginal at the paper's b=500 operating point".into(),
+            overheads[bs.iter().position(|&b| b == 500).unwrap()] < 5.0,
+        ),
+        (
+            "overhead exceeds 30% once the bandwidth is saturated (small b)".into(),
+            overheads[0] > 30.0,
+        ),
+        (
+            "overhead is monotone decreasing in b".into(),
+            overheads.windows(2).all(|w2| w2[1] <= w2[0] + 1e-9),
+        ),
+    ];
+    let path = outdir.join("fig11_comm_cost.csv");
+    csv.write_file(&path)?;
+    Ok(FigureResult {
+        id: "11".into(),
+        title: "communication cost vs frequency 1/b (simulated cluster)".into(),
+        csv_paths: vec![path],
+        summary,
+        checks,
+    })
+}

@@ -1,0 +1,249 @@
+//! Native K-Means mini-batch kernels (eq. 8-10).
+//!
+//! Hot path of the `Native` backend: assignment + sufficient statistics
+//! for a mini-batch.  The inner loop is written dot-product style
+//! (`||w||^2 - 2 x.w`, matching the MXU formulation of the Pallas kernel)
+//! so the compiler can vectorize over `d`, and all buffers live in a
+//! reusable [`KmeansScratch`] to keep the training loop allocation-free.
+
+/// Mini-batch sufficient statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    /// Per-cluster sample sums, row-major `[k, d]`.
+    pub sums: Vec<f32>,
+    /// Per-cluster sample counts `[k]` (f32 to mirror the XLA artifact).
+    pub counts: Vec<f32>,
+    /// Mean of `min_k 1/2 ||x - w_k||^2` over the batch (eq. 8 / b).
+    pub loss: f64,
+}
+
+/// Reusable buffers for the stats kernel.
+#[derive(Clone, Debug, Default)]
+pub struct KmeansScratch {
+    /// `||w_k||^2` per center.
+    wn: Vec<f32>,
+    pub stats: Stats,
+}
+
+impl KmeansScratch {
+    pub fn ensure(&mut self, k: usize, d: usize) {
+        self.wn.resize(k, 0.0);
+        self.stats.sums.resize(k * d, 0.0);
+        self.stats.counts.resize(k, 0.0);
+    }
+}
+
+/// Assignment + statistics over a flat `[b, d]` mini-batch against `[k, d]`
+/// centers.  Ties break toward the lower index (matches jnp.argmin).
+pub fn kmeans_stats(x: &[f32], w: &[f32], k: usize, d: usize, scratch: &mut KmeansScratch) {
+    assert_eq!(w.len(), k * d, "w shape mismatch");
+    assert_eq!(x.len() % d, 0, "x not a multiple of d");
+    let b = x.len() / d;
+    scratch.ensure(k, d);
+    scratch.stats.sums.fill(0.0);
+    scratch.stats.counts.fill(0.0);
+    scratch.stats.loss = 0.0;
+
+    // precompute ||w_k||^2
+    for c in 0..k {
+        let row = &w[c * d..(c + 1) * d];
+        scratch.wn[c] = row.iter().map(|v| v * v).sum();
+    }
+
+    let mut loss_acc = 0.0f64;
+    for i in 0..b {
+        let xi = &x[i * d..(i + 1) * d];
+        // argmin_k ||w_k||^2 - 2 x.w_k  (strict < keeps the lowest index)
+        let mut best = 0usize;
+        let mut best_score = f32::INFINITY;
+        for c in 0..k {
+            let wr = &w[c * d..(c + 1) * d];
+            let score = scratch.wn[c] - 2.0 * dot_unrolled(xi, wr);
+            if score < best_score {
+                best_score = score;
+                best = c;
+            }
+        }
+        let sums = &mut scratch.stats.sums[best * d..(best + 1) * d];
+        for j in 0..d {
+            sums[j] += xi[j];
+        }
+        scratch.stats.counts[best] += 1.0;
+        let xn: f32 = xi.iter().map(|v| v * v).sum();
+        loss_acc += 0.5 * f64::max((xn + best_score) as f64, 0.0);
+    }
+    scratch.stats.loss = loss_acc / b as f64;
+}
+
+/// One mini-batch SGD step in place: `w -= eps * (counts.*w - sums)/b`.
+/// Returns the batch loss.
+pub fn kmeans_step(
+    x: &[f32],
+    w: &mut [f32],
+    k: usize,
+    d: usize,
+    eps: f32,
+    scratch: &mut KmeansScratch,
+) -> f64 {
+    let b = (x.len() / d) as f32;
+    kmeans_stats(x, w, k, d, scratch);
+    apply_grad(w, &scratch.stats, k, d, b, eps);
+    scratch.stats.loss
+}
+
+/// Dot product with four independent accumulators (breaks the FP add
+/// dependency chain so the compiler can keep SIMD lanes busy; §Perf L3
+/// iteration 1: +2.3x on the d=128 codebook workload).
+#[inline]
+fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut tail = 0.0f32;
+    for j in chunks * 4..a.len() {
+        tail += a[j] * b[j];
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// `w -= eps * grad` with `grad = (counts.*w - sums)/b`.
+#[inline]
+pub fn apply_grad(w: &mut [f32], stats: &Stats, k: usize, d: usize, b: f32, eps: f32) {
+    for c in 0..k {
+        let count = stats.counts[c];
+        if count == 0.0 {
+            continue; // empty cluster: zero gradient row
+        }
+        let scale = eps * count / b;
+        let sums = &stats.sums[c * d..(c + 1) * d];
+        let row = &mut w[c * d..(c + 1) * d];
+        for j in 0..d {
+            // w - eps*(count*w - sum)/b  ==  w*(1 - eps*count/b) + eps*sum/b
+            row[j] = row[j] * (1.0 - scale) + eps * sums[j] / b;
+        }
+    }
+}
+
+/// Mean quantization error (eq. 8 / m) of `w` over an evaluation chunk.
+pub fn quant_error(x: &[f32], w: &[f32], k: usize, d: usize) -> f64 {
+    let mut scratch = KmeansScratch::default();
+    kmeans_stats(x, w, k, d, &mut scratch);
+    scratch.stats.loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn rand_mat(rng: &mut Xoshiro256pp, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal() as f32).collect()
+    }
+
+    /// brute-force oracle
+    fn stats_bruteforce(x: &[f32], w: &[f32], k: usize, d: usize) -> Stats {
+        let b = x.len() / d;
+        let mut s = Stats {
+            sums: vec![0.0; k * d],
+            counts: vec![0.0; k],
+            loss: 0.0,
+        };
+        for i in 0..b {
+            let xi = &x[i * d..(i + 1) * d];
+            let (mut best, mut bd) = (0usize, f64::INFINITY);
+            for c in 0..k {
+                let dist = crate::util::sq_dist(xi, &w[c * d..(c + 1) * d]);
+                if dist < bd {
+                    bd = dist;
+                    best = c;
+                }
+            }
+            for j in 0..d {
+                s.sums[best * d + j] += xi[j];
+            }
+            s.counts[best] += 1.0;
+            s.loss += 0.5 * bd;
+        }
+        s.loss /= b as f64;
+        s
+    }
+
+    #[test]
+    fn stats_matches_bruteforce() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for &(b, k, d) in &[(64, 5, 8), (100, 13, 3), (1, 1, 1), (500, 10, 10)] {
+            let x = rand_mat(&mut rng, b * d);
+            let w = rand_mat(&mut rng, k * d);
+            let mut scratch = KmeansScratch::default();
+            kmeans_stats(&x, &w, k, d, &mut scratch);
+            let oracle = stats_bruteforce(&x, &w, k, d);
+            assert_eq!(scratch.stats.counts, oracle.counts, "counts b={b} k={k} d={d}");
+            for (a, o) in scratch.stats.sums.iter().zip(&oracle.sums) {
+                assert!((a - o).abs() < 1e-3, "sums {a} vs {o}");
+            }
+            assert!(
+                (scratch.stats.loss - oracle.loss).abs() < 1e-3,
+                "loss {} vs {}",
+                scratch.stats.loss,
+                oracle.loss
+            );
+        }
+    }
+
+    #[test]
+    fn step_descends_loss_on_clustered_data() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let (k, d, n) = (4, 6, 1024);
+        // well-separated clusters
+        let centers = rand_mat(&mut rng, k * d)
+            .iter()
+            .map(|v| v * 10.0)
+            .collect::<Vec<_>>();
+        let mut x = vec![0.0f32; n * d];
+        for i in 0..n {
+            let c = rng.index(k);
+            for j in 0..d {
+                x[i * d + j] = centers[c * d + j] + rng.next_normal() as f32 * 0.3;
+            }
+        }
+        let mut w = x[..k * d].to_vec();
+        let mut scratch = KmeansScratch::default();
+        let e0 = quant_error(&x, &w, k, d);
+        for epoch in 0..20 {
+            let off = (epoch * 128) % (n - 128);
+            kmeans_step(&x[off * d..(off + 128) * d], &mut w, k, d, 0.3, &mut scratch);
+        }
+        let e1 = quant_error(&x, &w, k, d);
+        assert!(e1 < 0.5 * e0, "loss {e0} -> {e1}");
+    }
+
+    #[test]
+    fn apply_grad_skips_empty_clusters() {
+        let mut w = vec![5.0f32; 2 * 2];
+        let stats = Stats {
+            sums: vec![2.0, 2.0, 0.0, 0.0],
+            counts: vec![2.0, 0.0],
+            loss: 0.0,
+        };
+        apply_grad(&mut w, &stats, 2, 2, 2.0, 0.5);
+        // cluster 0 moved toward mean(1.0), cluster 1 untouched
+        assert!((w[0] - (5.0 * 0.5 + 0.5)).abs() < 1e-6);
+        assert_eq!(&w[2..], &[5.0, 5.0]);
+    }
+
+    #[test]
+    fn tie_breaks_low_index() {
+        let x = vec![1.0f32, 1.0];
+        let w = vec![0.0f32, 0.0, 0.0, 0.0]; // identical centers
+        let mut scratch = KmeansScratch::default();
+        kmeans_stats(&x, &w, 2, 2, &mut scratch);
+        assert_eq!(scratch.stats.counts, vec![1.0, 0.0]);
+    }
+}

@@ -1,0 +1,160 @@
+//! Native linear-model mini-batch gradients (mirrors
+//! `python/compile/kernels/linear.py` / `ref.py`).
+
+/// Least-squares gradient: `grad = x^T (x w - y)/b`, `loss = ||r||^2/(2b)`.
+/// `x` is `[b, d]` flat; writes into `grad` (len d).  Returns the loss.
+pub fn linreg_grad(x: &[f32], y: &[f32], w: &[f32], grad: &mut [f32]) -> f64 {
+    let d = w.len();
+    let b = y.len();
+    assert_eq!(x.len(), b * d);
+    assert_eq!(grad.len(), d);
+    grad.fill(0.0);
+    let mut loss = 0.0f64;
+    for i in 0..b {
+        let xi = &x[i * d..(i + 1) * d];
+        let mut r = -y[i];
+        for j in 0..d {
+            r += xi[j] * w[j];
+        }
+        for j in 0..d {
+            grad[j] += r * xi[j];
+        }
+        loss += 0.5 * (r as f64) * (r as f64);
+    }
+    let inv = 1.0 / b as f32;
+    for g in grad.iter_mut() {
+        *g *= inv;
+    }
+    loss / b as f64
+}
+
+/// Logistic-regression gradient: `grad = x^T (sigmoid(xw) - y)/b`,
+/// `loss` = mean stable BCE.  Returns the loss.
+pub fn logreg_grad(x: &[f32], y: &[f32], w: &[f32], grad: &mut [f32]) -> f64 {
+    let d = w.len();
+    let b = y.len();
+    assert_eq!(x.len(), b * d);
+    assert_eq!(grad.len(), d);
+    grad.fill(0.0);
+    let mut loss = 0.0f64;
+    for i in 0..b {
+        let xi = &x[i * d..(i + 1) * d];
+        let mut z = 0.0f32;
+        for j in 0..d {
+            z += xi[j] * w[j];
+        }
+        let p = 1.0 / (1.0 + (-z).exp());
+        let r = p - y[i];
+        for j in 0..d {
+            grad[j] += r * xi[j];
+        }
+        // max(z,0) - z*y + log1p(exp(-|z|))
+        loss += (z.max(0.0) - z * y[i] + (-z.abs()).exp().ln_1p()) as f64;
+    }
+    let inv = 1.0 / b as f32;
+    for g in grad.iter_mut() {
+        *g *= inv;
+    }
+    loss / b as f64
+}
+
+/// In-place SGD steps; return the pre-step loss.
+pub fn linreg_step(x: &[f32], y: &[f32], w: &mut [f32], eps: f32, grad: &mut [f32]) -> f64 {
+    let loss = linreg_grad(x, y, w, grad);
+    for (wi, g) in w.iter_mut().zip(grad.iter()) {
+        *wi -= eps * g;
+    }
+    loss
+}
+
+pub fn logreg_step(x: &[f32], y: &[f32], w: &mut [f32], eps: f32, grad: &mut [f32]) -> f64 {
+    let loss = logreg_grad(x, y, w, grad);
+    for (wi, g) in w.iter_mut().zip(grad.iter()) {
+        *wi -= eps * g;
+    }
+    loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    #[test]
+    fn linreg_numeric_gradient_check() {
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let (b, d) = (32, 5);
+        let x: Vec<f32> = (0..b * d).map(|_| rng.next_normal() as f32).collect();
+        let y: Vec<f32> = (0..b).map(|_| rng.next_normal() as f32).collect();
+        let w: Vec<f32> = (0..d).map(|_| rng.next_normal() as f32).collect();
+        let mut grad = vec![0.0; d];
+        linreg_grad(&x, &y, &w, &mut grad);
+        let h = 1e-3f32;
+        for j in 0..d {
+            let mut wp = w.clone();
+            wp[j] += h;
+            let mut wm = w.clone();
+            wm[j] -= h;
+            let mut tmp = vec![0.0; d];
+            let lp = linreg_grad(&x, &y, &wp, &mut tmp);
+            let lm = linreg_grad(&x, &y, &wm, &mut tmp);
+            let numeric = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (grad[j] as f64 - numeric).abs() < 1e-2,
+                "dim {j}: {} vs {numeric}",
+                grad[j]
+            );
+        }
+    }
+
+    #[test]
+    fn logreg_numeric_gradient_check() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let (b, d) = (32, 4);
+        let x: Vec<f32> = (0..b * d).map(|_| rng.next_normal() as f32).collect();
+        let y: Vec<f32> = (0..b).map(|_| (rng.next_f32() > 0.5) as u8 as f32).collect();
+        let w: Vec<f32> = (0..d).map(|_| rng.next_normal() as f32 * 0.5).collect();
+        let mut grad = vec![0.0; d];
+        logreg_grad(&x, &y, &w, &mut grad);
+        let h = 1e-3f32;
+        for j in 0..d {
+            let mut wp = w.clone();
+            wp[j] += h;
+            let mut wm = w.clone();
+            wm[j] -= h;
+            let mut tmp = vec![0.0; d];
+            let lp = logreg_grad(&x, &y, &wp, &mut tmp);
+            let lm = logreg_grad(&x, &y, &wm, &mut tmp);
+            let numeric = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (grad[j] as f64 - numeric).abs() < 1e-2,
+                "dim {j}: {} vs {numeric}",
+                grad[j]
+            );
+        }
+    }
+
+    #[test]
+    fn steps_descend() {
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let (b, d) = (256, 8);
+        let w_star: Vec<f32> = (0..d).map(|_| rng.next_normal() as f32).collect();
+        let x: Vec<f32> = (0..b * d).map(|_| rng.next_normal() as f32).collect();
+        let y: Vec<f32> = (0..b)
+            .map(|i| {
+                (0..d)
+                    .map(|j| x[i * d + j] * w_star[j])
+                    .sum::<f32>()
+            })
+            .collect();
+        let mut w = vec![0.0f32; d];
+        let mut grad = vec![0.0; d];
+        let mut last = f64::INFINITY;
+        for _ in 0..50 {
+            let loss = linreg_step(&x, &y, &mut w, 0.1, &mut grad);
+            assert!(loss <= last + 1e-9);
+            last = loss;
+        }
+        assert!(last < 0.01, "did not converge: {last}");
+    }
+}

@@ -1,0 +1,338 @@
+//! Native Parzen-window gate + asynchronous merge (eq. 2-7).
+//!
+//! Exact semantics of `python/compile/kernels/parzen.py` /
+//! `ref.asgd_merge`: gate each external buffer with eq. (4), fold the
+//! accepted ones into the N-buffer mean of eq. (3)/(6), apply the update
+//! of fig. 4 step IV.
+
+/// Outcome of a merge.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MergeOut {
+    /// Buffers accepted by the gate ("good messages", fig. 12).
+    pub n_good: usize,
+    /// Buffers that were active (lambda = 1, eq. 3).
+    pub n_active: usize,
+}
+
+/// eq. (4): accept iff the external state is strictly closer to the
+/// projected next state `w_prop = w - eps*delta` than to the current `w`,
+/// and active (non-zero, the lambda of eq. 3).
+#[inline]
+pub fn parzen_gate(w: &[f32], w_prop: &[f32], ext: &[f32]) -> bool {
+    let mut a = 0.0f64; // ||w_prop - ext||^2
+    let mut c = 0.0f64; // ||w - ext||^2
+    let mut nrm = 0.0f64; // ||ext||^2
+    for i in 0..ext.len() {
+        let e = ext[i];
+        let da = w_prop[i] - e;
+        let dc = w[i] - e;
+        a += (da * da) as f64;
+        c += (dc * dc) as f64;
+        nrm += (e * e) as f64;
+    }
+    nrm > 0.0 && a < c
+}
+
+/// Full-state N-buffer merge (eq. 6/7), in place on `w`.
+///
+/// `exts` is `n_buf` concatenated `[state_len]` buffers (zeros = empty);
+/// `delta` is the local mini-batch gradient `Delta_M`; `scratch_prop` must
+/// be `state_len` long (caller-owned to keep the hot loop allocation-free).
+pub fn asgd_merge(
+    w: &mut [f32],
+    delta: &[f32],
+    exts: &[f32],
+    eps: f32,
+    scratch_prop: &mut [f32],
+) -> MergeOut {
+    let len = w.len();
+    debug_assert_eq!(delta.len(), len);
+    debug_assert_eq!(scratch_prop.len(), len);
+    debug_assert_eq!(exts.len() % len, 0);
+    let n_buf = exts.len() / len;
+
+    // w_prop = w - eps*delta (fig. 4: the locally-projected next state)
+    for i in 0..len {
+        scratch_prop[i] = w[i] - eps * delta[i];
+    }
+
+    let mut out = MergeOut::default();
+    // accumulate the gated sum directly into a running mean numerator;
+    // reuse `scratch_prop` afterward is not possible (gate needs it), so
+    // accumulate into w at the end instead: first pass computes the sum.
+    let mut n_good = 0usize;
+    // sum of accepted buffers, accumulated in f64-free single pass below.
+    // To stay allocation-free we fold accepted buffers into the update in
+    // two passes: pass 1 counts + gates, pass 2 recomputes the sum for the
+    // accepted set.  n_buf is tiny (<= 8) so the extra pass is cheap; we
+    // record the gate bits in a small stack mask.
+    debug_assert!(n_buf <= 64, "gate mask is a u64");
+    let mut mask = 0u64;
+    for nb in 0..n_buf {
+        let ext = &exts[nb * len..(nb + 1) * len];
+        let mut active = false;
+        for &e in ext {
+            if e != 0.0 {
+                active = true;
+                break;
+            }
+        }
+        if active {
+            out.n_active += 1;
+        }
+        if active && parzen_gate(w, scratch_prop, ext) {
+            mask |= 1 << nb;
+            n_good += 1;
+        }
+    }
+    out.n_good = n_good;
+
+    // eq. (6): mean = (sum_sel + w)/(n_good + 1);
+    // w_next = w - eps*(w - mean + delta)
+    let inv = 1.0f32 / (n_good as f32 + 1.0);
+    for i in 0..len {
+        let mut sel_sum = 0.0f32;
+        let mut bits = mask;
+        while bits != 0 {
+            let nb = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            sel_sum += exts[nb * len + i];
+        }
+        let mean = (sel_sum + w[i]) * inv;
+        let delta_bar = w[i] - mean + delta[i];
+        w[i] -= eps * delta_bar;
+    }
+    out
+}
+
+/// Ungated variant (gate ablation): every *active* buffer is merged,
+/// eq. (3) without the delta(i,j) mask of eq. (6).
+pub fn asgd_merge_ungated(
+    w: &mut [f32],
+    delta: &[f32],
+    exts: &[f32],
+    eps: f32,
+    scratch_prop: &mut [f32],
+) -> MergeOut {
+    let len = w.len();
+    debug_assert_eq!(delta.len(), len);
+    debug_assert_eq!(exts.len() % len, 0);
+    let n_buf = exts.len() / len;
+    // scratch unused here but kept in the signature for symmetry
+    let _ = &scratch_prop;
+
+    let mut out = MergeOut::default();
+    debug_assert!(n_buf <= 64);
+    let mut mask = 0u64;
+    for nb in 0..n_buf {
+        let ext = &exts[nb * len..(nb + 1) * len];
+        if ext.iter().any(|&e| e != 0.0) {
+            mask |= 1 << nb;
+            out.n_active += 1;
+        }
+    }
+    out.n_good = out.n_active; // lambda only (eq. 3)
+
+    let inv = 1.0f32 / (out.n_good as f32 + 1.0);
+    for i in 0..len {
+        let mut sel_sum = 0.0f32;
+        let mut bits = mask;
+        while bits != 0 {
+            let nb = bits.trailing_zeros() as usize;
+            bits &= bits - 1;
+            sel_sum += exts[nb * len + i];
+        }
+        let mean = (sel_sum + w[i]) * inv;
+        let delta_bar = w[i] - mean + delta[i];
+        w[i] -= eps * delta_bar;
+    }
+    out
+}
+
+/// Per-center variant (§4.4): the gate is evaluated independently per
+/// cluster-center row of `[k, d]`-shaped states.  Matches
+/// `ref.asgd_merge_percenter`.
+pub fn asgd_merge_percenter(
+    w: &mut [f32],
+    delta: &[f32],
+    exts: &[f32],
+    eps: f32,
+    k: usize,
+    d: usize,
+    scratch_prop: &mut [f32],
+) -> MergeOut {
+    let len = w.len();
+    debug_assert_eq!(len, k * d);
+    debug_assert_eq!(exts.len() % len, 0);
+    let n_buf = exts.len() / len;
+
+    for i in 0..len {
+        scratch_prop[i] = w[i] - eps * delta[i];
+    }
+
+    let mut out = MergeOut::default();
+    let mut buf_contributed = vec![false; n_buf];
+
+    for c in 0..k {
+        let row = c * d..(c + 1) * d;
+        let wr = &w[row.clone()];
+        let pr = &scratch_prop[row.clone()];
+        // gate per buffer on this row
+        let mut n_sel = 0usize;
+        let mut mask = 0u64;
+        for nb in 0..n_buf {
+            let ext = &exts[nb * len + c * d..nb * len + (c + 1) * d];
+            let active = ext.iter().any(|&e| e != 0.0);
+            if active && parzen_gate(wr, pr, ext) {
+                mask |= 1 << nb;
+                n_sel += 1;
+                buf_contributed[nb] = true;
+            }
+        }
+        let inv = 1.0f32 / (n_sel as f32 + 1.0);
+        for j in 0..d {
+            let i = c * d + j;
+            let mut sel_sum = 0.0f32;
+            let mut bits = mask;
+            while bits != 0 {
+                let nb = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                sel_sum += exts[nb * len + i];
+            }
+            let mean = (sel_sum + w[i]) * inv;
+            let delta_bar = w[i] - mean + delta[i];
+            w[i] -= eps * delta_bar;
+        }
+    }
+    out.n_good = buf_contributed.iter().filter(|&&b| b).count();
+    out.n_active = (0..n_buf)
+        .filter(|nb| exts[nb * len..(nb + 1) * len].iter().any(|&e| e != 0.0))
+        .count();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn rand_vec(rng: &mut Xoshiro256pp, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal() as f32 * scale).collect()
+    }
+
+    /// oracle merge (direct transcription of eq. 6)
+    fn merge_oracle(w: &[f32], delta: &[f32], exts: &[f32], eps: f32) -> Vec<f32> {
+        let len = w.len();
+        let n_buf = exts.len() / len;
+        let w_prop: Vec<f32> = w.iter().zip(delta).map(|(a, b)| a - eps * b).collect();
+        let mut gates = vec![false; n_buf];
+        for nb in 0..n_buf {
+            let ext = &exts[nb * len..(nb + 1) * len];
+            gates[nb] = crate::util::sq_norm(ext) > 0.0
+                && crate::util::sq_dist(&w_prop, ext) < crate::util::sq_dist(w, ext);
+        }
+        let n_good = gates.iter().filter(|&&g| g).count() as f32;
+        (0..len)
+            .map(|i| {
+                let sel: f32 = (0..n_buf)
+                    .filter(|&nb| gates[nb])
+                    .map(|nb| exts[nb * len + i])
+                    .sum();
+                let mean = (sel + w[i]) / (n_good + 1.0);
+                w[i] - eps * (w[i] - mean + delta[i])
+            })
+            .collect()
+    }
+
+    #[test]
+    fn merge_matches_oracle() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for &(len, n_buf) in &[(10, 1), (100, 4), (64, 8), (3, 2)] {
+            let w0 = rand_vec(&mut rng, len, 1.0);
+            let delta = rand_vec(&mut rng, len, 0.1);
+            let exts = rand_vec(&mut rng, len * n_buf, 1.0);
+            let expected = merge_oracle(&w0, &delta, &exts, 0.05);
+            let mut w = w0.clone();
+            let mut scratch = vec![0.0; len];
+            asgd_merge(&mut w, &delta, &exts, 0.05, &mut scratch);
+            for (a, e) in w.iter().zip(&expected) {
+                assert!((a - e).abs() < 1e-5, "{a} vs {e} (len={len} n={n_buf})");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_buffers_reduce_to_plain_step() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let w0 = rand_vec(&mut rng, 20, 1.0);
+        let delta = rand_vec(&mut rng, 20, 0.1);
+        let exts = vec![0.0f32; 20 * 4];
+        let mut w = w0.clone();
+        let mut scratch = vec![0.0; 20];
+        let out = asgd_merge(&mut w, &delta, &exts, 0.1, &mut scratch);
+        assert_eq!(out.n_good, 0);
+        assert_eq!(out.n_active, 0);
+        for i in 0..20 {
+            assert!((w[i] - (w0[i] - 0.1 * delta[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gate_accepts_projection_and_rejects_behind() {
+        let w = vec![1.0f32; 8];
+        let delta = vec![0.5f32; 8];
+        let eps = 0.2f32;
+        let w_prop: Vec<f32> = w.iter().map(|v| v - eps * 0.5).collect();
+        assert!(parzen_gate(&w, &w_prop, &w_prop));
+        let behind: Vec<f32> = w.iter().map(|v| v + 1.0).collect();
+        assert!(!parzen_gate(&w, &w_prop, &behind));
+        // all-zero buffer must be rejected via lambda even though it may
+        // be geometrically "closer"
+        let zeros = vec![0.0f32; 8];
+        let far_prop: Vec<f32> = w.iter().map(|v| v - 0.9).collect(); // prop near 0
+        assert!(!parzen_gate(&w, &far_prop, &zeros));
+    }
+
+    #[test]
+    fn percenter_equals_full_when_all_rows_agree() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let (k, d) = (6, 4);
+        let w0 = rand_vec(&mut rng, k * d, 1.0);
+        let delta = rand_vec(&mut rng, k * d, 0.1);
+        let eps = 0.1;
+        let w_prop: Vec<f32> = w0.iter().zip(&delta).map(|(a, b)| a - eps * b).collect();
+        let exts: Vec<f32> = w_prop.repeat(3);
+        let mut w_full = w0.clone();
+        let mut w_pc = w0.clone();
+        let mut scratch = vec![0.0; k * d];
+        asgd_merge(&mut w_full, &delta, &exts, eps, &mut scratch);
+        asgd_merge_percenter(&mut w_pc, &delta, &exts, eps, k, d, &mut scratch);
+        for (a, b) in w_full.iter().zip(&w_pc) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn percenter_gates_rows_independently() {
+        let (k, d) = (2, 3);
+        let w0 = vec![0.0f32; k * d];
+        let delta = vec![0.1f32; k * d];
+        let eps = 0.5f32;
+        let w_prop: Vec<f32> = w0.iter().zip(&delta).map(|(a, b)| a - eps * b).collect();
+        let mut ext = vec![0.0f32; k * d];
+        ext[..d].copy_from_slice(&w_prop[..d]); // row 0 perfect
+        for v in &mut ext[d..] {
+            *v = 100.0; // row 1 far off
+        }
+        let mut w = w0.clone();
+        let mut scratch = vec![0.0; k * d];
+        let out = asgd_merge_percenter(&mut w, &delta, &ext, eps, k, d, &mut scratch);
+        assert_eq!(out.n_good, 1);
+        // row 1 must be the plain step
+        for j in 0..d {
+            assert!((w[d + j] - w_prop[d + j]).abs() < 1e-6);
+        }
+        // row 0 must differ (merged)
+        assert!((w[0] - w_prop[0]).abs() > 1e-6);
+    }
+}

@@ -1,0 +1,24 @@
+//! Native (pure-rust) mirrors of the L1 numeric kernels.
+//!
+//! These serve three roles: (1) the arbitrary-shape fallback when no AOT
+//! artifact matches, (2) the perf baseline the XLA path is compared
+//! against, and (3) the reference implementation for the rust-side
+//! property tests.  Semantics match `python/compile/kernels/ref.py`
+//! exactly (same gradient sign convention, same tie-breaking).
+
+pub mod kmeans;
+pub mod linear;
+pub mod merge;
+
+pub use kmeans::{kmeans_stats, kmeans_step, quant_error, KmeansScratch, Stats};
+pub use merge::{asgd_merge, asgd_merge_percenter, parzen_gate, MergeOut};
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn reexports_exist() {
+        // compile-time smoke: the public surface is wired
+        let _ = super::kmeans_stats;
+        let _ = super::asgd_merge;
+    }
+}

@@ -1,0 +1,54 @@
+//! # ASGD — Asynchronous Parallel Stochastic Gradient Descent
+//!
+//! A production-grade reproduction of *Keuper & Pfreundt, "Asynchronous
+//! Parallel Stochastic Gradient Descent — A Numeric Core for Scalable
+//! Distributed Machine Learning Algorithms"* (2015), built as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: a lock-free
+//!   distributed-training coordinator built on a GASPI-style single-sided
+//!   communication substrate ([`gaspi`]), with the Parzen-window gated
+//!   asynchronous update of eq. (2)–(7) ([`optim`]), worker/leader
+//!   topology ([`coordinator`]), the MapReduce BATCH and SimuParallelSGD
+//!   baselines, a calibrated discrete-event cluster simulator ([`sim`])
+//!   and the full paper-figure harness ([`harness`]).
+//! * **Layer 2/1 (build time)** — the numeric core (mini-batch K-Means
+//!   statistics, Parzen merge, linear models, MLP) written in JAX with
+//!   Pallas kernels, AOT-lowered to HLO text artifacts which the
+//!   [`runtime`] loads and executes through the PJRT C API (`xla` crate).
+//!   Python never runs on the training path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use asgd::config::TrainConfig;
+//! use asgd::coordinator::run_training;
+//!
+//! let cfg = TrainConfig::asgd_default(10, 10, 500);
+//! let report = run_training(&cfg).unwrap();
+//! println!("final error {:.6}", report.final_error);
+//! ```
+//!
+//! See `examples/` for full workloads and `asgd fig --id N` for the
+//! paper-figure reproductions.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod gaspi;
+pub mod harness;
+pub mod kernels;
+pub mod metrics;
+pub mod models;
+pub mod net;
+pub mod optim;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default location of the AOT artifacts relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -1,0 +1,131 @@
+//! `asgd` — the leader binary: training entry point, paper-figure
+//! harness, dataset generator, and simulator calibration.
+
+use anyhow::{bail, Result};
+use asgd::cli::{train_config, Args, USAGE};
+use asgd::util::logging;
+use std::path::PathBuf;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    logging::init(args.verbosity().max(1));
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "train" => cmd_train(args),
+        "fig" => cmd_fig(args),
+        "datagen" => cmd_datagen(args),
+        "calibrate" => cmd_calibrate(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = train_config(args)?;
+    println!("config: {}", cfg.describe());
+    let report = asgd::coordinator::run_training(&cfg)?;
+    println!();
+    println!("method            {}", report.method);
+    println!("workers           {}", report.workers);
+    println!("wallclock         {:.3}s (optimization only)", report.wallclock_s);
+    println!("global samples    {}", report.global_samples);
+    println!("final objective   {:.6e}", report.final_objective);
+    if report.final_error.is_finite() {
+        println!("ground-truth err  {:.6e}", report.final_error);
+    }
+    println!(
+        "messages          sent {}  received {}  good {}  torn {}  overwritten {}",
+        report.comm.sent, report.comm.received, report.comm.good, report.comm.torn, report.comm.overwritten
+    );
+    if let Some(dir) = args.get("out") {
+        let dir = PathBuf::from(dir);
+        asgd::metrics::export::write_trace(&report, dir.join("trace.csv"))?;
+        asgd::metrics::export::write_report(&report, dir.join("report.json"))?;
+        println!("wrote {}/trace.csv and report.json", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> Result<()> {
+    let outdir = PathBuf::from(args.get("out").unwrap_or("results"));
+    std::fs::create_dir_all(&outdir)?;
+    let quick = args.has("quick");
+    if args.has("all") {
+        let status = asgd::harness::run_all(&outdir, quick)?;
+        println!("\n=== figure shape-check summary ===");
+        let mut failures = 0;
+        for (id, ok) in &status {
+            println!("fig {id:>2}: {}", if *ok { "OK" } else { "FAIL" });
+            failures += (!*ok) as u32;
+        }
+        if failures > 0 {
+            bail!("{failures} figures failed their shape checks");
+        }
+        return Ok(());
+    }
+    let id = args
+        .get("id")
+        .ok_or_else(|| anyhow::anyhow!("--id N or --all required"))?;
+    let result = asgd::harness::run_figure(id, &outdir, quick)?;
+    result.print();
+    if !result.all_checks_pass() {
+        bail!("figure {id} failed a shape check");
+    }
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("--out FILE required"))?;
+    let n = args.get_usize("n")?.unwrap_or(100_000);
+    let dim = args.get_usize("dim")?.unwrap_or(10);
+    let k = args.get_usize("k")?.unwrap_or(10);
+    let seed = args.get_u64("seed")?.unwrap_or(20150801);
+    let kind = args.get("kind").unwrap_or("synthetic");
+    let ds = match kind {
+        "synthetic" => asgd::data::synthetic::generate(n, dim, k, 1.0, 8.0, seed),
+        "hog" => asgd::data::hog::generate(n, k, seed),
+        "linear" => asgd::data::synthetic::generate_linear(n, dim, 0.1, seed),
+        other => bail!("unknown kind {other:?}"),
+    };
+    asgd::data::io::write(&ds, out)?;
+    println!(
+        "wrote {} samples (dim={}, {:.1} MB) to {out}",
+        ds.n,
+        ds.dim,
+        ds.bytes() as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_calibrate() -> Result<()> {
+    let cal = asgd::sim::calibrate();
+    println!("compute calibration on this machine:");
+    println!("  c0 (per-sample overhead)   {:.3e} s", cal.c0);
+    println!("  c1 (per k*d fma pair)      {:.3e} s", cal.c1);
+    println!("  merge (per state element)  {:.3e} s", cal.merge_per_elem);
+    for (k, d, b) in [(10, 10, 500), (100, 10, 500), (100, 128, 500)] {
+        println!(
+            "  t_batch(b={b}, k={k}, d={d})  {:.3e} s  ({:.0} samples/s/cpu)",
+            cal.t_batch(b, k, d, 4),
+            b as f64 / cal.t_batch(b, k, d, 4)
+        );
+    }
+    Ok(())
+}

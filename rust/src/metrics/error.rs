@@ -1,0 +1,94 @@
+//! Ground-truth error measure (§5.4): "We use the 'ground-truth' cluster
+//! centers from the data generation step to measure their distance to the
+//! centers returned by the investigated algorithms."
+//!
+//! Greedy bipartite matching (closest pair first, each center used once)
+//! between ground-truth and learned centers, reporting the mean matched
+//! distance.  Greedy rather than Hungarian: the error is only used for
+//! *relative* comparisons between algorithms ("this measure has no
+//! absolute value", §5.4), and greedy is deterministic, O(k² log k) and
+//! dependency-free.
+
+/// Mean greedy-matched L2 distance between `truth` (`[kt, d]`) and
+/// learned `w` (`[k, d]`).  When `k != kt`, the min(k, kt) best pairs are
+/// matched and unmatched truth centers are ignored (the learner cannot be
+/// charged for centers it was not asked to produce).
+pub fn matched_center_distance(truth: &[f32], kt: usize, w: &[f32], k: usize, d: usize) -> f64 {
+    assert_eq!(truth.len(), kt * d, "truth shape");
+    assert_eq!(w.len(), k * d, "w shape");
+    if kt == 0 || k == 0 {
+        return 0.0;
+    }
+    // all pairwise distances
+    let mut pairs: Vec<(f64, usize, usize)> = Vec::with_capacity(kt * k);
+    for t in 0..kt {
+        let tr = &truth[t * d..(t + 1) * d];
+        for c in 0..k {
+            let dist = crate::util::sq_dist(tr, &w[c * d..(c + 1) * d]).sqrt();
+            pairs.push((dist, t, c));
+        }
+    }
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let m = kt.min(k);
+    let mut used_t = vec![false; kt];
+    let mut used_c = vec![false; k];
+    let mut total = 0.0;
+    let mut matched = 0usize;
+    for (dist, t, c) in pairs {
+        if matched == m {
+            break;
+        }
+        if !used_t[t] && !used_c[c] {
+            used_t[t] = true;
+            used_c[c] = true;
+            total += dist;
+            matched += 1;
+        }
+    }
+    total / m as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_zero() {
+        let truth = vec![0.0, 0.0, 10.0, 10.0, -5.0, 3.0];
+        assert_eq!(matched_center_distance(&truth, 3, &truth, 3, 2), 0.0);
+    }
+
+    #[test]
+    fn permutation_invariant() {
+        let truth = vec![0.0, 0.0, 10.0, 10.0];
+        let learned = vec![10.0, 10.0, 0.0, 0.0]; // swapped order
+        assert_eq!(matched_center_distance(&truth, 2, &learned, 2, 2), 0.0);
+    }
+
+    #[test]
+    fn known_offset() {
+        let truth = vec![0.0, 0.0, 10.0, 0.0];
+        let learned = vec![0.0, 1.0, 10.0, 1.0]; // both off by 1 in y
+        let e = matched_center_distance(&truth, 2, &learned, 2, 2);
+        assert!((e - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn greedy_prefers_close_pairs() {
+        // learned has one center near both truths; greedy must not
+        // double-assign it
+        let truth = vec![0.0, 0.0, 4.0, 0.0];
+        let learned = vec![0.1, 0.0, 100.0, 0.0];
+        let e = matched_center_distance(&truth, 2, &learned, 2, 2);
+        // pairs: (0 <-> 0.1) = 0.1, (4 <-> 100) = 96 -> mean 48.05
+        assert!((e - 48.05).abs() < 0.01, "{e}");
+    }
+
+    #[test]
+    fn mismatched_k_uses_min() {
+        let truth = vec![0.0, 0.0]; // kt = 1
+        let learned = vec![0.0, 1.0, 50.0, 50.0]; // k = 2
+        let e = matched_center_distance(&truth, 1, &learned, 2, 2);
+        assert!((e - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,82 @@
+//! Result export: convergence traces and run summaries to CSV/JSON under
+//! `results/` (provenance for EXPERIMENTS.md).
+
+use super::RunReport;
+use crate::util::csv::CsvTable;
+use crate::util::json::{Json, JsonBuilder};
+use anyhow::Result;
+use std::path::Path;
+
+/// Write the convergence trace of a run as CSV.
+pub fn write_trace<P: AsRef<Path>>(report: &RunReport, path: P) -> Result<()> {
+    let mut t = CsvTable::new(&["global_iters", "time_s", "objective", "truth_error"]);
+    for p in &report.trace {
+        t.row_f64(&[p.global_iters, p.time_s, p.objective, p.truth_error]);
+    }
+    t.write_file(path)?;
+    Ok(())
+}
+
+/// Run summary as a JSON value.
+pub fn report_json(report: &RunReport) -> Json {
+    JsonBuilder::new()
+        .str("method", &report.method)
+        .num("workers", report.workers as f64)
+        .num("final_objective", report.final_objective)
+        .num("final_error", report.final_error)
+        .num("wallclock_s", report.wallclock_s)
+        .num("total_iters", report.total_iters as f64)
+        .num("global_samples", report.global_samples as f64)
+        .num("msgs_sent", report.comm.sent as f64)
+        .num("msgs_received", report.comm.received as f64)
+        .num("msgs_good", report.comm.good as f64)
+        .num("msgs_torn", report.comm.torn as f64)
+        .num("msgs_overwritten", report.comm.overwritten as f64)
+        .build()
+}
+
+/// Write the run summary as JSON.
+pub fn write_report<P: AsRef<Path>>(report: &RunReport, path: P) -> Result<()> {
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, report_json(report).to_string())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::TracePoint;
+
+    #[test]
+    fn exports_roundtrip() {
+        let report = RunReport {
+            method: "asgd".into(),
+            workers: 4,
+            final_objective: 1.5,
+            final_error: 0.2,
+            wallclock_s: 3.25,
+            total_iters: 800,
+            global_samples: 400_000,
+            trace: vec![TracePoint {
+                global_iters: 1.0,
+                time_s: 0.5,
+                objective: 2.0,
+                truth_error: 0.3,
+            }],
+            ..Default::default()
+        };
+        let dir = std::env::temp_dir().join(format!("asgd_export_{}", std::process::id()));
+        let trace_path = dir.join("trace.csv");
+        let json_path = dir.join("report.json");
+        write_trace(&report, &trace_path).unwrap();
+        write_report(&report, &json_path).unwrap();
+        let csv = std::fs::read_to_string(&trace_path).unwrap();
+        assert!(csv.starts_with("global_iters,"));
+        let j = Json::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+        assert_eq!(j.get("method").unwrap().as_str(), Some("asgd"));
+        assert_eq!(j.get("msgs_sent").unwrap().as_f64(), Some(0.0));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,112 @@
+//! Metrics: convergence traces, ground-truth error (§5.4), 10-fold
+//! statistics, and result export.
+
+pub mod error;
+pub mod export;
+
+use crate::gaspi::stats::StatsSnapshot;
+
+/// One point of a convergence trace (figs. 8/13/14/15).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TracePoint {
+    /// Global iteration count I = samples touched across all workers.
+    pub global_iters: f64,
+    /// Wall-clock (or simulated) seconds since optimization start.
+    pub time_s: f64,
+    /// Objective value (quantization error / loss).
+    pub objective: f64,
+    /// Ground-truth error, when available (§5.4).
+    pub truth_error: f64,
+}
+
+/// A recorded optimization run.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub method: String,
+    pub workers: usize,
+    /// Objective on the evaluation set at termination.
+    pub final_objective: f64,
+    /// §5.4 ground-truth error at termination (NaN if not applicable).
+    pub final_error: f64,
+    /// Optimization wall-clock, excluding data generation/distribution
+    /// ("runtimes are computed for optimization only", §5.4).
+    pub wallclock_s: f64,
+    /// Total mini-batch iterations executed across workers.
+    pub total_iters: u64,
+    /// Global samples touched (the paper's I).
+    pub global_samples: u64,
+    pub trace: Vec<TracePoint>,
+    pub comm: StatsSnapshot,
+    /// Final state vector (the returned model).
+    pub state: Vec<f32>,
+}
+
+impl RunReport {
+    /// Iterations (global samples) needed to first reach `target`
+    /// objective — the early-convergence metric of figs. 8/15.
+    pub fn iters_to_reach(&self, target: f64) -> Option<f64> {
+        self.trace
+            .iter()
+            .find(|p| p.objective <= target)
+            .map(|p| p.global_iters)
+    }
+
+    /// Time needed to first reach `target` objective.
+    pub fn time_to_reach(&self, target: f64) -> Option<f64> {
+        self.trace
+            .iter()
+            .find(|p| p.objective <= target)
+            .map(|p| p.time_s)
+    }
+}
+
+/// Mean/variance summary of a 10-fold evaluation (§5.4, figs. 9/10).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FoldSummary {
+    pub folds: usize,
+    pub mean: f64,
+    pub variance: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize_folds(values: &[f64]) -> FoldSummary {
+    if values.is_empty() {
+        return FoldSummary::default();
+    }
+    FoldSummary {
+        folds: values.len(),
+        mean: crate::util::mean(values),
+        variance: crate::util::variance(values),
+        min: values.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: values.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iters_to_reach_finds_first_crossing() {
+        let report = RunReport {
+            trace: vec![
+                TracePoint { global_iters: 100.0, time_s: 0.1, objective: 5.0, truth_error: 0.0 },
+                TracePoint { global_iters: 200.0, time_s: 0.2, objective: 2.0, truth_error: 0.0 },
+                TracePoint { global_iters: 300.0, time_s: 0.3, objective: 1.0, truth_error: 0.0 },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(report.iters_to_reach(2.5), Some(200.0));
+        assert_eq!(report.time_to_reach(0.5), None);
+    }
+
+    #[test]
+    fn fold_summary() {
+        let s = summarize_folds(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.folds, 3);
+        assert_eq!(s.mean, 2.0);
+        assert!((s.variance - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!((s.min, s.max), (1.0, 3.0));
+    }
+}

@@ -1,0 +1,153 @@
+//! K-Means as a [`Model`] (eq. 8-10) — the paper's evaluation vehicle.
+
+use super::Model;
+use crate::data::Dataset;
+use crate::kernels::kmeans::{kmeans_stats, KmeansScratch};
+use crate::util::rng::Xoshiro256pp;
+use std::cell::RefCell;
+
+/// K-Means clustering model: state is the flat `[k, d]` prototype matrix.
+pub struct KMeansModel {
+    pub k: usize,
+    pub d: usize,
+    // per-thread scratch to keep grad() allocation-free and &self-callable
+    scratch: thread_local::ThreadLocalScratch,
+}
+
+mod thread_local {
+    use super::*;
+
+    /// Tiny thread-local scratch pool (std::thread_local! needs a static,
+    /// so roll a keyed pool instead: one scratch per OS thread id).
+    pub struct ThreadLocalScratch;
+
+    std::thread_local! {
+        static SCRATCH: RefCell<KmeansScratch> = RefCell::new(KmeansScratch::default());
+    }
+
+    impl ThreadLocalScratch {
+        pub fn with<R>(&self, f: impl FnOnce(&mut KmeansScratch) -> R) -> R {
+            SCRATCH.with(|s| f(&mut s.borrow_mut()))
+        }
+    }
+}
+
+impl KMeansModel {
+    pub fn new(k: usize, d: usize) -> Self {
+        assert!(k >= 1 && d >= 1);
+        Self {
+            k,
+            d,
+            scratch: thread_local::ThreadLocalScratch,
+        }
+    }
+}
+
+impl Model for KMeansModel {
+    fn state_len(&self) -> usize {
+        self.k * self.d
+    }
+
+    /// Forgy-style init: k distinct random samples from the dataset.
+    fn init_state(&self, data: &Dataset, rng: &mut Xoshiro256pp) -> Vec<f32> {
+        assert_eq!(data.dim, self.d);
+        assert!(data.n >= self.k, "need >= k samples to seed centers");
+        let mut w = Vec::with_capacity(self.k * self.d);
+        let mut chosen = Vec::with_capacity(self.k);
+        while chosen.len() < self.k {
+            let i = rng.index(data.n);
+            if !chosen.contains(&i) {
+                chosen.push(i);
+                w.extend_from_slice(data.row(i));
+            }
+        }
+        w
+    }
+
+    fn grad(&self, x: &[f32], _labels: Option<&[f32]>, w: &[f32], grad: &mut [f32]) -> f64 {
+        let b = (x.len() / self.d) as f32;
+        self.scratch.with(|scratch| {
+            kmeans_stats(x, w, self.k, self.d, scratch);
+            // grad_k = (counts_k * w_k - sums_k) / b
+            for c in 0..self.k {
+                let count = scratch.stats.counts[c];
+                let sums = &scratch.stats.sums[c * self.d..(c + 1) * self.d];
+                let wr = &w[c * self.d..(c + 1) * self.d];
+                let gr = &mut grad[c * self.d..(c + 1) * self.d];
+                for j in 0..self.d {
+                    gr[j] = (count * wr[j] - sums[j]) / b;
+                }
+            }
+            scratch.stats.loss
+        })
+    }
+
+    /// Mean quantization error over the first `max_samples` rows.
+    fn eval(&self, data: &Dataset, w: &[f32], max_samples: usize) -> f64 {
+        let n = data.n.min(max_samples.max(1));
+        crate::kernels::kmeans::quant_error(data.rows(0, n), w, self.k, self.d)
+    }
+
+    /// §5.4 error measure: greedy-matched mean distance between learned
+    /// centers and the generator's ground-truth centers.
+    fn truth_error(&self, data: &Dataset, w: &[f32]) -> Option<f64> {
+        let truth = data.truth.as_ref()?;
+        Some(crate::metrics::error::matched_center_distance(
+            truth,
+            data.truth_k,
+            w,
+            self.k,
+            self.d,
+        ))
+    }
+
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn init_picks_k_distinct_rows() {
+        let ds = synthetic::generate(100, 4, 3, 1.0, 6.0, 1);
+        let m = KMeansModel::new(5, 4);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let w = m.init_state(&ds, &mut rng);
+        assert_eq!(w.len(), 20);
+        // rows must come from the dataset
+        for c in 0..5 {
+            let row = &w[c * 4..(c + 1) * 4];
+            assert!(
+                (0..ds.n).any(|i| ds.row(i) == row),
+                "center {c} not a data row"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_matches_stats_formula() {
+        let ds = synthetic::generate(64, 3, 2, 1.0, 6.0, 3);
+        let m = KMeansModel::new(4, 3);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let w = m.init_state(&ds, &mut rng);
+        let mut grad = vec![0.0; 12];
+        let loss = m.grad(ds.rows(0, 64), None, &w, &mut grad);
+        assert!(loss >= 0.0);
+        // descending along grad must reduce eval loss
+        let w2: Vec<f32> = w.iter().zip(&grad).map(|(a, g)| a - 0.5 * g).collect();
+        assert!(m.eval(&ds, &w2, 64) <= m.eval(&ds, &w, 64) + 1e-9);
+    }
+
+    #[test]
+    fn truth_error_present_for_synthetic() {
+        let ds = synthetic::generate(200, 4, 3, 0.5, 8.0, 5);
+        let m = KMeansModel::new(3, 4);
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let w = m.init_state(&ds, &mut rng);
+        assert!(m.truth_error(&ds, &w).is_some());
+    }
+}

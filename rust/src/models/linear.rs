@@ -1,0 +1,160 @@
+//! Linear models as [`Model`]s (the generality half of the paper's title).
+
+use super::Model;
+use crate::data::Dataset;
+use crate::kernels::linear as lin;
+use crate::util::rng::Xoshiro256pp;
+
+/// Least-squares regression: state is the `[d]` weight vector.
+pub struct LinRegModel {
+    pub d: usize,
+}
+
+impl LinRegModel {
+    pub fn new(d: usize) -> Self {
+        Self { d }
+    }
+}
+
+impl Model for LinRegModel {
+    fn state_len(&self) -> usize {
+        self.d
+    }
+
+    fn init_state(&self, _data: &Dataset, _rng: &mut Xoshiro256pp) -> Vec<f32> {
+        vec![0.0; self.d] // alg. 3/5 line 5: init w_0 = 0
+    }
+
+    fn grad(&self, x: &[f32], labels: Option<&[f32]>, w: &[f32], grad: &mut [f32]) -> f64 {
+        let y = labels.expect("linreg needs labels");
+        lin::linreg_grad(x, y, w, grad)
+    }
+
+    fn eval(&self, data: &Dataset, w: &[f32], max_samples: usize) -> f64 {
+        let n = data.n.min(max_samples.max(1));
+        let y = data.labels.as_ref().expect("linreg needs labels");
+        let mut grad = vec![0.0; self.d];
+        lin::linreg_grad(data.rows(0, n), &y[..n], w, &mut grad)
+    }
+
+    /// Distance to the generating `w*`.
+    fn truth_error(&self, data: &Dataset, w: &[f32]) -> Option<f64> {
+        let truth = data.truth.as_ref()?;
+        if truth.len() != w.len() {
+            return None;
+        }
+        Some(crate::util::sq_dist(truth, w).sqrt())
+    }
+
+    fn name(&self) -> &'static str {
+        "linreg"
+    }
+}
+
+/// Logistic regression: state is the `[d]` weight vector; labels in {0,1}.
+pub struct LogRegModel {
+    pub d: usize,
+}
+
+impl LogRegModel {
+    pub fn new(d: usize) -> Self {
+        Self { d }
+    }
+}
+
+impl Model for LogRegModel {
+    fn state_len(&self) -> usize {
+        self.d
+    }
+
+    fn init_state(&self, _data: &Dataset, _rng: &mut Xoshiro256pp) -> Vec<f32> {
+        vec![0.0; self.d]
+    }
+
+    fn grad(&self, x: &[f32], labels: Option<&[f32]>, w: &[f32], grad: &mut [f32]) -> f64 {
+        let y = labels.expect("logreg needs labels");
+        lin::logreg_grad(x, y, w, grad)
+    }
+
+    fn eval(&self, data: &Dataset, w: &[f32], max_samples: usize) -> f64 {
+        let n = data.n.min(max_samples.max(1));
+        let y = data.labels.as_ref().expect("logreg needs labels");
+        let mut grad = vec![0.0; self.d];
+        lin::logreg_grad(data.rows(0, n), &y[..n], w, &mut grad)
+    }
+
+    fn truth_error(&self, data: &Dataset, w: &[f32]) -> Option<f64> {
+        // direction matters for classification, not the norm
+        let truth = data.truth.as_ref()?;
+        if truth.len() != w.len() {
+            return None;
+        }
+        let dot: f64 = truth.iter().zip(w).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let denom = crate::util::sq_norm(truth).sqrt() * crate::util::sq_norm(w).sqrt();
+        if denom < 1e-12 {
+            return Some(1.0);
+        }
+        Some(1.0 - dot / denom) // cosine distance
+    }
+
+    fn name(&self) -> &'static str {
+        "logreg"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn linreg_trains_to_truth() {
+        let ds = synthetic::generate_linear(2000, 6, 0.05, 1);
+        let m = LinRegModel::new(6);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut w = m.init_state(&ds, &mut rng);
+        let mut grad = vec![0.0; 6];
+        for epoch in 0..100 {
+            let off = (epoch * 100) % 1900;
+            let y = ds.labels.as_ref().unwrap();
+            let loss = m.grad(ds.rows(off, 100), Some(&y[off..off + 100]), &w, &mut grad);
+            for (wi, g) in w.iter_mut().zip(&grad) {
+                *wi -= 0.2 * g;
+            }
+            if loss < 1e-3 {
+                break;
+            }
+        }
+        let err = m.truth_error(&ds, &w).unwrap();
+        assert!(err < 0.2, "w far from truth: {err}");
+    }
+
+    #[test]
+    fn logreg_cosine_error_decreases() {
+        // labels from a separating plane through the linear generator
+        let mut ds = synthetic::generate_linear(2000, 5, 0.0, 2);
+        let y: Vec<f32> = ds
+            .labels
+            .as_ref()
+            .unwrap()
+            .iter()
+            .map(|&v| (v > 0.0) as u8 as f32)
+            .collect();
+        ds.labels = Some(y);
+        let m = LogRegModel::new(5);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut w = m.init_state(&ds, &mut rng);
+        let e0 = 1.0; // w=0 -> cosine error 1.0 by convention
+        let mut grad = vec![0.0; 5];
+        for epoch in 0..200 {
+            let off = (epoch * 100) % 1900;
+            let y = ds.labels.as_ref().unwrap();
+            m.grad(ds.rows(off, 100), Some(&y[off..off + 100]), &w, &mut grad);
+            for (wi, g) in w.iter_mut().zip(&grad) {
+                *wi -= 0.5 * g;
+            }
+        }
+        let e1 = m.truth_error(&ds, &w).unwrap();
+        assert!(e1 < 0.1 * e0, "cosine error {e1}");
+    }
+}

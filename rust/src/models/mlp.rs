@@ -1,0 +1,239 @@
+//! Two-layer tanh MLP classifier as a [`Model`] — the end-to-end
+//! generality demonstration (examples/e2e_train.rs trains it through the
+//! same ASGD coordinator as K-Means).
+//!
+//! State layout (flat, matching `python/compile/model.py::mlp_step`):
+//! `[w1 (d*h) | b1 (h) | w2 (h*c) | b2 (c)]`.  Labels are class indices
+//! stored as f32 (the Dataset label channel).
+
+use super::Model;
+use crate::data::Dataset;
+use crate::util::rng::Xoshiro256pp;
+
+pub struct MlpModel {
+    pub d: usize,
+    pub h: usize,
+    pub c: usize,
+}
+
+impl MlpModel {
+    pub fn new(d: usize, h: usize, c: usize) -> Self {
+        assert!(d >= 1 && h >= 1 && c >= 2);
+        Self { d, h, c }
+    }
+
+    #[inline]
+    fn offsets(&self) -> (usize, usize, usize, usize) {
+        let o_w1 = 0;
+        let o_b1 = o_w1 + self.d * self.h;
+        let o_w2 = o_b1 + self.h;
+        let o_b2 = o_w2 + self.h * self.c;
+        (o_w1, o_b1, o_w2, o_b2)
+    }
+
+    /// Forward + backward over a flat `[b, d]` batch.  Writes the mean
+    /// gradient into `grad`, returns the mean cross-entropy loss.
+    fn forward_backward(&self, x: &[f32], y: &[f32], w: &[f32], grad: Option<&mut [f32]>) -> f64 {
+        let (d, h, c) = (self.d, self.h, self.c);
+        let b = x.len() / d;
+        let (o_w1, o_b1, o_w2, o_b2) = self.offsets();
+        let w1 = &w[o_w1..o_b1];
+        let b1 = &w[o_b1..o_w2];
+        let w2 = &w[o_w2..o_b2];
+        let b2 = &w[o_b2..];
+
+        let mut grad = grad;
+        if let Some(g) = grad.as_deref_mut() {
+            g.fill(0.0);
+        }
+
+        let mut hid = vec![0.0f32; h];
+        let mut logits = vec![0.0f32; c];
+        let mut dz = vec![0.0f32; c];
+        let mut dh = vec![0.0f32; h];
+        let mut loss = 0.0f64;
+
+        for i in 0..b {
+            let xi = &x[i * d..(i + 1) * d];
+            // hidden = tanh(x W1 + b1)   (W1 is [d, h] row-major)
+            for j in 0..h {
+                let mut z = b1[j];
+                for a in 0..d {
+                    z += xi[a] * w1[a * h + j];
+                }
+                hid[j] = z.tanh();
+            }
+            // logits = hidden W2 + b2   (W2 is [h, c] row-major)
+            for j in 0..c {
+                let mut z = b2[j];
+                for a in 0..h {
+                    z += hid[a] * w2[a * c + j];
+                }
+                logits[j] = z;
+            }
+            // softmax CE (stable)
+            let label = y[i] as usize;
+            debug_assert!(label < c, "label {label} out of range");
+            let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for j in 0..c {
+                dz[j] = (logits[j] - max).exp();
+                sum += dz[j];
+            }
+            loss += (sum.ln() + max - logits[label]) as f64;
+            if let Some(g) = grad.as_deref_mut() {
+                let inv_b = 1.0 / b as f32;
+                for j in 0..c {
+                    dz[j] = (dz[j] / sum - (j == label) as u8 as f32) * inv_b;
+                }
+                // dW2 += hidden^T dz ; db2 += dz ; dh = dz W2^T
+                for a in 0..h {
+                    let ha = hid[a];
+                    let mut acc = 0.0f32;
+                    for j in 0..c {
+                        g[o_w2 + a * c + j] += ha * dz[j];
+                        acc += dz[j] * w2[a * c + j];
+                    }
+                    dh[a] = acc * (1.0 - ha * ha); // tanh'
+                }
+                for j in 0..c {
+                    g[o_b2 + j] += dz[j];
+                }
+                // dW1 += x^T dh ; db1 += dh
+                for a in 0..d {
+                    let xa = xi[a];
+                    for j in 0..h {
+                        g[o_w1 + a * h + j] += xa * dh[j];
+                    }
+                }
+                for j in 0..h {
+                    g[o_b1 + j] += dh[j];
+                }
+            }
+        }
+        loss / b as f64
+    }
+}
+
+impl Model for MlpModel {
+    fn state_len(&self) -> usize {
+        self.d * self.h + self.h + self.h * self.c + self.c
+    }
+
+    /// Glorot-ish init: N(0, 1/sqrt(fan_in)) weights, zero biases.
+    fn init_state(&self, _data: &Dataset, rng: &mut Xoshiro256pp) -> Vec<f32> {
+        let (o_w1, o_b1, o_w2, o_b2) = self.offsets();
+        let mut w = vec![0.0f32; self.state_len()];
+        let s1 = 1.0 / (self.d as f32).sqrt();
+        for v in &mut w[o_w1..o_b1] {
+            *v = rng.normal_f32(0.0, s1);
+        }
+        let s2 = 1.0 / (self.h as f32).sqrt();
+        for v in &mut w[o_w2..o_b2] {
+            *v = rng.normal_f32(0.0, s2);
+        }
+        w
+    }
+
+    fn grad(&self, x: &[f32], labels: Option<&[f32]>, w: &[f32], grad: &mut [f32]) -> f64 {
+        let y = labels.expect("mlp needs labels");
+        self.forward_backward(x, y, w, Some(grad))
+    }
+
+    fn eval(&self, data: &Dataset, w: &[f32], max_samples: usize) -> f64 {
+        let n = data.n.min(max_samples.max(1));
+        let y = data.labels.as_ref().expect("mlp needs labels");
+        self.forward_backward(data.rows(0, n), &y[..n], w, None)
+    }
+
+    fn truth_error(&self, _data: &Dataset, _w: &[f32]) -> Option<f64> {
+        None // no meaningful parameter-space truth for an MLP
+    }
+
+    fn name(&self) -> &'static str {
+        "mlp"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_classification(n: usize, d: usize, c: usize, seed: u64) -> Dataset {
+        // class = argmax over c random directions -> linearly separable-ish
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let dirs: Vec<f32> = (0..c * d).map(|_| rng.next_normal() as f32).collect();
+        let mut x = vec![0.0f32; n * d];
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            for j in 0..d {
+                x[i * d + j] = rng.next_normal() as f32;
+            }
+            let xi = &x[i * d..(i + 1) * d];
+            let (mut best, mut bv) = (0usize, f32::NEG_INFINITY);
+            for cls in 0..c {
+                let v: f32 = xi.iter().zip(&dirs[cls * d..(cls + 1) * d]).map(|(a, b)| a * b).sum();
+                if v > bv {
+                    bv = v;
+                    best = cls;
+                }
+            }
+            y[i] = best as f32;
+        }
+        let mut ds = Dataset::new(n, d, x);
+        ds.labels = Some(y);
+        ds
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let m = MlpModel::new(3, 4, 3);
+        let ds = toy_classification(8, 3, 3, 1);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let w = m.init_state(&ds, &mut rng);
+        let y = ds.labels.as_ref().unwrap();
+        let mut grad = vec![0.0; m.state_len()];
+        m.grad(ds.rows(0, 8), Some(&y[..8]), &w, &mut grad);
+        let h = 1e-3f32;
+        // spot-check a spread of parameters
+        for &p in &[0usize, 5, 12, 14, 20, m.state_len() - 1] {
+            let mut wp = w.clone();
+            wp[p] += h;
+            let mut wm = w.clone();
+            wm[p] -= h;
+            let lp = m.forward_backward(ds.rows(0, 8), &y[..8], &wp, None);
+            let lm = m.forward_backward(ds.rows(0, 8), &y[..8], &wm, None);
+            let numeric = (lp - lm) / (2.0 * h as f64);
+            assert!(
+                (grad[p] as f64 - numeric).abs() < 5e-3,
+                "param {p}: {} vs {numeric}",
+                grad[p]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_training_reduces_loss() {
+        let m = MlpModel::new(4, 8, 3);
+        let ds = toy_classification(512, 4, 3, 3);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let mut w = m.init_state(&ds, &mut rng);
+        let y = ds.labels.as_ref().unwrap();
+        let e0 = m.eval(&ds, &w, 512);
+        let mut grad = vec![0.0; m.state_len()];
+        for epoch in 0..60 {
+            let off = (epoch * 64) % (512 - 64);
+            m.grad(ds.rows(off, 64), Some(&y[off..off + 64]), &w, &mut grad);
+            for (wi, g) in w.iter_mut().zip(&grad) {
+                *wi -= 0.5 * g;
+            }
+        }
+        let e1 = m.eval(&ds, &w, 512);
+        assert!(e1 < 0.7 * e0, "loss {e0} -> {e1}");
+    }
+
+    #[test]
+    fn state_len_matches_python_layout() {
+        assert_eq!(MlpModel::new(32, 64, 10).state_len(), 2762);
+    }
+}

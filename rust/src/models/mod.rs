@@ -1,0 +1,71 @@
+//! Model zoo: everything the "numeric core" trains.
+//!
+//! The paper evaluates on K-Means but positions ASGD as a generic numeric
+//! core; the [`Model`] trait is that genericity made explicit.  A model
+//! exposes exactly what the coordinator needs: a flattened state vector,
+//! a mini-batch gradient, and evaluation metrics.  The asynchronous merge
+//! (eq. 2-7) operates on the flat state and never looks inside.
+
+pub mod kmeans;
+pub mod linear;
+pub mod mlp;
+
+use crate::data::Dataset;
+use crate::util::rng::Xoshiro256pp;
+
+pub use kmeans::KMeansModel;
+pub use linear::{LinRegModel, LogRegModel};
+pub use mlp::MlpModel;
+
+/// A trainable model with a flat `f32` state.
+pub trait Model: Send + Sync {
+    /// Length of the flattened state vector.
+    fn state_len(&self) -> usize;
+
+    /// Leader-side initialization of `w_0` (§4 "a control thread
+    /// generates initial, problem dependent values for w0").
+    fn init_state(&self, data: &Dataset, rng: &mut Xoshiro256pp) -> Vec<f32>;
+
+    /// Mini-batch gradient `Delta_M` into `grad` (same length as state);
+    /// returns the mini-batch loss.  `labels` is `None` for unsupervised
+    /// models.
+    fn grad(&self, x: &[f32], labels: Option<&[f32]>, w: &[f32], grad: &mut [f32]) -> f64;
+
+    /// Objective value over (a prefix of) the dataset — the y-axis of the
+    /// convergence figures.
+    fn eval(&self, data: &Dataset, w: &[f32], max_samples: usize) -> f64;
+
+    /// Distance to the generator's ground truth (§5.4's error measure),
+    /// when meaningful for this model family.
+    fn truth_error(&self, data: &Dataset, w: &[f32]) -> Option<f64>;
+
+    /// Human-readable name.
+    fn name(&self) -> &'static str;
+}
+
+/// Construct the model described by a config.
+pub fn build(cfg: &crate::config::TrainConfig) -> Box<dyn Model> {
+    use crate::config::ModelKind;
+    match &cfg.model {
+        ModelKind::KMeans { k } => Box::new(KMeansModel::new(*k, cfg.data.dim)),
+        ModelKind::LinReg => Box::new(LinRegModel::new(cfg.data.dim)),
+        ModelKind::LogReg => Box::new(LogRegModel::new(cfg.data.dim)),
+        ModelKind::Mlp { hidden, classes } => {
+            Box::new(MlpModel::new(cfg.data.dim, *hidden, *classes))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    #[test]
+    fn build_dispatches() {
+        let cfg = TrainConfig::asgd_default(7, 5, 100);
+        let m = build(&cfg);
+        assert_eq!(m.name(), "kmeans");
+        assert_eq!(m.state_len(), 35);
+    }
+}

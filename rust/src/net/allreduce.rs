@@ -1,0 +1,192 @@
+//! Real tree-structured reduction over worker threads (§5.1's "optimized
+//! MapReduce method ... tree structured communication model").
+//!
+//! Used by the BATCH baseline (alg. 1 needs a global gradient every
+//! iteration) and by the `TreeMean` final aggregation (figs. 16/17).
+//! Implemented over channels: rank pairs combine bottom-up in
+//! ceil(log2(n)) rounds, exactly the round structure the cost model
+//! charges for.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// A reusable tree-reduction fabric for `n` participants exchanging
+/// `Vec<f32>` payloads combined by element-wise addition.
+///
+/// Round r: rank i receives from i + 2^r if (i % 2^(r+1)) == 0 and
+/// i + 2^r < n; senders drop out after sending.  After all rounds rank 0
+/// holds the sum; an optional broadcast pushes it back down the tree.
+pub struct TreeReduce {
+    n: usize,
+    /// mailbox[rank] receives payloads addressed to `rank`.
+    senders: Vec<Sender<Vec<f32>>>,
+    receivers: Vec<Mutex<Receiver<Vec<f32>>>>,
+}
+
+impl TreeReduce {
+    pub fn new(n: usize) -> Arc<Self> {
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(Mutex::new(rx));
+        }
+        Arc::new(Self {
+            n,
+            senders,
+            receivers,
+        })
+    }
+
+    pub fn participants(&self) -> usize {
+        self.n
+    }
+
+    /// Called by every rank with its local vector; returns the global sum
+    /// on every rank (reduce + broadcast).  Must be called by all `n`
+    /// ranks concurrently, once per "generation".
+    pub fn allreduce_sum(&self, rank: usize, mut local: Vec<f32>) -> Vec<f32> {
+        // ---- reduce (bottom-up) ----
+        let mut step = 1usize;
+        while step < self.n {
+            let group = step * 2;
+            if rank % group == 0 {
+                let partner = rank + step;
+                if partner < self.n {
+                    let incoming = self.receivers[rank]
+                        .lock()
+                        .expect("mailbox poisoned")
+                        .recv()
+                        .expect("partner vanished during reduce");
+                    debug_assert_eq!(incoming.len(), local.len());
+                    for (a, b) in local.iter_mut().zip(&incoming) {
+                        *a += *b;
+                    }
+                }
+            } else if rank % group == step {
+                let partner = rank - step;
+                self.senders[partner]
+                    .send(std::mem::take(&mut local))
+                    .expect("partner vanished during reduce");
+                break; // this rank is done reducing; wait for broadcast
+            }
+            step *= 2;
+        }
+
+        // ---- broadcast (top-down, mirror order) ----
+        if rank == 0 {
+            // local holds the global sum
+        } else {
+            local = self.receivers[rank]
+                .lock()
+                .expect("mailbox poisoned")
+                .recv()
+                .expect("broadcast sender vanished");
+        }
+        // forward to the children this rank is responsible for (binomial
+        // broadcast mirroring the reduce tree, high levels first)
+        if self.n > 1 {
+            let mut step = highest_pow2_below(self.n);
+            loop {
+                if rank % (step * 2) == 0 {
+                    let child = rank + step;
+                    if child < self.n {
+                        self.senders[child]
+                            .send(local.clone())
+                            .expect("child vanished during broadcast");
+                    }
+                }
+                if step == 1 {
+                    break;
+                }
+                step /= 2;
+            }
+        }
+        local
+    }
+
+    /// Allreduce of the element-wise mean.
+    pub fn allreduce_mean(&self, rank: usize, local: Vec<f32>) -> Vec<f32> {
+        let mut sum = self.allreduce_sum(rank, local);
+        let n = self.n as f32;
+        for v in sum.iter_mut() {
+            *v /= n;
+        }
+        sum
+    }
+}
+
+fn highest_pow2_below(n: usize) -> usize {
+    let mut p = 1usize;
+    while p * 2 < n {
+        p *= 2;
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_allreduce(n: usize, len: usize) {
+        let tree = TreeReduce::new(n);
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let tree = tree.clone();
+            handles.push(std::thread::spawn(move || {
+                let local = vec![(rank + 1) as f32; len];
+                tree.allreduce_sum(rank, local)
+            }));
+        }
+        let expected = (n * (n + 1) / 2) as f32;
+        for h in handles {
+            let got = h.join().unwrap();
+            assert_eq!(got.len(), len);
+            assert!(got.iter().all(|&v| (v - expected).abs() < 1e-3), "n={n}");
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_various_sizes() {
+        for n in [1, 2, 3, 4, 5, 7, 8, 16] {
+            run_allreduce(n, 10);
+        }
+    }
+
+    #[test]
+    fn allreduce_mean() {
+        let n = 4;
+        let tree = TreeReduce::new(n);
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let tree = tree.clone();
+                std::thread::spawn(move || tree.allreduce_mean(rank, vec![rank as f32; 3]))
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            assert!(got.iter().all(|&v| (v - 1.5).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn reusable_across_generations() {
+        let n = 4;
+        let tree = TreeReduce::new(n);
+        for generation in 0..3 {
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    let tree = tree.clone();
+                    std::thread::spawn(move || {
+                        tree.allreduce_sum(rank, vec![generation as f32 + 1.0; 2])
+                    })
+                })
+                .collect();
+            for h in handles {
+                let got = h.join().unwrap();
+                assert_eq!(got[0], (generation as f32 + 1.0) * n as f32);
+            }
+        }
+    }
+}

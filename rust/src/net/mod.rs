@@ -1,0 +1,144 @@
+//! Interconnect cost model + tree-structured reduction.
+//!
+//! Two roles:
+//!
+//! 1. [`CostModel`] — an analytic FDR-Infiniband model (latency +
+//!    bandwidth + per-message CPU overhead) used by the discrete-event
+//!    simulator to charge communication time to the BATCH/SGD reduce
+//!    steps and to the ASGD one-sided puts (fig. 11's bandwidth knee).
+//! 2. [`allreduce`] — a real tree-structured reduction over worker
+//!    threads, the "optimized MapReduce method, which uses a tree
+//!    structured communication model" (§5.1) used for the BATCH baseline
+//!    and the final-aggregation variants (figs. 16/17).
+
+pub mod allreduce;
+
+/// Analytic point-to-point + collective cost model.
+///
+/// Times are seconds; sizes are bytes.  Defaults approximate the paper's
+/// testbed: FDR Infiniband (~6.8 GB/s effective per link, ~1.0 µs MPI-level
+/// latency) between nodes, shared memory (~20 GB/s, ~0.2 µs) within one.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub net_latency_s: f64,
+    pub net_bandwidth_bps: f64,
+    pub shm_latency_s: f64,
+    pub shm_bandwidth_bps: f64,
+    /// CPU time consumed per message at each endpoint (marshalling, WQE
+    /// posting) — charged even for "free" one-sided communication.
+    pub per_msg_cpu_s: f64,
+    /// Fraction of link bandwidth achievable under random all-to-all
+    /// one-sided traffic (incast contention, small puts, QP scheduling);
+    /// measured GPI-2 numbers for random-target puts sit at 15-30% of
+    /// the stream peak.
+    pub alltoall_efficiency: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self::fdr_infiniband()
+    }
+}
+
+impl CostModel {
+    /// The paper's testbed interconnect (§5.2).
+    pub fn fdr_infiniband() -> Self {
+        Self {
+            net_latency_s: 1.0e-6,
+            net_bandwidth_bps: 6.8e9,
+            shm_latency_s: 0.2e-6,
+            shm_bandwidth_bps: 20.0e9,
+            per_msg_cpu_s: 0.3e-6,
+            alltoall_efficiency: 0.2,
+        }
+    }
+
+    /// Gigabit-ethernet variant (for the fig. 11 saturation study).
+    pub fn gigabit_ethernet() -> Self {
+        Self {
+            net_latency_s: 30.0e-6,
+            net_bandwidth_bps: 0.117e9,
+            shm_latency_s: 0.2e-6,
+            shm_bandwidth_bps: 20.0e9,
+            per_msg_cpu_s: 2.0e-6,
+            alltoall_efficiency: 0.3,
+        }
+    }
+
+    /// Wire time of one point-to-point message.
+    pub fn p2p_time(&self, bytes: usize, crosses_network: bool) -> f64 {
+        if crosses_network {
+            self.net_latency_s + bytes as f64 / self.net_bandwidth_bps
+        } else {
+            self.shm_latency_s + bytes as f64 / self.shm_bandwidth_bps
+        }
+    }
+
+    /// Time of a binary-tree reduction (or broadcast) of a `bytes`-sized
+    /// payload over `ranks` ranks: ceil(log2(ranks)) sequential rounds of
+    /// parallel point-to-point transfers + per-hop reduction compute.
+    ///
+    /// This is the §5.1 "optimized MapReduce" the BATCH/SGD baselines pay
+    /// once per iteration / once at termination respectively.
+    pub fn tree_reduce_time(&self, bytes: usize, ranks: usize, reduce_flops_per_byte: f64, flops_per_sec: f64) -> f64 {
+        if ranks <= 1 {
+            return 0.0;
+        }
+        let rounds = (ranks as f64).log2().ceil();
+        let per_round = self.p2p_time(bytes, true)
+            + (bytes as f64 * reduce_flops_per_byte) / flops_per_sec
+            + self.per_msg_cpu_s;
+        rounds * per_round
+    }
+
+    /// Aggregate one-sided-put bandwidth demand (bytes/s) a node can
+    /// sustain before the fig. 11 knee: past this, puts queue and the
+    /// "free" communication starts costing compute time.  Random-target
+    /// puts achieve only [`Self::alltoall_efficiency`] of the link peak.
+    pub fn node_bandwidth_budget(&self) -> f64 {
+        self.net_bandwidth_bps * self.alltoall_efficiency
+    }
+
+    /// Fig. 11's overhead model: given the aggregate put rate of one node
+    /// (bytes/s), the multiplicative slowdown of the compute loop.
+    /// Below saturation only `per_msg_cpu_s` is charged; past saturation
+    /// the excess demand stalls the senders proportionally.
+    pub fn comm_overhead_factor(&self, node_put_bytes_per_s: f64, msgs_per_s: f64) -> f64 {
+        let cpu = msgs_per_s * self.per_msg_cpu_s; // fraction of a core
+        let sat = node_put_bytes_per_s / self.node_bandwidth_budget();
+        let stall = if sat > 1.0 { sat - 1.0 } else { 0.0 };
+        1.0 + cpu + stall
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_scales_with_size_and_locality() {
+        let m = CostModel::fdr_infiniband();
+        let small = m.p2p_time(4_000, true);
+        let big = m.p2p_time(4_000_000, true);
+        assert!(big > small * 100.0);
+        assert!(m.p2p_time(4_000, false) < small);
+    }
+
+    #[test]
+    fn tree_reduce_is_logarithmic() {
+        let m = CostModel::fdr_infiniband();
+        let t64 = m.tree_reduce_time(400, 64, 1.0, 1e9);
+        let t1024 = m.tree_reduce_time(400, 1024, 1.0, 1e9);
+        assert!(t1024 < t64 * 2.0, "log scaling violated: {t64} vs {t1024}");
+        assert_eq!(m.tree_reduce_time(400, 1, 1.0, 1e9), 0.0);
+    }
+
+    #[test]
+    fn overhead_has_knee() {
+        let m = CostModel::fdr_infiniband();
+        let below = m.comm_overhead_factor(0.5 * m.node_bandwidth_budget(), 1000.0);
+        let above = m.comm_overhead_factor(1.5 * m.node_bandwidth_budget(), 1000.0);
+        assert!(below < 1.01, "below saturation should be ~free: {below}");
+        assert!(above > 1.3, "past saturation should stall >30%: {above}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Optimizer layer: the ASGD update (eq. 2-7) with selectable gate mode,
+//! plus the plain SGD/mini-batch step the baselines share.
+//!
+//! Algorithm map (paper -> code):
+//! * alg. 1 BATCH       -> [`crate::coordinator::batch`] (epoch driver)
+//!   using [`sgd_apply`] on the tree-reduced global gradient
+//! * alg. 2/4 (mini-)SGD -> [`sgd_apply`]
+//! * alg. 3 SimuParallelSGD -> worker loop with [`sgd_apply`], final
+//!   aggregation in [`crate::coordinator::aggregate`]
+//! * alg. 5 ASGD        -> [`AsgdUpdate::apply`]
+
+use crate::config::GateMode;
+use crate::kernels::merge::{asgd_merge, asgd_merge_percenter, asgd_merge_ungated, MergeOut};
+
+/// Plain SGD step: `w -= eps * grad` (alg. 2 line 3 / alg. 4 line 6).
+#[inline]
+pub fn sgd_apply(w: &mut [f32], grad: &[f32], eps: f32) {
+    debug_assert_eq!(w.len(), grad.len());
+    for (wi, g) in w.iter_mut().zip(grad) {
+        *wi -= eps * g;
+    }
+}
+
+/// The asynchronous update of alg. 5 line 8 with external buffers
+/// (eq. 6/7), parameterized by the gate mode.
+#[derive(Clone, Copy, Debug)]
+pub struct AsgdUpdate {
+    pub gate: GateMode,
+    pub eps: f32,
+    /// K-Means row geometry for the per-center gate; ignored otherwise.
+    pub k: usize,
+    pub d: usize,
+}
+
+impl AsgdUpdate {
+    /// Apply one update in place.  `exts` is the concatenated external
+    /// buffer snapshot (zeros = empty), `scratch` a `state_len` buffer.
+    pub fn apply(
+        &self,
+        w: &mut [f32],
+        delta: &[f32],
+        exts: &[f32],
+        scratch: &mut [f32],
+    ) -> MergeOut {
+        match self.gate {
+            GateMode::FullState => asgd_merge(w, delta, exts, self.eps, scratch),
+            GateMode::PerCenter => {
+                asgd_merge_percenter(w, delta, exts, self.eps, self.k, self.d, scratch)
+            }
+            GateMode::Off => asgd_merge_ungated(w, delta, exts, self.eps, scratch),
+        }
+    }
+}
+
+/// Fixed step size per the paper ("eps needs to be fixed following the
+/// theoretic constraints shown in [20]"), with an optional decay ablation.
+#[derive(Clone, Copy, Debug)]
+pub enum StepSchedule {
+    /// The paper's choice.
+    Fixed(f32),
+    /// `eps / (1 + t*decay)` — ablation (DESIGN.md §Perf notes).
+    InverseDecay { eps0: f32, decay: f32 },
+}
+
+impl StepSchedule {
+    #[inline]
+    pub fn at(&self, t: u64) -> f32 {
+        match self {
+            StepSchedule::Fixed(e) => *e,
+            StepSchedule::InverseDecay { eps0, decay } => eps0 / (1.0 + t as f32 * decay),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GateMode;
+
+    #[test]
+    fn sgd_apply_is_axpy() {
+        let mut w = vec![1.0, 2.0];
+        sgd_apply(&mut w, &[0.5, -0.5], 0.2);
+        assert_eq!(w, vec![0.9, 2.1]);
+    }
+
+    #[test]
+    fn gate_modes_dispatch() {
+        let mut scratch = vec![0.0; 4];
+        let delta = vec![0.1f32; 4];
+        let exts = vec![0.5f32; 8]; // 2 buffers
+        for gate in [GateMode::FullState, GateMode::PerCenter, GateMode::Off] {
+            let mut w = vec![1.0f32; 4];
+            let upd = AsgdUpdate { gate, eps: 0.1, k: 2, d: 2 };
+            let out = upd.apply(&mut w, &delta, &exts, &mut scratch);
+            assert!(out.n_active == 2);
+            if gate == GateMode::Off {
+                assert_eq!(out.n_good, 2, "off mode accepts all active");
+            }
+        }
+    }
+
+    #[test]
+    fn off_gate_differs_from_full_when_buffer_is_bad() {
+        // a "behind" buffer: rejected by eq. (4), accepted by Off
+        let delta = vec![0.1f32; 2];
+        let exts = vec![10.0f32; 2];
+        let mut scratch = vec![0.0; 2];
+        let mut w_full = vec![1.0f32; 2];
+        let mut w_off = vec![1.0f32; 2];
+        AsgdUpdate { gate: GateMode::FullState, eps: 0.1, k: 1, d: 2 }
+            .apply(&mut w_full, &delta, &exts, &mut scratch);
+        AsgdUpdate { gate: GateMode::Off, eps: 0.1, k: 1, d: 2 }
+            .apply(&mut w_off, &delta, &exts, &mut scratch);
+        assert_ne!(w_full, w_off);
+    }
+
+    #[test]
+    fn schedules() {
+        assert_eq!(StepSchedule::Fixed(0.1).at(1000), 0.1);
+        let s = StepSchedule::InverseDecay { eps0: 1.0, decay: 1.0 };
+        assert!((s.at(1) - 0.5).abs() < 1e-6);
+        assert!(s.at(100) < s.at(10));
+    }
+}

@@ -1,0 +1,261 @@
+//! The PJRT execution engine: a dedicated service thread that owns the
+//! (non-`Send`) `xla::PjRtClient` and the compiled-executable cache, fed
+//! through a channel by any number of worker threads holding cloneable
+//! [`XlaHandle`]s.
+//!
+//! Why a service thread: the `xla` crate's client wraps an `Rc`, so it
+//! must live on one thread.  Marshalling `Vec<f32>` requests through a
+//! channel costs ~µs — noise next to a mini-batch execution — and gives
+//! the workers a `Send + Sync` handle, mirroring how a real deployment
+//! pins one PJRT context per device and funnels launches through it.
+//!
+//! Executables compile lazily on first use and are cached by artifact
+//! name for the lifetime of the engine.
+
+use super::manifest::Manifest;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+/// A request: execute artifact `name` with flat f32 inputs.
+struct ExecRequest {
+    name: String,
+    /// (flat data, dims) per input.
+    inputs: Vec<(Vec<f32>, Vec<i64>)>,
+    reply: Sender<Result<Vec<Vec<f32>>>>,
+}
+
+enum Msg {
+    Exec(ExecRequest),
+    /// Pre-compile an artifact (warmup), reply when done.
+    Warmup(String, Sender<Result<()>>),
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the engine service thread.
+#[derive(Clone)]
+pub struct XlaHandle {
+    tx: Sender<Msg>,
+}
+
+// Sender<T: Send> is Send but not Sync; guard it. The handle is cheap to
+// clone, so each worker clones its own — Sync is still required for
+// storing handles in Arc'd structs shared across threads.
+unsafe impl Sync for XlaHandle {}
+
+impl XlaHandle {
+    /// Execute `name` with the given flat inputs; returns the flat tuple
+    /// outputs in artifact order.
+    pub fn execute(&self, name: &str, inputs: Vec<(Vec<f32>, Vec<i64>)>) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Exec(ExecRequest {
+                name: name.to_string(),
+                inputs,
+                reply,
+            }))
+            .map_err(|_| anyhow!("xla engine thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("xla engine dropped reply"))?
+    }
+
+    /// Compile `name` now (so the first training iteration isn't charged
+    /// the compile time).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Warmup(name.to_string(), reply))
+            .map_err(|_| anyhow!("xla engine thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("xla engine dropped reply"))?
+    }
+}
+
+/// The engine: spawn once per process, hand out handles.
+pub struct XlaEngine {
+    tx: Sender<Msg>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl XlaEngine {
+    /// Start the service thread.  Fails fast if the PJRT client cannot be
+    /// created (reported through the first request otherwise).
+    pub fn start(manifest: Manifest) -> Result<Self> {
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("xla-engine".into())
+            .spawn(move || service_loop(manifest, rx, ready_tx))
+            .context("spawning xla engine thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("xla engine died during startup"))??;
+        Ok(Self {
+            tx,
+            thread: Some(thread),
+        })
+    }
+
+    pub fn handle(&self) -> XlaHandle {
+        XlaHandle {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+impl Drop for XlaEngine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn service_loop(manifest: Manifest, rx: Receiver<Msg>, ready: Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu failed: {e}")));
+            return;
+        }
+    };
+    log::info!(
+        "xla engine up: platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Warmup(name, reply) => {
+                let r = ensure_compiled(&client, &manifest, &mut cache, &name).map(|_| ());
+                let _ = reply.send(r);
+            }
+            Msg::Exec(req) => {
+                let result = exec_one(&client, &manifest, &mut cache, &req);
+                let _ = req.reply.send(result);
+            }
+        }
+    }
+}
+
+fn ensure_compiled<'a>(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+) -> Result<&'a xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(name) {
+        let spec = manifest
+            .by_name(name)
+            .with_context(|| format!("artifact {name} not in manifest"))?;
+        let path = manifest.path_of(spec);
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        log::info!("compiled {name} in {:.2}s", t.elapsed().as_secs_f64());
+        cache.insert(name.to_string(), exe);
+    }
+    Ok(cache.get(name).unwrap())
+}
+
+fn exec_one(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    req: &ExecRequest,
+) -> Result<Vec<Vec<f32>>> {
+    // shape-check against the manifest before touching XLA
+    let spec = manifest
+        .by_name(&req.name)
+        .with_context(|| format!("artifact {} not in manifest", req.name))?;
+    if spec.inputs.len() != req.inputs.len() {
+        bail!(
+            "{}: expected {} inputs, got {}",
+            req.name,
+            spec.inputs.len(),
+            req.inputs.len()
+        );
+    }
+    for (i, ((data, dims), want)) in req.inputs.iter().zip(&spec.inputs).enumerate() {
+        let want_i64: Vec<i64> = want.iter().map(|&d| d as i64).collect();
+        if *dims != want_i64 {
+            bail!("{} input {i}: shape {dims:?} != manifest {want:?}", req.name);
+        }
+        let numel: usize = want.iter().product();
+        if data.len() != numel {
+            bail!("{} input {i}: {} elements != {numel}", req.name, data.len());
+        }
+    }
+
+    let exe = ensure_compiled(client, manifest, cache, &req.name)?;
+    let mut literals = Vec::with_capacity(req.inputs.len());
+    for (data, dims) in &req.inputs {
+        let lit = xla::Literal::vec1(data)
+            .reshape(dims)
+            .map_err(|e| anyhow!("reshape to {dims:?}: {e}"))?;
+        literals.push(lit);
+    }
+    let buffers = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("executing {}: {e}", req.name))?;
+    let result = buffers[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetching result of {}: {e}", req.name))?;
+    // aot.py lowers with return_tuple=True -> always a tuple
+    let parts = result
+        .to_tuple()
+        .map_err(|e| anyhow!("untupling result of {}: {e}", req.name))?;
+    if parts.len() != spec.outputs.len() {
+        bail!(
+            "{}: {} outputs != manifest {}",
+            req.name,
+            parts.len(),
+            spec.outputs.len()
+        );
+    }
+    let mut out = Vec::with_capacity(parts.len());
+    for (part, want) in parts.into_iter().zip(&spec.outputs) {
+        let v = part
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("reading output of {}: {e}", req.name))?;
+        let numel: usize = want.iter().product();
+        if v.len() != numel {
+            bail!("{}: output has {} elements, want {numel}", req.name, v.len());
+        }
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// Global engine shared by everything in-process (compile once, reuse).
+static GLOBAL: Mutex<Option<XlaHandle>> = Mutex::new(None);
+
+/// Get (starting if needed) the process-global engine for `artifact_dir`.
+///
+/// The first caller fixes the artifact directory; later callers receive
+/// the same engine regardless of the directory they pass (one PJRT
+/// context per process).
+pub fn global_handle(artifact_dir: &str) -> Result<XlaHandle> {
+    let mut guard = GLOBAL.lock().unwrap();
+    if let Some(h) = guard.as_ref() {
+        return Ok(h.clone());
+    }
+    let manifest = Manifest::load(artifact_dir)?;
+    let engine = XlaEngine::start(manifest)?;
+    let handle = engine.handle();
+    // leak the engine: it lives for the process (its thread parks on the
+    // channel); avoids Drop-ordering issues with static handles.
+    std::mem::forget(engine);
+    *guard = Some(handle.clone());
+    Ok(handle)
+}

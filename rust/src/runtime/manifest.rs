@@ -1,0 +1,183 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the rust runtime: which HLO files exist, their kinds, parameters
+//! and input/output signatures.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// File name inside the artifact directory.
+    pub file: String,
+    /// Kind: `asgd_iter`, `kmeans_step`, `parzen_merge`, `quant_error`, ...
+    pub kind: String,
+    /// Shape parameters (k, d, b, n, ...).
+    pub params: BTreeMap<String, usize>,
+    /// Input shapes, in call order.
+    pub inputs: Vec<Vec<usize>>,
+    /// Output (tuple) shapes, in order.
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactSpec {
+    pub fn param(&self, key: &str) -> Option<usize> {
+        self.params.get(key).copied()
+    }
+}
+
+/// The parsed manifest plus its directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let json = Json::parse(&text).context("parsing manifest.json")?;
+        let version = json
+            .get("version")
+            .and_then(Json::as_usize)
+            .context("manifest missing version")?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut artifacts = Vec::new();
+        for a in json
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing artifacts")?
+        {
+            artifacts.push(parse_artifact(a)?);
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find an artifact of `kind` whose parameters include all of `want`.
+    pub fn find(&self, kind: &str, want: &[(&str, usize)]) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| {
+            a.kind == kind && want.iter().all(|(key, v)| a.param(key) == Some(*v))
+        })
+    }
+
+    /// All artifacts of one kind.
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ArtifactSpec> {
+        self.artifacts.iter().filter(move |a| a.kind == kind)
+    }
+}
+
+fn parse_artifact(a: &Json) -> Result<ArtifactSpec> {
+    let name = a
+        .get("name")
+        .and_then(Json::as_str)
+        .context("artifact missing name")?
+        .to_string();
+    let file = a
+        .get("file")
+        .and_then(Json::as_str)
+        .context("artifact missing file")?
+        .to_string();
+    let kind = a
+        .get("kind")
+        .and_then(Json::as_str)
+        .context("artifact missing kind")?
+        .to_string();
+    let mut params = BTreeMap::new();
+    if let Some(Json::Obj(m)) = a.get("params") {
+        for (key, v) in m {
+            if let Some(n) = v.as_usize() {
+                params.insert(key.clone(), n);
+            }
+        }
+    }
+    let inputs = parse_sig(a.get("inputs").context("artifact missing inputs")?)?;
+    let outputs = parse_sig(a.get("outputs").context("artifact missing outputs")?)?;
+    Ok(ArtifactSpec {
+        name,
+        file,
+        kind,
+        params,
+        inputs,
+        outputs,
+    })
+}
+
+fn parse_sig(j: &Json) -> Result<Vec<Vec<usize>>> {
+    let mut out = Vec::new();
+    for entry in j.as_arr().context("signature not an array")? {
+        let pair = entry.as_arr().context("signature entry not an array")?;
+        if pair.len() != 2 {
+            bail!("signature entry must be [dtype, shape]");
+        }
+        let dtype = pair[0].as_str().context("dtype not a string")?;
+        if dtype != "f32" {
+            bail!("unsupported dtype {dtype} (runtime is f32-only)");
+        }
+        let shape = pair[1]
+            .as_arr()
+            .context("shape not an array")?
+            .iter()
+            .map(|d| d.as_usize().context("non-integer dim"))
+            .collect::<Result<Vec<_>>>()?;
+        out.push(shape);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp_manifest() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("asgd_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"artifacts":[
+                {"name":"asgd_iter_k4_d8_b64_n4","file":"a.hlo.txt","kind":"asgd_iter",
+                 "params":{"k":4,"d":8,"b":64,"n":4},
+                 "inputs":[["f32",[64,8]],["f32",[4,8]],["f32",[4,4,8]],["f32",[1]]],
+                 "outputs":[["f32",[4,8]],["f32",[4]],["f32",[1]],["f32",[1]]]}
+            ]}"#,
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn load_and_query() {
+        let dir = write_tmp_manifest();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("asgd_iter", &[("k", 4), ("d", 8), ("b", 64)]).unwrap();
+        assert_eq!(a.inputs[0], vec![64, 8]);
+        assert_eq!(a.outputs.len(), 4);
+        assert!(m.find("asgd_iter", &[("k", 5)]).is_none());
+        assert!(m.by_name("asgd_iter_k4_d8_b64_n4").is_some());
+        assert_eq!(m.path_of(a), dir.join("a.hlo.txt"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

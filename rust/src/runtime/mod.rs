@@ -1,0 +1,20 @@
+//! The PJRT runtime: load AOT HLO-text artifacts, compile them once on
+//! the CPU PJRT client, and execute them from the training hot path.
+//!
+//! Components:
+//! * [`manifest`] — the `artifacts/manifest.json` contract with
+//!   `python/compile/aot.py` (names, kinds, shapes).
+//! * [`engine`] — the service thread owning the `xla::PjRtClient` and the
+//!   executable cache; workers talk to it through cloneable
+//!   [`engine::XlaHandle`]s.
+//! * [`backend`] — the [`backend::Stepper`] trait: one ASGD inner-loop
+//!   iteration behind a backend-agnostic interface (native rust kernels,
+//!   fused XLA artifact, or hybrid).
+
+pub mod backend;
+pub mod engine;
+pub mod manifest;
+
+pub use backend::{build_stepper, IterOut, StepScratch, Stepper};
+pub use engine::{global_handle, XlaEngine, XlaHandle};
+pub use manifest::{ArtifactSpec, Manifest};

@@ -1,0 +1,104 @@
+//! Compute-cost calibration: measure the native kernel on *this* machine
+//! and scale to the paper's per-core throughput.
+//!
+//! The simulator charges each simulated CPU `t_iter(b, k, d)` seconds per
+//! mini-batch.  We measure the real per-sample cost of the assignment +
+//! statistics kernel here (it is >95% of the inner loop) and fit the
+//! 2-parameter model `t_sample = c0 + c1 * k * d` (setup + flops), which
+//! extrapolates cleanly across the paper's (k, d) grid.
+
+use crate::kernels::kmeans::{kmeans_stats, KmeansScratch};
+use crate::util::rng::Xoshiro256pp;
+use std::time::Instant;
+
+/// Calibrated per-sample cost model.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeCal {
+    /// Fixed per-sample overhead (s).
+    pub c0: f64,
+    /// Cost per (sample * center * dim) fused multiply-add pair (s).
+    pub c1: f64,
+    /// Extra per-state-element cost of the ASGD merge path (s) —
+    /// O(N * k * d) per mini-batch, amortized per sample as `/b`.
+    pub merge_per_elem: f64,
+}
+
+impl ComputeCal {
+    /// Per-sample compute time for a (k, d) workload.
+    #[inline]
+    pub fn t_sample(&self, k: usize, d: usize) -> f64 {
+        self.c0 + self.c1 * (k * d) as f64
+    }
+
+    /// Per-mini-batch compute time (the alg.-5 inner loop body, without
+    /// communication effects).
+    #[inline]
+    pub fn t_batch(&self, b: usize, k: usize, d: usize, n_buffers: usize) -> f64 {
+        b as f64 * self.t_sample(k, d) + self.merge_per_elem * (n_buffers * k * d) as f64
+    }
+
+    /// A conservative default (measured once on the dev machine) used
+    /// when a caller cannot afford calibration.
+    pub fn default_uncalibrated() -> Self {
+        Self {
+            c0: 1.5e-8,
+            c1: 6.0e-10,
+            merge_per_elem: 2.0e-9,
+        }
+    }
+}
+
+/// Measure the native stats kernel at two (k*d) sizes and fit (c0, c1).
+pub fn calibrate() -> ComputeCal {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xCA11B);
+    let b = 512;
+
+    let mut measure = |k: usize, d: usize| -> f64 {
+        let x: Vec<f32> = (0..b * d).map(|_| rng.next_normal() as f32).collect();
+        let w: Vec<f32> = (0..k * d).map(|_| rng.next_normal() as f32).collect();
+        let mut scratch = KmeansScratch::default();
+        // warmup
+        kmeans_stats(&x, &w, k, d, &mut scratch);
+        let reps = 8;
+        let t = Instant::now();
+        for _ in 0..reps {
+            kmeans_stats(&x, &w, k, d, &mut scratch);
+        }
+        t.elapsed().as_secs_f64() / (reps * b) as f64
+    };
+
+    // two well-separated operating points
+    let (k1, d1) = (10, 10); // k*d = 100
+    let (k2, d2) = (100, 32); // k*d = 3200
+    let t1 = measure(k1, d1);
+    let t2 = measure(k2, d2);
+    let kd1 = (k1 * d1) as f64;
+    let kd2 = (k2 * d2) as f64;
+    let c1 = ((t2 - t1) / (kd2 - kd1)).max(1e-12);
+    let c0 = (t1 - c1 * kd1).max(1e-10);
+    ComputeCal {
+        c0,
+        c1,
+        merge_per_elem: 3.0 * c1, // merge touches each element ~3x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_is_positive_and_monotone() {
+        let cal = calibrate();
+        assert!(cal.c0 > 0.0 && cal.c1 > 0.0);
+        assert!(cal.t_sample(100, 10) > cal.t_sample(10, 10));
+        assert!(cal.t_batch(500, 10, 10, 4) > 0.0);
+    }
+
+    #[test]
+    fn default_is_sane() {
+        let cal = ComputeCal::default_uncalibrated();
+        // 500-sample k=10 d=10 mini-batch should be far under a second
+        assert!(cal.t_batch(500, 10, 10, 4) < 0.01);
+    }
+}

@@ -1,0 +1,229 @@
+//! Calibrated cluster simulator for the paper-scale runtime figures.
+//!
+//! The evaluation cluster (64 nodes x 16 CPUs, FDR IB, ~1 TB datasets,
+//! §5.2) does not exist in this environment, so the *runtime* figures
+//! (1, 5, 6, 7, 11, 16) are regenerated through this analytic
+//! discrete-cost model instead (DESIGN.md §3): real measured per-sample
+//! compute costs ([`calibrate`]) combined with the interconnect model
+//! ([`crate::net::CostModel`]) and each algorithm's communication
+//! structure:
+//!
+//! * **ASGD** — no barriers ever; per mini-batch it pays compute + the
+//!   receive-path gate + (past the bandwidth knee) sender stalls.
+//!   Scaling is linear-to-slightly-superlinear: smaller per-CPU shards
+//!   increasingly fit cache (the effect the paper credits for its
+//!   "better than linear" fig. 1/5 curves).
+//! * **SGD (SimuParallelSGD)** — embarrassingly parallel compute + a
+//!   one-time coordinated start + final tree aggregation whose cost is
+//!   independent of I; at small I/CPU it dominates (fig. 5's flattening).
+//! * **BATCH** — a full tree allreduce + barrier *every iteration*
+//!   (fig. 1's early departure from linear).
+//!
+//! Error-vs-iteration figures (8, 9, 10, 13, 14, 15, 17) come from real
+//! coordinator runs, not this model.
+
+pub mod calibrate;
+
+pub use calibrate::{calibrate, ComputeCal};
+
+use crate::gaspi::Topology;
+use crate::net::CostModel;
+
+/// Simulated workload description (one figure config).
+#[derive(Clone, Copy, Debug)]
+pub struct SimWorkload {
+    /// Global samples touched (the paper's I).
+    pub global_iters: f64,
+    /// Mini-batch size b.
+    pub minibatch: usize,
+    pub k: usize,
+    pub d: usize,
+    /// External buffers per worker.
+    pub n_buffers: usize,
+    /// Send fanout per mini-batch.
+    pub fanout: usize,
+    /// Total dataset samples (BATCH epochs touch all of them).
+    pub n_samples: f64,
+}
+
+/// The simulator: topology + interconnect + calibrated compute.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterSim {
+    pub cost: CostModel,
+    pub compute: ComputeCal,
+    /// Per-CPU synchronization/startup cost charged once per collective
+    /// participant (job launch, barrier skew) — the dominant term in the
+    /// paper's SGD/BATCH deviation from linear scaling.
+    pub sync_per_rank_s: f64,
+    /// Relative cache-speedup per halving of the per-CPU working set
+    /// (drives ASGD's slightly-superlinear scaling; measured effects on
+    /// Sandy-Bridge Xeons are 1-4%).
+    pub cache_bonus: f64,
+    /// Straggler skew of barrier-synchronized methods: a collective waits
+    /// for the slowest rank (OS jitter, NUMA imbalance — 3-6% on the
+    /// paper's dual-socket nodes).  ASGD never barriers and returns
+    /// worker 1's state (alg. 5 line 10), so it does not pay this.
+    pub straggler_skew: f64,
+}
+
+impl Default for ClusterSim {
+    fn default() -> Self {
+        Self {
+            cost: CostModel::fdr_infiniband(),
+            compute: ComputeCal::default_uncalibrated(),
+            sync_per_rank_s: 2.0e-3,
+            cache_bonus: 0.03,
+            straggler_skew: 0.05,
+        }
+    }
+}
+
+impl ClusterSim {
+    pub fn calibrated() -> Self {
+        Self {
+            compute: calibrate(),
+            ..Self::default()
+        }
+    }
+
+    /// State size in bytes (what one put ships).
+    fn state_bytes(&self, w: &SimWorkload) -> usize {
+        w.k * w.d * 4
+    }
+
+    /// Cache-locality factor for a per-CPU shard of `samples_per_cpu`
+    /// d-dim samples: working sets that shrink below L2/L3 run faster.
+    fn cache_factor(&self, w: &SimWorkload, cpus: usize) -> f64 {
+        let bytes_per_cpu = w.n_samples / cpus as f64 * w.d as f64 * 4.0;
+        let l3 = 20.0e6; // per-socket L3 of the paper's E5-2670
+        if bytes_per_cpu <= l3 {
+            1.0 - self.cache_bonus
+        } else {
+            // smooth approach to the bonus as the shard nears cache size
+            1.0 - self.cache_bonus * (l3 / bytes_per_cpu).min(1.0)
+        }
+    }
+
+    /// ASGD communication overhead factor for mini-batch size b on a
+    /// node of `threads_per_node` CPUs (fig. 11's model).
+    pub fn asgd_overhead(&self, w: &SimWorkload, topo: Topology) -> f64 {
+        let t_batch = self.compute.t_batch(w.minibatch, w.k, w.d, w.n_buffers);
+        let msgs_per_s_thread = w.fanout as f64 / t_batch;
+        let node_msgs = msgs_per_s_thread * topo.threads_per_node as f64;
+        let node_bytes = node_msgs * self.state_bytes(w) as f64 * topo.network_fraction();
+        self.cost.comm_overhead_factor(node_bytes, msgs_per_s_thread)
+    }
+
+    /// ASGD total runtime on `cpus` CPUs (alg. 5): pure pipeline, no
+    /// barriers, bandwidth-knee overhead, mild cache superlinearity.
+    pub fn runtime_asgd(&self, w: &SimWorkload, topo: Topology) -> f64 {
+        let cpus = topo.ranks();
+        let iters_per_cpu = w.global_iters / cpus as f64 / w.minibatch as f64;
+        let t_batch = self.compute.t_batch(w.minibatch, w.k, w.d, w.n_buffers);
+        let overhead = self.asgd_overhead(w, topo);
+        iters_per_cpu * t_batch * overhead * self.cache_factor(w, cpus)
+    }
+
+    /// SimuParallelSGD runtime (alg. 3): compute (mini-batch updates, no
+    /// merge) + one-time startup/aggregation overhead.
+    pub fn runtime_sgd(&self, w: &SimWorkload, topo: Topology) -> f64 {
+        let cpus = topo.ranks();
+        let iters_per_cpu = w.global_iters / cpus as f64 / w.minibatch as f64;
+        let t_batch = self.compute.t_batch(w.minibatch, w.k, w.d, 0);
+        // the final aggregation waits for the slowest rank
+        let compute =
+            iters_per_cpu * t_batch * self.cache_factor(w, cpus) * (1.0 + self.straggler_skew);
+        let collective = self.sync_per_rank_s * cpus as f64
+            + self
+                .cost
+                .tree_reduce_time(self.state_bytes(w), cpus, 1.0, 2.0e9);
+        compute + collective
+    }
+
+    /// BATCH runtime (alg. 1): every iteration touches all samples and
+    /// pays a full allreduce + barrier.
+    pub fn runtime_batch(&self, w: &SimWorkload, topo: Topology) -> f64 {
+        let cpus = topo.ranks();
+        let epochs = (w.global_iters / w.n_samples).max(1.0);
+        let samples_per_cpu = w.n_samples / cpus as f64;
+        // every epoch barriers: the slowest rank sets the pace
+        let t_epoch_compute = samples_per_cpu
+            * self.compute.t_sample(w.k, w.d)
+            * self.cache_factor(w, cpus)
+            * (1.0 + self.straggler_skew);
+        let t_epoch_collective = self.sync_per_rank_s * cpus as f64
+            + self
+                .cost
+                .tree_reduce_time(self.state_bytes(w), cpus, 1.0, 2.0e9);
+        epochs * (t_epoch_compute + t_epoch_collective)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn workload() -> SimWorkload {
+        SimWorkload {
+            global_iters: 1e10,
+            minibatch: 500,
+            k: 10,
+            d: 10,
+            n_buffers: 4,
+            fanout: 2,
+            n_samples: 2.7e10, // ~1 TB of 10-dim f32 samples
+        }
+    }
+
+    #[test]
+    fn asgd_fastest_and_scales(){
+        let sim = ClusterSim::default();
+        let w = workload();
+        for nodes in [8, 16, 32, 64] {
+            let topo = Topology::new(nodes, 16);
+            let a = sim.runtime_asgd(&w, topo);
+            let s = sim.runtime_sgd(&w, topo);
+            let b = sim.runtime_batch(&w, topo);
+            assert!(a < s && s < b, "nodes={nodes}: asgd {a}, sgd {s}, batch {b}");
+        }
+    }
+
+    #[test]
+    fn asgd_is_superlinear_sgd_is_not() {
+        let sim = ClusterSim::default();
+        let w = workload();
+        let t128 = sim.runtime_asgd(&w, Topology::new(8, 16));
+        let t1024 = sim.runtime_asgd(&w, Topology::new(64, 16));
+        let speedup = t128 / t1024;
+        assert!(speedup >= 8.0, "ASGD speedup {speedup} sublinear");
+        let s128 = sim.runtime_sgd(&w, Topology::new(8, 16));
+        let s1024 = sim.runtime_sgd(&w, Topology::new(64, 16));
+        assert!(s128 / s1024 < 8.0, "SGD should be sublinear (comm overhead)");
+    }
+
+    #[test]
+    fn comm_overhead_knee_in_b() {
+        // fig. 11: small b (high frequency) must eventually exceed the
+        // bandwidth and cost > 30%; large b is ~free.
+        let sim = ClusterSim::default();
+        let mut w = workload();
+        let topo = Topology::paper_cluster();
+        w.minibatch = 100_000;
+        let cheap = sim.asgd_overhead(&w, topo);
+        w.minibatch = 5;
+        let costly = sim.asgd_overhead(&w, topo);
+        assert!(cheap < 1.05, "b=100000 overhead {cheap}");
+        assert!(costly > 1.3, "b=5 overhead {costly}");
+    }
+
+    #[test]
+    fn batch_pays_per_iteration_collectives() {
+        let sim = ClusterSim::default();
+        let mut w = workload();
+        w.global_iters = 3.0 * w.n_samples; // 3 epochs
+        let topo = Topology::paper_cluster();
+        let one = sim.runtime_batch(&SimWorkload { global_iters: w.n_samples, ..w }, topo);
+        let three = sim.runtime_batch(&w, topo);
+        assert!((three / one - 3.0).abs() < 0.2);
+    }
+}

@@ -1,0 +1,106 @@
+//! Tiny CSV writer for the figure harness (gnuplot/pandas-ready output).
+
+use std::fs::File;
+use std::io::{BufWriter, Result, Write};
+use std::path::Path;
+
+/// Column-oriented CSV writer: set a header once, push rows, write out.
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(columns: &[&str]) -> Self {
+        Self {
+            header: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Push a row of f64 cells (formatted with full precision).
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows
+            .push(cells.iter().map(|c| format_cell(*c)).collect());
+    }
+
+    /// Push a row of pre-formatted string cells.
+    pub fn row_str(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Serialize to a string.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories as needed.
+    pub fn write_file<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(self.to_string().as_bytes())?;
+        w.flush()
+    }
+}
+
+fn format_cell(v: f64) -> String {
+    if v.is_finite() && v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.6e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut t = CsvTable::new(&["cpus", "runtime_s"]);
+        t.row_f64(&[128.0, 12.5]);
+        t.row_f64(&[256.0, 6.25]);
+        let s = t.to_string();
+        assert!(s.starts_with("cpus,runtime_s\n"));
+        assert!(s.contains("128,1.250000e1"));
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn panics_on_bad_row() {
+        let mut t = CsvTable::new(&["a"]);
+        t.row_f64(&[1.0, 2.0]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("asgd_csv_test");
+        let path = dir.join("t.csv");
+        let mut t = CsvTable::new(&["x"]);
+        t.row_f64(&[1.0]);
+        t.write_file(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body, "x\n1\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

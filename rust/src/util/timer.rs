@@ -1,0 +1,158 @@
+//! Wall-clock timing helpers and a tiny bench runner (no criterion in the
+//! offline build; `rust/benches/*.rs` use [`BenchRunner`] with
+//! `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Simple scoped stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Result of one benchmark: robust summary over per-iteration samples.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+    pub stddev_ns: f64,
+    /// User-supplied work units per iteration (e.g. samples processed),
+    /// for throughput reporting.
+    pub units_per_iter: f64,
+}
+
+impl BenchStats {
+    /// Work units per second at the median iteration time.
+    pub fn throughput(&self) -> f64 {
+        if self.median_ns <= 0.0 {
+            0.0
+        } else {
+            self.units_per_iter * 1e9 / self.median_ns
+        }
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12.0} ns/iter (±{:>10.0})  {:>14.0} units/s  [{} samples]",
+            self.name,
+            self.median_ns,
+            self.stddev_ns,
+            self.throughput(),
+            self.samples
+        )
+    }
+}
+
+/// Minimal benchmark runner: warmup, then timed samples of `f`.
+pub struct BenchRunner {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BenchRunner {
+    pub fn new() -> Self {
+        Self {
+            warmup_iters: 3,
+            sample_iters: 15,
+            results: Vec::new(),
+        }
+    }
+
+    /// Quick mode for CI / 1-CPU machines.
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            sample_iters: 5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly; `units` is the work per call for throughput.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, units: f64, mut f: F) -> &BenchStats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples_ns = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t = Instant::now();
+            f();
+            samples_ns.push(t.elapsed().as_nanos() as f64);
+        }
+        let mut sorted = samples_ns.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = crate::util::mean(&samples_ns);
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples: samples_ns.len(),
+            mean_ns: mean,
+            median_ns: sorted[sorted.len() / 2],
+            min_ns: sorted[0],
+            max_ns: *sorted.last().unwrap(),
+            stddev_ns: crate::util::stddev(&samples_ns),
+            units_per_iter: units,
+        };
+        println!("{}", stats.report_line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed_s() >= 0.002);
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut r = BenchRunner::quick();
+        let mut count = 0u64;
+        let s = r.bench("noop", 10.0, || {
+            count += 1;
+        });
+        assert_eq!(s.samples, 5);
+        assert!(count >= 6); // warmup + samples
+        assert!(s.throughput() > 0.0);
+    }
+}

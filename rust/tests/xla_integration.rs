@@ -1,0 +1,168 @@
+//! Integration tests over the PJRT runtime: XLA artifacts vs the native
+//! kernels, end-to-end coordinator runs on the XLA backend, manifest
+//! completeness.
+//!
+//! These need `make artifacts`; they skip (pass trivially with a stderr
+//! note) when `artifacts/manifest.json` is absent so `cargo test` stays
+//! green on a fresh checkout.
+
+use asgd::config::{BackendKind, GateMode, ModelKind, TrainConfig};
+use asgd::coordinator::run_training;
+use asgd::runtime::{build_stepper, global_handle, Manifest, StepScratch};
+use asgd::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+const DIR: &str = "artifacts";
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(DIR) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("skipping xla integration test: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_every_paper_workload() {
+    let Some(m) = manifest() else { return };
+    for (k, d, b) in [(10, 10, 500), (100, 10, 500), (100, 128, 500), (100, 32, 256)] {
+        assert!(
+            m.find("asgd_iter", &[("k", k), ("d", d), ("b", b)]).is_some(),
+            "missing asgd_iter k={k} d={d} b={b}"
+        );
+        assert!(
+            m.find("asgd_iter_pc", &[("k", k), ("d", d), ("b", b)]).is_some(),
+            "missing asgd_iter_pc k={k} d={d} b={b}"
+        );
+        assert!(
+            m.find("quant_error", &[("k", k), ("d", d)]).is_some(),
+            "missing quant_error k={k} d={d}"
+        );
+    }
+    assert!(m.find("linreg_step", &[("d", 128)]).is_some());
+    assert!(m.find("logreg_step", &[("d", 128)]).is_some());
+    assert!(m.find("mlp_step", &[("d", 32)]).is_some());
+}
+
+#[test]
+fn xla_asgd_iter_matches_native_stepper() {
+    let Some(_) = manifest() else { return };
+    let (k, d, b, n) = (10usize, 10usize, 500usize, 4usize);
+    let mut cfg = TrainConfig::asgd_default(k, d, b);
+    cfg.n_buffers = n;
+    cfg.data.n_samples = 10_000;
+
+    let model: Arc<dyn asgd::models::Model> = asgd::models::build(&cfg).into();
+    let mut xcfg = cfg.clone();
+    xcfg.backend = BackendKind::Xla;
+    let xla = build_stepper(&xcfg, model.clone()).expect("xla stepper");
+    let native = build_stepper(&cfg, model.clone()).expect("native stepper");
+
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.next_normal() as f32).collect();
+    let w0: Vec<f32> = (0..k * d).map(|_| rng.next_normal() as f32).collect();
+    // two active buffers (one near the projected state, one behind), two empty
+    let mut exts = vec![0.0f32; n * k * d];
+    for i in 0..k * d {
+        exts[i] = w0[i] - 0.01; // roughly along the descent direction
+        exts[k * d + i] = w0[i] + 5.0; // behind -> gate should reject
+    }
+
+    let mut w_xla = w0.clone();
+    let mut w_nat = w0.clone();
+    let mut scratch = StepScratch::default();
+    let ox = xla.step(&x, None, &mut w_xla, &exts, &mut scratch).unwrap();
+    let on = native.step(&x, None, &mut w_nat, &exts, &mut scratch).unwrap();
+
+    assert_eq!(ox.n_good, on.n_good, "gate decisions must agree");
+    assert!(
+        (ox.loss - on.loss).abs() < 1e-3 * on.loss.abs().max(1.0),
+        "loss {:.6} vs {:.6}",
+        ox.loss,
+        on.loss
+    );
+    for (i, (a, b_)) in w_xla.iter().zip(&w_nat).enumerate() {
+        assert!((a - b_).abs() < 1e-3, "w[{i}]: xla {a} vs native {b_}");
+    }
+}
+
+#[test]
+fn xla_eval_matches_native_quant_error() {
+    let Some(m) = manifest() else { return };
+    let spec = m.find("quant_error", &[("k", 10), ("d", 10)]).unwrap();
+    let chunk = spec.param("m").unwrap();
+    let handle = global_handle(DIR).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(9);
+    let x: Vec<f32> = (0..chunk * 10).map(|_| rng.next_normal() as f32).collect();
+    let w: Vec<f32> = (0..100).map(|_| rng.next_normal() as f32).collect();
+    let out = handle
+        .execute(
+            &spec.name,
+            vec![
+                (x.clone(), vec![chunk as i64, 10]),
+                (w.clone(), vec![10, 10]),
+            ],
+        )
+        .unwrap();
+    let native = asgd::kernels::kmeans::quant_error(&x, &w, 10, 10);
+    assert!(
+        (out[0][0] as f64 - native).abs() < 1e-3 * native.max(1.0),
+        "xla {} vs native {native}",
+        out[0][0]
+    );
+}
+
+#[test]
+fn xla_backend_trains_all_gate_modes() {
+    let Some(_) = manifest() else { return };
+    for gate in [GateMode::FullState, GateMode::PerCenter] {
+        let mut cfg = TrainConfig::asgd_default(10, 10, 500);
+        cfg.backend = BackendKind::Xla;
+        cfg.gate = gate;
+        cfg.workers = 4;
+        cfg.iters = 20;
+        cfg.eval_every = 10;
+        cfg.data.n_samples = 30_000;
+        let report = run_training(&cfg).expect("xla training");
+        assert!(report.comm.sent > 0);
+        let first = report.trace.first().unwrap().objective;
+        let last = report.trace.last().unwrap().objective;
+        assert!(last <= first, "gate {gate:?}: {first} -> {last}");
+    }
+}
+
+#[test]
+fn xla_hybrid_trains_linreg() {
+    let Some(_) = manifest() else { return };
+    let mut cfg = TrainConfig::asgd_default(10, 128, 500);
+    cfg.model = ModelKind::LinReg;
+    cfg.backend = BackendKind::Xla;
+    cfg.workers = 2;
+    cfg.fanout = 1;
+    cfg.iters = 30;
+    cfg.eps = 0.1;
+    cfg.eval_every = 10;
+    cfg.data.kind = asgd::config::DataKind::Linear { noise: 0.05 };
+    cfg.data.n_samples = 40_000;
+    let report = run_training(&cfg).expect("xla linreg");
+    let first = report.trace.first().unwrap().objective;
+    let last = report.trace.last().unwrap().objective;
+    assert!(last < 0.5 * first, "linreg did not descend: {first} -> {last}");
+}
+
+#[test]
+fn engine_rejects_shape_mismatches() {
+    let Some(m) = manifest() else { return };
+    let spec = m.find("quant_error", &[("k", 10), ("d", 10)]).unwrap();
+    let handle = global_handle(DIR).unwrap();
+    // wrong dims
+    let err = handle
+        .execute(&spec.name, vec![(vec![0.0; 10], vec![10]), (vec![0.0; 100], vec![10, 10])])
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("shape"), "{err:#}");
+    // unknown artifact
+    let err = handle.execute("nope", vec![]).unwrap_err();
+    assert!(format!("{err:#}").contains("not in manifest"));
+}
