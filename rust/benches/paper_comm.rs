@@ -1,5 +1,7 @@
 //! Paper benchmark: figures 11/12 — communication cost of the real
-//! substrate at varying frequency 1/b, and message accounting.
+//! substrate at varying frequency 1/b, and message accounting — plus the
+//! arXiv:1510.01155 chunk sweep: torn-read rate and per-put bytes fall as
+//! the state is split into more independently transferred blocks.
 //!
 //! On this 1-CPU testbed, end-to-end wall-clock differences between
 //! ASGD and silent runs sit inside scheduler noise, so the fig-11 claim
@@ -8,9 +10,12 @@
 //! and message volume scales with the frequency 1/b.  The cluster-scale
 //! bandwidth knee itself is reproduced by `asgd fig --id 11`.
 
-use asgd::config::{Method, TrainConfig};
+use asgd::config::{CommMode, Method, TrainConfig};
 use asgd::coordinator::{run_training, with_method};
+use asgd::gaspi::{ReadOutcome, Segment};
 use asgd::util::timer::BenchRunner;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 fn main() {
     let mut runner = BenchRunner::quick();
@@ -76,5 +81,117 @@ fn main() {
     assert_eq!(r.comm.sent, 8 * 60 * 2, "sends = workers*iters*fanout");
     assert!(r.comm.good <= r.comm.received);
     assert!(r.comm.received + r.comm.overwritten <= r.comm.sent + 8 * 4);
+
+    chunk_sweep_micro();
+    chunk_sweep_training();
     println!("paper_comm OK");
+}
+
+/// arXiv:1510.01155 on the raw substrate: hammer one slot with full-state
+/// update streams at increasing chunk counts and measure the torn-read
+/// rate per block poll.  Smaller blocks mean shorter seqlock windows, so
+/// the rate must fall (monotonically, up to scheduler noise) while the
+/// per-put payload shrinks by exactly the chunk count.
+fn chunk_sweep_micro() {
+    println!("\n== chunk sweep (micro): torn-read rate vs chunk count ==");
+    let state_len = 4096usize;
+    let mut prev_rate = f64::INFINITY;
+    for &chunks in &[1usize, 2, 4, 8, 16] {
+        // median of 3 rounds: a writer thread preempted mid-write leaves
+        // its block torn for the reader's whole timeslice, so a single
+        // unlucky round can spike; the median damps scheduler noise.
+        let mut rates: Vec<f64> = (0..3).map(|_| torn_rate_round(state_len, chunks)).collect();
+        rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rate = rates[1];
+        let per_put_bytes = 4 * state_len / chunks;
+        println!(
+            "   chunks={chunks:>2}: per-put {per_put_bytes:>6} B, torn rate {:>6.2}% (median of {rates:?})",
+            100.0 * rate
+        );
+        assert!(
+            rate <= prev_rate * 1.25 + 0.02,
+            "torn-read rate must be monotonically non-increasing in the chunk \
+             count (got {rate:.4} after {prev_rate:.4} at chunks={chunks})"
+        );
+        prev_rate = rate;
+    }
+}
+
+/// One measurement round: two writers hammer a slot with per-block puts
+/// while the reader polls every block 1500 times; returns torn / polls.
+fn torn_rate_round(state_len: usize, chunks: usize) -> f64 {
+    let sweeps = 1500usize;
+    let seg = Arc::new(Segment::new_chunked(0, 1, state_len, chunks));
+    let stop = Arc::new(AtomicBool::new(false));
+    let writers: Vec<_> = (1..=2u32)
+        .map(|id| {
+            let seg = seg.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let l = seg.layout();
+                let blocks: Vec<Vec<f32>> = (0..l.n_chunks())
+                    .map(|c| vec![id as f32; l.chunk_len(c)])
+                    .collect();
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    for (c, payload) in blocks.iter().enumerate() {
+                        seg.write_block(0, c, id, i, payload);
+                    }
+                    i += 1;
+                }
+            })
+        })
+        .collect();
+
+    let l = seg.layout();
+    let mut versions = vec![0u64; l.n_chunks()];
+    let mut buf = vec![0.0f32; state_len];
+    let (mut torn, mut polls) = (0u64, 0u64);
+    for _ in 0..sweeps {
+        for c in 0..l.n_chunks() {
+            let range = l.bounds(c);
+            let out = seg.read_block_into(0, c, versions[c], &mut buf[range]);
+            versions[c] = out.3;
+            polls += 1;
+            if out.0 == ReadOutcome::Torn {
+                torn += 1;
+            }
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
+    for w in writers {
+        w.join().unwrap();
+    }
+    torn as f64 / polls.max(1) as f64
+}
+
+/// The same sweep end-to-end: chunked training keeps converging while the
+/// per-put payload shrinks by the chunk count.
+fn chunk_sweep_training() {
+    println!("\n== chunk sweep (training): per-put bytes and block accounting ==");
+    let mut prev_per_put = u64::MAX;
+    for &chunks in &[1usize, 4, 16] {
+        let mut cfg = TrainConfig::asgd_default(10, 10, 250);
+        cfg.workers = 4;
+        cfg.iters = 60;
+        cfg.eval_every = 30;
+        cfg.data.n_samples = 65_000;
+        if chunks > 1 {
+            cfg.comm = CommMode::Chunked { chunks };
+        }
+        let r = run_training(&cfg).unwrap();
+        let per_put = r.comm.bytes_sent / r.comm.sent.max(1);
+        println!(
+            "   chunks={chunks:>2}: {} puts, {per_put} B/put, fresh blocks {}, torn blocks {}, lost blocks {}",
+            r.comm.sent, r.comm.chunk_received, r.comm.chunk_torn, r.comm.chunk_lost
+        );
+        assert!(
+            per_put < prev_per_put,
+            "per-put bytes must fall as chunks rise"
+        );
+        prev_per_put = per_put;
+        let first = r.trace.first().unwrap().objective;
+        let last = r.trace.last().unwrap().objective;
+        assert!(last < first, "chunks={chunks}: {first} -> {last}");
+    }
 }

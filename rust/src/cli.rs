@@ -130,7 +130,11 @@ pub fn train_config(args: &Args) -> Result<crate::config::TrainConfig> {
         cfg.n_buffers = v;
     }
     if let Some(v) = args.get_usize("send-interval")? {
-        cfg.send_interval = v.max(1);
+        // no clamping: validate() rejects 0 loudly
+        cfg.send_interval = v;
+    }
+    if let Some(comm) = CommMode::resolve(args.get("comm"), args.get_usize("chunks")?, cfg.comm)? {
+        cfg.comm = comm;
     }
     if let Some(v) = args.get("gate") {
         cfg.gate = GateMode::parse(v)?;
@@ -209,6 +213,8 @@ TRAIN OPTIONS (defaults in parentheses):
   --fanout F             recipients per send                    (2)
   --n-buffers N          external buffers per worker            (4)
   --send-interval S      send every S updates                   (1)
+  --comm M               full | chunked                         (full)
+  --chunks N             blocks per state for --comm chunked    (4)
   --gate G               full | per-center | off                (full)
   --aggregation A        first | tree-mean                      (first)
   --backend B            native | xla                           (native)
@@ -264,5 +270,23 @@ mod tests {
         let a = parse("train --data hog --k 100 --n-samples 50000");
         let cfg = train_config(&a).unwrap();
         assert_eq!(cfg.data.dim, 128);
+    }
+
+    #[test]
+    fn comm_flags_roundtrip() {
+        let a = parse("train --comm chunked --chunks 8");
+        let cfg = train_config(&a).unwrap();
+        assert_eq!(cfg.comm, crate::config::CommMode::Chunked { chunks: 8 });
+        // bare --chunks implies chunked; bare --comm chunked defaults to 4
+        let cfg = train_config(&parse("train --chunks 2")).unwrap();
+        assert_eq!(cfg.comm, crate::config::CommMode::Chunked { chunks: 2 });
+        let cfg = train_config(&parse("train --comm chunked")).unwrap();
+        assert_eq!(cfg.comm.chunks(), 4);
+        let cfg = train_config(&parse("train")).unwrap();
+        assert_eq!(cfg.comm, crate::config::CommMode::Full);
+        // contradictory flags are refused, not silently dropped
+        assert!(train_config(&parse("train --comm full --chunks 8")).is_err());
+        // send_interval 0 is rejected by validation, not clamped
+        assert!(train_config(&parse("train --send-interval 0")).is_err());
     }
 }

@@ -151,6 +151,80 @@ impl RacePolicy {
     }
 }
 
+/// How worker states travel over the one-sided substrate.
+///
+/// `Chunked` reproduces the communication-load balancing of Keuper &
+/// Pfreundt, "Balancing the Communication Load of Asynchronously
+/// Parallelized Machine Learning Algorithms" (arXiv:1510.01155): the
+/// state vector is split into `chunks` contiguous blocks, each put
+/// independently (round-robin across the fanout recipients), shrinking
+/// per-put bytes and the seqlock window a torn read can race with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommMode {
+    /// One full-state put per recipient (the 2015 paper's substrate).
+    Full,
+    /// Per-block puts with independent seqlock versions.
+    Chunked { chunks: usize },
+}
+
+impl CommMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CommMode::Full => "full",
+            CommMode::Chunked { .. } => "chunked",
+        }
+    }
+
+    /// Block count (1 for full-state communication).
+    pub fn chunks(&self) -> usize {
+        match self {
+            CommMode::Full => 1,
+            CommMode::Chunked { chunks } => *chunks,
+        }
+    }
+
+    /// Parse a mode name; `chunks` is used when the mode is chunked.
+    pub fn parse(s: &str, chunks: usize) -> Result<Self> {
+        Ok(match s {
+            "full" => CommMode::Full,
+            "chunked" | "chunk" | "chunks" => CommMode::Chunked { chunks },
+            other => bail!("unknown comm mode {other:?} (full|chunked)"),
+        })
+    }
+
+    /// Resolve the `comm`/`chunks` knob pair the same way for every
+    /// config source (TOML and CLI): an explicit mode wins, a bare chunk
+    /// count implies chunked, an explicit `full` + chunk count is a
+    /// contradiction (refused, not silently dropped), and an absent pair
+    /// leaves the mode unset (`None`).  `current` supplies the chunk
+    /// count when the mode is chunked but no count is given, so a later
+    /// layer (e.g. the CLI over a TOML file) does not silently reset an
+    /// already-configured count to the default.
+    pub fn resolve(
+        mode: Option<&str>,
+        chunks: Option<usize>,
+        current: CommMode,
+    ) -> Result<Option<Self>> {
+        let inherited = match current {
+            CommMode::Chunked { chunks } => chunks,
+            CommMode::Full => 4,
+        };
+        match (mode, chunks) {
+            (Some(m), c) => {
+                let parsed = Self::parse(m, c.unwrap_or(inherited))?;
+                if parsed == CommMode::Full {
+                    if let Some(n) = c {
+                        bail!("comm=full contradicts chunks={n}; drop one");
+                    }
+                }
+                Ok(Some(parsed))
+            }
+            (None, Some(n)) => Ok(Some(CommMode::Chunked { chunks: n })),
+            (None, None) => Ok(None),
+        }
+    }
+}
+
 /// Model family trained through the numeric core.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ModelKind {
@@ -257,6 +331,8 @@ pub struct TrainConfig {
     pub send_interval: usize,
     /// External buffers per worker (N in eq. 3).
     pub n_buffers: usize,
+    /// Full-state vs chunked one-sided communication (arXiv:1510.01155).
+    pub comm: CommMode,
     pub gate: GateMode,
     pub aggregation: AggMode,
     pub race: RacePolicy,
@@ -289,6 +365,7 @@ impl TrainConfig {
             fanout: 2,
             send_interval: 1,
             n_buffers: 4,
+            comm: CommMode::Full,
             gate: GateMode::FullState,
             aggregation: AggMode::ReturnFirst,
             race: RacePolicy::DiscardTorn,
@@ -314,11 +391,46 @@ impl TrainConfig {
         if self.minibatch == 0 {
             bail!("minibatch must be >= 1");
         }
+        if self.send_interval == 0 {
+            // used as a modulus in the worker loop — 0 would panic there
+            bail!("send_interval must be >= 1");
+        }
+        if let CommMode::Chunked { chunks } = self.comm {
+            if chunks == 0 {
+                bail!("comm=chunked needs chunks >= 1");
+            }
+            let state_len = self.model.state_len(self.data.dim);
+            if chunks > state_len {
+                // a block cannot be smaller than one f32 word; refuse
+                // rather than silently clamp the recorded knob
+                bail!(
+                    "chunks = {chunks} exceeds the state length {state_len} \
+                     (model {} with dim {})",
+                    self.model.name(),
+                    self.data.dim
+                );
+            }
+            if self.gate == GateMode::PerCenter {
+                // chunked transport gates on transport-block boundaries,
+                // which cut across center rows; refuse rather than
+                // silently override an explicit per-center request
+                bail!(
+                    "gate=per-center is incompatible with comm=chunked \
+                     (chunked buffers are gated per transport block); \
+                     use gate=full or gate=off"
+                );
+            }
+        }
         if !(self.eps > 0.0) {
             bail!("eps must be > 0 (paper: Require eps > 0)");
         }
         if self.n_buffers == 0 && self.method == Method::Asgd {
             bail!("asgd needs >= 1 external buffer");
+        }
+        if self.n_buffers > 64 {
+            // the merge kernels pack buffer selection into a u64 mask; in
+            // release builds a larger count would alias buffers silently
+            bail!("n_buffers must be <= 64 (the gate mask is a u64)");
         }
         if self.fanout >= self.workers && self.method == Method::Asgd {
             bail!(
@@ -339,8 +451,12 @@ impl TrainConfig {
 
     /// A compact one-line description for logs and reports.
     pub fn describe(&self) -> String {
+        let comm = match self.comm {
+            CommMode::Full => String::new(),
+            CommMode::Chunked { chunks } => format!(" comm=chunked:{chunks}"),
+        };
         format!(
-            "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}",
+            "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}{}",
             self.method.name(),
             self.model.name(),
             self.workers,
@@ -349,7 +465,8 @@ impl TrainConfig {
             self.iters,
             self.gate.name(),
             self.aggregation.name(),
-            self.backend.name()
+            self.backend.name(),
+            comm
         )
     }
 
@@ -364,6 +481,8 @@ impl TrainConfig {
             .num("iters", self.iters as f64)
             .num("fanout", self.fanout as f64)
             .num("n_buffers", self.n_buffers as f64)
+            .str("comm", self.comm.name())
+            .num("chunks", self.comm.chunks() as f64)
             .str("gate", self.gate.name())
             .str("aggregation", self.aggregation.name())
             .str("backend", self.backend.name())
@@ -414,8 +533,20 @@ impl TrainConfig {
         cfg.workers = get_usize("workers", cfg.workers)?;
         cfg.iters = get_usize("iters", cfg.iters)?;
         cfg.fanout = get_usize("fanout", cfg.fanout)?;
-        cfg.send_interval = get_usize("send_interval", cfg.send_interval)?.max(1);
+        // no clamping here: validate() rejects send_interval == 0 loudly
+        cfg.send_interval = get_usize("send_interval", cfg.send_interval)?;
         cfg.n_buffers = get_usize("n_buffers", cfg.n_buffers)?;
+        let comm_mode = match t.get("comm") {
+            None => None,
+            Some(v) => Some(v.as_str().context("comm must be a string")?),
+        };
+        let chunks = match t.get("chunks") {
+            None => None,
+            Some(v) => Some(v.as_usize().context("chunks must be an integer")?),
+        };
+        if let Some(comm) = CommMode::resolve(comm_mode, chunks, cfg.comm)? {
+            cfg.comm = comm;
+        }
         cfg.eval_every = get_usize("eval_every", cfg.eval_every)?;
         cfg.eval_samples = get_usize("eval_samples", cfg.eval_samples)?;
         if let Some(v) = t.get("eps") {
@@ -507,6 +638,93 @@ mod tests {
         let mut c = TrainConfig::asgd_default(10, 10, 500);
         c.data.n_samples = 100; // shard < minibatch
         assert!(c.validate().is_err());
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.comm = CommMode::Chunked { chunks: 0 };
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.comm = CommMode::Chunked { chunks: 4 };
+        c.gate = GateMode::PerCenter; // would be silently overridden
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.n_buffers = 65; // gate mask is a u64
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.comm = CommMode::Chunked { chunks: 101 }; // state_len = k*dim = 100
+        assert!(c.validate().is_err());
+        c.comm = CommMode::Chunked { chunks: 100 }; // one word per block: fine
+        c.validate().unwrap();
+    }
+
+    /// Regression (PR 1): `send_interval = 0` reached the worker loop and
+    /// panicked there with a divide-by-zero; validation must reject it.
+    #[test]
+    fn validation_rejects_send_interval_zero() {
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.send_interval = 0;
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("send_interval"), "{err:#}");
+        // ...including when it arrives via TOML
+        assert!(TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\nsend_interval = 0\n[data]\nn_samples = 100000\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn comm_mode_roundtrips_through_toml() {
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\ncomm = \"chunked\"\nchunks = 8\n[data]\nn_samples = 100000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.comm, CommMode::Chunked { chunks: 8 });
+        assert_eq!(cfg.comm.chunks(), 8);
+        // bare `chunks` implies chunked mode
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\nchunks = 2\n[data]\nn_samples = 100000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.comm, CommMode::Chunked { chunks: 2 });
+        // explicit full stays full
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\ncomm = \"full\"\n[data]\nn_samples = 100000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.comm, CommMode::Full);
+        assert_eq!(cfg.comm.chunks(), 1);
+        // contradictory keys are refused, not silently dropped
+        assert!(TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\ncomm = \"full\"\nchunks = 8\n[data]\nn_samples = 100000\n",
+        )
+        .is_err());
+        // the json snapshot carries the knob
+        let mut cfg = TrainConfig::asgd_default(10, 10, 500);
+        cfg.comm = CommMode::Chunked { chunks: 8 };
+        let j = cfg.to_json();
+        assert_eq!(j.get("comm").unwrap().as_str(), Some("chunked"));
+        assert_eq!(j.get("chunks").unwrap().as_f64(), Some(8.0));
+        assert!(cfg.describe().contains("comm=chunked:8"));
+    }
+
+    #[test]
+    fn comm_resolve_inherits_and_refuses() {
+        let eight = CommMode::Chunked { chunks: 8 };
+        // a bare mode keeps an already-configured chunk count...
+        assert_eq!(
+            CommMode::resolve(Some("chunked"), None, eight).unwrap(),
+            Some(eight)
+        );
+        // ...defaults to 4 otherwise, and an explicit count always wins
+        assert_eq!(
+            CommMode::resolve(Some("chunked"), None, CommMode::Full).unwrap(),
+            Some(CommMode::Chunked { chunks: 4 })
+        );
+        assert_eq!(
+            CommMode::resolve(Some("chunked"), Some(2), eight).unwrap(),
+            Some(CommMode::Chunked { chunks: 2 })
+        );
+        // absent pair leaves the mode alone; contradictions are refused
+        assert_eq!(CommMode::resolve(None, None, eight).unwrap(), None);
+        assert!(CommMode::resolve(Some("full"), Some(8), CommMode::Full).is_err());
     }
 
     #[test]

@@ -55,10 +55,11 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
     }
 
     let stepper = build_stepper(cfg, model.clone()).context("building stepper")?;
-    let world = Arc::new(World::new(
+    let world = Arc::new(World::new_chunked(
         cfg.workers,
         cfg.n_buffers.max(1),
         w0.len(),
+        cfg.comm.chunks(),
         Topology::flat(cfg.workers),
     ));
     let barrier = Arc::new(Barrier::new(cfg.workers));
@@ -184,6 +185,63 @@ mod tests {
         let last = report.trace.last().unwrap().objective;
         assert!(last < first, "objective did not descend: {first} -> {last}");
         assert!(report.final_error.is_finite());
+    }
+
+    /// Regression (PR 1): the send path fired at `t % interval == 0`, so
+    /// every worker broadcast right after its first step.  Sends must now
+    /// wait for a full interval of completed steps: with an interval
+    /// longer than the run nothing is ever sent, and otherwise exactly
+    /// `floor(iters / interval)` send events fire per worker.
+    #[test]
+    fn send_interval_fires_only_after_full_intervals() {
+        let mut cfg = small_cfg(); // workers = 4, iters = 60, fanout = 2
+        cfg.send_interval = 100; // longer than the run
+        let report = run_training(&cfg).unwrap();
+        assert_eq!(report.comm.sent, 0, "sent before a full interval elapsed");
+
+        let mut cfg = small_cfg();
+        cfg.send_interval = 7; // 60 / 7 -> 8 events (t = 6, 13, ..., 55)
+        let report = run_training(&cfg).unwrap();
+        assert_eq!(report.comm.sent, 4 * 8 * 2, "events = floor(iters/interval)");
+    }
+
+    #[test]
+    fn chunked_comm_converges_and_counts_blocks() {
+        let mut cfg = small_cfg();
+        cfg.comm = crate::config::CommMode::Chunked { chunks: 4 };
+        let report = run_training(&cfg).unwrap();
+        assert!(report.comm.chunk_sent > 0, "no block puts issued");
+        assert_eq!(
+            report.comm.sent, report.comm.chunk_sent,
+            "in chunked mode every put is a block put"
+        );
+        // every send event ships the whole state split over 4 blocks
+        assert_eq!(report.comm.chunk_sent % 4, 0);
+        assert!(report.comm.received > 0, "no blocks consumed");
+        let first = report.trace.first().unwrap().objective;
+        let last = report.trace.last().unwrap().objective;
+        assert!(last < first, "objective did not descend: {first} -> {last}");
+        // each send event's 4 blocks cover the state exactly once, so the
+        // mean per-put payload is state_len/chunks words
+        let state_len = (5 * 6) as u64; // k * dim of small_cfg
+        let send_events = report.comm.chunk_sent / 4;
+        assert_eq!(
+            report.comm.bytes_sent,
+            send_events * state_len * 4,
+            "per-put bytes must shrink by the chunk count"
+        );
+    }
+
+    #[test]
+    fn chunked_run_is_seed_deterministic_in_silent_mode() {
+        // determinism of the seeded RNG plumbing is checked where races
+        // cannot interfere: silent workers never read external buffers.
+        let mut a = small_cfg();
+        a.method = Method::AsgdSilent;
+        a.comm = crate::config::CommMode::Chunked { chunks: 4 };
+        let ra = run_training(&a).unwrap();
+        let rb = run_training(&a).unwrap();
+        assert_eq!(ra.state, rb.state);
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! + Parzen-gated merge + step), then push the new state to `fanout`
 //! random recipients with one-sided puts.  No blocking communication
 //! anywhere in the loop.
+//!
+//! With [`crate::config::CommMode::Chunked`] the state travels as
+//! independently versioned blocks (arXiv:1510.01155): the send path
+//! round-robins blocks across the fanout recipients (each put carries
+//! `state_len / chunks` words) and the receive path assembles per-block
+//! freshness into the external buffers — a buffer may hold fresh data in
+//! some blocks and zeros elsewhere, which the per-block Parzen gate
+//! handles downstream.
 
 use crate::config::{Method, RacePolicy, TrainConfig};
 use crate::data::partition::Shard;
@@ -79,7 +87,17 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
     let mut w = w0;
     let mut scratch = StepScratch::default();
     let mut exts = vec![0.0f32; cfg.n_buffers * state_len];
-    let mut slot_versions = vec![0u64; cfg.n_buffers];
+    let layout = world.layout();
+    let n_chunks = layout.n_chunks();
+    let chunked = n_chunks > 1;
+    // one seqlock version per (slot, block)
+    let mut block_versions = vec![0u64; cfg.n_buffers * n_chunks];
+    // version at which each block last reported Torn: the torn-version
+    // bookkeeping deliberately re-polls a torn block every visit (so a
+    // completed write is never skipped), but a *repeat* of the same torn
+    // snapshot — e.g. a writer stalled mid-put for many iterations —
+    // must not be re-counted or re-merged every poll (u64::MAX = none).
+    let mut torn_seen = vec![u64::MAX; cfg.n_buffers * n_chunks];
     let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_mul(0x9E37_79B9).wrapping_add(rank as u64));
     let mut recipients = Vec::with_capacity(cfg.fanout);
     let mut trace = Vec::new();
@@ -95,30 +113,59 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
     for t in 0..cfg.iters as u64 {
         // ---- receive path: wait-free snapshot of the external buffers --
         if communicate {
+            let rx = stats.rank(rank);
             for slot in 0..cfg.n_buffers {
-                let buf = &mut exts[slot * state_len..(slot + 1) * state_len];
-                let (outcome, _sender, _iter, version) =
-                    my_segment.read_slot_into(slot, slot_versions[slot], buf);
-                slot_versions[slot] = version;
-                match outcome {
-                    ReadOutcome::Fresh => {
-                        stats.rank(rank).received.add(1);
-                    }
-                    ReadOutcome::Torn => {
-                        stats.rank(rank).torn.add(1);
-                        match cfg.race {
-                            RacePolicy::DiscardTorn => buf.fill(0.0),
-                            RacePolicy::AcceptTorn => {
-                                // Hogwild-style: use the mixed snapshot;
-                                // count it as received too.
-                                stats.rank(rank).received.add(1);
+                let ext = &mut exts[slot * state_len..(slot + 1) * state_len];
+                let mut any_fresh = false;
+                let mut any_torn = false;
+                for c in 0..n_chunks {
+                    let idx = slot * n_chunks + c;
+                    let buf = &mut ext[layout.bounds(c)];
+                    let (outcome, _sender, _iter, version) =
+                        my_segment.read_block_into(slot, c, block_versions[idx], buf);
+                    block_versions[idx] = version;
+                    match outcome {
+                        ReadOutcome::Fresh => {
+                            any_fresh = true;
+                            torn_seen[idx] = u64::MAX;
+                            if chunked {
+                                rx.chunk_received.add(1);
                             }
                         }
+                        ReadOutcome::Torn => {
+                            let repeat = torn_seen[idx] == version;
+                            torn_seen[idx] = version;
+                            if repeat {
+                                // same torn snapshot as last poll: already
+                                // counted (and, under AcceptTorn, already
+                                // merged) — treat as nothing new
+                                buf.fill(0.0);
+                            } else {
+                                any_torn = true;
+                                if chunked {
+                                    rx.chunk_torn.add(1);
+                                }
+                                if cfg.race == RacePolicy::DiscardTorn {
+                                    buf.fill(0.0);
+                                }
+                                // AcceptTorn: Hogwild-style, keep the mix
+                            }
+                        }
+                        ReadOutcome::Stale => buf.fill(0.0),
                     }
-                    ReadOutcome::Stale => {
-                        stats.rank(rank).stale_polls.add(1);
-                        buf.fill(0.0);
+                }
+                // message-level accounting (fig. 12 semantics)
+                if any_fresh {
+                    rx.received.add(1);
+                }
+                if any_torn {
+                    rx.torn.add(1);
+                    if cfg.race == RacePolicy::AcceptTorn && !any_fresh {
+                        rx.received.add(1);
                     }
+                }
+                if !any_fresh && !any_torn {
+                    rx.stale_polls.add(1);
                 }
             }
         } else if t == 0 {
@@ -134,11 +181,32 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         global_samples.fetch_add(cfg.minibatch as u64, Ordering::Relaxed);
 
         // ---- send path: one-sided puts to random recipients ------------
-        if communicate && t % cfg.send_interval as u64 == 0 {
+        // Fires once a full send interval of *completed* steps has
+        // elapsed.  Regression (PR 1): `t % send_interval == 0` fired at
+        // t = 0, so with interval k every worker broadcast after a single
+        // step (and all workers did so simultaneously right after the
+        // start barrier) — wasted puts that skewed `comm.sent` and
+        // clobbered real payloads.  validate() guarantees
+        // `send_interval >= 1`, so the modulus cannot be zero.
+        if communicate && (t + 1) % cfg.send_interval as u64 == 0 {
             rng.sample_recipients(world.ranks(), rank, cfg.fanout, &mut recipients);
-            for &to in &recipients {
-                let slot = rng.index(cfg.n_buffers);
-                world.put_state(rank, to, t, &w, slot);
+            if !recipients.is_empty() {
+                if chunked {
+                    // arXiv:1510.01155 load balancing: block c of this
+                    // send goes to recipient (c + t) mod fanout, so each
+                    // put carries state_len/chunks words and consecutive
+                    // sends rotate which recipient gets which block.
+                    for c in 0..n_chunks {
+                        let to = recipients[(c + t as usize) % recipients.len()];
+                        let slot = rng.index(cfg.n_buffers);
+                        world.put_chunk(rank, to, t, c, &w[layout.bounds(c)], slot);
+                    }
+                } else {
+                    for &to in &recipients {
+                        let slot = rng.index(cfg.n_buffers);
+                        world.put_state(rank, to, t, &w, slot);
+                    }
+                }
             }
         }
 

@@ -19,6 +19,9 @@ pub struct Shard {
     pub labels: Option<Vec<f32>>,
     /// Cursor state for sequential mini-batch draws with reshuffling.
     cursor: usize,
+    /// Per-shard RNG driving the on-wrap reshuffle (seeded at partition
+    /// time, so runs stay reproducible).
+    rng: Xoshiro256pp,
 }
 
 impl Shard {
@@ -28,11 +31,19 @@ impl Shard {
     }
 
     /// Next mini-batch of `b` rows as a flat slice, walking the shard
-    /// sequentially (the shard is pre-shuffled; a full pass = one local
-    /// epoch, after which the walk wraps).  Returns (x, labels).
+    /// sequentially (a full pass = one local epoch).  When fewer than `b`
+    /// rows remain the shard is *reshuffled* and the walk restarts.
+    ///
+    /// Regression (PR 1): the wrap used to reset the cursor without
+    /// reshuffling, so every epoch replayed the identical batch sequence
+    /// — and because the wrap fired at `cursor + b > n`, the trailing
+    /// `n mod b` rows were never served at all.  Reshuffling on wrap
+    /// restores the documented draw semantics and rotates the orphaned
+    /// tail back into play.
     pub fn next_batch(&mut self, b: usize) -> (&[f32], Option<&[f32]>) {
         assert!(b <= self.n, "minibatch {b} > shard size {}", self.n);
         if self.cursor + b > self.n {
+            self.reshuffle();
             self.cursor = 0;
         }
         let start = self.cursor;
@@ -40,6 +51,23 @@ impl Shard {
         let x = &self.x[start * self.dim..(start + b) * self.dim];
         let labels = self.labels.as_ref().map(|l| &l[start..start + b]);
         (x, labels)
+    }
+
+    /// In-place Fisher–Yates over whole rows (labels travel with their
+    /// rows).  Allocation-free; runs once per local epoch.
+    fn reshuffle(&mut self) {
+        let d = self.dim;
+        for i in (1..self.n).rev() {
+            let j = self.rng.index(i + 1);
+            if i != j {
+                for t in 0..d {
+                    self.x.swap(i * d + t, j * d + t);
+                }
+                if let Some(labels) = self.labels.as_mut() {
+                    labels.swap(i, j);
+                }
+            }
+        }
     }
 }
 
@@ -74,6 +102,10 @@ pub fn partition(ds: &Dataset, workers: usize, seed: u64) -> Vec<Shard> {
             x,
             labels,
             cursor: 0,
+            rng: Xoshiro256pp::seed_from_u64(
+                seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .wrapping_add(0x5348_5244 + w as u64),
+            ),
         });
     }
     shards
@@ -112,16 +144,61 @@ mod tests {
         assert_ne!(a[0].x, b[0].x, "different seeds must partition differently");
     }
 
+    fn row_keys(s: &Shard) -> HashSet<Vec<u32>> {
+        (0..s.n)
+            .map(|i| s.rows(i, 1).iter().map(|f| f.to_bits()).collect())
+            .collect()
+    }
+
     #[test]
-    fn next_batch_walks_and_wraps() {
+    fn next_batch_walks_sequentially_until_wrap() {
         let ds = synthetic::generate(100, 2, 2, 1.0, 5.0, 1);
         let mut shards = partition(&ds, 1, 3);
         let s = &mut shards[0];
+        let before = s.x.clone();
+        // pre-wrap draws walk the shard in order, untouched
         let first: Vec<f32> = s.next_batch(40).0.to_vec();
-        let _second = s.next_batch(40).0.to_vec();
-        // third draw would need rows 80..120 -> wraps to 0
+        let second: Vec<f32> = s.next_batch(40).0.to_vec();
+        assert_eq!(first, before[..80].to_vec(), "pre-wrap draw must be in order");
+        assert_eq!(second, before[80..160].to_vec());
+    }
+
+    /// Regression (PR 1): the wrap used to reset the cursor without
+    /// reshuffling (`third == first` forever) and permanently orphaned
+    /// the `n mod b` tail rows (rows 80..99 here were never served).
+    #[test]
+    fn wrap_reshuffles_and_recovers_the_orphaned_tail() {
+        let ds = synthetic::generate(100, 2, 2, 1.0, 5.0, 1);
+        let mut shards = partition(&ds, 1, 3);
+        let s = &mut shards[0];
+        let all_rows = row_keys(s);
+        assert_eq!(all_rows.len(), 100);
+
+        let first: Vec<f32> = s.next_batch(40).0.to_vec();
+        let _ = s.next_batch(40);
+        // third draw wraps -> must be reshuffled, not a replay of `first`
         let third: Vec<f32> = s.next_batch(40).0.to_vec();
-        assert_eq!(third, first, "wrap must restart at the beginning");
+        assert_ne!(third, first, "wrap must reshuffle, not replay the epoch");
+
+        // keep drawing: with reshuffling the old forever-orphaned tail
+        // rows rotate into batches (the buggy walk served exactly the
+        // first 80 rows over and over).
+        let mut served: HashSet<Vec<u32>> = HashSet::new();
+        for _ in 0..60 {
+            let (x, _) = s.next_batch(40);
+            for row in x.chunks(2) {
+                served.insert(row.iter().map(|f| f.to_bits()).collect());
+            }
+        }
+        assert!(
+            served.len() > 80,
+            "only {} distinct rows served — tail still orphaned",
+            served.len()
+        );
+        // every served row is a real shard row, and the shard still holds
+        // exactly the original multiset (reshuffle = permutation)
+        assert!(served.is_subset(&all_rows));
+        assert_eq!(row_keys(s), all_rows);
     }
 
     #[test]
@@ -134,6 +211,27 @@ mod tests {
         for i in 0..10 {
             let pred: f32 = x[i * 4..(i + 1) * 4].iter().zip(&w).map(|(a, b)| a * b).sum();
             assert!((pred - y[i]).abs() < 1e-4, "label desynced from row");
+        }
+    }
+
+    /// Labels must stay glued to their rows across wrap reshuffles.
+    #[test]
+    fn labels_stay_synced_across_reshuffles() {
+        let ds = synthetic::generate_linear(120, 4, 0.0, 8);
+        let w = ds.truth.clone().unwrap();
+        let mut shards = partition(&ds, 3, 4);
+        let s = &mut shards[1]; // 40 rows; batches of 9 wrap every 5th draw
+        for draw in 0..25 {
+            let (x, y) = s.next_batch(9);
+            let y = y.unwrap();
+            for i in 0..9 {
+                let pred: f32 =
+                    x[i * 4..(i + 1) * 4].iter().zip(&w).map(|(a, b)| a * b).sum();
+                assert!(
+                    (pred - y[i]).abs() < 1e-4,
+                    "draw {draw}: label desynced from row after reshuffle"
+                );
+            }
         }
     }
 

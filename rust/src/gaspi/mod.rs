@@ -28,7 +28,7 @@ pub mod segment;
 pub mod stats;
 pub mod topology;
 
-pub use segment::{ReadOutcome, Segment, SlotSnapshot};
+pub use segment::{ChunkLayout, ReadOutcome, Segment, SlotSnapshot};
 pub use stats::{CommStats, WorldStats};
 pub use topology::Topology;
 
@@ -43,11 +43,23 @@ pub struct World {
 
 impl World {
     /// Build a world of `ranks` ranks, each with `n_slots` external-buffer
-    /// slots of `state_len` f32 words.
+    /// slots of `state_len` f32 words (one block per slot).
     pub fn new(ranks: usize, n_slots: usize, state_len: usize, topology: Topology) -> Self {
+        Self::new_chunked(ranks, n_slots, state_len, 1, topology)
+    }
+
+    /// Build a world whose slots are split into `chunks` independently
+    /// versioned blocks (arXiv:1510.01155 communication-load balancing).
+    pub fn new_chunked(
+        ranks: usize,
+        n_slots: usize,
+        state_len: usize,
+        chunks: usize,
+        topology: Topology,
+    ) -> Self {
         let stats = Arc::new(WorldStats::new(ranks));
         let segments = (0..ranks)
-            .map(|r| Arc::new(Segment::new(r, n_slots, state_len)))
+            .map(|r| Arc::new(Segment::new_chunked(r, n_slots, state_len, chunks)))
             .collect();
         Self {
             segments,
@@ -60,17 +72,49 @@ impl World {
         self.segments.len()
     }
 
+    /// Block layout shared by every segment in this world.
+    pub fn layout(&self) -> ChunkLayout {
+        self.segments[0].layout()
+    }
+
     /// One-sided put of `payload` into a random slot of rank `to`
     /// (fig. 2 step I: "sends the resulting state to a few random
-    /// recipients").  `slot_die` supplies the slot randomness so the
+    /// recipients").  The `slot` index supplies the slot randomness so the
     /// caller's RNG stays in control of determinism.
     pub fn put_state(&self, from: usize, to: usize, iter: u64, payload: &[f32], slot: usize) {
         debug_assert_ne!(from, to, "alg. 5 line 9: recipient != self");
         let seg = &self.segments[to];
         let lost = seg.write_remote(slot, from as u32, iter, payload);
-        self.stats.rank(from).sent.add(1);
+        let tx = self.stats.rank(from);
+        tx.sent.add(1);
+        tx.bytes_sent.add(4 * payload.len() as u64);
         if lost {
             self.stats.rank(to).overwritten.add(1);
+        }
+    }
+
+    /// One-sided put of a single state block into slot `slot`, block
+    /// `block` of rank `to` — the chunked-communication primitive:
+    /// per-put bytes shrink by the chunk count while the seqlock window
+    /// (and with it the torn-read probability) shrinks alongside.
+    pub fn put_chunk(
+        &self,
+        from: usize,
+        to: usize,
+        iter: u64,
+        block: usize,
+        payload: &[f32],
+        slot: usize,
+    ) {
+        debug_assert_ne!(from, to, "alg. 5 line 9: recipient != self");
+        let seg = &self.segments[to];
+        let lost = seg.write_block(slot, block, from as u32, iter, payload);
+        let tx = self.stats.rank(from);
+        tx.sent.add(1);
+        tx.chunk_sent.add(1);
+        tx.bytes_sent.add(4 * payload.len() as u64);
+        if lost {
+            self.stats.rank(to).chunk_lost.add(1);
         }
     }
 }
@@ -85,10 +129,55 @@ mod tests {
         let payload = vec![1.0f32; 8];
         w.put_state(0, 1, 7, &payload, 0);
         assert_eq!(w.stats.rank(0).sent.get(), 1);
+        assert_eq!(w.stats.rank(0).bytes_sent.get(), 32);
         let snap = w.segments[1].read_slot(0, 0);
         match snap.outcome {
             ReadOutcome::Fresh => assert_eq!(snap.data, payload),
             other => panic!("expected fresh read, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn chunked_world_puts_blocks_independently() {
+        let w = World::new_chunked(3, 2, 10, 4, Topology::flat(3));
+        let l = w.layout();
+        assert_eq!(l.n_chunks(), 4);
+        // rank 0 sends block 1, rank 2 sends block 3 — both into rank 1
+        let b1: Vec<f32> = vec![0.5; l.chunk_len(1)];
+        let b3: Vec<f32> = vec![2.5; l.chunk_len(3)];
+        w.put_chunk(0, 1, 9, 1, &b1, 0);
+        w.put_chunk(2, 1, 4, 3, &b3, 0);
+        assert_eq!(w.stats.rank(0).chunk_sent.get(), 1);
+        assert_eq!(w.stats.rank(2).chunk_sent.get(), 1);
+        assert_eq!(w.stats.total().sent, 2);
+        assert_eq!(
+            w.stats.total().bytes_sent,
+            4 * (l.chunk_len(1) + l.chunk_len(3)) as u64
+        );
+
+        let seg = &w.segments[1];
+        let mut buf = vec![0.0f32; l.chunk_len(1)];
+        let (out, sender, iter, _) = seg.read_block_into(0, 1, 0, &mut buf);
+        assert_eq!(out, ReadOutcome::Fresh);
+        assert_eq!((sender, iter), (0, 9));
+        assert_eq!(buf, b1);
+        let mut buf = vec![0.0f32; l.chunk_len(3)];
+        let (out, sender, _, _) = seg.read_block_into(0, 3, 0, &mut buf);
+        assert_eq!(out, ReadOutcome::Fresh);
+        assert_eq!(sender, 2);
+        // untouched blocks stay stale
+        let mut buf = vec![0.0f32; l.chunk_len(0)];
+        assert_eq!(seg.read_block_into(0, 0, 0, &mut buf).0, ReadOutcome::Stale);
+    }
+
+    #[test]
+    fn chunk_clobber_counts_lost() {
+        let w = World::new_chunked(2, 1, 8, 2, Topology::flat(2));
+        let l = w.layout();
+        let p = vec![1.0f32; l.chunk_len(0)];
+        w.put_chunk(0, 1, 1, 0, &p, 0);
+        // unread -> second put into the same block is a lost block
+        w.put_chunk(0, 1, 2, 0, &p, 0);
+        assert_eq!(w.stats.rank(1).chunk_lost.get(), 1);
     }
 }

@@ -1,16 +1,70 @@
 //! Versioned-slot segments: the wait-free one-sided write/read primitive.
 //!
-//! Each slot is a seqlock: a version word that is odd while a writer is
-//! inside and incremented to a fresh even value on completion.  Payload
-//! words are `AtomicU32` (f32 bit patterns) accessed with `Relaxed`
-//! ordering — racing accesses are *the modelled behaviour*, not a bug, and
-//! atomics make them defined in Rust while preserving the possibility of
-//! observing mixed (torn) payloads, exactly like concurrent RDMA puts into
-//! the same remote buffer (§4.4, fig. 2 III).
+//! Each slot holds one or more contiguous *blocks* (arXiv:1510.01155's
+//! communication-load balancing: the state vector is split into chunks
+//! that travel independently).  Every block is a seqlock: a version word
+//! that is odd while a writer is inside and incremented to a fresh even
+//! value on completion.  Payload words are `AtomicU32` (f32 bit patterns)
+//! accessed with `Relaxed` ordering — racing accesses are *the modelled
+//! behaviour*, not a bug, and atomics make them defined in Rust while
+//! preserving the possibility of observing mixed (torn) payloads, exactly
+//! like concurrent RDMA puts into the same remote buffer (§4.4, fig. 2
+//! III).  With `chunks = 1` (the default) a slot is exactly the original
+//! full-state seqlock.
 
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
-/// Outcome of a slot read.
+/// How a `state_len`-word state vector is split into contiguous blocks.
+///
+/// The split is as even as possible: the first `state_len % chunks`
+/// blocks get one extra word.  The layout is shared by senders, segments
+/// and the per-block Parzen gate, so block boundaries always agree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkLayout {
+    pub state_len: usize,
+    pub chunks: usize,
+}
+
+impl ChunkLayout {
+    /// A layout with `chunks` blocks.  Refuses (asserts) a chunk count
+    /// outside `[1, state_len]` — the same policy `TrainConfig::validate`
+    /// applies at the config level, so training runs never hit this.
+    pub fn new(state_len: usize, chunks: usize) -> Self {
+        assert!(state_len >= 1);
+        assert!(
+            (1..=state_len).contains(&chunks),
+            "chunks = {chunks} outside [1, {state_len}] (one f32 word per block minimum)"
+        );
+        Self { state_len, chunks }
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.chunks
+    }
+
+    /// Word range of block `c`.
+    pub fn bounds(&self, c: usize) -> std::ops::Range<usize> {
+        debug_assert!(c < self.chunks);
+        let base = self.state_len / self.chunks;
+        let rem = self.state_len % self.chunks;
+        let start = c * base + c.min(rem);
+        let end = start + base + usize::from(c < rem);
+        start..end
+    }
+
+    /// Length of block `c` in words.
+    pub fn chunk_len(&self, c: usize) -> usize {
+        self.bounds(c).len()
+    }
+
+    /// Iterate over all block ranges, in order.
+    pub fn iter_bounds(&self) -> impl Iterator<Item = std::ops::Range<usize>> {
+        let me = *self;
+        (0..me.chunks).map(move |c| me.bounds(c))
+    }
+}
+
+/// Outcome of a slot (or block) read.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReadOutcome {
     /// Complete payload with a version newer than the reader's last visit.
@@ -29,51 +83,93 @@ pub struct SlotSnapshot {
     pub sender: u32,
     /// Sender-side iteration number of the payload.
     pub iter: u64,
-    /// Seqlock version at snapshot begin — pass back as `last_version`.
+    /// Seqlock version to pass back as `last_version` on the next visit.
     pub version: u64,
     /// Payload copy (valid even for `Torn`; may then be a mix).
     pub data: Vec<f32>,
 }
 
-struct Slot {
+/// Per-block seqlock metadata.
+struct Block {
     version: AtomicU64,
+    /// Writers currently inside this block.  Two concurrent writers each
+    /// bump `version` on entry, which can make it *even* again while both
+    /// are still storing — a plain seqlock parity check would then flag a
+    /// mixed payload `Fresh`.  The counter closes that hole without
+    /// blocking: readers treat `active > 0` as mid-write.
+    active: AtomicU64,
+    /// Version at which the block last settled from a *provably sole*
+    /// writer (one whose seqlock window contained no other bump).  A
+    /// payload is only `Fresh` when the observed version equals this
+    /// mark: overlapped writers can fully exit and leave a settled,
+    /// sender-mixed payload that no read-window check can detect, and
+    /// such a settle never records a clean mark.  Stale marks from
+    /// delayed stores are harmless — they can only mismatch the current
+    /// version and force a conservative `Torn`.
+    clean: AtomicU64,
     sender: AtomicU32,
     iter: AtomicU64,
-    /// Completed writes into this slot (lost-message accounting).
+    /// Completed writes into this block (lost-message accounting).
     writes: AtomicU64,
     /// Value of `writes` when the current payload was last consumed.
     consumed: AtomicU64,
-    data: Vec<AtomicU32>,
 }
 
-impl Slot {
-    fn new(state_len: usize) -> Self {
+impl Block {
+    fn new() -> Self {
         Self {
             version: AtomicU64::new(0),
+            active: AtomicU64::new(0),
+            clean: AtomicU64::new(0),
             sender: AtomicU32::new(u32::MAX),
             iter: AtomicU64::new(0),
             writes: AtomicU64::new(0),
             consumed: AtomicU64::new(0),
+        }
+    }
+}
+
+struct Slot {
+    blocks: Vec<Block>,
+    data: Vec<AtomicU32>,
+}
+
+impl Slot {
+    fn new(state_len: usize, chunks: usize) -> Self {
+        Self {
+            blocks: (0..chunks).map(|_| Block::new()).collect(),
             data: (0..state_len).map(|_| AtomicU32::new(0)).collect(),
         }
     }
 }
 
 /// A rank's registered memory segment: `n_slots` external buffers of
-/// `state_len` f32 words each (fig. 2: the per-thread "external buffer").
+/// `state_len` f32 words each (fig. 2: the per-thread "external buffer"),
+/// each split into `layout.chunks` independently versioned blocks.
 pub struct Segment {
     pub rank: usize,
     pub state_len: usize,
+    layout: ChunkLayout,
     slots: Vec<Slot>,
 }
 
 impl Segment {
+    /// Full-state slots (one block per slot) — the original substrate.
     pub fn new(rank: usize, n_slots: usize, state_len: usize) -> Self {
+        Self::new_chunked(rank, n_slots, state_len, 1)
+    }
+
+    /// Slots split into `chunks` independently versioned blocks.
+    pub fn new_chunked(rank: usize, n_slots: usize, state_len: usize, chunks: usize) -> Self {
         assert!(n_slots >= 1 && state_len >= 1);
+        let layout = ChunkLayout::new(state_len, chunks);
         Self {
             rank,
             state_len,
-            slots: (0..n_slots).map(|_| Slot::new(state_len)).collect(),
+            layout,
+            slots: (0..n_slots)
+                .map(|_| Slot::new(state_len, layout.n_chunks()))
+                .collect(),
         }
     }
 
@@ -81,40 +177,165 @@ impl Segment {
         self.slots.len()
     }
 
-    /// Wait-free one-sided put.  Returns `true` if this write clobbered a
-    /// previous payload that no reader had consumed yet (a "lost message"
-    /// in §4.4 terms — harmless, "communication is de-facto optional").
+    pub fn layout(&self) -> ChunkLayout {
+        self.layout
+    }
+
+    /// The `last_version` to report for a torn snapshot that observed
+    /// versions `v1` (begin) and `v2` (end).
     ///
-    /// Two concurrent writers may interleave; both bump the seqlock, so a
-    /// concurrent reader observes `Torn`, and the final payload may mix
-    /// both states — the exact data race of fig. 2 III.
-    pub fn write_remote(&self, slot: usize, sender: u32, iter: u64, payload: &[f32]) -> bool {
-        debug_assert_eq!(payload.len(), self.state_len);
-        let s = &self.slots[slot];
-        let writes_before = s.writes.load(Ordering::Relaxed);
-        let consumed = s.consumed.load(Ordering::Relaxed);
-        // enter: version becomes odd
-        s.version.fetch_add(1, Ordering::AcqRel);
-        s.sender.store(sender, Ordering::Relaxed);
-        s.iter.store(iter, Ordering::Relaxed);
-        for (dst, &src) in s.data.iter().zip(payload) {
+    /// Regression (PR 1): returning `v1.max(v2)` silently skipped a
+    /// *complete* write that landed between the two loads (`v1` even,
+    /// `v2 = v1 + 2`): the reader advanced past the new even version and
+    /// the fully-written payload was never delivered nor counted lost.
+    /// `max - 1` can never equal a later settled version (versions are
+    /// monotone, and a settled version is even while `max - 1` is odd
+    /// whenever `max` is even), so the next visit always re-polls and the
+    /// completed payload is re-read as `Fresh`.
+    fn torn_version(v1: u64, v2: u64) -> u64 {
+        v1.max(v2).saturating_sub(1)
+    }
+
+    fn write_block_inner(
+        block: &Block,
+        data: &[AtomicU32],
+        sender: u32,
+        iter: u64,
+        payload: &[f32],
+    ) -> bool {
+        debug_assert_eq!(payload.len(), data.len());
+        let writes_before = block.writes.load(Ordering::Relaxed);
+        let consumed = block.consumed.load(Ordering::Relaxed);
+        // enter: mark a writer inside, version becomes odd (wait-free —
+        // concurrent writers proceed and interleave; readers detect them
+        // through `active` even when two entries make the version even)
+        block.active.fetch_add(1, Ordering::AcqRel);
+        let v_in = block.version.fetch_add(1, Ordering::AcqRel) + 1;
+        block.sender.store(sender, Ordering::Relaxed);
+        block.iter.store(iter, Ordering::Relaxed);
+        for (dst, &src) in data.iter().zip(payload) {
             dst.store(src.to_bits(), Ordering::Relaxed);
         }
-        // leave: version even again
-        s.version.fetch_add(1, Ordering::AcqRel);
-        s.writes.fetch_add(1, Ordering::Relaxed);
+        // leave: version even again once every writer has left
+        let v_out = block.version.fetch_add(1, Ordering::AcqRel) + 1;
+        let remaining = block.active.fetch_sub(1, Ordering::AcqRel) - 1;
+        if remaining == 0 && v_out == v_in + 1 {
+            // sole writer for the whole window (any other writer's entry
+            // or exit would have bumped the version in between, and
+            // anyone still inside shows up in `remaining`): the settled
+            // payload is purely ours — record the clean mark readers
+            // require for `Fresh`.  fetch_max, not store: a delayed mark
+            // from an earlier sole writer must never regress a newer one
+            // (clean marks are sole-settle versions, so the max is always
+            // the newest clean settle).
+            block.clean.fetch_max(v_out, Ordering::AcqRel);
+        }
+        block.writes.fetch_add(1, Ordering::Relaxed);
         // lost-message accounting (approximate under races, stats only):
         // the previous payload was never consumed.
         writes_before > consumed
     }
 
-    /// Snapshot a slot.  `last_version` is the version this reader saw on
-    /// its previous visit (0 for never); pass the snapshot's `version`
-    /// back in next time.  Never blocks: a racing writer yields `Torn`.
-    pub fn read_slot(&self, slot: usize, last_version: u64) -> SlotSnapshot {
+    /// Wait-free one-sided put of the whole state vector.  Returns `true`
+    /// if this write clobbered a previous payload that no reader had
+    /// consumed yet (a "lost message" in §4.4 terms — harmless,
+    /// "communication is de-facto optional").
+    ///
+    /// Two concurrent writers may interleave; both bump the seqlocks, so a
+    /// concurrent reader observes `Torn`, and the final payload may mix
+    /// both states — the exact data race of fig. 2 III.  On a chunked
+    /// segment this is `chunks` consecutive block puts.
+    pub fn write_remote(&self, slot: usize, sender: u32, iter: u64, payload: &[f32]) -> bool {
+        debug_assert_eq!(payload.len(), self.state_len);
         let s = &self.slots[slot];
-        let v1 = s.version.load(Ordering::Acquire);
+        let mut lost = false;
+        for (c, range) in self.layout.iter_bounds().enumerate() {
+            let data = &s.data[range.clone()];
+            lost |= Self::write_block_inner(&s.blocks[c], data, sender, iter, &payload[range]);
+        }
+        lost
+    }
+
+    /// Wait-free one-sided put of a single block (`payload` must have the
+    /// block's length).  Returns `true` if an unconsumed payload in this
+    /// block was clobbered.
+    pub fn write_block(
+        &self,
+        slot: usize,
+        block: usize,
+        sender: u32,
+        iter: u64,
+        payload: &[f32],
+    ) -> bool {
+        let range = self.layout.bounds(block);
+        debug_assert_eq!(payload.len(), range.len());
+        let s = &self.slots[slot];
+        Self::write_block_inner(&s.blocks[block], &s.data[range], sender, iter, payload)
+    }
+
+    /// Snapshot one block of a slot into `buf` (which must have the
+    /// block's length).  `last_version` is the block version this reader
+    /// saw on its previous visit (0 for never); pass the returned version
+    /// back in next time.  Never blocks: a racing writer yields `Torn`.
+    pub fn read_block_into(
+        &self,
+        slot: usize,
+        block: usize,
+        last_version: u64,
+        buf: &mut [f32],
+    ) -> (ReadOutcome, u32, u64, u64) {
+        let range = self.layout.bounds(block);
+        debug_assert_eq!(buf.len(), range.len());
+        let s = &self.slots[slot];
+        let b = &s.blocks[block];
+        let v1 = b.version.load(Ordering::Acquire);
         if v1 == 0 || v1 == last_version {
+            // versions only move forward, so v1 == last_version means no
+            // writer has entered since the snapshot that reported it
+            return (ReadOutcome::Stale, u32::MAX, 0, last_version);
+        }
+        // Load `active` *after* v1: acquiring v1 synchronizes with the
+        // release chain of every writer entry v1 counts, so their
+        // `active += 1` is visible here.  Every writer overlapping the
+        // *read window* is then caught: still inside at this load ->
+        // active != 0; entered before v1 and exited -> its exit bump
+        // makes v2 != v1; entered after v1 -> its entry bump makes
+        // v2 != v1.  (Two overlapped entries can leave the version
+        // *even*, which is why parity alone is not enough; writers that
+        // overlapped *each other* before the window are caught by the
+        // clean-mark check below.)
+        let active = b.active.load(Ordering::Acquire);
+        for (dst, w) in buf.iter_mut().zip(&s.data[range]) {
+            *dst = f32::from_bits(w.load(Ordering::Relaxed));
+        }
+        let sender = b.sender.load(Ordering::Relaxed);
+        let iter = b.iter.load(Ordering::Relaxed);
+        let v2 = b.version.load(Ordering::Acquire);
+        // `Fresh` additionally requires the payload to be a *clean*
+        // settle (`clean == v1`): overlapped writers can fully exit and
+        // leave a settled, mixed payload, which only the absence of a
+        // clean mark reveals.  A clean mark that merely hasn't landed
+        // yet costs one conservative Torn and a re-poll, never a loss.
+        let clean = b.clean.load(Ordering::Acquire);
+        if v1 % 2 == 1 || v1 != v2 || active != 0 || clean != v1 {
+            (ReadOutcome::Torn, sender, iter, Self::torn_version(v1, v2))
+        } else {
+            b.consumed.store(b.writes.load(Ordering::Relaxed), Ordering::Relaxed);
+            (ReadOutcome::Fresh, sender, iter, v1)
+        }
+    }
+
+    /// Snapshot a whole slot.  Only meaningful on single-block segments
+    /// (`chunks = 1`), where one version word covers the whole payload.
+    pub fn read_slot(&self, slot: usize, last_version: u64) -> SlotSnapshot {
+        assert_eq!(
+            self.layout.n_chunks(),
+            1,
+            "read_slot needs a single-block segment; use read_block_into"
+        );
+        // allocation-free fast path for the common Stale poll
+        let v = self.slots[slot].blocks[0].version.load(Ordering::Acquire);
+        if v == 0 || v == last_version {
             return SlotSnapshot {
                 outcome: ReadOutcome::Stale,
                 sender: u32::MAX,
@@ -123,68 +344,51 @@ impl Segment {
                 data: Vec::new(),
             };
         }
-        let mut data = Vec::with_capacity(self.state_len);
-        for w in &s.data {
-            data.push(f32::from_bits(w.load(Ordering::Relaxed)));
+        let mut data = vec![0.0f32; self.state_len];
+        let (outcome, sender, iter, version) = self.read_block_into(slot, 0, last_version, &mut data);
+        if outcome == ReadOutcome::Stale {
+            data.clear();
         }
-        let sender = s.sender.load(Ordering::Relaxed);
-        let iter = s.iter.load(Ordering::Relaxed);
-        let v2 = s.version.load(Ordering::Acquire);
-        let outcome = if v1 % 2 == 1 || v1 != v2 {
-            ReadOutcome::Torn
-        } else {
-            s.consumed.store(s.writes.load(Ordering::Relaxed), Ordering::Relaxed);
-            ReadOutcome::Fresh
-        };
         SlotSnapshot {
             outcome,
             sender,
             iter,
-            // remember v2: if the write completed between v1/v2 we'll
-            // re-read the same payload next visit otherwise
-            version: v1.max(v2),
+            version,
             data,
         }
     }
 
     /// Snapshot a slot *into a caller-provided buffer* (allocation-free
     /// hot-path variant).  Returns the outcome + metadata; `buf` must be
-    /// `state_len` long and is only meaningful for `Fresh`/`Torn`.
+    /// `state_len` long and is only meaningful for `Fresh`/`Torn`.  Only
+    /// meaningful on single-block segments (`chunks = 1`).
     pub fn read_slot_into(
         &self,
         slot: usize,
         last_version: u64,
         buf: &mut [f32],
     ) -> (ReadOutcome, u32, u64, u64) {
-        debug_assert_eq!(buf.len(), self.state_len);
-        let s = &self.slots[slot];
-        let v1 = s.version.load(Ordering::Acquire);
-        if v1 == 0 || v1 == last_version {
-            return (ReadOutcome::Stale, u32::MAX, 0, last_version);
-        }
-        for (dst, w) in buf.iter_mut().zip(&s.data) {
-            *dst = f32::from_bits(w.load(Ordering::Relaxed));
-        }
-        let sender = s.sender.load(Ordering::Relaxed);
-        let iter = s.iter.load(Ordering::Relaxed);
-        let v2 = s.version.load(Ordering::Acquire);
-        let outcome = if v1 % 2 == 1 || v1 != v2 {
-            ReadOutcome::Torn
-        } else {
-            s.consumed.store(s.writes.load(Ordering::Relaxed), Ordering::Relaxed);
-            ReadOutcome::Fresh
-        };
-        (outcome, sender, iter, v1.max(v2))
+        assert_eq!(
+            self.layout.n_chunks(),
+            1,
+            "read_slot_into needs a single-block segment; use read_block_into"
+        );
+        self.read_block_into(slot, 0, last_version, buf)
     }
 
-    /// Version of a slot right now (for the reader's bookkeeping).
+    /// Version of a slot's block 0 right now (reader bookkeeping).
     pub fn slot_version(&self, slot: usize) -> u64 {
-        self.slots[slot].version.load(Ordering::Acquire)
+        self.slots[slot].blocks[0].version.load(Ordering::Acquire)
     }
 
-    /// Total completed writes into a slot.
+    /// Total completed block writes into a slot (a full-state put on a
+    /// `chunks`-block segment counts `chunks` times).
     pub fn slot_writes(&self, slot: usize) -> u64 {
-        self.slots[slot].writes.load(Ordering::Relaxed)
+        self.slots[slot]
+            .blocks
+            .iter()
+            .map(|b| b.writes.load(Ordering::Relaxed))
+            .sum()
     }
 }
 
@@ -192,6 +396,32 @@ impl Segment {
 mod tests {
     use super::*;
     use std::sync::Arc;
+
+    #[test]
+    fn chunk_layout_covers_exactly() {
+        for &(len, chunks) in &[(10usize, 1usize), (10, 3), (7, 7), (128, 5), (30, 16)] {
+            let l = ChunkLayout::new(len, chunks);
+            assert_eq!(l.n_chunks(), chunks);
+            let mut next = 0usize;
+            for (c, r) in l.iter_bounds().enumerate() {
+                assert_eq!(r.start, next, "len={len} chunks={chunks} c={c}");
+                assert!(!r.is_empty());
+                assert_eq!(r.len(), l.chunk_len(c));
+                next = r.end;
+            }
+            assert_eq!(next, len, "len={len} chunks={chunks}");
+            // sizes differ by at most one word
+            let sizes: Vec<usize> = l.iter_bounds().map(|r| r.len()).collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "chunks")]
+    fn chunk_layout_refuses_more_chunks_than_words() {
+        let _ = ChunkLayout::new(4, 9);
+    }
 
     #[test]
     fn fresh_read_after_write() {
@@ -250,6 +480,87 @@ mod tests {
         assert_eq!(buf, [7.0, 8.0, 9.0]);
     }
 
+    /// Regression (PR 1): a snapshot that raced with a *completing* write
+    /// observes `v1` even, `v2 = v1 + 2`.  The old bookkeeping returned
+    /// `v1.max(v2)` as the reader's next `last_version`, so the completed
+    /// payload was treated as already-seen and silently never delivered.
+    /// The returned version must force a re-poll that reads it `Fresh`.
+    #[test]
+    fn torn_version_never_skips_a_completed_write() {
+        let seg = Segment::new(0, 1, 2);
+        seg.write_remote(0, 1, 1, &[1.0, 1.0]); // settles at version 2
+        seg.write_remote(0, 2, 2, &[2.0, 2.0]); // settles at version 4
+
+        // A reader that began its snapshot at v1 = 2 and ended at v2 = 4
+        // saw exactly the race being fixed.  With the old `max(v1, v2)`
+        // bookkeeping the next poll was Stale and [2.0, 2.0] was lost:
+        assert_eq!(seg.read_slot(0, 4).outcome, ReadOutcome::Stale);
+
+        // The fixed bookkeeping re-polls and delivers the payload.
+        let v = Segment::torn_version(2, 4);
+        let snap = seg.read_slot(0, v);
+        assert_eq!(snap.outcome, ReadOutcome::Fresh);
+        assert_eq!(snap.sender, 2);
+        assert_eq!(snap.data, [2.0, 2.0]);
+    }
+
+    #[test]
+    fn torn_version_is_never_a_future_settled_version() {
+        // settled versions are even and monotone; the reported version
+        // must never equal one the slot can settle at after the race.
+        for (v1, v2) in [(2u64, 4u64), (2, 3), (3, 3), (3, 5), (1, 1), (5, 7)] {
+            let v = Segment::torn_version(v1, v2);
+            assert!(v < v1.max(v2), "({v1},{v2}) -> {v}");
+            if v1.max(v2) % 2 == 0 {
+                assert_eq!(v % 2, 1, "({v1},{v2}) -> {v} could be mistaken for settled");
+            }
+        }
+        // first-ever write still in flight: 0 means "never visited"
+        assert_eq!(Segment::torn_version(1, 1), 0);
+    }
+
+    #[test]
+    fn chunked_block_roundtrip() {
+        let seg = Segment::new_chunked(0, 1, 10, 3); // blocks: 4+3+3
+        let l = seg.layout();
+        assert_eq!(l.n_chunks(), 3);
+        for c in 0..3 {
+            let payload: Vec<f32> = (0..l.chunk_len(c)).map(|i| (c * 10 + i) as f32).collect();
+            assert!(!seg.write_block(0, c, c as u32, 7, &payload));
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            let (out, sender, iter, ver) = seg.read_block_into(0, c, 0, &mut buf);
+            assert_eq!(out, ReadOutcome::Fresh);
+            assert_eq!((sender, iter, ver), (c as u32, 7, 2));
+            assert_eq!(buf, payload);
+        }
+        // blocks version independently: rewriting block 1 leaves 0 and 2 stale
+        let one = vec![9.0f32; l.chunk_len(1)];
+        seg.write_block(0, 1, 5, 8, &one);
+        let mut buf = vec![0.0f32; l.chunk_len(0)];
+        assert_eq!(seg.read_block_into(0, 0, 2, &mut buf).0, ReadOutcome::Stale);
+        let mut buf = vec![0.0f32; l.chunk_len(1)];
+        let (out, sender, _, _) = seg.read_block_into(0, 1, 2, &mut buf);
+        assert_eq!(out, ReadOutcome::Fresh);
+        assert_eq!(sender, 5);
+    }
+
+    #[test]
+    fn full_put_on_chunked_segment_fills_every_block() {
+        let seg = Segment::new_chunked(0, 1, 8, 4);
+        let payload: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        seg.write_remote(0, 3, 11, &payload);
+        let l = seg.layout();
+        for c in 0..4 {
+            let r = l.bounds(c);
+            let mut buf = vec![0.0f32; r.len()];
+            let (out, sender, iter, _) = seg.read_block_into(0, c, 0, &mut buf);
+            assert_eq!(out, ReadOutcome::Fresh);
+            assert_eq!((sender, iter), (3, 11));
+            assert_eq!(buf, payload[r]);
+        }
+        assert_eq!(seg.slot_writes(0), 4);
+    }
+
     #[test]
     fn concurrent_writers_and_reader_never_deadlock_and_detect_torn() {
         // hammer one slot from two writers while a reader polls; assert
@@ -295,5 +606,53 @@ mod tests {
         let fresh = reader.join().unwrap();
         // sanity: the reader saw *something*
         assert!(fresh > 0 || seg.slot_writes(0) == 2 * iters);
+    }
+
+    /// Chunked puts from multiple writers must never yield a `Fresh` block
+    /// read that mixes two senders' data *within one block* (blocks from
+    /// different senders in one slot are fine — that is the design).
+    #[test]
+    fn concurrent_chunked_writers_fresh_blocks_are_sender_pure() {
+        for &chunks in &[2usize, 4, 8] {
+            let seg = Arc::new(Segment::new_chunked(0, 1, 64, chunks));
+            let iters = 1500u64;
+            let writers: Vec<_> = (1..=2u32)
+                .map(|id| {
+                    let seg = seg.clone();
+                    std::thread::spawn(move || {
+                        let l = seg.layout();
+                        for i in 0..iters {
+                            for c in 0..l.n_chunks() {
+                                let payload = vec![id as f32; l.chunk_len(c)];
+                                seg.write_block(0, c, id, i, &payload);
+                            }
+                        }
+                    })
+                })
+                .collect();
+            let l = seg.layout();
+            let mut versions = vec![0u64; l.n_chunks()];
+            for _ in 0..2000 {
+                for c in 0..l.n_chunks() {
+                    let mut buf = vec![0.0f32; l.chunk_len(c)];
+                    let (out, sender, _, v) = seg.read_block_into(0, c, versions[c], &mut buf);
+                    versions[c] = v;
+                    if out == ReadOutcome::Fresh {
+                        let first = buf[0];
+                        assert!(
+                            buf.iter().all(|&x| x == first),
+                            "chunks={chunks}: sender mix inside one Fresh block"
+                        );
+                        assert_eq!(
+                            first as u32, sender,
+                            "chunks={chunks}: payload does not match reported sender"
+                        );
+                    }
+                }
+            }
+            for w in writers {
+                w.join().unwrap();
+            }
+        }
     }
 }

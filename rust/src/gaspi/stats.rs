@@ -22,8 +22,12 @@ impl Counter {
 /// Counters for one rank.
 #[derive(Default)]
 pub struct CommStats {
-    /// One-sided puts issued by this rank (one per recipient).
+    /// One-sided puts issued by this rank (full-state or per-block; one
+    /// per write operation).
     pub sent: Counter,
+    /// Payload bytes pushed by this rank's puts (per-put size = bytes
+    /// / puts — the arXiv:1510.01155 balancing quantity).
+    pub bytes_sent: Counter,
     /// Complete, fresh external states consumed by this rank.
     pub received: Counter,
     /// Received states accepted by the Parzen window (the "good messages"
@@ -35,28 +39,46 @@ pub struct CommStats {
     pub overwritten: Counter,
     /// Slot polls that found nothing new.
     pub stale_polls: Counter,
+    /// Chunked mode: block puts issued by this rank.
+    pub chunk_sent: Counter,
+    /// Chunked mode: fresh blocks consumed by this rank.
+    pub chunk_received: Counter,
+    /// Chunked mode: torn block snapshots observed by this rank.
+    pub chunk_torn: Counter,
+    /// Chunked mode: unread blocks clobbered in this rank's buffers.
+    pub chunk_lost: Counter,
 }
 
 /// Aggregated view of one rank's counters.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct StatsSnapshot {
     pub sent: u64,
+    pub bytes_sent: u64,
     pub received: u64,
     pub good: u64,
     pub torn: u64,
     pub overwritten: u64,
     pub stale_polls: u64,
+    pub chunk_sent: u64,
+    pub chunk_received: u64,
+    pub chunk_torn: u64,
+    pub chunk_lost: u64,
 }
 
 impl CommStats {
     pub fn snapshot(&self) -> StatsSnapshot {
         StatsSnapshot {
             sent: self.sent.get(),
+            bytes_sent: self.bytes_sent.get(),
             received: self.received.get(),
             good: self.good.get(),
             torn: self.torn.get(),
             overwritten: self.overwritten.get(),
             stale_polls: self.stale_polls.get(),
+            chunk_sent: self.chunk_sent.get(),
+            chunk_received: self.chunk_received.get(),
+            chunk_torn: self.chunk_torn.get(),
+            chunk_lost: self.chunk_lost.get(),
         }
     }
 }
@@ -88,11 +110,16 @@ impl WorldStats {
         for r in &self.ranks {
             let s = r.snapshot();
             t.sent += s.sent;
+            t.bytes_sent += s.bytes_sent;
             t.received += s.received;
             t.good += s.good;
             t.torn += s.torn;
             t.overwritten += s.overwritten;
             t.stale_polls += s.stale_polls;
+            t.chunk_sent += s.chunk_sent;
+            t.chunk_received += s.chunk_received;
+            t.chunk_torn += s.chunk_torn;
+            t.chunk_lost += s.chunk_lost;
         }
         t
     }
@@ -132,5 +159,21 @@ mod tests {
         assert_eq!(snap.received, 3);
         assert_eq!(snap.torn, 1);
         assert_eq!(snap.sent, 0);
+    }
+
+    #[test]
+    fn chunk_counters_aggregate() {
+        let ws = WorldStats::new(2);
+        ws.rank(0).chunk_sent.add(8);
+        ws.rank(0).bytes_sent.add(1024);
+        ws.rank(1).chunk_received.add(5);
+        ws.rank(1).chunk_torn.add(2);
+        ws.rank(1).chunk_lost.add(1);
+        let t = ws.total();
+        assert_eq!(t.chunk_sent, 8);
+        assert_eq!(t.bytes_sent, 1024);
+        assert_eq!(t.chunk_received, 5);
+        assert_eq!(t.chunk_torn, 2);
+        assert_eq!(t.chunk_lost, 1);
     }
 }

@@ -107,9 +107,12 @@ pub fn fig13(outdir: &Path, quick: bool) -> Result<FigureResult> {
     let base = fig8_cfg(quick);
     // high frequency: send every update (1/b = 1/500)
     let hi = run_training(&base)?;
-    // low frequency: one send per 200 updates (~1/100000 per sample)
+    // low frequency: one send per 200 updates (~1/100000 per sample).
+    // Sends fire only after a *full* interval of steps, so quick mode
+    // (120 iters) needs a shorter interval to stay a communicating run
+    // rather than degenerating into a second silent baseline.
     let mut lo_cfg = base.clone();
-    lo_cfg.send_interval = 200;
+    lo_cfg.send_interval = if quick { 40 } else { 200 };
     let lo = run_training(&lo_cfg)?;
     let sgd = run_training(&with_method(&base, Method::AsgdSilent))?;
 

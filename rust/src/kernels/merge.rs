@@ -149,49 +149,64 @@ pub fn asgd_merge_ungated(
     out
 }
 
-/// Per-center variant (§4.4): the gate is evaluated independently per
-/// cluster-center row of `[k, d]`-shaped states.  Matches
-/// `ref.asgd_merge_percenter`.
-pub fn asgd_merge_percenter(
+/// Block-gated merge shared by the per-center and the chunked-comm
+/// variants: the Parzen gate (eq. 4) is evaluated independently on each
+/// contiguous block of the state, and each block is merged with its own
+/// accepted-buffer mean.  With `gated = false` every *active* (non-zero)
+/// block is merged — the eq.-3 lambda mask without the eq.-6 gate.
+fn merge_blocks_impl<I>(
     w: &mut [f32],
     delta: &[f32],
     exts: &[f32],
     eps: f32,
-    k: usize,
-    d: usize,
+    blocks: I,
+    gated: bool,
     scratch_prop: &mut [f32],
-) -> MergeOut {
+) -> MergeOut
+where
+    I: IntoIterator<Item = std::ops::Range<usize>>,
+{
     let len = w.len();
-    debug_assert_eq!(len, k * d);
+    debug_assert_eq!(delta.len(), len);
+    debug_assert_eq!(scratch_prop.len(), len);
     debug_assert_eq!(exts.len() % len, 0);
     let n_buf = exts.len() / len;
+    debug_assert!(n_buf <= 64, "gate mask is a u64");
 
-    for i in 0..len {
-        scratch_prop[i] = w[i] - eps * delta[i];
+    if gated {
+        for i in 0..len {
+            scratch_prop[i] = w[i] - eps * delta[i];
+        }
     }
 
     let mut out = MergeOut::default();
-    let mut buf_contributed = vec![false; n_buf];
+    // per-buffer union masks accumulated in the single block pass: the
+    // blocks partition the state (every caller covers it exactly once),
+    // so the union of per-block activity equals whole-buffer activity —
+    // no second scan of `exts`, no per-call allocation.
+    let mut contributed = 0u64;
+    let mut active_union = 0u64;
 
-    for c in 0..k {
-        let row = c * d..(c + 1) * d;
-        let wr = &w[row.clone()];
-        let pr = &scratch_prop[row.clone()];
-        // gate per buffer on this row
+    for range in blocks {
+        let wr = &w[range.clone()];
+        let pr = &scratch_prop[range.clone()];
+        // gate per buffer on this block
         let mut n_sel = 0usize;
         let mut mask = 0u64;
         for nb in 0..n_buf {
-            let ext = &exts[nb * len + c * d..nb * len + (c + 1) * d];
+            let ext = &exts[nb * len + range.start..nb * len + range.end];
             let active = ext.iter().any(|&e| e != 0.0);
-            if active && parzen_gate(wr, pr, ext) {
+            if active {
+                active_union |= 1 << nb;
+            }
+            if active && (!gated || parzen_gate(wr, pr, ext)) {
                 mask |= 1 << nb;
                 n_sel += 1;
-                buf_contributed[nb] = true;
+                contributed |= 1 << nb;
             }
         }
         let inv = 1.0f32 / (n_sel as f32 + 1.0);
-        for j in 0..d {
-            let i = c * d + j;
+        for i in range {
             let mut sel_sum = 0.0f32;
             let mut bits = mask;
             while bits != 0 {
@@ -204,11 +219,70 @@ pub fn asgd_merge_percenter(
             w[i] -= eps * delta_bar;
         }
     }
-    out.n_good = buf_contributed.iter().filter(|&&b| b).count();
-    out.n_active = (0..n_buf)
-        .filter(|nb| exts[nb * len..(nb + 1) * len].iter().any(|&e| e != 0.0))
-        .count();
+    out.n_good = contributed.count_ones() as usize;
+    out.n_active = active_union.count_ones() as usize;
     out
+}
+
+/// Merge with the Parzen gate evaluated independently per contiguous
+/// block (arXiv:1510.01155 chunked communication: block boundaries are
+/// the transport chunk boundaries, so a buffer holding only some fresh
+/// blocks contributes exactly those blocks).  `n_good` counts buffers
+/// that contributed at least one block.  `blocks` must partition the
+/// state vector (cover every word exactly once), as every caller's
+/// layout does.
+pub fn asgd_merge_blocked<I>(
+    w: &mut [f32],
+    delta: &[f32],
+    exts: &[f32],
+    eps: f32,
+    blocks: I,
+    scratch_prop: &mut [f32],
+) -> MergeOut
+where
+    I: IntoIterator<Item = std::ops::Range<usize>>,
+{
+    merge_blocks_impl(w, delta, exts, eps, blocks, true, scratch_prop)
+}
+
+/// Ungated per-block merge: every active (non-zero) block is accepted —
+/// the gate-off ablation for chunked communication.
+pub fn asgd_merge_blocked_ungated<I>(
+    w: &mut [f32],
+    delta: &[f32],
+    exts: &[f32],
+    eps: f32,
+    blocks: I,
+    scratch_prop: &mut [f32],
+) -> MergeOut
+where
+    I: IntoIterator<Item = std::ops::Range<usize>>,
+{
+    merge_blocks_impl(w, delta, exts, eps, blocks, false, scratch_prop)
+}
+
+/// Per-center variant (§4.4): the gate is evaluated independently per
+/// cluster-center row of `[k, d]`-shaped states — the row blocks are just
+/// the uniform special case of [`asgd_merge_blocked`].  Matches
+/// `ref.asgd_merge_percenter`.
+pub fn asgd_merge_percenter(
+    w: &mut [f32],
+    delta: &[f32],
+    exts: &[f32],
+    eps: f32,
+    k: usize,
+    d: usize,
+    scratch_prop: &mut [f32],
+) -> MergeOut {
+    debug_assert_eq!(w.len(), k * d);
+    asgd_merge_blocked(
+        w,
+        delta,
+        exts,
+        eps,
+        (0..k).map(|c| c * d..(c + 1) * d),
+        scratch_prop,
+    )
 }
 
 #[cfg(test)]
@@ -309,6 +383,103 @@ mod tests {
         asgd_merge_percenter(&mut w_pc, &delta, &exts, eps, k, d, &mut scratch);
         for (a, b) in w_full.iter().zip(&w_pc) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn blocked_with_one_block_equals_full_merge() {
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        for &(len, n_buf) in &[(10usize, 1usize), (64, 4), (33, 3)] {
+            let w0 = rand_vec(&mut rng, len, 1.0);
+            let delta = rand_vec(&mut rng, len, 0.1);
+            let exts = rand_vec(&mut rng, len * n_buf, 1.0);
+            let mut w_full = w0.clone();
+            let mut w_blk = w0.clone();
+            let mut scratch = vec![0.0; len];
+            let a = asgd_merge(&mut w_full, &delta, &exts, 0.05, &mut scratch);
+            let b = asgd_merge_blocked(
+                &mut w_blk,
+                &delta,
+                &exts,
+                0.05,
+                std::iter::once(0..len),
+                &mut scratch,
+            );
+            assert_eq!(a.n_good, b.n_good, "len={len} n={n_buf}");
+            assert_eq!(a.n_active, b.n_active);
+            for (x, y) in w_full.iter().zip(&w_blk) {
+                assert!((x - y).abs() < 1e-6, "{x} vs {y} (len={len} n={n_buf})");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_gates_chunks_independently() {
+        // state of 6 words in two 3-word chunks; one buffer has a perfect
+        // first chunk and a garbage second chunk -> only chunk 0 merges.
+        let len = 6;
+        let w0 = vec![0.0f32; len];
+        let delta = vec![0.1f32; len];
+        let eps = 0.5f32;
+        let w_prop: Vec<f32> = w0.iter().zip(&delta).map(|(a, b)| a - eps * b).collect();
+        let mut ext = vec![0.0f32; len];
+        ext[..3].copy_from_slice(&w_prop[..3]);
+        for v in &mut ext[3..] {
+            *v = 100.0;
+        }
+        let mut w = w0.clone();
+        let mut scratch = vec![0.0; len];
+        let out = asgd_merge_blocked(
+            &mut w,
+            &delta,
+            &ext,
+            eps,
+            [0..3usize, 3..6usize],
+            &mut scratch,
+        );
+        assert_eq!(out.n_good, 1);
+        assert_eq!(out.n_active, 1);
+        // chunk 1 must be the plain step, chunk 0 merged (differs from it)
+        for j in 3..6 {
+            assert!((w[j] - w_prop[j]).abs() < 1e-6);
+        }
+        assert!((w[0] - w_prop[0]).abs() > 1e-6);
+    }
+
+    #[test]
+    fn blocked_ungated_accepts_active_blocks_only() {
+        // a "behind" buffer that the gate would reject is merged when
+        // ungated; an all-zero block stays inactive either way.
+        let len = 4;
+        let w0 = vec![1.0f32; len];
+        let delta = vec![0.1f32; len];
+        let mut ext = vec![0.0f32; len];
+        ext[..2].fill(10.0); // block 0 active (and "behind"), block 1 zero
+        let mut w_gated = w0.clone();
+        let mut w_open = w0.clone();
+        let mut scratch = vec![0.0; len];
+        let g = asgd_merge_blocked(
+            &mut w_gated,
+            &delta,
+            &ext,
+            0.1,
+            [0..2usize, 2..4usize],
+            &mut scratch,
+        );
+        let o = asgd_merge_blocked_ungated(
+            &mut w_open,
+            &delta,
+            &ext,
+            0.1,
+            [0..2usize, 2..4usize],
+            &mut scratch,
+        );
+        assert_eq!(g.n_good, 0, "gate must reject the behind block");
+        assert_eq!(o.n_good, 1, "ungated must accept the active block");
+        assert_ne!(w_gated, w_open);
+        // the zero block reduces to the plain step in both
+        for j in 2..4 {
+            assert!((w_gated[j] - w_open[j]).abs() < 1e-6);
         }
     }
 

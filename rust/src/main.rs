@@ -52,6 +52,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         "messages          sent {}  received {}  good {}  torn {}  overwritten {}",
         report.comm.sent, report.comm.received, report.comm.good, report.comm.torn, report.comm.overwritten
     );
+    if report.comm.chunk_sent > 0 {
+        println!(
+            "blocks            sent {}  fresh {}  torn {}  lost {}  ({} B/put)",
+            report.comm.chunk_sent,
+            report.comm.chunk_received,
+            report.comm.chunk_torn,
+            report.comm.chunk_lost,
+            report.comm.bytes_sent / report.comm.sent.max(1)
+        );
+    }
     if let Some(dir) = args.get("out") {
         let dir = PathBuf::from(dir);
         asgd::metrics::export::write_trace(&report, dir.join("trace.csv"))?;

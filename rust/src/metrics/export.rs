@@ -32,6 +32,11 @@ pub fn report_json(report: &RunReport) -> Json {
         .num("msgs_good", report.comm.good as f64)
         .num("msgs_torn", report.comm.torn as f64)
         .num("msgs_overwritten", report.comm.overwritten as f64)
+        .num("bytes_sent", report.comm.bytes_sent as f64)
+        .num("blocks_sent", report.comm.chunk_sent as f64)
+        .num("blocks_received", report.comm.chunk_received as f64)
+        .num("blocks_torn", report.comm.chunk_torn as f64)
+        .num("blocks_lost", report.comm.chunk_lost as f64)
         .build()
 }
 

@@ -10,7 +10,11 @@
 //! * alg. 5 ASGD        -> [`AsgdUpdate::apply`]
 
 use crate::config::GateMode;
-use crate::kernels::merge::{asgd_merge, asgd_merge_percenter, asgd_merge_ungated, MergeOut};
+use crate::gaspi::ChunkLayout;
+use crate::kernels::merge::{
+    asgd_merge, asgd_merge_blocked, asgd_merge_blocked_ungated, asgd_merge_percenter,
+    asgd_merge_ungated, MergeOut,
+};
 
 /// Plain SGD step: `w -= eps * grad` (alg. 2 line 3 / alg. 4 line 6).
 #[inline]
@@ -30,6 +34,11 @@ pub struct AsgdUpdate {
     /// K-Means row geometry for the per-center gate; ignored otherwise.
     pub k: usize,
     pub d: usize,
+    /// Transport chunk count ([`crate::config::CommMode`]).  With more
+    /// than one chunk the external buffers hold per-block freshness, so
+    /// the gate is evaluated per transport block (arXiv:1510.01155)
+    /// instead of on the whole state.
+    pub comm_chunks: usize,
 }
 
 impl AsgdUpdate {
@@ -42,6 +51,22 @@ impl AsgdUpdate {
         exts: &[f32],
         scratch: &mut [f32],
     ) -> MergeOut {
+        if self.comm_chunks > 1 {
+            // chunked transport: gate on the transport block boundaries
+            // (a buffer may hold fresh data in only some blocks).
+            let layout = ChunkLayout::new(w.len(), self.comm_chunks);
+            return match self.gate {
+                GateMode::Off => asgd_merge_blocked_ungated(
+                    w,
+                    delta,
+                    exts,
+                    self.eps,
+                    layout.iter_bounds(),
+                    scratch,
+                ),
+                _ => asgd_merge_blocked(w, delta, exts, self.eps, layout.iter_bounds(), scratch),
+            };
+        }
         match self.gate {
             GateMode::FullState => asgd_merge(w, delta, exts, self.eps, scratch),
             GateMode::PerCenter => {
@@ -91,7 +116,7 @@ mod tests {
         let exts = vec![0.5f32; 8]; // 2 buffers
         for gate in [GateMode::FullState, GateMode::PerCenter, GateMode::Off] {
             let mut w = vec![1.0f32; 4];
-            let upd = AsgdUpdate { gate, eps: 0.1, k: 2, d: 2 };
+            let upd = AsgdUpdate { gate, eps: 0.1, k: 2, d: 2, comm_chunks: 1 };
             let out = upd.apply(&mut w, &delta, &exts, &mut scratch);
             assert!(out.n_active == 2);
             if gate == GateMode::Off {
@@ -108,11 +133,35 @@ mod tests {
         let mut scratch = vec![0.0; 2];
         let mut w_full = vec![1.0f32; 2];
         let mut w_off = vec![1.0f32; 2];
-        AsgdUpdate { gate: GateMode::FullState, eps: 0.1, k: 1, d: 2 }
+        AsgdUpdate { gate: GateMode::FullState, eps: 0.1, k: 1, d: 2, comm_chunks: 1 }
             .apply(&mut w_full, &delta, &exts, &mut scratch);
-        AsgdUpdate { gate: GateMode::Off, eps: 0.1, k: 1, d: 2 }
+        AsgdUpdate { gate: GateMode::Off, eps: 0.1, k: 1, d: 2, comm_chunks: 1 }
             .apply(&mut w_off, &delta, &exts, &mut scratch);
         assert_ne!(w_full, w_off);
+    }
+
+    #[test]
+    fn chunked_update_gates_per_block() {
+        // one buffer: block 0 exactly at the projected state (accept),
+        // block 1 far behind (reject) -> chunked dispatch merges only
+        // block 0 while the full-state gate sees a mixed buffer.
+        let len = 4;
+        let delta = vec![0.1f32; len];
+        let eps = 0.5f32;
+        let w0 = vec![0.0f32; len];
+        let w_prop: Vec<f32> = w0.iter().zip(&delta).map(|(a, b)| a - eps * b).collect();
+        let mut ext = vec![100.0f32; len];
+        ext[..2].copy_from_slice(&w_prop[..2]);
+        let mut scratch = vec![0.0; len];
+        let mut w = w0.clone();
+        let upd = AsgdUpdate { gate: GateMode::FullState, eps, k: 1, d: len, comm_chunks: 2 };
+        let out = upd.apply(&mut w, &delta, &ext, &mut scratch);
+        assert_eq!(out.n_good, 1);
+        // rejected block 1 is the plain step; accepted block 0 differs
+        for j in 2..len {
+            assert!((w[j] - w_prop[j]).abs() < 1e-6);
+        }
+        assert!((w[0] - w_prop[0]).abs() > 1e-6);
     }
 
     #[test]

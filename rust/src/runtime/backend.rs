@@ -268,6 +268,7 @@ impl XlaGradStepper {
                 eps: cfg.eps,
                 k: 1,
                 d: cfg.model.state_len(d),
+                comm_chunks: cfg.comm.chunks(),
             },
             b,
             d,
@@ -349,6 +350,7 @@ pub fn build_stepper(cfg: &TrainConfig, model: Arc<dyn Model>) -> Result<Arc<dyn
             crate::config::ModelKind::KMeans { .. } => cfg.data.dim,
             _ => cfg.model.state_len(cfg.data.dim),
         },
+        comm_chunks: cfg.comm.chunks(),
     };
     match cfg.backend {
         BackendKind::Native => Ok(Arc::new(NativeStepper { model, update })),
@@ -357,6 +359,14 @@ pub fn build_stepper(cfg: &TrainConfig, model: Arc<dyn Model>) -> Result<Arc<dyn
             let manifest = Manifest::load(&cfg.artifact_dir)?;
             match cfg.model {
                 crate::config::ModelKind::KMeans { .. } => {
+                    if cfg.comm.chunks() > 1 {
+                        // the fused artifact gates whole states; partial
+                        // (per-block) buffers would be mis-gated
+                        bail!(
+                            "comm=chunked needs --backend native for K-Means \
+                             (the fused XLA artifact gates full states)"
+                        );
+                    }
                     let s = XlaStepper::from_config(cfg, &manifest, handle)?;
                     s.warmup()?;
                     Ok(Arc::new(s))

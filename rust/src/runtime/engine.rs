@@ -13,12 +13,20 @@
 //! name for the lifetime of the engine.
 
 use super::manifest::Manifest;
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(not(feature = "xla"))]
+use anyhow::bail;
+#[cfg(feature = "xla")]
+use anyhow::{bail, Context};
+use anyhow::{anyhow, Result};
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
+#[cfg(feature = "xla")]
+use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
 
 /// A request: execute artifact `name` with flat f32 inputs.
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 struct ExecRequest {
     name: String,
     /// (flat data, dims) per input.
@@ -39,10 +47,12 @@ pub struct XlaHandle {
     tx: Sender<Msg>,
 }
 
-// Sender<T: Send> is Send but not Sync; guard it. The handle is cheap to
-// clone, so each worker clones its own — Sync is still required for
-// storing handles in Arc'd structs shared across threads.
-unsafe impl Sync for XlaHandle {}
+// `std::sync::mpsc::Sender` is `Sync` on modern Rust (1.72+), so the
+// handle's auto-traits suffice — no `unsafe impl` needed.  Keep that fact
+// pinned with a compile-time assertion: workers store clones of the
+// handle in `Arc`'d structs shared across threads.
+const fn _assert_send_sync<T: Send + Sync>() {}
+const _: () = _assert_send_sync::<XlaHandle>();
 
 impl XlaHandle {
     /// Execute `name` with the given flat inputs; returns the flat tuple
@@ -79,6 +89,7 @@ pub struct XlaEngine {
 impl XlaEngine {
     /// Start the service thread.  Fails fast if the PJRT client cannot be
     /// created (reported through the first request otherwise).
+    #[cfg(feature = "xla")]
     pub fn start(manifest: Manifest) -> Result<Self> {
         let (tx, rx) = channel::<Msg>();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
@@ -93,6 +104,17 @@ impl XlaEngine {
             tx,
             thread: Some(thread),
         })
+    }
+
+    /// Offline build: no `xla` crate vendored, so the engine cannot start.
+    /// Everything else in the crate works with `--backend native`.
+    #[cfg(not(feature = "xla"))]
+    pub fn start(manifest: Manifest) -> Result<Self> {
+        let _ = manifest;
+        bail!(
+            "this build has no XLA support (vendor the `xla` crate and \
+             enable the `xla` cargo feature); use --backend native"
+        )
     }
 
     pub fn handle(&self) -> XlaHandle {
@@ -111,6 +133,7 @@ impl Drop for XlaEngine {
     }
 }
 
+#[cfg(feature = "xla")]
 fn service_loop(manifest: Manifest, rx: Receiver<Msg>, ready: Sender<Result<()>>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => {
@@ -144,6 +167,7 @@ fn service_loop(manifest: Manifest, rx: Receiver<Msg>, ready: Sender<Result<()>>
     }
 }
 
+#[cfg(feature = "xla")]
 fn ensure_compiled<'a>(
     client: &xla::PjRtClient,
     manifest: &Manifest,
@@ -168,6 +192,7 @@ fn ensure_compiled<'a>(
     Ok(cache.get(name).unwrap())
 }
 
+#[cfg(feature = "xla")]
 fn exec_one(
     client: &xla::PjRtClient,
     manifest: &Manifest,
@@ -258,4 +283,18 @@ pub fn global_handle(artifact_dir: &str) -> Result<XlaHandle> {
     std::mem::forget(engine);
     *guard = Some(handle.clone());
     Ok(handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::XlaHandle;
+
+    /// Regression (PR 1): `XlaHandle` previously carried an
+    /// `unsafe impl Sync`; `mpsc::Sender` is `Sync` on modern Rust, so the
+    /// auto-traits must hold without any unsafe code.
+    #[test]
+    fn xla_handle_is_send_sync_and_clone() {
+        fn check<T: Send + Sync + Clone + 'static>() {}
+        check::<XlaHandle>();
+    }
 }

@@ -4,7 +4,7 @@
 //! Each property runs `CASES` randomized instances; failures print the
 //! case seed so they replay deterministically.
 
-use asgd::config::{AggMode, GateMode, Method, RacePolicy, TrainConfig};
+use asgd::config::{AggMode, CommMode, GateMode, Method, RacePolicy, TrainConfig};
 use asgd::coordinator::run_training;
 use asgd::data::partition::partition;
 use asgd::data::synthetic;
@@ -288,6 +288,81 @@ fn prop_gate_modes_converge() {
         let first = report.trace.first().unwrap().objective;
         let last = report.trace.last().unwrap().objective;
         assert!(last < first, "gate {gate:?}: {first} -> {last}");
+    }
+}
+
+/// Failure injection for the chunked substrate: concurrent block writers
+/// must never let a `Fresh` block read mix two senders' data within one
+/// block, for any chunk count (blocks from different senders within one
+/// *slot* are the design, mixing inside one block would be a torn read
+/// escaping the seqlock).
+#[test]
+fn prop_chunked_fresh_blocks_never_mix_senders() {
+    for case in 0..3u64 {
+        let chunks = [2usize, 4, 8][case as usize];
+        let seg = std::sync::Arc::new(Segment::new_chunked(0, 1, 48, chunks));
+        let writers: Vec<_> = (1..=3u32)
+            .map(|id| {
+                let seg = seg.clone();
+                std::thread::spawn(move || {
+                    let l = seg.layout();
+                    for i in 0..600 {
+                        for c in 0..l.n_chunks() {
+                            let payload = vec![id as f32; l.chunk_len(c)];
+                            seg.write_block(0, c, id, i, &payload);
+                        }
+                    }
+                })
+            })
+            .collect();
+        let l = seg.layout();
+        let mut versions = vec![0u64; l.n_chunks()];
+        for _ in 0..1500 {
+            for c in 0..l.n_chunks() {
+                let mut buf = vec![0.0f32; l.chunk_len(c)];
+                let (out, sender, _, v) = seg.read_block_into(0, c, versions[c], &mut buf);
+                versions[c] = v;
+                if out == ReadOutcome::Fresh {
+                    let first = buf[0];
+                    assert!(
+                        buf.iter().all(|&x| x == first),
+                        "case {case}: sender mix inside a Fresh block"
+                    );
+                    assert_eq!(first as u32, sender, "case {case}: sender metadata desync");
+                }
+            }
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+    }
+}
+
+/// Invariant: chunked communication balances its block accounting and
+/// still converges, for several chunk counts (including non-dividing and
+/// larger-than-practical ones).
+#[test]
+fn prop_chunked_comm_converges_and_balances() {
+    for &chunks in &[2usize, 5, 16] {
+        let mut cfg = TrainConfig::asgd_default(5, 6, 64);
+        cfg.workers = 4;
+        cfg.iters = 80;
+        cfg.eps = 0.2;
+        cfg.comm = CommMode::Chunked { chunks };
+        cfg.eval_every = 20;
+        cfg.data.n_samples = 20_000;
+        let report = run_training(&cfg).unwrap();
+        assert_eq!(
+            report.comm.sent, report.comm.chunk_sent,
+            "chunks={chunks}: every chunked put is a block put"
+        );
+        // each send event covers the whole state exactly once
+        assert_eq!(report.comm.chunk_sent % chunks as u64, 0, "chunks={chunks}");
+        assert!(report.comm.chunk_received <= report.comm.chunk_sent);
+        assert!(report.comm.chunk_lost <= report.comm.chunk_sent);
+        let first = report.trace.first().unwrap().objective;
+        let last = report.trace.last().unwrap().objective;
+        assert!(last < first, "chunks={chunks}: {first} -> {last}");
     }
 }
 
