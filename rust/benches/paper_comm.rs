@@ -84,6 +84,7 @@ fn main() {
 
     chunk_sweep_micro();
     chunk_sweep_training();
+    adaptive_dirty_arm();
     println!("paper_comm OK");
 }
 
@@ -163,6 +164,97 @@ fn torn_rate_round(state_len: usize, chunks: usize) -> f64 {
         w.join().unwrap();
     }
     torn as f64 / polls.max(1) as f64
+}
+
+/// ROADMAP follow-up arm: on a sparse-update workload (large k, small
+/// minibatch — most centers untouched between sends) adaptive+dirty
+/// communication must ship strictly fewer bytes than `chunked` at the
+/// same chunk ceiling, at equal-or-better convergence.  `min_chunks =
+/// max_chunks` pins the grouping, so dirty skipping is the only
+/// difference under measurement; a second free-span arm shows the
+/// controller's re-layout trajectory.
+fn adaptive_dirty_arm() {
+    println!("\n== adaptive/dirty arm: bytes vs chunked at equal ceiling ==");
+    let chunks = 16usize;
+    let base = || {
+        // sparse geometry: k = 64 centers, b = 8 -> at most 8 of the 16
+        // transport blocks carry gradient per iteration
+        let mut cfg = TrainConfig::asgd_default(64, 4, 8);
+        cfg.workers = 4;
+        cfg.iters = 80;
+        cfg.eval_every = 40;
+        cfg.data.n_samples = 20_000;
+        cfg
+    };
+    let run3 = |cfg: &TrainConfig| {
+        // median of 3 rounds over (bytes, objective): scheduler noise
+        // moves both, the ordering claim should survive it
+        let mut bytes: Vec<u64> = Vec::new();
+        let mut objs: Vec<f64> = Vec::new();
+        let mut skipped = 0u64;
+        let mut relayouts = 0u64;
+        for _ in 0..3 {
+            let r = run_training(cfg).unwrap();
+            let first = r.trace.first().unwrap().objective;
+            let last = r.trace.last().unwrap().objective;
+            assert!(last < first, "arm did not converge: {first} -> {last}");
+            bytes.push(r.comm.bytes_sent);
+            objs.push(last);
+            skipped = skipped.max(r.comm.chunk_skipped);
+            relayouts = relayouts.max(r.comm.relayouts);
+        }
+        bytes.sort_unstable();
+        objs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (bytes[1], objs[1], skipped, relayouts)
+    };
+
+    let mut chunked = base();
+    chunked.comm = CommMode::Chunked { chunks };
+    let (bytes_c, obj_c, _, _) = run3(&chunked);
+    println!("   chunked  c={chunks}: median {bytes_c} B, objective {obj_c:.5}");
+
+    let mut adaptive = base();
+    adaptive.comm = CommMode::Adaptive {
+        min_chunks: chunks,
+        max_chunks: chunks,
+    };
+    let (bytes_a, obj_a, skipped, _) = run3(&adaptive);
+    println!(
+        "   adaptive c={chunks}: median {bytes_a} B, objective {obj_a:.5}, \
+         skipped blocks {skipped}"
+    );
+    assert!(
+        bytes_a < bytes_c,
+        "adaptive+dirty must ship strictly fewer bytes than chunked at the \
+         same ceiling ({bytes_a} vs {bytes_c})"
+    );
+    assert!(skipped > 0, "the sparse workload must skip clean blocks");
+    // equal-or-better convergence, with a 5% band for scheduler noise
+    // (both arms share seed/data and are median-of-3 damped)
+    assert!(
+        obj_a <= obj_c * 1.05 + 1e-9,
+        "adaptive convergence regressed: {obj_a} vs chunked {obj_c}"
+    );
+
+    // free-span arm: let the controller move within [2, 32] and report
+    // its trajectory; the schedule identity must hold regardless
+    let mut free = base();
+    free.comm = CommMode::Adaptive {
+        min_chunks: 2,
+        max_chunks: 32,
+    };
+    free.adapt_interval = 8;
+    let r = run_training(&free).unwrap();
+    let events = 4 * (free.iters as u64 / free.send_interval as u64);
+    assert_eq!(
+        r.comm.chunk_sent + r.comm.chunk_skipped,
+        events * 32,
+        "every physical block of every event is put or skipped"
+    );
+    println!(
+        "   adaptive 2..32: {} puts over {} blocks (+{} skipped), {} re-layouts",
+        r.comm.sent, r.comm.chunk_sent, r.comm.chunk_skipped, r.comm.relayouts
+    );
 }
 
 /// The same sweep end-to-end: chunked training keeps converging while the

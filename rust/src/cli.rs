@@ -133,8 +133,18 @@ pub fn train_config(args: &Args) -> Result<crate::config::TrainConfig> {
         // no clamping: validate() rejects 0 loudly
         cfg.send_interval = v;
     }
-    if let Some(comm) = CommMode::resolve(args.get("comm"), args.get_usize("chunks")?, cfg.comm)? {
+    if let Some(comm) = CommMode::resolve(
+        args.get("comm"),
+        args.get_usize("chunks")?,
+        args.get_usize("min-chunks")?,
+        args.get_usize("max-chunks")?,
+        cfg.comm,
+    )? {
         cfg.comm = comm;
+    }
+    if let Some(v) = args.get_usize("adapt-interval")? {
+        // no clamping: validate() rejects 0 loudly
+        cfg.adapt_interval = v;
     }
     if let Some(v) = args.get("gate") {
         cfg.gate = GateMode::parse(v)?;
@@ -213,8 +223,11 @@ TRAIN OPTIONS (defaults in parentheses):
   --fanout F             recipients per send                    (2)
   --n-buffers N          external buffers per worker            (4)
   --send-interval S      send every S updates                   (1)
-  --comm M               full | chunked                         (full)
+  --comm M               full | chunked | adaptive              (full)
   --chunks N             blocks per state for --comm chunked    (4)
+  --min-chunks N         adaptive: chunk-count floor            (1)
+  --max-chunks N         adaptive: chunk-count ceiling          (16)
+  --adapt-interval S     adaptive: send events per re-derive    (16)
   --gate G               full | per-center | off                (full)
   --aggregation A        first | tree-mean                      (first)
   --backend B            native | xla                           (native)
@@ -288,5 +301,30 @@ mod tests {
         assert!(train_config(&parse("train --comm full --chunks 8")).is_err());
         // send_interval 0 is rejected by validation, not clamped
         assert!(train_config(&parse("train --send-interval 0")).is_err());
+    }
+
+    #[test]
+    fn adaptive_flags_roundtrip() {
+        let cfg = train_config(&parse(
+            "train --comm adaptive --min-chunks 2 --max-chunks 8 --adapt-interval 4",
+        ))
+        .unwrap();
+        assert_eq!(
+            cfg.comm,
+            crate::config::CommMode::Adaptive { min_chunks: 2, max_chunks: 8 }
+        );
+        assert_eq!(cfg.adapt_interval, 4);
+        // bare span flags imply adaptive; bare --comm adaptive defaults 1..16
+        let cfg = train_config(&parse("train --max-chunks 8")).unwrap();
+        assert_eq!(
+            cfg.comm,
+            crate::config::CommMode::Adaptive { min_chunks: 1, max_chunks: 8 }
+        );
+        let cfg = train_config(&parse("train --comm adaptive")).unwrap();
+        assert_eq!(cfg.comm.chunk_span(), (1, 16));
+        // contradictions and bad cadence are refused
+        assert!(train_config(&parse("train --comm chunked --min-chunks 2")).is_err());
+        assert!(train_config(&parse("train --comm adaptive --chunks 8")).is_err());
+        assert!(train_config(&parse("train --comm adaptive --adapt-interval 0")).is_err());
     }
 }

@@ -159,12 +159,23 @@ impl RacePolicy {
 /// state vector is split into `chunks` contiguous blocks, each put
 /// independently (round-robin across the fanout recipients), shrinking
 /// per-put bytes and the seqlock window a torn read can race with.
+///
+/// `Adaptive` is the ROADMAP follow-up: the segment is allocated at the
+/// fixed *physical* granularity of `max_chunks` blocks, and each sender
+/// re-derives a logical chunk count in `[min_chunks, max_chunks]` from
+/// the observed torn/lost rates ([`crate::gaspi::AdaptiveController`]),
+/// coalescing contiguous physical blocks into single puts when the
+/// substrate is quiet and splitting under contention.  Senders also keep
+/// a per-block dirty bitmap and skip blocks their model never touched
+/// since the last send.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CommMode {
     /// One full-state put per recipient (the 2015 paper's substrate).
     Full,
     /// Per-block puts with independent seqlock versions.
     Chunked { chunks: usize },
+    /// Feedback-driven chunk sizing + dirty-block skipping.
+    Adaptive { min_chunks: usize, max_chunks: usize },
 }
 
 impl CommMode {
@@ -172,55 +183,133 @@ impl CommMode {
         match self {
             CommMode::Full => "full",
             CommMode::Chunked { .. } => "chunked",
+            CommMode::Adaptive { .. } => "adaptive",
         }
     }
 
-    /// Block count (1 for full-state communication).
+    /// Physical block count the segments are allocated with (1 for
+    /// full-state communication; the finest granularity `max_chunks` for
+    /// adaptive — logical re-layouts only regroup these blocks).
     pub fn chunks(&self) -> usize {
         match self {
             CommMode::Full => 1,
             CommMode::Chunked { chunks } => *chunks,
+            CommMode::Adaptive { max_chunks, .. } => *max_chunks,
         }
     }
 
-    /// Parse a mode name; `chunks` is used when the mode is chunked.
-    pub fn parse(s: &str, chunks: usize) -> Result<Self> {
+    /// The `(min, max)` logical chunk-count span (degenerate for the
+    /// non-adaptive modes).
+    pub fn chunk_span(&self) -> (usize, usize) {
+        match self {
+            CommMode::Full => (1, 1),
+            CommMode::Chunked { chunks } => (*chunks, *chunks),
+            CommMode::Adaptive {
+                min_chunks,
+                max_chunks,
+            } => (*min_chunks, *max_chunks),
+        }
+    }
+
+    /// Parse a mode name; `chunks` is used when the mode is chunked and
+    /// `(min_chunks, max_chunks)` when it is adaptive.
+    pub fn parse(s: &str, chunks: usize, span: (usize, usize)) -> Result<Self> {
         Ok(match s {
             "full" => CommMode::Full,
             "chunked" | "chunk" | "chunks" => CommMode::Chunked { chunks },
-            other => bail!("unknown comm mode {other:?} (full|chunked)"),
+            "adaptive" | "adapt" => CommMode::Adaptive {
+                min_chunks: span.0,
+                max_chunks: span.1,
+            },
+            other => bail!("unknown comm mode {other:?} (full|chunked|adaptive)"),
         })
     }
 
-    /// Resolve the `comm`/`chunks` knob pair the same way for every
-    /// config source (TOML and CLI): an explicit mode wins, a bare chunk
-    /// count implies chunked, an explicit `full` + chunk count is a
-    /// contradiction (refused, not silently dropped), and an absent pair
-    /// leaves the mode unset (`None`).  `current` supplies the chunk
-    /// count when the mode is chunked but no count is given, so a later
-    /// layer (e.g. the CLI over a TOML file) does not silently reset an
-    /// already-configured count to the default.
+    /// Resolve the `comm`/`chunks`/`min_chunks`/`max_chunks` knobs the
+    /// same way for every config source (TOML and CLI): an explicit mode
+    /// wins, a bare chunk count implies chunked, a bare min/max pair
+    /// implies adaptive, and mixing knobs across modes is a contradiction
+    /// (refused, not silently dropped).  `current` supplies counts the
+    /// caller did not give, so a later layer (e.g. the CLI over a TOML
+    /// file) does not silently reset an already-configured knob to the
+    /// default.
     pub fn resolve(
         mode: Option<&str>,
         chunks: Option<usize>,
+        min_chunks: Option<usize>,
+        max_chunks: Option<usize>,
         current: CommMode,
     ) -> Result<Option<Self>> {
         let inherited = match current {
             CommMode::Chunked { chunks } => chunks,
-            CommMode::Full => 4,
+            _ => 4,
         };
-        match (mode, chunks) {
-            (Some(m), c) => {
-                let parsed = Self::parse(m, c.unwrap_or(inherited))?;
-                if parsed == CommMode::Full {
-                    if let Some(n) = c {
-                        bail!("comm=full contradicts chunks={n}; drop one");
+        let inherited_span = match current {
+            CommMode::Adaptive {
+                min_chunks,
+                max_chunks,
+            } => (min_chunks, max_chunks),
+            _ => (1, 16),
+        };
+        let span = (
+            min_chunks.unwrap_or(inherited_span.0),
+            max_chunks.unwrap_or(inherited_span.1),
+        );
+        let span_given = min_chunks.is_some() || max_chunks.is_some();
+        match (mode, chunks, span_given) {
+            (Some(m), c, _) => {
+                let parsed = Self::parse(m, c.unwrap_or(inherited), span)?;
+                match parsed {
+                    CommMode::Adaptive { .. } => {
+                        if let Some(n) = c {
+                            bail!(
+                                "comm=adaptive takes min_chunks/max_chunks, not chunks={n}; \
+                                 drop one"
+                            );
+                        }
                     }
+                    _ if span_given => {
+                        bail!(
+                            "comm={m} contradicts min_chunks/max_chunks (adaptive-only knobs); \
+                             drop one"
+                        );
+                    }
+                    CommMode::Full => {
+                        if let Some(n) = c {
+                            bail!("comm=full contradicts chunks={n}; drop one");
+                        }
+                    }
+                    _ => {}
                 }
                 Ok(Some(parsed))
             }
-            (None, Some(n)) => Ok(Some(CommMode::Chunked { chunks: n })),
-            (None, None) => Ok(None),
+            (None, Some(n), true) => {
+                bail!("chunks={n} contradicts min_chunks/max_chunks; pick chunked or adaptive")
+            }
+            (None, Some(n), false) => {
+                if let CommMode::Adaptive { .. } = current {
+                    // a bare knob must not silently switch a mode an
+                    // earlier layer configured explicitly
+                    bail!(
+                        "chunks={n} contradicts the configured comm=adaptive; \
+                         pass comm=chunked to switch modes"
+                    );
+                }
+                Ok(Some(CommMode::Chunked { chunks: n }))
+            }
+            (None, None, true) => {
+                if let CommMode::Chunked { chunks } = current {
+                    bail!(
+                        "min_chunks/max_chunks contradict the configured comm=chunked \
+                         (chunks={chunks}); pass comm=adaptive to switch modes"
+                    );
+                }
+                Ok(Some(CommMode::Adaptive {
+                    min_chunks: span.0,
+                    max_chunks: span.1,
+                }))
+            }
+            (None, None, false) => Ok(None),
         }
     }
 }
@@ -331,8 +420,11 @@ pub struct TrainConfig {
     pub send_interval: usize,
     /// External buffers per worker (N in eq. 3).
     pub n_buffers: usize,
-    /// Full-state vs chunked one-sided communication (arXiv:1510.01155).
+    /// Full-state vs chunked vs adaptive one-sided communication
+    /// (arXiv:1510.01155 and its ROADMAP follow-up).
     pub comm: CommMode,
+    /// Adaptive mode: send events between chunk-count re-derivations.
+    pub adapt_interval: usize,
     pub gate: GateMode,
     pub aggregation: AggMode,
     pub race: RacePolicy,
@@ -366,6 +458,7 @@ impl TrainConfig {
             send_interval: 1,
             n_buffers: 4,
             comm: CommMode::Full,
+            adapt_interval: 16,
             gate: GateMode::FullState,
             aggregation: AggMode::ReturnFirst,
             race: RacePolicy::DiscardTorn,
@@ -395,31 +488,77 @@ impl TrainConfig {
             // used as a modulus in the worker loop — 0 would panic there
             bail!("send_interval must be >= 1");
         }
-        if let CommMode::Chunked { chunks } = self.comm {
-            if chunks == 0 {
-                bail!("comm=chunked needs chunks >= 1");
+        match self.comm {
+            CommMode::Full => {}
+            CommMode::Chunked { chunks } => {
+                if chunks == 0 {
+                    bail!("comm=chunked needs chunks >= 1");
+                }
+                let state_len = self.model.state_len(self.data.dim);
+                if chunks > state_len {
+                    // a block cannot be smaller than one f32 word; refuse
+                    // rather than silently clamp the recorded knob
+                    bail!(
+                        "chunks = {chunks} exceeds the state length {state_len} \
+                         (model {} with dim {})",
+                        self.model.name(),
+                        self.data.dim
+                    );
+                }
             }
-            let state_len = self.model.state_len(self.data.dim);
-            if chunks > state_len {
-                // a block cannot be smaller than one f32 word; refuse
-                // rather than silently clamp the recorded knob
-                bail!(
-                    "chunks = {chunks} exceeds the state length {state_len} \
-                     (model {} with dim {})",
-                    self.model.name(),
-                    self.data.dim
-                );
+            CommMode::Adaptive {
+                min_chunks,
+                max_chunks,
+            } => {
+                if min_chunks == 0 {
+                    bail!("comm=adaptive needs min_chunks >= 1");
+                }
+                if min_chunks > max_chunks {
+                    bail!("comm=adaptive needs min_chunks {min_chunks} <= max_chunks {max_chunks}");
+                }
+                if max_chunks > crate::gaspi::MAX_GROUP_BLOCKS {
+                    // the dirty bitmap and merge touch mask are u64s; in
+                    // release builds a larger count would silently alias
+                    bail!(
+                        "max_chunks = {max_chunks} exceeds {} (dirty bitmap / touch mask are u64)",
+                        crate::gaspi::MAX_GROUP_BLOCKS
+                    );
+                }
+                let state_len = self.model.state_len(self.data.dim);
+                if max_chunks > state_len {
+                    bail!(
+                        "max_chunks = {max_chunks} exceeds the state length {state_len} \
+                         (model {} with dim {})",
+                        self.model.name(),
+                        self.data.dim
+                    );
+                }
             }
-            if self.gate == GateMode::PerCenter {
-                // chunked transport gates on transport-block boundaries,
-                // which cut across center rows; refuse rather than
-                // silently override an explicit per-center request
-                bail!(
-                    "gate=per-center is incompatible with comm=chunked \
-                     (chunked buffers are gated per transport block); \
-                     use gate=full or gate=off"
-                );
-            }
+        }
+        if self.adapt_interval == 0 {
+            // used as a modulus in the controller cadence; checked for
+            // every mode so a typo'd knob never lies dormant in a config
+            bail!("adapt_interval must be >= 1");
+        }
+        let blocky = matches!(
+            self.comm,
+            CommMode::Chunked { .. } | CommMode::Adaptive { .. }
+        );
+        if blocky && self.gate == GateMode::PerCenter {
+            // chunked/adaptive transport gates (and, for adaptive, dirty-
+            // tracks) on transport-block boundaries, which cut across
+            // center rows; refuse rather than silently override an
+            // explicit per-center request.  Refused even at one block
+            // (chunked chunks = 1 — PR 1's rule — and adaptive
+            // max_chunks = 1, where the per-center merge would report a
+            // per-*row* touch mask the per-block dirty map must not
+            // consume).
+            bail!(
+                "gate=per-center is incompatible with comm={} \
+                 (chunked buffers are gated per transport block); \
+                 use gate=full or gate=off",
+                self.comm.name()
+            );
         }
         if !(self.eps > 0.0) {
             bail!("eps must be > 0 (paper: Require eps > 0)");
@@ -454,6 +593,10 @@ impl TrainConfig {
         let comm = match self.comm {
             CommMode::Full => String::new(),
             CommMode::Chunked { chunks } => format!(" comm=chunked:{chunks}"),
+            CommMode::Adaptive {
+                min_chunks,
+                max_chunks,
+            } => format!(" comm=adaptive:{min_chunks}..{max_chunks}"),
         };
         format!(
             "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}{}",
@@ -483,6 +626,8 @@ impl TrainConfig {
             .num("n_buffers", self.n_buffers as f64)
             .str("comm", self.comm.name())
             .num("chunks", self.comm.chunks() as f64)
+            .num("min_chunks", self.comm.chunk_span().0 as f64)
+            .num("max_chunks", self.comm.chunk_span().1 as f64)
             .str("gate", self.gate.name())
             .str("aggregation", self.aggregation.name())
             .str("backend", self.backend.name())
@@ -540,13 +685,25 @@ impl TrainConfig {
             None => None,
             Some(v) => Some(v.as_str().context("comm must be a string")?),
         };
-        let chunks = match t.get("chunks") {
-            None => None,
-            Some(v) => Some(v.as_usize().context("chunks must be an integer")?),
+        let opt_usize = |key: &str| -> Result<Option<usize>> {
+            match t.get(key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(
+                    v.as_usize()
+                        .with_context(|| format!("{key} must be an integer"))?,
+                )),
+            }
         };
-        if let Some(comm) = CommMode::resolve(comm_mode, chunks, cfg.comm)? {
+        if let Some(comm) = CommMode::resolve(
+            comm_mode,
+            opt_usize("chunks")?,
+            opt_usize("min_chunks")?,
+            opt_usize("max_chunks")?,
+            cfg.comm,
+        )? {
             cfg.comm = comm;
         }
+        cfg.adapt_interval = get_usize("adapt_interval", cfg.adapt_interval)?;
         cfg.eval_every = get_usize("eval_every", cfg.eval_every)?;
         cfg.eval_samples = get_usize("eval_samples", cfg.eval_samples)?;
         if let Some(v) = t.get("eps") {
@@ -645,6 +802,8 @@ mod tests {
         c.comm = CommMode::Chunked { chunks: 4 };
         c.gate = GateMode::PerCenter; // would be silently overridden
         assert!(c.validate().is_err());
+        c.comm = CommMode::Chunked { chunks: 1 }; // PR 1 refused this too
+        assert!(c.validate().is_err());
         let mut c = TrainConfig::asgd_default(10, 10, 500);
         c.n_buffers = 65; // gate mask is a u64
         assert!(c.validate().is_err());
@@ -653,6 +812,47 @@ mod tests {
         assert!(c.validate().is_err());
         c.comm = CommMode::Chunked { chunks: 100 }; // one word per block: fine
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_bounds_adaptive_mode() {
+        let base = || TrainConfig::asgd_default(10, 10, 500); // state_len 100
+        let mut c = base();
+        c.comm = CommMode::Adaptive { min_chunks: 2, max_chunks: 16 };
+        c.validate().unwrap();
+        let mut c = base();
+        c.comm = CommMode::Adaptive { min_chunks: 0, max_chunks: 8 };
+        assert!(c.validate().is_err()); // min >= 1
+        let mut c = base();
+        c.comm = CommMode::Adaptive { min_chunks: 8, max_chunks: 4 };
+        assert!(c.validate().is_err()); // min <= max
+        let mut c = base();
+        c.comm = CommMode::Adaptive { min_chunks: 1, max_chunks: 65 };
+        assert!(c.validate().is_err()); // dirty bitmap / touch mask are u64s
+        let mut c = base();
+        c.model = ModelKind::KMeans { k: 3 }; // state_len 30
+        c.comm = CommMode::Adaptive { min_chunks: 1, max_chunks: 40 };
+        assert!(c.validate().is_err()); // max_chunks > state_len
+        let mut c = base();
+        c.comm = CommMode::Adaptive { min_chunks: 1, max_chunks: 8 };
+        c.gate = GateMode::PerCenter; // would be silently overridden
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.comm = CommMode::Adaptive { min_chunks: 1, max_chunks: 8 };
+        c.adapt_interval = 0; // cadence modulus
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.adapt_interval = 0; // refused even when no mode consumes it
+        assert!(c.validate().is_err());
+        // per-center is refused even at max_chunks = 1: the per-center
+        // merge's touch mask is per row, not per transport block
+        let mut c = base();
+        c.comm = CommMode::Adaptive { min_chunks: 1, max_chunks: 1 };
+        c.gate = GateMode::PerCenter;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.comm = CommMode::Adaptive { min_chunks: 1, max_chunks: 1 };
+        c.validate().unwrap(); // ...but degenerate adaptive itself is fine
     }
 
     /// Regression (PR 1): `send_interval = 0` reached the worker loop and
@@ -710,21 +910,101 @@ mod tests {
         let eight = CommMode::Chunked { chunks: 8 };
         // a bare mode keeps an already-configured chunk count...
         assert_eq!(
-            CommMode::resolve(Some("chunked"), None, eight).unwrap(),
+            CommMode::resolve(Some("chunked"), None, None, None, eight).unwrap(),
             Some(eight)
         );
         // ...defaults to 4 otherwise, and an explicit count always wins
         assert_eq!(
-            CommMode::resolve(Some("chunked"), None, CommMode::Full).unwrap(),
+            CommMode::resolve(Some("chunked"), None, None, None, CommMode::Full).unwrap(),
             Some(CommMode::Chunked { chunks: 4 })
         );
         assert_eq!(
-            CommMode::resolve(Some("chunked"), Some(2), eight).unwrap(),
+            CommMode::resolve(Some("chunked"), Some(2), None, None, eight).unwrap(),
             Some(CommMode::Chunked { chunks: 2 })
         );
-        // absent pair leaves the mode alone; contradictions are refused
-        assert_eq!(CommMode::resolve(None, None, eight).unwrap(), None);
-        assert!(CommMode::resolve(Some("full"), Some(8), CommMode::Full).is_err());
+        // absent knobs leave the mode alone; contradictions are refused
+        assert_eq!(CommMode::resolve(None, None, None, None, eight).unwrap(), None);
+        assert!(CommMode::resolve(Some("full"), Some(8), None, None, CommMode::Full).is_err());
+    }
+
+    #[test]
+    fn comm_resolve_adaptive_knobs() {
+        let adaptive = CommMode::Adaptive { min_chunks: 2, max_chunks: 32 };
+        // explicit adaptive mode with defaults, partial and full spans
+        assert_eq!(
+            CommMode::resolve(Some("adaptive"), None, None, None, CommMode::Full).unwrap(),
+            Some(CommMode::Adaptive { min_chunks: 1, max_chunks: 16 })
+        );
+        assert_eq!(
+            CommMode::resolve(Some("adaptive"), None, Some(4), None, CommMode::Full).unwrap(),
+            Some(CommMode::Adaptive { min_chunks: 4, max_chunks: 16 })
+        );
+        assert_eq!(
+            CommMode::resolve(Some("adaptive"), None, Some(2), Some(8), CommMode::Full).unwrap(),
+            Some(CommMode::Adaptive { min_chunks: 2, max_chunks: 8 })
+        );
+        // a bare span implies adaptive; a bare mode inherits the span
+        assert_eq!(
+            CommMode::resolve(None, None, None, Some(8), CommMode::Full).unwrap(),
+            Some(CommMode::Adaptive { min_chunks: 1, max_chunks: 8 })
+        );
+        assert_eq!(
+            CommMode::resolve(Some("adaptive"), None, None, None, adaptive).unwrap(),
+            Some(adaptive)
+        );
+        // contradictions are refused, not silently dropped
+        assert!(CommMode::resolve(Some("adaptive"), Some(8), None, None, CommMode::Full).is_err());
+        assert!(CommMode::resolve(Some("chunked"), None, Some(2), None, CommMode::Full).is_err());
+        assert!(CommMode::resolve(Some("full"), None, None, Some(8), CommMode::Full).is_err());
+        assert!(CommMode::resolve(None, Some(4), Some(2), None, CommMode::Full).is_err());
+        // ...including across config layers: a bare knob never silently
+        // switches a mode an earlier layer (e.g. a TOML file) configured
+        let eight = CommMode::Chunked { chunks: 8 };
+        assert!(CommMode::resolve(None, None, Some(2), None, eight).is_err());
+        assert!(CommMode::resolve(None, Some(4), None, None, adaptive).is_err());
+        // an explicit mode still switches deliberately
+        assert_eq!(
+            CommMode::resolve(Some("chunked"), Some(4), None, None, adaptive).unwrap(),
+            Some(CommMode::Chunked { chunks: 4 })
+        );
+    }
+
+    #[test]
+    fn adaptive_mode_roundtrips_through_toml() {
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\ncomm = \"adaptive\"\nmin_chunks = 2\nmax_chunks = 8\n\
+             adapt_interval = 32\n[data]\nn_samples = 100000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.comm, CommMode::Adaptive { min_chunks: 2, max_chunks: 8 });
+        assert_eq!(cfg.comm.chunks(), 8, "segments allocate at max_chunks");
+        assert_eq!(cfg.adapt_interval, 32);
+        // bare min/max imply adaptive
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\nmax_chunks = 4\n[data]\nn_samples = 100000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.comm, CommMode::Adaptive { min_chunks: 1, max_chunks: 4 });
+        // chunks + span is a contradiction
+        assert!(TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\nchunks = 4\nmax_chunks = 8\n[data]\nn_samples = 100000\n",
+        )
+        .is_err());
+        // min > max is refused at validation
+        assert!(TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\ncomm = \"adaptive\"\nmin_chunks = 9\nmax_chunks = 4\n\
+             [data]\nn_samples = 100000\n",
+        )
+        .is_err());
+        // the json snapshot and description carry the span
+        let mut cfg = TrainConfig::asgd_default(10, 10, 500);
+        cfg.comm = CommMode::Adaptive { min_chunks: 2, max_chunks: 16 };
+        let j = cfg.to_json();
+        assert_eq!(j.get("comm").unwrap().as_str(), Some("adaptive"));
+        assert_eq!(j.get("chunks").unwrap().as_f64(), Some(16.0));
+        assert_eq!(j.get("min_chunks").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("max_chunks").unwrap().as_f64(), Some(16.0));
+        assert!(cfg.describe().contains("comm=adaptive:2..16"));
     }
 
     #[test]

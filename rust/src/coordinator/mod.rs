@@ -232,6 +232,36 @@ mod tests {
         );
     }
 
+    /// The adaptive schedule's accounting identity (mirror of the PR 1
+    /// send-interval schedule test): at every send event each physical
+    /// block is either put (possibly riding along in a coalesced group)
+    /// or counted skipped — nothing is silently dropped.
+    #[test]
+    fn adaptive_comm_converges_and_accounts_every_block() {
+        let mut cfg = small_cfg(); // workers 4, iters 60, fanout 2, interval 1
+        cfg.comm = crate::config::CommMode::Adaptive { min_chunks: 2, max_chunks: 6 };
+        cfg.adapt_interval = 8;
+        let report = run_training(&cfg).unwrap();
+        let events = 4u64 * 60; // workers x floor(iters / send_interval)
+        assert_eq!(
+            report.comm.chunk_sent + report.comm.chunk_skipped,
+            events * 6,
+            "every block of every send event is put or skipped"
+        );
+        // coalescing: one put covers >= 1 blocks
+        assert!(report.comm.sent <= report.comm.chunk_sent);
+        assert!(report.comm.sent > 0, "no messages sent");
+        // dirty skipping can only shave bytes off the ship-everything bound
+        let state_len = (5 * 6) as u64; // k * dim of small_cfg
+        assert!(report.comm.bytes_sent <= events * state_len * 4);
+        if report.comm.chunk_skipped > 0 {
+            assert!(report.comm.bytes_sent < events * state_len * 4);
+        }
+        let first = report.trace.first().unwrap().objective;
+        let last = report.trace.last().unwrap().objective;
+        assert!(last < first, "objective did not descend: {first} -> {last}");
+    }
+
     #[test]
     fn chunked_run_is_seed_deterministic_in_silent_mode() {
         // determinism of the seeded RNG plumbing is checked where races

@@ -13,10 +13,21 @@
 //! freshness into the external buffers — a buffer may hold fresh data in
 //! some blocks and zeros elsewhere, which the per-block Parzen gate
 //! handles downstream.
+//!
+//! With [`crate::config::CommMode::Adaptive`] the receive path is the
+//! same (always at the fixed physical granularity of `max_chunks`
+//! blocks), but the send path becomes feedback-driven: a
+//! [`DirtyMap`] tracks which blocks this worker's writes actually
+//! touched since the last send (gradient support + merge touch mask),
+//! only dirty block groups are put, and an [`AdaptiveController`]
+//! periodically re-derives the logical grouping from the observed
+//! torn/lost rates, publishing each re-layout through the segment's
+//! versioned layout word.
 
-use crate::config::{Method, RacePolicy, TrainConfig};
+use crate::config::{CommMode, Method, RacePolicy, TrainConfig};
 use crate::data::partition::Shard;
-use crate::gaspi::{ReadOutcome, World};
+use crate::gaspi::sched::plan_send_into;
+use crate::gaspi::{AdaptiveController, ChunkLayout, DirtyMap, ReadOutcome, World};
 use crate::metrics::TracePoint;
 use crate::models::Model;
 use crate::runtime::{StepScratch, Stepper};
@@ -104,6 +115,31 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
     let communicate = cfg.method == Method::Asgd;
     let stats = world.stats.clone();
     let my_segment = world.segments[rank].clone();
+    // adaptive mode: dirty bitmap + feedback controller (sender side
+    // only — the receive path stays at the physical granularity above)
+    let (mut controller, mut dirty) = match cfg.comm {
+        CommMode::Adaptive {
+            min_chunks,
+            max_chunks,
+        } => (
+            Some(AdaptiveController::new(
+                min_chunks,
+                max_chunks,
+                cfg.adapt_interval,
+            )),
+            Some(DirtyMap::all_dirty(n_chunks)),
+        ),
+        _ => (None, None),
+    };
+    if let Some(ctrl) = &controller {
+        my_segment.advertise_layout(ctrl.chunks());
+    }
+    let mut plan: Vec<std::ops::Range<usize>> = Vec::new();
+    // per-block counters run for any block-structured transport: chunked
+    // (n_chunks > 1 by validation) and adaptive even at max_chunks = 1,
+    // where put_group still counts chunk_sent — the receive side must
+    // stay symmetric or the controller's consumed signal reads zero.
+    let block_accounting = chunked || controller.is_some();
 
     // alg. 5 line 4: "randomly shuffle samples on node i" happened at
     // partition time; synchronize the start so wall-clock is comparable.
@@ -128,7 +164,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                         ReadOutcome::Fresh => {
                             any_fresh = true;
                             torn_seen[idx] = u64::MAX;
-                            if chunked {
+                            if block_accounting {
                                 rx.chunk_received.add(1);
                             }
                         }
@@ -142,7 +178,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                                 buf.fill(0.0);
                             } else {
                                 any_torn = true;
-                                if chunked {
+                                if block_accounting {
                                     rx.chunk_torn.add(1);
                                 }
                                 if cfg.race == RacePolicy::DiscardTorn {
@@ -180,6 +216,18 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         stats.rank(rank).good.add(out.n_good as u64);
         global_samples.fetch_add(cfg.minibatch as u64, Ordering::Relaxed);
 
+        // ---- dirty tracking (adaptive mode): the step touched exactly
+        // the gradient's support plus the merge-touched blocks ----------
+        if let Some(d) = dirty.as_mut() {
+            if scratch.grad.len() == state_len && out.touched_blocks != u64::MAX {
+                d.mark_after_step(&layout, &scratch.grad, out.touched_blocks);
+            } else {
+                // backend without merge/gradient visibility: everything
+                // may have moved, so everything is dirty (sound, no skips)
+                d.mark_all();
+            }
+        }
+
         // ---- send path: one-sided puts to random recipients ------------
         // Fires once a full send interval of *completed* steps has
         // elapsed.  Regression (PR 1): `t % send_interval == 0` fired at
@@ -191,7 +239,32 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         if communicate && (t + 1) % cfg.send_interval as u64 == 0 {
             rng.sample_recipients(world.ranks(), rank, cfg.fanout, &mut recipients);
             if !recipients.is_empty() {
-                if chunked {
+                if let (Some(ctrl), Some(d)) = (controller.as_mut(), dirty.as_mut()) {
+                    // adaptive: round only over dirty block groups under
+                    // the controller's current logical grouping, then
+                    // feed the world's torn/lost rates back into it.
+                    let grouping = ChunkLayout::new(n_chunks, ctrl.chunks());
+                    let skipped = plan_send_into(&grouping, d, &mut plan);
+                    let tx = stats.rank(rank);
+                    if skipped > 0 {
+                        tx.chunk_skipped.add(skipped);
+                    }
+                    for (g, blocks) in plan.iter().enumerate() {
+                        let to = recipients[(g + t as usize) % recipients.len()];
+                        let slot = rng.index(cfg.n_buffers);
+                        let words = layout.blocks_bounds(blocks.clone());
+                        world.put_group(rank, to, t, blocks.clone(), &w[words], slot);
+                        d.clear(blocks.clone());
+                    }
+                    if let Some(new_chunks) = ctrl.on_send_event(|| stats.total()) {
+                        // re-layout: from the next event on, puts use the
+                        // new grouping; the segment's layout word records
+                        // it (epoch bump) for observers.  Block
+                        // boundaries never move — only the grouping.
+                        my_segment.advertise_layout(new_chunks);
+                        stats.rank(rank).relayouts.add(1);
+                    }
+                } else if chunked {
                     // arXiv:1510.01155 load balancing: block c of this
                     // send goes to recipient (c + t) mod fanout, so each
                     // put carries state_len/chunks words and consecutive

@@ -24,11 +24,13 @@
 //! communication is "free" in the paper's sense; the price is exactly the
 //! uncertainty catalogued above.
 
+pub mod sched;
 pub mod segment;
 pub mod stats;
 pub mod topology;
 
-pub use segment::{ChunkLayout, ReadOutcome, Segment, SlotSnapshot};
+pub use sched::{AdaptiveController, DirtyMap};
+pub use segment::{ChunkLayout, ReadOutcome, Segment, SlotSnapshot, MAX_GROUP_BLOCKS};
 pub use stats::{CommStats, WorldStats};
 pub use topology::Topology;
 
@@ -117,6 +119,34 @@ impl World {
             self.stats.rank(to).chunk_lost.add(1);
         }
     }
+
+    /// One-sided put of a contiguous *group* of state blocks as a single
+    /// coalesced message (adaptive communication): one `sent` put whose
+    /// payload is the group's combined words, with per-block accounting
+    /// on the `chunk_*` counters.  All member seqlocks are held across
+    /// the store ([`Segment::write_group`]), so coalescing lengthens the
+    /// torn window the controller feeds back on.
+    pub fn put_group(
+        &self,
+        from: usize,
+        to: usize,
+        iter: u64,
+        blocks: std::ops::Range<usize>,
+        payload: &[f32],
+        slot: usize,
+    ) {
+        debug_assert_ne!(from, to, "alg. 5 line 9: recipient != self");
+        let seg = &self.segments[to];
+        let n_blocks = blocks.len() as u64;
+        let lost = seg.write_group(slot, blocks, from as u32, iter, payload);
+        let tx = self.stats.rank(from);
+        tx.sent.add(1);
+        tx.chunk_sent.add(n_blocks);
+        tx.bytes_sent.add(4 * payload.len() as u64);
+        if lost > 0 {
+            self.stats.rank(to).chunk_lost.add(lost);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -168,6 +198,67 @@ mod tests {
         // untouched blocks stay stale
         let mut buf = vec![0.0f32; l.chunk_len(0)];
         assert_eq!(seg.read_block_into(0, 0, 0, &mut buf).0, ReadOutcome::Stale);
+    }
+
+    #[test]
+    fn group_put_counts_one_message_many_blocks() {
+        let w = World::new_chunked(2, 1, 10, 4, Topology::flat(2));
+        let l = w.layout();
+        let words = l.blocks_bounds(1..4);
+        let payload = vec![3.0f32; words.len()];
+        w.put_group(0, 1, 5, 1..4, &payload, 0);
+        let t = w.stats.total();
+        assert_eq!(t.sent, 1, "a coalesced group is one put");
+        assert_eq!(t.chunk_sent, 3, "...covering three blocks");
+        assert_eq!(t.bytes_sent, 4 * words.len() as u64);
+        // each member block reads fresh independently
+        for c in 1..4 {
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            let (out, sender, _, _) = w.segments[1].read_block_into(0, c, 0, &mut buf);
+            assert_eq!(out, ReadOutcome::Fresh);
+            assert_eq!(sender, 0);
+        }
+        let mut buf = vec![0.0f32; l.chunk_len(0)];
+        assert_eq!(w.segments[1].read_block_into(0, 0, 0, &mut buf).0, ReadOutcome::Stale);
+    }
+
+    /// Send-skip regression over the real substrate (mirror of PR 1's
+    /// send-interval schedule test): a sender whose writes touch only
+    /// block 0 issues exactly the block-0 puts, skips the rest, and the
+    /// receiver sees freshness in block 0 alone.
+    #[test]
+    fn dirty_scheduling_sends_only_touched_blocks() {
+        use crate::gaspi::sched::{plan_send_into, DirtyMap};
+        let w = World::new_chunked(2, 1, 32, 8, Topology::flat(2));
+        let phys = w.layout();
+        let grouping = ChunkLayout::new(8, 8); // one block per group
+        let mut dirty = DirtyMap::all_dirty(8);
+        dirty.clear(0..8);
+        let mut plan = Vec::new();
+        let state = vec![1.5f32; 32];
+        for t in 0..5u64 {
+            dirty.mark(0); // the model only ever writes block 0
+            let skipped = plan_send_into(&grouping, &dirty, &mut plan);
+            w.stats.rank(0).chunk_skipped.add(skipped);
+            for blocks in &plan {
+                let words = phys.blocks_bounds(blocks.clone());
+                w.put_group(0, 1, t, blocks.clone(), &state[words], 0);
+                dirty.clear(blocks.clone());
+            }
+        }
+        let t = w.stats.total();
+        assert_eq!(t.sent, 5, "exactly the block-0 puts");
+        assert_eq!(t.chunk_sent, 5);
+        assert_eq!(t.chunk_skipped, 5 * 7, "the other 7 blocks skipped per event");
+        // the schedule identity: every block of every event accounted for
+        assert_eq!(t.chunk_sent + t.chunk_skipped, 5 * 8);
+        let seg = &w.segments[1];
+        let mut buf = vec![0.0f32; phys.chunk_len(0)];
+        assert_eq!(seg.read_block_into(0, 0, 0, &mut buf).0, ReadOutcome::Fresh);
+        for c in 1..8 {
+            let mut buf = vec![0.0f32; phys.chunk_len(c)];
+            assert_eq!(seg.read_block_into(0, c, 0, &mut buf).0, ReadOutcome::Stale);
+        }
     }
 
     #[test]

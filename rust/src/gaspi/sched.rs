@@ -1,0 +1,365 @@
+//! Feedback-driven send scheduling (the adaptive-communication core).
+//!
+//! Two cooperating pieces, both sender-side:
+//!
+//! * [`DirtyMap`] — a per-physical-block dirty bitmap.  The SGD inner
+//!   loop marks the blocks its write actually touched (gradient support
+//!   plus the merge's per-block touch mask), and [`plan_send_into`]
+//!   rounds only over dirty blocks at each send event, so sparse
+//!   workloads (K-Means with few moved centers, sparse linear gradients)
+//!   stop paying for untouched state.
+//!
+//! * [`AdaptiveController`] — re-derives a sender's *logical* chunk
+//!   count from the torn/lost rates [`crate::gaspi::stats`] already
+//!   tracks: a high torn rate means the coalesced seqlock windows are
+//!   too long (split into more, smaller groups), a near-zero rate means
+//!   puts are needlessly fine (coalesce).  The data plane stays at the
+//!   fixed physical granularity of `max_chunks` blocks; a re-layout only
+//!   changes how those blocks are *grouped* into puts, published through
+//!   the segment's versioned layout word
+//!   ([`crate::gaspi::Segment::advertise_layout`]) — which is what makes
+//!   the transition wait-free and immune to boundary misreads.
+
+use super::segment::{ChunkLayout, MAX_GROUP_BLOCKS};
+use super::stats::StatsSnapshot;
+
+/// Torn-block rate above which a sender splits (doubles its chunk count):
+/// the coalesced windows are long enough that readers keep racing them.
+pub const SPLIT_TORN_RATE: f64 = 0.05;
+/// Torn-block rate below which a sender coalesces (halves its chunk
+/// count): the substrate is quiet, so fewer/larger puts cost nothing.
+pub const COALESCE_TORN_RATE: f64 = 0.005;
+/// Lost-block rate above which a sender splits regardless of torn rate:
+/// whole coalesced payloads are being clobbered before anyone reads them,
+/// so smaller independent blocks lose less per clobber.
+pub const SPLIT_LOST_RATE: f64 = 0.5;
+
+/// Per-block dirty bitmap over the physical block layout (at most
+/// [`MAX_GROUP_BLOCKS`] blocks — the same u64-mask policy as the merge
+/// gate's buffer mask).
+#[derive(Clone, Copy, Debug)]
+pub struct DirtyMap {
+    bits: u64,
+    n_blocks: usize,
+}
+
+impl DirtyMap {
+    fn full_mask(n_blocks: usize) -> u64 {
+        if n_blocks == 64 {
+            u64::MAX
+        } else {
+            (1u64 << n_blocks) - 1
+        }
+    }
+
+    /// A map with every block dirty (the safe initial state: the first
+    /// send ships everything).
+    pub fn all_dirty(n_blocks: usize) -> Self {
+        assert!(
+            (1..=MAX_GROUP_BLOCKS).contains(&n_blocks),
+            "dirty map over {n_blocks} blocks (1..={MAX_GROUP_BLOCKS})"
+        );
+        Self {
+            bits: Self::full_mask(n_blocks),
+            n_blocks,
+        }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    pub fn mark(&mut self, block: usize) {
+        debug_assert!(block < self.n_blocks);
+        self.bits |= 1 << block;
+    }
+
+    /// OR in a per-block mask (bit `b` = physical block `b`); bits beyond
+    /// the map's block count are ignored, so a conservative all-ones mask
+    /// is always safe.
+    pub fn mark_mask(&mut self, mask: u64) {
+        self.bits |= mask & Self::full_mask(self.n_blocks);
+    }
+
+    pub fn mark_all(&mut self) {
+        self.bits = Self::full_mask(self.n_blocks);
+    }
+
+    /// Post-step marking used by the worker: every block whose slice of
+    /// `grad` holds a non-zero entry, plus the merge's touched-block mask
+    /// (`MergeOut::touched`).  The blocked merge moves a coordinate only
+    /// where the local gradient is non-zero or its block accepted an
+    /// external buffer, so this marking is exact for the native path;
+    /// conservative over-marking (e.g. an all-ones mask) is always sound.
+    pub fn mark_after_step(&mut self, layout: &ChunkLayout, grad: &[f32], touched_mask: u64) {
+        debug_assert_eq!(grad.len(), layout.state_len);
+        debug_assert_eq!(layout.n_chunks(), self.n_blocks);
+        self.mark_mask(touched_mask);
+        for (b, range) in layout.iter_bounds().enumerate() {
+            if !self.is_dirty(b) && grad[range].iter().any(|&g| g != 0.0) {
+                self.mark(b);
+            }
+        }
+    }
+
+    pub fn is_dirty(&self, block: usize) -> bool {
+        debug_assert!(block < self.n_blocks);
+        self.bits & (1 << block) != 0
+    }
+
+    pub fn any_dirty(&self, blocks: std::ops::Range<usize>) -> bool {
+        blocks.into_iter().any(|b| self.is_dirty(b))
+    }
+
+    pub fn clear(&mut self, blocks: std::ops::Range<usize>) {
+        for b in blocks {
+            debug_assert!(b < self.n_blocks);
+            self.bits &= !(1 << b);
+        }
+    }
+
+    pub fn count_dirty(&self) -> usize {
+        self.bits.count_ones() as usize
+    }
+}
+
+/// Plan one send event: fill `out` with the dirty groups (each a
+/// contiguous run of physical block indices under `grouping`) and return
+/// the number of clean blocks skipped.  Every physical block of the
+/// layout is either covered by an emitted group or counted skipped —
+/// the accounting identity `chunk_sent + chunk_skipped = events x blocks`
+/// the schedule tests pin.  A partially dirty group is sent whole
+/// (coalescing trades payload precision for fewer puts); only fully
+/// clean groups are skipped.
+pub fn plan_send_into(
+    grouping: &ChunkLayout,
+    dirty: &DirtyMap,
+    out: &mut Vec<std::ops::Range<usize>>,
+) -> u64 {
+    debug_assert_eq!(grouping.state_len, dirty.n_blocks());
+    out.clear();
+    let mut skipped = 0u64;
+    for g in 0..grouping.n_chunks() {
+        let blocks = grouping.bounds(g);
+        if dirty.any_dirty(blocks.clone()) {
+            out.push(blocks);
+        } else {
+            skipped += blocks.len() as u64;
+        }
+    }
+    skipped
+}
+
+/// The per-sender feedback controller: every `interval` send events it
+/// re-derives the logical chunk count from the world-wide torn/lost
+/// deltas since its last decision.  Pure bookkeeping (no atomics, no
+/// world access), so the policy is unit-testable with synthetic
+/// snapshots.
+#[derive(Clone, Debug)]
+pub struct AdaptiveController {
+    min_chunks: usize,
+    max_chunks: usize,
+    interval: usize,
+    events: usize,
+    cur: usize,
+    prev: StatsSnapshot,
+}
+
+impl AdaptiveController {
+    /// Starts coalesced (`min_chunks`): puts are cheapest until observed
+    /// contention argues for splitting.
+    pub fn new(min_chunks: usize, max_chunks: usize, interval: usize) -> Self {
+        assert!(
+            1 <= min_chunks && min_chunks <= max_chunks && max_chunks <= MAX_GROUP_BLOCKS,
+            "adaptive chunk bounds {min_chunks}..={max_chunks} outside 1..={MAX_GROUP_BLOCKS}"
+        );
+        assert!(interval >= 1);
+        Self {
+            min_chunks,
+            max_chunks,
+            interval,
+            events: 0,
+            cur: min_chunks,
+            prev: StatsSnapshot::default(),
+        }
+    }
+
+    /// Current logical chunk count.
+    pub fn chunks(&self) -> usize {
+        self.cur
+    }
+
+    /// Record one send event; every `interval` events the chunk count is
+    /// re-derived from the world totals.  `totals` is a thunk so the
+    /// caller only pays for the all-ranks counter sweep on deciding
+    /// events, not on every send.  Returns `Some(new_count)` exactly
+    /// when a re-layout happened (the caller then advertises it on its
+    /// segment and bumps the `relayouts` counter).
+    pub fn on_send_event(&mut self, totals: impl FnOnce() -> StatsSnapshot) -> Option<usize> {
+        self.events += 1;
+        if self.events % self.interval != 0 {
+            return None;
+        }
+        let totals = totals();
+        let d_torn = totals.chunk_torn.saturating_sub(self.prev.chunk_torn);
+        let d_recv = totals.chunk_received.saturating_sub(self.prev.chunk_received);
+        let d_lost = totals.chunk_lost.saturating_sub(self.prev.chunk_lost);
+        let d_sent = totals.chunk_sent.saturating_sub(self.prev.chunk_sent);
+        self.prev = totals;
+        let consumed = d_torn + d_recv;
+        if consumed == 0 && d_sent == 0 {
+            // nothing observed since the last decision: keep the layout
+            return None;
+        }
+        let torn_rate = if consumed == 0 {
+            0.0
+        } else {
+            d_torn as f64 / consumed as f64
+        };
+        let lost_rate = if d_sent == 0 {
+            0.0
+        } else {
+            d_lost as f64 / d_sent as f64
+        };
+        let next = if torn_rate > SPLIT_TORN_RATE || lost_rate > SPLIT_LOST_RATE {
+            (self.cur * 2).min(self.max_chunks)
+        } else if torn_rate < COALESCE_TORN_RATE {
+            (self.cur / 2).max(self.min_chunks)
+        } else {
+            self.cur
+        };
+        if next == self.cur {
+            None
+        } else {
+            self.cur = next;
+            Some(next)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dirty_map_marks_and_clears() {
+        let mut d = DirtyMap::all_dirty(8);
+        assert_eq!(d.count_dirty(), 8);
+        d.clear(0..8);
+        assert_eq!(d.count_dirty(), 0);
+        d.mark(3);
+        assert!(d.is_dirty(3) && !d.is_dirty(2));
+        assert!(d.any_dirty(2..5));
+        assert!(!d.any_dirty(4..8));
+        d.mark_mask(u64::MAX); // conservative masks are clipped, not UB
+        assert_eq!(d.count_dirty(), 8);
+        let full = DirtyMap::all_dirty(64);
+        assert_eq!(full.count_dirty(), 64);
+    }
+
+    #[test]
+    fn mark_after_step_is_grad_support_union_touch_mask() {
+        let l = ChunkLayout::new(12, 4); // 3 words per block
+        let mut d = DirtyMap::all_dirty(4);
+        d.clear(0..4);
+        let mut grad = vec![0.0f32; 12];
+        grad[7] = 0.25; // block 2
+        d.mark_after_step(&l, &grad, 0b0001); // merge touched block 0
+        assert!(d.is_dirty(0) && d.is_dirty(2));
+        assert!(!d.is_dirty(1) && !d.is_dirty(3));
+    }
+
+    #[test]
+    fn plan_covers_every_block_exactly_once() {
+        let grouping = ChunkLayout::new(8, 3); // groups 3+3+2 blocks
+        let mut d = DirtyMap::all_dirty(8);
+        d.clear(0..8);
+        d.mark(4); // dirties group 1 (blocks 3..6) only
+        let mut plan = Vec::new();
+        let skipped = plan_send_into(&grouping, &d, &mut plan);
+        assert_eq!(plan, vec![3..6]);
+        assert_eq!(skipped, 5); // groups 0 (3 blocks) and 2 (2 blocks) skipped whole
+        let sent_blocks: usize = plan.iter().map(|r| r.len()).sum();
+        assert_eq!(sent_blocks as u64 + skipped, 8);
+        // everything dirty -> nothing skipped, groups tile the blocks
+        d.mark_all();
+        let skipped = plan_send_into(&grouping, &d, &mut plan);
+        assert_eq!(skipped, 0);
+        assert_eq!(plan, vec![0..3, 3..6, 6..8]);
+        // nothing dirty -> everything skipped
+        d.clear(0..8);
+        let skipped = plan_send_into(&grouping, &d, &mut plan);
+        assert!(plan.is_empty());
+        assert_eq!(skipped, 8);
+    }
+
+    /// The regression the issue pins: a sender whose writes touch only
+    /// block 0 must put exactly the block-0 group and skip the rest.
+    #[test]
+    fn send_skip_schedule_for_single_dirty_block() {
+        let grouping = ChunkLayout::new(8, 8); // one block per group
+        let mut d = DirtyMap::all_dirty(8);
+        d.clear(0..8);
+        d.mark(0);
+        let mut plan = Vec::new();
+        let skipped = plan_send_into(&grouping, &d, &mut plan);
+        assert_eq!(plan, vec![0..1]);
+        assert_eq!(skipped, 7);
+    }
+
+    fn snap(torn: u64, recv: u64, lost: u64, sent: u64) -> StatsSnapshot {
+        StatsSnapshot {
+            chunk_torn: torn,
+            chunk_received: recv,
+            chunk_lost: lost,
+            chunk_sent: sent,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn controller_splits_on_torn_and_coalesces_when_quiet() {
+        let mut c = AdaptiveController::new(2, 16, 1);
+        assert_eq!(c.chunks(), 2);
+        // 20% torn -> split
+        assert_eq!(c.on_send_event(|| snap(20, 80, 0, 100)), Some(4));
+        // still torn -> split again, clamped at max
+        assert_eq!(c.on_send_event(|| snap(60, 160, 0, 200)), Some(8));
+        assert_eq!(c.on_send_event(|| snap(120, 240, 0, 300)), Some(16));
+        assert_eq!(c.on_send_event(|| snap(180, 320, 0, 400)), None); // at max
+        // quiet substrate -> coalesce back down, clamped at min
+        assert_eq!(c.on_send_event(|| snap(180, 1320, 0, 500)), Some(8));
+        assert_eq!(c.on_send_event(|| snap(180, 2320, 0, 600)), Some(4));
+        assert_eq!(c.on_send_event(|| snap(180, 3320, 0, 700)), Some(2));
+        assert_eq!(c.on_send_event(|| snap(180, 4320, 0, 800)), None); // at min
+        assert_eq!(c.chunks(), 2);
+    }
+
+    #[test]
+    fn controller_splits_on_heavy_loss() {
+        let mut c = AdaptiveController::new(1, 8, 1);
+        // no torn reads at all, but 80% of sent blocks clobbered unread
+        assert_eq!(c.on_send_event(|| snap(0, 10, 80, 100)), Some(2));
+    }
+
+    #[test]
+    fn controller_holds_in_the_dead_band_and_respects_cadence() {
+        let mut c = AdaptiveController::new(1, 16, 4);
+        // events 1..3: not yet at the cadence boundary
+        assert_eq!(c.on_send_event(|| snap(50, 50, 0, 10)), None);
+        assert_eq!(c.on_send_event(|| snap(60, 60, 0, 20)), None);
+        assert_eq!(c.on_send_event(|| snap(70, 70, 0, 30)), None);
+        // event 4 decides on the delta since event 0
+        assert_eq!(c.on_send_event(|| snap(80, 80, 0, 40)), Some(2));
+        // dead band: 2% torn is neither high nor near-zero
+        assert_eq!(c.on_send_event(|| snap(81, 81, 0, 50)), None);
+        assert_eq!(c.on_send_event(|| snap(82, 82, 0, 60)), None);
+        assert_eq!(c.on_send_event(|| snap(83, 83, 0, 70)), None);
+        assert_eq!(c.on_send_event(|| snap(81, 126, 0, 80)), None); // 1/47 ~ 2.1%
+        assert_eq!(c.chunks(), 2);
+        // an idle window (no consumes, no sends) keeps the layout
+        let mut idle = AdaptiveController::new(1, 16, 1);
+        assert_eq!(idle.on_send_event(StatsSnapshot::default), None);
+        assert_eq!(idle.chunks(), 1);
+    }
+}

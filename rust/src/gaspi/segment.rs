@@ -14,6 +14,12 @@
 
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
+/// Upper bound on blocks per coalesced group put (and on the adaptive
+/// physical block count): the dirty bitmap and the merge touch mask pack
+/// block selection into a `u64`, mirroring the `n_buffers <= 64` gate-mask
+/// policy.  `TrainConfig::validate` enforces this at the config level.
+pub const MAX_GROUP_BLOCKS: usize = 64;
+
 /// How a `state_len`-word state vector is split into contiguous blocks.
 ///
 /// The split is as even as possible: the first `state_len % chunks`
@@ -61,6 +67,26 @@ impl ChunkLayout {
     pub fn iter_bounds(&self) -> impl Iterator<Item = std::ops::Range<usize>> {
         let me = *self;
         (0..me.chunks).map(move |c| me.bounds(c))
+    }
+
+    /// Block index containing word `i` (the inverse of [`Self::bounds`]).
+    /// O(1): the first `state_len % chunks` blocks carry one extra word.
+    pub fn block_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.state_len);
+        let base = self.state_len / self.chunks;
+        let rem = self.state_len % self.chunks;
+        let fat = (base + 1) * rem; // words covered by the one-extra blocks
+        if i < fat {
+            i / (base + 1)
+        } else {
+            rem + (i - fat) / base
+        }
+    }
+
+    /// Word range covered by the contiguous block run `blocks`.
+    pub fn blocks_bounds(&self, blocks: std::ops::Range<usize>) -> std::ops::Range<usize> {
+        debug_assert!(!blocks.is_empty() && blocks.end <= self.chunks);
+        self.bounds(blocks.start).start..self.bounds(blocks.end - 1).end
     }
 }
 
@@ -151,6 +177,15 @@ pub struct Segment {
     pub state_len: usize,
     layout: ChunkLayout,
     slots: Vec<Slot>,
+    /// The owner's advertised *logical* grouping, `(epoch << 32) | chunks`
+    /// (adaptive communication).  The data plane always stays at the
+    /// fixed physical granularity of `layout` — that is the whole
+    /// re-layout transition protocol: a logical re-layout only changes
+    /// how the sender groups physical blocks into coalesced puts, never
+    /// the block boundaries a reader interprets, so a reader holding the
+    /// old layout can never misread word ranges.  The epoch versions the
+    /// grouping for observers (stats, benches, adaptation audits).
+    layout_word: AtomicU64,
 }
 
 impl Segment {
@@ -170,6 +205,7 @@ impl Segment {
             slots: (0..n_slots)
                 .map(|_| Slot::new(state_len, layout.n_chunks()))
                 .collect(),
+            layout_word: AtomicU64::new(chunks as u64),
         }
     }
 
@@ -271,6 +307,89 @@ impl Segment {
         debug_assert_eq!(payload.len(), range.len());
         let s = &self.slots[slot];
         Self::write_block_inner(&s.blocks[block], &s.data[range], sender, iter, payload)
+    }
+
+    /// Wait-free one-sided put of a contiguous *group* of blocks as one
+    /// coalesced message (adaptive communication).  Every member block's
+    /// seqlock is entered before the first payload store and exited after
+    /// the last, so the torn window a reader can race with grows with the
+    /// group size — coalescing trades put count for window length, which
+    /// is exactly the feedback signal the adaptive controller consumes.
+    /// Returns the number of member blocks whose unconsumed payload was
+    /// clobbered.  `payload` must cover the group's combined word range.
+    pub fn write_group(
+        &self,
+        slot: usize,
+        blocks: std::ops::Range<usize>,
+        sender: u32,
+        iter: u64,
+        payload: &[f32],
+    ) -> u64 {
+        let n = blocks.len();
+        assert!(
+            (1..=MAX_GROUP_BLOCKS).contains(&n) && blocks.end <= self.layout.n_chunks(),
+            "group {blocks:?} outside [1, {MAX_GROUP_BLOCKS}] blocks or segment layout"
+        );
+        let words = self.layout.blocks_bounds(blocks.clone());
+        debug_assert_eq!(payload.len(), words.len());
+        let s = &self.slots[slot];
+        let mut v_in = [0u64; MAX_GROUP_BLOCKS];
+        let mut lost = 0u64;
+        // enter every member block before any store: a reader of any of
+        // them sees a writer inside for the whole coalesced put
+        for (j, b) in s.blocks[blocks.clone()].iter().enumerate() {
+            if b.writes.load(Ordering::Relaxed) > b.consumed.load(Ordering::Relaxed) {
+                lost += 1;
+            }
+            b.active.fetch_add(1, Ordering::AcqRel);
+            v_in[j] = b.version.fetch_add(1, Ordering::AcqRel) + 1;
+            b.sender.store(sender, Ordering::Relaxed);
+            b.iter.store(iter, Ordering::Relaxed);
+        }
+        for (dst, &src) in s.data[words].iter().zip(payload) {
+            dst.store(src.to_bits(), Ordering::Relaxed);
+        }
+        // leave in the same order; the sole-settle (clean mark) check is
+        // per block, exactly as in `write_block_inner`
+        for (j, b) in s.blocks[blocks.clone()].iter().enumerate() {
+            let v_out = b.version.fetch_add(1, Ordering::AcqRel) + 1;
+            let remaining = b.active.fetch_sub(1, Ordering::AcqRel) - 1;
+            if remaining == 0 && v_out == v_in[j] + 1 {
+                b.clean.fetch_max(v_out, Ordering::AcqRel);
+            }
+            b.writes.fetch_add(1, Ordering::Relaxed);
+        }
+        lost
+    }
+
+    /// Publish the owner's current logical grouping (adaptive mode).
+    /// Bumps the layout epoch when the chunk count changes; returns the
+    /// epoch now in force.  Single-advertiser: only the segment's owner
+    /// calls this, so a plain load/store pair suffices.
+    pub fn advertise_layout(&self, chunks: usize) -> u64 {
+        debug_assert!((1..=self.layout.n_chunks()).contains(&chunks));
+        let cur = self.layout_word.load(Ordering::Acquire);
+        let (epoch, cur_chunks) = (cur >> 32, cur & u64::from(u32::MAX));
+        if cur_chunks == chunks as u64 {
+            return epoch;
+        }
+        let next = epoch + 1;
+        self.layout_word
+            .store((next << 32) | chunks as u64, Ordering::Release);
+        next
+    }
+
+    /// `(epoch, chunks)` of the owner's advertised logical grouping.
+    pub fn current_layout(&self) -> (u64, usize) {
+        let w = self.layout_word.load(Ordering::Acquire);
+        (w >> 32, (w & u64::from(u32::MAX)) as usize)
+    }
+
+    /// Diagnostic accessor for the stress suite: the block's clean mark
+    /// (the version of its last provably-sole settle).  Invariant under
+    /// test: this value never regresses.
+    pub fn clean_mark(&self, slot: usize, block: usize) -> u64 {
+        self.slots[slot].blocks[block].clean.load(Ordering::Acquire)
     }
 
     /// Snapshot one block of a slot into `buf` (which must have the
@@ -606,6 +725,90 @@ mod tests {
         let fresh = reader.join().unwrap();
         // sanity: the reader saw *something*
         assert!(fresh > 0 || seg.slot_writes(0) == 2 * iters);
+    }
+
+    #[test]
+    fn block_of_inverts_bounds() {
+        for &(len, chunks) in &[(10usize, 1usize), (10, 3), (7, 7), (128, 5), (30, 16), (64, 64)] {
+            let l = ChunkLayout::new(len, chunks);
+            for (c, r) in l.iter_bounds().enumerate() {
+                for i in r {
+                    assert_eq!(l.block_of(i), c, "len={len} chunks={chunks} word={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_bounds_covers_contiguous_runs() {
+        let l = ChunkLayout::new(10, 4); // blocks 3+3+2+2
+        assert_eq!(l.blocks_bounds(0..4), 0..10);
+        assert_eq!(l.blocks_bounds(1..3), 3..8);
+        assert_eq!(l.blocks_bounds(2..3), l.bounds(2));
+    }
+
+    #[test]
+    fn group_write_is_one_message_across_blocks() {
+        let seg = Segment::new_chunked(0, 1, 10, 4);
+        let l = seg.layout();
+        let words = l.blocks_bounds(1..3);
+        let payload: Vec<f32> = (0..words.len()).map(|i| i as f32 + 0.5).collect();
+        assert_eq!(seg.write_group(0, 1..3, 9, 21, &payload), 0);
+        // member blocks read Fresh with the group's payload and metadata
+        let mut off = 0;
+        for c in 1..3 {
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            let (out, sender, iter, ver) = seg.read_block_into(0, c, 0, &mut buf);
+            assert_eq!(out, ReadOutcome::Fresh);
+            assert_eq!((sender, iter, ver), (9, 21, 2));
+            assert_eq!(buf, payload[off..off + l.chunk_len(c)]);
+            off += l.chunk_len(c);
+        }
+        // non-member blocks stay stale
+        let mut buf = vec![0.0f32; l.chunk_len(0)];
+        assert_eq!(seg.read_block_into(0, 0, 0, &mut buf).0, ReadOutcome::Stale);
+        let mut buf = vec![0.0f32; l.chunk_len(3)];
+        assert_eq!(seg.read_block_into(0, 3, 0, &mut buf).0, ReadOutcome::Stale);
+    }
+
+    #[test]
+    fn group_write_counts_clobbered_member_blocks() {
+        let seg = Segment::new_chunked(0, 1, 8, 4);
+        let l = seg.layout();
+        let one = vec![1.0f32; l.chunk_len(1)];
+        seg.write_block(0, 1, 1, 1, &one); // unread -> will be clobbered
+        let words = l.blocks_bounds(0..3);
+        let payload = vec![2.0f32; words.len()];
+        assert_eq!(seg.write_group(0, 0..3, 2, 2, &payload), 1);
+    }
+
+    #[test]
+    fn group_write_matches_write_block_for_singletons() {
+        let a = Segment::new_chunked(0, 1, 9, 3);
+        let b = Segment::new_chunked(0, 1, 9, 3);
+        let l = a.layout();
+        let payload = vec![7.0f32; l.chunk_len(2)];
+        a.write_block(0, 2, 5, 11, &payload);
+        b.write_group(0, 2..3, 5, 11, &payload);
+        let mut ba = vec![0.0f32; l.chunk_len(2)];
+        let mut bb = vec![0.0f32; l.chunk_len(2)];
+        assert_eq!(a.read_block_into(0, 2, 0, &mut ba), b.read_block_into(0, 2, 0, &mut bb));
+        assert_eq!(ba, bb);
+    }
+
+    #[test]
+    fn layout_word_versions_relayouts() {
+        let seg = Segment::new_chunked(0, 1, 32, 8);
+        assert_eq!(seg.current_layout(), (0, 8));
+        // advertising the current grouping is a no-op
+        assert_eq!(seg.advertise_layout(8), 0);
+        assert_eq!(seg.current_layout(), (0, 8));
+        // a change bumps the epoch
+        assert_eq!(seg.advertise_layout(2), 1);
+        assert_eq!(seg.current_layout(), (1, 2));
+        assert_eq!(seg.advertise_layout(4), 2);
+        assert_eq!(seg.advertise_layout(4), 2);
+        assert_eq!(seg.current_layout(), (2, 4));
     }
 
     /// Chunked puts from multiple writers must never yield a `Fresh` block

@@ -47,6 +47,12 @@ pub struct CommStats {
     pub chunk_torn: Counter,
     /// Chunked mode: unread blocks clobbered in this rank's buffers.
     pub chunk_lost: Counter,
+    /// Adaptive mode: clean (untouched-since-last-send) blocks this rank
+    /// skipped at send events instead of putting them.
+    pub chunk_skipped: Counter,
+    /// Adaptive mode: logical re-layouts (chunk-count changes) this rank
+    /// performed; each one bumps its segment's layout epoch.
+    pub relayouts: Counter,
 }
 
 /// Aggregated view of one rank's counters.
@@ -63,6 +69,8 @@ pub struct StatsSnapshot {
     pub chunk_received: u64,
     pub chunk_torn: u64,
     pub chunk_lost: u64,
+    pub chunk_skipped: u64,
+    pub relayouts: u64,
 }
 
 impl CommStats {
@@ -79,6 +87,8 @@ impl CommStats {
             chunk_received: self.chunk_received.get(),
             chunk_torn: self.chunk_torn.get(),
             chunk_lost: self.chunk_lost.get(),
+            chunk_skipped: self.chunk_skipped.get(),
+            relayouts: self.relayouts.get(),
         }
     }
 }
@@ -120,6 +130,8 @@ impl WorldStats {
             t.chunk_received += s.chunk_received;
             t.chunk_torn += s.chunk_torn;
             t.chunk_lost += s.chunk_lost;
+            t.chunk_skipped += s.chunk_skipped;
+            t.relayouts += s.relayouts;
         }
         t
     }
@@ -169,11 +181,15 @@ mod tests {
         ws.rank(1).chunk_received.add(5);
         ws.rank(1).chunk_torn.add(2);
         ws.rank(1).chunk_lost.add(1);
+        ws.rank(0).chunk_skipped.add(6);
+        ws.rank(1).relayouts.add(3);
         let t = ws.total();
         assert_eq!(t.chunk_sent, 8);
         assert_eq!(t.bytes_sent, 1024);
         assert_eq!(t.chunk_received, 5);
         assert_eq!(t.chunk_torn, 2);
         assert_eq!(t.chunk_lost, 1);
+        assert_eq!(t.chunk_skipped, 6);
+        assert_eq!(t.relayouts, 3);
     }
 }

@@ -12,6 +12,15 @@ pub struct MergeOut {
     pub n_good: usize,
     /// Buffers that were active (lambda = 1, eq. 3).
     pub n_active: usize,
+    /// Per-block touch mask for the dirty-block send scheduler: bit `j`
+    /// set iff the `j`-th yielded block merged at least one accepted
+    /// buffer (i.e. moved beyond the plain `w - eps*delta` step there).
+    /// Exact for up to 64 blocks; if a later block is touched the mask
+    /// saturates to all-ones (conservative over-marking is sound — the
+    /// adaptive transport caps its block count at 64, larger layouts
+    /// only occur in modes that never consume the mask).  For the
+    /// full-state merges the whole state is one block (bit 0).
+    pub touched: u64,
 }
 
 /// eq. (4): accept iff the external state is strictly closer to the
@@ -86,6 +95,7 @@ pub fn asgd_merge(
         }
     }
     out.n_good = n_good;
+    out.touched = if n_good > 0 { 1 } else { 0 };
 
     // eq. (6): mean = (sum_sel + w)/(n_good + 1);
     // w_next = w - eps*(w - mean + delta)
@@ -132,6 +142,7 @@ pub fn asgd_merge_ungated(
         }
     }
     out.n_good = out.n_active; // lambda only (eq. 3)
+    out.touched = if out.n_good > 0 { 1 } else { 0 };
 
     let inv = 1.0f32 / (out.n_good as f32 + 1.0);
     for i in 0..len {
@@ -186,8 +197,9 @@ where
     // no second scan of `exts`, no per-call allocation.
     let mut contributed = 0u64;
     let mut active_union = 0u64;
+    let mut touched = 0u64;
 
-    for range in blocks {
+    for (block_idx, range) in blocks.into_iter().enumerate() {
         let wr = &w[range.clone()];
         let pr = &scratch_prop[range.clone()];
         // gate per buffer on this block
@@ -205,6 +217,12 @@ where
                 contributed |= 1 << nb;
             }
         }
+        if n_sel > 0 {
+            // dirty-scheduler touch mask; block 64+ saturates (see
+            // `MergeOut::touched` — conservative, and unreachable for
+            // the adaptive transport, which caps blocks at 64)
+            touched |= if block_idx < 64 { 1 << block_idx } else { u64::MAX };
+        }
         let inv = 1.0f32 / (n_sel as f32 + 1.0);
         for i in range {
             let mut sel_sum = 0.0f32;
@@ -221,6 +239,7 @@ where
     }
     out.n_good = contributed.count_ones() as usize;
     out.n_active = active_union.count_ones() as usize;
+    out.touched = touched;
     out
 }
 
@@ -264,7 +283,9 @@ where
 /// Per-center variant (§4.4): the gate is evaluated independently per
 /// cluster-center row of `[k, d]`-shaped states — the row blocks are just
 /// the uniform special case of [`asgd_merge_blocked`].  Matches
-/// `ref.asgd_merge_percenter`.
+/// `ref.asgd_merge_percenter`.  Note the returned `touched` mask is per
+/// *row*, not per transport block — which is why `validate()` refuses
+/// `gate=per-center` with the adaptive (dirty-tracking) transport.
 pub fn asgd_merge_percenter(
     w: &mut [f32],
     delta: &[f32],
@@ -444,6 +465,45 @@ mod tests {
             assert!((w[j] - w_prop[j]).abs() < 1e-6);
         }
         assert!((w[0] - w_prop[0]).abs() > 1e-6);
+        // ...and the touch mask reports exactly the merged block
+        assert_eq!(out.touched, 0b01);
+    }
+
+    /// The touch mask is the per-block contract of the dirty scheduler:
+    /// bit j set exactly when block j moved beyond the plain step.
+    #[test]
+    fn touched_mask_tracks_merged_blocks() {
+        let len = 8; // four 2-word blocks
+        let w0 = vec![0.0f32; len];
+        let delta = vec![0.1f32; len];
+        let eps = 0.5f32;
+        let w_prop: Vec<f32> = w0.iter().zip(&delta).map(|(a, b)| a - eps * b).collect();
+        // buffer: perfect in blocks 1 and 3, zero in block 0, garbage in 2
+        let mut ext = vec![0.0f32; len];
+        ext[2..4].copy_from_slice(&w_prop[2..4]);
+        ext[4..6].fill(100.0);
+        ext[6..8].copy_from_slice(&w_prop[6..8]);
+        let mut w = w0.clone();
+        let mut scratch = vec![0.0; len];
+        let blocks = [0..2usize, 2..4, 4..6, 6..8];
+        let out = asgd_merge_blocked(&mut w, &delta, &ext, eps, blocks.clone(), &mut scratch);
+        assert_eq!(out.touched, 0b1010);
+        // coordinates outside touched blocks took exactly the plain step
+        for j in [0, 1, 4, 5] {
+            assert!((w[j] - w_prop[j]).abs() < 1e-6);
+        }
+        // ungated: every active block is touched (block 0 stays inactive)
+        let mut w = w0.clone();
+        let out = asgd_merge_blocked_ungated(&mut w, &delta, &ext, eps, blocks, &mut scratch);
+        assert_eq!(out.touched, 0b1110);
+        // full-state merges report the single logical block
+        let mut w = w0.clone();
+        let out = asgd_merge(&mut w, &delta, &w_prop, eps, &mut scratch);
+        assert_eq!((out.n_good, out.touched), (1, 1));
+        let mut w = w0.clone();
+        let far: Vec<f32> = w0.iter().map(|v| v + 1e5).collect();
+        let out = asgd_merge(&mut w, &delta, &far, eps, &mut scratch);
+        assert_eq!((out.n_good, out.touched), (0, 0));
     }
 
     #[test]

@@ -37,6 +37,8 @@ pub fn report_json(report: &RunReport) -> Json {
         .num("blocks_received", report.comm.chunk_received as f64)
         .num("blocks_torn", report.comm.chunk_torn as f64)
         .num("blocks_lost", report.comm.chunk_lost as f64)
+        .num("blocks_skipped", report.comm.chunk_skipped as f64)
+        .num("relayouts", report.comm.relayouts as f64)
         .build()
 }
 

@@ -13,7 +13,7 @@
 
 use super::engine::XlaHandle;
 use super::manifest::Manifest;
-use crate::config::{BackendKind, GateMode, TrainConfig};
+use crate::config::{BackendKind, CommMode, GateMode, TrainConfig};
 use crate::models::Model;
 use crate::optim::AsgdUpdate;
 use anyhow::{bail, Context, Result};
@@ -27,6 +27,11 @@ pub struct IterOut {
     pub n_good: usize,
     /// External buffers that were active.
     pub n_active: usize,
+    /// Per-transport-block merge touch mask for the dirty scheduler
+    /// ([`crate::kernels::merge::MergeOut::touched`]); `u64::MAX` means
+    /// "unknown — treat every block as touched" (fused backends that do
+    /// not expose the merge internals).
+    pub touched_blocks: u64,
 }
 
 /// Reusable per-worker scratch.
@@ -88,6 +93,7 @@ impl Stepper for NativeStepper {
             loss,
             n_good: out.n_good,
             n_active: out.n_active,
+            touched_blocks: out.touched,
         })
     }
 
@@ -191,6 +197,9 @@ impl Stepper for XlaStepper {
             // the artifact's lambda counts only non-zero buffers; report
             // the same quantity natively for consistency
             n_active: count_active(exts, self.k * self.d),
+            // the fused artifact replaces w wholesale — no merge
+            // internals to report, so every block counts as touched
+            touched_blocks: u64::MAX,
         })
     }
 
@@ -319,6 +328,7 @@ impl Stepper for XlaGradStepper {
             loss,
             n_good: m.n_good,
             n_active: m.n_active,
+            touched_blocks: m.touched,
         })
     }
 
@@ -359,12 +369,15 @@ pub fn build_stepper(cfg: &TrainConfig, model: Arc<dyn Model>) -> Result<Arc<dyn
             let manifest = Manifest::load(&cfg.artifact_dir)?;
             match cfg.model {
                 crate::config::ModelKind::KMeans { .. } => {
-                    if cfg.comm.chunks() > 1 {
-                        // the fused artifact gates whole states; partial
-                        // (per-block) buffers would be mis-gated
+                    if cfg.comm.chunks() > 1 || matches!(cfg.comm, CommMode::Adaptive { .. }) {
+                        // the fused artifact gates whole states (partial
+                        // per-block buffers would be mis-gated) and cannot
+                        // report the touch mask the dirty scheduler needs —
+                        // refused even for adaptive at max_chunks = 1
                         bail!(
-                            "comm=chunked needs --backend native for K-Means \
-                             (the fused XLA artifact gates full states)"
+                            "comm={} needs --backend native for K-Means \
+                             (the fused XLA artifact gates full states)",
+                            cfg.comm.name()
                         );
                     }
                     let s = XlaStepper::from_config(cfg, &manifest, handle)?;

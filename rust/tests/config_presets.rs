@@ -41,6 +41,18 @@ fn hard_overlap_preset_trains_shrunk() {
 }
 
 #[test]
+fn adaptive_preset_carries_the_span_and_cadence() {
+    let cfg = TrainConfig::from_toml_file("configs/adaptive_comm.toml").unwrap();
+    assert_eq!(
+        cfg.comm,
+        asgd::config::CommMode::Adaptive { min_chunks: 2, max_chunks: 16 }
+    );
+    assert_eq!(cfg.comm.chunks(), 16, "segments allocate at the ceiling");
+    assert_eq!(cfg.adapt_interval, 16);
+    assert_eq!(cfg.gate, GateMode::FullState);
+}
+
+#[test]
 fn codebook_preset_is_hog_d128() {
     let cfg = TrainConfig::from_toml_file("configs/paper_codebook.toml").unwrap();
     assert_eq!(cfg.data.dim, 128);

@@ -1,6 +1,12 @@
 //! Smoke tests over the figure harness: every runner executes in quick
-//! mode, writes its CSV, and passes its own shape checks.
+//! mode, writes its CSV, and passes its own shape checks.  Also runs the
+//! comm-mode presets (`configs/chunked_comm.toml`,
+//! `configs/adaptive_comm.toml`) end-to-end for a few iterations, so the
+//! shipped knob files exercise the real training path, not just the
+//! parser.
 
+use asgd::config::{CommMode, TrainConfig};
+use asgd::coordinator::run_training;
 use asgd::harness::{run_figure, FIGURES};
 
 fn tmpdir(tag: &str) -> std::path::PathBuf {
@@ -49,6 +55,50 @@ fn realrun_figure14_silent_ablation() {
     let r = run_figure("14", &dir, true).unwrap();
     assert!(r.all_checks_pass(), "fig 14 failed shape checks");
     let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Regression: no chunked preset was ever trained end-to-end by the
+/// smoke suite — run both comm presets for a few iterations, shrunk for
+/// CI, and check their mode-specific accounting.
+#[test]
+fn comm_presets_train_end_to_end() {
+    for path in ["configs/chunked_comm.toml", "configs/adaptive_comm.toml"] {
+        let mut cfg = TrainConfig::from_toml_file(path)
+            .unwrap_or_else(|e| panic!("{path}: {e:#}"));
+        // shrink for CI: 4 workers x 24 iters on 20k samples
+        cfg.workers = 4;
+        cfg.iters = 24;
+        cfg.eval_every = 8;
+        cfg.eval_samples = 2048;
+        cfg.data.n_samples = 20_000;
+        cfg.validate().unwrap();
+        let report = run_training(&cfg).unwrap_or_else(|e| panic!("{path}: {e:#}"));
+        assert!(report.comm.chunk_sent > 0, "{path}: no block puts issued");
+        let first = report.trace.first().unwrap().objective;
+        let last = report.trace.last().unwrap().objective;
+        assert!(last < first, "{path}: objective did not descend {first} -> {last}");
+        // per-worker floor, then scale by workers (PR 1's send-interval
+        // schedule: floor(iters / interval) events fire per worker)
+        let events = 4 * (cfg.iters as u64 / cfg.send_interval as u64);
+        match cfg.comm {
+            CommMode::Chunked { chunks } => {
+                assert_eq!(report.comm.sent, report.comm.chunk_sent, "{path}");
+                assert_eq!(report.comm.chunk_sent, events * chunks as u64, "{path}");
+                assert_eq!(report.comm.chunk_skipped, 0, "{path}: chunked never skips");
+            }
+            CommMode::Adaptive { max_chunks, .. } => {
+                // the schedule identity: every physical block of every
+                // send event is either put or skipped
+                assert_eq!(
+                    report.comm.chunk_sent + report.comm.chunk_skipped,
+                    events * max_chunks as u64,
+                    "{path}"
+                );
+                assert!(report.comm.sent <= report.comm.chunk_sent, "{path}");
+            }
+            CommMode::Full => panic!("{path}: expected a chunked/adaptive preset"),
+        }
+    }
 }
 
 #[test]

@@ -8,10 +8,12 @@ use asgd::config::{AggMode, CommMode, GateMode, Method, RacePolicy, TrainConfig}
 use asgd::coordinator::run_training;
 use asgd::data::partition::partition;
 use asgd::data::synthetic;
-use asgd::gaspi::{ReadOutcome, Segment, Topology, World};
+use asgd::gaspi::sched::plan_send_into;
+use asgd::gaspi::{ChunkLayout, DirtyMap, ReadOutcome, Segment, Topology, World, MAX_GROUP_BLOCKS};
 use asgd::kernels::kmeans::{kmeans_stats, KmeansScratch};
 use asgd::kernels::merge::{asgd_merge, parzen_gate};
 use asgd::net::allreduce::TreeReduce;
+use asgd::optim::AsgdUpdate;
 use asgd::util::rng::Xoshiro256pp;
 use std::collections::HashSet;
 
@@ -363,6 +365,115 @@ fn prop_chunked_comm_converges_and_balances() {
         let first = report.trace.first().unwrap().objective;
         let last = report.trace.last().unwrap().objective;
         assert!(last < first, "chunks={chunks}: {first} -> {last}");
+    }
+}
+
+/// Property: adaptive re-layout round-trips — for any physical block
+/// count and every logical chunk count in `min..=max`, the grouping is a
+/// `ChunkLayout` whose groups tile the physical blocks exactly, and the
+/// groups' word ranges tile `state_len` exactly (no word is ever lost or
+/// double-sent across a re-layout).
+#[test]
+fn prop_adaptive_grouping_tiles_state_for_any_chunk_count() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::seed_from_u64(6000 + case);
+        let state_len = 1 + rng.index(4000);
+        let max_chunks = 1 + rng.index(MAX_GROUP_BLOCKS.min(state_len));
+        let min_chunks = 1 + rng.index(max_chunks);
+        let phys = ChunkLayout::new(state_len, max_chunks);
+        for logical in min_chunks..=max_chunks {
+            let grouping = ChunkLayout::new(max_chunks, logical);
+            let mut next_block = 0usize;
+            let mut next_word = 0usize;
+            for g in 0..grouping.n_chunks() {
+                let blocks = grouping.bounds(g);
+                assert_eq!(blocks.start, next_block, "case {case} logical {logical}");
+                assert!(!blocks.is_empty());
+                next_block = blocks.end;
+                let words = phys.blocks_bounds(blocks);
+                assert_eq!(words.start, next_word, "case {case} logical {logical}");
+                assert!(!words.is_empty());
+                next_word = words.end;
+            }
+            assert_eq!(next_block, max_chunks, "case {case}: groups must tile the blocks");
+            assert_eq!(next_word, state_len, "case {case}: words must tile the state");
+        }
+    }
+}
+
+/// Property: dirty-bitmap soundness — driving the *production* marking
+/// routine with the production merge, every coordinate that changed
+/// since the last send lies in a block the map holds dirty.  Simulated
+/// sends clear exactly the planned groups, so the invariant is checked
+/// across re-layouts and partial skips too.
+#[test]
+fn prop_dirty_bitmap_covers_every_write_since_last_send() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::seed_from_u64(7000 + case);
+        let state_len = 8 + rng.index(248);
+        let n_blocks = 1 + rng.index(MAX_GROUP_BLOCKS.min(state_len));
+        let n_buf = 1 + rng.index(4);
+        let eps = 0.05 + rng.next_f32() * 0.2;
+        let phys = ChunkLayout::new(state_len, n_blocks);
+        let update = AsgdUpdate {
+            gate: GateMode::FullState,
+            eps,
+            k: 1,
+            d: state_len,
+            comm_chunks: n_blocks,
+        };
+        let mut w: Vec<f32> = (0..state_len).map(|_| rng.next_normal() as f32).collect();
+        // reference copy of the state as of the last send, per block
+        let mut w_sent = w.clone();
+        let mut dirty = DirtyMap::all_dirty(n_blocks);
+        let mut scratch = vec![0.0f32; state_len];
+        let mut plan = Vec::new();
+        for step in 0..12 {
+            // sparse gradient: most coordinates zero, a few random ones hot
+            let mut grad = vec![0.0f32; state_len];
+            for _ in 0..1 + rng.index(state_len / 4 + 1) {
+                grad[rng.index(state_len)] = rng.next_normal() as f32 * 0.3;
+            }
+            // external buffers: mostly empty, occasionally one near the
+            // projected state so the gate sometimes accepts
+            let mut exts = vec![0.0f32; n_buf * state_len];
+            if rng.index(3) == 0 {
+                let nb = rng.index(n_buf);
+                for i in 0..state_len {
+                    exts[nb * state_len + i] = w[i] - eps * grad[i];
+                }
+            }
+            let out = update.apply(&mut w, &grad, &exts, &mut scratch);
+            dirty.mark_after_step(&phys, &grad, out.touched);
+            // soundness: everything that moved since the last send is
+            // in a dirty block
+            for i in 0..state_len {
+                if w[i] != w_sent[i] {
+                    assert!(
+                        dirty.is_dirty(phys.block_of(i)),
+                        "case {case} step {step}: word {i} changed in a clean block"
+                    );
+                }
+            }
+            // occasionally send under a random grouping, clearing dirty
+            // groups and refreshing the reference copy for them
+            if rng.index(2) == 0 {
+                let logical = 1 + rng.index(n_blocks);
+                let grouping = ChunkLayout::new(n_blocks, logical);
+                let skipped = plan_send_into(&grouping, &dirty, &mut plan);
+                let planned: usize = plan.iter().map(|r| r.len()).sum();
+                assert_eq!(
+                    planned as u64 + skipped,
+                    n_blocks as u64,
+                    "case {case}: every block put or skipped"
+                );
+                for blocks in &plan {
+                    let words = phys.blocks_bounds(blocks.clone());
+                    w_sent[words.clone()].copy_from_slice(&w[words]);
+                    dirty.clear(blocks.clone());
+                }
+            }
+        }
     }
 }
 

@@ -1,0 +1,317 @@
+//! Concurrency stress suite for the seqlock layer.
+//!
+//! The segment's standing invariants have grown subtle (torn re-poll
+//! versions, per-block clean marks, active-writer counters, and now
+//! coalesced group writes), so they get a dedicated multi-threaded
+//! suite instead of ad-hoc regression tests:
+//!
+//! * a `Fresh` read is always *sender-pure*: its payload is exactly one
+//!   completed write, never a mix of two senders' states;
+//! * the version a read reports back never decreases, and a torn
+//!   snapshot is never double-counted (the worker counts a torn version
+//!   at most once, bounded by the writers' version bumps);
+//! * clean marks never regress;
+//! * after the storm, a sole writer always recovers `Fresh` delivery.
+//!
+//! Every test runs a *seeded* schedule (the crate's own PRNG drives
+//! block order, groupings and payloads) with bounded iteration counts,
+//! so CI runs are deterministic in their inputs — thread interleaving
+//! varies, but the assertions are schedule-independent invariants.
+//! CI runs this file in release mode with explicit `--test-threads` so
+//! the writers and readers really overlap (see .github/workflows/ci.yml).
+
+use asgd::gaspi::{ChunkLayout, ReadOutcome, Segment};
+use asgd::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+
+/// Payload word encoding: every word of a write is `sender * STRIDE +
+/// iter`, so a sender-pure block is constant and decodes back to the
+/// metadata the seqlock reports.  Values stay far below 2^24, so the
+/// f32 round-trip is exact.
+const STRIDE: u64 = 100_000;
+
+fn encode(sender: u32, iter: u64) -> f32 {
+    (u64::from(sender) * STRIDE + iter) as f32
+}
+
+fn check_fresh_block(buf: &[f32], sender: u32, iter: u64, ctx: &str) {
+    let expect = encode(sender, iter);
+    for (i, &v) in buf.iter().enumerate() {
+        assert!(
+            v == expect,
+            "{ctx}: Fresh block not sender-pure at word {i}: \
+             got {v}, want {expect} (sender {sender}, iter {iter})"
+        );
+    }
+}
+
+/// N writers hammer overlapping blocks of one slot in seeded orders; M
+/// readers poll every block.  Core invariant: Fresh => sender-pure and
+/// metadata-consistent; reported versions are monotone.
+#[test]
+fn stress_block_writers_fresh_reads_are_sender_pure() {
+    for seed in [11u64, 12, 13] {
+        let state_len = 96;
+        let chunks = 8;
+        let iters = 1200u64;
+        let seg = Arc::new(Segment::new_chunked(0, 2, state_len, chunks));
+        let writers: Vec<_> = (1..=3u32)
+            .map(|id| {
+                let seg = seg.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Xoshiro256pp::seed_from_u64(seed * 1000 + u64::from(id));
+                    let l = seg.layout();
+                    for i in 0..iters {
+                        // seeded schedule: random slot, random block
+                        let slot = rng.index(2);
+                        let c = rng.index(l.n_chunks());
+                        let payload = vec![encode(id, i); l.chunk_len(c)];
+                        seg.write_block(slot, c, id, i, &payload);
+                    }
+                })
+            })
+            .collect();
+        let readers: Vec<_> = (0..2u64)
+            .map(|r| {
+                let seg = seg.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Xoshiro256pp::seed_from_u64(seed * 2000 + r);
+                    let l = seg.layout();
+                    let mut versions = vec![0u64; 2 * l.n_chunks()];
+                    let mut fresh = 0u64;
+                    for _ in 0..2 * iters {
+                        let slot = rng.index(2);
+                        let c = rng.index(l.n_chunks());
+                        let idx = slot * l.n_chunks() + c;
+                        let mut buf = vec![0.0f32; l.chunk_len(c)];
+                        let (out, sender, iter, v) =
+                            seg.read_block_into(slot, c, versions[idx], &mut buf);
+                        assert!(
+                            v >= versions[idx],
+                            "seed {seed}: reported version regressed {} -> {v}",
+                            versions[idx]
+                        );
+                        versions[idx] = v;
+                        if out == ReadOutcome::Fresh {
+                            fresh += 1;
+                            check_fresh_block(&buf, sender, iter, &format!("seed {seed}"));
+                        }
+                    }
+                    fresh
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        for r in readers {
+            r.join().unwrap();
+        }
+        // quiesced: one more sole write per block must deliver Fresh
+        let l = seg.layout();
+        for c in 0..l.n_chunks() {
+            let payload = vec![encode(9, 7777); l.chunk_len(c)];
+            seg.write_block(0, c, 9, 7777, &payload);
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            // last_version 0 is stale-safe here: the block was written
+            let (out, sender, iter, _) = seg.read_block_into(0, c, 0, &mut buf);
+            assert_eq!(out, ReadOutcome::Fresh, "seed {seed}: no recovery after storm");
+            check_fresh_block(&buf, sender, iter, &format!("seed {seed} recovery"));
+            assert_eq!((sender, iter), (9, 7777));
+        }
+    }
+}
+
+/// Writers using *different, changing* logical groupings (coalesced
+/// group puts over overlapping block runs) must still never let a Fresh
+/// block read mix senders — the adaptive re-layout overlap case: block
+/// boundaries are fixed, only the grouping varies, so purity holds per
+/// physical block no matter which groupings collide.
+#[test]
+fn stress_group_writers_with_rotating_groupings_stay_pure() {
+    for seed in [21u64, 22] {
+        let state_len = 120;
+        let chunks = 12;
+        let rounds = 500u64;
+        let seg = Arc::new(Segment::new_chunked(0, 1, state_len, chunks));
+        let writers: Vec<_> = (1..=3u32)
+            .map(|id| {
+                let seg = seg.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Xoshiro256pp::seed_from_u64(seed * 3000 + u64::from(id));
+                    let l = seg.layout();
+                    for i in 0..rounds {
+                        // a fresh seeded grouping every round: this
+                        // writer's logical chunk count in [1, chunks]
+                        let logical = 1 + rng.index(l.n_chunks());
+                        let grouping = ChunkLayout::new(l.n_chunks(), logical);
+                        for g in 0..grouping.n_chunks() {
+                            let blocks = grouping.bounds(g);
+                            let words = l.blocks_bounds(blocks.clone());
+                            let payload = vec![encode(id, i); words.len()];
+                            seg.write_group(0, blocks, id, i, &payload);
+                        }
+                    }
+                })
+            })
+            .collect();
+        let l = seg.layout();
+        let mut versions = vec![0u64; l.n_chunks()];
+        let mut rng = Xoshiro256pp::seed_from_u64(seed * 4000);
+        // the owner (this thread) re-advertises its logical grouping
+        // while readers and writers run: the layout word must version
+        // every change (epoch strictly monotone, chunks always in range)
+        let (mut last_epoch, mut last_chunks) = seg.current_layout();
+        for poll in 0..4 * rounds {
+            if poll % 64 == 0 {
+                let chunks = 1 + rng.index(l.n_chunks());
+                let advertised = seg.advertise_layout(chunks);
+                let (epoch, cur) = seg.current_layout();
+                assert_eq!(epoch, advertised, "seed {seed}: advertise/read epoch mismatch");
+                assert_eq!(cur, chunks, "seed {seed}: advertised chunks lost");
+                if chunks == last_chunks {
+                    assert_eq!(epoch, last_epoch, "seed {seed}: no-op advertise bumped epoch");
+                } else {
+                    assert_eq!(epoch, last_epoch + 1, "seed {seed}: re-layout must bump epoch");
+                }
+                (last_epoch, last_chunks) = (epoch, cur);
+            }
+            let c = rng.index(l.n_chunks());
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            let (out, sender, iter, v) = seg.read_block_into(0, c, versions[c], &mut buf);
+            assert!(v >= versions[c], "seed {seed}: version regressed");
+            versions[c] = v;
+            if out == ReadOutcome::Fresh {
+                check_fresh_block(&buf, sender, iter, &format!("seed {seed} group"));
+            }
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+    }
+}
+
+/// Torn accounting: mirroring the worker's `torn_seen` logic, a torn
+/// version is counted at most once, and the number of *distinct* torn
+/// versions a reader can ever see is bounded by the writers' version
+/// bumps (2 per write).  Clean marks observed alongside never regress.
+#[test]
+fn stress_torn_snapshots_not_double_counted_and_clean_marks_monotone() {
+    for seed in [31u64, 32] {
+        let state_len = 256;
+        let chunks = 4;
+        let iters = 900u64;
+        let seg = Arc::new(Segment::new_chunked(0, 1, state_len, chunks));
+        let writers: Vec<_> = (1..=2u32)
+            .map(|id| {
+                let seg = seg.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Xoshiro256pp::seed_from_u64(seed * 5000 + u64::from(id));
+                    let l = seg.layout();
+                    for i in 0..iters {
+                        // alternate coalesced and single-block puts
+                        if rng.index(2) == 0 {
+                            let words = l.blocks_bounds(0..l.n_chunks());
+                            let payload = vec![encode(id, i); words.len()];
+                            seg.write_group(0, 0..l.n_chunks(), id, i, &payload);
+                        } else {
+                            let c = rng.index(l.n_chunks());
+                            let payload = vec![encode(id, i); l.chunk_len(c)];
+                            seg.write_block(0, c, id, i, &payload);
+                        }
+                    }
+                })
+            })
+            .collect();
+        let l = seg.layout();
+        let mut versions = vec![0u64; l.n_chunks()];
+        let mut torn_seen = vec![u64::MAX; l.n_chunks()];
+        let mut clean_floor = vec![0u64; l.n_chunks()];
+        let mut counted_torn = 0u64;
+        for _ in 0..3 * iters {
+            for c in 0..l.n_chunks() {
+                let mut buf = vec![0.0f32; l.chunk_len(c)];
+                let (out, _, _, v) = seg.read_block_into(0, c, versions[c], &mut buf);
+                assert!(v >= versions[c], "seed {seed}: version regressed");
+                versions[c] = v;
+                match out {
+                    ReadOutcome::Torn => {
+                        // the worker counts a torn version once: a stalled
+                        // writer re-observed across polls must not inflate
+                        if torn_seen[c] != v {
+                            torn_seen[c] = v;
+                            counted_torn += 1;
+                        }
+                    }
+                    ReadOutcome::Fresh => torn_seen[c] = u64::MAX,
+                    ReadOutcome::Stale => {}
+                }
+                let mark = seg.clean_mark(0, c);
+                assert!(
+                    mark >= clean_floor[c],
+                    "seed {seed}: clean mark regressed {} -> {mark} (block {c})",
+                    clean_floor[c]
+                );
+                clean_floor[c] = mark;
+            }
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        // each write bumps a block's version twice, so distinct torn
+        // versions (hence counted torn events) cannot exceed the total
+        // bumps: 2 writers x iters writes, each touching <= chunks blocks
+        let max_block_writes = 2 * iters * chunks as u64;
+        assert!(
+            counted_torn <= 2 * max_block_writes,
+            "seed {seed}: counted {counted_torn} torn > bump bound {}",
+            2 * max_block_writes
+        );
+    }
+}
+
+/// Clean-mark recovery: after arbitrary overlapped chaos, a single sole
+/// writer's settle must always be readable as Fresh (the clean mark
+/// catches up), and its payload is the sole writer's.
+#[test]
+fn stress_sole_writer_recovers_fresh_after_group_chaos() {
+    for seed in [41u64, 42] {
+        let state_len = 64;
+        let chunks = 8;
+        let seg = Arc::new(Segment::new_chunked(0, 1, state_len, chunks));
+        let writers: Vec<_> = (1..=4u32)
+            .map(|id| {
+                let seg = seg.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Xoshiro256pp::seed_from_u64(seed * 7000 + u64::from(id));
+                    let l = seg.layout();
+                    for i in 0..600u64 {
+                        let logical = 1 + rng.index(l.n_chunks());
+                        let grouping = ChunkLayout::new(l.n_chunks(), logical);
+                        let g = rng.index(grouping.n_chunks());
+                        let blocks = grouping.bounds(g);
+                        let words = l.blocks_bounds(blocks.clone());
+                        let payload = vec![encode(id, i); words.len()];
+                        seg.write_group(0, blocks, id, i, &payload);
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        // storm over: a sole full put settles clean on every block
+        let l = seg.layout();
+        let words = l.blocks_bounds(0..l.n_chunks());
+        let payload = vec![encode(7, 4242); words.len()];
+        seg.write_group(0, 0..l.n_chunks(), 7, 4242, &payload);
+        for c in 0..l.n_chunks() {
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            let (out, sender, iter, v) = seg.read_block_into(0, c, 0, &mut buf);
+            assert_eq!(out, ReadOutcome::Fresh, "seed {seed}: block {c} stuck torn");
+            assert_eq!((sender, iter), (7, 4242));
+            assert_eq!(v, seg.clean_mark(0, c), "seed {seed}: Fresh off the clean mark");
+            check_fresh_block(&buf, sender, iter, &format!("seed {seed} sole"));
+        }
+    }
+}
