@@ -1,9 +1,23 @@
 //! Micro-benchmarks of the native numeric kernels — the L3 hot path.
 //! (`harness = false`: criterion is unavailable offline; this uses the
 //! crate's own BenchRunner with median-of-samples reporting.)
+//!
+//! Besides the per-kernel microbenches, this measures the PR-3 claim
+//! end-to-end at the kernel level: a `send_interval = 16` receive+merge
+//! workload where 15 of 16 polls are stale, run through (a) a faithful
+//! transcription of the pre-presence zeros-convention path (zero-fill
+//! every stale block, rescan every buffer for activity) and (b) the
+//! presence-masked path.  Results land in `BENCH_hotpath.json`
+//! (`ASGD_BENCH_OUT` to relocate, `ASGD_BENCH_QUICK=1` for the CI
+//! smoke) with ns/iter and external-buffer bytes touched per stale
+//! iteration, and the masked path must win by >= 1.5x.
 
+use asgd::gaspi::ChunkLayout;
 use asgd::kernels::kmeans::{kmeans_stats, kmeans_step, KmeansScratch};
-use asgd::kernels::merge::asgd_merge;
+use asgd::kernels::merge::{asgd_merge, asgd_merge_blocked, parzen_gate};
+use asgd::kernels::ExtPresence;
+use asgd::util::benchjson;
+use asgd::util::json::JsonBuilder;
 use asgd::util::rng::Xoshiro256pp;
 use asgd::util::timer::BenchRunner;
 
@@ -11,9 +25,203 @@ fn rand_vec(rng: &mut Xoshiro256pp, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.next_normal() as f32).collect()
 }
 
+/// Pre-PR merge: zeros-as-empty convention with per-block activity
+/// rescans (direct transcription of the seed's `merge_blocks_impl`,
+/// gated arm).  Kept here as the perf baseline the masked path is
+/// measured against.
+fn merge_zeros_convention(
+    w: &mut [f32],
+    delta: &[f32],
+    exts: &[f32],
+    eps: f32,
+    blocks: impl IntoIterator<Item = std::ops::Range<usize>>,
+    scratch_prop: &mut [f32],
+) -> usize {
+    let len = w.len();
+    let n_buf = exts.len() / len;
+    for i in 0..len {
+        scratch_prop[i] = w[i] - eps * delta[i];
+    }
+    let mut contributed = 0u64;
+    for range in blocks {
+        let wr = &w[range.clone()];
+        let pr = &scratch_prop[range.clone()];
+        let mut n_sel = 0usize;
+        let mut mask = 0u64;
+        for nb in 0..n_buf {
+            let ext = &exts[nb * len + range.start..nb * len + range.end];
+            let active = ext.iter().any(|&e| e != 0.0);
+            if active && parzen_gate(wr, pr, ext) {
+                mask |= 1 << nb;
+                n_sel += 1;
+                contributed |= 1 << nb;
+            }
+        }
+        let inv = 1.0f32 / (n_sel as f32 + 1.0);
+        for i in range {
+            let mut sel_sum = 0.0f32;
+            let mut bits = mask;
+            while bits != 0 {
+                let nb = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                sel_sum += exts[nb * len + i];
+            }
+            let mean = (sel_sum + w[i]) * inv;
+            let delta_bar = w[i] - mean + delta[i];
+            w[i] -= eps * delta_bar;
+        }
+    }
+    contributed.count_ones() as usize
+}
+
+/// The send_interval >= 16 receive+merge workload, both arms.
+fn hotpath_arms(runner: &mut BenchRunner) {
+    println!("\n== hot path: stale-poll receive+merge, zeros vs presence ==");
+    let (k, d, n_buf, chunks, interval) = (100usize, 128usize, 4usize, 16usize, 16usize);
+    let state_len = k * d;
+    let layout = ChunkLayout::new(state_len, chunks);
+    let mut rng = Xoshiro256pp::seed_from_u64(17);
+    let w0 = rand_vec(&mut rng, state_len);
+    let delta = rand_vec(&mut rng, state_len);
+    let payload = rand_vec(&mut rng, state_len); // the one fresh message
+    let mut scratch = vec![0.0f32; state_len];
+    let eps = 0.01f32;
+
+    // --- baseline: zero-fill stale blocks + zeros-convention merge ----
+    let mut w = w0.clone();
+    let mut exts = vec![0.0f32; n_buf * state_len];
+    let base = runner.bench(
+        &format!("hotpath baseline k={k} d={d} N={n_buf} c={chunks} i={interval}"),
+        interval as f64,
+        || {
+            w.copy_from_slice(&w0);
+            for t in 0..interval {
+                for nb in 0..n_buf {
+                    for c in 0..chunks {
+                        let words = layout.bounds(c);
+                        let lo = nb * state_len + words.start;
+                        let hi = nb * state_len + words.end;
+                        let dst = &mut exts[lo..hi];
+                        if t == 0 && nb == 0 {
+                            dst.copy_from_slice(&payload[words]); // fresh
+                        } else {
+                            dst.fill(0.0); // stale: zeros-as-empty
+                        }
+                    }
+                }
+                merge_zeros_convention(
+                    &mut w,
+                    &delta,
+                    &exts,
+                    eps,
+                    layout.iter_bounds(),
+                    &mut scratch,
+                );
+            }
+        },
+    )
+    .clone();
+    let base_ns_per_iter = base.median_ns / interval as f64;
+
+    // --- masked: presence bits, no fills, no rescans ------------------
+    let mut w = w0.clone();
+    let mut exts = vec![0.0f32; n_buf * state_len];
+    let mut presence = ExtPresence::new(n_buf, chunks);
+    let masked = runner.bench(
+        &format!("hotpath masked   k={k} d={d} N={n_buf} c={chunks} i={interval}"),
+        interval as f64,
+        || {
+            w.copy_from_slice(&w0);
+            for t in 0..interval {
+                for nb in 0..n_buf {
+                    presence.clear_buffer(nb);
+                    if t == 0 && nb == 0 {
+                        for c in 0..chunks {
+                            let words = layout.bounds(c);
+                            exts[words.start..words.end].copy_from_slice(&payload[words]);
+                            presence.set(0, c);
+                        }
+                    }
+                    // stale blocks: nothing — that is the whole point
+                }
+                asgd_merge_blocked(
+                    &mut w,
+                    &delta,
+                    &exts,
+                    &presence,
+                    eps,
+                    layout.iter_bounds(),
+                    &mut scratch,
+                );
+            }
+        },
+    )
+    .clone();
+    let masked_ns_per_iter = masked.median_ns / interval as f64;
+
+    // external-buffer bytes touched on a stale iteration (the emptiness
+    // traffic the mask removes): the baseline zero-fills and then
+    // rescans every word of every buffer; the masked path touches none.
+    let base_stale_bytes = (2 * 4 * n_buf * state_len) as f64;
+    let masked_stale_bytes = 0.0f64;
+    let speedup = base_ns_per_iter / masked_ns_per_iter;
+    println!(
+        "   baseline {base_ns_per_iter:.0} ns/iter ({base_stale_bytes:.0} ext B/stale iter) vs \
+         masked {masked_ns_per_iter:.0} ns/iter ({masked_stale_bytes:.0} B) -> {speedup:.2}x"
+    );
+
+    let section = JsonBuilder::new()
+        .val(
+            "workload",
+            JsonBuilder::new()
+                .num("k", k as f64)
+                .num("d", d as f64)
+                .num("state_len", state_len as f64)
+                .num("n_buffers", n_buf as f64)
+                .num("chunks", chunks as f64)
+                .num("send_interval", interval as f64)
+                .build(),
+        )
+        .val(
+            "arms",
+            JsonBuilder::new()
+                .val(
+                    "baseline_zeros",
+                    JsonBuilder::new()
+                        .num("ns_per_iter", base_ns_per_iter)
+                        .num("stale_ext_bytes_per_iter", base_stale_bytes)
+                        .build(),
+                )
+                .val(
+                    "masked_presence",
+                    JsonBuilder::new()
+                        .num("ns_per_iter", masked_ns_per_iter)
+                        .num("stale_ext_bytes_per_iter", masked_stale_bytes)
+                        .build(),
+                )
+                .build(),
+        )
+        .num("speedup", speedup)
+        .num("samples_per_arm", base.samples as f64)
+        .str("simd_isa", &format!("{:?}", asgd::kernels::simd::isa()))
+        .build();
+    benchjson::write_section("bench_kernels_hotpath", section).expect("bench json");
+
+    assert!(
+        speedup >= 1.5,
+        "presence-masked hot path must be >= 1.5x over the zeros baseline \
+         on the interval-{interval} workload (got {speedup:.2}x)"
+    );
+}
+
 fn main() {
     let mut rng = Xoshiro256pp::seed_from_u64(1);
-    let mut runner = BenchRunner::new();
+    let quick = benchjson::quick_mode();
+    let mut runner = if quick {
+        BenchRunner::quick()
+    } else {
+        BenchRunner::new()
+    };
     println!("== native kernel micro-benchmarks (units = samples or state elems per s) ==");
 
     // the paper's three kernel operating points
@@ -30,17 +238,18 @@ fn main() {
         });
     }
 
-    // the merge at the same state sizes, N=4 buffers
+    // the merge at the same state sizes, N=4 buffers, all present
     for &(k, d) in &[(10usize, 10usize), (100, 10), (100, 128)] {
         let len = k * d;
         let w0 = rand_vec(&mut rng, len);
         let delta = rand_vec(&mut rng, len);
         let exts = rand_vec(&mut rng, 4 * len);
+        let presence = ExtPresence::all_present(4, 1);
         let mut scratch = vec![0.0f32; len];
         let mut w = w0.clone();
         runner.bench(&format!("asgd_merge   k={k} d={d} N=4"), len as f64, || {
             w.copy_from_slice(&w0);
-            asgd_merge(&mut w, &delta, &exts, 0.05, &mut scratch);
+            asgd_merge(&mut w, &delta, &exts, &presence, 0.05, &mut scratch);
         });
     }
 
@@ -55,5 +264,7 @@ fn main() {
         "k=10 d=10 stats below 1M samples/s: {:.0}",
         s.throughput()
     );
+
+    hotpath_arms(&mut runner);
     println!("bench_kernels OK");
 }

@@ -31,20 +31,24 @@ fn main() {
         let x: Vec<f32> = (0..b * d).map(|_| rng.next_normal() as f32).collect();
         let w0: Vec<f32> = (0..k * d).map(|_| rng.next_normal() as f32).collect();
         let exts: Vec<f32> = (0..4 * k * d).map(|_| rng.next_normal() as f32).collect();
+        let presence = asgd::kernels::ExtPresence::all_present(4, 1);
         let mut scratch = StepScratch::default();
 
         let mut w = w0.clone();
         let nat = runner
             .bench(&format!("native k={k} d={d} b={b}"), b as f64, || {
                 w.copy_from_slice(&w0);
-                native.step(&x, None, &mut w, &exts, &mut scratch).unwrap();
+                native
+                    .step(&x, None, &mut w, &exts, &presence, &mut scratch)
+                    .unwrap();
             })
             .throughput();
         let mut w2 = w0.clone();
         let xl = runner
             .bench(&format!("xla    k={k} d={d} b={b}"), b as f64, || {
                 w2.copy_from_slice(&w0);
-                xla.step(&x, None, &mut w2, &exts, &mut scratch).unwrap();
+                xla.step(&x, None, &mut w2, &exts, &presence, &mut scratch)
+                    .unwrap();
             })
             .throughput();
         println!("   -> xla/native throughput ratio: {:.3}\n", xl / nat);

@@ -13,6 +13,8 @@
 use asgd::config::{CommMode, Method, TrainConfig};
 use asgd::coordinator::{run_training, with_method};
 use asgd::gaspi::{ReadOutcome, Segment};
+use asgd::util::benchjson;
+use asgd::util::json::{Json, JsonBuilder};
 use asgd::util::timer::BenchRunner;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -82,9 +84,16 @@ fn main() {
     assert!(r.comm.good <= r.comm.received);
     assert!(r.comm.received + r.comm.overwritten <= r.comm.sent + 8 * 4);
 
-    chunk_sweep_micro();
+    let sweep = chunk_sweep_micro();
     chunk_sweep_training();
-    adaptive_dirty_arm();
+    let adaptive = adaptive_dirty_arm();
+
+    // machine-readable trajectory for regression tracking across PRs
+    let section = JsonBuilder::new()
+        .val("chunk_sweep_micro", Json::Arr(sweep))
+        .val("adaptive_dirty", adaptive)
+        .build();
+    benchjson::write_section("paper_comm", section).expect("bench json");
     println!("paper_comm OK");
 }
 
@@ -93,10 +102,11 @@ fn main() {
 /// rate per block poll.  Smaller blocks mean shorter seqlock windows, so
 /// the rate must fall (monotonically, up to scheduler noise) while the
 /// per-put payload shrinks by exactly the chunk count.
-fn chunk_sweep_micro() {
+fn chunk_sweep_micro() -> Vec<Json> {
     println!("\n== chunk sweep (micro): torn-read rate vs chunk count ==");
     let state_len = 4096usize;
     let mut prev_rate = f64::INFINITY;
+    let mut out = Vec::new();
     for &chunks in &[1usize, 2, 4, 8, 16] {
         // median of 3 rounds: a writer thread preempted mid-write leaves
         // its block torn for the reader's whole timeslice, so a single
@@ -115,7 +125,15 @@ fn chunk_sweep_micro() {
              count (got {rate:.4} after {prev_rate:.4} at chunks={chunks})"
         );
         prev_rate = rate;
+        out.push(
+            JsonBuilder::new()
+                .num("chunks", chunks as f64)
+                .num("per_put_bytes", per_put_bytes as f64)
+                .num("torn_rate_median_of_3", rate)
+                .build(),
+        );
     }
+    out
 }
 
 /// One measurement round: two writers hammer a slot with per-block puts
@@ -173,7 +191,7 @@ fn torn_rate_round(state_len: usize, chunks: usize) -> f64 {
 /// max_chunks` pins the grouping, so dirty skipping is the only
 /// difference under measurement; a second free-span arm shows the
 /// controller's re-layout trajectory.
-fn adaptive_dirty_arm() {
+fn adaptive_dirty_arm() -> Json {
     println!("\n== adaptive/dirty arm: bytes vs chunked at equal ceiling ==");
     let chunks = 16usize;
     let base = || {
@@ -255,6 +273,16 @@ fn adaptive_dirty_arm() {
         "   adaptive 2..32: {} puts over {} blocks (+{} skipped), {} re-layouts",
         r.comm.sent, r.comm.chunk_sent, r.comm.chunk_skipped, r.comm.relayouts
     );
+
+    JsonBuilder::new()
+        .num("chunk_ceiling", chunks as f64)
+        .num("bytes_chunked_median_of_3", bytes_c as f64)
+        .num("bytes_adaptive_median_of_3", bytes_a as f64)
+        .num("objective_chunked", obj_c)
+        .num("objective_adaptive", obj_a)
+        .num("blocks_skipped_max", skipped as f64)
+        .num("free_span_relayouts", r.comm.relayouts as f64)
+        .build()
 }
 
 /// The same sweep end-to-end: chunked training keeps converging while the

@@ -11,8 +11,11 @@
 //! round-robins blocks across the fanout recipients (each put carries
 //! `state_len / chunks` words) and the receive path assembles per-block
 //! freshness into the external buffers — a buffer may hold fresh data in
-//! some blocks and zeros elsewhere, which the per-block Parzen gate
-//! handles downstream.
+//! only some blocks, which the per-block Parzen gate handles downstream.
+//!
+//! Delivery is tracked in an explicit [`ExtPresence`] mask (one bit per
+//! buffer and block) rather than by zero-filling undelivered regions:
+//! see the presence-mask contract in [`crate::kernels`].
 //!
 //! With [`crate::config::CommMode::Adaptive`] the receive path is the
 //! same (always at the fixed physical granularity of `max_chunks`
@@ -28,6 +31,7 @@ use crate::config::{CommMode, Method, RacePolicy, TrainConfig};
 use crate::data::partition::Shard;
 use crate::gaspi::sched::plan_send_into;
 use crate::gaspi::{AdaptiveController, ChunkLayout, DirtyMap, ReadOutcome, World};
+use crate::kernels::ExtPresence;
 use crate::metrics::TracePoint;
 use crate::models::Model;
 use crate::runtime::{StepScratch, Stepper};
@@ -100,6 +104,11 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
     let mut exts = vec![0.0f32; cfg.n_buffers * state_len];
     let layout = world.layout();
     let n_chunks = layout.n_chunks();
+    // per-(buffer, block) delivery mask, rebuilt every poll: a clear bit
+    // means the words underneath are unspecified and nobody reads them —
+    // stale blocks cost no zero-fill and no merge-side activity rescan.
+    // Stays all-clear for silent/SimuParallelSGD (no externals, ever).
+    let mut presence = ExtPresence::new(cfg.n_buffers, n_chunks);
     let chunked = n_chunks > 1;
     // one seqlock version per (slot, block)
     let mut block_versions = vec![0u64; cfg.n_buffers * n_chunks];
@@ -148,10 +157,15 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
 
     for t in 0..cfg.iters as u64 {
         // ---- receive path: wait-free snapshot of the external buffers --
+        // Presence replaces the zeros convention: a delivered block sets
+        // its bit, everything else leaves the bit clear and the buffer
+        // words untouched.  A stale poll therefore costs O(blocks) mask
+        // writes instead of O(n_buffers * state_len) zero-fill traffic.
         if communicate {
             let rx = stats.rank(rank);
             for slot in 0..cfg.n_buffers {
                 let ext = &mut exts[slot * state_len..(slot + 1) * state_len];
+                presence.clear_buffer(slot);
                 let mut any_fresh = false;
                 let mut any_torn = false;
                 for c in 0..n_chunks {
@@ -164,6 +178,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                         ReadOutcome::Fresh => {
                             any_fresh = true;
                             torn_seen[idx] = u64::MAX;
+                            presence.set(slot, c);
                             if block_accounting {
                                 rx.chunk_received.add(1);
                             }
@@ -171,23 +186,23 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                         ReadOutcome::Torn => {
                             let repeat = torn_seen[idx] == version;
                             torn_seen[idx] = version;
-                            if repeat {
-                                // same torn snapshot as last poll: already
-                                // counted (and, under AcceptTorn, already
-                                // merged) — treat as nothing new
-                                buf.fill(0.0);
-                            } else {
+                            if !repeat {
+                                // a repeat of the same torn snapshot —
+                                // e.g. a writer stalled mid-put — was
+                                // already counted (and, under AcceptTorn,
+                                // already merged): only a *new* torn
+                                // version counts or merges
                                 any_torn = true;
                                 if block_accounting {
                                     rx.chunk_torn.add(1);
                                 }
-                                if cfg.race == RacePolicy::DiscardTorn {
-                                    buf.fill(0.0);
+                                if cfg.race == RacePolicy::AcceptTorn {
+                                    // Hogwild-style: merge the mix
+                                    presence.set(slot, c);
                                 }
-                                // AcceptTorn: Hogwild-style, keep the mix
                             }
                         }
-                        ReadOutcome::Stale => buf.fill(0.0),
+                        ReadOutcome::Stale => {} // bit stays clear; no fill
                     }
                 }
                 // message-level accounting (fig. 12 semantics)
@@ -204,14 +219,12 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                     rx.stale_polls.add(1);
                 }
             }
-        } else if t == 0 {
-            exts.fill(0.0); // silent / SimuParallelSGD: never any externals
         }
 
         // ---- local mini-batch update (fig. 4 I-IV) ---------------------
         let (x, labels) = shard.next_batch(cfg.minibatch);
         let out = stepper
-            .step(x, labels, &mut w, &exts, &mut scratch)
+            .step(x, labels, &mut w, &exts, &presence, &mut scratch)
             .expect("stepper failed");
         stats.rank(rank).good.add(out.n_good as u64);
         global_samples.fetch_add(cfg.minibatch as u64, Ordering::Relaxed);

@@ -396,6 +396,11 @@ impl Segment {
     /// block's length).  `last_version` is the block version this reader
     /// saw on its previous visit (0 for never); pass the returned version
     /// back in next time.  Never blocks: a racing writer yields `Torn`.
+    ///
+    /// On `Stale` the fast path returns before copying anything — `buf`
+    /// is left exactly as the caller passed it.  Callers need not (and,
+    /// since the presence-mask receive path, do not) pre-zero it; the
+    /// payload words are only meaningful for `Fresh`/`Torn`.
     pub fn read_block_into(
         &self,
         slot: usize,

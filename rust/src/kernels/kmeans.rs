@@ -3,8 +3,12 @@
 //! Hot path of the `Native` backend: assignment + sufficient statistics
 //! for a mini-batch.  The inner loop is written dot-product style
 //! (`||w||^2 - 2 x.w`, matching the MXU formulation of the Pallas kernel)
-//! so the compiler can vectorize over `d`, and all buffers live in a
-//! reusable [`KmeansScratch`] to keep the training loop allocation-free.
+//! with the dot and the row update dispatched through
+//! [`crate::kernels::simd`] (AVX2+FMA when available, scalar otherwise),
+//! and all buffers live in a reusable [`KmeansScratch`] to keep the
+//! training loop allocation-free.
+
+use crate::kernels::simd;
 
 /// Mini-batch sufficient statistics.
 #[derive(Clone, Debug, Default)]
@@ -58,7 +62,7 @@ pub fn kmeans_stats(x: &[f32], w: &[f32], k: usize, d: usize, scratch: &mut Kmea
         let mut best_score = f32::INFINITY;
         for c in 0..k {
             let wr = &w[c * d..(c + 1) * d];
-            let score = scratch.wn[c] - 2.0 * dot_unrolled(xi, wr);
+            let score = scratch.wn[c] - 2.0 * simd::dot(xi, wr);
             if score < best_score {
                 best_score = score;
                 best = c;
@@ -91,28 +95,6 @@ pub fn kmeans_step(
     scratch.stats.loss
 }
 
-/// Dot product with four independent accumulators (breaks the FP add
-/// dependency chain so the compiler can keep SIMD lanes busy; §Perf L3
-/// iteration 1: +2.3x on the d=128 codebook workload).
-#[inline]
-fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
-    }
-    let mut tail = 0.0f32;
-    for j in chunks * 4..a.len() {
-        tail += a[j] * b[j];
-    }
-    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
-}
-
 /// `w -= eps * grad` with `grad = (counts.*w - sums)/b`.
 #[inline]
 pub fn apply_grad(w: &mut [f32], stats: &Stats, k: usize, d: usize, b: f32, eps: f32) {
@@ -121,13 +103,11 @@ pub fn apply_grad(w: &mut [f32], stats: &Stats, k: usize, d: usize, b: f32, eps:
         if count == 0.0 {
             continue; // empty cluster: zero gradient row
         }
-        let scale = eps * count / b;
+        // w - eps*(count*w - sum)/b  ==  w*(1 - eps*count/b) + sum*(eps/b)
+        let keep = 1.0 - eps * count / b;
         let sums = &stats.sums[c * d..(c + 1) * d];
         let row = &mut w[c * d..(c + 1) * d];
-        for j in 0..d {
-            // w - eps*(count*w - sum)/b  ==  w*(1 - eps*count/b) + eps*sum/b
-            row[j] = row[j] * (1.0 - scale) + eps * sums[j] / b;
-        }
+        simd::scale_combine(row, keep, sums, eps / b);
     }
 }
 

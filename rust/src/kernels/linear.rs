@@ -1,5 +1,9 @@
 //! Native linear-model mini-batch gradients (mirrors
-//! `python/compile/kernels/linear.py` / `ref.py`).
+//! `python/compile/kernels/linear.py` / `ref.py`).  The per-row dot and
+//! the rank-1 gradient accumulation run through the dispatched
+//! [`crate::kernels::simd`] layer.
+
+use crate::kernels::simd;
 
 /// Least-squares gradient: `grad = x^T (x w - y)/b`, `loss = ||r||^2/(2b)`.
 /// `x` is `[b, d]` flat; writes into `grad` (len d).  Returns the loss.
@@ -12,13 +16,8 @@ pub fn linreg_grad(x: &[f32], y: &[f32], w: &[f32], grad: &mut [f32]) -> f64 {
     let mut loss = 0.0f64;
     for i in 0..b {
         let xi = &x[i * d..(i + 1) * d];
-        let mut r = -y[i];
-        for j in 0..d {
-            r += xi[j] * w[j];
-        }
-        for j in 0..d {
-            grad[j] += r * xi[j];
-        }
+        let r = simd::dot(xi, w) - y[i];
+        simd::axpy(grad, r, xi);
         loss += 0.5 * (r as f64) * (r as f64);
     }
     let inv = 1.0 / b as f32;
@@ -39,15 +38,10 @@ pub fn logreg_grad(x: &[f32], y: &[f32], w: &[f32], grad: &mut [f32]) -> f64 {
     let mut loss = 0.0f64;
     for i in 0..b {
         let xi = &x[i * d..(i + 1) * d];
-        let mut z = 0.0f32;
-        for j in 0..d {
-            z += xi[j] * w[j];
-        }
+        let z = simd::dot(xi, w);
         let p = 1.0 / (1.0 + (-z).exp());
         let r = p - y[i];
-        for j in 0..d {
-            grad[j] += r * xi[j];
-        }
+        simd::axpy(grad, r, xi);
         // max(z,0) - z*y + log1p(exp(-|z|))
         loss += (z.max(0.0) - z * y[i] + (-z.abs()).exp().ln_1p()) as f64;
     }
@@ -61,17 +55,13 @@ pub fn logreg_grad(x: &[f32], y: &[f32], w: &[f32], grad: &mut [f32]) -> f64 {
 /// In-place SGD steps; return the pre-step loss.
 pub fn linreg_step(x: &[f32], y: &[f32], w: &mut [f32], eps: f32, grad: &mut [f32]) -> f64 {
     let loss = linreg_grad(x, y, w, grad);
-    for (wi, g) in w.iter_mut().zip(grad.iter()) {
-        *wi -= eps * g;
-    }
+    simd::sgd_step(w, grad, eps);
     loss
 }
 
 pub fn logreg_step(x: &[f32], y: &[f32], w: &mut [f32], eps: f32, grad: &mut [f32]) -> f64 {
     let loss = logreg_grad(x, y, w, grad);
-    for (wi, g) in w.iter_mut().zip(grad.iter()) {
-        *wi -= eps * g;
-    }
+    simd::sgd_step(w, grad, eps);
     loss
 }
 

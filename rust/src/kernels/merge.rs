@@ -1,16 +1,36 @@
-//! Native Parzen-window gate + asynchronous merge (eq. 2-7).
+//! Native Parzen-window gate + asynchronous merge (eq. 2-7), presence-
+//! masked.
 //!
-//! Exact semantics of `python/compile/kernels/parzen.py` /
-//! `ref.asgd_merge`: gate each external buffer with eq. (4), fold the
-//! accepted ones into the N-buffer mean of eq. (3)/(6), apply the update
-//! of fig. 4 step IV.
+//! Semantics follow `python/compile/kernels/parzen.py` / `ref.asgd_merge`
+//! with one deliberate upgrade: buffer/block *activity* (the lambda of
+//! eq. 3) comes from an explicit [`ExtPresence`] mask built by the
+//! receive loop, not from an `any(|e| e != 0.0)` scan of the payload
+//! words.  Consequences:
+//!
+//! * absent blocks cost **zero** external-buffer traffic — no zero-fill
+//!   upstream, no activity rescan here; a fully-absent poll reduces to
+//!   one SIMD pass of the plain SGD step;
+//! * a genuinely sent `0.0` payload is *active* (the zeros convention
+//!   made a sender whose state passed through zero partially invisible);
+//! * the words under a clear presence bit are unspecified and are never
+//!   read.
+//!
+//! The per-coordinate arithmetic (select-sum in ascending buffer order,
+//! `mean = (sel + w) * inv`, `w -= eps*((w - mean) + delta)`) is kept
+//! bit-identical to the pre-presence implementation — the zeros-oracle
+//! property test in `tests/prop_invariants.rs` pins that equivalence —
+//! and runs through the dispatched [`crate::kernels::simd`] layer.
+
+use crate::kernels::presence::ExtPresence;
+use crate::kernels::simd;
 
 /// Outcome of a merge.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct MergeOut {
     /// Buffers accepted by the gate ("good messages", fig. 12).
     pub n_good: usize,
-    /// Buffers that were active (lambda = 1, eq. 3).
+    /// Buffers that were active (lambda = 1, eq. 3): now exactly the
+    /// buffers with at least one present block.
     pub n_active: usize,
     /// Per-block touch mask for the dirty-block send scheduler: bit `j`
     /// set iff the `j`-th yielded block merged at least one accepted
@@ -25,150 +45,32 @@ pub struct MergeOut {
 
 /// eq. (4): accept iff the external state is strictly closer to the
 /// projected next state `w_prop = w - eps*delta` than to the current `w`,
-/// and active (non-zero, the lambda of eq. 3).
+/// and non-zero.  This is the *zeros-convention* helper kept for callers
+/// that gate a raw buffer without a presence mask (tests, oracles); the
+/// masked merges gate on geometry alone and take activity from the mask.
 #[inline]
 pub fn parzen_gate(w: &[f32], w_prop: &[f32], ext: &[f32]) -> bool {
-    let mut a = 0.0f64; // ||w_prop - ext||^2
-    let mut c = 0.0f64; // ||w - ext||^2
-    let mut nrm = 0.0f64; // ||ext||^2
-    for i in 0..ext.len() {
-        let e = ext[i];
-        let da = w_prop[i] - e;
-        let dc = w[i] - e;
-        a += (da * da) as f64;
-        c += (dc * dc) as f64;
-        nrm += (e * e) as f64;
-    }
+    let (a, c, nrm) = simd::gate_dists(w, w_prop, ext);
     nrm > 0.0 && a < c
 }
 
-/// Full-state N-buffer merge (eq. 6/7), in place on `w`.
+/// Block-gated merge shared by every variant: the Parzen gate (eq. 4) is
+/// evaluated independently on each yielded contiguous block of the
+/// state, over the buffers whose presence bit for that block is set, and
+/// each block is merged with its own accepted-buffer mean.  With
+/// `gated = false` every *present* block is merged — the eq.-3 lambda
+/// mask without the eq.-6 gate.
 ///
-/// `exts` is `n_buf` concatenated `[state_len]` buffers (zeros = empty);
-/// `delta` is the local mini-batch gradient `Delta_M`; `scratch_prop` must
-/// be `state_len` long (caller-owned to keep the hot loop allocation-free).
-pub fn asgd_merge(
-    w: &mut [f32],
-    delta: &[f32],
-    exts: &[f32],
-    eps: f32,
-    scratch_prop: &mut [f32],
-) -> MergeOut {
-    let len = w.len();
-    debug_assert_eq!(delta.len(), len);
-    debug_assert_eq!(scratch_prop.len(), len);
-    debug_assert_eq!(exts.len() % len, 0);
-    let n_buf = exts.len() / len;
-
-    // w_prop = w - eps*delta (fig. 4: the locally-projected next state)
-    for i in 0..len {
-        scratch_prop[i] = w[i] - eps * delta[i];
-    }
-
-    let mut out = MergeOut::default();
-    // accumulate the gated sum directly into a running mean numerator;
-    // reuse `scratch_prop` afterward is not possible (gate needs it), so
-    // accumulate into w at the end instead: first pass computes the sum.
-    let mut n_good = 0usize;
-    // sum of accepted buffers, accumulated in f64-free single pass below.
-    // To stay allocation-free we fold accepted buffers into the update in
-    // two passes: pass 1 counts + gates, pass 2 recomputes the sum for the
-    // accepted set.  n_buf is tiny (<= 8) so the extra pass is cheap; we
-    // record the gate bits in a small stack mask.
-    debug_assert!(n_buf <= 64, "gate mask is a u64");
-    let mut mask = 0u64;
-    for nb in 0..n_buf {
-        let ext = &exts[nb * len..(nb + 1) * len];
-        let mut active = false;
-        for &e in ext {
-            if e != 0.0 {
-                active = true;
-                break;
-            }
-        }
-        if active {
-            out.n_active += 1;
-        }
-        if active && parzen_gate(w, scratch_prop, ext) {
-            mask |= 1 << nb;
-            n_good += 1;
-        }
-    }
-    out.n_good = n_good;
-    out.touched = if n_good > 0 { 1 } else { 0 };
-
-    // eq. (6): mean = (sum_sel + w)/(n_good + 1);
-    // w_next = w - eps*(w - mean + delta)
-    let inv = 1.0f32 / (n_good as f32 + 1.0);
-    for i in 0..len {
-        let mut sel_sum = 0.0f32;
-        let mut bits = mask;
-        while bits != 0 {
-            let nb = bits.trailing_zeros() as usize;
-            bits &= bits - 1;
-            sel_sum += exts[nb * len + i];
-        }
-        let mean = (sel_sum + w[i]) * inv;
-        let delta_bar = w[i] - mean + delta[i];
-        w[i] -= eps * delta_bar;
-    }
-    out
-}
-
-/// Ungated variant (gate ablation): every *active* buffer is merged,
-/// eq. (3) without the delta(i,j) mask of eq. (6).
-pub fn asgd_merge_ungated(
-    w: &mut [f32],
-    delta: &[f32],
-    exts: &[f32],
-    eps: f32,
-    scratch_prop: &mut [f32],
-) -> MergeOut {
-    let len = w.len();
-    debug_assert_eq!(delta.len(), len);
-    debug_assert_eq!(exts.len() % len, 0);
-    let n_buf = exts.len() / len;
-    // scratch unused here but kept in the signature for symmetry
-    let _ = &scratch_prop;
-
-    let mut out = MergeOut::default();
-    debug_assert!(n_buf <= 64);
-    let mut mask = 0u64;
-    for nb in 0..n_buf {
-        let ext = &exts[nb * len..(nb + 1) * len];
-        if ext.iter().any(|&e| e != 0.0) {
-            mask |= 1 << nb;
-            out.n_active += 1;
-        }
-    }
-    out.n_good = out.n_active; // lambda only (eq. 3)
-    out.touched = if out.n_good > 0 { 1 } else { 0 };
-
-    let inv = 1.0f32 / (out.n_good as f32 + 1.0);
-    for i in 0..len {
-        let mut sel_sum = 0.0f32;
-        let mut bits = mask;
-        while bits != 0 {
-            let nb = bits.trailing_zeros() as usize;
-            bits &= bits - 1;
-            sel_sum += exts[nb * len + i];
-        }
-        let mean = (sel_sum + w[i]) * inv;
-        let delta_bar = w[i] - mean + delta[i];
-        w[i] -= eps * delta_bar;
-    }
-    out
-}
-
-/// Block-gated merge shared by the per-center and the chunked-comm
-/// variants: the Parzen gate (eq. 4) is evaluated independently on each
-/// contiguous block of the state, and each block is merged with its own
-/// accepted-buffer mean.  With `gated = false` every *active* (non-zero)
-/// block is merged — the eq.-3 lambda mask without the eq.-6 gate.
+/// Presence geometry: when `presence.n_blocks() == 1` (full-state
+/// transport) every yielded block maps onto transport block 0 — that is
+/// how the per-center gate composes with whole-state puts.  Otherwise
+/// the yielded blocks must be exactly the transport blocks, in order.
+#[allow(clippy::too_many_arguments)]
 fn merge_blocks_impl<I>(
     w: &mut [f32],
     delta: &[f32],
     exts: &[f32],
+    presence: &ExtPresence,
     eps: f32,
     blocks: I,
     gated: bool,
@@ -183,77 +85,155 @@ where
     debug_assert_eq!(exts.len() % len, 0);
     let n_buf = exts.len() / len;
     debug_assert!(n_buf <= 64, "gate mask is a u64");
+    debug_assert_eq!(presence.n_buffers(), n_buf);
 
-    if gated {
-        for i in 0..len {
-            scratch_prop[i] = w[i] - eps * delta[i];
-        }
+    let mut out = MergeOut {
+        n_active: presence.n_active_buffers(),
+        ..MergeOut::default()
+    };
+
+    // Stale-poll fast path: nothing was delivered anywhere, so every
+    // block's selection is empty and the whole merge is one plain SGD
+    // step — O(state_len) with no `exts` traffic at all (the pre-mask
+    // path re-scanned n_buf * state_len words to conclude the same).
+    if !presence.any() {
+        simd::sgd_step(w, delta, eps);
+        return out;
     }
 
-    let mut out = MergeOut::default();
-    // per-buffer union masks accumulated in the single block pass: the
-    // blocks partition the state (every caller covers it exactly once),
-    // so the union of per-block activity equals whole-buffer activity —
-    // no second scan of `exts`, no per-call allocation.
+    if gated {
+        // w_prop = w - eps*delta (fig. 4: the locally-projected state)
+        scratch_prop.copy_from_slice(w);
+        simd::sgd_step(scratch_prop, delta, eps);
+    }
+
+    // per-buffer union mask accumulated in the single block pass: the
+    // blocks partition the state, so the union of per-block acceptance
+    // equals whole-buffer contribution — no second scan of `exts`.
     let mut contributed = 0u64;
-    let mut active_union = 0u64;
     let mut touched = 0u64;
 
     for (block_idx, range) in blocks.into_iter().enumerate() {
-        let wr = &w[range.clone()];
-        let pr = &scratch_prop[range.clone()];
-        // gate per buffer on this block
-        let mut n_sel = 0usize;
-        let mut mask = 0u64;
-        for nb in 0..n_buf {
-            let ext = &exts[nb * len + range.start..nb * len + range.end];
-            let active = ext.iter().any(|&e| e != 0.0);
-            if active {
-                active_union |= 1 << nb;
-            }
-            if active && (!gated || parzen_gate(wr, pr, ext)) {
-                mask |= 1 << nb;
-                n_sel += 1;
-                contributed |= 1 << nb;
-            }
+        let pb = if presence.n_blocks() == 1 { 0 } else { block_idx };
+        debug_assert!(pb < presence.n_blocks());
+        let cand = presence.buffers_at(pb);
+        if cand == 0 {
+            // absent in every buffer: the empty-selection mean path is
+            // bit-identical to the plain step, so take the plain step
+            // without touching `exts`
+            simd::sgd_step(&mut w[range.clone()], &delta[range], eps);
+            continue;
         }
+        let mut mask = 0u64;
+        let mut n_sel = 0usize;
+        if gated {
+            let wr = &w[range.clone()];
+            let pr = &scratch_prop[range.clone()];
+            let mut bits = cand;
+            while bits != 0 {
+                let nb = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let ext = &exts[nb * len + range.start..nb * len + range.end];
+                let (a, c, _nrm) = simd::gate_dists(wr, pr, ext);
+                if a < c {
+                    mask |= 1 << nb;
+                    n_sel += 1;
+                }
+            }
+        } else {
+            mask = cand;
+            n_sel = cand.count_ones() as usize;
+        }
+        contributed |= mask;
         if n_sel > 0 {
             // dirty-scheduler touch mask; block 64+ saturates (see
             // `MergeOut::touched` — conservative, and unreachable for
             // the adaptive transport, which caps blocks at 64)
             touched |= if block_idx < 64 { 1 << block_idx } else { u64::MAX };
         }
+        // eq. (6): mean = (sel_sum + w)/(n_sel + 1);
+        // w_next = w - eps*(w - mean + delta) — fused SIMD pass
         let inv = 1.0f32 / (n_sel as f32 + 1.0);
-        for i in range {
-            let mut sel_sum = 0.0f32;
-            let mut bits = mask;
-            while bits != 0 {
-                let nb = bits.trailing_zeros() as usize;
-                bits &= bits - 1;
-                sel_sum += exts[nb * len + i];
-            }
-            let mean = (sel_sum + w[i]) * inv;
-            let delta_bar = w[i] - mean + delta[i];
-            w[i] -= eps * delta_bar;
-        }
+        let (start, end) = (range.start, range.end);
+        simd::merge_update(
+            &mut w[start..end],
+            &delta[start..end],
+            exts,
+            len,
+            start,
+            mask,
+            inv,
+            eps,
+        );
     }
     out.n_good = contributed.count_ones() as usize;
-    out.n_active = active_union.count_ones() as usize;
     out.touched = touched;
     out
 }
 
+/// Full-state N-buffer merge (eq. 6/7), in place on `w`.
+///
+/// `exts` is `n_buf` concatenated `[state_len]` buffers; `presence` says
+/// which of them hold a delivered payload (clear bits = unspecified
+/// words, never read); `scratch_prop` must be `state_len` long
+/// (caller-owned to keep the hot loop allocation-free).
+pub fn asgd_merge(
+    w: &mut [f32],
+    delta: &[f32],
+    exts: &[f32],
+    presence: &ExtPresence,
+    eps: f32,
+    scratch_prop: &mut [f32],
+) -> MergeOut {
+    let len = w.len();
+    merge_blocks_impl(
+        w,
+        delta,
+        exts,
+        presence,
+        eps,
+        std::iter::once(0..len),
+        true,
+        scratch_prop,
+    )
+}
+
+/// Ungated variant (gate ablation): every *present* buffer is merged,
+/// eq. (3) without the delta(i,j) mask of eq. (6).
+pub fn asgd_merge_ungated(
+    w: &mut [f32],
+    delta: &[f32],
+    exts: &[f32],
+    presence: &ExtPresence,
+    eps: f32,
+    scratch_prop: &mut [f32],
+) -> MergeOut {
+    let len = w.len();
+    merge_blocks_impl(
+        w,
+        delta,
+        exts,
+        presence,
+        eps,
+        std::iter::once(0..len),
+        false,
+        scratch_prop,
+    )
+}
+
 /// Merge with the Parzen gate evaluated independently per contiguous
 /// block (arXiv:1510.01155 chunked communication: block boundaries are
-/// the transport chunk boundaries, so a buffer holding only some fresh
+/// the transport chunk boundaries, so a buffer holding only some present
 /// blocks contributes exactly those blocks).  `n_good` counts buffers
 /// that contributed at least one block.  `blocks` must partition the
 /// state vector (cover every word exactly once), as every caller's
-/// layout does.
+/// layout does, and must align with `presence`'s transport blocks
+/// (unless `presence.n_blocks() == 1`; see [`asgd_merge_percenter`]).
 pub fn asgd_merge_blocked<I>(
     w: &mut [f32],
     delta: &[f32],
     exts: &[f32],
+    presence: &ExtPresence,
     eps: f32,
     blocks: I,
     scratch_prop: &mut [f32],
@@ -261,15 +241,16 @@ pub fn asgd_merge_blocked<I>(
 where
     I: IntoIterator<Item = std::ops::Range<usize>>,
 {
-    merge_blocks_impl(w, delta, exts, eps, blocks, true, scratch_prop)
+    merge_blocks_impl(w, delta, exts, presence, eps, blocks, true, scratch_prop)
 }
 
-/// Ungated per-block merge: every active (non-zero) block is accepted —
-/// the gate-off ablation for chunked communication.
+/// Ungated per-block merge: every present block is accepted — the
+/// gate-off ablation for chunked communication.
 pub fn asgd_merge_blocked_ungated<I>(
     w: &mut [f32],
     delta: &[f32],
     exts: &[f32],
+    presence: &ExtPresence,
     eps: f32,
     blocks: I,
     scratch_prop: &mut [f32],
@@ -277,19 +258,25 @@ pub fn asgd_merge_blocked_ungated<I>(
 where
     I: IntoIterator<Item = std::ops::Range<usize>>,
 {
-    merge_blocks_impl(w, delta, exts, eps, blocks, false, scratch_prop)
+    merge_blocks_impl(w, delta, exts, presence, eps, blocks, false, scratch_prop)
 }
 
 /// Per-center variant (§4.4): the gate is evaluated independently per
 /// cluster-center row of `[k, d]`-shaped states — the row blocks are just
-/// the uniform special case of [`asgd_merge_blocked`].  Matches
-/// `ref.asgd_merge_percenter`.  Note the returned `touched` mask is per
+/// the uniform special case of [`asgd_merge_blocked`].  The transport is
+/// full-state here (`validate()` refuses per-center with chunked
+/// transport), so `presence.n_blocks() == 1` and every row inherits its
+/// buffer's single presence bit: a present buffer's all-zero row is
+/// *active* and gets gated on geometry — the zeros convention used to
+/// silently drop such rows.  Note the returned `touched` mask is per
 /// *row*, not per transport block — which is why `validate()` refuses
 /// `gate=per-center` with the adaptive (dirty-tracking) transport.
+#[allow(clippy::too_many_arguments)]
 pub fn asgd_merge_percenter(
     w: &mut [f32],
     delta: &[f32],
     exts: &[f32],
+    presence: &ExtPresence,
     eps: f32,
     k: usize,
     d: usize,
@@ -300,6 +287,7 @@ pub fn asgd_merge_percenter(
         w,
         delta,
         exts,
+        presence,
         eps,
         (0..k).map(|c| c * d..(c + 1) * d),
         scratch_prop,
@@ -315,7 +303,7 @@ mod tests {
         (0..n).map(|_| rng.next_normal() as f32 * scale).collect()
     }
 
-    /// oracle merge (direct transcription of eq. 6)
+    /// oracle merge (direct transcription of eq. 6, zeros convention)
     fn merge_oracle(w: &[f32], delta: &[f32], exts: &[f32], eps: f32) -> Vec<f32> {
         let len = w.len();
         let n_buf = exts.len() / len;
@@ -349,7 +337,8 @@ mod tests {
             let expected = merge_oracle(&w0, &delta, &exts, 0.05);
             let mut w = w0.clone();
             let mut scratch = vec![0.0; len];
-            asgd_merge(&mut w, &delta, &exts, 0.05, &mut scratch);
+            let presence = ExtPresence::all_present(n_buf, 1);
+            asgd_merge(&mut w, &delta, &exts, &presence, 0.05, &mut scratch);
             for (a, e) in w.iter().zip(&expected) {
                 assert!((a - e).abs() < 1e-5, "{a} vs {e} (len={len} n={n_buf})");
             }
@@ -357,19 +346,53 @@ mod tests {
     }
 
     #[test]
-    fn empty_buffers_reduce_to_plain_step() {
+    fn absent_buffers_reduce_to_plain_step() {
         let mut rng = Xoshiro256pp::seed_from_u64(4);
         let w0 = rand_vec(&mut rng, 20, 1.0);
         let delta = rand_vec(&mut rng, 20, 0.1);
-        let exts = vec![0.0f32; 20 * 4];
+        // absent buffers: the words underneath are garbage on purpose —
+        // the merge must never look at them
+        let exts = vec![f32::NAN; 20 * 4];
         let mut w = w0.clone();
         let mut scratch = vec![0.0; 20];
-        let out = asgd_merge(&mut w, &delta, &exts, 0.1, &mut scratch);
+        let presence = ExtPresence::new(4, 1);
+        let out = asgd_merge(&mut w, &delta, &exts, &presence, 0.1, &mut scratch);
         assert_eq!(out.n_good, 0);
         assert_eq!(out.n_active, 0);
+        assert_eq!(out.touched, 0);
         for i in 0..20 {
             assert!((w[i] - (w0[i] - 0.1 * delta[i])).abs() < 1e-6);
         }
+    }
+
+    /// The zeros-convention ambiguity is gone: a *present* buffer sitting
+    /// exactly at an all-zero projected state is accepted, where the old
+    /// activity scan silently dropped it.
+    #[test]
+    fn present_zero_payload_is_active_and_mergeable() {
+        let len = 6;
+        let eps = 1.0f32;
+        let w = vec![0.5f32; len];
+        let delta = vec![0.5f32; len]; // w_prop = w - eps*delta = 0
+        let ext = vec![0.0f32; len]; // sender genuinely at the origin
+        let mut scratch = vec![0.0; len];
+
+        let mut w1 = w.clone();
+        let out = asgd_merge(
+            &mut w1,
+            &delta,
+            &ext,
+            &ExtPresence::all_present(1, 1),
+            eps,
+            &mut scratch,
+        );
+        assert_eq!((out.n_active, out.n_good, out.touched), (1, 1, 1));
+
+        // absent: same payload bytes, but no message was delivered
+        let mut w2 = w.clone();
+        let out = asgd_merge(&mut w2, &delta, &ext, &ExtPresence::new(1, 1), eps, &mut scratch);
+        assert_eq!((out.n_active, out.n_good), (0, 0));
+        assert_ne!(w1, w2);
     }
 
     #[test]
@@ -382,7 +405,7 @@ mod tests {
         let behind: Vec<f32> = w.iter().map(|v| v + 1.0).collect();
         assert!(!parzen_gate(&w, &w_prop, &behind));
         // all-zero buffer must be rejected via lambda even though it may
-        // be geometrically "closer"
+        // be geometrically "closer" (zeros-convention helper semantics)
         let zeros = vec![0.0f32; 8];
         let far_prop: Vec<f32> = w.iter().map(|v| v - 0.9).collect(); // prop near 0
         assert!(!parzen_gate(&w, &far_prop, &zeros));
@@ -397,11 +420,12 @@ mod tests {
         let eps = 0.1;
         let w_prop: Vec<f32> = w0.iter().zip(&delta).map(|(a, b)| a - eps * b).collect();
         let exts: Vec<f32> = w_prop.repeat(3);
+        let presence = ExtPresence::all_present(3, 1);
         let mut w_full = w0.clone();
         let mut w_pc = w0.clone();
         let mut scratch = vec![0.0; k * d];
-        asgd_merge(&mut w_full, &delta, &exts, eps, &mut scratch);
-        asgd_merge_percenter(&mut w_pc, &delta, &exts, eps, k, d, &mut scratch);
+        asgd_merge(&mut w_full, &delta, &exts, &presence, eps, &mut scratch);
+        asgd_merge_percenter(&mut w_pc, &delta, &exts, &presence, eps, k, d, &mut scratch);
         for (a, b) in w_full.iter().zip(&w_pc) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
@@ -414,14 +438,16 @@ mod tests {
             let w0 = rand_vec(&mut rng, len, 1.0);
             let delta = rand_vec(&mut rng, len, 0.1);
             let exts = rand_vec(&mut rng, len * n_buf, 1.0);
+            let presence = ExtPresence::all_present(n_buf, 1);
             let mut w_full = w0.clone();
             let mut w_blk = w0.clone();
             let mut scratch = vec![0.0; len];
-            let a = asgd_merge(&mut w_full, &delta, &exts, 0.05, &mut scratch);
+            let a = asgd_merge(&mut w_full, &delta, &exts, &presence, 0.05, &mut scratch);
             let b = asgd_merge_blocked(
                 &mut w_blk,
                 &delta,
                 &exts,
+                &presence,
                 0.05,
                 std::iter::once(0..len),
                 &mut scratch,
@@ -450,10 +476,12 @@ mod tests {
         }
         let mut w = w0.clone();
         let mut scratch = vec![0.0; len];
+        let presence = ExtPresence::all_present(1, 2);
         let out = asgd_merge_blocked(
             &mut w,
             &delta,
             &ext,
+            &presence,
             eps,
             [0..3usize, 3..6usize],
             &mut scratch,
@@ -478,43 +506,67 @@ mod tests {
         let delta = vec![0.1f32; len];
         let eps = 0.5f32;
         let w_prop: Vec<f32> = w0.iter().zip(&delta).map(|(a, b)| a - eps * b).collect();
-        // buffer: perfect in blocks 1 and 3, zero in block 0, garbage in 2
-        let mut ext = vec![0.0f32; len];
+        // buffer: perfect in blocks 1 and 3, absent in block 0 (garbage
+        // words underneath), garbage-but-present in block 2
+        let mut ext = vec![f32::NAN; len];
         ext[2..4].copy_from_slice(&w_prop[2..4]);
         ext[4..6].fill(100.0);
         ext[6..8].copy_from_slice(&w_prop[6..8]);
+        let mut presence = ExtPresence::new(1, 4);
+        presence.set(0, 1);
+        presence.set(0, 2);
+        presence.set(0, 3);
         let mut w = w0.clone();
         let mut scratch = vec![0.0; len];
         let blocks = [0..2usize, 2..4, 4..6, 6..8];
-        let out = asgd_merge_blocked(&mut w, &delta, &ext, eps, blocks.clone(), &mut scratch);
+        let out = asgd_merge_blocked(
+            &mut w,
+            &delta,
+            &ext,
+            &presence,
+            eps,
+            blocks.clone(),
+            &mut scratch,
+        );
         assert_eq!(out.touched, 0b1010);
         // coordinates outside touched blocks took exactly the plain step
         for j in [0, 1, 4, 5] {
             assert!((w[j] - w_prop[j]).abs() < 1e-6);
         }
-        // ungated: every active block is touched (block 0 stays inactive)
+        // ungated: every present block is touched (block 0 stays absent)
         let mut w = w0.clone();
-        let out = asgd_merge_blocked_ungated(&mut w, &delta, &ext, eps, blocks, &mut scratch);
+        let out = asgd_merge_blocked_ungated(
+            &mut w,
+            &delta,
+            &ext,
+            &presence,
+            eps,
+            blocks,
+            &mut scratch,
+        );
         assert_eq!(out.touched, 0b1110);
         // full-state merges report the single logical block
+        let present1 = ExtPresence::all_present(1, 1);
         let mut w = w0.clone();
-        let out = asgd_merge(&mut w, &delta, &w_prop, eps, &mut scratch);
+        let out = asgd_merge(&mut w, &delta, &w_prop, &present1, eps, &mut scratch);
         assert_eq!((out.n_good, out.touched), (1, 1));
         let mut w = w0.clone();
         let far: Vec<f32> = w0.iter().map(|v| v + 1e5).collect();
-        let out = asgd_merge(&mut w, &delta, &far, eps, &mut scratch);
+        let out = asgd_merge(&mut w, &delta, &far, &present1, eps, &mut scratch);
         assert_eq!((out.n_good, out.touched), (0, 0));
     }
 
     #[test]
-    fn blocked_ungated_accepts_active_blocks_only() {
-        // a "behind" buffer that the gate would reject is merged when
-        // ungated; an all-zero block stays inactive either way.
+    fn blocked_ungated_accepts_present_blocks_only() {
+        // a "behind" block that the gate would reject is merged when
+        // ungated; an absent block stays out either way.
         let len = 4;
         let w0 = vec![1.0f32; len];
         let delta = vec![0.1f32; len];
         let mut ext = vec![0.0f32; len];
-        ext[..2].fill(10.0); // block 0 active (and "behind"), block 1 zero
+        ext[..2].fill(10.0); // block 0 present (and "behind"), block 1 absent
+        let mut presence = ExtPresence::new(1, 2);
+        presence.set(0, 0);
         let mut w_gated = w0.clone();
         let mut w_open = w0.clone();
         let mut scratch = vec![0.0; len];
@@ -522,6 +574,7 @@ mod tests {
             &mut w_gated,
             &delta,
             &ext,
+            &presence,
             0.1,
             [0..2usize, 2..4usize],
             &mut scratch,
@@ -530,14 +583,15 @@ mod tests {
             &mut w_open,
             &delta,
             &ext,
+            &presence,
             0.1,
             [0..2usize, 2..4usize],
             &mut scratch,
         );
         assert_eq!(g.n_good, 0, "gate must reject the behind block");
-        assert_eq!(o.n_good, 1, "ungated must accept the active block");
+        assert_eq!(o.n_good, 1, "ungated must accept the present block");
         assert_ne!(w_gated, w_open);
-        // the zero block reduces to the plain step in both
+        // the absent block reduces to the plain step in both
         for j in 2..4 {
             assert!((w_gated[j] - w_open[j]).abs() < 1e-6);
         }
@@ -557,7 +611,8 @@ mod tests {
         }
         let mut w = w0.clone();
         let mut scratch = vec![0.0; k * d];
-        let out = asgd_merge_percenter(&mut w, &delta, &ext, eps, k, d, &mut scratch);
+        let presence = ExtPresence::all_present(1, 1);
+        let out = asgd_merge_percenter(&mut w, &delta, &ext, &presence, eps, k, d, &mut scratch);
         assert_eq!(out.n_good, 1);
         // row 1 must be the plain step
         for j in 0..d {

@@ -4,14 +4,45 @@
 //! artifact matches, (2) the perf baseline the XLA path is compared
 //! against, and (3) the reference implementation for the rust-side
 //! property tests.  Semantics match `python/compile/kernels/ref.py`
-//! exactly (same gradient sign convention, same tie-breaking).
+//! (same gradient sign convention, same tie-breaking), with one
+//! documented divergence: external-buffer activity.
+//!
+//! ## The presence-mask contract (PR 3)
+//!
+//! The merge kernels no longer infer "buffer is empty" from all-zero
+//! payloads.  Activity is an explicit [`ExtPresence`] bitset:
+//!
+//! * **Who builds it:** the receive loop in
+//!   [`crate::coordinator::worker`], one bit per `(buffer, transport
+//!   block)`, rebuilt every poll from the seqlock outcomes — `Fresh`
+//!   (or a newly-seen `Torn` under `AcceptTorn`) sets the bit, anything
+//!   else leaves it clear.  Tests and benches that hand-craft dense
+//!   buffers use [`ExtPresence::all_present`].
+//! * **What a set bit guarantees:** the block's words in `exts` hold a
+//!   payload delivered *this* poll and may be read/merged.  A clear bit
+//!   means those words are unspecified (the receive path stopped
+//!   zero-filling stale blocks) and MUST NOT be read.
+//! * **Why zeros in a fresh block are legal payload:** under the zeros
+//!   convention a genuinely sent `0.0` word counted toward "inactive",
+//!   so a sender's state passing through the origin was partially
+//!   invisible to the eq. (3) lambda.  With presence, delivery and
+//!   payload value are independent: an all-zero present block is gated
+//!   on its geometry like any other.  (The fused XLA artifact still
+//!   uses the zeros convention internally; its stepper stages absent
+//!   buffers as zeros and keeps that documented ambiguity.)
+//!
+//! The inner loops run through [`simd`] — a runtime-dispatched AVX2+FMA
+//! layer with a scalar reference arm (`ASGD_NO_SIMD=1` forces scalar).
 
 pub mod kmeans;
 pub mod linear;
 pub mod merge;
+pub mod presence;
+pub mod simd;
 
 pub use kmeans::{kmeans_stats, kmeans_step, quant_error, KmeansScratch, Stats};
 pub use merge::{asgd_merge, asgd_merge_percenter, parzen_gate, MergeOut};
+pub use presence::ExtPresence;
 
 #[cfg(test)]
 mod tests {
@@ -20,5 +51,7 @@ mod tests {
         // compile-time smoke: the public surface is wired
         let _ = super::kmeans_stats;
         let _ = super::asgd_merge;
+        let _ = super::simd::isa;
+        let _ = super::ExtPresence::new;
     }
 }

@@ -1,0 +1,183 @@
+//! Per-buffer / per-transport-block presence masks for the external
+//! buffers — the explicit replacement of the "all-zeros = empty"
+//! convention.
+//!
+//! ## The presence-mask contract
+//!
+//! * **Who builds it:** the receive loop in
+//!   [`crate::coordinator::worker`].  At every poll it clears each
+//!   buffer's row and sets bit `(buf, block)` exactly when that poll
+//!   delivered a payload for the block: a `Fresh` seqlock read, or a
+//!   *new* `Torn` snapshot under [`crate::config::RacePolicy::AcceptTorn`].
+//! * **What a set bit guarantees:** `exts[buf * state_len ..][block
+//!   bounds]` holds a message payload delivered *this* poll, safe to read
+//!   and eligible for the merge.  A clear bit means the words underneath
+//!   are unspecified (stale leftovers from an earlier poll — the receive
+//!   path no longer zero-fills them) and must not be read.
+//! * **Why zeros are now legal payload:** under the old convention a
+//!   genuinely sent `0.0` word counted toward "buffer inactive", so a
+//!   sender whose state passed through zero was partially invisible to
+//!   the eq. (3) lambda.  Presence decouples "was a message delivered"
+//!   from the payload values: a present all-zero block is active and
+//!   gets gated on its geometry like any other.
+//!
+//! Geometry: `n_blocks` is the *transport* block count (the
+//! [`crate::gaspi::ChunkLayout`] chunk count; `1` for full-state
+//! communication).  Merge kernels whose own block structure is finer
+//! than the transport's (the per-center gate under full-state transport)
+//! map every merge block onto transport block 0.
+
+/// Presence bits for `n_buffers` external buffers of `n_blocks`
+/// transport blocks each.  Storage is a packed bitset, so arbitrary
+/// block counts work (chunked transport allows more than 64 blocks even
+/// though the adaptive transport caps at [`crate::gaspi::MAX_GROUP_BLOCKS`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExtPresence {
+    n_buffers: usize,
+    n_blocks: usize,
+    /// `words_per_buf` u64 words per buffer, buffer-major.
+    bits: Vec<u64>,
+    words_per_buf: usize,
+}
+
+impl ExtPresence {
+    /// All-absent mask (the state before any message arrives).
+    /// `n_buffers == 0` is legal (silent/SimuParallelSGD configs train
+    /// with no external buffers at all): the mask is permanently empty.
+    pub fn new(n_buffers: usize, n_blocks: usize) -> Self {
+        assert!(n_blocks >= 1);
+        let words_per_buf = n_blocks.div_ceil(64);
+        Self {
+            n_buffers,
+            n_blocks,
+            bits: vec![0u64; n_buffers * words_per_buf],
+            words_per_buf,
+        }
+    }
+
+    /// Every block of every buffer present — the convention for tests and
+    /// benches that hand-build dense external buffers.
+    pub fn all_present(n_buffers: usize, n_blocks: usize) -> Self {
+        let mut p = Self::new(n_buffers, n_blocks);
+        for buf in 0..n_buffers {
+            for block in 0..n_blocks {
+                p.set(buf, block);
+            }
+        }
+        p
+    }
+
+    pub fn n_buffers(&self) -> usize {
+        self.n_buffers
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Clear a buffer's whole row (poll start: nothing delivered yet).
+    pub fn clear_buffer(&mut self, buf: usize) {
+        let w = buf * self.words_per_buf;
+        self.bits[w..w + self.words_per_buf].fill(0);
+    }
+
+    /// Mark block `block` of buffer `buf` as delivered this poll.
+    pub fn set(&mut self, buf: usize, block: usize) {
+        debug_assert!(buf < self.n_buffers && block < self.n_blocks);
+        self.bits[buf * self.words_per_buf + block / 64] |= 1u64 << (block % 64);
+    }
+
+    /// Is block `block` of buffer `buf` present?
+    pub fn present(&self, buf: usize, block: usize) -> bool {
+        debug_assert!(buf < self.n_buffers && block < self.n_blocks);
+        self.bits[buf * self.words_per_buf + block / 64] & (1u64 << (block % 64)) != 0
+    }
+
+    /// Does buffer `buf` hold any present block?
+    pub fn buffer_active(&self, buf: usize) -> bool {
+        let w = buf * self.words_per_buf;
+        self.bits[w..w + self.words_per_buf].iter().any(|&b| b != 0)
+    }
+
+    /// Number of buffers with at least one present block — the eq. (3)
+    /// lambda count, with no scan of the payload words.
+    pub fn n_active_buffers(&self) -> usize {
+        (0..self.n_buffers).filter(|&b| self.buffer_active(b)).count()
+    }
+
+    /// Any presence at all?  `false` is the stale-poll fast path: the
+    /// merge reduces to the plain SGD step without touching `exts`.
+    pub fn any(&self) -> bool {
+        self.bits.iter().any(|&b| b != 0)
+    }
+
+    /// Mask of *buffers* holding block `block` (bit `nb` set iff buffer
+    /// `nb` is present there) — the per-block gate candidate set.  Valid
+    /// because `TrainConfig::validate` caps `n_buffers` at 64.
+    pub fn buffers_at(&self, block: usize) -> u64 {
+        debug_assert!(self.n_buffers <= 64, "buffer mask is a u64");
+        let (word, bit) = (block / 64, 1u64 << (block % 64));
+        let mut m = 0u64;
+        for nb in 0..self.n_buffers {
+            if self.bits[nb * self.words_per_buf + word] & bit != 0 {
+                m |= 1 << nb;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_present_roundtrip_across_word_boundaries() {
+        let mut p = ExtPresence::new(3, 130); // 3 words per buffer
+        assert!(!p.any());
+        for &(b, c) in &[(0usize, 0usize), (1, 63), (1, 64), (2, 129)] {
+            assert!(!p.present(b, c));
+            p.set(b, c);
+            assert!(p.present(b, c));
+        }
+        assert_eq!(p.n_active_buffers(), 3);
+        // no cross-talk between buffers or neighbouring blocks
+        assert!(!p.present(0, 63));
+        assert!(!p.present(2, 128));
+        p.clear_buffer(1);
+        assert!(!p.present(1, 63) && !p.present(1, 64));
+        assert_eq!(p.n_active_buffers(), 2);
+    }
+
+    #[test]
+    fn buffers_at_transposes() {
+        let mut p = ExtPresence::new(4, 8);
+        p.set(0, 3);
+        p.set(2, 3);
+        p.set(3, 7);
+        assert_eq!(p.buffers_at(3), 0b0101);
+        assert_eq!(p.buffers_at(7), 0b1000);
+        assert_eq!(p.buffers_at(0), 0);
+        assert!(p.buffer_active(2) && !p.buffer_active(1));
+    }
+
+    #[test]
+    fn zero_buffers_is_a_legal_empty_mask() {
+        // silent/SimuParallelSGD workers may run with n_buffers = 0
+        let p = ExtPresence::new(0, 4);
+        assert_eq!(p.n_buffers(), 0);
+        assert!(!p.any());
+        assert_eq!(p.n_active_buffers(), 0);
+        assert_eq!(p.buffers_at(0), 0);
+    }
+
+    #[test]
+    fn all_present_is_dense() {
+        let p = ExtPresence::all_present(2, 70);
+        assert!(p.any());
+        assert_eq!(p.n_active_buffers(), 2);
+        for c in [0usize, 63, 64, 69] {
+            assert_eq!(p.buffers_at(c), 0b11);
+        }
+    }
+}

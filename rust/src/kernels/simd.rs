@@ -1,0 +1,579 @@
+//! Runtime-dispatched SIMD implementations of the five numeric inner
+//! loops (arXiv:1802.08800's hardware-efficiency lens applied to the
+//! ASGD core):
+//!
+//! 1. [`dot`] — the K-Means assignment dot product,
+//! 2. [`gate_dists`] — the Parzen gate's three-distance pass (eq. 4),
+//! 3. [`merge_update`] — the merge's select-sum / mean / axpy pass
+//!    (eq. 6/7),
+//! 4. [`scale_combine`] — the K-Means `apply_grad` row update,
+//! 5. [`axpy`] + [`dot`] — the linear-model gradient accumulation.
+//!
+//! Dispatch is decided once per process: AVX2+FMA via
+//! `core::arch::x86_64` when `is_x86_feature_detected!` says so, the
+//! scalar reference otherwise.  Setting `ASGD_NO_SIMD=1` (any value but
+//! `"0"`) forces the scalar arm — CI runs the tier-1 suite once per arm.
+//!
+//! Numerics policy: [`merge_update`] and [`sgd_step`] perform, per lane,
+//! the *exact* operation sequence of the scalar reference (mul + add/sub,
+//! no FMA, no per-coordinate reassociation), so the masked merge is
+//! bit-identical across dispatch arms and against the zeros-convention
+//! oracle in the property tests.  [`dot`], [`axpy`], [`scale_combine`]
+//! and the accumulator order of [`gate_dists`] may use FMA / wider
+//! accumulators — their consumers tolerate last-bit differences.
+
+/// Which implementation arm this process dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// AVX2 + FMA (x86_64, runtime-detected, not disabled by env).
+    Avx2Fma,
+    /// Portable reference loops.
+    Scalar,
+}
+
+/// The process-wide dispatch decision (detected once, then cached).
+pub fn isa() -> Isa {
+    use std::sync::OnceLock;
+    static ISA: OnceLock<Isa> = OnceLock::new();
+    *ISA.get_or_init(|| {
+        if std::env::var_os("ASGD_NO_SIMD").is_some_and(|v| v != "0") {
+            return Isa::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return Isa::Avx2Fma;
+            }
+        }
+        Isa::Scalar
+    })
+}
+
+/// Dot product `sum_i a[i] * b[i]`.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2Fma {
+        // SAFETY: isa() returned Avx2Fma, so avx2+fma are available.
+        return unsafe { avx2::dot(a, b) };
+    }
+    scalar::dot(a, b)
+}
+
+/// `y[i] += a * x[i]` — the gradient-accumulation axpy.
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2Fma {
+        // SAFETY: see `dot`.
+        unsafe { avx2::axpy(y, a, x) };
+        return;
+    }
+    scalar::axpy(y, a, x)
+}
+
+/// `row[i] = row[i] * keep + x[i] * xs` — the K-Means row update
+/// (`w*(1 - eps*count/b) + sums*(eps/b)`).
+#[inline]
+pub fn scale_combine(row: &mut [f32], keep: f32, x: &[f32], xs: f32) {
+    debug_assert_eq!(row.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2Fma {
+        // SAFETY: see `dot`.
+        unsafe { avx2::scale_combine(row, keep, x, xs) };
+        return;
+    }
+    scalar::scale_combine(row, keep, x, xs)
+}
+
+/// The plain SGD step `w[i] -= eps * delta[i]` (mul + sub, never FMA:
+/// bit-parity with the merge's empty-selection path is load-bearing for
+/// the masked-merge oracle property).
+#[inline]
+pub fn sgd_step(w: &mut [f32], delta: &[f32], eps: f32) {
+    debug_assert_eq!(w.len(), delta.len());
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2Fma {
+        // SAFETY: see `dot`.
+        unsafe { avx2::sgd_step(w, delta, eps) };
+        return;
+    }
+    scalar::sgd_step(w, delta, eps)
+}
+
+/// The Parzen gate's three squared distances in one pass over the block:
+/// returns `(||w_prop - ext||^2, ||w - ext||^2, ||ext||^2)`, each f32
+/// element ops widened to f64 accumulation (the scalar reference's
+/// precision contract).
+#[inline]
+pub fn gate_dists(w: &[f32], w_prop: &[f32], ext: &[f32]) -> (f64, f64, f64) {
+    debug_assert_eq!(w.len(), ext.len());
+    debug_assert_eq!(w_prop.len(), ext.len());
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2Fma {
+        // SAFETY: see `dot`.
+        return unsafe { avx2::gate_dists(w, w_prop, ext) };
+    }
+    scalar::gate_dists(w, w_prop, ext)
+}
+
+/// The merge's fused select-sum / mean / axpy pass over one block
+/// (eq. 6/7): for every coordinate `i` of the block,
+///
+/// ```text
+/// sel    = sum over set bits nb of mask, ascending: exts[nb*stride + base + i]
+/// mean   = (sel + w[i]) * inv
+/// w[i]  -= eps * ((w[i] - mean) + delta[i])
+/// ```
+///
+/// `w`/`delta` are the block's slices; buffer `nb`'s copy of block word
+/// `i` lives at `exts[nb * stride + base + i]`.  Per-coordinate op order
+/// is identical across arms (see module doc).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn merge_update(
+    w: &mut [f32],
+    delta: &[f32],
+    exts: &[f32],
+    stride: usize,
+    base: usize,
+    mask: u64,
+    inv: f32,
+    eps: f32,
+) {
+    debug_assert_eq!(w.len(), delta.len());
+    if mask != 0 {
+        let hi = 63 - mask.leading_zeros() as usize;
+        debug_assert!(hi * stride + base + w.len() <= exts.len());
+    }
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2Fma {
+        // SAFETY: see `dot`.
+        unsafe { avx2::merge_update(w, delta, exts, stride, base, mask, inv, eps) };
+        return;
+    }
+    scalar::merge_update(w, delta, exts, stride, base, mask, inv, eps)
+}
+
+/// Portable reference arm (also the `ASGD_NO_SIMD=1` arm and the oracle
+/// the parity tests compare against).
+pub mod scalar {
+    /// Four independent accumulators break the FP add dependency chain
+    /// (§Perf L3 iteration 1: +2.3x on the d=128 codebook workload).
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = [0.0f32; 4];
+        let chunks = a.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            acc[0] += a[j] * b[j];
+            acc[1] += a[j + 1] * b[j + 1];
+            acc[2] += a[j + 2] * b[j + 2];
+            acc[3] += a[j + 3] * b[j + 3];
+        }
+        let mut tail = 0.0f32;
+        for j in chunks * 4..a.len() {
+            tail += a[j] * b[j];
+        }
+        (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+    }
+
+    #[inline]
+    pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        for (yi, &xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    #[inline]
+    pub fn scale_combine(row: &mut [f32], keep: f32, x: &[f32], xs: f32) {
+        for (r, &xi) in row.iter_mut().zip(x) {
+            *r = *r * keep + xi * xs;
+        }
+    }
+
+    #[inline]
+    pub fn sgd_step(w: &mut [f32], delta: &[f32], eps: f32) {
+        for (wi, &di) in w.iter_mut().zip(delta) {
+            *wi -= eps * di;
+        }
+    }
+
+    #[inline]
+    pub fn gate_dists(w: &[f32], w_prop: &[f32], ext: &[f32]) -> (f64, f64, f64) {
+        let mut a = 0.0f64;
+        let mut c = 0.0f64;
+        let mut nrm = 0.0f64;
+        for i in 0..ext.len() {
+            let e = ext[i];
+            let da = w_prop[i] - e;
+            let dc = w[i] - e;
+            a += (da * da) as f64;
+            c += (dc * dc) as f64;
+            nrm += (e * e) as f64;
+        }
+        (a, c, nrm)
+    }
+
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn merge_update(
+        w: &mut [f32],
+        delta: &[f32],
+        exts: &[f32],
+        stride: usize,
+        base: usize,
+        mask: u64,
+        inv: f32,
+        eps: f32,
+    ) {
+        for i in 0..w.len() {
+            let mut sel = 0.0f32;
+            let mut bits = mask;
+            while bits != 0 {
+                let nb = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                sel += exts[nb * stride + base + i];
+            }
+            let mean = (sel + w[i]) * inv;
+            let delta_bar = (w[i] - mean) + delta[i];
+            w[i] -= eps * delta_bar;
+        }
+    }
+}
+
+/// AVX2+FMA arm.  Every function requires the CPU features its
+/// `#[target_feature]` names; [`isa`] guards all callers.
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// # Safety
+    /// Requires AVX2 and FMA (guaranteed when [`super::isa`] returns
+    /// [`super::Isa::Avx2Fma`]).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let va0 = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb0 = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc0 = _mm256_fmadd_ps(va0, vb0, acc0);
+            let va1 = _mm256_loadu_ps(a.as_ptr().add(i + 8));
+            let vb1 = _mm256_loadu_ps(b.as_ptr().add(i + 8));
+            acc1 = _mm256_fmadd_ps(va1, vb1, acc1);
+            i += 16;
+        }
+        while i + 8 <= n {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            acc0 = _mm256_fmadd_ps(va, vb, acc0);
+            i += 8;
+        }
+        let mut sum = hsum256(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            sum += a[i] * b[i];
+            i += 1;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// See [`dot`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len();
+        let va = _mm256_set1_ps(a);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_fmadd_ps(va, vx, vy));
+            i += 8;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// See [`dot`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scale_combine(row: &mut [f32], keep: f32, x: &[f32], xs: f32) {
+        let n = row.len();
+        let vk = _mm256_set1_ps(keep);
+        let vs = _mm256_set1_ps(xs);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vr = _mm256_loadu_ps(row.as_ptr().add(i));
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let out = _mm256_fmadd_ps(vr, vk, _mm256_mul_ps(vx, vs));
+            _mm256_storeu_ps(row.as_mut_ptr().add(i), out);
+            i += 8;
+        }
+        while i < n {
+            row[i] = row[i] * keep + x[i] * xs;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// See [`dot`].  No FMA inside: bit-parity with the scalar arm.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sgd_step(w: &mut [f32], delta: &[f32], eps: f32) {
+        let n = w.len();
+        let ve = _mm256_set1_ps(eps);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vw = _mm256_loadu_ps(w.as_ptr().add(i));
+            let vd = _mm256_loadu_ps(delta.as_ptr().add(i));
+            let out = _mm256_sub_ps(vw, _mm256_mul_ps(ve, vd));
+            _mm256_storeu_ps(w.as_mut_ptr().add(i), out);
+            i += 8;
+        }
+        while i < n {
+            w[i] -= eps * delta[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// See [`dot`].  Element ops run in f32 exactly like the scalar arm
+    /// (sub, mul, then widen); only the f64 accumulator order differs.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gate_dists(w: &[f32], w_prop: &[f32], ext: &[f32]) -> (f64, f64, f64) {
+        let n = ext.len();
+        let mut va = _mm256_setzero_pd();
+        let mut vc = _mm256_setzero_pd();
+        let mut vn = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let e = _mm_loadu_ps(ext.as_ptr().add(i));
+            let p = _mm_loadu_ps(w_prop.as_ptr().add(i));
+            let ww = _mm_loadu_ps(w.as_ptr().add(i));
+            let da = _mm_sub_ps(p, e);
+            let dc = _mm_sub_ps(ww, e);
+            va = _mm256_add_pd(va, _mm256_cvtps_pd(_mm_mul_ps(da, da)));
+            vc = _mm256_add_pd(vc, _mm256_cvtps_pd(_mm_mul_ps(dc, dc)));
+            vn = _mm256_add_pd(vn, _mm256_cvtps_pd(_mm_mul_ps(e, e)));
+            i += 4;
+        }
+        let (mut a, mut c, mut nrm) = (hsum256d(va), hsum256d(vc), hsum256d(vn));
+        while i < n {
+            let e = ext[i];
+            let da = w_prop[i] - e;
+            let dc = w[i] - e;
+            a += (da * da) as f64;
+            c += (dc * dc) as f64;
+            nrm += (e * e) as f64;
+            i += 1;
+        }
+        (a, c, nrm)
+    }
+
+    /// # Safety
+    /// See [`dot`].  Additionally requires, for every set bit `nb` of
+    /// `mask`, that `exts[nb*stride + base ..][..w.len()]` is in bounds
+    /// (the dispatcher debug-asserts it).  No FMA, no reassociation:
+    /// per-lane ops replicate the scalar arm exactly.
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn merge_update(
+        w: &mut [f32],
+        delta: &[f32],
+        exts: &[f32],
+        stride: usize,
+        base: usize,
+        mask: u64,
+        inv: f32,
+        eps: f32,
+    ) {
+        let n = w.len();
+        let vinv = _mm256_set1_ps(inv);
+        let veps = _mm256_set1_ps(eps);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vw = _mm256_loadu_ps(w.as_ptr().add(i));
+            let vd = _mm256_loadu_ps(delta.as_ptr().add(i));
+            let mut vsel = _mm256_setzero_ps();
+            let mut bits = mask;
+            while bits != 0 {
+                let nb = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let ve = _mm256_loadu_ps(exts.as_ptr().add(nb * stride + base + i));
+                vsel = _mm256_add_ps(vsel, ve);
+            }
+            let vmean = _mm256_mul_ps(_mm256_add_ps(vsel, vw), vinv);
+            let vdb = _mm256_add_ps(_mm256_sub_ps(vw, vmean), vd);
+            let out = _mm256_sub_ps(vw, _mm256_mul_ps(veps, vdb));
+            _mm256_storeu_ps(w.as_mut_ptr().add(i), out);
+            i += 8;
+        }
+        if i < n {
+            super::scalar::merge_update(
+                &mut w[i..],
+                &delta[i..],
+                exts,
+                stride,
+                base + i,
+                mask,
+                inv,
+                eps,
+            );
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers are `target_feature(avx2,fma)` fns).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps(v, 1);
+        let lo = _mm256_castps256_ps128(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// # Safety
+    /// Requires AVX2 (callers are `target_feature(avx2,fma)` fns).
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum256d(v: __m256d) -> f64 {
+        let hi = _mm256_extractf128_pd(v, 1);
+        let lo = _mm256_castpd256_pd128(v);
+        let s = _mm_add_pd(lo, hi);
+        let s = _mm_add_sd(s, _mm_unpackhi_pd(s, s));
+        _mm_cvtsd_f64(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn rand_vec(rng: &mut Xoshiro256pp, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal() as f32).collect()
+    }
+
+    /// The env override pins the dispatch arm; without it the arm must
+    /// match hardware detection.  (The CI scalar job sets ASGD_NO_SIMD=1
+    /// process-wide, so this asserts the scalar branch there.)
+    #[test]
+    fn dispatch_honours_env_override_and_detection() {
+        let no_simd = std::env::var_os("ASGD_NO_SIMD").is_some_and(|v| v != "0");
+        if no_simd {
+            assert_eq!(isa(), Isa::Scalar);
+        } else {
+            #[cfg(target_arch = "x86_64")]
+            {
+                let hw = is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
+                assert_eq!(isa() == Isa::Avx2Fma, hw);
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            assert_eq!(isa(), Isa::Scalar);
+        }
+    }
+
+    /// All five kernels, both arms, every lane remainder len % 8 in 0..8.
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_matches_scalar_across_lane_remainders() {
+        if !(is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")) {
+            eprintln!("skipping avx2 parity: cpu lacks avx2+fma");
+            return;
+        }
+        let mut rng = Xoshiro256pp::seed_from_u64(99);
+        for rem in 0..8usize {
+            let len = 24 + rem; // >= 3 full vectors + remainder
+            let a = rand_vec(&mut rng, len);
+            let b = rand_vec(&mut rng, len);
+
+            // dot / axpy / scale_combine: FMA allowed -> tolerance
+            let (ds, dv) = (scalar::dot(&a, &b), unsafe { avx2::dot(&a, &b) });
+            assert!((ds - dv).abs() < 1e-4 * ds.abs().max(1.0), "dot rem={rem}: {ds} vs {dv}");
+
+            let mut ys = a.clone();
+            let mut yv = a.clone();
+            scalar::axpy(&mut ys, 0.37, &b);
+            unsafe { avx2::axpy(&mut yv, 0.37, &b) };
+            for (s, v) in ys.iter().zip(&yv) {
+                assert!((s - v).abs() < 1e-5, "axpy rem={rem}: {s} vs {v}");
+            }
+
+            let mut rs = a.clone();
+            let mut rv = a.clone();
+            scalar::scale_combine(&mut rs, 0.9, &b, 0.05);
+            unsafe { avx2::scale_combine(&mut rv, 0.9, &b, 0.05) };
+            for (s, v) in rs.iter().zip(&rv) {
+                assert!((s - v).abs() < 1e-5, "scale_combine rem={rem}: {s} vs {v}");
+            }
+
+            // sgd_step / merge_update: bit-identical by contract
+            let mut ws = a.clone();
+            let mut wv = a.clone();
+            scalar::sgd_step(&mut ws, &b, 0.13);
+            unsafe { avx2::sgd_step(&mut wv, &b, 0.13) };
+            assert_eq!(bits(&ws), bits(&wv), "sgd_step rem={rem} not bit-identical");
+
+            let n_buf = 5usize;
+            let exts = rand_vec(&mut rng, n_buf * len);
+            for mask in [0u64, 0b1, 0b10110] {
+                let delta = rand_vec(&mut rng, len);
+                let mut ws = a.clone();
+                let mut wv = a.clone();
+                let inv = 1.0 / (mask.count_ones() as f32 + 1.0);
+                scalar::merge_update(&mut ws, &delta, &exts, len, 0, mask, inv, 0.07);
+                unsafe { avx2::merge_update(&mut wv, &delta, &exts, len, 0, mask, inv, 0.07) };
+                assert_eq!(
+                    bits(&ws),
+                    bits(&wv),
+                    "merge_update rem={rem} mask={mask:b} not bit-identical"
+                );
+            }
+
+            // gate_dists: element ops identical, accumulator order differs
+            let e = rand_vec(&mut rng, len);
+            let gs = scalar::gate_dists(&a, &b, &e);
+            let gv = unsafe { avx2::gate_dists(&a, &b, &e) };
+            for (s, v) in [gs.0, gs.1, gs.2].iter().zip([gv.0, gv.1, gv.2].iter()) {
+                assert!((s - v).abs() < 1e-6 * s.abs().max(1.0), "gate rem={rem}: {s} vs {v}");
+            }
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|f| f.to_bits()).collect()
+    }
+
+    /// The public dispatchers agree with the scalar reference whatever
+    /// arm is active (runs meaningfully on both CI arms).
+    #[test]
+    fn public_dispatch_matches_scalar_reference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        for len in [1usize, 7, 8, 9, 31, 64, 100] {
+            let a = rand_vec(&mut rng, len);
+            let b = rand_vec(&mut rng, len);
+            let d = dot(&a, &b);
+            assert!((d - scalar::dot(&a, &b)).abs() < 1e-4 * d.abs().max(1.0));
+
+            let mut w1 = a.clone();
+            let mut w2 = a.clone();
+            sgd_step(&mut w1, &b, 0.2);
+            scalar::sgd_step(&mut w2, &b, 0.2);
+            assert_eq!(bits(&w1), bits(&w2), "sgd_step dispatch len={len}");
+
+            let exts = rand_vec(&mut rng, 3 * len);
+            let mut w1 = a.clone();
+            let mut w2 = a.clone();
+            merge_update(&mut w1, &b, &exts, len, 0, 0b101, 1.0 / 3.0, 0.1);
+            scalar::merge_update(&mut w2, &b, &exts, len, 0, 0b101, 1.0 / 3.0, 0.1);
+            assert_eq!(bits(&w1), bits(&w2), "merge_update dispatch len={len}");
+        }
+    }
+}

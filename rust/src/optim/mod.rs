@@ -15,14 +15,13 @@ use crate::kernels::merge::{
     asgd_merge, asgd_merge_blocked, asgd_merge_blocked_ungated, asgd_merge_percenter,
     asgd_merge_ungated, MergeOut,
 };
+use crate::kernels::{simd, ExtPresence};
 
 /// Plain SGD step: `w -= eps * grad` (alg. 2 line 3 / alg. 4 line 6).
 #[inline]
 pub fn sgd_apply(w: &mut [f32], grad: &[f32], eps: f32) {
     debug_assert_eq!(w.len(), grad.len());
-    for (wi, g) in w.iter_mut().zip(grad) {
-        *wi -= eps * g;
-    }
+    simd::sgd_step(w, grad, eps);
 }
 
 /// The asynchronous update of alg. 5 line 8 with external buffers
@@ -43,12 +42,15 @@ pub struct AsgdUpdate {
 
 impl AsgdUpdate {
     /// Apply one update in place.  `exts` is the concatenated external
-    /// buffer snapshot (zeros = empty), `scratch` a `state_len` buffer.
+    /// buffer snapshot, `presence` says which `(buffer, transport block)`
+    /// slots of it hold delivered payloads (clear bits are never read),
+    /// `scratch` a `state_len` buffer.
     pub fn apply(
         &self,
         w: &mut [f32],
         delta: &[f32],
         exts: &[f32],
+        presence: &ExtPresence,
         scratch: &mut [f32],
     ) -> MergeOut {
         if self.comm_chunks > 1 {
@@ -60,19 +62,28 @@ impl AsgdUpdate {
                     w,
                     delta,
                     exts,
+                    presence,
                     self.eps,
                     layout.iter_bounds(),
                     scratch,
                 ),
-                _ => asgd_merge_blocked(w, delta, exts, self.eps, layout.iter_bounds(), scratch),
+                _ => asgd_merge_blocked(
+                    w,
+                    delta,
+                    exts,
+                    presence,
+                    self.eps,
+                    layout.iter_bounds(),
+                    scratch,
+                ),
             };
         }
         match self.gate {
-            GateMode::FullState => asgd_merge(w, delta, exts, self.eps, scratch),
+            GateMode::FullState => asgd_merge(w, delta, exts, presence, self.eps, scratch),
             GateMode::PerCenter => {
-                asgd_merge_percenter(w, delta, exts, self.eps, self.k, self.d, scratch)
+                asgd_merge_percenter(w, delta, exts, presence, self.eps, self.k, self.d, scratch)
             }
-            GateMode::Off => asgd_merge_ungated(w, delta, exts, self.eps, scratch),
+            GateMode::Off => asgd_merge_ungated(w, delta, exts, presence, self.eps, scratch),
         }
     }
 }
@@ -114,10 +125,11 @@ mod tests {
         let mut scratch = vec![0.0; 4];
         let delta = vec![0.1f32; 4];
         let exts = vec![0.5f32; 8]; // 2 buffers
+        let presence = ExtPresence::all_present(2, 1);
         for gate in [GateMode::FullState, GateMode::PerCenter, GateMode::Off] {
             let mut w = vec![1.0f32; 4];
             let upd = AsgdUpdate { gate, eps: 0.1, k: 2, d: 2, comm_chunks: 1 };
-            let out = upd.apply(&mut w, &delta, &exts, &mut scratch);
+            let out = upd.apply(&mut w, &delta, &exts, &presence, &mut scratch);
             assert!(out.n_active == 2);
             if gate == GateMode::Off {
                 assert_eq!(out.n_good, 2, "off mode accepts all active");
@@ -130,13 +142,14 @@ mod tests {
         // a "behind" buffer: rejected by eq. (4), accepted by Off
         let delta = vec![0.1f32; 2];
         let exts = vec![10.0f32; 2];
+        let presence = ExtPresence::all_present(1, 1);
         let mut scratch = vec![0.0; 2];
         let mut w_full = vec![1.0f32; 2];
         let mut w_off = vec![1.0f32; 2];
         AsgdUpdate { gate: GateMode::FullState, eps: 0.1, k: 1, d: 2, comm_chunks: 1 }
-            .apply(&mut w_full, &delta, &exts, &mut scratch);
+            .apply(&mut w_full, &delta, &exts, &presence, &mut scratch);
         AsgdUpdate { gate: GateMode::Off, eps: 0.1, k: 1, d: 2, comm_chunks: 1 }
-            .apply(&mut w_off, &delta, &exts, &mut scratch);
+            .apply(&mut w_off, &delta, &exts, &presence, &mut scratch);
         assert_ne!(w_full, w_off);
     }
 
@@ -152,10 +165,11 @@ mod tests {
         let w_prop: Vec<f32> = w0.iter().zip(&delta).map(|(a, b)| a - eps * b).collect();
         let mut ext = vec![100.0f32; len];
         ext[..2].copy_from_slice(&w_prop[..2]);
+        let presence = ExtPresence::all_present(1, 2);
         let mut scratch = vec![0.0; len];
         let mut w = w0.clone();
         let upd = AsgdUpdate { gate: GateMode::FullState, eps, k: 1, d: len, comm_chunks: 2 };
-        let out = upd.apply(&mut w, &delta, &ext, &mut scratch);
+        let out = upd.apply(&mut w, &delta, &ext, &presence, &mut scratch);
         assert_eq!(out.n_good, 1);
         // rejected block 1 is the plain step; accepted block 0 differs
         for j in 2..len {

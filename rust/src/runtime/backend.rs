@@ -14,6 +14,7 @@
 use super::engine::XlaHandle;
 use super::manifest::Manifest;
 use crate::config::{BackendKind, CommMode, GateMode, TrainConfig};
+use crate::kernels::ExtPresence;
 use crate::models::Model;
 use crate::optim::AsgdUpdate;
 use anyhow::{bail, Context, Result};
@@ -39,6 +40,10 @@ pub struct IterOut {
 pub struct StepScratch {
     pub grad: Vec<f32>,
     pub prop: Vec<f32>,
+    /// Shaped input staging for the XLA steppers, round-tripped through
+    /// [`XlaHandle::execute_reusing`] so the hot path refills the same
+    /// buffers every iteration (no per-step `to_vec` of x/w/exts).
+    pub xla_inputs: Vec<(Vec<f32>, Vec<i64>)>,
 }
 
 impl StepScratch {
@@ -49,6 +54,10 @@ impl StepScratch {
 }
 
 /// One ASGD iteration: mini-batch gradient + gated merge + step, in place.
+///
+/// `presence` is the receive loop's per-buffer/per-block delivery mask
+/// ([`ExtPresence`]): words of `exts` under a clear bit are unspecified
+/// and must not be read.
 pub trait Stepper: Send + Sync {
     fn step(
         &self,
@@ -56,6 +65,7 @@ pub trait Stepper: Send + Sync {
         labels: Option<&[f32]>,
         w: &mut [f32],
         exts: &[f32],
+        presence: &ExtPresence,
         scratch: &mut StepScratch,
     ) -> Result<IterOut>;
 
@@ -82,13 +92,14 @@ impl Stepper for NativeStepper {
         labels: Option<&[f32]>,
         w: &mut [f32],
         exts: &[f32],
+        presence: &ExtPresence,
         scratch: &mut StepScratch,
     ) -> Result<IterOut> {
         scratch.ensure(w.len());
         // split borrow: grad and prop are separate fields
-        let StepScratch { grad, prop } = scratch;
+        let StepScratch { grad, prop, .. } = scratch;
         let loss = self.model.grad(x, labels, w, grad);
-        let out = self.update.apply(w, grad, exts, prop);
+        let out = self.update.apply(w, grad, exts, presence, prop);
         Ok(IterOut {
             loss,
             n_good: out.n_good,
@@ -170,21 +181,52 @@ impl Stepper for XlaStepper {
         _labels: Option<&[f32]>,
         w: &mut [f32],
         exts: &[f32],
-        _scratch: &mut StepScratch,
+        presence: &ExtPresence,
+        scratch: &mut StepScratch,
     ) -> Result<IterOut> {
+        let state_len = self.k * self.d;
         debug_assert_eq!(x.len(), self.b * self.d);
-        debug_assert_eq!(w.len(), self.k * self.d);
-        debug_assert_eq!(exts.len(), self.n_buf * self.k * self.d);
-        let inputs = vec![
-            (x.to_vec(), vec![self.b as i64, self.d as i64]),
-            (w.to_vec(), vec![self.k as i64, self.d as i64]),
-            (
-                exts.to_vec(),
-                vec![self.n_buf as i64, self.k as i64, self.d as i64],
-            ),
-            (vec![self.eps], vec![1]),
-        ];
-        let mut out = self.handle.execute(&self.iter_artifact, inputs)?;
+        debug_assert_eq!(w.len(), state_len);
+        debug_assert_eq!(exts.len(), self.n_buf * state_len);
+        // the fused path is full-state transport only (build_stepper
+        // refuses chunked/adaptive), so presence is one bit per buffer
+        debug_assert_eq!(presence.n_blocks(), 1);
+        if scratch.xla_inputs.is_empty() {
+            scratch.xla_inputs = vec![
+                (vec![0.0; self.b * self.d], vec![self.b as i64, self.d as i64]),
+                (vec![0.0; state_len], vec![self.k as i64, self.d as i64]),
+                (
+                    vec![0.0; self.n_buf * state_len],
+                    vec![self.n_buf as i64, self.k as i64, self.d as i64],
+                ),
+                (vec![self.eps], vec![1]),
+            ];
+        }
+        {
+            let inp = &mut scratch.xla_inputs;
+            inp[0].0.copy_from_slice(x);
+            inp[1].0.copy_from_slice(w);
+            // Stage the externals: the AOT artifact keeps the zeros-as-
+            // empty convention internally, so absent buffers (whose
+            // words in `exts` are unspecified under the presence
+            // contract) are zeroed during staging.  Note the documented
+            // residual ambiguity: a *present* all-zero buffer is still
+            // invisible to the artifact's lambda — only the native path
+            // is fully presence-aware.
+            let stage = &mut inp[2].0;
+            for nb in 0..self.n_buf {
+                let dst = &mut stage[nb * state_len..(nb + 1) * state_len];
+                if presence.buffer_active(nb) {
+                    dst.copy_from_slice(&exts[nb * state_len..(nb + 1) * state_len]);
+                } else {
+                    dst.fill(0.0);
+                }
+            }
+            inp[3].0[0] = self.eps;
+        }
+        let mut out = self
+            .handle
+            .execute_reusing(&self.iter_artifact, &mut scratch.xla_inputs)?;
         // outputs: (w_next [k,d], counts [k], loss [1], n_good [1])
         let n_good = out.pop().expect("n_good")[0] as usize;
         let loss = out.pop().expect("loss")[0] as f64;
@@ -194,9 +236,9 @@ impl Stepper for XlaStepper {
         Ok(IterOut {
             loss,
             n_good,
-            // the artifact's lambda counts only non-zero buffers; report
-            // the same quantity natively for consistency
-            n_active: count_active(exts, self.k * self.d),
+            // delivered buffers, straight from the mask (the old code
+            // re-scanned n_buf * state_len words for the same number)
+            n_active: presence.n_active_buffers(),
             // the fused artifact replaces w wholesale — no merge
             // internals to report, so every block counts as touched
             touched_blocks: u64::MAX,
@@ -221,12 +263,6 @@ impl Stepper for XlaStepper {
     fn name(&self) -> &'static str {
         "xla"
     }
-}
-
-fn count_active(exts: &[f32], state_len: usize) -> usize {
-    exts.chunks(state_len)
-        .filter(|c| c.iter().any(|&v| v != 0.0))
-        .count()
 }
 
 // ---------------------------------------------------------------------------
@@ -294,36 +330,53 @@ impl Stepper for XlaGradStepper {
         labels: Option<&[f32]>,
         w: &mut [f32],
         exts: &[f32],
+        presence: &ExtPresence,
         scratch: &mut StepScratch,
     ) -> Result<IterOut> {
         let y = labels.context("xla grad stepper needs labels")?;
         scratch.ensure(w.len());
-        let y_input = match &self.extra {
-            XlaGradExtra::Linear => (y.to_vec(), vec![self.b as i64]),
-            XlaGradExtra::Mlp { classes } => {
-                let mut onehot = vec![0.0f32; self.b * classes];
-                for (i, &cls) in y.iter().enumerate() {
-                    onehot[i * classes + cls as usize] = 1.0;
+        if scratch.xla_inputs.is_empty() {
+            let y_shaped = match &self.extra {
+                XlaGradExtra::Linear => (vec![0.0f32; self.b], vec![self.b as i64]),
+                XlaGradExtra::Mlp { classes } => (
+                    vec![0.0f32; self.b * classes],
+                    vec![self.b as i64, *classes as i64],
+                ),
+            };
+            scratch.xla_inputs = vec![
+                (vec![0.0; self.b * self.d], vec![self.b as i64, self.d as i64]),
+                y_shaped,
+                (vec![0.0; w.len()], vec![w.len() as i64]),
+                (vec![self.eps], vec![1]),
+            ];
+        }
+        {
+            let inp = &mut scratch.xla_inputs;
+            inp[0].0.copy_from_slice(x);
+            match &self.extra {
+                XlaGradExtra::Linear => inp[1].0.copy_from_slice(y),
+                XlaGradExtra::Mlp { classes } => {
+                    inp[1].0.fill(0.0);
+                    for (i, &cls) in y.iter().enumerate() {
+                        inp[1].0[i * classes + cls as usize] = 1.0;
+                    }
                 }
-                (onehot, vec![self.b as i64, *classes as i64])
             }
-        };
-        let inputs = vec![
-            (x.to_vec(), vec![self.b as i64, self.d as i64]),
-            y_input,
-            (w.to_vec(), vec![w.len() as i64]),
-            (vec![self.eps], vec![1]),
-        ];
-        let mut out = self.handle.execute(&self.step_artifact, inputs)?;
+            inp[2].0.copy_from_slice(w);
+            inp[3].0[0] = self.eps;
+        }
+        let mut out = self
+            .handle
+            .execute_reusing(&self.step_artifact, &mut scratch.xla_inputs)?;
         let loss = out.pop().expect("loss")[0] as f64;
         let w_next = out.pop().expect("w_next");
         // recover Delta_M from the plain step: delta = (w - w_next)/eps
-        let StepScratch { grad, prop } = scratch;
+        let StepScratch { grad, prop, .. } = scratch;
         let inv = 1.0 / self.eps;
         for i in 0..w.len() {
             grad[i] = (w[i] - w_next[i]) * inv;
         }
-        let m = self.update.apply(w, grad, exts, prop);
+        let m = self.update.apply(w, grad, exts, presence, prop);
         Ok(IterOut {
             loss,
             n_good: m.n_good,
@@ -407,10 +460,13 @@ mod tests {
         let mut w = model.init_state(&ds, &mut rng);
         let mut scratch = StepScratch::default();
         let exts = vec![0.0f32; cfg.n_buffers * w.len()];
+        let presence = ExtPresence::new(cfg.n_buffers, 1); // nothing delivered
         let e0 = model.eval(&ds, &w, 1024);
         for i in 0..30 {
             let x = ds.rows((i * 64) % 1900, 64);
-            let out = stepper.step(x, None, &mut w, &exts, &mut scratch).unwrap();
+            let out = stepper
+                .step(x, None, &mut w, &exts, &presence, &mut scratch)
+                .unwrap();
             assert_eq!(out.n_active, 0);
         }
         let e1 = model.eval(&ds, &w, 1024);

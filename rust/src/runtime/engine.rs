@@ -25,13 +25,15 @@ use std::sync::mpsc::Receiver;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Mutex;
 
-/// A request: execute artifact `name` with flat f32 inputs.
+/// A request: execute artifact `name` with flat f32 inputs.  The reply
+/// carries the input buffers back so hot-path callers can refill them in
+/// place next step instead of allocating per iteration.
 #[cfg_attr(not(feature = "xla"), allow(dead_code))]
 struct ExecRequest {
     name: String,
     /// (flat data, dims) per input.
     inputs: Vec<(Vec<f32>, Vec<i64>)>,
-    reply: Sender<Result<Vec<Vec<f32>>>>,
+    reply: Sender<(Result<Vec<Vec<f32>>>, Vec<(Vec<f32>, Vec<i64>)>)>,
 }
 
 enum Msg {
@@ -58,15 +60,34 @@ impl XlaHandle {
     /// Execute `name` with the given flat inputs; returns the flat tuple
     /// outputs in artifact order.
     pub fn execute(&self, name: &str, inputs: Vec<(Vec<f32>, Vec<i64>)>) -> Result<Vec<Vec<f32>>> {
+        let mut inputs = inputs;
+        self.execute_reusing(name, &mut inputs)
+    }
+
+    /// Like [`Self::execute`], but the input buffers come back to the
+    /// caller when the engine is done with them: on return (success *or*
+    /// error) `inputs` holds the same shaped buffers, so a stepper can
+    /// keep them in its scratch and refill in place every iteration —
+    /// no per-step `to_vec` of the state or the external buffers.
+    pub fn execute_reusing(
+        &self,
+        name: &str,
+        inputs: &mut Vec<(Vec<f32>, Vec<i64>)>,
+    ) -> Result<Vec<Vec<f32>>> {
         let (reply, rx) = channel();
-        self.tx
-            .send(Msg::Exec(ExecRequest {
-                name: name.to_string(),
-                inputs,
-                reply,
-            }))
-            .map_err(|_| anyhow!("xla engine thread is gone"))?;
-        rx.recv().map_err(|_| anyhow!("xla engine dropped reply"))?
+        if let Err(failed) = self.tx.send(Msg::Exec(ExecRequest {
+            name: name.to_string(),
+            inputs: std::mem::take(inputs),
+            reply,
+        })) {
+            if let Msg::Exec(req) = failed.0 {
+                *inputs = req.inputs; // nothing consumed them; hand back
+            }
+            return Err(anyhow!("xla engine thread is gone"));
+        }
+        let (result, returned) = rx.recv().map_err(|_| anyhow!("xla engine dropped reply"))?;
+        *inputs = returned;
+        result
     }
 
     /// Compile `name` now (so the first training iteration isn't charged
@@ -161,7 +182,9 @@ fn service_loop(manifest: Manifest, rx: Receiver<Msg>, ready: Sender<Result<()>>
             }
             Msg::Exec(req) => {
                 let result = exec_one(&client, &manifest, &mut cache, &req);
-                let _ = req.reply.send(result);
+                // hand the input buffers back for caller-side reuse
+                let ExecRequest { inputs, reply, .. } = req;
+                let _ = reply.send((result, inputs));
             }
         }
     }

@@ -1,0 +1,74 @@
+//! Machine-readable bench output: every perf-tracking bench merges its
+//! arms into one shared JSON file (`BENCH_hotpath.json` by default,
+//! `ASGD_BENCH_OUT` overrides the path) so subsequent PRs can diff
+//! hot-path regressions without scraping stdout.
+//!
+//! The file is a single object keyed by bench name; each bench owns its
+//! key and overwrites it wholesale on every run, leaving the other
+//! benches' results intact (read-merge-write).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// The output path: `$ASGD_BENCH_OUT` or `BENCH_hotpath.json` in the
+/// current directory (`rust/` under `cargo bench`).
+pub fn out_path() -> PathBuf {
+    std::env::var_os("ASGD_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("BENCH_hotpath.json"))
+}
+
+/// Quick mode for CI smokes: `ASGD_BENCH_QUICK` set to anything but "0".
+pub fn quick_mode() -> bool {
+    std::env::var_os("ASGD_BENCH_QUICK").is_some_and(|v| v != "0")
+}
+
+/// Merge `section` under `key` into the shared bench file.
+pub fn write_section(key: &str, section: Json) -> std::io::Result<()> {
+    let path = out_path();
+    write_section_at(&path, key, section)?;
+    println!("   [{key}] results merged into {}", path.display());
+    Ok(())
+}
+
+/// Read-merge-write `section` under `key` at `path`.  A file that is
+/// missing or unparsable is replaced by a fresh object (benches must
+/// never fail on a stale artifact).
+pub fn write_section_at(path: &Path, key: &str, section: Json) -> std::io::Result<()> {
+    let mut root = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(m)) => m,
+            _ => BTreeMap::new(),
+        },
+        Err(_) => BTreeMap::new(),
+    };
+    root.insert(key.to_string(), section);
+    std::fs::write(path, Json::Obj(root).to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::JsonBuilder;
+
+    #[test]
+    fn sections_merge_without_clobbering() {
+        let dir = std::env::temp_dir().join(format!("benchjson_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        write_section_at(&path, "a", JsonBuilder::new().num("x", 1.0).build()).unwrap();
+        write_section_at(&path, "b", JsonBuilder::new().num("y", 2.0).build()).unwrap();
+        write_section_at(&path, "a", JsonBuilder::new().num("x", 3.0).build()).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.get("a").unwrap().get("x").unwrap().as_f64(), Some(3.0));
+        assert_eq!(root.get("b").unwrap().get("y").unwrap().as_f64(), Some(2.0));
+        // garbage on disk is replaced, other keys rebuilt from scratch
+        std::fs::write(&path, "not json").unwrap();
+        write_section_at(&path, "c", JsonBuilder::new().num("z", 4.0).build()).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.get("c").unwrap().get("z").unwrap().as_f64(), Some(4.0));
+        assert!(root.get("a").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,7 +1,9 @@
 //! Foundation utilities built from scratch for the offline environment:
 //! PRNG ([`rng`]), JSON ([`json`]), CSV export ([`csv`]), timing
-//! ([`timer`]) and logging ([`logging`]).
+//! ([`timer`]), machine-readable bench output ([`benchjson`]) and
+//! logging ([`logging`]).
 
+pub mod benchjson;
 pub mod csv;
 pub mod json;
 pub mod logging;

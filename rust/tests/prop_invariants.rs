@@ -11,7 +11,8 @@ use asgd::data::synthetic;
 use asgd::gaspi::sched::plan_send_into;
 use asgd::gaspi::{ChunkLayout, DirtyMap, ReadOutcome, Segment, Topology, World, MAX_GROUP_BLOCKS};
 use asgd::kernels::kmeans::{kmeans_stats, KmeansScratch};
-use asgd::kernels::merge::{asgd_merge, parzen_gate};
+use asgd::kernels::merge::{asgd_merge, asgd_merge_blocked, parzen_gate};
+use asgd::kernels::ExtPresence;
 use asgd::net::allreduce::TreeReduce;
 use asgd::optim::AsgdUpdate;
 use asgd::util::rng::Xoshiro256pp;
@@ -84,10 +85,11 @@ fn prop_merge_geometry() {
         let delta: Vec<f32> = (0..len).map(|_| rng.next_normal() as f32 * 0.2).collect();
         let mut scratch = vec![0.0; len];
 
+        let present = ExtPresence::all_present(1, 1);
         // far-away buffer: rejected -> plain step
         let far: Vec<f32> = w0.iter().map(|v| v + 1e5).collect();
         let mut w = w0.clone();
-        let out = asgd_merge(&mut w, &delta, &far, eps, &mut scratch);
+        let out = asgd_merge(&mut w, &delta, &far, &present, eps, &mut scratch);
         if out.n_good == 0 {
             for i in 0..len {
                 let plain = w0[i] - eps * delta[i];
@@ -98,7 +100,7 @@ fn prop_merge_geometry() {
         // buffer at w_prop: accepted, and the result moves toward it
         let w_prop: Vec<f32> = w0.iter().zip(&delta).map(|(a, b)| a - eps * b).collect();
         let mut w2 = w0.clone();
-        let out2 = asgd_merge(&mut w2, &delta, &w_prop, eps, &mut scratch);
+        let out2 = asgd_merge(&mut w2, &delta, &w_prop, &present, eps, &mut scratch);
         assert_eq!(out2.n_good, 1, "case {case}: projection buffer rejected");
         let d_before = asgd::util::sq_dist(&w0, &w_prop);
         let d_after = asgd::util::sq_dist(&w2, &w_prop);
@@ -434,16 +436,20 @@ fn prop_dirty_bitmap_covers_every_write_since_last_send() {
             for _ in 0..1 + rng.index(state_len / 4 + 1) {
                 grad[rng.index(state_len)] = rng.next_normal() as f32 * 0.3;
             }
-            // external buffers: mostly empty, occasionally one near the
+            // external buffers: mostly absent, occasionally one near the
             // projected state so the gate sometimes accepts
             let mut exts = vec![0.0f32; n_buf * state_len];
+            let mut presence = ExtPresence::new(n_buf, n_blocks);
             if rng.index(3) == 0 {
                 let nb = rng.index(n_buf);
                 for i in 0..state_len {
                     exts[nb * state_len + i] = w[i] - eps * grad[i];
                 }
+                for c in 0..n_blocks {
+                    presence.set(nb, c);
+                }
             }
-            let out = update.apply(&mut w, &grad, &exts, &mut scratch);
+            let out = update.apply(&mut w, &grad, &exts, &presence, &mut scratch);
             dirty.mark_after_step(&phys, &grad, out.touched);
             // soundness: everything that moved since the last send is
             // in a dirty block
@@ -474,6 +480,122 @@ fn prop_dirty_bitmap_covers_every_write_since_last_send() {
                 }
             }
         }
+    }
+}
+
+/// Direct transcription of the pre-presence (zeros-convention) blocked
+/// merge, used as the oracle below: activity is an `any(!= 0)` scan,
+/// absent regions are zero-filled, and the per-coordinate arithmetic is
+/// exactly eq. 6/7 in ascending-buffer order.
+fn zeros_oracle_blocked(
+    w0: &[f32],
+    delta: &[f32],
+    exts: &[f32],
+    eps: f32,
+    layout: &ChunkLayout,
+) -> Vec<f32> {
+    let len = w0.len();
+    let n_buf = exts.len() / len;
+    let mut w = w0.to_vec();
+    let w_prop: Vec<f32> = w0.iter().zip(delta).map(|(a, b)| a - eps * b).collect();
+    for range in layout.iter_bounds() {
+        let mut mask = 0u64;
+        let mut n_sel = 0usize;
+        for nb in 0..n_buf {
+            let ext = &exts[nb * len + range.start..nb * len + range.end];
+            let active = ext.iter().any(|&e| e != 0.0);
+            if active && parzen_gate(&w[range.clone()], &w_prop[range.clone()], ext) {
+                mask |= 1 << nb;
+                n_sel += 1;
+            }
+        }
+        let inv = 1.0f32 / (n_sel as f32 + 1.0);
+        for i in range {
+            let mut sel = 0.0f32;
+            let mut bits = mask;
+            while bits != 0 {
+                let nb = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                sel += exts[nb * len + i];
+            }
+            let mean = (sel + w[i]) * inv;
+            let delta_bar = (w[i] - mean) + delta[i];
+            w[i] -= eps * delta_bar;
+        }
+    }
+    w
+}
+
+/// Property (PR 3 acceptance): the presence-masked merge is bit-identical
+/// to the zeros-convention oracle across random presence masks, block
+/// groupings and buffer counts — with the absent regions of the masked
+/// input deliberately poisoned (NaN) to prove they are never read.
+/// Present payloads are kept non-zero so the two activity encodings
+/// coincide (a sent 0.0 is exactly where the conventions diverge by
+/// design).  Runs on whatever SIMD arm the process dispatches to, so the
+/// two CI arms (default + ASGD_NO_SIMD=1) pin both implementations.
+#[test]
+fn prop_masked_merge_bit_identical_to_zeros_oracle() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::seed_from_u64(8000 + case);
+        let state_len = 4 + rng.index(120);
+        let n_blocks = 1 + rng.index(state_len.min(24));
+        let n_buf = 1 + rng.index(6);
+        let eps = 0.01 + rng.next_f32() * 0.3;
+        let layout = ChunkLayout::new(state_len, n_blocks);
+        let w0: Vec<f32> = (0..state_len).map(|_| rng.next_normal() as f32).collect();
+        let delta: Vec<f32> = (0..state_len).map(|_| rng.next_normal() as f32 * 0.2).collect();
+
+        let mut exts_masked = vec![f32::NAN; n_buf * state_len]; // poison
+        let mut exts_zeros = vec![0.0f32; n_buf * state_len];
+        let mut presence = ExtPresence::new(n_buf, n_blocks);
+        for nb in 0..n_buf {
+            for c in 0..n_blocks {
+                if rng.index(2) == 0 {
+                    continue; // absent: poison stays in the masked input
+                }
+                presence.set(nb, c);
+                for i in layout.bounds(c) {
+                    // half near the projected state (gate often accepts),
+                    // half plain noise; always non-zero
+                    let mut v = if rng.index(2) == 0 {
+                        w0[i] - eps * delta[i] + rng.next_normal() as f32 * 0.01
+                    } else {
+                        rng.next_normal() as f32 + 0.25
+                    };
+                    if v == 0.0 {
+                        v = 0.25;
+                    }
+                    exts_masked[nb * state_len + i] = v;
+                    exts_zeros[nb * state_len + i] = v;
+                }
+            }
+        }
+
+        let mut w_masked = w0.clone();
+        let mut scratch = vec![0.0f32; state_len];
+        let out = asgd_merge_blocked(
+            &mut w_masked,
+            &delta,
+            &exts_masked,
+            &presence,
+            eps,
+            layout.iter_bounds(),
+            &mut scratch,
+        );
+        let w_oracle = zeros_oracle_blocked(&w0, &delta, &exts_zeros, eps, &layout);
+        for i in 0..state_len {
+            assert_eq!(
+                w_masked[i].to_bits(),
+                w_oracle[i].to_bits(),
+                "case {case} i={i} (len={state_len} blocks={n_blocks} bufs={n_buf}): \
+                 {} vs {}",
+                w_masked[i],
+                w_oracle[i]
+            );
+        }
+        // the lambda count must agree with the mask, not the payload scan
+        assert_eq!(out.n_active, (0..n_buf).filter(|&nb| presence.buffer_active(nb)).count());
     }
 }
 

@@ -73,8 +73,17 @@ fn xla_asgd_iter_matches_native_stepper() {
     let mut w_xla = w0.clone();
     let mut w_nat = w0.clone();
     let mut scratch = StepScratch::default();
-    let ox = xla.step(&x, None, &mut w_xla, &exts, &mut scratch).unwrap();
-    let on = native.step(&x, None, &mut w_nat, &exts, &mut scratch).unwrap();
+    // two delivered buffers, two absent (the payload words under the
+    // absent ones stay zero here, but nobody may read them)
+    let mut presence = asgd::kernels::ExtPresence::new(n, 1);
+    presence.set(0, 0);
+    presence.set(1, 0);
+    let ox = xla
+        .step(&x, None, &mut w_xla, &exts, &presence, &mut scratch)
+        .unwrap();
+    let on = native
+        .step(&x, None, &mut w_nat, &exts, &presence, &mut scratch)
+        .unwrap();
 
     assert_eq!(ox.n_good, on.n_good, "gate decisions must agree");
     assert!(
