@@ -9,29 +9,37 @@
 use crate::config::AggMode;
 use crate::net::allreduce::TreeReduce;
 
-/// Aggregate per-worker states (row-major `[workers, state_len]` as a vec
-/// of vecs).  Returns the final model state.
-pub fn aggregate(mode: AggMode, states: &[Vec<f32>]) -> Vec<f32> {
+/// Aggregate per-worker states (one borrowed `[state_len]` slice per
+/// worker).  Returns the final model state.
+///
+/// Borrowed input is deliberate: the coordinator holds the only owned
+/// copies inside its `WorkerResult`s, and cloning every worker state
+/// just to aggregate doubled peak state memory per run.  `ReturnFirst`
+/// callers that own the states should move worker 0's vector out
+/// directly instead of paying this copy (the coordinator does).
+pub fn aggregate(mode: AggMode, states: &[&[f32]]) -> Vec<f32> {
     assert!(!states.is_empty());
     match mode {
-        AggMode::ReturnFirst => states[0].clone(),
+        AggMode::ReturnFirst => states[0].to_vec(),
         AggMode::TreeMean => tree_mean(states),
     }
 }
 
 /// Tree-reduce mean over the states, executed on real threads through the
 /// same [`TreeReduce`] fabric the BATCH baseline uses (so figs. 16/17
-/// measure genuine reduction cost, not a shortcut).
-pub fn tree_mean(states: &[Vec<f32>]) -> Vec<f32> {
+/// measure genuine reduction cost, not a shortcut).  Each reducer thread
+/// owns its working copy (the fabric mutates in place), so the per-state
+/// copy here is the reduction's own working set, not overhead.
+pub fn tree_mean(states: &[&[f32]]) -> Vec<f32> {
     let n = states.len();
     if n == 1 {
-        return states[0].clone();
+        return states[0].to_vec();
     }
     let tree = TreeReduce::new(n);
     let mut handles = Vec::with_capacity(n);
     for (rank, s) in states.iter().enumerate() {
         let tree = tree.clone();
-        let local = s.clone();
+        let local = s.to_vec();
         handles.push(std::thread::spawn(move || tree.allreduce_mean(rank, local)));
     }
     let mut result = Vec::new();
@@ -47,24 +55,20 @@ mod tests {
 
     #[test]
     fn return_first_returns_first() {
-        let states = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        let states: [&[f32]; 2] = [&[1.0, 2.0], &[3.0, 4.0]];
         assert_eq!(aggregate(AggMode::ReturnFirst, &states), vec![1.0, 2.0]);
     }
 
     #[test]
     fn tree_mean_is_elementwise_mean() {
-        let states = vec![
-            vec![1.0, 10.0],
-            vec![2.0, 20.0],
-            vec![3.0, 30.0],
-            vec![6.0, 0.0],
-        ];
+        let states: [&[f32]; 4] = [&[1.0, 10.0], &[2.0, 20.0], &[3.0, 30.0], &[6.0, 0.0]];
         let m = aggregate(AggMode::TreeMean, &states);
         assert_eq!(m, vec![3.0, 15.0]);
     }
 
     #[test]
     fn single_worker_short_circuits() {
-        assert_eq!(tree_mean(&[vec![5.0]]), vec![5.0]);
+        let states: [&[f32]; 1] = [&[5.0]];
+        assert_eq!(tree_mean(&states), vec![5.0]);
     }
 }

@@ -98,9 +98,17 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
     results.sort_by_key(|r| r.rank);
     let wallclock = t0.elapsed().as_secs_f64();
 
-    // §4.3 final aggregation.
-    let states: Vec<Vec<f32>> = results.iter().map(|r| r.state.clone()).collect();
-    let final_state = aggregate::aggregate(cfg.aggregation, &states);
+    // §4.3 final aggregation.  The workers' states are aggregated over
+    // borrowed slices (the old path cloned every state first, doubling
+    // peak state memory per run), and the ReturnFirst result — alg. 5
+    // line 10's `w_I^1` — is moved out of worker 0's result, not copied.
+    let final_state = match cfg.aggregation {
+        AggMode::ReturnFirst => std::mem::take(&mut results[0].state),
+        mode => {
+            let states: Vec<&[f32]> = results.iter().map(|r| r.state.as_slice()).collect();
+            aggregate::aggregate(mode, &states)
+        }
+    };
 
     let trace = results
         .iter()

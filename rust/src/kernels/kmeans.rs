@@ -1,14 +1,23 @@
 //! Native K-Means mini-batch kernels (eq. 8-10).
 //!
 //! Hot path of the `Native` backend: assignment + sufficient statistics
-//! for a mini-batch.  The inner loop is written dot-product style
-//! (`||w||^2 - 2 x.w`, matching the MXU formulation of the Pallas kernel)
-//! with the dot and the row update dispatched through
-//! [`crate::kernels::simd`] (AVX2+FMA when available, scalar otherwise),
-//! and all buffers live in a reusable [`KmeansScratch`] to keep the
-//! training loop allocation-free.
+//! for a mini-batch.  Since PR 4 the inner loop is tile-wise: each
+//! [`TILE_B`]-sample slab of the batch runs one cache/register-blocked
+//! [`simd::gemm_nt`] call (`scores[tile, k] = X_tile · Wᵀ`, centers
+//! streamed once per tile instead of once per sample), one SIMD
+//! `||x||²` norm pass, and a fused argmin→stats sweep over the scores
+//! buffer — still in the paper's MXU-style `||w||^2 - 2 x.w`
+//! formulation, so ties and tie-breaking are unchanged.  All buffers
+//! (center norms, tile norms, the score tile, the gemm pack panel) live
+//! in a reusable [`KmeansScratch`] to keep the training loop
+//! allocation-free.
 
 use crate::kernels::simd;
+
+/// Samples per score tile: 64 rows keep the `[TILE_B, k]` score buffer
+/// and the packed center panel L1/L2-resident at the paper's shapes
+/// while amortizing the per-tile pack + norm passes.
+pub const TILE_B: usize = 64;
 
 /// Mini-batch sufficient statistics.
 #[derive(Clone, Debug, Default)]
@@ -26,12 +35,20 @@ pub struct Stats {
 pub struct KmeansScratch {
     /// `||w_k||^2` per center.
     wn: Vec<f32>,
+    /// `||x_i||^2` for the current sample tile.
+    xn: Vec<f32>,
+    /// Score tile `[TILE_B, k]` (gemm output).
+    scores: Vec<f32>,
+    /// Packed center panel for [`simd::gemm_nt`].
+    pack: Vec<f32>,
     pub stats: Stats,
 }
 
 impl KmeansScratch {
     pub fn ensure(&mut self, k: usize, d: usize) {
         self.wn.resize(k, 0.0);
+        self.xn.resize(TILE_B, 0.0);
+        self.scores.resize(TILE_B * k, 0.0);
         self.stats.sums.resize(k * d, 0.0);
         self.stats.counts.resize(k, 0.0);
     }
@@ -44,39 +61,51 @@ pub fn kmeans_stats(x: &[f32], w: &[f32], k: usize, d: usize, scratch: &mut Kmea
     assert_eq!(x.len() % d, 0, "x not a multiple of d");
     let b = x.len() / d;
     scratch.ensure(k, d);
-    scratch.stats.sums.fill(0.0);
-    scratch.stats.counts.fill(0.0);
-    scratch.stats.loss = 0.0;
+    let KmeansScratch { wn, xn, scores, pack, stats } = scratch;
+    stats.sums.fill(0.0);
+    stats.counts.fill(0.0);
+    stats.loss = 0.0;
 
     // precompute ||w_k||^2
     for c in 0..k {
         let row = &w[c * d..(c + 1) * d];
-        scratch.wn[c] = row.iter().map(|v| v * v).sum();
+        wn[c] = simd::dot(row, row);
     }
+    // pack the center panel once for the whole batch (every tile streams
+    // the same centers)
+    simd::gemm_pack_nt(w, k, d, pack);
 
     let mut loss_acc = 0.0f64;
-    for i in 0..b {
-        let xi = &x[i * d..(i + 1) * d];
-        // argmin_k ||w_k||^2 - 2 x.w_k  (strict < keeps the lowest index)
-        let mut best = 0usize;
-        let mut best_score = f32::INFINITY;
-        for c in 0..k {
-            let wr = &w[c * d..(c + 1) * d];
-            let score = scratch.wn[c] - 2.0 * simd::dot(xi, wr);
-            if score < best_score {
-                best_score = score;
-                best = c;
+    let mut i0 = 0usize;
+    while i0 < b {
+        let t = TILE_B.min(b - i0);
+        let xt = &x[i0 * d..(i0 + t) * d];
+        // one blocked gemm per tile: scores[i, c] = x_i . w_c
+        simd::gemm_nt_packed(xt, w, t, k, d, &mut scores[..t * k], pack);
+        // one norm pass per tile (hoisted out of the per-sample loop)
+        for (i, xi) in xt.chunks_exact(d).enumerate() {
+            xn[i] = simd::dot(xi, xi);
+        }
+        for i in 0..t {
+            let row = &scores[i * k..(i + 1) * k];
+            // argmin_k ||w_k||^2 - 2 x.w_k  (strict < keeps the lowest index)
+            let mut best = 0usize;
+            let mut best_score = f32::INFINITY;
+            for c in 0..k {
+                let score = wn[c] - 2.0 * row[c];
+                if score < best_score {
+                    best_score = score;
+                    best = c;
+                }
             }
+            let xi = &xt[i * d..(i + 1) * d];
+            simd::axpy(&mut stats.sums[best * d..(best + 1) * d], 1.0, xi);
+            stats.counts[best] += 1.0;
+            loss_acc += 0.5 * f64::max((xn[i] + best_score) as f64, 0.0);
         }
-        let sums = &mut scratch.stats.sums[best * d..(best + 1) * d];
-        for j in 0..d {
-            sums[j] += xi[j];
-        }
-        scratch.stats.counts[best] += 1.0;
-        let xn: f32 = xi.iter().map(|v| v * v).sum();
-        loss_acc += 0.5 * f64::max((xn + best_score) as f64, 0.0);
+        i0 += t;
     }
-    scratch.stats.loss = loss_acc / b as f64;
+    stats.loss = loss_acc / b as f64;
 }
 
 /// One mini-batch SGD step in place: `w -= eps * (counts.*w - sums)/b`.
@@ -111,11 +140,25 @@ pub fn apply_grad(w: &mut [f32], stats: &Stats, k: usize, d: usize, b: f32, eps:
     }
 }
 
-/// Mean quantization error (eq. 8 / m) of `w` over an evaluation chunk.
+/// Mean quantization error (eq. 8 / m) of `w` over an evaluation chunk,
+/// into caller-owned scratch — worker 0 calls this once per trace point,
+/// so the buffers must not be reallocated per call.
+pub fn quant_error_with(
+    x: &[f32],
+    w: &[f32],
+    k: usize,
+    d: usize,
+    scratch: &mut KmeansScratch,
+) -> f64 {
+    kmeans_stats(x, w, k, d, scratch);
+    scratch.stats.loss
+}
+
+/// Thin allocating wrapper over [`quant_error_with`] for one-off callers
+/// (tests, shape-mismatch fallbacks).
 pub fn quant_error(x: &[f32], w: &[f32], k: usize, d: usize) -> f64 {
     let mut scratch = KmeansScratch::default();
-    kmeans_stats(x, w, k, d, &mut scratch);
-    scratch.stats.loss
+    quant_error_with(x, w, k, d, &mut scratch)
 }
 
 #[cfg(test)]
@@ -127,24 +170,31 @@ mod tests {
         (0..n).map(|_| rng.next_normal() as f32).collect()
     }
 
-    /// brute-force oracle
-    fn stats_bruteforce(x: &[f32], w: &[f32], k: usize, d: usize) -> Stats {
+    /// brute-force oracle; also returns the smallest best-vs-second-best
+    /// distance gap over the batch (exact argmin agreement with the f32
+    /// tiled scores is only well-posed when that margin clears f32 noise)
+    fn stats_bruteforce(x: &[f32], w: &[f32], k: usize, d: usize) -> (Stats, f64) {
         let b = x.len() / d;
         let mut s = Stats {
             sums: vec![0.0; k * d],
             counts: vec![0.0; k],
             loss: 0.0,
         };
+        let mut min_margin = f64::INFINITY;
         for i in 0..b {
             let xi = &x[i * d..(i + 1) * d];
-            let (mut best, mut bd) = (0usize, f64::INFINITY);
+            let (mut best, mut bd, mut second) = (0usize, f64::INFINITY, f64::INFINITY);
             for c in 0..k {
                 let dist = crate::util::sq_dist(xi, &w[c * d..(c + 1) * d]);
                 if dist < bd {
+                    second = bd;
                     bd = dist;
                     best = c;
+                } else if dist < second {
+                    second = dist;
                 }
             }
+            min_margin = min_margin.min(second - bd);
             for j in 0..d {
                 s.sums[best * d + j] += xi[j];
             }
@@ -152,28 +202,37 @@ mod tests {
             s.loss += 0.5 * bd;
         }
         s.loss /= b as f64;
-        s
+        (s, min_margin)
     }
 
     #[test]
     fn stats_matches_bruteforce() {
         let mut rng = Xoshiro256pp::seed_from_u64(1);
+        // shapes straddle the sample tile: b < TILE_B, == TILE_B, and
+        // multi-tile with a partial tail (500 = 7*64 + 52)
         for &(b, k, d) in &[(64, 5, 8), (100, 13, 3), (1, 1, 1), (500, 10, 10)] {
             let x = rand_mat(&mut rng, b * d);
             let w = rand_mat(&mut rng, k * d);
             let mut scratch = KmeansScratch::default();
             kmeans_stats(&x, &w, k, d, &mut scratch);
-            let oracle = stats_bruteforce(&x, &w, k, d);
-            assert_eq!(scratch.stats.counts, oracle.counts, "counts b={b} k={k} d={d}");
-            for (a, o) in scratch.stats.sums.iter().zip(&oracle.sums) {
-                assert!((a - o).abs() < 1e-3, "sums {a} vs {o}");
-            }
+            let (oracle, min_margin) = stats_bruteforce(&x, &w, k, d);
+            // coverage and loss hold unconditionally; exact counts/sums
+            // only when every winner clears f32 rounding noise (same
+            // margin gate as the prop_invariants tile-remainder sweep)
+            let total: f32 = scratch.stats.counts.iter().sum();
+            assert_eq!(total as usize, b, "coverage b={b} k={k} d={d}");
             assert!(
                 (scratch.stats.loss - oracle.loss).abs() < 1e-3,
                 "loss {} vs {}",
                 scratch.stats.loss,
                 oracle.loss
             );
+            if min_margin > 1e-4 {
+                assert_eq!(scratch.stats.counts, oracle.counts, "counts b={b} k={k} d={d}");
+                for (a, o) in scratch.stats.sums.iter().zip(&oracle.sums) {
+                    assert!((a - o).abs() < 1e-3, "sums {a} vs {o}");
+                }
+            }
         }
     }
 
@@ -225,5 +284,22 @@ mod tests {
         let mut scratch = KmeansScratch::default();
         kmeans_stats(&x, &w, 2, 2, &mut scratch);
         assert_eq!(scratch.stats.counts, vec![1.0, 0.0]);
+    }
+
+    /// The caller-owned-scratch evaluator and the allocating wrapper
+    /// agree, and a reused scratch keeps its buffers across calls of the
+    /// same shape (the per-trace-point contract).
+    #[test]
+    fn quant_error_with_matches_wrapper_across_reuse() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let (k, d) = (6, 7);
+        let mut scratch = KmeansScratch::default();
+        for b in [10usize, 130, 65] {
+            let x = rand_mat(&mut rng, b * d);
+            let w = rand_mat(&mut rng, k * d);
+            let with = quant_error_with(&x, &w, k, d, &mut scratch);
+            let fresh = quant_error(&x, &w, k, d);
+            assert_eq!(with.to_bits(), fresh.to_bits(), "b={b}");
+        }
     }
 }

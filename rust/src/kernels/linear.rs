@@ -1,24 +1,60 @@
 //! Native linear-model mini-batch gradients (mirrors
-//! `python/compile/kernels/linear.py` / `ref.py`).  The per-row dot and
-//! the rank-1 gradient accumulation run through the dispatched
-//! [`crate::kernels::simd`] layer.
+//! `python/compile/kernels/linear.py` / `ref.py`).  Since PR 4 the
+//! per-sample prediction dots are batched through [`simd::gemm_nt`]
+//! (`scores[tile] = X_tile · w`, a k=1 tile), one [`TILE_B`]-sample
+//! tile at a time so the residual/axpy pass re-reads the tile's rows
+//! while they are still cache-resident (a whole-batch gemm would
+//! stream a large `x` from memory twice); the rank-1 gradient
+//! accumulation stays on the dispatched [`simd::axpy`].  The batched
+//! variants take a caller-owned [`LinearScratch`] so model hot paths
+//! stay allocation-free; the original signatures remain as thin
+//! allocating wrappers.
 
 use crate::kernels::simd;
 
+/// Samples per prediction tile (k=1 packs nothing, so the only tile
+/// cost is the scores buffer — sized to keep the tile's rows in cache
+/// for the immediately following accumulation pass).
+pub const TILE_B: usize = 128;
+
+/// Reusable buffers for the batched gradient kernels.
+#[derive(Clone, Debug, Default)]
+pub struct LinearScratch {
+    /// Per-sample predictions `x_i . w` for the current tile.
+    scores: Vec<f32>,
+    /// Pack panel for [`simd::gemm_nt`] (unused at k = 1, kept so the
+    /// scratch works for any future multi-output head).
+    pack: Vec<f32>,
+}
+
 /// Least-squares gradient: `grad = x^T (x w - y)/b`, `loss = ||r||^2/(2b)`.
 /// `x` is `[b, d]` flat; writes into `grad` (len d).  Returns the loss.
-pub fn linreg_grad(x: &[f32], y: &[f32], w: &[f32], grad: &mut [f32]) -> f64 {
+pub fn linreg_grad_with(
+    x: &[f32],
+    y: &[f32],
+    w: &[f32],
+    grad: &mut [f32],
+    scratch: &mut LinearScratch,
+) -> f64 {
     let d = w.len();
     let b = y.len();
     assert_eq!(x.len(), b * d);
     assert_eq!(grad.len(), d);
     grad.fill(0.0);
+    scratch.scores.resize(TILE_B.min(b), 0.0);
     let mut loss = 0.0f64;
-    for i in 0..b {
-        let xi = &x[i * d..(i + 1) * d];
-        let r = simd::dot(xi, w) - y[i];
-        simd::axpy(grad, r, xi);
-        loss += 0.5 * (r as f64) * (r as f64);
+    let mut i0 = 0usize;
+    while i0 < b {
+        let t = TILE_B.min(b - i0);
+        let xt = &x[i0 * d..(i0 + t) * d];
+        simd::gemm_nt(xt, w, t, 1, d, &mut scratch.scores[..t], &mut scratch.pack);
+        for i in 0..t {
+            let xi = &xt[i * d..(i + 1) * d];
+            let r = scratch.scores[i] - y[i0 + i];
+            simd::axpy(grad, r, xi);
+            loss += 0.5 * (r as f64) * (r as f64);
+        }
+        i0 += t;
     }
     let inv = 1.0 / b as f32;
     for g in grad.iter_mut() {
@@ -29,27 +65,51 @@ pub fn linreg_grad(x: &[f32], y: &[f32], w: &[f32], grad: &mut [f32]) -> f64 {
 
 /// Logistic-regression gradient: `grad = x^T (sigmoid(xw) - y)/b`,
 /// `loss` = mean stable BCE.  Returns the loss.
-pub fn logreg_grad(x: &[f32], y: &[f32], w: &[f32], grad: &mut [f32]) -> f64 {
+pub fn logreg_grad_with(
+    x: &[f32],
+    y: &[f32],
+    w: &[f32],
+    grad: &mut [f32],
+    scratch: &mut LinearScratch,
+) -> f64 {
     let d = w.len();
     let b = y.len();
     assert_eq!(x.len(), b * d);
     assert_eq!(grad.len(), d);
     grad.fill(0.0);
+    scratch.scores.resize(TILE_B.min(b), 0.0);
     let mut loss = 0.0f64;
-    for i in 0..b {
-        let xi = &x[i * d..(i + 1) * d];
-        let z = simd::dot(xi, w);
-        let p = 1.0 / (1.0 + (-z).exp());
-        let r = p - y[i];
-        simd::axpy(grad, r, xi);
-        // max(z,0) - z*y + log1p(exp(-|z|))
-        loss += (z.max(0.0) - z * y[i] + (-z.abs()).exp().ln_1p()) as f64;
+    let mut i0 = 0usize;
+    while i0 < b {
+        let t = TILE_B.min(b - i0);
+        let xt = &x[i0 * d..(i0 + t) * d];
+        simd::gemm_nt(xt, w, t, 1, d, &mut scratch.scores[..t], &mut scratch.pack);
+        for i in 0..t {
+            let xi = &xt[i * d..(i + 1) * d];
+            let z = scratch.scores[i];
+            let p = 1.0 / (1.0 + (-z).exp());
+            let r = p - y[i0 + i];
+            simd::axpy(grad, r, xi);
+            // max(z,0) - z*y + log1p(exp(-|z|))
+            loss += (z.max(0.0) - z * y[i0 + i] + (-z.abs()).exp().ln_1p()) as f64;
+        }
+        i0 += t;
     }
     let inv = 1.0 / b as f32;
     for g in grad.iter_mut() {
         *g *= inv;
     }
     loss / b as f64
+}
+
+/// Allocating wrapper over [`linreg_grad_with`] (tests / one-off callers).
+pub fn linreg_grad(x: &[f32], y: &[f32], w: &[f32], grad: &mut [f32]) -> f64 {
+    linreg_grad_with(x, y, w, grad, &mut LinearScratch::default())
+}
+
+/// Allocating wrapper over [`logreg_grad_with`] (tests / one-off callers).
+pub fn logreg_grad(x: &[f32], y: &[f32], w: &[f32], grad: &mut [f32]) -> f64 {
+    logreg_grad_with(x, y, w, grad, &mut LinearScratch::default())
 }
 
 /// In-place SGD steps; return the pre-step loss.
@@ -146,5 +206,23 @@ mod tests {
             last = loss;
         }
         assert!(last < 0.01, "did not converge: {last}");
+    }
+
+    /// Scratch reuse across shapes matches the allocating wrapper.
+    #[test]
+    fn scratch_reuse_matches_wrapper() {
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let mut scratch = LinearScratch::default();
+        for &(b, d) in &[(8usize, 3usize), (33, 6), (5, 6)] {
+            let x: Vec<f32> = (0..b * d).map(|_| rng.next_normal() as f32).collect();
+            let y: Vec<f32> = (0..b).map(|_| rng.next_normal() as f32).collect();
+            let w: Vec<f32> = (0..d).map(|_| rng.next_normal() as f32).collect();
+            let mut g1 = vec![0.0; d];
+            let mut g2 = vec![0.0; d];
+            let l1 = linreg_grad_with(&x, &y, &w, &mut g1, &mut scratch);
+            let l2 = linreg_grad(&x, &y, &w, &mut g2);
+            assert_eq!(l1.to_bits(), l2.to_bits(), "b={b} d={d}");
+            assert_eq!(g1, g2);
+        }
     }
 }

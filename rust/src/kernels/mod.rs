@@ -31,8 +31,45 @@
 //!   uses the zeros convention internally; its stepper stages absent
 //!   buffers as zeros and keeps that documented ambiguity.)
 //!
-//! The inner loops run through [`simd`] — a runtime-dispatched AVX2+FMA
-//! layer with a scalar reference arm (`ASGD_NO_SIMD=1` forces scalar).
+//! The inner loops run through [`simd`] — a runtime-dispatched
+//! AVX2+FMA / NEON layer with a scalar reference arm (`ASGD_NO_SIMD=1`
+//! forces scalar).
+//!
+//! ## The tile-kernel contract (PR 4)
+//!
+//! The mini-batch compute layer is two micro-GEMM entry points in
+//! [`simd`], consumed by every per-sample hot loop:
+//!
+//! * **Shapes.**  [`simd::gemm_nt`] computes `scores[b, k] = X[b, d] ·
+//!   W[k, d]ᵀ` (both row-major — the K-Means assignment dots and the
+//!   linear models' `X · w` at `k = 1`); [`simd::gemm_nn`] computes
+//!   `scores[b, k] = X[b, d] · W[d, k]` (depth-major second operand —
+//!   the MLP's `[d, h]` / `[h, c]` weight layouts, no transposition).
+//!   Callers own the `scores` buffer and a `pack` panel `Vec` (both live
+//!   in [`KmeansScratch`] / [`linear::LinearScratch`] / the MLP's
+//!   per-thread scratch, so steady-state hot loops allocate nothing).
+//! * **Remainder handling.**  Any `b`, `k >= 1`, `d >= 1` is legal.
+//!   The vector arms run a 4-sample register tile with a 1-sample tail
+//!   loop, and lane-block the centers at the ISA width (8 for AVX2, 4
+//!   for NEON); `k` lane remainders are stored as partial vectors and
+//!   the pack panel is zero-padded, so tail lanes compute exact zeros
+//!   that are never stored.  K-Means additionally tiles samples at
+//!   [`kmeans::TILE_B`] so the score tile stays cache-resident; tile
+//!   remainders are swept by the `prop_invariants` suite against the
+//!   brute-force oracle.
+//! * **Reproducibility policy.**  The gemm kernels are FMA-class, like
+//!   [`simd::dot`]: arms may differ in the last bits and consumers use
+//!   tolerances.  The *scalar* arm is the pinned reference —
+//!   `gemm_nt` is the 4-accumulator `scalar::dot` per `(sample,
+//!   center)` pair (bit-identical to the per-sample dot transcription
+//!   it replaced, asserted in the simd test suite) and `gemm_nn`
+//!   accumulates in ascending-`j` order (the old MLP loop order).
+//!   That pins the kernels only: the consumers also reassociated
+//!   surrounding reductions (hoisted norm passes, batched bias adds),
+//!   so their outputs are pinned by oracle tests with tolerances, not
+//!   by bit-exactness against pre-tile versions.  The bit-parity
+//!   kernels ([`simd::sgd_step`], [`simd::merge_update`]) remain
+//!   bit-identical across *all* arms, including NEON.
 
 pub mod kmeans;
 pub mod linear;
@@ -40,7 +77,8 @@ pub mod merge;
 pub mod presence;
 pub mod simd;
 
-pub use kmeans::{kmeans_stats, kmeans_step, quant_error, KmeansScratch, Stats};
+pub use kmeans::{kmeans_stats, kmeans_step, quant_error, quant_error_with, KmeansScratch, Stats};
+pub use linear::LinearScratch;
 pub use merge::{asgd_merge, asgd_merge_percenter, parzen_gate, MergeOut};
 pub use presence::ExtPresence;
 

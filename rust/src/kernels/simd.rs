@@ -1,32 +1,50 @@
-//! Runtime-dispatched SIMD implementations of the five numeric inner
-//! loops (arXiv:1802.08800's hardware-efficiency lens applied to the
-//! ASGD core):
+//! Runtime-dispatched SIMD implementations of the numeric inner loops
+//! (arXiv:1802.08800's hardware-efficiency lens applied to the ASGD
+//! core):
 //!
-//! 1. [`dot`] — the K-Means assignment dot product,
+//! 1. [`dot`] — the per-row dot product,
 //! 2. [`gate_dists`] — the Parzen gate's three-distance pass (eq. 4),
 //! 3. [`merge_update`] — the merge's select-sum / mean / axpy pass
 //!    (eq. 6/7),
 //! 4. [`scale_combine`] — the K-Means `apply_grad` row update,
-//! 5. [`axpy`] + [`dot`] — the linear-model gradient accumulation.
+//! 5. [`axpy`] + [`dot`] — the linear-model gradient accumulation,
+//! 6. [`gemm_nt`] / [`gemm_nn`] — the tiled micro-GEMM mini-batch layer
+//!    (PR 4): cache/register-blocked `sample x center` score tiles that
+//!    every mini-batch consumer (K-Means stats, linear-model dots, the
+//!    MLP forward/backprop) now runs through instead of one
+//!    sample-x-center dot at a time.
 //!
 //! Dispatch is decided once per process: AVX2+FMA via
-//! `core::arch::x86_64` when `is_x86_feature_detected!` says so, the
-//! scalar reference otherwise.  Setting `ASGD_NO_SIMD=1` (any value but
-//! `"0"`) forces the scalar arm — CI runs the tier-1 suite once per arm.
+//! `core::arch::x86_64` when `is_x86_feature_detected!` says so, NEON
+//! via `core::arch::aarch64` on aarch64, the scalar reference otherwise.
+//! Setting `ASGD_NO_SIMD=1` (any value but `"0"`) forces the scalar arm
+//! — CI runs the tier-1 suite once per arm.
 //!
 //! Numerics policy: [`merge_update`] and [`sgd_step`] perform, per lane,
 //! the *exact* operation sequence of the scalar reference (mul + add/sub,
 //! no FMA, no per-coordinate reassociation), so the masked merge is
 //! bit-identical across dispatch arms and against the zeros-convention
-//! oracle in the property tests.  [`dot`], [`axpy`], [`scale_combine`]
-//! and the accumulator order of [`gate_dists`] may use FMA / wider
-//! accumulators — their consumers tolerate last-bit differences.
+//! oracle in the property tests.  [`dot`], [`axpy`], [`scale_combine`],
+//! the accumulator order of [`gate_dists`], and the [`gemm_nt`] /
+//! [`gemm_nn`] tile kernels may use FMA / wider accumulators — their
+//! consumers tolerate last-bit differences.  The scalar arm of
+//! [`gemm_nt`] is the 4-accumulator [`scalar::dot`] applied per
+//! `(sample, center)` pair — i.e. exactly the per-sample dot
+//! transcription it replaced — and the scalar arm of [`gemm_nn`]
+//! accumulates in plain ascending-`j` order (the old MLP loop order).
+//! Note this pins the *gemm kernels*, not their consumers: the tile
+//! pipelines also reassociated surrounding reductions (e.g. the hoisted
+//! norm passes now use [`scalar::dot`] instead of sequential sums), so
+//! consumer outputs are pinned by oracle tests with tolerances, not by
+//! bit-exactness against pre-tile versions.
 
 /// Which implementation arm this process dispatches to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Isa {
     /// AVX2 + FMA (x86_64, runtime-detected, not disabled by env).
     Avx2Fma,
+    /// NEON (aarch64, runtime-detected, not disabled by env).
+    Neon,
     /// Portable reference loops.
     Scalar,
 }
@@ -45,6 +63,12 @@ pub fn isa() -> Isa {
                 return Isa::Avx2Fma;
             }
         }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return Isa::Neon;
+            }
+        }
         Isa::Scalar
     })
 }
@@ -57,6 +81,11 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     if isa() == Isa::Avx2Fma {
         // SAFETY: isa() returned Avx2Fma, so avx2+fma are available.
         return unsafe { avx2::dot(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa() == Isa::Neon {
+        // SAFETY: isa() returned Neon, so neon is available.
+        return unsafe { neon::dot(a, b) };
     }
     scalar::dot(a, b)
 }
@@ -71,6 +100,12 @@ pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
         unsafe { avx2::axpy(y, a, x) };
         return;
     }
+    #[cfg(target_arch = "aarch64")]
+    if isa() == Isa::Neon {
+        // SAFETY: see `dot`.
+        unsafe { neon::axpy(y, a, x) };
+        return;
+    }
     scalar::axpy(y, a, x)
 }
 
@@ -83,6 +118,12 @@ pub fn scale_combine(row: &mut [f32], keep: f32, x: &[f32], xs: f32) {
     if isa() == Isa::Avx2Fma {
         // SAFETY: see `dot`.
         unsafe { avx2::scale_combine(row, keep, x, xs) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa() == Isa::Neon {
+        // SAFETY: see `dot`.
+        unsafe { neon::scale_combine(row, keep, x, xs) };
         return;
     }
     scalar::scale_combine(row, keep, x, xs)
@@ -100,6 +141,12 @@ pub fn sgd_step(w: &mut [f32], delta: &[f32], eps: f32) {
         unsafe { avx2::sgd_step(w, delta, eps) };
         return;
     }
+    #[cfg(target_arch = "aarch64")]
+    if isa() == Isa::Neon {
+        // SAFETY: see `dot`.
+        unsafe { neon::sgd_step(w, delta, eps) };
+        return;
+    }
     scalar::sgd_step(w, delta, eps)
 }
 
@@ -115,6 +162,11 @@ pub fn gate_dists(w: &[f32], w_prop: &[f32], ext: &[f32]) -> (f64, f64, f64) {
     if isa() == Isa::Avx2Fma {
         // SAFETY: see `dot`.
         return unsafe { avx2::gate_dists(w, w_prop, ext) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa() == Isa::Neon {
+        // SAFETY: see `dot`.
+        return unsafe { neon::gate_dists(w, w_prop, ext) };
     }
     scalar::gate_dists(w, w_prop, ext)
 }
@@ -154,7 +206,181 @@ pub fn merge_update(
         unsafe { avx2::merge_update(w, delta, exts, stride, base, mask, inv, eps) };
         return;
     }
+    #[cfg(target_arch = "aarch64")]
+    if isa() == Isa::Neon {
+        // SAFETY: see `dot`.
+        unsafe { neon::merge_update(w, delta, exts, stride, base, mask, inv, eps) };
+        return;
+    }
     scalar::merge_update(w, delta, exts, stride, base, mask, inv, eps)
+}
+
+// ---------------------------------------------------------------------------
+// Tiled micro-GEMM (PR 4)
+// ---------------------------------------------------------------------------
+
+/// Below this many output columns the panel kernel wastes most of its
+/// lanes and the per-row [`dot`] transcription is faster (`gemm_nt`
+/// only; `gemm_nn` has no dot-shaped alternative because its second
+/// operand is depth-major).
+const GEMM_DOT_K: usize = 8;
+
+/// `scores[b, k] = x[b, d] · w[k, d]ᵀ` — both operands row-major, so
+/// `scores[i*k + c] = dot(x[i, :], w[c, :])`.  This is the mini-batch
+/// assignment/gradient dot layer (eq. 8-10, fig. 4 I-II): the vector
+/// arms pack `w` once per call into a zero-padded `[d, kp]` panel
+/// (`kp` = lane-rounded `k`), hold a 4-sample register tile, and stream
+/// each panel row exactly once per tile — instead of reloading every
+/// center row `b` times as the per-sample transcription did.
+///
+/// Any `b`, `k >= 1`, `d >= 1` is legal; sample-tile remainders run a
+/// 1-row micro kernel and `k` lane remainders store partial vectors
+/// (the panel's zero padding makes tail lanes compute exact zeros that
+/// are never stored).  `pack` is caller-owned panel scratch: it is
+/// cleared and resized on every call, so a reused `Vec` allocates only
+/// until it reaches the largest `kp * d` it has seen.
+pub fn gemm_nt(
+    x: &[f32],
+    w: &[f32],
+    b: usize,
+    k: usize,
+    d: usize,
+    scores: &mut [f32],
+    pack: &mut Vec<f32>,
+) {
+    gemm_pack_nt(w, k, d, pack);
+    gemm_nt_packed(x, w, b, k, d, scores, pack);
+}
+
+/// Pack `w[k, d]` once for repeated [`gemm_nt_packed`] calls against the
+/// same centers — the K-Means tile loop reuses one panel across every
+/// sample tile of the batch instead of re-packing per tile.  On the
+/// scalar arm, and on the vector arms' small-k dot fallback, no panel
+/// is needed and this is a no-op.
+pub fn gemm_pack_nt(w: &[f32], k: usize, d: usize, pack: &mut Vec<f32>) {
+    assert_eq!(w.len(), k * d, "gemm_pack_nt: w is not [k, d]");
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2Fma && k >= GEMM_DOT_K {
+        pack_panel_nt(w, k, d, (k + 7) & !7, pack);
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa() == Isa::Neon && k >= GEMM_DOT_K {
+        pack_panel_nt(w, k, d, (k + 3) & !3, pack);
+    }
+}
+
+/// [`gemm_nt`] against a panel previously produced by [`gemm_pack_nt`]
+/// from this same `(w, k, d)`.  `w` is still required — the scalar arm
+/// and the small-k fallback read the original rows and never touch the
+/// panel.
+pub fn gemm_nt_packed(
+    x: &[f32],
+    w: &[f32],
+    b: usize,
+    k: usize,
+    d: usize,
+    scores: &mut [f32],
+    pack: &[f32],
+) {
+    assert_eq!(x.len(), b * d, "gemm_nt: x is not [b, d]");
+    assert_eq!(w.len(), k * d, "gemm_nt: w is not [k, d]");
+    assert_eq!(scores.len(), b * k, "gemm_nt: scores is not [b, k]");
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2Fma {
+        if k < GEMM_DOT_K {
+            for i in 0..b {
+                let xi = &x[i * d..(i + 1) * d];
+                for c in 0..k {
+                    // SAFETY: see `dot`.
+                    scores[i * k + c] = unsafe { avx2::dot(xi, &w[c * d..(c + 1) * d]) };
+                }
+            }
+        } else {
+            let kp = (k + 7) & !7;
+            assert!(pack.len() >= kp * d, "gemm_nt_packed: panel missing for this shape");
+            // SAFETY: see `dot`; the panel matches (w, k, d) by contract.
+            unsafe { avx2::gemm_packed(x, pack, b, k, kp, d, scores) };
+        }
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa() == Isa::Neon {
+        if k < GEMM_DOT_K {
+            for i in 0..b {
+                let xi = &x[i * d..(i + 1) * d];
+                for c in 0..k {
+                    // SAFETY: see `dot`.
+                    scores[i * k + c] = unsafe { neon::dot(xi, &w[c * d..(c + 1) * d]) };
+                }
+            }
+        } else {
+            let kp = (k + 3) & !3;
+            assert!(pack.len() >= kp * d, "gemm_nt_packed: panel missing for this shape");
+            // SAFETY: see `dot`; the panel matches (w, k, d) by contract.
+            unsafe { neon::gemm_packed(x, pack, b, k, kp, d, scores) };
+        }
+        return;
+    }
+    scalar::gemm_nt(x, w, b, k, d, scores);
+}
+
+/// `scores[b, k] = x[b, d] · w[d, k]` — both operands row-major, so
+/// `scores[i*k + c] = sum_j x[i*d + j] * w[j*k + c]`.  The depth-major
+/// second operand is the MLP weight layout (`W1 [d, h]`, `W2 [h, c]`),
+/// so the forward pass needs no transposition; packing degenerates to a
+/// padded row copy.  Shapes, remainders, and the `pack` contract are as
+/// in [`gemm_nt`].
+pub fn gemm_nn(
+    x: &[f32],
+    w: &[f32],
+    b: usize,
+    k: usize,
+    d: usize,
+    scores: &mut [f32],
+    pack: &mut Vec<f32>,
+) {
+    assert_eq!(x.len(), b * d, "gemm_nn: x is not [b, d]");
+    assert_eq!(w.len(), d * k, "gemm_nn: w is not [d, k]");
+    assert_eq!(scores.len(), b * k, "gemm_nn: scores is not [b, k]");
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2Fma {
+        let kp = (k + 7) & !7;
+        pack_panel_nn(w, k, d, kp, pack);
+        // SAFETY: see `dot`; the panel was packed to [d, kp] above.
+        unsafe { avx2::gemm_packed(x, pack, b, k, kp, d, scores) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa() == Isa::Neon {
+        let kp = (k + 3) & !3;
+        pack_panel_nn(w, k, d, kp, pack);
+        // SAFETY: see `dot`; the panel was packed to [d, kp] above.
+        unsafe { neon::gemm_packed(x, pack, b, k, kp, d, scores) };
+        return;
+    }
+    scalar::gemm_nn(x, w, b, k, d, scores);
+}
+
+/// Pack a row-major `[k, d]` operand into the zero-padded `[d, kp]`
+/// panel the micro kernels stream (transposing case).
+fn pack_panel_nt(w: &[f32], k: usize, d: usize, kp: usize, pack: &mut Vec<f32>) {
+    pack.clear();
+    pack.resize(kp * d, 0.0);
+    for c in 0..k {
+        for j in 0..d {
+            pack[j * kp + c] = w[c * d + j];
+        }
+    }
+}
+
+/// Pack a row-major `[d, k]` operand into the zero-padded `[d, kp]`
+/// panel (already depth-major: a padded row copy).
+fn pack_panel_nn(w: &[f32], k: usize, d: usize, kp: usize, pack: &mut Vec<f32>) {
+    pack.clear();
+    pack.resize(kp * d, 0.0);
+    for j in 0..d {
+        pack[j * kp..j * kp + k].copy_from_slice(&w[j * k..j * k + k]);
+    }
 }
 
 /// Portable reference arm (also the `ASGD_NO_SIMD=1` arm and the oracle
@@ -240,6 +466,31 @@ pub mod scalar {
             let mean = (sel + w[i]) * inv;
             let delta_bar = (w[i] - mean) + delta[i];
             w[i] -= eps * delta_bar;
+        }
+    }
+
+    /// Reference NT gemm: the 4-accumulator [`dot`] per (sample, center)
+    /// pair — bit-identical to the pre-tile per-sample transcription.
+    pub fn gemm_nt(x: &[f32], w: &[f32], b: usize, k: usize, d: usize, scores: &mut [f32]) {
+        for i in 0..b {
+            let xi = &x[i * d..(i + 1) * d];
+            for c in 0..k {
+                scores[i * k + c] = dot(xi, &w[c * d..(c + 1) * d]);
+            }
+        }
+    }
+
+    /// Reference NN gemm: plain ascending-`j` accumulation — bit-identical
+    /// to the pre-tile MLP forward/backprop loop order.
+    pub fn gemm_nn(x: &[f32], w: &[f32], b: usize, k: usize, d: usize, scores: &mut [f32]) {
+        for i in 0..b {
+            for c in 0..k {
+                let mut acc = 0.0f32;
+                for j in 0..d {
+                    acc += x[i * d + j] * w[j * k + c];
+                }
+                scores[i * k + c] = acc;
+            }
         }
     }
 }
@@ -428,6 +679,93 @@ pub mod avx2 {
         }
     }
 
+    /// The register-blocked micro kernel over a packed `[d, kp]` panel:
+    /// a 4-sample tile is held in broadcast registers while each panel
+    /// row streams through exactly once, producing `scores[i*k + kb..]`
+    /// 8 centers at a time.  Shared by `gemm_nt`/`gemm_nn` (only the
+    /// packing differs).
+    ///
+    /// # Safety
+    /// See [`dot`].  `panel` must be the zero-padded `[d, kp]` packing
+    /// (`kp` a multiple of 8, `kp >= k`, `panel.len() >= d * kp`), and
+    /// `x`/`scores` must hold at least `b * d` / `b * k` elements.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gemm_packed(
+        x: &[f32],
+        panel: &[f32],
+        b: usize,
+        k: usize,
+        kp: usize,
+        d: usize,
+        scores: &mut [f32],
+    ) {
+        debug_assert!(kp % 8 == 0 && kp >= k);
+        debug_assert!(panel.len() >= d * kp);
+        debug_assert!(x.len() >= b * d && scores.len() >= b * k);
+        let mut i = 0usize;
+        while i + 4 <= b {
+            let x0 = x.as_ptr().add(i * d);
+            let x1 = x0.add(d);
+            let x2 = x1.add(d);
+            let x3 = x2.add(d);
+            let mut kb = 0usize;
+            while kb < k {
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                let mut acc2 = _mm256_setzero_ps();
+                let mut acc3 = _mm256_setzero_ps();
+                let mut p = panel.as_ptr().add(kb);
+                for j in 0..d {
+                    let vb = _mm256_loadu_ps(p);
+                    acc0 = _mm256_fmadd_ps(_mm256_set1_ps(*x0.add(j)), vb, acc0);
+                    acc1 = _mm256_fmadd_ps(_mm256_set1_ps(*x1.add(j)), vb, acc1);
+                    acc2 = _mm256_fmadd_ps(_mm256_set1_ps(*x2.add(j)), vb, acc2);
+                    acc3 = _mm256_fmadd_ps(_mm256_set1_ps(*x3.add(j)), vb, acc3);
+                    p = p.add(kp);
+                }
+                store_lanes(scores, i * k, k, kb, acc0);
+                store_lanes(scores, (i + 1) * k, k, kb, acc1);
+                store_lanes(scores, (i + 2) * k, k, kb, acc2);
+                store_lanes(scores, (i + 3) * k, k, kb, acc3);
+                kb += 8;
+            }
+            i += 4;
+        }
+        while i < b {
+            let x0 = x.as_ptr().add(i * d);
+            let mut kb = 0usize;
+            while kb < k {
+                let mut acc = _mm256_setzero_ps();
+                let mut p = panel.as_ptr().add(kb);
+                for j in 0..d {
+                    acc = _mm256_fmadd_ps(_mm256_set1_ps(*x0.add(j)), _mm256_loadu_ps(p), acc);
+                    p = p.add(kp);
+                }
+                store_lanes(scores, i * k, k, kb, acc);
+                kb += 8;
+            }
+            i += 1;
+        }
+    }
+
+    /// Store the 8-lane accumulator into `scores[row + kb..]`, clipping
+    /// to the `k` valid lanes at the panel tail (the clipped lanes hold
+    /// exact zeros from the panel padding).
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers are `target_feature(avx2,fma)` fns) and
+    /// `row + k <= scores.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn store_lanes(scores: &mut [f32], row: usize, k: usize, kb: usize, acc: __m256) {
+        if kb + 8 <= k {
+            _mm256_storeu_ps(scores.as_mut_ptr().add(row + kb), acc);
+        } else {
+            let mut tmp = [0.0f32; 8];
+            _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+            scores[row + kb..row + k].copy_from_slice(&tmp[..k - kb]);
+        }
+    }
+
     /// # Safety
     /// Requires AVX2 (callers are `target_feature(avx2,fma)` fns).
     #[target_feature(enable = "avx2,fma")]
@@ -449,6 +787,268 @@ pub mod avx2 {
         let s = _mm_add_pd(lo, hi);
         let s = _mm_add_sd(s, _mm_unpackhi_pd(s, s));
         _mm_cvtsd_f64(s)
+    }
+}
+
+/// NEON arm (aarch64).  The dispatch scaffolding is the same as the
+/// AVX2 arm's, at 4-lane width; [`isa`] guards all callers.  The
+/// bit-parity kernels (`sgd_step`, `merge_update`) use only per-lane
+/// mul/add/sub — `vmulq_n_f32` + `vsubq_f32`, never `vfmaq` — so the
+/// cross-arm bit-identity contract holds on aarch64 too.
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    use core::arch::aarch64::*;
+
+    /// # Safety
+    /// Requires NEON (guaranteed when [`super::isa`] returns
+    /// [`super::Isa::Neon`]).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let (va0, vb0) = (vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+            let (va1, vb1) = (vld1q_f32(a.as_ptr().add(i + 4)), vld1q_f32(b.as_ptr().add(i + 4)));
+            acc0 = vfmaq_f32(acc0, va0, vb0);
+            acc1 = vfmaq_f32(acc1, va1, vb1);
+            i += 8;
+        }
+        while i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+            i += 4;
+        }
+        let mut sum = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            sum += a[i] * b[i];
+            i += 1;
+        }
+        sum
+    }
+
+    /// # Safety
+    /// See [`dot`].
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        let n = y.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vy = vld1q_f32(y.as_ptr().add(i));
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f32(y.as_mut_ptr().add(i), vfmaq_n_f32(vy, vx, a));
+            i += 4;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// See [`dot`].
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale_combine(row: &mut [f32], keep: f32, x: &[f32], xs: f32) {
+        let n = row.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vr = vld1q_f32(row.as_ptr().add(i));
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f32(row.as_mut_ptr().add(i), vfmaq_n_f32(vmulq_n_f32(vx, xs), vr, keep));
+            i += 4;
+        }
+        while i < n {
+            row[i] = row[i] * keep + x[i] * xs;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// See [`dot`].  No FMA inside: bit-parity with the scalar arm.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sgd_step(w: &mut [f32], delta: &[f32], eps: f32) {
+        let n = w.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vw = vld1q_f32(w.as_ptr().add(i));
+            let vd = vld1q_f32(delta.as_ptr().add(i));
+            vst1q_f32(w.as_mut_ptr().add(i), vsubq_f32(vw, vmulq_n_f32(vd, eps)));
+            i += 4;
+        }
+        while i < n {
+            w[i] -= eps * delta[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// See [`dot`].  Element ops run in f32 exactly like the scalar arm
+    /// (sub, mul, then widen); only the f64 accumulator order differs.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gate_dists(w: &[f32], w_prop: &[f32], ext: &[f32]) -> (f64, f64, f64) {
+        let n = ext.len();
+        let mut va = vdupq_n_f64(0.0);
+        let mut vc = vdupq_n_f64(0.0);
+        let mut vn = vdupq_n_f64(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let e = vld1q_f32(ext.as_ptr().add(i));
+            let p = vld1q_f32(w_prop.as_ptr().add(i));
+            let ww = vld1q_f32(w.as_ptr().add(i));
+            let da = vsubq_f32(p, e);
+            let dc = vsubq_f32(ww, e);
+            let sa = vmulq_f32(da, da);
+            let sc = vmulq_f32(dc, dc);
+            let se = vmulq_f32(e, e);
+            va = vaddq_f64(va, vcvt_f64_f32(vget_low_f32(sa)));
+            va = vaddq_f64(va, vcvt_high_f64_f32(sa));
+            vc = vaddq_f64(vc, vcvt_f64_f32(vget_low_f32(sc)));
+            vc = vaddq_f64(vc, vcvt_high_f64_f32(sc));
+            vn = vaddq_f64(vn, vcvt_f64_f32(vget_low_f32(se)));
+            vn = vaddq_f64(vn, vcvt_high_f64_f32(se));
+            i += 4;
+        }
+        let (mut a, mut c, mut nrm) = (vaddvq_f64(va), vaddvq_f64(vc), vaddvq_f64(vn));
+        while i < n {
+            let e = ext[i];
+            let da = w_prop[i] - e;
+            let dc = w[i] - e;
+            a += (da * da) as f64;
+            c += (dc * dc) as f64;
+            nrm += (e * e) as f64;
+            i += 1;
+        }
+        (a, c, nrm)
+    }
+
+    /// # Safety
+    /// See [`dot`].  Additionally requires, for every set bit `nb` of
+    /// `mask`, that `exts[nb*stride + base ..][..w.len()]` is in bounds
+    /// (the dispatcher debug-asserts it).  No FMA, no reassociation:
+    /// per-lane ops replicate the scalar arm exactly.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn merge_update(
+        w: &mut [f32],
+        delta: &[f32],
+        exts: &[f32],
+        stride: usize,
+        base: usize,
+        mask: u64,
+        inv: f32,
+        eps: f32,
+    ) {
+        let n = w.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vw = vld1q_f32(w.as_ptr().add(i));
+            let vd = vld1q_f32(delta.as_ptr().add(i));
+            let mut vsel = vdupq_n_f32(0.0);
+            let mut bits = mask;
+            while bits != 0 {
+                let nb = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                vsel = vaddq_f32(vsel, vld1q_f32(exts.as_ptr().add(nb * stride + base + i)));
+            }
+            let vmean = vmulq_n_f32(vaddq_f32(vsel, vw), inv);
+            let vdb = vaddq_f32(vsubq_f32(vw, vmean), vd);
+            vst1q_f32(w.as_mut_ptr().add(i), vsubq_f32(vw, vmulq_n_f32(vdb, eps)));
+            i += 4;
+        }
+        if i < n {
+            super::scalar::merge_update(
+                &mut w[i..],
+                &delta[i..],
+                exts,
+                stride,
+                base + i,
+                mask,
+                inv,
+                eps,
+            );
+        }
+    }
+
+    /// The register-blocked micro kernel over a packed `[d, kp]` panel —
+    /// the NEON mirror of the AVX2 kernel at 4-lane width.
+    ///
+    /// # Safety
+    /// See [`dot`].  `panel` must be the zero-padded `[d, kp]` packing
+    /// (`kp` a multiple of 4, `kp >= k`, `panel.len() >= d * kp`), and
+    /// `x`/`scores` must hold at least `b * d` / `b * k` elements.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn gemm_packed(
+        x: &[f32],
+        panel: &[f32],
+        b: usize,
+        k: usize,
+        kp: usize,
+        d: usize,
+        scores: &mut [f32],
+    ) {
+        debug_assert!(kp % 4 == 0 && kp >= k);
+        debug_assert!(panel.len() >= d * kp);
+        debug_assert!(x.len() >= b * d && scores.len() >= b * k);
+        let mut i = 0usize;
+        while i + 4 <= b {
+            let x0 = x.as_ptr().add(i * d);
+            let x1 = x0.add(d);
+            let x2 = x1.add(d);
+            let x3 = x2.add(d);
+            let mut kb = 0usize;
+            while kb < k {
+                let mut acc0 = vdupq_n_f32(0.0);
+                let mut acc1 = vdupq_n_f32(0.0);
+                let mut acc2 = vdupq_n_f32(0.0);
+                let mut acc3 = vdupq_n_f32(0.0);
+                let mut p = panel.as_ptr().add(kb);
+                for j in 0..d {
+                    let vb = vld1q_f32(p);
+                    acc0 = vfmaq_n_f32(acc0, vb, *x0.add(j));
+                    acc1 = vfmaq_n_f32(acc1, vb, *x1.add(j));
+                    acc2 = vfmaq_n_f32(acc2, vb, *x2.add(j));
+                    acc3 = vfmaq_n_f32(acc3, vb, *x3.add(j));
+                    p = p.add(kp);
+                }
+                store_lanes(scores, i * k, k, kb, acc0);
+                store_lanes(scores, (i + 1) * k, k, kb, acc1);
+                store_lanes(scores, (i + 2) * k, k, kb, acc2);
+                store_lanes(scores, (i + 3) * k, k, kb, acc3);
+                kb += 4;
+            }
+            i += 4;
+        }
+        while i < b {
+            let x0 = x.as_ptr().add(i * d);
+            let mut kb = 0usize;
+            while kb < k {
+                let mut acc = vdupq_n_f32(0.0);
+                let mut p = panel.as_ptr().add(kb);
+                for j in 0..d {
+                    acc = vfmaq_n_f32(acc, vld1q_f32(p), *x0.add(j));
+                    p = p.add(kp);
+                }
+                store_lanes(scores, i * k, k, kb, acc);
+                kb += 4;
+            }
+            i += 1;
+        }
+    }
+
+    /// Store the 4-lane accumulator into `scores[row + kb..]`, clipping
+    /// to the `k` valid lanes at the panel tail.
+    ///
+    /// # Safety
+    /// Requires NEON and `row + k <= scores.len()`.
+    #[target_feature(enable = "neon")]
+    unsafe fn store_lanes(scores: &mut [f32], row: usize, k: usize, kb: usize, acc: float32x4_t) {
+        if kb + 4 <= k {
+            vst1q_f32(scores.as_mut_ptr().add(row + kb), acc);
+        } else {
+            let mut tmp = [0.0f32; 4];
+            vst1q_f32(tmp.as_mut_ptr(), acc);
+            scores[row + kb..row + k].copy_from_slice(&tmp[..k - kb]);
+        }
     }
 }
 
@@ -475,12 +1075,17 @@ mod tests {
                 let hw = is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma");
                 assert_eq!(isa() == Isa::Avx2Fma, hw);
             }
-            #[cfg(not(target_arch = "x86_64"))]
+            #[cfg(target_arch = "aarch64")]
+            {
+                let hw = std::arch::is_aarch64_feature_detected!("neon");
+                assert_eq!(isa() == Isa::Neon, hw);
+            }
+            #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
             assert_eq!(isa(), Isa::Scalar);
         }
     }
 
-    /// All five kernels, both arms, every lane remainder len % 8 in 0..8.
+    /// All kernels, both arms, every lane remainder len % 8 in 0..8.
     #[cfg(target_arch = "x86_64")]
     #[test]
     fn avx2_matches_scalar_across_lane_remainders() {
@@ -544,6 +1149,127 @@ mod tests {
             for (s, v) in [gs.0, gs.1, gs.2].iter().zip([gv.0, gv.1, gv.2].iter()) {
                 assert!((s - v).abs() < 1e-6 * s.abs().max(1.0), "gate rem={rem}: {s} vs {v}");
             }
+
+            // gemm micro kernel: sweep k and b remainders at this d
+            // remainder (panel padding + partial stores + the 1-row tail)
+            let d = len;
+            for kk in [8usize, 9, 13, 16 + rem] {
+                for bb in [1usize, 3, 4, 7] {
+                    let x = rand_vec(&mut rng, bb * d);
+                    let wt = rand_vec(&mut rng, kk * d);
+                    let mut ref_s = vec![0.0f32; bb * kk];
+                    scalar::gemm_nt(&x, &wt, bb, kk, d, &mut ref_s);
+                    let kpad = (kk + 7) & !7;
+                    let mut pack = Vec::new();
+                    pack_panel_nt(&wt, kk, d, kpad, &mut pack);
+                    let mut got = vec![0.0f32; bb * kk];
+                    unsafe { avx2::gemm_packed(&x, &pack, bb, kk, kpad, d, &mut got) };
+                    for (s, v) in ref_s.iter().zip(&got) {
+                        assert!(
+                            (s - v).abs() < 1e-4 * s.abs().max(1.0),
+                            "gemm_nt b={bb} k={kk} d={d}: {s} vs {v}"
+                        );
+                    }
+                    // NN packing over the same panel kernel
+                    let wn: Vec<f32> = rand_vec(&mut rng, d * kk);
+                    let mut ref_n = vec![0.0f32; bb * kk];
+                    scalar::gemm_nn(&x, &wn, bb, kk, d, &mut ref_n);
+                    pack_panel_nn(&wn, kk, d, kpad, &mut pack);
+                    let mut got_n = vec![0.0f32; bb * kk];
+                    unsafe { avx2::gemm_packed(&x, &pack, bb, kk, kpad, d, &mut got_n) };
+                    for (s, v) in ref_n.iter().zip(&got_n) {
+                        assert!(
+                            (s - v).abs() < 1e-4 * s.abs().max(1.0),
+                            "gemm_nn b={bb} k={kk} d={d}: {s} vs {v}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// NEON mirror of the lane-remainder parity suite.
+    #[cfg(target_arch = "aarch64")]
+    #[test]
+    fn neon_matches_scalar_across_lane_remainders() {
+        if !std::arch::is_aarch64_feature_detected!("neon") {
+            eprintln!("skipping neon parity: cpu lacks neon");
+            return;
+        }
+        let mut rng = Xoshiro256pp::seed_from_u64(99);
+        for rem in 0..8usize {
+            let len = 24 + rem;
+            let a = rand_vec(&mut rng, len);
+            let b = rand_vec(&mut rng, len);
+
+            let (ds, dv) = (scalar::dot(&a, &b), unsafe { neon::dot(&a, &b) });
+            assert!((ds - dv).abs() < 1e-4 * ds.abs().max(1.0), "dot rem={rem}: {ds} vs {dv}");
+
+            let mut ys = a.clone();
+            let mut yv = a.clone();
+            scalar::axpy(&mut ys, 0.37, &b);
+            unsafe { neon::axpy(&mut yv, 0.37, &b) };
+            for (s, v) in ys.iter().zip(&yv) {
+                assert!((s - v).abs() < 1e-5, "axpy rem={rem}: {s} vs {v}");
+            }
+
+            let mut rs = a.clone();
+            let mut rv = a.clone();
+            scalar::scale_combine(&mut rs, 0.9, &b, 0.05);
+            unsafe { neon::scale_combine(&mut rv, 0.9, &b, 0.05) };
+            for (s, v) in rs.iter().zip(&rv) {
+                assert!((s - v).abs() < 1e-5, "scale_combine rem={rem}: {s} vs {v}");
+            }
+
+            let mut ws = a.clone();
+            let mut wv = a.clone();
+            scalar::sgd_step(&mut ws, &b, 0.13);
+            unsafe { neon::sgd_step(&mut wv, &b, 0.13) };
+            assert_eq!(bits(&ws), bits(&wv), "sgd_step rem={rem} not bit-identical");
+
+            let n_buf = 5usize;
+            let exts = rand_vec(&mut rng, n_buf * len);
+            for mask in [0u64, 0b1, 0b10110] {
+                let delta = rand_vec(&mut rng, len);
+                let mut ws = a.clone();
+                let mut wv = a.clone();
+                let inv = 1.0 / (mask.count_ones() as f32 + 1.0);
+                scalar::merge_update(&mut ws, &delta, &exts, len, 0, mask, inv, 0.07);
+                unsafe { neon::merge_update(&mut wv, &delta, &exts, len, 0, mask, inv, 0.07) };
+                assert_eq!(
+                    bits(&ws),
+                    bits(&wv),
+                    "merge_update rem={rem} mask={mask:b} not bit-identical"
+                );
+            }
+
+            let e = rand_vec(&mut rng, len);
+            let gs = scalar::gate_dists(&a, &b, &e);
+            let gv = unsafe { neon::gate_dists(&a, &b, &e) };
+            for (s, v) in [gs.0, gs.1, gs.2].iter().zip([gv.0, gv.1, gv.2].iter()) {
+                assert!((s - v).abs() < 1e-6 * s.abs().max(1.0), "gate rem={rem}: {s} vs {v}");
+            }
+
+            let d = len;
+            for kk in [4usize, 5, 9, 16 + rem] {
+                for bb in [1usize, 3, 4, 7] {
+                    let x = rand_vec(&mut rng, bb * d);
+                    let wt = rand_vec(&mut rng, kk * d);
+                    let mut ref_s = vec![0.0f32; bb * kk];
+                    scalar::gemm_nt(&x, &wt, bb, kk, d, &mut ref_s);
+                    let kpad = (kk + 3) & !3;
+                    let mut pack = Vec::new();
+                    pack_panel_nt(&wt, kk, d, kpad, &mut pack);
+                    let mut got = vec![0.0f32; bb * kk];
+                    unsafe { neon::gemm_packed(&x, &pack, bb, kk, kpad, d, &mut got) };
+                    for (s, v) in ref_s.iter().zip(&got) {
+                        assert!(
+                            (s - v).abs() < 1e-4 * s.abs().max(1.0),
+                            "gemm_nt b={bb} k={kk} d={d}: {s} vs {v}"
+                        );
+                    }
+                }
+            }
         }
     }
 
@@ -574,6 +1300,87 @@ mod tests {
             merge_update(&mut w1, &b, &exts, len, 0, 0b101, 1.0 / 3.0, 0.1);
             scalar::merge_update(&mut w2, &b, &exts, len, 0, 0b101, 1.0 / 3.0, 0.1);
             assert_eq!(bits(&w1), bits(&w2), "merge_update dispatch len={len}");
+        }
+    }
+
+    /// The gemm dispatchers agree with the scalar reference on every
+    /// arm, across shapes that hit the small-k dot fallback (k < 8),
+    /// the panel path, lane remainders, and sample-tile remainders.
+    #[test]
+    fn gemm_dispatch_matches_scalar_reference() {
+        let mut rng = Xoshiro256pp::seed_from_u64(41);
+        let mut pack = Vec::new();
+        for &(b, k, d) in &[
+            (1usize, 1usize, 1usize),
+            (3, 2, 5),
+            (5, 7, 9),   // small-k fallback with remainders
+            (7, 8, 8),   // exact lane block, 1-row tail
+            (5, 10, 10), // the paper shape's tile geometry
+            (4, 16, 3),
+            (9, 13, 31),
+            (64, 64, 64),
+        ] {
+            let x = rand_vec(&mut rng, b * d);
+            let wt = rand_vec(&mut rng, k * d);
+            let mut got = vec![0.0f32; b * k];
+            gemm_nt(&x, &wt, b, k, d, &mut got, &mut pack);
+            let mut want = vec![0.0f32; b * k];
+            scalar::gemm_nt(&x, &wt, b, k, d, &mut want);
+            for (g, s) in got.iter().zip(&want) {
+                assert!(
+                    (g - s).abs() < 1e-4 * s.abs().max(1.0),
+                    "gemm_nt b={b} k={k} d={d}: {g} vs {s}"
+                );
+            }
+
+            let wn = rand_vec(&mut rng, d * k);
+            let mut got = vec![0.0f32; b * k];
+            gemm_nn(&x, &wn, b, k, d, &mut got, &mut pack);
+            let mut want = vec![0.0f32; b * k];
+            scalar::gemm_nn(&x, &wn, b, k, d, &mut want);
+            for (g, s) in got.iter().zip(&want) {
+                assert!(
+                    (g - s).abs() < 1e-4 * s.abs().max(1.0),
+                    "gemm_nn b={b} k={k} d={d}: {g} vs {s}"
+                );
+            }
+
+            // pack-once reuse (the K-Means tile loop): one gemm_pack_nt,
+            // several batches through gemm_nt_packed, each equal to the
+            // one-shot gemm_nt
+            gemm_pack_nt(&wt, k, d, &mut pack);
+            for round in 0..2 {
+                let x2 = rand_vec(&mut rng, b * d);
+                let mut got = vec![0.0f32; b * k];
+                gemm_nt_packed(&x2, &wt, b, k, d, &mut got, &pack);
+                let mut want = vec![0.0f32; b * k];
+                scalar::gemm_nt(&x2, &wt, b, k, d, &mut want);
+                for (g, s) in got.iter().zip(&want) {
+                    assert!(
+                        (g - s).abs() < 1e-4 * s.abs().max(1.0),
+                        "gemm_nt_packed round={round} b={b} k={k} d={d}: {g} vs {s}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// On the scalar arm the NT gemm must be bit-identical to the
+    /// per-sample `scalar::dot` transcription it replaced (the PR-4
+    /// reproducibility contract for `ASGD_NO_SIMD=1`).
+    #[test]
+    fn scalar_gemm_nt_is_bitwise_the_per_sample_transcription() {
+        let mut rng = Xoshiro256pp::seed_from_u64(43);
+        let (b, k, d) = (17, 10, 10);
+        let x = rand_vec(&mut rng, b * d);
+        let w = rand_vec(&mut rng, k * d);
+        let mut scores = vec![0.0f32; b * k];
+        scalar::gemm_nt(&x, &w, b, k, d, &mut scores);
+        for i in 0..b {
+            for c in 0..k {
+                let want = scalar::dot(&x[i * d..(i + 1) * d], &w[c * d..(c + 1) * d]);
+                assert_eq!(scores[i * k + c].to_bits(), want.to_bits(), "({i},{c})");
+            }
         }
     }
 }

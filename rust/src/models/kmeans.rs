@@ -4,42 +4,20 @@ use super::Model;
 use crate::data::Dataset;
 use crate::kernels::kmeans::{kmeans_stats, KmeansScratch};
 use crate::util::rng::Xoshiro256pp;
-use std::cell::RefCell;
 
 /// K-Means clustering model: state is the flat `[k, d]` prototype matrix.
+/// Batch buffers live in the models layer's shared per-thread scratch
+/// pool ([`super::with_scratch`]), keeping `grad()`/`eval()`
+/// `&self`-callable and allocation-free after warm-up.
 pub struct KMeansModel {
     pub k: usize,
     pub d: usize,
-    // per-thread scratch to keep grad() allocation-free and &self-callable
-    scratch: thread_local::ThreadLocalScratch,
-}
-
-mod thread_local {
-    use super::*;
-
-    /// Tiny thread-local scratch pool (std::thread_local! needs a static,
-    /// so roll a keyed pool instead: one scratch per OS thread id).
-    pub struct ThreadLocalScratch;
-
-    std::thread_local! {
-        static SCRATCH: RefCell<KmeansScratch> = RefCell::new(KmeansScratch::default());
-    }
-
-    impl ThreadLocalScratch {
-        pub fn with<R>(&self, f: impl FnOnce(&mut KmeansScratch) -> R) -> R {
-            SCRATCH.with(|s| f(&mut s.borrow_mut()))
-        }
-    }
 }
 
 impl KMeansModel {
     pub fn new(k: usize, d: usize) -> Self {
         assert!(k >= 1 && d >= 1);
-        Self {
-            k,
-            d,
-            scratch: thread_local::ThreadLocalScratch,
-        }
+        Self { k, d }
     }
 }
 
@@ -66,7 +44,7 @@ impl Model for KMeansModel {
 
     fn grad(&self, x: &[f32], _labels: Option<&[f32]>, w: &[f32], grad: &mut [f32]) -> f64 {
         let b = (x.len() / self.d) as f32;
-        self.scratch.with(|scratch| {
+        super::with_scratch(|scratch: &mut KmeansScratch| {
             kmeans_stats(x, w, self.k, self.d, scratch);
             // grad_k = (counts_k * w_k - sums_k) / b
             for c in 0..self.k {
@@ -82,10 +60,15 @@ impl Model for KMeansModel {
         })
     }
 
-    /// Mean quantization error over the first `max_samples` rows.
+    /// Mean quantization error over the first `max_samples` rows.  Runs
+    /// through the per-thread scratch: worker 0 evaluates once per trace
+    /// point, and the old allocating `quant_error` paid a fresh
+    /// [`KmeansScratch`] on every one of those calls.
     fn eval(&self, data: &Dataset, w: &[f32], max_samples: usize) -> f64 {
         let n = data.n.min(max_samples.max(1));
-        crate::kernels::kmeans::quant_error(data.rows(0, n), w, self.k, self.d)
+        super::with_scratch(|scratch: &mut KmeansScratch| {
+            crate::kernels::kmeans::quant_error_with(data.rows(0, n), w, self.k, self.d, scratch)
+        })
     }
 
     /// §5.4 error measure: greedy-matched mean distance between learned

@@ -5,6 +5,13 @@ use crate::data::Dataset;
 use crate::kernels::linear as lin;
 use crate::util::rng::Xoshiro256pp;
 
+/// Both linear models run their batched gradients through the models
+/// layer's shared per-thread scratch pool ([`super::with_scratch`]), so
+/// `grad()` stays `&self`-callable and allocation-free after warm-up.
+fn with_scratch<R>(f: impl FnOnce(&mut lin::LinearScratch) -> R) -> R {
+    super::with_scratch(f)
+}
+
 /// Least-squares regression: state is the `[d]` weight vector.
 pub struct LinRegModel {
     pub d: usize,
@@ -27,14 +34,14 @@ impl Model for LinRegModel {
 
     fn grad(&self, x: &[f32], labels: Option<&[f32]>, w: &[f32], grad: &mut [f32]) -> f64 {
         let y = labels.expect("linreg needs labels");
-        lin::linreg_grad(x, y, w, grad)
+        with_scratch(|s| lin::linreg_grad_with(x, y, w, grad, s))
     }
 
     fn eval(&self, data: &Dataset, w: &[f32], max_samples: usize) -> f64 {
         let n = data.n.min(max_samples.max(1));
         let y = data.labels.as_ref().expect("linreg needs labels");
         let mut grad = vec![0.0; self.d];
-        lin::linreg_grad(data.rows(0, n), &y[..n], w, &mut grad)
+        with_scratch(|s| lin::linreg_grad_with(data.rows(0, n), &y[..n], w, &mut grad, s))
     }
 
     /// Distance to the generating `w*`.
@@ -73,14 +80,14 @@ impl Model for LogRegModel {
 
     fn grad(&self, x: &[f32], labels: Option<&[f32]>, w: &[f32], grad: &mut [f32]) -> f64 {
         let y = labels.expect("logreg needs labels");
-        lin::logreg_grad(x, y, w, grad)
+        with_scratch(|s| lin::logreg_grad_with(x, y, w, grad, s))
     }
 
     fn eval(&self, data: &Dataset, w: &[f32], max_samples: usize) -> f64 {
         let n = data.n.min(max_samples.max(1));
         let y = data.labels.as_ref().expect("logreg needs labels");
         let mut grad = vec![0.0; self.d];
-        lin::logreg_grad(data.rows(0, n), &y[..n], w, &mut grad)
+        with_scratch(|s| lin::logreg_grad_with(data.rows(0, n), &y[..n], w, &mut grad, s))
     }
 
     fn truth_error(&self, data: &Dataset, w: &[f32]) -> Option<f64> {

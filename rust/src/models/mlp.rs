@@ -5,15 +5,39 @@
 //! State layout (flat, matching `python/compile/model.py::mlp_step`):
 //! `[w1 (d*h) | b1 (h) | w2 (h*c) | b2 (c)]`.  Labels are class indices
 //! stored as f32 (the Dataset label channel).
+//!
+//! Since PR 4 the forward pass and the backprop's dense products run
+//! through the tiled micro-GEMM layer (closing the "MLP loops still
+//! scalar" ROADMAP follow-up): `hidden = tanh(X·W1 + b1)` and
+//! `logits = hidden·W2 + b2` are one [`simd::gemm_nn`] each per
+//! mini-batch (the `[d, h]` / `[h, c]` weight layouts are already
+//! depth-major, so no transposition), `dh = dz·W2ᵀ` is one
+//! [`simd::gemm_nt`], and the rank-1 weight-gradient accumulations run
+//! on dispatched [`simd::axpy`] rows.  Batch activations live in a
+//! per-thread scratch, so `grad()` stays `&self`-callable and
+//! allocation-free after warm-up.
 
 use super::Model;
 use crate::data::Dataset;
+use crate::kernels::simd;
 use crate::util::rng::Xoshiro256pp;
 
 pub struct MlpModel {
     pub d: usize,
     pub h: usize,
     pub c: usize,
+}
+
+/// Per-thread batch buffers (held in the models layer's shared scratch
+/// pool, [`super::with_scratch`]): `[b, h]` activations, a `[b, c]`
+/// buffer holding logits then `dz` in place, `[b, h]` hidden deltas,
+/// and the gemm pack panel.
+#[derive(Clone, Debug, Default)]
+struct MlpScratch {
+    hid: Vec<f32>,
+    zbuf: Vec<f32>,
+    dh: Vec<f32>,
+    pack: Vec<f32>,
 }
 
 impl MlpModel {
@@ -42,76 +66,78 @@ impl MlpModel {
         let w2 = &w[o_w2..o_b2];
         let b2 = &w[o_b2..];
 
-        let mut grad = grad;
-        if let Some(g) = grad.as_deref_mut() {
-            g.fill(0.0);
-        }
+        super::with_scratch(|scratch: &mut MlpScratch| {
+            let MlpScratch { hid, zbuf, dh, pack } = scratch;
+            hid.resize(b * h, 0.0);
+            zbuf.resize(b * c, 0.0);
+            dh.resize(b * h, 0.0);
 
-        let mut hid = vec![0.0f32; h];
-        let mut logits = vec![0.0f32; c];
-        let mut dz = vec![0.0f32; c];
-        let mut dh = vec![0.0f32; h];
-        let mut loss = 0.0f64;
-
-        for i in 0..b {
-            let xi = &x[i * d..(i + 1) * d];
             // hidden = tanh(x W1 + b1)   (W1 is [d, h] row-major)
-            for j in 0..h {
-                let mut z = b1[j];
-                for a in 0..d {
-                    z += xi[a] * w1[a * h + j];
-                }
-                hid[j] = z.tanh();
-            }
-            // logits = hidden W2 + b2   (W2 is [h, c] row-major)
-            for j in 0..c {
-                let mut z = b2[j];
-                for a in 0..h {
-                    z += hid[a] * w2[a * c + j];
-                }
-                logits[j] = z;
-            }
-            // softmax CE (stable)
-            let label = y[i] as usize;
-            debug_assert!(label < c, "label {label} out of range");
-            let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut sum = 0.0f32;
-            for j in 0..c {
-                dz[j] = (logits[j] - max).exp();
-                sum += dz[j];
-            }
-            loss += (sum.ln() + max - logits[label]) as f64;
-            if let Some(g) = grad.as_deref_mut() {
-                let inv_b = 1.0 / b as f32;
-                for j in 0..c {
-                    dz[j] = (dz[j] / sum - (j == label) as u8 as f32) * inv_b;
-                }
-                // dW2 += hidden^T dz ; db2 += dz ; dh = dz W2^T
-                for a in 0..h {
-                    let ha = hid[a];
-                    let mut acc = 0.0f32;
-                    for j in 0..c {
-                        g[o_w2 + a * c + j] += ha * dz[j];
-                        acc += dz[j] * w2[a * c + j];
-                    }
-                    dh[a] = acc * (1.0 - ha * ha); // tanh'
-                }
-                for j in 0..c {
-                    g[o_b2 + j] += dz[j];
-                }
-                // dW1 += x^T dh ; db1 += dh
-                for a in 0..d {
-                    let xa = xi[a];
-                    for j in 0..h {
-                        g[o_w1 + a * h + j] += xa * dh[j];
-                    }
-                }
+            simd::gemm_nn(x, w1, b, h, d, hid, pack);
+            for row in hid.chunks_exact_mut(h) {
                 for j in 0..h {
-                    g[o_b1 + j] += dh[j];
+                    row[j] = (row[j] + b1[j]).tanh();
                 }
             }
-        }
-        loss / b as f64
+            // logits = hidden W2   (W2 is [h, c] row-major; + b2 below)
+            simd::gemm_nn(hid, w2, b, c, h, zbuf, pack);
+
+            let mut grad = grad;
+            if let Some(g) = grad.as_deref_mut() {
+                g.fill(0.0);
+            }
+            let inv_b = 1.0 / b as f32;
+            let mut loss = 0.0f64;
+            for i in 0..b {
+                let zrow = &mut zbuf[i * c..(i + 1) * c];
+                for j in 0..c {
+                    zrow[j] += b2[j];
+                }
+                // softmax CE (stable)
+                let label = y[i] as usize;
+                debug_assert!(label < c, "label {label} out of range");
+                let z_label = zrow[label];
+                let max = zrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0.0f32;
+                for j in 0..c {
+                    zrow[j] = (zrow[j] - max).exp();
+                    sum += zrow[j];
+                }
+                loss += (sum.ln() + max - z_label) as f64;
+                if grad.is_some() {
+                    // logits row becomes the dz row, in place
+                    for j in 0..c {
+                        zrow[j] = (zrow[j] / sum - (j == label) as u8 as f32) * inv_b;
+                    }
+                }
+            }
+            if let Some(g) = grad.as_deref_mut() {
+                // dh = dz W2^T, batched, then the tanh' mask
+                simd::gemm_nt(zbuf, w2, b, h, c, dh, pack);
+                for (dhrow, hrow) in dh.chunks_exact_mut(h).zip(hid.chunks_exact(h)) {
+                    for a in 0..h {
+                        dhrow[a] *= 1.0 - hrow[a] * hrow[a]; // tanh'
+                    }
+                }
+                for i in 0..b {
+                    let dz = &zbuf[i * c..(i + 1) * c];
+                    let dhi = &dh[i * h..(i + 1) * h];
+                    let hrow = &hid[i * h..(i + 1) * h];
+                    let xi = &x[i * d..(i + 1) * d];
+                    // dW2 += hidden^T dz ; db2 += dz
+                    for a in 0..h {
+                        simd::axpy(&mut g[o_w2 + a * c..o_w2 + (a + 1) * c], hrow[a], dz);
+                    }
+                    simd::axpy(&mut g[o_b2..o_b2 + c], 1.0, dz);
+                    // dW1 += x^T dh ; db1 += dh
+                    for a in 0..d {
+                        simd::axpy(&mut g[o_w1 + a * h..o_w1 + (a + 1) * h], xi[a], dhi);
+                    }
+                    simd::axpy(&mut g[o_b1..o_b1 + h], 1.0, dhi);
+                }
+            }
+            loss / b as f64
+        })
     }
 }
 

@@ -12,10 +12,34 @@ pub mod mlp;
 
 use crate::data::Dataset;
 use crate::util::rng::Xoshiro256pp;
+use std::any::{Any, TypeId};
+use std::cell::RefCell;
+use std::collections::HashMap;
 
 pub use kmeans::KMeansModel;
 pub use linear::{LinRegModel, LogRegModel};
 pub use mlp::MlpModel;
+
+std::thread_local! {
+    /// One scratch value per (thread, scratch type): the models keep
+    /// their reusable batch buffers here so `grad()`/`eval()` stay
+    /// `&self`-callable and allocation-free after warm-up, without each
+    /// model family rolling its own thread-local.
+    static SCRATCH_POOL: RefCell<HashMap<TypeId, Box<dyn Any>>> = RefCell::new(HashMap::new());
+}
+
+/// Run `f` with this thread's scratch of type `T` (default-created on
+/// first use).  Not reentrant: `f` must not call `with_scratch` again
+/// on the same thread — models never nest into each other.
+pub(crate) fn with_scratch<T: Default + 'static, R>(f: impl FnOnce(&mut T) -> R) -> R {
+    SCRATCH_POOL.with(|pool| {
+        let mut pool = pool.borrow_mut();
+        let entry = pool
+            .entry(TypeId::of::<T>())
+            .or_insert_with(|| Box::<T>::default());
+        f(entry.downcast_mut::<T>().expect("scratch is keyed by its TypeId"))
+    })
+}
 
 /// A trainable model with a flat `f32` state.
 pub trait Model: Send + Sync {
