@@ -1,0 +1,218 @@
+//! Fault-injection scenario family: the §4.4 taxonomy extended from
+//! lost/torn/stale *messages* to dead/slow/reborn *workers* (Duchi et
+//! al., arXiv:1508.00882: asynchronous SGD tolerates unbounded delays
+//! with negligible convergence penalty — so crashes, stragglers and
+//! rejoins must cost a tolerance band, never a hang).
+//!
+//! Scenarios (each against the fault-free baseline on the same
+//! seed/data, median-of-3 to damp scheduler noise):
+//!
+//! * **crash-at-25%** — one rank dies for good a quarter into the run;
+//!   survivor-only aggregation completes and converges within the band.
+//! * **rolling-restarts** — two ranks die at staggered iterations and
+//!   are restored from their checkpoints; peers un-suspect them purely
+//!   via heartbeat incarnations (`recovered >= 1` per restore, false
+//!   suspicions bounded by the resolution identity).
+//! * **straggler-10x** — one rank runs an order of magnitude slower; the
+//!   run never waits on it and any suspicion resolves as false.
+//! * **kill-leader** — rank 0 (the trace owner and alg. 5 line 10's
+//!   return rank) dies; aggregation degrades to the survivors.
+//!
+//! Trajectories land in `BENCH_faults.json` (override with
+//! `ASGD_BENCH_FAULTS_OUT`), merged read-modify-write like
+//! `BENCH_hotpath.json`.  `ASGD_BENCH_QUICK=1` shrinks sizes and runs
+//! the crash + restart scenarios only (the CI smoke arm).
+
+use asgd::config::{AggMode, FaultPlan, TrainConfig};
+use asgd::coordinator::run_training;
+use asgd::metrics::RunReport;
+use asgd::util::benchjson;
+use asgd::util::json::{Json, JsonBuilder};
+use std::path::PathBuf;
+
+fn out_path() -> PathBuf {
+    std::env::var_os("ASGD_BENCH_FAULTS_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("BENCH_faults.json"))
+}
+
+/// Convergence tolerance band vs the fault-free run: losing a worker (or
+/// re-executing a restored span) may cost mixing quality, but the final
+/// objective must stay within 50% of the fault-free median — a crash
+/// must never turn convergence into divergence.
+const TOLERANCE_BAND: f64 = 1.5;
+
+fn base_cfg(quick: bool) -> TrainConfig {
+    let mut cfg = TrainConfig::asgd_default(10, 10, 64);
+    cfg.workers = 4;
+    cfg.iters = if quick { 120 } else { 400 };
+    cfg.eps = 0.15;
+    cfg.eval_every = cfg.iters / 4;
+    cfg.eval_samples = 4096;
+    cfg.data.n_samples = if quick { 24_000 } else { 60_000 };
+    cfg.lease_polls = 16;
+    cfg
+}
+
+/// Median-of-3 final objective (plus the last run's report for counter
+/// assertions — counters are monotone facts about structure, so any
+/// round's snapshot serves).
+fn run3(cfg: &TrainConfig) -> (f64, RunReport) {
+    let mut objs = Vec::new();
+    let mut last = None;
+    for round in 0..3u64 {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed.wrapping_add(round * 7919);
+        let r = run_training(&c).expect("scenario run failed");
+        assert!(r.final_objective.is_finite());
+        objs.push(r.final_objective);
+        last = Some(r);
+    }
+    objs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (objs[1], last.unwrap())
+}
+
+fn scenario_json(name: &str, obj: f64, baseline: f64, r: &RunReport) -> Json {
+    JsonBuilder::new()
+        .str("scenario", name)
+        .num("objective_median_of_3", obj)
+        .num("baseline_median_of_3", baseline)
+        .num("ratio", obj / baseline)
+        .num("total_iters", r.total_iters as f64)
+        .num("suspected", r.comm.suspected as f64)
+        .num("false_suspicion", r.comm.false_suspicion as f64)
+        .num("recovered", r.comm.recovered as f64)
+        .num("dead_masked", r.comm.dead_masked as f64)
+        .num("restores", r.comm.restores as f64)
+        .build()
+}
+
+fn assert_band(name: &str, obj: f64, baseline: f64) {
+    assert!(
+        obj <= baseline * TOLERANCE_BAND + 1e-9,
+        "{name}: objective {obj} outside the tolerance band of fault-free {baseline}"
+    );
+}
+
+fn assert_resolution_identity(name: &str, r: &RunReport) {
+    assert!(
+        r.comm.false_suspicion + r.comm.recovered <= r.comm.suspected,
+        "{name}: resolutions outran suspicions ({} + {} > {})",
+        r.comm.false_suspicion,
+        r.comm.recovered,
+        r.comm.suspected
+    );
+}
+
+fn main() {
+    let quick = benchjson::quick_mode();
+    println!("== paper_faults: dead/slow/reborn worker scenario family ==");
+    let cfg = base_cfg(quick);
+    let iters = cfg.iters as u64;
+
+    let (baseline, base_r) = run3(&cfg);
+    println!(
+        "   fault-free      : objective {baseline:.5} ({} iters)",
+        base_r.total_iters
+    );
+    let mut scenarios = Vec::new();
+
+    // ---- crash-at-25% --------------------------------------------------
+    let mut crash = cfg.clone();
+    crash.aggregation = AggMode::TreeMean; // exercise the survivor tree
+    crash.faults = FaultPlan::parse(&format!("kill@2:{}", iters / 4)).unwrap();
+    let (obj, r) = run3(&crash);
+    println!(
+        "   crash-at-25%    : objective {obj:.5} ({:.2}x baseline), suspected {}, masked {}",
+        obj / baseline,
+        r.comm.suspected,
+        r.comm.dead_masked
+    );
+    assert_band("crash-at-25%", obj, baseline);
+    assert_eq!(
+        r.total_iters,
+        3 * iters + iters / 4,
+        "survivors run to completion, the corpse stops at 25%"
+    );
+    assert_resolution_identity("crash-at-25%", &r);
+    scenarios.push(scenario_json("crash_at_25", obj, baseline, &r));
+
+    // ---- rolling restarts ---------------------------------------------
+    // a 200 us/iter straggler guarantees one peer's lease poll spans
+    // every dead window, making the recovered counters structural
+    let mut rolling = cfg.clone();
+    rolling.ckpt_interval = 10;
+    rolling.faults = FaultPlan::parse(&format!(
+        "straggle@1:0:200,restart@2:{}:15,restart@3:{}:15",
+        iters / 4,
+        iters / 2
+    ))
+    .unwrap();
+    let (obj, r) = run3(&rolling);
+    println!(
+        "   rolling-restarts: objective {obj:.5} ({:.2}x baseline), restores {}, \
+         recovered {}, false {}",
+        obj / baseline,
+        r.comm.restores,
+        r.comm.recovered,
+        r.comm.false_suspicion
+    );
+    assert_band("rolling-restarts", obj, baseline);
+    assert_eq!(r.comm.restores, 2, "both ranks restored exactly once");
+    assert!(
+        r.comm.recovered >= 1,
+        "peers must un-suspect a reborn rank via its heartbeat incarnation"
+    );
+    assert_resolution_identity("rolling-restarts", &r);
+    // nobody's final work went missing: every rank completes its 400
+    // (resp. 120) iterations, restored spans add re-executed work
+    assert!(r.total_iters >= 4 * iters);
+    scenarios.push(scenario_json("rolling_restarts", obj, baseline, &r));
+
+    if !quick {
+        // ---- one 10x straggler ------------------------------------------
+        // ~10x the fast ranks' per-iteration cost: the run must neither
+        // wait for it nor diverge, and suspicions of it resolve false
+        let mut straggler = cfg.clone();
+        straggler.faults = FaultPlan::parse("straggle@3:0:300").unwrap();
+        let (obj, r) = run3(&straggler);
+        println!(
+            "   straggler-10x   : objective {obj:.5} ({:.2}x baseline), suspected {}, false {}",
+            obj / baseline,
+            r.comm.suspected,
+            r.comm.false_suspicion
+        );
+        assert_band("straggler-10x", obj, baseline);
+        assert_eq!(r.total_iters, 4 * iters, "the straggler still finishes");
+        assert_resolution_identity("straggler-10x", &r);
+        scenarios.push(scenario_json("straggler_10x", obj, baseline, &r));
+
+        // ---- kill-leader ------------------------------------------------
+        let mut leader = cfg.clone();
+        leader.faults = FaultPlan::parse(&format!("kill@0:{}", iters / 3)).unwrap();
+        let (obj, r) = run3(&leader);
+        println!(
+            "   kill-leader     : objective {obj:.5} ({:.2}x baseline)",
+            obj / baseline
+        );
+        assert_band("kill-leader", obj, baseline);
+        assert_eq!(r.total_iters, 3 * iters + iters / 3);
+        assert!(
+            !r.trace.is_empty(),
+            "the leader's pre-death trace must survive"
+        );
+        assert_resolution_identity("kill-leader", &r);
+        scenarios.push(scenario_json("kill_leader", obj, baseline, &r));
+    }
+
+    let section = JsonBuilder::new()
+        .num("baseline_objective_median_of_3", baseline)
+        .num("tolerance_band", TOLERANCE_BAND)
+        .num("quick", if quick { 1.0 } else { 0.0 })
+        .val("scenarios", Json::Arr(scenarios))
+        .build();
+    let path = out_path();
+    benchjson::write_section_at(&path, "paper_faults", section).expect("bench json");
+    println!("   [paper_faults] results merged into {}", path.display());
+    println!("paper_faults OK");
+}

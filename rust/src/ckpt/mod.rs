@@ -1,0 +1,305 @@
+//! Worker checkpoint/restore — the state half of the fault-tolerance
+//! subsystem (the liveness half lives in [`crate::gaspi::liveness`]).
+//!
+//! ## What a checkpoint is
+//!
+//! Everything a worker needs to resume *bit-identically* on its local
+//! trajectory, and nothing more:
+//!
+//! * the state vector `w`,
+//! * the worker RNG ([`crate::util::rng::Xoshiro256pp`] raw state — the
+//!   recipient/slot draws continue exactly),
+//! * the shard draw position `(epochs, cursor)` — the row permutation
+//!   itself is a pure function of the partition seed and the reshuffle
+//!   count, so the supervisor re-partitions and
+//!   [`crate::data::partition::Shard::fast_forward`]s instead of the
+//!   checkpoint carrying rows,
+//! * the comm epoch `iter` (the next iteration to execute).
+//!
+//! External-buffer contents, seqlock reader versions, dirty bitmaps and
+//! the adaptive controller are deliberately *not* checkpointed: they are
+//! reconstructible conservative state (a restored worker re-polls
+//! everything and re-sends everything), and the substrate's semantics
+//! already tolerate replayed messages — restore is at-least-once by
+//! design, exactly like a delayed RDMA put.
+//!
+//! ## Binary format (version 1)
+//!
+//! Little-endian, fixed layout:
+//!
+//! ```text
+//! magic    u32  = 0x504B_4341  (the bytes "ACKP" in LE order)
+//! version  u32  = 1
+//! rank     u32
+//! iter     u64    next iteration to execute
+//! rng      4xu64  xoshiro256++ raw state
+//! epochs   u64    shard reshuffle count
+//! cursor   u64    shard row cursor
+//! len      u64    state vector length in f32 words
+//! state    len x u32  (f32 bit patterns)
+//! checksum u64    FNV-1a 64 over every preceding byte
+//! ```
+//!
+//! Decoding verifies magic, version, length and checksum and refuses
+//! loudly on any mismatch — a truncated or bit-flipped checkpoint must
+//! never be restored into a live segment.
+
+use anyhow::{bail, Result};
+use std::sync::Mutex;
+
+/// `"ACKP"` in LE byte order.
+pub const MAGIC: u32 = 0x504B_4341;
+/// Current (and only) format version.
+pub const VERSION: u32 = 1;
+
+/// A worker's resumable snapshot.  See the module docs for exactly what
+/// is (and is not) captured.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub rank: u32,
+    /// The next iteration to execute (the checkpoint is taken at the top
+    /// of iteration `iter`, before its batch is drawn).
+    pub iter: u64,
+    /// Raw xoshiro256++ state of the worker RNG.
+    pub rng: [u64; 4],
+    /// Shard reshuffle count at capture time.
+    pub shard_epochs: u64,
+    /// Shard row cursor at capture time.
+    pub shard_cursor: u64,
+    /// The state vector.
+    pub state: Vec<f32>,
+}
+
+/// FNV-1a 64 — tiny, dependency-free, and plenty for catching the
+/// truncation/bit-rot class of corruption a checkpoint can suffer.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!(
+                "checkpoint truncated: wanted {} bytes at offset {}, have {}",
+                n,
+                self.pos,
+                self.bytes.len()
+            );
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+impl Checkpoint {
+    /// Serialize to the version-1 binary format (checksum appended).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 * self.state.len() + 96);
+        put_u32(&mut out, MAGIC);
+        put_u32(&mut out, VERSION);
+        put_u32(&mut out, self.rank);
+        put_u64(&mut out, self.iter);
+        for s in self.rng {
+            put_u64(&mut out, s);
+        }
+        put_u64(&mut out, self.shard_epochs);
+        put_u64(&mut out, self.shard_cursor);
+        put_u64(&mut out, self.state.len() as u64);
+        for &w in &self.state {
+            put_u32(&mut out, w.to_bits());
+        }
+        let sum = fnv1a(&out);
+        put_u64(&mut out, sum);
+        out
+    }
+
+    /// Parse and verify a version-1 checkpoint.  Errors (never panics)
+    /// on bad magic, unknown version, truncation, trailing garbage, or a
+    /// checksum mismatch.
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 8 {
+            bail!("checkpoint too short ({} bytes)", bytes.len());
+        }
+        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        let computed = fnv1a(body);
+        if stored != computed {
+            bail!("checkpoint checksum mismatch ({stored:#018x} != {computed:#018x})");
+        }
+        let mut r = Reader { bytes: body, pos: 0 };
+        let magic = r.u32()?;
+        if magic != MAGIC {
+            bail!("not a checkpoint (magic {magic:#010x})");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version} (expected {VERSION})");
+        }
+        let rank = r.u32()?;
+        let iter = r.u64()?;
+        let mut rng = [0u64; 4];
+        for s in rng.iter_mut() {
+            *s = r.u64()?;
+        }
+        let shard_epochs = r.u64()?;
+        let shard_cursor = r.u64()?;
+        let len = r.u64()? as usize;
+        let mut state = Vec::with_capacity(len);
+        for _ in 0..len {
+            state.push(f32::from_bits(r.u32()?));
+        }
+        if r.pos != body.len() {
+            bail!(
+                "checkpoint has {} trailing bytes after the state vector",
+                body.len() - r.pos
+            );
+        }
+        Ok(Self {
+            rank,
+            iter,
+            rng,
+            shard_epochs,
+            shard_cursor,
+            state,
+        })
+    }
+}
+
+/// The supervisor-side checkpoint store: one slot per rank, holding the
+/// latest *encoded* checkpoint.  Workers overwrite their own slot on
+/// each checkpoint interval; the supervisor reads a slot only after the
+/// owning worker is dead, so the mutex is never contended on the hot
+/// path beyond its own rank's store.
+///
+/// Storing encoded bytes (not the struct) is deliberate: every restore
+/// exercises the full codec including the checksum, so the format can
+/// never rot unexercised.
+pub struct CkptStore {
+    slots: Vec<Mutex<Option<Vec<u8>>>>,
+}
+
+impl CkptStore {
+    pub fn new(ranks: usize) -> Self {
+        Self {
+            slots: (0..ranks).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// Publish `rank`'s latest checkpoint (overwrites the previous one).
+    pub fn store(&self, rank: usize, encoded: Vec<u8>) {
+        *self.slots[rank].lock().expect("ckpt slot poisoned") = Some(encoded);
+    }
+
+    /// The latest encoded checkpoint for `rank`, if any was ever taken.
+    pub fn load(&self, rank: usize) -> Option<Vec<u8>> {
+        self.slots[rank].lock().expect("ckpt slot poisoned").clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            rank: 3,
+            iter: 1234,
+            rng: [1, u64::MAX, 0x0123_4567_89AB_CDEF, 42],
+            shard_epochs: 7,
+            shard_cursor: 481,
+            state: vec![0.0, -0.0, 1.5, f32::MIN_POSITIVE, -3.25e7],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let c = sample();
+        let bytes = c.encode();
+        let d = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(c, d);
+        // -0.0 and every other payload survives at the bit level
+        for (a, b) in c.state.iter().zip(&d.state) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_state_roundtrips() {
+        let mut c = sample();
+        c.state.clear();
+        assert_eq!(Checkpoint::decode(&c.encode()).unwrap(), c);
+    }
+
+    #[test]
+    fn corruption_is_refused() {
+        let bytes = sample().encode();
+        // flip one payload bit -> checksum mismatch
+        let mut bad = bytes.clone();
+        bad[40] ^= 0x10;
+        assert!(Checkpoint::decode(&bad).unwrap_err().to_string().contains("checksum"));
+        // truncation
+        assert!(Checkpoint::decode(&bytes[..bytes.len() - 9]).is_err());
+        assert!(Checkpoint::decode(&[]).is_err());
+        // wrong magic (re-checksummed so the magic check is what fires)
+        let mut wrong = bytes.clone();
+        wrong[0] ^= 0xFF;
+        let body_len = wrong.len() - 8;
+        let sum = super::fnv1a(&wrong[..body_len]);
+        wrong[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(Checkpoint::decode(&wrong).unwrap_err().to_string().contains("magic"));
+        // future version (re-checksummed likewise)
+        let mut vnext = bytes.clone();
+        vnext[4] = 2;
+        let sum = super::fnv1a(&vnext[..body_len]);
+        vnext[body_len..].copy_from_slice(&sum.to_le_bytes());
+        assert!(Checkpoint::decode(&vnext).unwrap_err().to_string().contains("version"));
+        // trailing garbage inside the checksummed body
+        let mut long = bytes.clone();
+        long.truncate(body_len);
+        long.push(0xAB);
+        let sum = super::fnv1a(&long);
+        long.extend_from_slice(&sum.to_le_bytes());
+        assert!(Checkpoint::decode(&long).unwrap_err().to_string().contains("trailing"));
+    }
+
+    #[test]
+    fn store_keeps_latest_per_rank() {
+        let store = CkptStore::new(2);
+        assert!(store.load(0).is_none());
+        let mut c = sample();
+        c.rank = 0;
+        store.store(0, c.encode());
+        c.iter = 9999;
+        store.store(0, c.encode());
+        let latest = Checkpoint::decode(&store.load(0).unwrap()).unwrap();
+        assert_eq!(latest.iter, 9999);
+        assert!(store.load(1).is_none());
+    }
+}

@@ -146,6 +146,16 @@ pub fn train_config(args: &Args) -> Result<crate::config::TrainConfig> {
         // no clamping: validate() rejects 0 loudly
         cfg.adapt_interval = v;
     }
+    if let Some(v) = args.get_usize("lease-polls")? {
+        // no clamping: validate() rejects 0 loudly
+        cfg.lease_polls = v;
+    }
+    if let Some(v) = args.get_usize("ckpt-interval")? {
+        cfg.ckpt_interval = v;
+    }
+    if let Some(v) = args.get("faults") {
+        cfg.faults = FaultPlan::parse(v)?;
+    }
     if let Some(v) = args.get("gate") {
         cfg.gate = GateMode::parse(v)?;
     }
@@ -228,6 +238,10 @@ TRAIN OPTIONS (defaults in parentheses):
   --min-chunks N         adaptive: chunk-count floor            (1)
   --max-chunks N         adaptive: chunk-count ceiling          (16)
   --adapt-interval S     adaptive: send events per re-derive    (16)
+  --lease-polls N        liveness: polls before suspecting a peer (128)
+  --ckpt-interval N      checkpoint every N iterations, 0 = off (0)
+  --faults PLAN          fault injection, e.g. \"kill@3:50, restart@1:30:50,
+                         pause@0:20:100, straggle@2:10:2000\" (KIND@RANK:ITER[:PARAM])
   --gate G               full | per-center | off                (full)
   --aggregation A        first | tree-mean                      (first)
   --backend B            native | xla                           (native)
@@ -301,6 +315,23 @@ mod tests {
         assert!(train_config(&parse("train --comm full --chunks 8")).is_err());
         // send_interval 0 is rejected by validation, not clamped
         assert!(train_config(&parse("train --send-interval 0")).is_err());
+    }
+
+    #[test]
+    fn fault_flags_roundtrip() {
+        let cfg = train_config(&parse(
+            "train --faults kill@3:50,straggle@2:10:500 --lease-polls 24 --ckpt-interval 10",
+        ))
+        .unwrap();
+        assert_eq!(cfg.lease_polls, 24);
+        assert_eq!(cfg.ckpt_interval, 10);
+        assert_eq!(cfg.faults.events.len(), 2);
+        assert_eq!(cfg.faults.to_dsl(), "kill@3:50,straggle@2:10:500");
+        // refuse-loudly: zero lease, bad plan, out-of-range rank
+        assert!(train_config(&parse("train --lease-polls 0")).is_err());
+        assert!(train_config(&parse("train --faults boom@1:2")).is_err());
+        assert!(train_config(&parse("train --workers 4 --faults kill@4:10")).is_err());
+        assert!(train_config(&parse("train --faults restart@1:10")).is_err()); // no ckpt
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Deterministic fault-injection plans for the elasticity subsystem.
+//!
+//! A [`FaultPlan`] is an ordered set of events, each addressed to a
+//! `(rank, iteration)` pair of the *faulted rank's own* iteration
+//! counter, so injection is deterministic in structure regardless of
+//! thread interleaving (the wall-clock consequences — how long a pause
+//! keeps a lease expired — are of course timing-dependent; that is the
+//! behaviour under test).
+//!
+//! Plans travel as a compact DSL string so they thread through the TOML
+//! subset parser and the CLI without new syntax:
+//!
+//! ```text
+//! faults = "kill@3:50, restart@1:30:50, pause@0:20:100, straggle@2:10:2000"
+//!           │          │                │               └ 2000 us/iter slowdown
+//!           │          │                └ 100 ms sleep at iteration 20
+//!           │          └ die at iteration 30, restored after 50 ms
+//!           └ rank 3 crashes for good before executing iteration 50
+//! ```
+//!
+//! Event kinds:
+//!
+//! * `kill@RANK:ITER` — the worker thread exits before iteration `ITER`
+//!   and is never restored (a permanently dead rank).
+//! * `restart@RANK:ITER[:DELAY_MS]` — same crash, but the supervisor
+//!   restores the rank from its last checkpoint after `DELAY_MS`
+//!   (default 0) and re-spawns it into the same segment under a new
+//!   heartbeat incarnation.  Requires `ckpt_interval >= 1`.
+//! * `pause@RANK:ITER:MS` — the worker sleeps `MS` milliseconds at
+//!   iteration `ITER` (a pause/resume pair collapsed into one event:
+//!   resume is implicit when the sleep ends).  Its heartbeat stalls for
+//!   the duration, so peers may suspect it and must then un-suspect it
+//!   (`false_suspicion`).
+//! * `straggle@RANK:ITER:DELAY_US` — from iteration `ITER` on, the
+//!   worker sleeps ~`DELAY_US` microseconds per iteration, jittered
+//!   ±50% by a generator seeded from the run seed (the paper-style
+//!   "seeded straggler": reproducible in distribution, not in exact
+//!   nanoseconds).
+//!
+//! [`crate::config::TrainConfig::validate`] refuses out-of-range ranks,
+//! `restart` without checkpointing, plans that kill every rank, and
+//! fault injection under the blocking BATCH baseline — the same
+//! refuse-loudly policy as `send_interval == 0`.
+
+use anyhow::{bail, Context, Result};
+
+/// What happens when a fault event fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Crash, never restored.
+    Kill,
+    /// Crash; the supervisor restores from the last checkpoint after
+    /// `after_ms` (simulated detection + restore latency — long enough
+    /// and peers will suspect the rank in between, which is the point).
+    Restart { after_ms: u64 },
+    /// Sleep `ms` milliseconds (pause + implicit resume).
+    Pause { ms: u64 },
+    /// From this iteration on, sleep ~`delay_us` per iteration (seeded
+    /// ±50% jitter).
+    Straggle { delay_us: u64 },
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Kill => "kill",
+            FaultKind::Restart { .. } => "restart",
+            FaultKind::Pause { .. } => "pause",
+            FaultKind::Straggle { .. } => "straggle",
+        }
+    }
+
+    /// Does this event end the worker thread (kill or restart)?
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, FaultKind::Kill | FaultKind::Restart { .. })
+    }
+}
+
+/// One scheduled fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub rank: usize,
+    /// The faulted rank's own iteration counter: the event fires at the
+    /// top of this iteration, before its mini-batch is drawn.
+    pub at_iter: u64,
+    pub kind: FaultKind,
+}
+
+/// An ordered fault-injection plan (empty = fault-free run).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the DSL (see module docs).  Whitespace around commas is
+    /// ignored; an empty string is the empty plan.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut events = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            events.push(Self::parse_event(part).with_context(|| format!("fault {part:?}"))?);
+        }
+        Ok(Self { events })
+    }
+
+    fn parse_event(part: &str) -> Result<FaultEvent> {
+        let (kind_s, addr) = part
+            .split_once('@')
+            .context("expected KIND@RANK:ITER[:PARAM]")?;
+        let mut fields = addr.split(':');
+        let rank: usize = fields
+            .next()
+            .context("missing rank")?
+            .parse()
+            .context("rank must be an integer")?;
+        let at_iter: u64 = fields
+            .next()
+            .context("missing iteration (KIND@RANK:ITER)")?
+            .parse()
+            .context("iteration must be an integer")?;
+        let param = fields.next();
+        if fields.next().is_some() {
+            bail!("too many ':' fields");
+        }
+        let parse_param = |what: &str| -> Result<u64> {
+            param
+                .with_context(|| format!("{} requires a parameter ({what})", kind_s))?
+                .parse()
+                .with_context(|| format!("{what} must be an integer"))
+        };
+        let kind = match kind_s {
+            "kill" => {
+                if param.is_some() {
+                    bail!("kill takes no parameter");
+                }
+                FaultKind::Kill
+            }
+            "restart" => FaultKind::Restart {
+                after_ms: match param {
+                    Some(p) => p.parse().context("restore delay (ms) must be an integer")?,
+                    None => 0,
+                },
+            },
+            "pause" => FaultKind::Pause {
+                ms: parse_param("pause duration (ms)")?,
+            },
+            "straggle" => FaultKind::Straggle {
+                delay_us: parse_param("per-iteration delay (us)")?,
+            },
+            other => bail!("unknown fault kind {other:?} (kill|restart|pause|straggle)"),
+        };
+        Ok(FaultEvent { rank, at_iter, kind })
+    }
+
+    /// Canonical DSL round-trip (logs, `describe()`, JSON provenance).
+    pub fn to_dsl(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| {
+                let FaultEvent { rank, at_iter, kind } = e;
+                match kind {
+                    FaultKind::Kill => format!("kill@{rank}:{at_iter}"),
+                    FaultKind::Restart { after_ms } => {
+                        format!("restart@{rank}:{at_iter}:{after_ms}")
+                    }
+                    FaultKind::Pause { ms } => format!("pause@{rank}:{at_iter}:{ms}"),
+                    FaultKind::Straggle { delay_us } => {
+                        format!("straggle@{rank}:{at_iter}:{delay_us}")
+                    }
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// This rank's events, sorted by firing iteration (ties keep plan
+    /// order).  The worker consumes them front to back.
+    pub fn for_rank(&self, rank: usize) -> Vec<FaultEvent> {
+        let mut evs: Vec<FaultEvent> = self
+            .events
+            .iter()
+            .copied()
+            .filter(|e| e.rank == rank)
+            .collect();
+        evs.sort_by_key(|e| e.at_iter);
+        evs
+    }
+
+    /// Ranks with a `kill` event (dead for good, never restored).
+    pub fn killed_ranks(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .events
+            .iter()
+            .filter(|e| e.kind == FaultKind::Kill)
+            .map(|e| e.rank)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Does any event need checkpoint/restore support?
+    pub fn needs_checkpoints(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::Restart { .. }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dsl_roundtrips() {
+        let s = "kill@3:50,restart@1:30:50,pause@0:20:100,straggle@2:10:2000";
+        let plan = FaultPlan::parse(s).unwrap();
+        assert_eq!(plan.events.len(), 4);
+        assert_eq!(
+            plan.events[0],
+            FaultEvent { rank: 3, at_iter: 50, kind: FaultKind::Kill }
+        );
+        assert_eq!(
+            plan.events[1],
+            FaultEvent { rank: 1, at_iter: 30, kind: FaultKind::Restart { after_ms: 50 } }
+        );
+        assert_eq!(
+            plan.events[2],
+            FaultEvent { rank: 0, at_iter: 20, kind: FaultKind::Pause { ms: 100 } }
+        );
+        assert_eq!(
+            plan.events[3],
+            FaultEvent { rank: 2, at_iter: 10, kind: FaultKind::Straggle { delay_us: 2000 } }
+        );
+        assert_eq!(plan.to_dsl(), s);
+        assert_eq!(FaultPlan::parse(&plan.to_dsl()).unwrap(), plan);
+        // whitespace + default restart delay
+        let p = FaultPlan::parse(" restart@1:30 , kill@0:5 ").unwrap();
+        assert_eq!(p.events[0].kind, FaultKind::Restart { after_ms: 0 });
+        assert_eq!(p.events[1].kind, FaultKind::Kill);
+        // empty plan
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_dsl_is_refused() {
+        for bad in [
+            "boom@1:5",          // unknown kind
+            "kill@1",            // missing iter
+            "kill@1:2:3",        // kill takes no param
+            "pause@1:2",         // pause needs ms
+            "straggle@1:2",      // straggle needs us
+            "kill@x:5",          // non-integer rank
+            "kill@1:y",          // non-integer iter
+            "restart@1:2:z",     // non-integer delay
+            "kill@1:2:3:4",      // too many fields
+            "kill",              // no address
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must be refused");
+        }
+    }
+
+    #[test]
+    fn per_rank_views_sort_and_filter() {
+        let plan = FaultPlan::parse("straggle@1:40:10,kill@2:5,pause@1:10:3").unwrap();
+        let r1 = plan.for_rank(1);
+        assert_eq!(r1.len(), 2);
+        assert_eq!(r1[0].at_iter, 10);
+        assert_eq!(r1[1].at_iter, 40);
+        assert!(plan.for_rank(0).is_empty());
+        assert_eq!(plan.killed_ranks(), vec![2]);
+        assert!(!plan.needs_checkpoints());
+        assert!(FaultPlan::parse("restart@0:1").unwrap().needs_checkpoints());
+    }
+}

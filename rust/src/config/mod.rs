@@ -1,7 +1,10 @@
 //! Experiment configuration: typed configs, a TOML-subset loader and the
 //! validation logic shared by the CLI, the harness and the examples.
 
+pub mod faults;
 pub mod toml;
+
+pub use faults::{FaultEvent, FaultKind, FaultPlan};
 
 use crate::util::json::JsonBuilder;
 use anyhow::{bail, Context, Result};
@@ -425,6 +428,18 @@ pub struct TrainConfig {
     pub comm: CommMode,
     /// Adaptive mode: send events between chunk-count re-derivations.
     pub adapt_interval: usize,
+    /// Liveness lease: a peer whose heartbeat has not advanced within
+    /// this many of *my* receive polls is locally suspected and its
+    /// buffers are masked out of the merge ([`crate::gaspi::liveness`]).
+    /// Must be >= 1 (0 would suspect everyone on the first poll).
+    pub lease_polls: usize,
+    /// Checkpoint every this many iterations (0 = checkpointing off).
+    /// Required >= 1 whenever the fault plan contains `restart` events.
+    pub ckpt_interval: usize,
+    /// Deterministic fault-injection plan (empty = fault-free run).
+    /// A non-empty plan routes the run through the elastic supervisor
+    /// ([`crate::coordinator::elastic`]).
+    pub faults: FaultPlan,
     pub gate: GateMode,
     pub aggregation: AggMode,
     pub race: RacePolicy,
@@ -459,6 +474,9 @@ impl TrainConfig {
             n_buffers: 4,
             comm: CommMode::Full,
             adapt_interval: 16,
+            lease_polls: 128,
+            ckpt_interval: 0,
+            faults: FaultPlan::default(),
             gate: GateMode::FullState,
             aggregation: AggMode::ReturnFirst,
             race: RacePolicy::DiscardTorn,
@@ -540,6 +558,64 @@ impl TrainConfig {
             // every mode so a typo'd knob never lies dormant in a config
             bail!("adapt_interval must be >= 1");
         }
+        if self.lease_polls == 0 {
+            // a zero lease would suspect every peer on the first poll and
+            // mask all communication — refuse loudly, like send_interval
+            bail!("lease_polls must be >= 1 (0 suspects every peer immediately)");
+        }
+        if self.method == Method::Batch && self.ckpt_interval > 0 {
+            // the BATCH driver has no checkpoint path; a knob that would
+            // silently do nothing is refused, not left dormant
+            bail!("ckpt_interval is not supported for method=batch (no checkpoint path)");
+        }
+        if !self.faults.is_empty() {
+            if self.method == Method::Batch {
+                // alg. 1 blocks on a tree allreduce every iteration: a
+                // dead rank would genuinely hang the reduce, so fault
+                // injection is only meaningful on the non-blocking paths
+                bail!(
+                    "fault injection is not supported for method=batch \
+                     (the blocking allreduce would hang on a dead rank)"
+                );
+            }
+            for e in &self.faults.events {
+                if e.rank >= self.workers {
+                    bail!(
+                        "fault {}@{}:{} addresses rank {} outside 0..{} workers",
+                        e.kind.name(),
+                        e.rank,
+                        e.at_iter,
+                        e.rank,
+                        self.workers
+                    );
+                }
+                if e.at_iter >= self.iters as u64 {
+                    // an event past the end of the run can never fire — a
+                    // silently inert fault plan is refused like any other
+                    // dormant knob
+                    bail!(
+                        "fault {}@{}:{} never fires (iterations run 0..{})",
+                        e.kind.name(),
+                        e.rank,
+                        e.at_iter,
+                        self.iters
+                    );
+                }
+            }
+            if self.faults.needs_checkpoints() && self.ckpt_interval == 0 {
+                bail!(
+                    "fault plan contains restart events but ckpt_interval = 0 \
+                     (nothing to restore from)"
+                );
+            }
+            if self.faults.killed_ranks().len() >= self.workers {
+                // survivor-only aggregation needs at least one survivor
+                bail!(
+                    "fault plan kills all {} workers — no survivor to aggregate",
+                    self.workers
+                );
+            }
+        }
         let blocky = matches!(
             self.comm,
             CommMode::Chunked { .. } | CommMode::Adaptive { .. }
@@ -598,8 +674,13 @@ impl TrainConfig {
                 max_chunks,
             } => format!(" comm=adaptive:{min_chunks}..{max_chunks}"),
         };
+        let faults = if self.faults.is_empty() {
+            String::new()
+        } else {
+            format!(" faults=[{}]", self.faults.to_dsl())
+        };
         format!(
-            "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}{}",
+            "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}{}{}",
             self.method.name(),
             self.model.name(),
             self.workers,
@@ -609,7 +690,8 @@ impl TrainConfig {
             self.gate.name(),
             self.aggregation.name(),
             self.backend.name(),
-            comm
+            comm,
+            faults
         )
     }
 
@@ -628,6 +710,9 @@ impl TrainConfig {
             .num("chunks", self.comm.chunks() as f64)
             .num("min_chunks", self.comm.chunk_span().0 as f64)
             .num("max_chunks", self.comm.chunk_span().1 as f64)
+            .num("lease_polls", self.lease_polls as f64)
+            .num("ckpt_interval", self.ckpt_interval as f64)
+            .str("faults", &self.faults.to_dsl())
             .str("gate", self.gate.name())
             .str("aggregation", self.aggregation.name())
             .str("backend", self.backend.name())
@@ -704,6 +789,12 @@ impl TrainConfig {
             cfg.comm = comm;
         }
         cfg.adapt_interval = get_usize("adapt_interval", cfg.adapt_interval)?;
+        // no clamping: validate() rejects lease_polls == 0 loudly
+        cfg.lease_polls = get_usize("lease_polls", cfg.lease_polls)?;
+        cfg.ckpt_interval = get_usize("ckpt_interval", cfg.ckpt_interval)?;
+        if let Some(v) = t.get("faults") {
+            cfg.faults = FaultPlan::parse(v.as_str().context("faults must be a DSL string")?)?;
+        }
         cfg.eval_every = get_usize("eval_every", cfg.eval_every)?;
         cfg.eval_samples = get_usize("eval_samples", cfg.eval_samples)?;
         if let Some(v) = t.get("eps") {
@@ -853,6 +944,99 @@ mod tests {
         let mut c = base();
         c.comm = CommMode::Adaptive { min_chunks: 1, max_chunks: 1 };
         c.validate().unwrap(); // ...but degenerate adaptive itself is fine
+    }
+
+    /// Same refuse-loudly policy as `send_interval == 0`: a zero lease,
+    /// an out-of-range fault rank, a restart with nothing to restore
+    /// from, an all-ranks kill, or faults under the blocking BATCH
+    /// baseline are config errors, not runtime surprises.
+    #[test]
+    fn validation_bounds_fault_tolerance_knobs() {
+        let base = || TrainConfig::asgd_default(10, 10, 500);
+        let mut c = base();
+        c.lease_polls = 0;
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("lease_polls"), "{err:#}");
+        // ...including via TOML
+        assert!(TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\nlease_polls = 0\n[data]\nn_samples = 100000\n"
+        )
+        .is_err());
+
+        let mut c = base(); // workers = 8
+        c.faults = FaultPlan::parse("kill@8:10").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("outside"), "{err:#}");
+        let mut c = base();
+        c.faults = FaultPlan::parse("kill@7:10").unwrap();
+        c.validate().unwrap(); // rank 7 of 8 is in range
+
+        // an event past the end of the run would silently never fire
+        let mut c = base(); // iters = 200
+        c.faults = FaultPlan::parse("kill@1:200").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("never fires"), "{err:#}");
+        let mut c = base();
+        c.faults = FaultPlan::parse("kill@1:199").unwrap();
+        c.validate().unwrap(); // last iteration is fair game
+
+        // the BATCH driver has no checkpoint path: the knob is refused,
+        // not left silently dormant
+        let mut c = base();
+        c.method = Method::Batch;
+        c.ckpt_interval = 10;
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("ckpt_interval"), "{err:#}");
+
+        // restart without checkpoints has nothing to restore from
+        let mut c = base();
+        c.faults = FaultPlan::parse("restart@1:10:50").unwrap();
+        assert!(c.validate().is_err());
+        c.ckpt_interval = 5;
+        c.validate().unwrap();
+
+        // killing every rank leaves no survivor to aggregate
+        let mut c = base();
+        c.workers = 2;
+        c.faults = FaultPlan::parse("kill@0:10,kill@1:10").unwrap();
+        assert!(c.validate().is_err());
+
+        // BATCH blocks on its allreduce: faults are refused there
+        let mut c = base();
+        c.method = Method::Batch;
+        c.faults = FaultPlan::parse("kill@1:10").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("batch"), "{err:#}");
+    }
+
+    #[test]
+    fn fault_knobs_roundtrip_through_toml() {
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\nlease_polls = 24\nckpt_interval = 10\n\
+             faults = \"restart@1:30:50, straggle@2:10:500\"\n\
+             [data]\nn_samples = 100000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.lease_polls, 24);
+        assert_eq!(cfg.ckpt_interval, 10);
+        assert_eq!(cfg.faults.events.len(), 2);
+        assert_eq!(
+            cfg.faults.events[0].kind,
+            FaultKind::Restart { after_ms: 50 }
+        );
+        assert!(cfg.describe().contains("faults=[restart@1:30:50"));
+        let j = cfg.to_json();
+        assert_eq!(j.get("lease_polls").unwrap().as_f64(), Some(24.0));
+        assert_eq!(j.get("ckpt_interval").unwrap().as_f64(), Some(10.0));
+        assert_eq!(
+            j.get("faults").unwrap().as_str(),
+            Some("restart@1:30:50,straggle@2:10:500")
+        );
+        // a garbled plan is a parse error, not a silent empty plan
+        assert!(TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\nfaults = \"boom@1:2\"\n[data]\nn_samples = 100000\n"
+        )
+        .is_err());
     }
 
     /// Regression (PR 1): `send_interval = 0` reached the worker loop and

@@ -8,6 +8,7 @@
 
 use crate::config::AggMode;
 use crate::net::allreduce::TreeReduce;
+use anyhow::{bail, Result};
 
 /// Aggregate per-worker states (one borrowed `[state_len]` slice per
 /// worker).  Returns the final model state.
@@ -49,6 +50,53 @@ pub fn tree_mean(states: &[&[f32]]) -> Vec<f32> {
     result
 }
 
+/// Survivor-only aggregation (fault-tolerance subsystem): `states[r]` is
+/// `None` for a rank that died and was never restored.  The reduction
+/// fabric is built over *exactly* the live subset — dead ranks are not
+/// zero-filled, not waited on, and not in the tree at all — with weights
+/// renormalized over the survivors ([`TreeReduce::allreduce_weighted_mean`]).
+/// `ReturnFirst` degrades to the lowest-rank survivor (alg. 5 line 10
+/// "any node's local state is the global result", so the first *live*
+/// node qualifies).  Errors when every rank is dead.
+pub fn survivor_aggregate(
+    mode: AggMode,
+    states: &[Option<&[f32]>],
+    weights: &[f32],
+) -> Result<Vec<f32>> {
+    debug_assert_eq!(states.len(), weights.len());
+    let live: Vec<(usize, &[f32])> = states
+        .iter()
+        .enumerate()
+        .filter_map(|(r, s)| s.map(|s| (r, s)))
+        .collect();
+    if live.is_empty() {
+        bail!("no surviving worker to aggregate (all ranks dead)");
+    }
+    Ok(match mode {
+        AggMode::ReturnFirst => live[0].1.to_vec(),
+        AggMode::TreeMean => {
+            if live.len() == 1 {
+                return Ok(live[0].1.to_vec());
+            }
+            let tree = TreeReduce::new(live.len());
+            let mut handles = Vec::with_capacity(live.len());
+            for (tree_rank, (world_rank, s)) in live.iter().enumerate() {
+                let tree = tree.clone();
+                let local = s.to_vec();
+                let weight = weights[*world_rank];
+                handles.push(std::thread::spawn(move || {
+                    tree.allreduce_weighted_mean(tree_rank, local, weight)
+                }));
+            }
+            let mut result = Vec::new();
+            for h in handles {
+                result = h.join().expect("aggregation thread panicked");
+            }
+            result
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,5 +118,36 @@ mod tests {
     fn single_worker_short_circuits() {
         let states: [&[f32]; 1] = [&[5.0]];
         assert_eq!(tree_mean(&states), vec![5.0]);
+    }
+
+    #[test]
+    fn survivor_aggregate_skips_the_dead() {
+        let a: &[f32] = &[1.0, 2.0];
+        let c: &[f32] = &[5.0, 6.0];
+        let states = [None, Some(a), None, Some(c)]; // ranks 0 and 2 dead
+        let weights = [1.0f32; 4];
+        // tree mean over exactly the two survivors
+        let m = survivor_aggregate(AggMode::TreeMean, &states, &weights).unwrap();
+        assert_eq!(m, vec![3.0, 4.0]);
+        // ReturnFirst degrades to the lowest-rank survivor (rank 1)
+        let f = survivor_aggregate(AggMode::ReturnFirst, &states, &weights).unwrap();
+        assert_eq!(f, vec![1.0, 2.0]);
+        // a lone survivor short-circuits
+        let lone = [None, None, Some(c)];
+        let m = survivor_aggregate(AggMode::TreeMean, &lone, &[1.0; 3]).unwrap();
+        assert_eq!(m, vec![5.0, 6.0]);
+        // all dead is an error, not a hang or a zero state
+        let none: [Option<&[f32]>; 2] = [None, None];
+        assert!(survivor_aggregate(AggMode::TreeMean, &none, &[1.0; 2]).is_err());
+    }
+
+    #[test]
+    fn survivor_weights_renormalize_over_the_live_subset() {
+        let a: &[f32] = &[0.0];
+        let b: &[f32] = &[30.0];
+        let states = [Some(a), None, Some(b)];
+        // dead rank 1's weight is irrelevant; live weights 1:2 -> 20.0
+        let m = survivor_aggregate(AggMode::TreeMean, &states, &[1.0, 99.0, 2.0]).unwrap();
+        assert!((m[0] - 20.0).abs() < 1e-5, "{m:?}");
     }
 }

@@ -10,6 +10,7 @@
 use crate::config::TrainConfig;
 use crate::data::partition::Shard;
 use crate::data::Dataset;
+use crate::kernels::simd;
 use crate::metrics::{RunReport, TracePoint};
 use crate::models::Model;
 use crate::net::allreduce::TreeReduce;
@@ -56,20 +57,24 @@ pub fn run_batch(
                     let x = shard.rows(processed, count);
                     let labels = shard.labels.as_ref().map(|l| &l[processed..processed + count]);
                     model.grad(x, labels, &w, &mut chunk_grad);
-                    // weight by chunk size (model.grad returns the mean)
+                    // weight by chunk size (model.grad returns the mean);
+                    // dispatched through the SIMD layer like every other
+                    // per-state inner loop
                     let scale = count as f32 / shard.n as f32;
-                    for (g, c) in grad.iter_mut().zip(&chunk_grad) {
-                        *g += scale * c;
-                    }
+                    simd::axpy(&mut grad, scale, &chunk_grad);
                     processed += count;
                 }
                 global_samples.fetch_add(shard.n as u64, Ordering::Relaxed);
 
                 // ---- reduce: tree allreduce of the global mean --------
-                let reduced = tree.allreduce_mean(rank, grad.clone());
+                // the fabric consumes the vector, so hand it over and
+                // take the reduced one back as next iteration's buffer
+                // (the old path cloned state_len floats every iteration)
+                let reduced = tree.allreduce_mean(rank, std::mem::take(&mut grad));
 
                 // ---- update (alg. 1 line 3) ---------------------------
                 sgd_apply(&mut w, &reduced, cfg.eps);
+                grad = reduced;
 
                 if rank == 0 && (t % cfg.eval_every.max(1) == 0 || t + 1 == cfg.iters) {
                     let objective = model.eval(&data, &w, cfg.eval_samples);

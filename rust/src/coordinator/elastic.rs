@@ -1,0 +1,417 @@
+//! The elastic supervisor: crash detection, checkpoint restore, and
+//! survivor-only aggregation over the same GASPI-style substrate.
+//!
+//! [`run_elastic`] replaces the coordinator's join-all loop whenever the
+//! config carries a fault plan (or enables checkpointing).  Structure:
+//!
+//! * every worker thread reports its exit — clean completion or a
+//!   terminal fault — over an mpsc channel, so the supervisor *detects a
+//!   dead worker the moment it dies* instead of blocking in `join()`
+//!   order on an immortal-set assumption;
+//! * a `restart` death is restored from the rank's last checkpoint
+//!   ([`crate::ckpt`]): the shard is re-partitioned (deterministic in
+//!   the run seed) and fast-forwarded to the checkpointed draw position,
+//!   the worker RNG resumes its exact stream, and the replacement thread
+//!   is spawned into the *same* segment after
+//!   [`crate::gaspi::Segment::begin_incarnation`] — peers un-suspect it
+//!   purely by observing the heartbeat incarnation advance
+//!   (`recovered`), no membership protocol anywhere;
+//! * a `kill` death marks the rank dead for good; its buffers age out
+//!   behind its peers' leases and the final aggregation runs over the
+//!   survivors only ([`super::aggregate::survivor_aggregate`]) with
+//!   weights renormalized — nothing ever blocks on a dead rank.
+//!
+//! Restore is at-least-once: the span between the checkpoint and the
+//! crash is re-executed, and its messages are re-sent.  The substrate
+//! was designed for exactly that ambiguity (a re-sent state is
+//! indistinguishable from a delayed put), so elasticity costs no new
+//! semantics.
+
+use super::aggregate::survivor_aggregate;
+use super::worker::{run_worker, OnceInstant, WorkerCtx, WorkerResult};
+use crate::ckpt::{Checkpoint, CkptStore};
+use crate::config::{FaultEvent, FaultKind, TrainConfig};
+use crate::data::{partition::partition_rank, Dataset};
+use crate::gaspi::{Topology, World};
+use crate::metrics::{RunReport, TracePoint};
+use crate::models::Model;
+use crate::runtime::Stepper;
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+/// Per-rank terminal status tracked by the supervisor.
+enum RankState {
+    Running,
+    /// Completed all iterations; final state + per-incarnation iters.
+    Done(Vec<f32>),
+    /// Killed and never restored.
+    Dead,
+}
+
+/// A worker thread's exit report.
+enum Exit {
+    Finished(WorkerResult),
+    /// The thread panicked (a bug, not an injected fault) — surfaced as
+    /// an error instead of hanging the supervisor in `recv`.
+    Panicked(usize),
+}
+
+/// Spawn a worker thread.  `delay_ms > 0` is the restore path: the
+/// thread sleeps out the simulated detection+restore latency and *then*
+/// opens the new heartbeat incarnation, so the peers' dead window
+/// really spans the delay (and the supervisor's event loop never
+/// sleeps — concurrent deaths are handled, and restored, in parallel).
+fn spawn_worker(
+    ctx: WorkerCtx,
+    tx: Sender<Exit>,
+    delay_ms: u64,
+) -> Result<std::thread::JoinHandle<()>> {
+    let rank = ctx.rank;
+    let name = format!("w{:03}{}", rank, if ctx.restored { "r" } else { "" });
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            if delay_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+            }
+            if ctx.restored {
+                // rebirth announcement: peers that suspected the corpse
+                // observe the incarnation advance and count `recovered`
+                // — the whole un-suspect path is this one wait-free store
+                ctx.world.segments[rank].begin_incarnation();
+            }
+            let msg = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                run_worker(ctx)
+            })) {
+                Ok(res) => Exit::Finished(res),
+                Err(_) => Exit::Panicked(rank),
+            };
+            // a closed receiver means the supervisor already bailed;
+            // nothing useful to do with the report then
+            let _ = tx.send(msg);
+        })
+        .context("spawning worker")
+}
+
+/// Run the fault-tolerant training loop.  `shards` are the initial
+/// partition (restores re-derive their shard from the same seed).
+pub fn run_elastic(
+    cfg: &TrainConfig,
+    model: Arc<dyn Model>,
+    stepper: Arc<dyn Stepper>,
+    data: Arc<Dataset>,
+    shards: Vec<crate::data::partition::Shard>,
+    w0: Vec<f32>,
+) -> Result<RunReport> {
+    let n = cfg.workers;
+    let state_len = w0.len();
+    let world = Arc::new(World::new_chunked(
+        n,
+        cfg.n_buffers.max(1),
+        state_len,
+        cfg.comm.chunks(),
+        Topology::flat(n),
+    ));
+    let barrier = Arc::new(Barrier::new(n));
+    let start = Arc::new(OnceInstant::default());
+    let global_samples = Arc::new(AtomicU64::new(0));
+    let ckpt = (cfg.ckpt_interval > 0).then(|| Arc::new(CkptStore::new(n)));
+    // the supervisor keeps the master sender so replacement threads can
+    // be handed clones at restore time
+    let (tx, rx) = channel::<Exit>();
+    let t0 = Instant::now();
+
+    // per-rank pending fault events, consumed front to back across
+    // incarnations (an event fires exactly once, even though the
+    // restored worker re-executes the iterations before the crash)
+    let mut pending: Vec<VecDeque<FaultEvent>> = (0..n)
+        .map(|r| cfg.faults.for_rank(r).into())
+        .collect();
+
+    let mut handles = Vec::with_capacity(n);
+    for shard in shards {
+        let rank = shard.worker;
+        let ctx = WorkerCtx {
+            rank,
+            cfg: cfg.clone(),
+            shard,
+            w0: w0.clone(),
+            world: world.clone(),
+            stepper: stepper.clone(),
+            model: model.clone(),
+            eval_data: data.clone(),
+            barrier: barrier.clone(),
+            start: start.clone(),
+            global_samples: global_samples.clone(),
+            faults: pending[rank].iter().copied().collect(),
+            start_iter: 0,
+            ckpt: ckpt.clone(),
+            rng_state: None,
+            straggle_us: None,
+            restored: false,
+        };
+        handles.push(spawn_worker(ctx, tx.clone(), 0)?);
+    }
+
+    let mut states: Vec<RankState> = (0..n).map(|_| RankState::Running).collect();
+    let mut iters_per_rank = vec![0u64; n];
+    // straggle is a *sticky* effect and its event fires exactly once:
+    // remember the delay so a restored incarnation stays slow
+    let mut sticky_straggle: Vec<Option<u64>> = vec![None; n];
+    // worker 0's trace, concatenated across incarnations.  Safe to
+    // concatenate: trace points carry global_samples and wall-clock,
+    // both monotone across a restart, so a re-executed local span shows
+    // up as extra (honest) points, never as time running backwards.
+    let mut trace: Vec<TracePoint> = Vec::new();
+    let mut outstanding = n;
+    while outstanding > 0 {
+        // never blocks on a *dead* rank: every exit path of the worker —
+        // clean, injected fault, even a panic — reports here
+        let res = match rx.recv().expect("supervisor channel broken") {
+            Exit::Finished(r) => r,
+            Exit::Panicked(rank) => bail!("worker {rank} panicked"),
+        };
+        let rank = res.rank;
+        iters_per_rank[rank] += res.iters;
+        if rank == 0 {
+            trace.extend(res.trace.iter().copied());
+        }
+        // this incarnation consumed the first `events_consumed` pending
+        // events (fired exactly once; a restored successor must not
+        // re-fire them even though it re-runs the same iterations) —
+        // but a consumed straggle's *effect* is sticky and carries over
+        for _ in 0..res.events_consumed {
+            if let Some(ev) = pending[rank].pop_front() {
+                if let FaultKind::Straggle { delay_us } = ev.kind {
+                    sticky_straggle[rank] = Some(delay_us);
+                }
+            }
+        }
+        match res.death {
+            None => {
+                states[rank] = RankState::Done(res.state);
+                outstanding -= 1;
+            }
+            Some((at, FaultKind::Kill)) => {
+                log::info!("rank {rank} killed before iteration {at}; survivors continue");
+                states[rank] = RankState::Dead;
+                outstanding -= 1;
+            }
+            Some((at, FaultKind::Restart { after_ms })) => {
+                let store = ckpt
+                    .as_ref()
+                    .expect("validate() requires ckpt_interval >= 1 for restart events");
+                let encoded = store.load(rank).with_context(|| {
+                    format!("rank {rank} died at iteration {at} before its first checkpoint")
+                })?;
+                let snap = Checkpoint::decode(&encoded)
+                    .with_context(|| format!("restoring rank {rank}"))?;
+                log::info!(
+                    "rank {rank} died at iteration {at}; restoring from checkpoint at {} \
+                     (+{after_ms} ms)",
+                    snap.iter
+                );
+                // deterministic shard rebuild: same partition seed (only
+                // this rank's rows are materialized), then fast-forward
+                // to the checkpointed draw position
+                let mut shard = partition_rank(&data, n, cfg.seed, rank);
+                debug_assert_eq!(shard.worker, rank);
+                shard.fast_forward(snap.shard_epochs, snap.shard_cursor as usize);
+                world.stats.rank(rank).restores.add(1);
+                let ctx = WorkerCtx {
+                    rank,
+                    cfg: cfg.clone(),
+                    shard,
+                    w0: snap.state,
+                    world: world.clone(),
+                    stepper: stepper.clone(),
+                    model: model.clone(),
+                    eval_data: data.clone(),
+                    barrier: barrier.clone(),
+                    start: start.clone(),
+                    global_samples: global_samples.clone(),
+                    faults: pending[rank].iter().copied().collect(),
+                    start_iter: snap.iter,
+                    ckpt: ckpt.clone(),
+                    // resume the exact RNG stream the checkpoint pinned
+                    // (the recipient/slot draws continue bit-identically)
+                    rng_state: Some(snap.rng),
+                    straggle_us: sticky_straggle[rank],
+                    restored: true,
+                };
+                // the restore latency (and the incarnation bump ending
+                // the peers' dead window) happens on the spawned thread:
+                // the supervisor keeps handling other ranks' deaths
+                handles.push(spawn_worker(ctx, tx.clone(), after_ms)?);
+            }
+            Some((_, kind)) => {
+                // pause/straggle are handled inside the worker loop and
+                // never terminate it
+                unreachable!("non-terminal fault {kind:?} reported as death");
+            }
+        }
+    }
+
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+    }
+    let wallclock = t0.elapsed().as_secs_f64();
+
+    // ---- survivor-only aggregation (never blocks on a dead rank) ------
+    // Equal weights: only fully-completed ranks are ever aggregated, and
+    // each of them represents the same logical run of cfg.iters
+    // iterations — a restored rank's re-executed span is extra wall-time
+    // work, not extra statistical weight.  (The weighted reduce exists
+    // for the renormalization over the live subset, and for future
+    // partial-survivor policies.)
+    let weights = vec![1.0f32; n];
+    let slices: Vec<Option<&[f32]>> = states
+        .iter()
+        .map(|s| match s {
+            RankState::Done(w) => Some(w.as_slice()),
+            _ => None,
+        })
+        .collect();
+    let final_state = survivor_aggregate(cfg.aggregation, &slices, &weights)?;
+    let total_iters: u64 = iters_per_rank.iter().sum();
+
+    Ok(RunReport {
+        method: cfg.method.name().into(),
+        workers: n,
+        final_objective: model.eval(&data, &final_state, cfg.eval_samples),
+        final_error: model.truth_error(&data, &final_state).unwrap_or(f64::NAN),
+        wallclock_s: wallclock,
+        total_iters,
+        global_samples: global_samples.load(std::sync::atomic::Ordering::Relaxed),
+        trace,
+        comm: world.stats.total(),
+        state: final_state,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{AggMode, BackendKind, FaultPlan, TrainConfig};
+    use crate::coordinator::run_training;
+
+    fn fault_cfg() -> TrainConfig {
+        let mut cfg = TrainConfig::asgd_default(5, 6, 32);
+        cfg.workers = 4;
+        cfg.iters = 100;
+        cfg.eps = 0.2;
+        cfg.eval_every = 20;
+        cfg.eval_samples = 2048;
+        cfg.data.n_samples = 20_000;
+        cfg.backend = BackendKind::Native;
+        cfg.lease_polls = 8;
+        cfg
+    }
+
+    /// The acceptance pin: a worker killed mid-run must never block the
+    /// final aggregation — both aggregation modes complete over the
+    /// survivors (the old join-all + full tree would hang forever here).
+    #[test]
+    fn killed_worker_never_blocks_aggregation() {
+        for agg in [AggMode::TreeMean, AggMode::ReturnFirst] {
+            let mut cfg = fault_cfg();
+            cfg.aggregation = agg;
+            cfg.faults = FaultPlan::parse("kill@2:25").unwrap();
+            let report = run_training(&cfg).unwrap();
+            assert_eq!(report.workers, 4);
+            assert_eq!(report.state.len(), 30);
+            assert!(report.final_objective.is_finite());
+            // the dead rank stopped at 25 of 100: total iteration count
+            // reflects exactly the survivors' extra work
+            assert_eq!(report.total_iters, 3 * 100 + 25);
+            let first = report.trace.first().unwrap().objective;
+            let last = report.trace.last().unwrap().objective;
+            assert!(last < first, "survivors did not converge: {first} -> {last}");
+        }
+    }
+
+    /// Kill the leader (rank 0): ReturnFirst degrades to the lowest-rank
+    /// survivor and the (truncated) trace still exists.
+    #[test]
+    fn killed_leader_returns_first_survivor() {
+        let mut cfg = fault_cfg();
+        cfg.faults = FaultPlan::parse("kill@0:30").unwrap();
+        let report = run_training(&cfg).unwrap();
+        assert_eq!(report.total_iters, 3 * 100 + 30);
+        assert!(report.final_objective.is_finite());
+        assert!(!report.trace.is_empty(), "pre-death trace survives");
+        assert!(report.trace.iter().all(|p| p.objective.is_finite()));
+    }
+
+    /// The restore acceptance pin: a killed-then-restored worker resumes
+    /// from its checkpoint (restores == 1, its span re-executed) and the
+    /// peers un-suspect it through the heartbeat incarnation alone
+    /// (recovered >= 1).  A 200 us/iter straggler guarantees one peer is
+    /// still polling across the whole dead window, so the counters are
+    /// deterministic in structure, not scheduler luck.
+    #[test]
+    fn restored_worker_resumes_and_peers_unsuspect_it() {
+        let mut cfg = fault_cfg();
+        cfg.iters = 400;
+        cfg.ckpt_interval = 8;
+        cfg.faults = FaultPlan::parse("straggle@1:0:200,restart@2:20:15").unwrap();
+        let report = run_training(&cfg).unwrap();
+        assert_eq!(report.comm.restores, 1, "one restore performed");
+        assert!(
+            report.comm.suspected >= 1,
+            "the straggling observer must have suspected the corpse"
+        );
+        assert!(
+            report.comm.recovered >= 1,
+            "peers must un-suspect the reborn rank via its new incarnation"
+        );
+        // every resolution was first a suspicion (bounded false alarms)
+        assert!(
+            report.comm.false_suspicion + report.comm.recovered <= report.comm.suspected
+        );
+        // rank 2 died at 20, restored from the checkpoint at 16: the
+        // re-executed span shows up as extra iterations
+        assert_eq!(report.total_iters, 3 * 400 + 20 + (400 - 16));
+        let first = report.trace.first().unwrap().objective;
+        let last = report.trace.last().unwrap().objective;
+        assert!(last < first, "{first} -> {last}");
+    }
+
+    /// A paused-then-resumed worker is the false-suspicion path: peers
+    /// suspect it during the pause and must un-suspect it when the same
+    /// incarnation beats again.
+    #[test]
+    fn paused_worker_resolves_as_false_suspicion() {
+        let mut cfg = fault_cfg();
+        cfg.iters = 400;
+        cfg.faults = FaultPlan::parse("straggle@1:0:200,pause@2:10:20").unwrap();
+        let report = run_training(&cfg).unwrap();
+        assert!(
+            report.comm.false_suspicion >= 1,
+            "the pause must resolve as a false suspicion"
+        );
+        assert_eq!(report.comm.restores, 0, "nothing was restored");
+        assert_eq!(report.total_iters, 4 * 400, "nobody lost any work");
+        assert!(
+            report.comm.false_suspicion + report.comm.recovered <= report.comm.suspected
+        );
+    }
+
+    /// ckpt_interval alone (no faults) routes through the elastic path
+    /// and must behave exactly like a fault-free run.
+    #[test]
+    fn checkpointing_without_faults_is_transparent() {
+        let mut cfg = fault_cfg();
+        cfg.ckpt_interval = 10;
+        let report = run_training(&cfg).unwrap();
+        assert_eq!(report.total_iters, 4 * 100);
+        assert_eq!(report.comm.restores, 0);
+        assert!(report.comm.sent > 0);
+        let first = report.trace.first().unwrap().objective;
+        let last = report.trace.last().unwrap().objective;
+        assert!(last < first, "{first} -> {last}");
+    }
+}

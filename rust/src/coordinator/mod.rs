@@ -16,6 +16,7 @@
 
 pub mod aggregate;
 pub mod batch;
+pub mod elastic;
 pub mod worker;
 
 use crate::config::{AggMode, Method, TrainConfig};
@@ -55,6 +56,15 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
     }
 
     let stepper = build_stepper(cfg, model.clone()).context("building stepper")?;
+
+    if !cfg.faults.is_empty() || cfg.ckpt_interval > 0 {
+        // fault injection / checkpointing: the elastic supervisor owns
+        // death detection, restore-from-checkpoint, and survivor-only
+        // aggregation.  The plain join-all below assumes an immortal
+        // worker set and stays the zero-overhead fast path.
+        return elastic::run_elastic(cfg, model, stepper, data, shards, w0);
+    }
+
     let world = Arc::new(World::new_chunked(
         cfg.workers,
         cfg.n_buffers.max(1),
@@ -81,6 +91,12 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
             barrier: barrier.clone(),
             start: start.clone(),
             global_samples: global_samples.clone(),
+            faults: Vec::new(),
+            start_iter: 0,
+            ckpt: None,
+            rng_state: None,
+            straggle_us: None,
+            restored: false,
         };
         let name = format!("w{:03}", ctx.rank);
         handles.push(

@@ -26,11 +26,23 @@
 //! periodically re-derives the logical grouping from the observed
 //! torn/lost rates, publishing each re-layout through the segment's
 //! versioned layout word.
+//!
+//! Fault tolerance rides the same loop: a heartbeat beat is published
+//! on every send event, a [`LivenessView`] lease poll runs alongside
+//! the receive path (suspected senders' blocks stay out of the
+//! [`ExtPresence`] mask — see [`crate::gaspi::liveness`]), checkpoints
+//! land in the supervisor's [`crate::ckpt::CkptStore`] every
+//! `ckpt_interval` iterations, and the configured [`FaultEvent`]s fire
+//! deterministically at this rank's own iteration counter (a kill or
+//! restart exits the loop with [`WorkerResult::death`] set — the
+//! elastic supervisor decides what happens next).
 
-use crate::config::{CommMode, Method, RacePolicy, TrainConfig};
+use crate::ckpt::{Checkpoint, CkptStore};
+use crate::config::{CommMode, FaultEvent, FaultKind, Method, RacePolicy, TrainConfig};
 use crate::data::partition::Shard;
+use crate::gaspi::liveness::admit_presence;
 use crate::gaspi::sched::plan_send_into;
-use crate::gaspi::{AdaptiveController, ChunkLayout, DirtyMap, ReadOutcome, World};
+use crate::gaspi::{AdaptiveController, ChunkLayout, DirtyMap, LivenessView, ReadOutcome, World};
 use crate::kernels::ExtPresence;
 use crate::metrics::TracePoint;
 use crate::models::Model;
@@ -38,15 +50,23 @@ use crate::runtime::{StepScratch, Stepper};
 use crate::util::rng::Xoshiro256pp;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// What a worker thread returns.
 pub struct WorkerResult {
     pub rank: usize,
     pub state: Vec<f32>,
+    /// Iterations completed by *this incarnation* (a restored worker
+    /// reports only its own span; the supervisor sums incarnations).
     pub iters: u64,
     /// Worker 0 records the convergence trace (others leave it empty).
     pub trace: Vec<TracePoint>,
+    /// `Some((t, kind))` when a terminal fault event fired before
+    /// iteration `t` ran; `None` for a clean completion.
+    pub death: Option<(u64, FaultKind)>,
+    /// How many of `WorkerCtx::faults` this incarnation consumed (the
+    /// supervisor prunes them before re-spawning).
+    pub events_consumed: usize,
 }
 
 /// Everything a worker needs, bundled for the spawn call.
@@ -64,6 +84,27 @@ pub struct WorkerCtx {
     pub start: Arc<OnceInstant>,
     /// Global samples-touched counter (the paper's I, shared).
     pub global_samples: Arc<AtomicU64>,
+    /// This rank's pending fault events, sorted by `at_iter`
+    /// (empty for fault-free runs).
+    pub faults: Vec<FaultEvent>,
+    /// First iteration to execute (non-zero only for a worker restored
+    /// from a checkpoint).
+    pub start_iter: u64,
+    /// Checkpoint destination; `None` disables checkpointing.
+    pub ckpt: Option<Arc<CkptStore>>,
+    /// Worker-RNG state to resume from (checkpoint restore); `None`
+    /// seeds fresh from `cfg.seed` + rank.  Restoring the raw state is
+    /// what makes the recipient/slot draw stream continue exactly where
+    /// the checkpoint pinned it.
+    pub rng_state: Option<[u64; 4]>,
+    /// Sticky straggler delay already in force when the previous
+    /// incarnation died (straggle events fire once, so the supervisor
+    /// re-applies the effect instead of replaying the event).
+    pub straggle_us: Option<u64>,
+    /// A restored worker re-enters the *same* world mid-run: it must not
+    /// wait on the start barrier again (its original crew released it
+    /// long ago).
+    pub restored: bool,
 }
 
 /// An Instant all workers agree on (set by whoever passes the barrier
@@ -96,6 +137,12 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         barrier,
         start,
         global_samples,
+        faults,
+        start_iter,
+        ckpt,
+        rng_state,
+        straggle_us,
+        restored,
     } = ctx;
 
     let state_len = w0.len();
@@ -118,7 +165,18 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
     // snapshot — e.g. a writer stalled mid-put for many iterations —
     // must not be re-counted or re-merged every poll (u64::MAX = none).
     let mut torn_seen = vec![u64::MAX; cfg.n_buffers * n_chunks];
-    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed.wrapping_mul(0x9E37_79B9).wrapping_add(rank as u64));
+    // version of the last masked-because-suspected Fresh delivery per
+    // block: a deferred block is re-polled every iteration (see the
+    // receive path), so the dead_masked counter dedups on the version
+    let mut masked_seen = vec![u64::MAX; cfg.n_buffers * n_chunks];
+    // a restored worker resumes the exact RNG stream its checkpoint
+    // captured; a fresh one seeds from the run seed + rank as ever
+    let mut rng = match rng_state {
+        Some(s) => Xoshiro256pp::from_state(s),
+        None => Xoshiro256pp::seed_from_u64(
+            cfg.seed.wrapping_mul(0x9E37_79B9).wrapping_add(rank as u64),
+        ),
+    };
     let mut recipients = Vec::with_capacity(cfg.fanout);
     let mut trace = Vec::new();
     let communicate = cfg.method == Method::Asgd;
@@ -149,13 +207,80 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
     // where put_group still counts chunk_sent — the receive side must
     // stay symmetric or the controller's consumed signal reads zero.
     let block_accounting = chunked || controller.is_some();
+    // lease-based liveness: one view per worker, refreshed every poll
+    // (see gaspi::liveness for the contract).  Only meaningful when the
+    // run communicates — silent workers neither beat nor suspect.
+    let mut liveness =
+        communicate.then(|| LivenessView::new(world.ranks(), rank, cfg.lease_polls as u64));
+    // fault machinery: pending events (sorted by at_iter), the sticky
+    // straggler delay once its event fired, and a dedicated jitter RNG —
+    // the worker RNG must stay untouched so checkpoints capture exactly
+    // the recipient/slot stream.
+    let mut next_fault = 0usize;
+    let mut straggle_us: Option<u64> = straggle_us;
+    let mut fault_rng = Xoshiro256pp::seed_from_u64(
+        cfg.seed ^ 0xFA01_7FA0.wrapping_add(rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
 
     // alg. 5 line 4: "randomly shuffle samples on node i" happened at
     // partition time; synchronize the start so wall-clock is comparable.
-    barrier.wait();
+    // A restored worker re-enters mid-run: its original crew released
+    // the barrier long ago, so waiting again would hang forever.
+    if !restored {
+        barrier.wait();
+    }
     let t0 = start.get();
+    if communicate {
+        // first beat: peers' leases start from a live word, and a
+        // restored worker announces its new incarnation immediately
+        my_segment.publish_heartbeat();
+    }
 
-    for t in 0..cfg.iters as u64 {
+    let mut died: Option<(u64, FaultKind)> = None;
+    'iters: for t in start_iter..cfg.iters as u64 {
+        // ---- checkpoint (top of the iteration, before the batch draw,
+        // so `iter` is exactly the next iteration to execute; before the
+        // fault check, so even a crash at t = 0 has a restore point) ----
+        if let Some(store) = &ckpt {
+            if cfg.ckpt_interval > 0 && t % cfg.ckpt_interval as u64 == 0 {
+                let (shard_epochs, shard_cursor) = shard.draw_position();
+                let snap = Checkpoint {
+                    rank: rank as u32,
+                    iter: t,
+                    rng: rng.state(),
+                    shard_epochs,
+                    shard_cursor: shard_cursor as u64,
+                    state: w.clone(),
+                };
+                store.store(rank, snap.encode());
+            }
+        }
+
+        // ---- fault injection (deterministic: this rank's own t) --------
+        while next_fault < faults.len() && faults[next_fault].at_iter <= t {
+            let ev = faults[next_fault];
+            next_fault += 1;
+            match ev.kind {
+                FaultKind::Kill | FaultKind::Restart { .. } => {
+                    // crash before executing iteration t: no farewell
+                    // message, no cleanup — the heartbeat simply stops
+                    died = Some((t, ev.kind));
+                    break 'iters;
+                }
+                FaultKind::Pause { ms } => {
+                    // pause + implicit resume: the heartbeat stalls for
+                    // the duration, peers may suspect and must later
+                    // un-suspect (false_suspicion)
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                FaultKind::Straggle { delay_us } => straggle_us = Some(delay_us),
+            }
+        }
+        if let Some(delay_us) = straggle_us {
+            // seeded straggler: ~delay_us per iteration, jittered +-50%
+            let jitter = 0.5 + fault_rng.next_f64();
+            std::thread::sleep(Duration::from_micros((delay_us as f64 * jitter) as u64));
+        }
         // ---- receive path: wait-free snapshot of the external buffers --
         // Presence replaces the zeros convention: a delivered block sets
         // its bit, everything else leaves the bit clear and the buffer
@@ -163,6 +288,11 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         // writes instead of O(n_buffers * state_len) zero-fill traffic.
         if communicate {
             let rx = stats.rank(rank);
+            // lease poll: one wait-free heartbeat read per peer.  Runs
+            // before the slot sweep so a sender that just went silent is
+            // masked in the same poll that would have merged its blocks.
+            let live = liveness.as_mut().expect("liveness exists when communicating");
+            live.refresh(&world, rx);
             for slot in 0..cfg.n_buffers {
                 let ext = &mut exts[slot * state_len..(slot + 1) * state_len];
                 presence.clear_buffer(slot);
@@ -171,16 +301,35 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                 for c in 0..n_chunks {
                     let idx = slot * n_chunks + c;
                     let buf = &mut ext[layout.bounds(c)];
-                    let (outcome, _sender, _iter, version) =
-                        my_segment.read_block_into(slot, c, block_versions[idx], buf);
+                    let prev = block_versions[idx];
+                    let (outcome, sender, _iter, version) =
+                        my_segment.read_block_into(slot, c, prev, buf);
                     block_versions[idx] = version;
                     match outcome {
                         ReadOutcome::Fresh => {
-                            any_fresh = true;
-                            torn_seen[idx] = u64::MAX;
-                            presence.set(slot, c);
-                            if block_accounting {
-                                rx.chunk_received.add(1);
+                            // a suspected sender's block is *deferred*,
+                            // not consumed: the presence bit stays clear
+                            // (the gate never evaluates a corpse's state)
+                            // and the reader's version bookkeeping is
+                            // rolled back, so the payload is re-polled
+                            // next iteration and delivered normally the
+                            // moment the suspicion resolves — a false
+                            // suspicion delays a merge, it never loses
+                            // the message
+                            if admit_presence(live, &mut presence, slot, c, sender) {
+                                any_fresh = true;
+                                torn_seen[idx] = u64::MAX;
+                                if block_accounting {
+                                    rx.chunk_received.add(1);
+                                }
+                            } else {
+                                block_versions[idx] = prev;
+                                if masked_seen[idx] != version {
+                                    // count each masked delivery once,
+                                    // not once per deferred re-poll
+                                    masked_seen[idx] = version;
+                                    rx.dead_masked.add(1);
+                                }
                             }
                         }
                         ReadOutcome::Torn => {
@@ -197,8 +346,14 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                                     rx.chunk_torn.add(1);
                                 }
                                 if cfg.race == RacePolicy::AcceptTorn {
-                                    // Hogwild-style: merge the mix
-                                    presence.set(slot, c);
+                                    // Hogwild-style: merge the mix (the
+                                    // reported sender is the last writer
+                                    // in; a suspected one drops the mix —
+                                    // torn merges are best-effort by
+                                    // definition, so no deferral here)
+                                    if !admit_presence(live, &mut presence, slot, c, sender) {
+                                        rx.dead_masked.add(1);
+                                    }
                                 }
                             }
                         }
@@ -250,6 +405,10 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         // clobbered real payloads.  validate() guarantees
         // `send_interval >= 1`, so the modulus cannot be zero.
         if communicate && (t + 1) % cfg.send_interval as u64 == 0 {
+            // liveness beat: rides every send event, wait-free, on the
+            // segment's metadata plane (even when dirty skipping ends up
+            // putting nothing — alive is alive)
+            my_segment.publish_heartbeat();
             rng.sample_recipients(world.ranks(), rank, cfg.fanout, &mut recipients);
             if !recipients.is_empty() {
                 if let (Some(ctrl), Some(d)) = (controller.as_mut(), dirty.as_mut()) {
@@ -313,10 +472,22 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         }
     }
 
+    let completed = match died {
+        Some((t, _)) => t,
+        None => cfg.iters as u64,
+    };
+    if communicate && died.is_none() {
+        // clean completion: announce retirement so peers never lease a
+        // finished rank into suspicion (fault-free runs end with zero
+        // liveness noise; a crash skips this — corpses stay suspect)
+        my_segment.publish_retirement();
+    }
     WorkerResult {
         rank,
         state: w,
-        iters: cfg.iters as u64,
+        iters: completed - start_iter,
         trace,
+        death: died,
+        events_consumed: next_fault,
     }
 }

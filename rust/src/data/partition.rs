@@ -19,6 +19,12 @@ pub struct Shard {
     pub labels: Option<Vec<f32>>,
     /// Cursor state for sequential mini-batch draws with reshuffling.
     cursor: usize,
+    /// Completed reshuffles (local epochs).  Together with `cursor` this
+    /// pins the shard's draw position for checkpointing: the row
+    /// permutation itself is a pure function of the partition seed and
+    /// the reshuffle count, so [`Self::fast_forward`] can rebuild it
+    /// without the checkpoint carrying any row data.
+    epochs: u64,
     /// Per-shard RNG driving the on-wrap reshuffle (seeded at partition
     /// time, so runs stay reproducible).
     rng: Xoshiro256pp,
@@ -44,6 +50,7 @@ impl Shard {
         assert!(b <= self.n, "minibatch {b} > shard size {}", self.n);
         if self.cursor + b > self.n {
             self.reshuffle();
+            self.epochs += 1;
             self.cursor = 0;
         }
         let start = self.cursor;
@@ -51,6 +58,30 @@ impl Shard {
         let x = &self.x[start * self.dim..(start + b) * self.dim];
         let labels = self.labels.as_ref().map(|l| &l[start..start + b]);
         (x, labels)
+    }
+
+    /// Draw-position capture for checkpointing: `(epochs, cursor)`.
+    pub fn draw_position(&self) -> (u64, usize) {
+        (self.epochs, self.cursor)
+    }
+
+    /// Replay a freshly partitioned shard to a checkpointed draw
+    /// position: `epochs` reshuffles (each consuming the shard RNG
+    /// exactly as the live run did), then the cursor.  Bit-identical to
+    /// the original walk because both the partition and every reshuffle
+    /// are pure functions of the seeds.  Must be called on a pristine
+    /// shard — restoring on top of live draw state would desync the RNG.
+    pub fn fast_forward(&mut self, epochs: u64, cursor: usize) {
+        assert!(
+            self.cursor == 0 && self.epochs == 0,
+            "fast_forward needs a freshly partitioned shard"
+        );
+        assert!(cursor <= self.n, "cursor {cursor} > shard size {}", self.n);
+        for _ in 0..epochs {
+            self.reshuffle();
+        }
+        self.epochs = epochs;
+        self.cursor = cursor;
     }
 
     /// In-place Fisher–Yates over whole rows (labels travel with their
@@ -71,6 +102,41 @@ impl Shard {
     }
 }
 
+/// The shared "randomly partition" permutation: a pure function of the
+/// dataset size and the seed, so any single shard can be rebuilt later
+/// (checkpoint restore) without materializing the others.
+fn partition_perm(n: usize, seed: u64) -> Vec<u32> {
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x5045_5254);
+    rng.shuffle(&mut perm);
+    perm
+}
+
+fn build_shard(ds: &Dataset, idx: &[u32], w: usize, seed: u64) -> Shard {
+    let h = idx.len();
+    let mut x = Vec::with_capacity(h * ds.dim);
+    let mut labels = ds.labels.as_ref().map(|_| Vec::with_capacity(h));
+    for &i in idx {
+        x.extend_from_slice(ds.row(i as usize));
+        if let (Some(out), Some(src)) = (labels.as_mut(), ds.labels.as_ref()) {
+            out.push(src[i as usize]);
+        }
+    }
+    Shard {
+        worker: w,
+        dim: ds.dim,
+        n: h,
+        x,
+        labels,
+        cursor: 0,
+        epochs: 0,
+        rng: Xoshiro256pp::seed_from_u64(
+            seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(0x5348_5244 + w as u64),
+        ),
+    }
+}
+
 /// Randomly partition `ds` into `workers` shards of H = floor(n/workers)
 /// rows each (trailing `n mod workers` rows are dropped, as in alg. 3
 /// line 1), then shuffle each shard locally.
@@ -78,37 +144,22 @@ pub fn partition(ds: &Dataset, workers: usize, seed: u64) -> Vec<Shard> {
     assert!(workers >= 1);
     let h = ds.n / workers;
     assert!(h >= 1, "fewer samples than workers");
+    let perm = partition_perm(ds.n, seed);
+    (0..workers)
+        .map(|w| build_shard(ds, &perm[w * h..(w + 1) * h], w, seed))
+        .collect()
+}
 
-    // global random permutation (the "randomly partition" step)
-    let mut perm: Vec<u32> = (0..ds.n as u32).collect();
-    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x5045_5254);
-    rng.shuffle(&mut perm);
-
-    let mut shards = Vec::with_capacity(workers);
-    for w in 0..workers {
-        let idx = &perm[w * h..(w + 1) * h];
-        let mut x = Vec::with_capacity(h * ds.dim);
-        let mut labels = ds.labels.as_ref().map(|_| Vec::with_capacity(h));
-        for &i in idx {
-            x.extend_from_slice(ds.row(i as usize));
-            if let (Some(out), Some(src)) = (labels.as_mut(), ds.labels.as_ref()) {
-                out.push(src[i as usize]);
-            }
-        }
-        shards.push(Shard {
-            worker: w,
-            dim: ds.dim,
-            n: h,
-            x,
-            labels,
-            cursor: 0,
-            rng: Xoshiro256pp::seed_from_u64(
-                seed.wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                    .wrapping_add(0x5348_5244 + w as u64),
-            ),
-        });
-    }
-    shards
+/// Rebuild exactly one rank's shard of the `partition(ds, workers,
+/// seed)` split (checkpoint restore: the supervisor re-derives the dead
+/// rank's pristine shard without cloning every other rank's rows).
+/// Bit-identical to `partition(..)[rank]`.
+pub fn partition_rank(ds: &Dataset, workers: usize, seed: u64, rank: usize) -> Shard {
+    assert!(rank < workers, "rank {rank} outside 0..{workers}");
+    let h = ds.n / workers;
+    assert!(h >= 1, "fewer samples than workers");
+    let perm = partition_perm(ds.n, seed);
+    build_shard(ds, &perm[rank * h..(rank + 1) * h], rank, seed)
 }
 
 #[cfg(test)]
@@ -134,6 +185,25 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 1000);
+    }
+
+    /// The restore path's single-shard rebuild is bit-identical to the
+    /// full partition's shard — rows, labels, and the draw stream.
+    #[test]
+    fn partition_rank_matches_full_partition() {
+        let ds = synthetic::generate_linear(403, 3, 0.1, 6);
+        for rank in [0usize, 1, 3] {
+            let mut full = partition(&ds, 4, 11).swap_remove(rank);
+            let mut lone = partition_rank(&ds, 4, 11, rank);
+            assert_eq!(lone.worker, rank);
+            assert_eq!(lone.x, full.x);
+            assert_eq!(lone.labels, full.labels);
+            for _ in 0..8 {
+                let a: Vec<f32> = full.next_batch(30).0.to_vec();
+                let (b, _) = lone.next_batch(30);
+                assert_eq!(a, b, "rank {rank}: draw stream diverged");
+            }
+        }
     }
 
     #[test]
@@ -233,6 +303,39 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Checkpoint restore: a pristine re-partition fast-forwarded to a
+    /// live shard's draw position serves bit-identical batches from
+    /// there on.
+    #[test]
+    fn fast_forward_resumes_the_exact_draw_sequence() {
+        let ds = synthetic::generate(100, 2, 2, 1.0, 5.0, 1);
+        let mut live = partition(&ds, 2, 9).swap_remove(1);
+        // walk through two wraps and partway into the third epoch
+        for _ in 0..12 {
+            live.next_batch(9); // n = 50: wraps after every 5th draw
+        }
+        let (epochs, cursor) = live.draw_position();
+        assert!(epochs >= 2, "walk must have wrapped");
+        let mut restored = partition(&ds, 2, 9).swap_remove(1);
+        restored.fast_forward(epochs, cursor);
+        assert_eq!(restored.draw_position(), (epochs, cursor));
+        for draw in 0..30 {
+            let (a, _) = live.next_batch(9);
+            let a = a.to_vec();
+            let (b, _) = restored.next_batch(9);
+            assert_eq!(a, b, "draw {draw} diverged after fast_forward");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "freshly partitioned")]
+    fn fast_forward_refuses_a_walked_shard() {
+        let ds = synthetic::generate(100, 2, 2, 1.0, 5.0, 1);
+        let mut s = partition(&ds, 1, 3).swap_remove(0);
+        s.next_batch(10);
+        s.fast_forward(0, 0);
     }
 
     #[test]

@@ -1,0 +1,397 @@
+//! Lease-based liveness over the one-sided substrate (§4.4 extended).
+//!
+//! The paper's failure taxonomy covers lost/torn/stale *messages*; a
+//! production coordinator also has to survive dead/slow/reborn *workers*
+//! (Duchi et al., arXiv:1508.00882: asynchronous SGD tolerates unbounded
+//! delays, so a crashed peer must cost progress, never liveness).  This
+//! module keeps the substrate's core property intact: nothing here ever
+//! blocks or handshakes.
+//!
+//! ## The liveness contract
+//!
+//! * **Heartbeats are data, not protocol.**  Every rank owns one word of
+//!   segment metadata, `(incarnation << 48) | beats`
+//!   ([`super::Segment::publish_heartbeat`]).  The owner bumps it wait-free on
+//!   every send event; peers read it wait-free during their receive
+//!   poll, exactly like a slot version.  There is no failure detector
+//!   service and no new synchronization primitive.
+//! * **Suspicion is local and leased.**  Each worker keeps a
+//!   [`LivenessView`]: a peer whose heartbeat word has not changed for
+//!   `lease_polls` consecutive polls of *this* worker is locally
+//!   *suspected*.  Different workers may disagree — that is fine, every
+//!   consequence of suspicion is local too.
+//! * **The only consequence is masking, and masking defers.**  A
+//!   suspected rank's delivered blocks are kept out of the
+//!   [`crate::kernels::ExtPresence`] mask (via [`LivenessView::admit`],
+//!   counted on `dead_masked`), so the Parzen gate never evaluates — and
+//!   the merge never consumes — a corpse's state.  The receive path
+//!   rolls back its version bookkeeping for a masked Fresh block, so the
+//!   payload is re-polled and delivered normally the moment the
+//!   suspicion resolves: a wrong suspicion (even lease/send-interval
+//!   flapping) delays merges, it never loses a message or waits on the
+//!   suspect.  A corpse's final unconsumed blocks cost one bounded
+//!   re-read per poll until overwritten — the price of never dropping a
+//!   live peer's payload.
+//! * **Resumption is self-healing.**  A heartbeat that advances again
+//!   un-suspects the rank immediately.  The incarnation half classifies
+//!   the resolution: same incarnation means the peer was merely slow
+//!   (`false_suspicion`); a new incarnation means it genuinely died and
+//!   was restored from checkpoint by the supervisor (`recovered`), which
+//!   is how "peers un-suspect a reborn worker" needs no message at all.
+//!
+//! * **Completion is announced, crashes are not.**  A worker that
+//!   cleanly finishes its run sets the retirement bit in its heartbeat
+//!   word ([`super::Segment::publish_retirement`]): peers stop leasing
+//!   it (no end-of-run suspicion noise on healthy runs) and its final
+//!   state stays mergeable.  A crash publishes nothing — which is
+//!   precisely how the taxonomy tells "finished and silent" from "dead
+//!   and silent" without a single extra message.
+//!
+//! Counter identity (pinned in tests): every resolution was first a
+//! suspicion, so `false_suspicion + recovered <= suspected` per view and
+//! in the world totals.
+
+use super::segment::{HEARTBEAT_BEAT_BITS, HEARTBEAT_RETIRED_BIT};
+use super::stats::CommStats;
+use super::World;
+use crate::kernels::ExtPresence;
+
+/// Split a heartbeat word into `(incarnation, beats)` (the retirement
+/// flag is not part of either half).
+#[inline]
+pub fn heartbeat_parts(word: u64) -> (u64, u64) {
+    (
+        (word & !HEARTBEAT_RETIRED_BIT) >> HEARTBEAT_BEAT_BITS,
+        word & ((1u64 << HEARTBEAT_BEAT_BITS) - 1),
+    )
+}
+
+/// A state transition reported by [`LivenessView::observe`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transition {
+    /// The peer's lease expired: locally suspected from now on.
+    Suspected,
+    /// A suspected peer resumed beating under the same incarnation — it
+    /// was slow (straggler, pause, preemption), not dead.
+    FalseSuspicion,
+    /// A suspected peer resumed beating under a *new* incarnation — it
+    /// crashed and was restored from its checkpoint.
+    Recovered,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct PeerLease {
+    /// Heartbeat word at the last change (0 = never observed beating).
+    last: u64,
+    /// Consecutive polls without a change.
+    stalled: u64,
+    suspected: bool,
+}
+
+/// One worker's local, lease-based view of which peers are alive.
+///
+/// Wait-free by construction: [`Self::refresh`] is `ranks - 1` atomic
+/// loads per receive poll, and every decision is local bookkeeping.
+#[derive(Clone, Debug)]
+pub struct LivenessView {
+    me: usize,
+    lease_polls: u64,
+    peers: Vec<PeerLease>,
+}
+
+impl LivenessView {
+    /// A view for rank `me` over `ranks` ranks; a peer is suspected
+    /// after `lease_polls` consecutive polls without a heartbeat change.
+    /// `lease_polls == 0` would suspect everyone on the first poll;
+    /// `TrainConfig::validate` refuses it before it gets here.
+    pub fn new(ranks: usize, me: usize, lease_polls: u64) -> Self {
+        assert!(lease_polls >= 1, "lease_polls must be >= 1");
+        assert!(me < ranks);
+        Self {
+            me,
+            lease_polls,
+            peers: vec![PeerLease::default(); ranks],
+        }
+    }
+
+    /// Feed one observed heartbeat word for `rank`.  Pure bookkeeping
+    /// (no atomics), so the lease policy is unit-testable without
+    /// threads; [`Self::refresh`] is the production wrapper that reads
+    /// the segments and routes transitions onto the stats counters.
+    pub fn observe(&mut self, rank: usize, word: u64) -> Option<Transition> {
+        debug_assert_ne!(rank, self.me, "a rank never leases itself");
+        let p = &mut self.peers[rank];
+        if word != p.last {
+            let was = p.suspected;
+            let rebirth = heartbeat_parts(word).0 != heartbeat_parts(p.last).0;
+            p.last = word;
+            p.stalled = 0;
+            p.suspected = false;
+            return match (was, rebirth) {
+                (true, true) => Some(Transition::Recovered),
+                (true, false) => Some(Transition::FalseSuspicion),
+                (false, _) => None,
+            };
+        }
+        if word & HEARTBEAT_RETIRED_BIT != 0 {
+            // a cleanly retired peer is silent *by announcement*: its
+            // lease never expires, its final state stays mergeable, and
+            // end-of-run finish skew stops reading as failure.  (A
+            // corpse never announces anything — crashes still expire.)
+            return None;
+        }
+        p.stalled += 1;
+        if !p.suspected && p.stalled >= self.lease_polls {
+            p.suspected = true;
+            return Some(Transition::Suspected);
+        }
+        None
+    }
+
+    /// One lease poll over every peer segment, counting transitions on
+    /// this rank's stats.  Called once per receive poll.
+    pub fn refresh(&mut self, world: &World, stats: &CommStats) {
+        for r in 0..self.peers.len() {
+            if r == self.me {
+                continue;
+            }
+            match self.observe(r, world.segments[r].heartbeat()) {
+                Some(Transition::Suspected) => stats.suspected.add(1),
+                Some(Transition::FalseSuspicion) => stats.false_suspicion.add(1),
+                Some(Transition::Recovered) => stats.recovered.add(1),
+                None => {}
+            }
+        }
+    }
+
+    /// Is `rank` currently suspected by this view?
+    pub fn is_suspected(&self, rank: usize) -> bool {
+        self.peers[rank].suspected
+    }
+
+    /// Number of peers currently suspected.
+    pub fn n_suspected(&self) -> usize {
+        self.peers.iter().filter(|p| p.suspected).count()
+    }
+
+    /// Receive-path admission: may a delivered block from `sender` enter
+    /// the presence mask?  `false` for suspected senders — the block
+    /// stays masked out of the merge.  A sender rank outside the world
+    /// (never the case for real puts) is admitted: liveness only ever
+    /// *removes* information.
+    pub fn admit(&self, sender: u32) -> bool {
+        match self.peers.get(sender as usize) {
+            Some(p) => !p.suspected,
+            None => true,
+        }
+    }
+}
+
+/// The worker's presence decision for one delivered block, shared with
+/// the test suite so "suspected senders are masked" is pinned on the
+/// production code path: sets `(buf, block)` iff `view` admits `sender`,
+/// otherwise leaves the bit clear.  Returns whether the bit was set —
+/// the caller counts `dead_masked` (deduplicated per delivery, since a
+/// masked Fresh block is *deferred* and re-polled every iteration until
+/// the suspicion resolves, not consumed-and-lost).
+pub fn admit_presence(
+    view: &LivenessView,
+    presence: &mut ExtPresence,
+    buf: usize,
+    block: usize,
+    sender: u32,
+) -> bool {
+    if view.admit(sender) {
+        presence.set(buf, block);
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gaspi::Topology;
+
+    fn word(inc: u64, beats: u64) -> u64 {
+        (inc << HEARTBEAT_BEAT_BITS) | beats
+    }
+
+    #[test]
+    fn lease_expires_only_after_the_full_window() {
+        let mut v = LivenessView::new(2, 0, 3);
+        assert_eq!(v.observe(1, word(0, 1)), None); // first beat seen
+        assert_eq!(v.observe(1, word(0, 1)), None); // stall 1
+        assert_eq!(v.observe(1, word(0, 1)), None); // stall 2
+        assert!(!v.is_suspected(1));
+        assert_eq!(v.observe(1, word(0, 1)), Some(Transition::Suspected));
+        assert!(v.is_suspected(1));
+        // suspicion is raised once, not every poll
+        assert_eq!(v.observe(1, word(0, 1)), None);
+        assert!(v.is_suspected(1));
+    }
+
+    #[test]
+    fn resumed_same_incarnation_is_false_suspicion() {
+        let mut v = LivenessView::new(2, 0, 2);
+        v.observe(1, word(0, 5));
+        v.observe(1, word(0, 5));
+        assert_eq!(v.observe(1, word(0, 5)), Some(Transition::Suspected));
+        // the straggler catches up: un-suspected immediately, counted false
+        assert_eq!(v.observe(1, word(0, 6)), Some(Transition::FalseSuspicion));
+        assert!(!v.is_suspected(1));
+        assert_eq!(v.n_suspected(), 0);
+    }
+
+    #[test]
+    fn resumed_new_incarnation_is_recovery() {
+        let mut v = LivenessView::new(3, 0, 2);
+        v.observe(2, word(0, 9));
+        v.observe(2, word(0, 9));
+        assert_eq!(v.observe(2, word(0, 9)), Some(Transition::Suspected));
+        // supervisor restored the worker: incarnation half advanced
+        assert_eq!(v.observe(2, word(1, 10)), Some(Transition::Recovered));
+        assert!(!v.is_suspected(2));
+    }
+
+    #[test]
+    fn unsuspected_beat_advance_is_silent() {
+        let mut v = LivenessView::new(2, 0, 8);
+        assert_eq!(v.observe(1, word(0, 1)), None);
+        assert_eq!(v.observe(1, word(0, 2)), None);
+        // an incarnation bump without prior suspicion is not "recovered":
+        // nobody here ever thought the rank was dead
+        assert_eq!(v.observe(1, word(1, 3)), None);
+        assert!(!v.is_suspected(1));
+    }
+
+    #[test]
+    fn permanently_dead_rank_never_flips_back() {
+        let mut v = LivenessView::new(2, 0, 4);
+        v.observe(1, word(0, 3));
+        let mut transitions = Vec::new();
+        for _ in 0..200 {
+            if let Some(t) = v.observe(1, word(0, 3)) {
+                transitions.push(t);
+            }
+        }
+        assert_eq!(transitions, vec![Transition::Suspected]);
+        assert!(v.is_suspected(1));
+    }
+
+    /// A never-started peer (word 0) is leased like any stalled one: the
+    /// view cannot tell "not yet alive" from "already dead", and does not
+    /// need to — masking an empty segment masks nothing.
+    #[test]
+    fn never_started_peer_expires_and_recovers_on_first_beat() {
+        let mut v = LivenessView::new(2, 0, 2);
+        assert_eq!(v.observe(1, 0), None);
+        assert_eq!(v.observe(1, 0), Some(Transition::Suspected));
+        assert_eq!(v.observe(1, word(0, 1)), Some(Transition::FalseSuspicion));
+    }
+
+    /// A cleanly retired peer is silent *by announcement*: its lease
+    /// never expires no matter how long it stays static, and a pending
+    /// suspicion resolves on seeing the retirement (which is a word
+    /// change, not a rebirth).
+    #[test]
+    fn retired_peer_never_expires() {
+        let retired = word(0, 9) | HEARTBEAT_RETIRED_BIT;
+        let mut v = LivenessView::new(2, 0, 2);
+        v.observe(1, word(0, 9));
+        assert_eq!(v.observe(1, retired), None, "retirement is a plain advance");
+        for _ in 0..500 {
+            assert_eq!(v.observe(1, retired), None);
+        }
+        assert!(!v.is_suspected(1), "a retired rank is never suspected");
+        assert!(v.admit(1));
+        // retirement while suspected resolves like any same-incarnation
+        // advance (the peer was provably alive to announce it)
+        let mut v = LivenessView::new(2, 0, 1);
+        v.observe(1, word(0, 3));
+        assert_eq!(v.observe(1, word(0, 3)), Some(Transition::Suspected));
+        assert_eq!(
+            v.observe(1, word(0, 3) | HEARTBEAT_RETIRED_BIT),
+            Some(Transition::FalseSuspicion)
+        );
+        assert!(!v.is_suspected(1));
+    }
+
+    /// Seeded random beat/stall/rebirth schedules: the resolution
+    /// identity `false_suspicion + recovered <= suspected` holds on any
+    /// path, and the view is never suspected right after an advance.
+    #[test]
+    fn counter_identity_holds_under_random_schedules() {
+        use crate::util::rng::Xoshiro256pp;
+        for seed in 0..20u64 {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let lease = 1 + rng.index(5) as u64;
+            let mut v = LivenessView::new(2, 0, lease);
+            let (mut inc, mut beats) = (0u64, 0u64);
+            let (mut susp, mut fs, mut rec) = (0u64, 0u64, 0u64);
+            for _ in 0..400 {
+                match rng.index(4) {
+                    0 => beats += 1,             // peer beats
+                    1 => {                       // peer reborn
+                        inc += 1;
+                        beats += 1;
+                    }
+                    _ => {}                      // peer stalls
+                }
+                match v.observe(1, word(inc, beats)) {
+                    Some(Transition::Suspected) => susp += 1,
+                    Some(Transition::FalseSuspicion) => fs += 1,
+                    Some(Transition::Recovered) => rec += 1,
+                    None => {}
+                }
+                assert!(
+                    fs + rec <= susp,
+                    "seed {seed}: resolutions outran suspicions"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn admit_presence_masks_suspected_senders_on_the_shared_path() {
+        let mut v = LivenessView::new(3, 0, 1);
+        let mut presence = ExtPresence::new(2, 4);
+        // rank 2 beats once then dies; lease of 1 poll expires instantly
+        v.observe(2, word(0, 1));
+        assert_eq!(v.observe(2, word(0, 1)), Some(Transition::Suspected));
+        v.observe(1, word(0, 7)); // rank 1 alive
+        assert!(admit_presence(&v, &mut presence, 0, 1, 1));
+        assert!(presence.present(0, 1));
+        assert!(!admit_presence(&v, &mut presence, 1, 2, 2));
+        assert!(!presence.present(1, 2), "suspected sender must stay masked");
+        // resumption un-suspects and re-admits
+        assert_eq!(v.observe(2, word(0, 2)), Some(Transition::FalseSuspicion));
+        assert!(admit_presence(&v, &mut presence, 1, 2, 2));
+        assert!(presence.present(1, 2));
+    }
+
+    #[test]
+    fn refresh_reads_world_heartbeats_and_counts() {
+        let w = World::new(3, 1, 4, Topology::flat(3));
+        let stats = CommStats::default();
+        let mut v = LivenessView::new(3, 0, 2);
+        w.segments[1].publish_heartbeat();
+        w.segments[2].publish_heartbeat();
+        v.refresh(&w, &stats); // first sighting of both
+        v.refresh(&w, &stats); // stall 1
+        v.refresh(&w, &stats); // stall 2 -> both suspected
+        assert_eq!(stats.suspected.get(), 2);
+        assert!(v.is_suspected(1) && v.is_suspected(2));
+        // rank 1 keeps beating (false suspicion), rank 2 is reborn
+        w.segments[1].publish_heartbeat();
+        w.segments[2].begin_incarnation();
+        v.refresh(&w, &stats);
+        assert_eq!(stats.false_suspicion.get(), 1);
+        assert_eq!(stats.recovered.get(), 1);
+        assert_eq!(v.n_suspected(), 0);
+        assert!(
+            stats.false_suspicion.get() + stats.recovered.get() <= stats.suspected.get()
+        );
+    }
+}

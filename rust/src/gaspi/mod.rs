@@ -20,15 +20,36 @@
 //! * **stale state** — the payload describes a sender state from an older
 //!   iteration; the Parzen gate (eq. 4) deals with it downstream.
 //!
+//! The fault-tolerance subsystem extends the taxonomy from messages to
+//! *workers* (Duchi et al., arXiv:1508.00882: asynchronous SGD tolerates
+//! unbounded delays, so worker failure must never cost liveness):
+//!
+//! * **dead worker** — its heartbeat word ([`segment::Segment::heartbeat`])
+//!   stops advancing; peers' leases expire ([`liveness::LivenessView`])
+//!   and its buffers are masked out of the merge.  Nothing ever waits on
+//!   it: the final aggregation reduces over the survivors only
+//!   ([`crate::coordinator::aggregate::survivor_aggregate`]).
+//! * **slow worker** — a straggler or paused rank looks dead until it
+//!   beats again; the suspicion resolves as `false_suspicion` and costs
+//!   only the merges skipped meanwhile (communication is de-facto
+//!   optional, so this is a no-op in the limit).
+//! * **reborn worker** — the supervisor restores a crashed rank from its
+//!   last checkpoint ([`crate::ckpt`]) and re-spawns it into the *same*
+//!   segment under a new heartbeat incarnation; peers observe the
+//!   incarnation advance and un-suspect it (`recovered`) without any
+//!   message or handshake.
+//!
 //! No method in this module ever blocks or spins on another rank —
 //! communication is "free" in the paper's sense; the price is exactly the
 //! uncertainty catalogued above.
 
+pub mod liveness;
 pub mod sched;
 pub mod segment;
 pub mod stats;
 pub mod topology;
 
+pub use liveness::{heartbeat_parts, LivenessView, Transition};
 pub use sched::{AdaptiveController, DirtyMap};
 pub use segment::{ChunkLayout, ReadOutcome, Segment, SlotSnapshot, MAX_GROUP_BLOCKS};
 pub use stats::{CommStats, WorldStats};

@@ -186,7 +186,30 @@ pub struct Segment {
     /// old layout can never misread word ranges.  The epoch versions the
     /// grouping for observers (stats, benches, adaptation audits).
     layout_word: AtomicU64,
+    /// The owner's liveness heartbeat, `(incarnation << 48) | beats`
+    /// (see [`crate::gaspi::liveness`]).  Published wait-free by the
+    /// segment's owner on every send event — it rides the same metadata
+    /// plane as the layout word, no new synchronization primitive — and
+    /// read wait-free by every peer's lease poll, exactly like a slot.
+    /// The incarnation half is bumped only by the supervisor when it
+    /// re-spawns the owner after a crash, which is what lets observers
+    /// tell a *reborn* worker (incarnation advanced: it really died and
+    /// was restored) from a merely *slow* one (same incarnation: the
+    /// suspicion was false).
+    heartbeat_word: AtomicU64,
 }
+
+/// Bits of the heartbeat word holding the beat counter; bits 48..63
+/// hold the incarnation number and bit 63 the retirement flag.  2^48
+/// send events per incarnation is unreachable in practice, so the plain
+/// `fetch_add(1)` publish can never bleed into the incarnation half.
+pub const HEARTBEAT_BEAT_BITS: u32 = 48;
+
+/// Retirement flag: set by a worker that *cleanly completed* its run.
+/// A retired heartbeat never expires a lease — peers can tell "finished
+/// and silent" (state stays mergeable, no suspicion) from "crashed and
+/// silent" (a corpse never announces anything).
+pub const HEARTBEAT_RETIRED_BIT: u64 = 1 << 63;
 
 impl Segment {
     /// Full-state slots (one block per slot) — the original substrate.
@@ -206,6 +229,7 @@ impl Segment {
                 .map(|_| Slot::new(state_len, layout.n_chunks()))
                 .collect(),
             layout_word: AtomicU64::new(chunks as u64),
+            heartbeat_word: AtomicU64::new(0),
         }
     }
 
@@ -383,6 +407,46 @@ impl Segment {
     pub fn current_layout(&self) -> (u64, usize) {
         let w = self.layout_word.load(Ordering::Acquire);
         (w >> 32, (w & u64::from(u32::MAX)) as usize)
+    }
+
+    /// Publish one liveness beat (owner-only, wait-free).  Called on
+    /// every send event; a worker that stops calling this — crashed,
+    /// paused, or preempted — simply stops advancing the word, and its
+    /// peers' leases expire on their own schedule.  Returns the word now
+    /// in force.
+    pub fn publish_heartbeat(&self) -> u64 {
+        self.heartbeat_word.fetch_add(1, Ordering::Release) + 1
+    }
+
+    /// The owner's current heartbeat word (peer-side lease poll read).
+    pub fn heartbeat(&self) -> u64 {
+        self.heartbeat_word.load(Ordering::Acquire)
+    }
+
+    /// Mark this segment's owner as cleanly retired (called by the
+    /// worker itself after its last iteration).  The set bit is itself a
+    /// word change, so a pending suspicion resolves on the next lease
+    /// poll, and the static retired word never expires a lease again.
+    pub fn publish_retirement(&self) -> u64 {
+        self.heartbeat_word
+            .fetch_or(HEARTBEAT_RETIRED_BIT, Ordering::Release)
+            | HEARTBEAT_RETIRED_BIT
+    }
+
+    /// Open a new incarnation of this segment's owner (supervisor-only,
+    /// on re-spawning a crashed worker).  Bumps the incarnation half and
+    /// the beat (clearing any retirement flag — the rank is active
+    /// again), so every observer sees both "the rank is alive again"
+    /// and "it is a *rebirth*, not a slow worker catching up".  Only one
+    /// writer can exist when this runs (the previous owner is dead and
+    /// the replacement not yet spawned), so load+store suffices.
+    pub fn begin_incarnation(&self) -> u64 {
+        let w = self.heartbeat_word.load(Ordering::Acquire) & !HEARTBEAT_RETIRED_BIT;
+        let inc = (w >> HEARTBEAT_BEAT_BITS) + 1;
+        let beats = (w & ((1u64 << HEARTBEAT_BEAT_BITS) - 1)) + 1;
+        let next = (inc << HEARTBEAT_BEAT_BITS) | beats;
+        self.heartbeat_word.store(next, Ordering::Release);
+        next
     }
 
     /// Diagnostic accessor for the stress suite: the block's clean mark
@@ -799,6 +863,36 @@ mod tests {
         let mut bb = vec![0.0f32; l.chunk_len(2)];
         assert_eq!(a.read_block_into(0, 2, 0, &mut ba), b.read_block_into(0, 2, 0, &mut bb));
         assert_eq!(ba, bb);
+    }
+
+    #[test]
+    fn heartbeat_word_advances_and_incarnations_are_ordered() {
+        let seg = Segment::new(0, 1, 4);
+        assert_eq!(seg.heartbeat(), 0, "never-started owner reads as 0");
+        assert_eq!(seg.publish_heartbeat(), 1);
+        assert_eq!(seg.publish_heartbeat(), 2);
+        assert_eq!(seg.heartbeat(), 2);
+        // rebirth: incarnation half advances, word strictly increases
+        let reborn = seg.begin_incarnation();
+        assert_eq!(reborn >> HEARTBEAT_BEAT_BITS, 1);
+        assert!(reborn > 2);
+        assert_eq!(seg.heartbeat(), reborn);
+        // the new incarnation keeps beating in the low half
+        let next = seg.publish_heartbeat();
+        assert_eq!(next >> HEARTBEAT_BEAT_BITS, 1);
+        assert_eq!(next, reborn + 1);
+        // a second rebirth orders after the first
+        assert_eq!(seg.begin_incarnation() >> HEARTBEAT_BEAT_BITS, 2);
+        // clean retirement sets the flag (a word change) and keeps the
+        // beat/incarnation halves intact...
+        let before = seg.heartbeat();
+        let retired = seg.publish_retirement();
+        assert_eq!(retired, before | HEARTBEAT_RETIRED_BIT);
+        assert_eq!(seg.heartbeat(), retired);
+        // ...and a later rebirth clears it (the rank is active again)
+        let reborn = seg.begin_incarnation();
+        assert_eq!(reborn & HEARTBEAT_RETIRED_BIT, 0);
+        assert_eq!((reborn & !HEARTBEAT_RETIRED_BIT) >> HEARTBEAT_BEAT_BITS, 3);
     }
 
     #[test]

@@ -53,6 +53,24 @@ pub struct CommStats {
     /// Adaptive mode: logical re-layouts (chunk-count changes) this rank
     /// performed; each one bumps its segment's layout epoch.
     pub relayouts: Counter,
+    /// Liveness: peers this rank locally suspected dead (their heartbeat
+    /// stopped advancing for a full lease; see [`crate::gaspi::liveness`]).
+    pub suspected: Counter,
+    /// Liveness: suspicions that resolved as *slow, not dead* — the peer
+    /// resumed beating under the same incarnation.
+    pub false_suspicion: Counter,
+    /// Liveness: suspicions that resolved as a *rebirth* — the peer's
+    /// heartbeat resumed under a new incarnation (it crashed and was
+    /// restored from checkpoint by the supervisor).
+    pub recovered: Counter,
+    /// Delivered blocks whose sender was suspected at read time: kept
+    /// out of the merge (the gate never waits on — or merges from — a
+    /// corpse).  Fresh deliveries are deferred (re-polled until the
+    /// suspicion resolves) and counted once per delivery, never lost.
+    pub dead_masked: Counter,
+    /// Elastic supervision: times this rank's worker was restored from
+    /// its last checkpoint and re-spawned into the same segment.
+    pub restores: Counter,
 }
 
 /// Aggregated view of one rank's counters.
@@ -71,6 +89,11 @@ pub struct StatsSnapshot {
     pub chunk_lost: u64,
     pub chunk_skipped: u64,
     pub relayouts: u64,
+    pub suspected: u64,
+    pub false_suspicion: u64,
+    pub recovered: u64,
+    pub dead_masked: u64,
+    pub restores: u64,
 }
 
 impl CommStats {
@@ -89,6 +112,11 @@ impl CommStats {
             chunk_lost: self.chunk_lost.get(),
             chunk_skipped: self.chunk_skipped.get(),
             relayouts: self.relayouts.get(),
+            suspected: self.suspected.get(),
+            false_suspicion: self.false_suspicion.get(),
+            recovered: self.recovered.get(),
+            dead_masked: self.dead_masked.get(),
+            restores: self.restores.get(),
         }
     }
 }
@@ -132,6 +160,11 @@ impl WorldStats {
             t.chunk_lost += s.chunk_lost;
             t.chunk_skipped += s.chunk_skipped;
             t.relayouts += s.relayouts;
+            t.suspected += s.suspected;
+            t.false_suspicion += s.false_suspicion;
+            t.recovered += s.recovered;
+            t.dead_masked += s.dead_masked;
+            t.restores += s.restores;
         }
         t
     }
@@ -191,5 +224,24 @@ mod tests {
         assert_eq!(t.chunk_lost, 1);
         assert_eq!(t.chunk_skipped, 6);
         assert_eq!(t.relayouts, 3);
+    }
+
+    #[test]
+    fn liveness_counters_aggregate() {
+        let ws = WorldStats::new(3);
+        ws.rank(0).suspected.add(2);
+        ws.rank(1).suspected.add(1);
+        ws.rank(0).false_suspicion.add(1);
+        ws.rank(2).recovered.add(1);
+        ws.rank(1).dead_masked.add(4);
+        ws.rank(2).restores.add(1);
+        let t = ws.total();
+        assert_eq!(t.suspected, 3);
+        assert_eq!(t.false_suspicion, 1);
+        assert_eq!(t.recovered, 1);
+        assert_eq!(t.dead_masked, 4);
+        assert_eq!(t.restores, 1);
+        // every resolved suspicion (false or rebirth) had to be raised
+        assert!(t.false_suspicion + t.recovered <= t.suspected);
     }
 }

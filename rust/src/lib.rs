@@ -32,6 +32,7 @@
 //! See `examples/` for full workloads and `asgd fig --id N` for the
 //! paper-figure reproductions.
 
+pub mod ckpt;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -62,6 +62,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             report.comm.bytes_sent / report.comm.sent.max(1)
         );
     }
+    if report.comm.suspected > 0 || report.comm.restores > 0 {
+        println!(
+            "liveness          suspected {}  false {}  recovered {}  masked blocks {}  restores {}",
+            report.comm.suspected,
+            report.comm.false_suspicion,
+            report.comm.recovered,
+            report.comm.dead_masked,
+            report.comm.restores
+        );
+    }
     if let Some(dir) = args.get("out") {
         let dir = PathBuf::from(dir);
         asgd::metrics::export::write_trace(&report, dir.join("trace.csv"))?;

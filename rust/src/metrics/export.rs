@@ -39,6 +39,11 @@ pub fn report_json(report: &RunReport) -> Json {
         .num("blocks_lost", report.comm.chunk_lost as f64)
         .num("blocks_skipped", report.comm.chunk_skipped as f64)
         .num("relayouts", report.comm.relayouts as f64)
+        .num("suspected", report.comm.suspected as f64)
+        .num("false_suspicion", report.comm.false_suspicion as f64)
+        .num("recovered", report.comm.recovered as f64)
+        .num("dead_masked", report.comm.dead_masked as f64)
+        .num("restores", report.comm.restores as f64)
         .build()
 }
 

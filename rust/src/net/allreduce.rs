@@ -115,6 +115,32 @@ impl TreeReduce {
         }
         sum
     }
+
+    /// Allreduce of the *weighted* mean `sum(w_i x_i) / sum(w_i)` — the
+    /// survivor-only aggregation primitive: the weights renormalize over
+    /// exactly the participants present, so a fabric built over the live
+    /// subset never references (let alone waits on) a dead rank.
+    /// Implemented on the same tree: each participant contributes
+    /// `[w_i * x_i .. , w_i]` and the division happens after the
+    /// broadcast, so every rank returns the same vector.
+    ///
+    /// Weights must be positive (a zero-weight participant should simply
+    /// not participate).
+    pub fn allreduce_weighted_mean(&self, rank: usize, local: Vec<f32>, weight: f32) -> Vec<f32> {
+        assert!(weight > 0.0, "non-positive weight {weight} for rank {rank}");
+        let mut payload = local;
+        for v in payload.iter_mut() {
+            *v *= weight;
+        }
+        payload.push(weight);
+        let mut out = self.allreduce_sum(rank, payload);
+        let total = out.pop().expect("weight element survives the reduce");
+        debug_assert!(total > 0.0);
+        for v in out.iter_mut() {
+            *v /= total;
+        }
+        out
+    }
 }
 
 fn highest_pow2_below(n: usize) -> usize {
@@ -167,6 +193,43 @@ mod tests {
         for h in handles {
             let got = h.join().unwrap();
             assert!(got.iter().all(|&v| (v - 1.5).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn weighted_mean_renormalizes_over_participants() {
+        let n = 3;
+        let tree = TreeReduce::new(n);
+        // states 0, 10, 40 with weights 1, 2, 1 -> (0 + 20 + 40) / 4 = 15
+        let inputs = [(0.0f32, 1.0f32), (10.0, 2.0), (40.0, 1.0)];
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let tree = tree.clone();
+                let (x, w) = inputs[rank];
+                std::thread::spawn(move || tree.allreduce_weighted_mean(rank, vec![x; 4], w))
+            })
+            .collect();
+        for h in handles {
+            let got = h.join().unwrap();
+            assert_eq!(got.len(), 4, "weight element must be stripped");
+            assert!(got.iter().all(|&v| (v - 15.0).abs() < 1e-4), "{got:?}");
+        }
+        // equal weights degenerate to the plain mean, over any live count
+        for live in [1usize, 2, 5] {
+            let tree = TreeReduce::new(live);
+            let handles: Vec<_> = (0..live)
+                .map(|rank| {
+                    let tree = tree.clone();
+                    std::thread::spawn(move || {
+                        tree.allreduce_weighted_mean(rank, vec![rank as f32; 2], 1.0)
+                    })
+                })
+                .collect();
+            let expect = (0..live).sum::<usize>() as f32 / live as f32;
+            for h in handles {
+                let got = h.join().unwrap();
+                assert!(got.iter().all(|&v| (v - expect).abs() < 1e-4), "live={live}");
+            }
         }
     }
 

@@ -53,6 +53,22 @@ fn adaptive_preset_carries_the_span_and_cadence() {
 }
 
 #[test]
+fn faulty_preset_carries_the_fault_plan() {
+    use asgd::config::{CommMode, FaultKind};
+    let cfg = TrainConfig::from_toml_file("configs/faulty_cluster.toml").unwrap();
+    assert_eq!(cfg.comm, CommMode::Adaptive { min_chunks: 2, max_chunks: 16 });
+    assert_eq!(cfg.lease_polls, 24);
+    assert_eq!(cfg.ckpt_interval, 20);
+    assert_eq!(cfg.faults.events.len(), 2);
+    assert_eq!(cfg.faults.events[0].kind, FaultKind::Kill);
+    assert_eq!((cfg.faults.events[0].rank, cfg.faults.events[0].at_iter), (3, 50));
+    assert_eq!(cfg.faults.events[1].kind, FaultKind::Straggle { delay_us: 500 });
+    // ranks stay valid when CI shrinks the worker count to 4
+    assert!(cfg.faults.events.iter().all(|e| e.rank < 4));
+    assert_eq!(cfg.faults.to_dsl(), "kill@3:50,straggle@2:20:500");
+}
+
+#[test]
 fn codebook_preset_is_hog_d128() {
     let cfg = TrainConfig::from_toml_file("configs/paper_codebook.toml").unwrap();
     assert_eq!(cfg.data.dim, 128);

@@ -101,6 +101,41 @@ fn comm_presets_train_end_to_end() {
     }
 }
 
+/// The faulty-cluster preset end-to-end, shrunk for CI: a kill and a
+/// straggler ride adaptive communication, the survivors converge, the
+/// corpse is suspected, and the killed rank's missing iterations show up
+/// in the totals — the run completes instead of hanging in a join-all.
+#[test]
+fn faulty_preset_trains_end_to_end() {
+    let mut cfg = TrainConfig::from_toml_file("configs/faulty_cluster.toml")
+        .unwrap_or_else(|e| panic!("faulty_cluster: {e:#}"));
+    // shrink for CI: 4 workers x 60 iters on 20k samples (fault ranks in
+    // the preset are < 4 by design so the plan stays addressable)
+    cfg.workers = 4;
+    cfg.iters = 60;
+    cfg.eval_every = 20;
+    cfg.eval_samples = 2048;
+    cfg.data.n_samples = 20_000;
+    cfg.lease_polls = 8;
+    cfg.validate().unwrap();
+    let report = run_training(&cfg).unwrap_or_else(|e| panic!("faulty_cluster: {e:#}"));
+    // rank 3 dies before iteration 50; everyone else finishes 60
+    assert_eq!(report.total_iters, 3 * 60 + 50);
+    assert!(report.comm.chunk_sent > 0, "adaptive transport still ran");
+    assert!(
+        report.comm.suspected >= 1,
+        "the corpse must be suspected by at least one survivor"
+    );
+    assert!(
+        report.comm.false_suspicion + report.comm.recovered <= report.comm.suspected,
+        "liveness resolution identity"
+    );
+    assert_eq!(report.comm.restores, 0, "no restart event in the preset");
+    let first = report.trace.first().unwrap().objective;
+    let last = report.trace.last().unwrap().objective;
+    assert!(last < first, "survivors did not converge: {first} -> {last}");
+}
+
 #[test]
 fn unknown_figure_errors() {
     let dir = tmpdir("bad");

@@ -741,3 +741,82 @@ fn prop_tiled_stats_matches_bruteforce_across_tile_remainders() {
     kmeans_stats(&x, &w, 3, 2, &mut scratch);
     assert_eq!(scratch.stats.counts, vec![b as f32, 0.0, 0.0], "tie-break toward low index");
 }
+
+/// Property (fault-tolerance subsystem): the checkpoint codec round-trips
+/// bit-identically — state vector (including -0.0 / denormal payloads),
+/// RNG stream, and shard draw position — and a restore rebuilt from it
+/// resumes the exact local trajectory: same recipient draws, same
+/// mini-batches.
+#[test]
+fn prop_checkpoint_roundtrip_is_bit_identical() {
+    use asgd::ckpt::Checkpoint;
+
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::seed_from_u64(8_800_000 + case);
+        let state_len = 1 + rng.index(300);
+        let mut state: Vec<f32> = (0..state_len).map(|_| rng.next_normal() as f32).collect();
+        // sprinkle adversarial payloads: -0.0, zero, tiny
+        if state_len > 2 {
+            state[0] = -0.0;
+            state[1] = 0.0;
+            state[2] = f32::MIN_POSITIVE;
+        }
+        // a mid-flight worker RNG, advanced a random amount
+        let mut worker_rng = Xoshiro256pp::seed_from_u64(case * 31 + 5);
+        for _ in 0..rng.index(100) {
+            worker_rng.next_u64();
+        }
+        let snap = Checkpoint {
+            rank: rng.index(64) as u32,
+            iter: rng.next_u64() >> 20,
+            rng: worker_rng.state(),
+            shard_epochs: rng.index(50) as u64,
+            shard_cursor: rng.index(10_000) as u64,
+            state: state.clone(),
+        };
+        let decoded = Checkpoint::decode(&snap.encode())
+            .unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        assert_eq!(decoded, snap, "case {case}");
+        for (a, b) in snap.state.iter().zip(&decoded.state) {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case}: payload bits changed");
+        }
+        // the restored RNG continues the exact stream
+        let mut restored = Xoshiro256pp::from_state(decoded.rng);
+        for _ in 0..16 {
+            assert_eq!(worker_rng.next_u64(), restored.next_u64(), "case {case}");
+        }
+    }
+}
+
+/// Property: a shard rebuilt from the same partition seed and
+/// fast-forwarded to a checkpointed draw position serves bit-identical
+/// mini-batches from there on, for random shard geometries and walk
+/// lengths (the supervisor's restore path end to end).
+#[test]
+fn prop_shard_fast_forward_matches_live_walk() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::seed_from_u64(8_900_000 + case);
+        let n = 200 + rng.index(800);
+        let workers = 1 + rng.index(4);
+        let seed = case * 131 + 7;
+        let ds = synthetic::generate(n, 3, 2, 1.0, 4.0, seed);
+        let rank = rng.index(workers);
+        let b = 1 + rng.index((n / workers).max(2) - 1);
+        let mut live = partition(&ds, workers, seed).swap_remove(rank);
+        let walk = rng.index(60);
+        for _ in 0..walk {
+            live.next_batch(b);
+        }
+        let (epochs, cursor) = live.draw_position();
+        let mut restored = partition(&ds, workers, seed).swap_remove(rank);
+        restored.fast_forward(epochs, cursor);
+        for draw in 0..20 {
+            let a: Vec<f32> = live.next_batch(b).0.to_vec();
+            let (bx, _) = restored.next_batch(b);
+            assert_eq!(
+                a, bx,
+                "case {case}: draw {draw} diverged (n={n} workers={workers} b={b} walk={walk})"
+            );
+        }
+    }
+}

@@ -20,9 +20,15 @@
 //! CI runs this file in release mode with explicit `--test-threads` so
 //! the writers and readers really overlap (see .github/workflows/ci.yml).
 
-use asgd::gaspi::{ChunkLayout, ReadOutcome, Segment};
-use asgd::util::rng::Xoshiro256pp;
+use asgd::gaspi::liveness::admit_presence;
+use asgd::gaspi::{
+    ChunkLayout, LivenessView, ReadOutcome, Segment, Topology, Transition, World,
+};
+use asgd::kernels::ExtPresence;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+
+use asgd::util::rng::Xoshiro256pp;
 
 /// Payload word encoding: every word of a write is `sender * STRIDE +
 /// iter`, so a sender-pure block is constant and decodes back to the
@@ -312,6 +318,182 @@ fn stress_sole_writer_recovers_fresh_after_group_chaos() {
             assert_eq!((sender, iter), (7, 4242));
             assert_eq!(v, seg.clean_mark(0, c), "seed {seed}: Fresh off the clean mark");
             check_fresh_block(&buf, sender, iter, &format!("seed {seed} sole"));
+        }
+    }
+}
+
+/// Heartbeat arm: live publishers at wildly different cadences, one that
+/// pauses and resumes, one that dies for good, and one that dies and is
+/// reborn (incarnation bump) — all while an observer lease-polls with a
+/// short lease.  Standing invariants:
+///
+/// * a rank that resumes publishing is always *eventually* un-suspected
+///   (and the resolution matches the incarnation: false suspicion for a
+///   pause, recovered for a rebirth);
+/// * a permanently dead rank, once suspected, never flips back;
+/// * presence bits for suspected ranks are provably masked — on the same
+///   `admit_presence` path the worker's receive loop uses;
+/// * the resolution identity `false_suspicion + recovered <= suspected`
+///   holds at every poll.
+#[test]
+fn stress_heartbeat_leases_suspect_resume_and_rebirth() {
+    for seed in [51u64, 52] {
+        // ranks: 0 = observer, 1 = fast publisher, 2 = pauser,
+        // 3 = dies for good, 4 = dies then reborn
+        let world = Arc::new(World::new(5, 1, 8, Topology::flat(5)));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut handles = Vec::new();
+
+        let fast = {
+            let world = world.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    world.segments[1].publish_heartbeat();
+                    std::thread::yield_now();
+                }
+            })
+        };
+        handles.push(fast);
+        let pauser = {
+            let world = world.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                // beat, go silent for a long stretch, then resume under
+                // the same incarnation until told to stop
+                for _ in 0..50 {
+                    world.segments[2].publish_heartbeat();
+                    std::thread::yield_now();
+                }
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                while !stop.load(Ordering::Relaxed) {
+                    world.segments[2].publish_heartbeat();
+                    std::thread::yield_now();
+                }
+            })
+        };
+        handles.push(pauser);
+        let dying = {
+            let world = world.clone();
+            std::thread::spawn(move || {
+                for _ in 0..20 {
+                    world.segments[3].publish_heartbeat();
+                    std::thread::yield_now();
+                }
+                // ...and never again
+            })
+        };
+        handles.push(dying);
+        let reborn = {
+            let world = world.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                for _ in 0..20 {
+                    world.segments[4].publish_heartbeat();
+                    std::thread::yield_now();
+                }
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                // the supervisor's restore path: new incarnation, then
+                // the replacement keeps beating
+                world.segments[4].begin_incarnation();
+                while !stop.load(Ordering::Relaxed) {
+                    world.segments[4].publish_heartbeat();
+                    std::thread::yield_now();
+                }
+            })
+        };
+        handles.push(reborn);
+
+        // the observer: seeded poll cadence, worker-identical
+        // bookkeeping, polling until every expected transition has been
+        // observed (bounded by a generous wall deadline so a hang fails
+        // loudly instead of spinning forever)
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut view = LivenessView::new(5, 0, 16);
+        let mut presence = ExtPresence::new(1, 1);
+        let mut events: Vec<(usize, Transition)> = Vec::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        loop {
+            for r in 1..5usize {
+                if let Some(t) = view.observe(r, world.segments[r].heartbeat()) {
+                    events.push((r, t));
+                }
+                // the worker's presence decision, on the shared path:
+                // suspected senders never set a bit
+                presence.clear_buffer(0);
+                let admitted = admit_presence(&view, &mut presence, 0, 0, r as u32);
+                assert_eq!(
+                    admitted,
+                    !view.is_suspected(r),
+                    "seed {seed}: admit disagrees with suspicion"
+                );
+                assert_eq!(
+                    presence.present(0, 0),
+                    admitted,
+                    "seed {seed}: presence bit disagrees with admission"
+                );
+            }
+            let fs = events.iter().filter(|(_, t)| *t == Transition::FalseSuspicion).count();
+            let rec = events.iter().filter(|(_, t)| *t == Transition::Recovered).count();
+            let susp = events.iter().filter(|(_, t)| *t == Transition::Suspected).count();
+            assert!(fs + rec <= susp, "seed {seed}: resolution identity broken");
+            let seen_pause = events
+                .iter()
+                .any(|&(r, t)| r == 2 && t == Transition::FalseSuspicion);
+            let seen_rebirth = events
+                .iter()
+                .any(|&(r, t)| r == 4 && t == Transition::Recovered);
+            if seen_pause && seen_rebirth && view.is_suspected(3) {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "seed {seed}: deadline without pause={seen_pause} rebirth={seen_rebirth} \
+                 dead-suspected={}",
+                view.is_suspected(3)
+            );
+            if rng.index(64) == 0 {
+                std::thread::yield_now();
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in handles {
+            h.join().unwrap();
+        }
+
+        // the permanently dead rank never flips back: its word is static
+        // forever, so no amount of further polling resolves it
+        for _ in 0..200 {
+            assert_eq!(
+                view.observe(3, world.segments[3].heartbeat()),
+                None,
+                "seed {seed}: a corpse must never resolve"
+            );
+        }
+        assert!(view.is_suspected(3), "seed {seed}: dead rank un-suspected");
+        assert!(
+            !events.iter().any(|&(r, t)| {
+                r == 3 && (t == Transition::FalseSuspicion || t == Transition::Recovered)
+            }),
+            "seed {seed}: a corpse resolved mid-run"
+        );
+        // "a suspected rank that resumes publishing is always eventually
+        // un-suspected": even if ranks 2/4 happened to be re-suspected at
+        // the instant the loop broke, one more beat resolves them
+        for r in [2usize, 4] {
+            if view.is_suspected(r) {
+                world.segments[r].publish_heartbeat();
+                let t = view.observe(r, world.segments[r].heartbeat());
+                assert!(
+                    matches!(t, Some(Transition::FalseSuspicion | Transition::Recovered)),
+                    "seed {seed}: resumed rank {r} did not resolve"
+                );
+            }
+            assert!(!view.is_suspected(r), "seed {seed}: rank {r} still suspected");
+            assert!(
+                admit_presence(&view, &mut presence, 0, 0, r as u32),
+                "seed {seed}: resumed rank {r} still masked"
+            );
         }
     }
 }
