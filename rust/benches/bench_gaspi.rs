@@ -50,7 +50,7 @@ fn main() {
     let mut versions = [0u64; 4];
     runner.bench("poll 4 slots under contention", 4.0, || {
         for slot in 0..4 {
-            let (_, _, _, v) = world.segments[0].read_slot_into(slot, versions[slot], &mut buf);
+            let (_, _, _, v) = world.segment(0).read_slot_into(slot, versions[slot], &mut buf);
             versions[slot] = v;
         }
     });

@@ -1,10 +1,21 @@
 //! Paper benchmark: figures 1 / 5 / 6 / 7 — strong-scaling runtime
 //! series through the calibrated cluster simulator, with the paper's
-//! shape claims asserted (who wins, by roughly what factor).
+//! shape claims asserted (who wins, by roughly what factor) — plus a
+//! substrate arm timing the same put/read round over every transport
+//! backend (`inproc`, `shmem` over real mmap files, `socket` over
+//! loopback TCP).  The substrate rows are same-host lower bounds for
+//! each wire, not cluster numbers; both sets land in
+//! `BENCH_scaling.json` (`ASGD_BENCH_SCALING_OUT` overrides the path)
+//! so CI can diff per-backend regressions across PRs.
 
-use asgd::gaspi::Topology;
+use asgd::gaspi::stats::WorldStats;
+use asgd::gaspi::{Shmem, Socket, Topology, World};
 use asgd::sim::{ClusterSim, SimWorkload};
+use asgd::util::benchjson;
+use asgd::util::json::{Json, JsonBuilder};
 use asgd::util::timer::BenchRunner;
+use std::path::PathBuf;
+use std::sync::Arc;
 
 fn main() {
     let mut runner = BenchRunner::quick();
@@ -53,5 +64,159 @@ fn main() {
     println!("\n1024-CPU ratios: SGD/ASGD {ratio_sgd:.2}x, BATCH/ASGD {ratio_batch:.2}x");
     assert!(ratio_sgd > 2.0, "fig-1 SGD gap too small: {ratio_sgd:.2}");
     assert!(ratio_batch > 3.0, "fig-1 BATCH gap too small: {ratio_batch:.2}");
+
+    let backends = backend_substrate_arm(&mut runner);
+
+    let path = std::env::var_os("ASGD_BENCH_SCALING_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("BENCH_scaling.json"));
+    let section = JsonBuilder::new()
+        .num("ratio_sgd_over_asgd_1024cpu", ratio_sgd)
+        .num("ratio_batch_over_asgd_1024cpu", ratio_batch)
+        .val("backends", Json::Arr(backends))
+        .build();
+    benchjson::write_section_at(&path, "paper_scaling", section).expect("bench json");
+    println!("   [paper_scaling] results merged into {}", path.display());
     println!("paper_scaling OK");
+}
+
+/// A self-cleaning scratch directory for the shmem backend's segment
+/// files (no tempfile dependency).
+struct ScratchDir(PathBuf);
+
+impl ScratchDir {
+    fn new() -> Self {
+        let p = std::env::temp_dir().join(format!("asgd-bench-scaling-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        Self(p)
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+struct BackendArm {
+    name: &'static str,
+    world: Arc<World>,
+    /// Keeps the shmem segment files alive (and cleaned) for the run.
+    _dir: Option<ScratchDir>,
+}
+
+fn backend_arms(ranks: usize, n_slots: usize, state_len: usize, chunks: usize) -> Vec<BackendArm> {
+    let mut v = vec![BackendArm {
+        name: "inproc",
+        world: Arc::new(World::new_chunked(
+            ranks,
+            n_slots,
+            state_len,
+            chunks,
+            Topology::flat(ranks),
+        )),
+        _dir: None,
+    }];
+    let dir = ScratchDir::new();
+    let shmem = Shmem::create(
+        &dir.0,
+        ranks,
+        n_slots,
+        state_len,
+        chunks,
+        Arc::new(WorldStats::new(ranks)),
+    )
+    .expect("creating shmem backend");
+    v.push(BackendArm {
+        name: "shmem",
+        world: Arc::new(World::with_transport(shmem, Topology::flat(ranks))),
+        _dir: Some(dir),
+    });
+    let socket = Socket::loopback(
+        ranks,
+        n_slots,
+        state_len,
+        chunks,
+        Arc::new(WorldStats::new(ranks)),
+    )
+    .expect("creating loopback socket backend");
+    v.push(BackendArm {
+        name: "socket",
+        world: Arc::new(World::with_transport(socket, Topology::flat(ranks))),
+        _dir: None,
+    });
+    v
+}
+
+/// The same drained put/read round over every transport backend: one
+/// sender streams whole-state rounds of block puts into rank 0, the
+/// round is quiesced (so socket frames are actually applied, not just
+/// enqueued), then every block is read back once.  Units are block
+/// puts, so `throughput()` is delivered blocks/s including the drain.
+fn backend_substrate_arm(runner: &mut BenchRunner) -> Vec<Json> {
+    println!("\n== substrate arm: drained put/read rounds per transport backend ==");
+    let (ranks, n_slots, state_len, chunks) = (4usize, 2usize, 4096usize, 8usize);
+    let rounds = if benchjson::quick_mode() { 8u64 } else { 32u64 };
+    let mut out = Vec::new();
+    for arm in backend_arms(ranks, n_slots, state_len, chunks) {
+        let world = arm.world.clone();
+        let l = world.layout();
+        let payloads: Vec<Vec<f32>> = (0..l.n_chunks())
+            .map(|c| vec![1.0f32; l.chunk_len(c)])
+            .collect();
+        let mut iter = 0u64;
+        let mut versions = vec![0u64; l.n_chunks()];
+        let mut buf = vec![0.0f32; state_len];
+        let units = (rounds * l.n_chunks() as u64) as f64;
+        let st = runner.bench(&format!("substrate {:<6} put+read round", arm.name), units, || {
+            for _ in 0..rounds {
+                for (c, payload) in payloads.iter().enumerate() {
+                    world.put_chunk(1, 0, iter, c, payload, (iter % n_slots as u64) as usize);
+                }
+                iter += 1;
+            }
+            world.quiesce();
+            for c in 0..l.n_chunks() {
+                let range = l.bounds(c);
+                let got = world.segment(0).read_block_into(0, c, versions[c], &mut buf[range]);
+                versions[c] = got.3;
+                std::hint::black_box(got.0);
+            }
+        });
+        let (median_ns, blocks_per_s) = (st.median_ns, st.throughput());
+        let per_put_bytes = 4 * state_len / chunks;
+        println!(
+            "   {:<6}: {:>8.1} us/round, {:>10.0} blocks/s ({per_put_bytes} B/put, same-host wire)",
+            arm.name,
+            median_ns / 1e3,
+            blocks_per_s
+        );
+        out.push(
+            JsonBuilder::new()
+                .str("backend", arm.name)
+                .num("state_len", state_len as f64)
+                .num("chunks", chunks as f64)
+                .num("per_put_bytes", per_put_bytes as f64)
+                .num("round_median_ns", median_ns)
+                .num("blocks_per_s", blocks_per_s)
+                .build(),
+        );
+        // drained delivery sanity: the sender-side ledger saw every put
+        let total = world.stats.total();
+        assert_eq!(
+            total.chunk_sent % l.n_chunks() as u64,
+            0,
+            "{}: whole-state rounds must put every block",
+            arm.name
+        );
+        assert!(
+            total.chunk_sent > 0 && total.chunk_lost <= total.chunk_sent,
+            "{}: accounting out of range (sent {}, lost {})",
+            arm.name,
+            total.chunk_sent,
+            total.chunk_lost
+        );
+    }
+    out
 }

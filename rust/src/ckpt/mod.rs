@@ -16,25 +16,32 @@
 //!   checkpoint carrying rows,
 //! * the comm epoch `iter` (the next iteration to execute).
 //!
-//! External-buffer contents, seqlock reader versions, dirty bitmaps and
-//! the adaptive controller are deliberately *not* checkpointed: they are
-//! reconstructible conservative state (a restored worker re-polls
-//! everything and re-sends everything), and the substrate's semantics
+//! External-buffer contents and seqlock reader versions are deliberately
+//! *not* checkpointed: they are reconstructible conservative state (a
+//! restored worker re-polls everything), and the substrate's semantics
 //! already tolerate replayed messages — restore is at-least-once by
-//! design, exactly like a delayed RDMA put.
+//! design, exactly like a delayed RDMA put.  Since version 2 the
+//! *learned communication state* — the adaptive controller's chunk count
+//! and the dirty bitmap — IS carried (`ctrl_chunks`, `dirty`): both are
+//! still safe to discard (a restored sender would just re-learn from
+//! `min_chunks` and re-send everything), but carrying them means a
+//! rebirth resumes the feedback loop where it left off instead of paying
+//! the warm-up again.
 //!
-//! ## Binary format (version 1)
+//! ## Binary format (version 2)
 //!
 //! Little-endian, fixed layout:
 //!
 //! ```text
 //! magic    u32  = 0x504B_4341  (the bytes "ACKP" in LE order)
-//! version  u32  = 1
+//! version  u32  = 2
 //! rank     u32
 //! iter     u64    next iteration to execute
 //! rng      4xu64  xoshiro256++ raw state
 //! epochs   u64    shard reshuffle count
 //! cursor   u64    shard row cursor
+//! ctrl     u32    adaptive controller logical chunk count (0 = none)
+//! dirty    u64    dirty-map bitmask at capture time
 //! len      u64    state vector length in f32 words
 //! state    len x u32  (f32 bit patterns)
 //! checksum u64    FNV-1a 64 over every preceding byte
@@ -42,15 +49,18 @@
 //!
 //! Decoding verifies magic, version, length and checksum and refuses
 //! loudly on any mismatch — a truncated or bit-flipped checkpoint must
-//! never be restored into a live segment.
+//! never be restored into a live segment.  Version 1 (which never
+//! existed on disk — the store was memory-only until the `--ckpt-dir`
+//! satellite) is refused like any other unknown version.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
 /// `"ACKP"` in LE byte order.
 pub const MAGIC: u32 = 0x504B_4341;
-/// Current (and only) format version.
-pub const VERSION: u32 = 1;
+/// Current format version.
+pub const VERSION: u32 = 2;
 
 /// A worker's resumable snapshot.  See the module docs for exactly what
 /// is (and is not) captured.
@@ -66,13 +76,18 @@ pub struct Checkpoint {
     pub shard_epochs: u64,
     /// Shard row cursor at capture time.
     pub shard_cursor: u64,
+    /// Adaptive controller's learned logical chunk count at capture time
+    /// (0 = the worker ran without an adaptive controller).
+    pub ctrl_chunks: u32,
+    /// Dirty-map bitmask at capture time (0 when not in chunked mode).
+    pub dirty: u64,
     /// The state vector.
     pub state: Vec<f32>,
 }
 
 /// FNV-1a 64 — tiny, dependency-free, and plenty for catching the
 /// truncation/bit-rot class of corruption a checkpoint can suffer.
-fn fnv1a(bytes: &[u8]) -> u64 {
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xCBF2_9CE4_8422_2325u64;
     for &b in bytes {
         h ^= u64::from(b);
@@ -119,7 +134,7 @@ impl<'a> Reader<'a> {
 }
 
 impl Checkpoint {
-    /// Serialize to the version-1 binary format (checksum appended).
+    /// Serialize to the version-2 binary format (checksum appended).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(4 * self.state.len() + 96);
         put_u32(&mut out, MAGIC);
@@ -131,6 +146,8 @@ impl Checkpoint {
         }
         put_u64(&mut out, self.shard_epochs);
         put_u64(&mut out, self.shard_cursor);
+        put_u32(&mut out, self.ctrl_chunks);
+        put_u64(&mut out, self.dirty);
         put_u64(&mut out, self.state.len() as u64);
         for &w in &self.state {
             put_u32(&mut out, w.to_bits());
@@ -140,7 +157,7 @@ impl Checkpoint {
         out
     }
 
-    /// Parse and verify a version-1 checkpoint.  Errors (never panics)
+    /// Parse and verify a version-2 checkpoint.  Errors (never panics)
     /// on bad magic, unknown version, truncation, trailing garbage, or a
     /// checksum mismatch.
     pub fn decode(bytes: &[u8]) -> Result<Self> {
@@ -170,6 +187,8 @@ impl Checkpoint {
         }
         let shard_epochs = r.u64()?;
         let shard_cursor = r.u64()?;
+        let ctrl_chunks = r.u32()?;
+        let dirty = r.u64()?;
         let len = r.u64()? as usize;
         let mut state = Vec::with_capacity(len);
         for _ in 0..len {
@@ -187,6 +206,8 @@ impl Checkpoint {
             rng,
             shard_epochs,
             shard_cursor,
+            ctrl_chunks,
+            dirty,
             state,
         })
     }
@@ -195,31 +216,102 @@ impl Checkpoint {
 /// The supervisor-side checkpoint store: one slot per rank, holding the
 /// latest *encoded* checkpoint.  Workers overwrite their own slot on
 /// each checkpoint interval; the supervisor reads a slot only after the
-/// owning worker is dead, so the mutex is never contended on the hot
-/// path beyond its own rank's store.
+/// owning worker is dead, so the memory backing's mutex is never
+/// contended on the hot path beyond its own rank's store.
+///
+/// Two backings share the same API:
+///
+/// * **Memory** (`CkptStore::new`) — one in-process slot per rank; dies
+///   with the supervisor.  Used by the threaded backends and all tests
+///   that don't care about durability.
+/// * **Disk** (`CkptStore::disk`) — one `rank-NNN.ackp` file per rank
+///   under a directory (`--ckpt-dir`).  Writes go to a temp file first
+///   and are renamed into place, so a crash mid-write can never leave a
+///   truncated checkpoint where a good one stood; the decoder's checksum
+///   refuses anything that slips through anyway.  Survives the
+///   supervisor, which is what makes `asgd restore` possible.
 ///
 /// Storing encoded bytes (not the struct) is deliberate: every restore
 /// exercises the full codec including the checksum, so the format can
 /// never rot unexercised.
 pub struct CkptStore {
-    slots: Vec<Mutex<Option<Vec<u8>>>>,
+    backing: Backing,
+}
+
+enum Backing {
+    Memory(Vec<Mutex<Option<Vec<u8>>>>),
+    Disk(PathBuf),
+}
+
+/// `rank-007.ackp` under `dir`.
+fn rank_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("rank-{rank:03}.ackp"))
 }
 
 impl CkptStore {
+    /// In-memory store (the default; contents die with the process).
     pub fn new(ranks: usize) -> Self {
         Self {
-            slots: (0..ranks).map(|_| Mutex::new(None)).collect(),
+            backing: Backing::Memory((0..ranks).map(|_| Mutex::new(None)).collect()),
         }
     }
 
+    /// Disk-backed store rooted at `dir` (created if missing).  Existing
+    /// `rank-NNN.ackp` files are left in place — that is the point: a
+    /// fresh supervisor can [`CkptStore::load`] what a dead one wrote.
+    pub fn disk(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        Ok(Self {
+            backing: Backing::Disk(dir),
+        })
+    }
+
+    /// True when checkpoints survive the process (disk backing).
+    pub fn is_durable(&self) -> bool {
+        matches!(self.backing, Backing::Disk(_))
+    }
+
     /// Publish `rank`'s latest checkpoint (overwrites the previous one).
+    ///
+    /// Infallible by design — a checkpoint that fails to persist must
+    /// not kill the worker taking it (the previous checkpoint is still
+    /// good); disk errors are logged and dropped.
     pub fn store(&self, rank: usize, encoded: Vec<u8>) {
-        *self.slots[rank].lock().expect("ckpt slot poisoned") = Some(encoded);
+        match &self.backing {
+            Backing::Memory(slots) => {
+                *slots[rank].lock().expect("ckpt slot poisoned") = Some(encoded);
+            }
+            Backing::Disk(dir) => {
+                let path = rank_path(dir, rank);
+                let tmp = dir.join(format!("rank-{rank:03}.ackp.tmp"));
+                let res = std::fs::write(&tmp, &encoded)
+                    .and_then(|()| std::fs::rename(&tmp, &path));
+                if let Err(e) = res {
+                    log::error!("checkpoint write for rank {rank} failed ({e}); keeping previous");
+                    let _ = std::fs::remove_file(&tmp);
+                }
+            }
+        }
     }
 
     /// The latest encoded checkpoint for `rank`, if any was ever taken.
     pub fn load(&self, rank: usize) -> Option<Vec<u8>> {
-        self.slots[rank].lock().expect("ckpt slot poisoned").clone()
+        match &self.backing {
+            Backing::Memory(slots) => slots[rank].lock().expect("ckpt slot poisoned").clone(),
+            Backing::Disk(dir) => {
+                let path = rank_path(dir, rank);
+                match std::fs::read(&path) {
+                    Ok(bytes) => Some(bytes),
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+                    Err(e) => {
+                        log::error!("checkpoint read {} failed: {e}", path.display());
+                        None
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -234,6 +326,8 @@ mod tests {
             rng: [1, u64::MAX, 0x0123_4567_89AB_CDEF, 42],
             shard_epochs: 7,
             shard_cursor: 481,
+            ctrl_chunks: 6,
+            dirty: 0b1011,
             state: vec![0.0, -0.0, 1.5, f32::MIN_POSITIVE, -3.25e7],
         }
     }
@@ -276,7 +370,7 @@ mod tests {
         assert!(Checkpoint::decode(&wrong).unwrap_err().to_string().contains("magic"));
         // future version (re-checksummed likewise)
         let mut vnext = bytes.clone();
-        vnext[4] = 2;
+        vnext[4] = 3;
         let sum = super::fnv1a(&vnext[..body_len]);
         vnext[body_len..].copy_from_slice(&sum.to_le_bytes());
         assert!(Checkpoint::decode(&vnext).unwrap_err().to_string().contains("version"));
@@ -301,5 +395,39 @@ mod tests {
         let latest = Checkpoint::decode(&store.load(0).unwrap()).unwrap();
         assert_eq!(latest.iter, 9999);
         assert!(store.load(1).is_none());
+    }
+
+    #[test]
+    fn learned_comm_state_roundtrips() {
+        let mut c = sample();
+        c.ctrl_chunks = 0; // "no controller" is representable
+        c.dirty = u64::MAX;
+        let d = Checkpoint::decode(&c.encode()).unwrap();
+        assert_eq!(d.ctrl_chunks, 0);
+        assert_eq!(d.dirty, u64::MAX);
+    }
+
+    #[test]
+    fn disk_store_survives_a_new_store_instance() {
+        let dir = std::env::temp_dir().join(format!("asgd-ckpt-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let store = CkptStore::disk(&dir).unwrap();
+            assert!(store.is_durable());
+            assert!(store.load(0).is_none());
+            let mut c = sample();
+            c.rank = 0;
+            store.store(0, c.encode());
+            c.iter = 4242;
+            store.store(0, c.encode()); // latest wins, via rename
+        }
+        // a brand-new store over the same dir sees what the dead one wrote
+        let store = CkptStore::disk(&dir).unwrap();
+        let latest = Checkpoint::decode(&store.load(0).unwrap()).unwrap();
+        assert_eq!(latest.iter, 4242);
+        assert_eq!(latest.ctrl_chunks, 6);
+        assert_eq!(latest.dirty, 0b1011);
+        assert!(store.load(1).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

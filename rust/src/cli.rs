@@ -153,6 +153,15 @@ pub fn train_config(args: &Args) -> Result<crate::config::TrainConfig> {
     if let Some(v) = args.get_usize("ckpt-interval")? {
         cfg.ckpt_interval = v;
     }
+    if let Some(v) = args.get("ckpt-dir") {
+        cfg.ckpt_dir = Some(v.to_string());
+    }
+    if let Some(v) = args.get("transport") {
+        cfg.transport = TransportKind::parse(v)?;
+    }
+    if let Some(v) = args.get("transport-dir") {
+        cfg.transport_dir = Some(v.to_string());
+    }
     if let Some(v) = args.get("faults") {
         cfg.faults = FaultPlan::parse(v)?;
     }
@@ -216,6 +225,9 @@ asgd — Asynchronous Parallel Stochastic Gradient Descent (Keuper & Pfreundt 20
 
 USAGE:
   asgd train [OPTIONS]          run one training job and print the report
+  asgd restore [OPTIONS]        resume a crashed run from --ckpt-dir
+  asgd worker --attach DIR ...  one worker process (shmem transport; spawned
+                                by the supervisor, rarely typed by hand)
   asgd fig --id N [--quick]     regenerate paper figure N (or --all)
   asgd datagen --out FILE ...   generate + store a dataset (.asgd binary)
   asgd calibrate                print the simulator compute calibration
@@ -240,6 +252,11 @@ TRAIN OPTIONS (defaults in parentheses):
   --adapt-interval S     adaptive: send events per re-derive    (16)
   --lease-polls N        liveness: polls before suspecting a peer (128)
   --ckpt-interval N      checkpoint every N iterations, 0 = off (0)
+  --ckpt-dir DIR         durable checkpoints (rank-NNN.ackp files); what
+                         `asgd restore` resumes from               (off)
+  --transport T          inproc | shmem | socket                 (inproc)
+  --transport-dir DIR    shmem: run directory for the mapped segments
+                         (fresh /dev/shm dir per run)
   --faults PLAN          fault injection, e.g. \"kill@3:50, restart@1:30:50,
                          pause@0:20:100, straggle@2:10:2000\" (KIND@RANK:ITER[:PARAM])
   --gate G               full | per-center | off                (full)
@@ -332,6 +349,23 @@ mod tests {
         assert!(train_config(&parse("train --faults boom@1:2")).is_err());
         assert!(train_config(&parse("train --workers 4 --faults kill@4:10")).is_err());
         assert!(train_config(&parse("train --faults restart@1:10")).is_err()); // no ckpt
+    }
+
+    #[test]
+    fn transport_flags_roundtrip() {
+        let cfg = train_config(&parse("train --transport socket")).unwrap();
+        assert_eq!(cfg.transport, crate::config::TransportKind::Socket);
+        let cfg =
+            train_config(&parse("train --transport shmem --transport-dir /dev/shm/asgd-x"))
+                .unwrap();
+        assert_eq!(cfg.transport, crate::config::TransportKind::Shmem);
+        assert_eq!(cfg.transport_dir.as_deref(), Some("/dev/shm/asgd-x"));
+        let cfg = train_config(&parse("train --ckpt-interval 10 --ckpt-dir /tmp/ck")).unwrap();
+        assert_eq!(cfg.ckpt_dir.as_deref(), Some("/tmp/ck"));
+        // contradictions are refused, not silently dropped
+        assert!(train_config(&parse("train --transport rdma")).is_err());
+        assert!(train_config(&parse("train --transport socket --transport-dir /tmp/x")).is_err());
+        assert!(train_config(&parse("train --ckpt-dir /tmp/ck")).is_err()); // no interval
     }
 
     #[test]

@@ -317,6 +317,45 @@ impl CommMode {
     }
 }
 
+/// Which [`crate::gaspi::Transport`] backend carries the one-sided puts
+/// and the metadata plane.
+///
+/// * `Inproc` — segments on the process heap, puts are direct stores
+///   (the original substrate; workers are threads of one process).
+/// * `Shmem` — segments are memory-mapped files in a run directory
+///   (`/dev/shm` by default): workers are *real processes* spawned via
+///   `asgd worker --attach`, sharing the wire format across address
+///   spaces.  The seqlock protocol is identical — mmap only moves where
+///   the words live.
+/// * `Socket` — length-prefixed TCP frames into per-process mirror
+///   segments, with refuse-loudly wire-version negotiation (HELLO).
+///   The in-tree driver runs a full loopback mesh in one process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    Inproc,
+    Shmem,
+    Socket,
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Inproc => "inproc",
+            TransportKind::Shmem => "shmem",
+            TransportKind::Socket => "socket",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "inproc" | "in-process" | "threads" => TransportKind::Inproc,
+            "shmem" | "shm" | "mmap" => TransportKind::Shmem,
+            "socket" | "tcp" => TransportKind::Socket,
+            other => bail!("unknown transport {other:?} (inproc|shmem|socket)"),
+        })
+    }
+}
+
 /// Model family trained through the numeric core.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ModelKind {
@@ -436,6 +475,18 @@ pub struct TrainConfig {
     /// Checkpoint every this many iterations (0 = checkpointing off).
     /// Required >= 1 whenever the fault plan contains `restart` events.
     pub ckpt_interval: usize,
+    /// Directory for durable checkpoints (`rank-NNN.ackp` files).  `None`
+    /// keeps checkpoints in supervisor memory; `Some` makes them survive
+    /// the process, which is what `asgd restore` resumes from.  Requires
+    /// `ckpt_interval >= 1` (a dir nothing is ever written to is refused).
+    pub ckpt_dir: Option<String>,
+    /// Which transport backend carries puts and metadata
+    /// ([`TransportKind`]; default in-process).
+    pub transport: TransportKind,
+    /// Shmem only: the run directory holding the mapped segment files
+    /// and the control region.  `None` derives a fresh `/dev/shm`
+    /// directory per run.
+    pub transport_dir: Option<String>,
     /// Deterministic fault-injection plan (empty = fault-free run).
     /// A non-empty plan routes the run through the elastic supervisor
     /// ([`crate::coordinator::elastic`]).
@@ -476,6 +527,9 @@ impl TrainConfig {
             adapt_interval: 16,
             lease_polls: 128,
             ckpt_interval: 0,
+            ckpt_dir: None,
+            transport: TransportKind::Inproc,
+            transport_dir: None,
             faults: FaultPlan::default(),
             gate: GateMode::FullState,
             aggregation: AggMode::ReturnFirst,
@@ -562,6 +616,37 @@ impl TrainConfig {
             // a zero lease would suspect every peer on the first poll and
             // mask all communication — refuse loudly, like send_interval
             bail!("lease_polls must be >= 1 (0 suspects every peer immediately)");
+        }
+        if self.transport != TransportKind::Inproc && self.method == Method::Batch {
+            // alg. 1 never touches the one-sided substrate: a transport
+            // knob that would do nothing there is refused, not dormant
+            bail!(
+                "transport={} is not supported for method=batch (no substrate)",
+                self.transport.name()
+            );
+        }
+        if self.transport_dir.is_some() && self.transport != TransportKind::Shmem {
+            bail!(
+                "transport_dir only applies to transport=shmem (got transport={})",
+                self.transport.name()
+            );
+        }
+        if self.ckpt_dir.is_some() && self.ckpt_interval == 0 {
+            bail!("ckpt_dir without ckpt_interval >= 1 would never be written to");
+        }
+        if self.transport == TransportKind::Shmem
+            && !self.faults.is_empty()
+            && self.faults.events.iter().any(|e| {
+                matches!(e.kind, FaultKind::Restart { .. }) && self.ckpt_dir.is_none()
+            })
+        {
+            // a shmem restart crosses a process boundary: the replacement
+            // child can only restore from a checkpoint that survives its
+            // predecessor, i.e. a durable one
+            bail!(
+                "transport=shmem restart events need ckpt_dir (in-memory checkpoints die \
+                 with the worker process)"
+            );
         }
         if self.method == Method::Batch && self.ckpt_interval > 0 {
             // the BATCH driver has no checkpoint path; a knob that would
@@ -679,8 +764,12 @@ impl TrainConfig {
         } else {
             format!(" faults=[{}]", self.faults.to_dsl())
         };
+        let transport = match self.transport {
+            TransportKind::Inproc => String::new(),
+            t => format!(" transport={}", t.name()),
+        };
         format!(
-            "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}{}{}",
+            "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}{}{}{}",
             self.method.name(),
             self.model.name(),
             self.workers,
@@ -691,6 +780,7 @@ impl TrainConfig {
             self.aggregation.name(),
             self.backend.name(),
             comm,
+            transport,
             faults
         )
     }
@@ -712,6 +802,9 @@ impl TrainConfig {
             .num("max_chunks", self.comm.chunk_span().1 as f64)
             .num("lease_polls", self.lease_polls as f64)
             .num("ckpt_interval", self.ckpt_interval as f64)
+            .str("ckpt_dir", self.ckpt_dir.as_deref().unwrap_or(""))
+            .str("transport", self.transport.name())
+            .str("transport_dir", self.transport_dir.as_deref().unwrap_or(""))
             .str("faults", &self.faults.to_dsl())
             .str("gate", self.gate.name())
             .str("aggregation", self.aggregation.name())
@@ -792,6 +885,17 @@ impl TrainConfig {
         // no clamping: validate() rejects lease_polls == 0 loudly
         cfg.lease_polls = get_usize("lease_polls", cfg.lease_polls)?;
         cfg.ckpt_interval = get_usize("ckpt_interval", cfg.ckpt_interval)?;
+        if let Some(v) = t.get("ckpt_dir") {
+            cfg.ckpt_dir = Some(v.as_str().context("ckpt_dir must be a string")?.to_string());
+        }
+        if let Some(v) = t.get("transport") {
+            cfg.transport =
+                TransportKind::parse(v.as_str().context("transport must be a string")?)?;
+        }
+        if let Some(v) = t.get("transport_dir") {
+            cfg.transport_dir =
+                Some(v.as_str().context("transport_dir must be a string")?.to_string());
+        }
         if let Some(v) = t.get("faults") {
             cfg.faults = FaultPlan::parse(v.as_str().context("faults must be a DSL string")?)?;
         }
@@ -860,6 +964,95 @@ impl TrainConfig {
         }
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Serialize to the same TOML subset [`TrainConfig::from_toml_str`]
+    /// reads — the multiprocess shmem driver hands each worker process
+    /// its config through this round trip, so every knob the loader
+    /// understands must be emitted here (the roundtrip test pins that).
+    pub fn to_toml(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::with_capacity(1024);
+        s.push_str("[train]\n");
+        let _ = writeln!(s, "model = \"{}\"", self.model.name());
+        match &self.model {
+            ModelKind::KMeans { k } => {
+                let _ = writeln!(s, "k = {k}");
+            }
+            ModelKind::Mlp { hidden, classes } => {
+                let _ = writeln!(s, "hidden = {hidden}");
+                let _ = writeln!(s, "classes = {classes}");
+            }
+            ModelKind::LinReg | ModelKind::LogReg => {}
+        }
+        let _ = writeln!(s, "dim = {}", self.data.dim);
+        let _ = writeln!(s, "method = \"{}\"", self.method.name());
+        let _ = writeln!(s, "workers = {}", self.workers);
+        let _ = writeln!(s, "minibatch = {}", self.minibatch);
+        let _ = writeln!(s, "eps = {:?}", self.eps);
+        let _ = writeln!(s, "iters = {}", self.iters);
+        let _ = writeln!(s, "fanout = {}", self.fanout);
+        let _ = writeln!(s, "send_interval = {}", self.send_interval);
+        let _ = writeln!(s, "n_buffers = {}", self.n_buffers);
+        let _ = writeln!(s, "comm = \"{}\"", self.comm.name());
+        match self.comm {
+            CommMode::Full => {}
+            CommMode::Chunked { chunks } => {
+                let _ = writeln!(s, "chunks = {chunks}");
+            }
+            CommMode::Adaptive {
+                min_chunks,
+                max_chunks,
+            } => {
+                let _ = writeln!(s, "min_chunks = {min_chunks}");
+                let _ = writeln!(s, "max_chunks = {max_chunks}");
+            }
+        }
+        let _ = writeln!(s, "adapt_interval = {}", self.adapt_interval);
+        let _ = writeln!(s, "lease_polls = {}", self.lease_polls);
+        let _ = writeln!(s, "ckpt_interval = {}", self.ckpt_interval);
+        if let Some(dir) = &self.ckpt_dir {
+            let _ = writeln!(s, "ckpt_dir = \"{dir}\"");
+        }
+        let _ = writeln!(s, "transport = \"{}\"", self.transport.name());
+        if let Some(dir) = &self.transport_dir {
+            let _ = writeln!(s, "transport_dir = \"{dir}\"");
+        }
+        if !self.faults.is_empty() {
+            let _ = writeln!(s, "faults = \"{}\"", self.faults.to_dsl());
+        }
+        let _ = writeln!(s, "gate = \"{}\"", self.gate.name());
+        let _ = writeln!(s, "aggregation = \"{}\"", self.aggregation.name());
+        let _ = writeln!(s, "race = \"{}\"", self.race.name());
+        let _ = writeln!(s, "backend = \"{}\"", self.backend.name());
+        let _ = writeln!(s, "seed = {}", self.seed);
+        let _ = writeln!(s, "eval_every = {}", self.eval_every);
+        let _ = writeln!(s, "eval_samples = {}", self.eval_samples);
+        let _ = writeln!(s, "artifact_dir = \"{}\"", self.artifact_dir);
+        s.push_str("\n[data]\n");
+        let _ = writeln!(s, "n_samples = {}", self.data.n_samples);
+        let _ = writeln!(s, "seed = {}", self.data.seed);
+        match &self.data.kind {
+            DataKind::Synthetic {
+                k_true,
+                cluster_std,
+                min_dist,
+            } => {
+                let _ = writeln!(s, "kind = \"synthetic\"");
+                let _ = writeln!(s, "k_true = {k_true}");
+                let _ = writeln!(s, "cluster_std = {cluster_std:?}");
+                let _ = writeln!(s, "min_dist = {min_dist:?}");
+            }
+            DataKind::Hog { k_true } => {
+                let _ = writeln!(s, "kind = \"hog\"");
+                let _ = writeln!(s, "k_true = {k_true}");
+            }
+            DataKind::Linear { noise } => {
+                let _ = writeln!(s, "kind = \"linear\"");
+                let _ = writeln!(s, "noise = {noise:?}");
+            }
+        }
+        s
     }
 }
 
@@ -1235,6 +1428,97 @@ cluster_std = 0.8
         )
         .unwrap();
         assert_eq!(cfg.data.dim, 128);
+    }
+
+    #[test]
+    fn transport_knobs_roundtrip_and_refuse_contradictions() {
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\ntransport = \"socket\"\n[data]\nn_samples = 100000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.transport, TransportKind::Socket);
+        assert!(cfg.describe().contains("transport=socket"));
+        assert_eq!(cfg.to_json().get("transport").unwrap().as_str(), Some("socket"));
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\ntransport = \"shmem\"\n\
+             transport_dir = \"/dev/shm/asgd-x\"\n[data]\nn_samples = 100000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.transport, TransportKind::Shmem);
+        assert_eq!(cfg.transport_dir.as_deref(), Some("/dev/shm/asgd-x"));
+        // the default stays inproc and out of the one-line description
+        let cfg = TrainConfig::asgd_default(10, 10, 500);
+        assert_eq!(cfg.transport, TransportKind::Inproc);
+        assert!(!cfg.describe().contains("transport="));
+        // transport_dir without shmem is a contradiction
+        assert!(TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\ntransport = \"socket\"\n\
+             transport_dir = \"/tmp/x\"\n[data]\nn_samples = 100000\n",
+        )
+        .is_err());
+        // batch never touches the substrate
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.method = Method::Batch;
+        c.transport = TransportKind::Socket;
+        assert!(c.validate().is_err());
+        // ckpt_dir without an interval would never be written to
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.ckpt_dir = Some("/tmp/ck".into());
+        assert!(c.validate().is_err());
+        c.ckpt_interval = 10;
+        c.validate().unwrap();
+        // shmem restarts cross a process boundary: memory checkpoints
+        // die with the worker, so a durable dir is required
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.transport = TransportKind::Shmem;
+        c.ckpt_interval = 5;
+        c.faults = FaultPlan::parse("restart@1:10:50").unwrap();
+        assert!(c.validate().is_err());
+        c.ckpt_dir = Some("/tmp/ck".into());
+        c.validate().unwrap();
+        assert!(TransportKind::parse("rdma").is_err());
+    }
+
+    /// `to_toml` must emit every knob `from_toml_str` reads — the
+    /// multiprocess driver ships configs to worker processes through
+    /// this round trip, so a field it drops would silently reset in
+    /// every child.
+    #[test]
+    fn to_toml_roundtrips_every_knob() {
+        let mut cfg = TrainConfig::asgd_default(7, 12, 96);
+        cfg.method = Method::Asgd;
+        cfg.workers = 5;
+        cfg.iters = 77;
+        cfg.fanout = 3;
+        cfg.send_interval = 2;
+        cfg.n_buffers = 6;
+        cfg.comm = CommMode::Adaptive { min_chunks: 2, max_chunks: 12 };
+        cfg.adapt_interval = 9;
+        cfg.lease_polls = 33;
+        cfg.ckpt_interval = 11;
+        cfg.ckpt_dir = Some("/tmp/asgd-ck".into());
+        cfg.transport = TransportKind::Shmem;
+        cfg.transport_dir = Some("/dev/shm/asgd-run".into());
+        cfg.faults = FaultPlan::parse("restart@1:30:50,straggle@2:10:500").unwrap();
+        cfg.gate = GateMode::Off;
+        cfg.aggregation = AggMode::TreeMean;
+        cfg.race = RacePolicy::AcceptTorn;
+        cfg.eps = 0.05;
+        cfg.seed = 777;
+        cfg.eval_every = 13;
+        cfg.eval_samples = 4096;
+        cfg.data.n_samples = 50_000;
+        cfg.data.seed = 999;
+        let reparsed = TrainConfig::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(format!("{cfg:?}"), format!("{reparsed:?}"));
+        // and the chunked + linear-data corner
+        let mut cfg = TrainConfig::asgd_default(4, 8, 64);
+        cfg.workers = 4;
+        cfg.comm = CommMode::Chunked { chunks: 4 };
+        cfg.model = ModelKind::LinReg;
+        cfg.data.kind = DataKind::Linear { noise: 0.25 };
+        let reparsed = TrainConfig::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(format!("{cfg:?}"), format!("{reparsed:?}"));
     }
 
     #[test]

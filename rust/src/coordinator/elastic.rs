@@ -28,11 +28,11 @@
 //! semantics.
 
 use super::aggregate::survivor_aggregate;
-use super::worker::{run_worker, OnceInstant, WorkerCtx, WorkerResult};
+use super::build_world;
+use super::worker::{run_worker, OnceInstant, SampleCounter, StartGate, WorkerCtx, WorkerResult};
 use crate::ckpt::{Checkpoint, CkptStore};
 use crate::config::{FaultEvent, FaultKind, TrainConfig};
 use crate::data::{partition::partition_rank, Dataset};
-use crate::gaspi::{Topology, World};
 use crate::metrics::{RunReport, TracePoint};
 use crate::models::Model;
 use crate::runtime::Stepper;
@@ -82,7 +82,7 @@ fn spawn_worker(
                 // rebirth announcement: peers that suspected the corpse
                 // observe the incarnation advance and count `recovered`
                 // — the whole un-suspect path is this one wait-free store
-                ctx.world.segments[rank].begin_incarnation();
+                ctx.world.begin_incarnation(rank);
             }
             let msg = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 run_worker(ctx)
@@ -108,18 +108,17 @@ pub fn run_elastic(
     w0: Vec<f32>,
 ) -> Result<RunReport> {
     let n = cfg.workers;
-    let state_len = w0.len();
-    let world = Arc::new(World::new_chunked(
-        n,
-        cfg.n_buffers.max(1),
-        state_len,
-        cfg.comm.chunks(),
-        Topology::flat(n),
-    ));
-    let barrier = Arc::new(Barrier::new(n));
+    let world = build_world(cfg, w0.len())?;
+    let barrier = Arc::new(StartGate::Thread(Barrier::new(n)));
     let start = Arc::new(OnceInstant::default());
-    let global_samples = Arc::new(AtomicU64::new(0));
-    let ckpt = (cfg.ckpt_interval > 0).then(|| Arc::new(CkptStore::new(n)));
+    let global_samples = Arc::new(SampleCounter::Local(AtomicU64::new(0)));
+    // checkpoints go to disk when the run asked for durability, else to
+    // the in-memory per-rank store (enough for same-process restores)
+    let ckpt = match (cfg.ckpt_interval > 0, &cfg.ckpt_dir) {
+        (false, _) => None,
+        (true, Some(dir)) => Some(Arc::new(CkptStore::disk(dir)?)),
+        (true, None) => Some(Arc::new(CkptStore::new(n))),
+    };
     // the supervisor keeps the master sender so replacement threads can
     // be handed clones at restore time
     let (tx, rx) = channel::<Exit>();
@@ -152,6 +151,7 @@ pub fn run_elastic(
             ckpt: ckpt.clone(),
             rng_state: None,
             straggle_us: None,
+            resume_comm: None,
             restored: false,
         };
         handles.push(spawn_worker(ctx, tx.clone(), 0)?);
@@ -241,6 +241,9 @@ pub fn run_elastic(
                     // (the recipient/slot draws continue bit-identically)
                     rng_state: Some(snap.rng),
                     straggle_us: sticky_straggle[rank],
+                    // the sender resumes its learned chunk count and
+                    // dirty map instead of re-learning from the floor
+                    resume_comm: Some((snap.ctrl_chunks, snap.dirty)),
                     restored: true,
                 };
                 // the restore latency (and the incarnation bump ending
@@ -259,6 +262,7 @@ pub fn run_elastic(
     for h in handles {
         h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
     }
+    world.quiesce();
     let wallclock = t0.elapsed().as_secs_f64();
 
     // ---- survivor-only aggregation (never blocks on a dead rank) ------
@@ -286,7 +290,7 @@ pub fn run_elastic(
         final_error: model.truth_error(&data, &final_state).unwrap_or(f64::NAN),
         wallclock_s: wallclock,
         total_iters,
-        global_samples: global_samples.load(std::sync::atomic::Ordering::Relaxed),
+        global_samples: global_samples.load(),
         trace,
         comm: world.stats.total(),
         state: final_state,

@@ -17,11 +17,14 @@
 pub mod aggregate;
 pub mod batch;
 pub mod elastic;
+pub mod procs;
 pub mod worker;
 
-use crate::config::{AggMode, Method, TrainConfig};
+use crate::ckpt::{Checkpoint, CkptStore};
+use crate::config::{AggMode, Method, TrainConfig, TransportKind};
 use crate::data::{partition::partition, Dataset};
-use crate::gaspi::{Topology, World};
+use crate::gaspi::stats::WorldStats;
+use crate::gaspi::{Socket, Topology, World};
 use crate::metrics::RunReport;
 use crate::models;
 use crate::runtime::build_stepper;
@@ -30,7 +33,32 @@ use anyhow::{Context, Result};
 use std::sync::atomic::AtomicU64;
 use std::sync::{Arc, Barrier};
 use std::time::Instant;
-use worker::{run_worker, OnceInstant, WorkerCtx, WorkerResult};
+use worker::{run_worker, OnceInstant, SampleCounter, StartGate, WorkerCtx, WorkerResult};
+
+/// Build the in-process substrate the config asks for: heap segments
+/// with direct stores (`inproc`) or a loopback TCP mesh (`socket`).
+/// The `shmem` transport never reaches this — its workers are separate
+/// processes driven by [`procs::run_multiprocess`].
+pub(crate) fn build_world(cfg: &TrainConfig, state_len: usize) -> Result<Arc<World>> {
+    let n = cfg.workers;
+    let n_slots = cfg.n_buffers.max(1);
+    let chunks = cfg.comm.chunks();
+    let topology = Topology::flat(n);
+    Ok(match cfg.transport {
+        TransportKind::Inproc => {
+            Arc::new(World::new_chunked(n, n_slots, state_len, chunks, topology))
+        }
+        TransportKind::Socket => {
+            let stats = Arc::new(WorldStats::new(n));
+            let transport = Socket::loopback(n, n_slots, state_len, chunks, stats)
+                .context("building loopback socket transport")?;
+            Arc::new(World::with_transport(transport, topology))
+        }
+        TransportKind::Shmem => {
+            anyhow::bail!("shmem transport is multi-process (handled by procs::run_multiprocess)")
+        }
+    })
+}
 
 /// Train per the config on a freshly generated dataset.
 pub fn run_training(cfg: &TrainConfig) -> Result<RunReport> {
@@ -55,6 +83,13 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
         return Ok(batch::run_batch(cfg, model, data, shards, w0));
     }
 
+    if cfg.transport == TransportKind::Shmem {
+        // real worker processes over memory-mapped segments; the
+        // multiprocess driver owns spawning, fault supervision and
+        // result collection end to end
+        return procs::run_multiprocess(cfg, model, data, w0);
+    }
+
     let stepper = build_stepper(cfg, model.clone()).context("building stepper")?;
 
     if !cfg.faults.is_empty() || cfg.ckpt_interval > 0 {
@@ -65,16 +100,10 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
         return elastic::run_elastic(cfg, model, stepper, data, shards, w0);
     }
 
-    let world = Arc::new(World::new_chunked(
-        cfg.workers,
-        cfg.n_buffers.max(1),
-        w0.len(),
-        cfg.comm.chunks(),
-        Topology::flat(cfg.workers),
-    ));
-    let barrier = Arc::new(Barrier::new(cfg.workers));
+    let world = build_world(cfg, w0.len())?;
+    let barrier = Arc::new(StartGate::Thread(Barrier::new(cfg.workers)));
     let start = Arc::new(OnceInstant::default());
-    let global_samples = Arc::new(AtomicU64::new(0));
+    let global_samples = Arc::new(SampleCounter::Local(AtomicU64::new(0)));
     let t0 = Instant::now();
 
     let mut handles = Vec::with_capacity(cfg.workers);
@@ -96,6 +125,7 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
             ckpt: None,
             rng_state: None,
             straggle_us: None,
+            resume_comm: None,
             restored: false,
         };
         let name = format!("w{:03}", ctx.rank);
@@ -112,6 +142,9 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
         results.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?);
     }
     results.sort_by_key(|r| r.rank);
+    // drain any in-flight frames (socket) so the receive-side counters
+    // are settled before the report totals them; a no-op for inproc
+    world.quiesce();
     let wallclock = t0.elapsed().as_secs_f64();
 
     // §4.3 final aggregation.  The workers' states are aggregated over
@@ -140,7 +173,146 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
         final_error: model.truth_error(&data, &final_state).unwrap_or(f64::NAN),
         wallclock_s: wallclock,
         total_iters,
-        global_samples: global_samples.load(std::sync::atomic::Ordering::Relaxed),
+        global_samples: global_samples.load(),
+        trace,
+        comm: world.stats.total(),
+        state: final_state,
+    })
+}
+
+/// Resume a crashed (or interrupted) run from its durable checkpoints —
+/// the `asgd restore` entry point.  Requires `ckpt_dir`; every rank with
+/// a `rank-NNN.ackp` file resumes bit-exactly from it (state, RNG
+/// stream, shard cursor, learned comm state), ranks without one start
+/// fresh.  The original fault plan is NOT replayed — the faults already
+/// happened; a restore is the recovery, not a re-run.
+pub fn resume_training(cfg: &TrainConfig) -> Result<RunReport> {
+    let mut cfg = cfg.clone();
+    if !cfg.faults.is_empty() {
+        log::info!("restore: dropping fault plan [{}]", cfg.faults.to_dsl());
+        cfg.faults = crate::config::FaultPlan::default();
+    }
+    cfg.validate()?;
+    let dir = cfg
+        .ckpt_dir
+        .clone()
+        .context("asgd restore needs --ckpt-dir (nothing to resume from)")?;
+    if cfg.transport == TransportKind::Shmem {
+        return procs::resume_multiprocess(&cfg);
+    }
+    let data = Arc::new(crate::data::generate(&cfg.data));
+    let model: Arc<dyn models::Model> = models::build(&cfg).into();
+    let mut leader_rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let w0 = model.init_state(&data, &mut leader_rng);
+    let shards = partition(&data, cfg.workers, cfg.seed);
+    let stepper = build_stepper(&cfg, model.clone()).context("building stepper")?;
+
+    let world = build_world(&cfg, w0.len())?;
+    let store = Arc::new(CkptStore::disk(&dir)?);
+    let start = Arc::new(OnceInstant::default());
+    let global_samples = Arc::new(SampleCounter::Local(AtomicU64::new(0)));
+    // every worker is marked restored, so nobody waits on the start
+    // barrier (a mixed fresh/restored crew would deadlock it: the fresh
+    // ranks would wait for arrivals that never come)
+    let barrier = Arc::new(StartGate::Thread(Barrier::new(cfg.workers)));
+    let t0 = Instant::now();
+
+    let mut handles = Vec::with_capacity(cfg.workers);
+    for mut shard in shards {
+        let rank = shard.worker;
+        let snap = match store.load(rank) {
+            Some(encoded) => Some(
+                Checkpoint::decode(&encoded)
+                    .with_context(|| format!("restoring rank {rank} from {dir}"))?,
+            ),
+            None => {
+                log::info!("restore: rank {rank} has no checkpoint; starting fresh");
+                None
+            }
+        };
+        let ctx = match snap {
+            Some(snap) => {
+                shard.fast_forward(snap.shard_epochs, snap.shard_cursor as usize);
+                world.begin_incarnation(rank);
+                world.stats.rank(rank).restores.add(1);
+                WorkerCtx {
+                    rank,
+                    cfg: cfg.clone(),
+                    shard,
+                    w0: snap.state,
+                    world: world.clone(),
+                    stepper: stepper.clone(),
+                    model: model.clone(),
+                    eval_data: data.clone(),
+                    barrier: barrier.clone(),
+                    start: start.clone(),
+                    global_samples: global_samples.clone(),
+                    faults: Vec::new(),
+                    start_iter: snap.iter,
+                    ckpt: Some(store.clone()),
+                    rng_state: Some(snap.rng),
+                    straggle_us: None,
+                    resume_comm: Some((snap.ctrl_chunks, snap.dirty)),
+                    restored: true,
+                }
+            }
+            None => WorkerCtx {
+                rank,
+                cfg: cfg.clone(),
+                shard,
+                w0: w0.clone(),
+                world: world.clone(),
+                stepper: stepper.clone(),
+                model: model.clone(),
+                eval_data: data.clone(),
+                barrier: barrier.clone(),
+                start: start.clone(),
+                global_samples: global_samples.clone(),
+                faults: Vec::new(),
+                start_iter: 0,
+                ckpt: Some(store.clone()),
+                rng_state: None,
+                straggle_us: None,
+                resume_comm: None,
+                restored: true, // skips the barrier, like every rank here
+            },
+        };
+        let name = format!("w{:03}r", rank);
+        handles.push(
+            std::thread::Builder::new()
+                .name(name)
+                .spawn(move || run_worker(ctx))
+                .context("spawning restored worker")?,
+        );
+    }
+    let mut results: Vec<WorkerResult> = Vec::with_capacity(cfg.workers);
+    for h in handles {
+        results.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?);
+    }
+    results.sort_by_key(|r| r.rank);
+    world.quiesce();
+    let wallclock = t0.elapsed().as_secs_f64();
+    let final_state = match cfg.aggregation {
+        AggMode::ReturnFirst => std::mem::take(&mut results[0].state),
+        mode => {
+            let states: Vec<&[f32]> = results.iter().map(|r| r.state.as_slice()).collect();
+            aggregate::aggregate(mode, &states)
+        }
+    };
+    let trace = results
+        .iter()
+        .find(|r| r.rank == 0)
+        .map(|r| r.trace.clone())
+        .unwrap_or_default();
+    let total_iters: u64 = results.iter().map(|r| r.iters).sum();
+    Ok(RunReport {
+        method: cfg.method.name().into(),
+        workers: cfg.workers,
+        final_objective: model.eval(&data, &final_state, cfg.eval_samples),
+        final_error: model.truth_error(&data, &final_state).unwrap_or(f64::NAN),
+        wallclock_s: wallclock,
+        total_iters,
+        global_samples: global_samples.load(),
         trace,
         comm: world.stats.total(),
         state: final_state,

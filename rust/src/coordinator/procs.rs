@@ -1,0 +1,657 @@
+//! The multi-process driver behind `transport = "shmem"`: real worker
+//! *processes* over memory-mapped segments, supervised by the leader.
+//!
+//! Split of responsibilities:
+//!
+//! * [`run_multiprocess`] (parent) — creates the run directory (the
+//!   `/dev/shm`-backed segment files, the control region, and a
+//!   `config.toml` carrying every knob), spawns one `asgd worker
+//!   --attach DIR --rank R` child per rank, and supervises them the way
+//!   the elastic supervisor watches threads: a child that exits with a
+//!   `restart` death recorded in its result file is respawned
+//!   `--restored` against the *same* segments, a `kill` death marks the
+//!   rank dead for good, and the final aggregation runs over the
+//!   survivors only.
+//! * [`run_child`] (child) — the `asgd worker` entry point: re-derives
+//!   the dataset, model, `w_0`, and shard deterministically from the
+//!   shipped config (nothing big crosses the process boundary), attaches
+//!   to the segments, and runs the ordinary [`run_worker`] loop with the
+//!   start barrier and the paper's global sample counter `I` backed by
+//!   the shared control region.
+//!
+//! Results cross back via per-rank `result-NNN.bin` files (checksummed,
+//! written tmp+rename).  Statistics are per-process ledgers — each
+//! incarnation's snapshot plus the parent's own counters sum to exactly
+//! the global totals, because every counter is ticked by the process
+//! that performed the put or observed the loss, never twice.
+//!
+//! One honest divergence from the threaded supervisor: wall-clock trace
+//! timestamps restart from zero in a respawned incarnation (an `Instant`
+//! cannot cross a process boundary), so a rank-0 restart shows a time
+//! reset in its concatenated trace instead of the threaded path's
+//! monotone clock.
+
+use super::aggregate::survivor_aggregate;
+use super::worker::{run_worker, OnceInstant, SampleCounter, StartGate, WorkerCtx, WorkerResult};
+use crate::ckpt::{fnv1a, Checkpoint, CkptStore};
+use crate::cli::Args;
+use crate::config::{FaultEvent, FaultKind, TrainConfig};
+use crate::data::{partition::partition_rank, Dataset};
+use crate::gaspi::stats::{StatsSnapshot, WorldStats};
+use crate::gaspi::transport::shmem::CtlRegion;
+use crate::gaspi::{Shmem, Topology, World};
+use crate::metrics::{RunReport, TracePoint};
+use crate::models::{self, Model};
+use crate::runtime::build_stepper;
+use crate::util::rng::Xoshiro256pp;
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::process::Child;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Magic leading every worker result file ("ASGDRES1", little-endian).
+const RESULT_MAGIC: u64 = u64::from_le_bytes(*b"ASGDRES1");
+
+/// Per-rank terminal status tracked by the parent (mirror of the
+/// elastic supervisor's bookkeeping).
+enum RankState {
+    Running,
+    Done(Vec<f32>),
+    Dead,
+}
+
+/// Live children, killed on drop so a supervisor error never leaks
+/// orphan worker processes grinding against unlinked segments.
+#[derive(Default)]
+struct Crew(Vec<(usize, Child)>);
+
+impl Drop for Crew {
+    fn drop(&mut self) {
+        for (_, child) in &mut self.0 {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+fn result_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("result-{rank:03}.bin"))
+}
+
+/// The run directory hosting segments, control region, config, and
+/// results.  `true` when we made it up (and should remove it after).
+fn run_dir(cfg: &TrainConfig) -> (PathBuf, bool) {
+    match &cfg.transport_dir {
+        Some(d) => (PathBuf::from(d), false),
+        None => {
+            let shm = Path::new("/dev/shm");
+            let base = if shm.is_dir() { shm.to_path_buf() } else { std::env::temp_dir() };
+            (base.join(format!("asgd-run-{}", std::process::id())), true)
+        }
+    }
+}
+
+/// The binary to spawn workers from: `ASGD_BIN` when set (tests point
+/// it at the built artifact), else this very executable.
+fn worker_binary() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("ASGD_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    std::env::current_exe()
+        .context("resolving the asgd binary for worker processes (set ASGD_BIN to override)")
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spawn_child(
+    bin: &Path,
+    dir: &Path,
+    rank: usize,
+    restored: bool,
+    delay_ms: u64,
+    skip_events: usize,
+    straggle_us: Option<u64>,
+    fresh_ok: bool,
+) -> Result<Child> {
+    let mut cmd = std::process::Command::new(bin);
+    cmd.arg("worker")
+        .arg("--attach")
+        .arg(dir)
+        .arg("--rank")
+        .arg(rank.to_string());
+    if restored {
+        cmd.arg("--restored");
+    }
+    if delay_ms > 0 {
+        cmd.arg("--restore-delay-ms").arg(delay_ms.to_string());
+    }
+    if skip_events > 0 {
+        cmd.arg("--skip-events").arg(skip_events.to_string());
+    }
+    if let Some(us) = straggle_us {
+        cmd.arg("--straggle-us").arg(us.to_string());
+    }
+    if fresh_ok {
+        cmd.arg("--fresh-ok");
+    }
+    cmd.spawn()
+        .with_context(|| format!("spawning worker process {rank} from {}", bin.display()))
+}
+
+/// Run the config's training as one worker process per rank over shared
+/// memory.  The caller has already generated `data` and initialized
+/// `w0`; the children re-derive both from the same seeds.
+pub fn run_multiprocess(
+    cfg: &TrainConfig,
+    model: Arc<dyn Model>,
+    data: Arc<Dataset>,
+    w0: Vec<f32>,
+) -> Result<RunReport> {
+    drive(cfg, model, data, w0, false)
+}
+
+/// Resume a crashed shmem run: every child starts `--restored` (no
+/// start barrier) and loads its durable checkpoint when one exists.
+pub fn resume_multiprocess(cfg: &TrainConfig) -> Result<RunReport> {
+    let data = Arc::new(crate::data::generate(&cfg.data));
+    let model: Arc<dyn Model> = models::build(cfg).into();
+    let mut leader_rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let w0 = model.init_state(&data, &mut leader_rng);
+    drive(cfg, model, data, w0, true)
+}
+
+fn drive(
+    cfg: &TrainConfig,
+    model: Arc<dyn Model>,
+    data: Arc<Dataset>,
+    w0: Vec<f32>,
+    all_restored: bool,
+) -> Result<RunReport> {
+    let n = cfg.workers;
+    let (dir, dir_is_ours) = run_dir(cfg);
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating run directory {}", dir.display()))?;
+    let stats = Arc::new(WorldStats::new(n));
+    let transport = Shmem::create(&dir, n, cfg.n_buffers.max(1), w0.len(), cfg.comm.chunks(), stats)
+        .context("creating shared-memory segments")?;
+    let world = Arc::new(World::with_transport(transport, Topology::flat(n)));
+    let ctl = CtlRegion::create(&dir, n)?;
+    // the children rebuild everything from this file; to_toml() emits
+    // every knob the loader reads (pinned by the roundtrip test)
+    std::fs::write(dir.join("config.toml"), cfg.to_toml())
+        .context("writing run config for worker processes")?;
+    let bin = worker_binary()?;
+    let t0 = Instant::now();
+
+    // per-rank pending fault events, consumed front to back across
+    // incarnations exactly like the elastic supervisor; the cumulative
+    // consumed count is what a respawn passes as --skip-events
+    let mut pending: Vec<VecDeque<FaultEvent>> =
+        (0..n).map(|r| cfg.faults.for_rank(r).into()).collect();
+    let mut consumed = vec![0usize; n];
+    let mut sticky_straggle: Vec<Option<u64>> = vec![None; n];
+
+    let mut crew = Crew::default();
+    for rank in 0..n {
+        let child = spawn_child(&bin, &dir, rank, all_restored, 0, 0, None, all_restored)?;
+        crew.0.push((rank, child));
+    }
+
+    let mut states: Vec<RankState> = (0..n).map(|_| RankState::Running).collect();
+    let mut iters_per_rank = vec![0u64; n];
+    let mut trace: Vec<TracePoint> = Vec::new();
+    let mut comm = StatsSnapshot::default();
+    let mut outstanding = n;
+    while outstanding > 0 {
+        // reap whichever child exits next (poll: std has no wait-any)
+        let mut progressed = false;
+        let mut i = 0;
+        while i < crew.0.len() {
+            let status = match crew.0[i].1.try_wait().context("waiting on worker process")? {
+                None => {
+                    i += 1;
+                    continue;
+                }
+                Some(s) => s,
+            };
+            let (rank, _child) = crew.0.remove(i);
+            progressed = true;
+            ensure!(status.success(), "worker process {rank} exited with {status}");
+            let res = read_result(&dir, rank)?;
+            iters_per_rank[rank] += res.iters;
+            if rank == 0 {
+                trace.extend(res.trace.iter().copied());
+            }
+            // each incarnation's ledger is fresh; snapshots sum
+            add_snapshot(&mut comm, &res.stats);
+            for _ in 0..res.events_consumed {
+                consumed[rank] += 1;
+                if let Some(ev) = pending[rank].pop_front() {
+                    if let FaultKind::Straggle { delay_us } = ev.kind {
+                        sticky_straggle[rank] = Some(delay_us);
+                    }
+                }
+            }
+            match res.death {
+                None => {
+                    states[rank] = RankState::Done(res.state);
+                    outstanding -= 1;
+                }
+                Some((at, FaultKind::Kill)) => {
+                    log::info!("worker process {rank} killed before iteration {at}");
+                    states[rank] = RankState::Dead;
+                    outstanding -= 1;
+                }
+                Some((at, FaultKind::Restart { after_ms })) => {
+                    log::info!(
+                        "worker process {rank} died at iteration {at}; respawning (+{after_ms} ms)"
+                    );
+                    let child = spawn_child(
+                        &bin,
+                        &dir,
+                        rank,
+                        true,
+                        after_ms,
+                        consumed[rank],
+                        sticky_straggle[rank],
+                        false,
+                    )?;
+                    crew.0.push((rank, child));
+                }
+                Some((_, kind)) => bail!("non-terminal fault {kind:?} reported as a death"),
+            }
+        }
+        if !progressed {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    }
+
+    world.quiesce();
+    add_snapshot(&mut comm, &world.stats.total());
+    let wallclock = t0.elapsed().as_secs_f64();
+    let weights = vec![1.0f32; n];
+    let slices: Vec<Option<&[f32]>> = states
+        .iter()
+        .map(|s| match s {
+            RankState::Done(w) => Some(w.as_slice()),
+            _ => None,
+        })
+        .collect();
+    let final_state = survivor_aggregate(cfg.aggregation, &slices, &weights)?;
+    let total_iters: u64 = iters_per_rank.iter().sum();
+    let report = RunReport {
+        method: cfg.method.name().into(),
+        workers: n,
+        final_objective: model.eval(&data, &final_state, cfg.eval_samples),
+        final_error: model.truth_error(&data, &final_state).unwrap_or(f64::NAN),
+        wallclock_s: wallclock,
+        total_iters,
+        global_samples: ctl.samples(),
+        trace,
+        comm,
+        state: final_state,
+    };
+    // the owner's Drop unlinks the segment files; the run directory
+    // itself (config, results, ctl) goes too when we invented it
+    drop(world);
+    drop(ctl);
+    if dir_is_ours {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    Ok(report)
+}
+
+/// The `asgd worker --attach DIR --rank R` entry point (child side).
+pub fn run_child(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("attach").context("worker needs --attach DIR")?);
+    let rank = args.get_usize("rank")?.context("worker needs --rank N")?;
+    let restored = args.has("restored");
+    let delay_ms = args.get_u64("restore-delay-ms")?.unwrap_or(0);
+    let skip_events = args.get_usize("skip-events")?.unwrap_or(0);
+    let straggle_us = args.get_u64("straggle-us")?;
+    let fresh_ok = args.has("fresh-ok");
+
+    let cfg_path = dir.join("config.toml");
+    let cfg = TrainConfig::from_toml_file(cfg_path.to_str().context("non-UTF-8 run dir")?)?;
+    let n = cfg.workers;
+    ensure!(rank < n, "--rank {rank} out of range (workers = {n})");
+
+    // deterministic rebuild of everything the parent derived from the
+    // config: same data seed, same leader-RNG w_0 stream, same partition
+    let data = Arc::new(crate::data::generate(&cfg.data));
+    let model: Arc<dyn Model> = models::build(&cfg).into();
+    let mut leader_rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    let w0 = model.init_state(&data, &mut leader_rng);
+    let stepper = build_stepper(&cfg, model.clone()).context("building stepper")?;
+    let stats = Arc::new(WorldStats::new(n));
+    let transport = Shmem::attach(&dir, n, cfg.n_buffers.max(1), w0.len(), cfg.comm.chunks(), stats)
+        .context("attaching to shared-memory segments")?;
+    let world = Arc::new(World::with_transport(transport, Topology::flat(n)));
+    let ctl = CtlRegion::attach(&dir, n)?;
+
+    let mut shard = partition_rank(&data, n, cfg.seed, rank);
+    debug_assert_eq!(shard.worker, rank);
+    let faults: Vec<FaultEvent> =
+        cfg.faults.for_rank(rank).into_iter().skip(skip_events).collect();
+    let ckpt = match (cfg.ckpt_interval > 0, &cfg.ckpt_dir) {
+        (false, _) => None,
+        (true, Some(d)) => Some(Arc::new(CkptStore::disk(d)?)),
+        (true, None) => Some(Arc::new(CkptStore::new(n))),
+    };
+
+    let mut w_init = w0;
+    let mut start_iter = 0u64;
+    let mut rng_state = None;
+    let mut resume_comm = None;
+    if restored {
+        if delay_ms > 0 {
+            // the simulated detection+restore latency: peers suspect the
+            // corpse across this window, exactly like the threaded path
+            std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+        }
+        match ckpt.as_ref().and_then(|s| s.load(rank)) {
+            Some(bytes) => {
+                let snap = Checkpoint::decode(&bytes)
+                    .with_context(|| format!("restoring rank {rank}"))?;
+                shard.fast_forward(snap.shard_epochs, snap.shard_cursor as usize);
+                w_init = snap.state;
+                start_iter = snap.iter;
+                rng_state = Some(snap.rng);
+                resume_comm = Some((snap.ctrl_chunks, snap.dirty));
+                world.stats.rank(rank).restores.add(1);
+            }
+            None if fresh_ok => log::info!("rank {rank}: no checkpoint on disk; starting fresh"),
+            None => bail!("rank {rank} died before its first durable checkpoint"),
+        }
+        // rebirth announcement: peers un-suspect us by observing the
+        // heartbeat incarnation advance
+        world.begin_incarnation(rank);
+    }
+
+    let ctx = WorkerCtx {
+        rank,
+        cfg: cfg.clone(),
+        shard,
+        w0: w_init,
+        world: world.clone(),
+        stepper,
+        model,
+        eval_data: data,
+        barrier: Arc::new(StartGate::Shm(ctl.clone())),
+        start: Arc::new(OnceInstant::default()),
+        global_samples: Arc::new(SampleCounter::Shm(ctl)),
+        faults,
+        start_iter,
+        ckpt,
+        rng_state,
+        straggle_us,
+        resume_comm,
+        restored,
+    };
+    let res = run_worker(ctx);
+    world.quiesce();
+    let encoded = encode_result(&res, &world.stats.total())?;
+    let path = result_path(&dir, rank);
+    let tmp = dir.join(format!("result-{rank:03}.bin.tmp"));
+    std::fs::write(&tmp, &encoded)
+        .with_context(|| format!("writing worker result {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path)
+        .with_context(|| format!("publishing worker result {}", path.display()))?;
+    Ok(())
+}
+
+// ---- result-file codec ------------------------------------------------
+//
+// magic u64 | rank u32 | iters u64 | death u8 + at u64 + after_ms u64 |
+// events_consumed u32 | state (len u64 + f32 bits) | 19 stat words |
+// trace (count u64 + 4 f64 per point) | fnv1a-64 checksum
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn encode_result(res: &WorkerResult, stats: &StatsSnapshot) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(128 + 4 * res.state.len() + 32 * res.trace.len());
+    put_u64(&mut out, RESULT_MAGIC);
+    put_u32(&mut out, res.rank as u32);
+    put_u64(&mut out, res.iters);
+    let (kind, at, after_ms) = match res.death {
+        None => (0u8, 0, 0),
+        Some((at, FaultKind::Kill)) => (1, at, 0),
+        Some((at, FaultKind::Restart { after_ms })) => (2, at, after_ms),
+        Some((_, kind)) => bail!("non-terminal fault {kind:?} recorded as a death"),
+    };
+    out.push(kind);
+    put_u64(&mut out, at);
+    put_u64(&mut out, after_ms);
+    put_u32(&mut out, res.events_consumed as u32);
+    put_u64(&mut out, res.state.len() as u64);
+    for &w in &res.state {
+        put_u32(&mut out, w.to_bits());
+    }
+    for v in snapshot_words(stats) {
+        put_u64(&mut out, v);
+    }
+    put_u64(&mut out, res.trace.len() as u64);
+    for p in &res.trace {
+        put_u64(&mut out, p.global_iters.to_bits());
+        put_u64(&mut out, p.time_s.to_bits());
+        put_u64(&mut out, p.objective.to_bits());
+        put_u64(&mut out, p.truth_error.to_bits());
+    }
+    let sum = fnv1a(&out);
+    put_u64(&mut out, sum);
+    Ok(out)
+}
+
+/// What the parent reads back per incarnation.
+struct ProcResult {
+    iters: u64,
+    death: Option<(u64, FaultKind)>,
+    events_consumed: usize,
+    state: Vec<f32>,
+    stats: StatsSnapshot,
+    trace: Vec<TracePoint>,
+}
+
+struct Rd<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl Rd<'_> {
+    fn u8(&mut self) -> Result<u8> {
+        ensure!(self.off < self.b.len(), "result file truncated");
+        self.off += 1;
+        Ok(self.b[self.off - 1])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        ensure!(self.off + 4 <= self.b.len(), "result file truncated");
+        let v = u32::from_le_bytes(self.b[self.off..self.off + 4].try_into().unwrap());
+        self.off += 4;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        ensure!(self.off + 8 <= self.b.len(), "result file truncated");
+        let v = u64::from_le_bytes(self.b[self.off..self.off + 8].try_into().unwrap());
+        self.off += 8;
+        Ok(v)
+    }
+}
+
+fn decode_result(bytes: &[u8]) -> Result<ProcResult> {
+    ensure!(bytes.len() >= 8 + 8, "result file too short");
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let sum = u64::from_le_bytes(tail.try_into().unwrap());
+    ensure!(sum == fnv1a(body), "result file checksum mismatch");
+    let mut r = Rd { b: body, off: 0 };
+    ensure!(r.u64()? == RESULT_MAGIC, "not an asgd worker result file");
+    let _rank = r.u32()?;
+    let iters = r.u64()?;
+    let kind = r.u8()?;
+    let at = r.u64()?;
+    let after_ms = r.u64()?;
+    let death = match kind {
+        0 => None,
+        1 => Some((at, FaultKind::Kill)),
+        2 => Some((at, FaultKind::Restart { after_ms })),
+        other => bail!("unknown death kind {other} in result file"),
+    };
+    let events_consumed = r.u32()? as usize;
+    let state_len = r.u64()? as usize;
+    let mut state = Vec::with_capacity(state_len);
+    for _ in 0..state_len {
+        state.push(f32::from_bits(r.u32()?));
+    }
+    let mut words = [0u64; 19];
+    for w in &mut words {
+        *w = r.u64()?;
+    }
+    let stats = snapshot_from_words(&words);
+    let n_trace = r.u64()? as usize;
+    let mut trace = Vec::with_capacity(n_trace);
+    for _ in 0..n_trace {
+        trace.push(TracePoint {
+            global_iters: f64::from_bits(r.u64()?),
+            time_s: f64::from_bits(r.u64()?),
+            objective: f64::from_bits(r.u64()?),
+            truth_error: f64::from_bits(r.u64()?),
+        });
+    }
+    ensure!(r.off == body.len(), "trailing bytes in result file");
+    Ok(ProcResult { iters, death, events_consumed, state, stats, trace })
+}
+
+fn read_result(dir: &Path, rank: usize) -> Result<ProcResult> {
+    let path = result_path(dir, rank);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading worker result {}", path.display()))?;
+    decode_result(&bytes).with_context(|| format!("decoding {}", path.display()))
+}
+
+/// The snapshot's counters as a fixed word vector (codec + summation
+/// share one field order: declaration order of [`StatsSnapshot`]).
+fn snapshot_words(s: &StatsSnapshot) -> [u64; 19] {
+    [
+        s.sent,
+        s.bytes_sent,
+        s.received,
+        s.good,
+        s.torn,
+        s.overwritten,
+        s.stale_polls,
+        s.chunk_sent,
+        s.chunk_received,
+        s.chunk_torn,
+        s.chunk_lost,
+        s.chunk_skipped,
+        s.relayouts,
+        s.suspected,
+        s.false_suspicion,
+        s.recovered,
+        s.gossip_seeded,
+        s.dead_masked,
+        s.restores,
+    ]
+}
+
+fn snapshot_from_words(w: &[u64; 19]) -> StatsSnapshot {
+    StatsSnapshot {
+        sent: w[0],
+        bytes_sent: w[1],
+        received: w[2],
+        good: w[3],
+        torn: w[4],
+        overwritten: w[5],
+        stale_polls: w[6],
+        chunk_sent: w[7],
+        chunk_received: w[8],
+        chunk_torn: w[9],
+        chunk_lost: w[10],
+        chunk_skipped: w[11],
+        relayouts: w[12],
+        suspected: w[13],
+        false_suspicion: w[14],
+        recovered: w[15],
+        gossip_seeded: w[16],
+        dead_masked: w[17],
+        restores: w[18],
+    }
+}
+
+/// Per-process ledgers sum to the global totals (the accounting is
+/// ticked exactly once, by the process that did the work).
+fn add_snapshot(into: &mut StatsSnapshot, s: &StatsSnapshot) {
+    let mut acc = snapshot_words(into);
+    for (a, b) in acc.iter_mut().zip(snapshot_words(s)) {
+        *a += b;
+    }
+    *into = snapshot_from_words(&acc);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_result() -> (WorkerResult, StatsSnapshot) {
+        let res = WorkerResult {
+            rank: 2,
+            state: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE],
+            iters: 37,
+            trace: vec![TracePoint {
+                global_iters: 4096.0,
+                time_s: 0.125,
+                objective: 3.5,
+                truth_error: 0.25,
+            }],
+            death: Some((37, FaultKind::Restart { after_ms: 15 })),
+            events_consumed: 2,
+        };
+        let stats = StatsSnapshot { sent: 7, chunk_lost: 3, restores: 1, ..Default::default() };
+        (res, stats)
+    }
+
+    #[test]
+    fn result_file_roundtrips() {
+        let (res, stats) = sample_result();
+        let bytes = encode_result(&res, &stats).unwrap();
+        let back = decode_result(&bytes).unwrap();
+        assert_eq!(back.iters, 37);
+        assert_eq!(back.death, Some((37, FaultKind::Restart { after_ms: 15 })));
+        assert_eq!(back.events_consumed, 2);
+        assert_eq!(back.state, res.state);
+        assert_eq!(back.stats, stats);
+        assert_eq!(back.trace.len(), 1);
+        assert_eq!(back.trace[0].objective, 3.5);
+    }
+
+    #[test]
+    fn result_file_refuses_corruption() {
+        let (res, stats) = sample_result();
+        let bytes = encode_result(&res, &stats).unwrap();
+        let mut bad = bytes.clone();
+        bad[20] ^= 1;
+        assert!(decode_result(&bad).is_err(), "checksum must catch a bit flip");
+        assert!(decode_result(&bytes[..bytes.len() - 3]).is_err(), "truncation refused");
+    }
+
+    #[test]
+    fn snapshots_sum_fieldwise() {
+        let a = StatsSnapshot { sent: 1, torn: 2, restores: 3, ..Default::default() };
+        let b = StatsSnapshot { sent: 10, good: 5, restores: 1, ..Default::default() };
+        let mut acc = StatsSnapshot::default();
+        add_snapshot(&mut acc, &a);
+        add_snapshot(&mut acc, &b);
+        assert_eq!(acc.sent, 11);
+        assert_eq!(acc.torn, 2);
+        assert_eq!(acc.good, 5);
+        assert_eq!(acc.restores, 4);
+    }
+}

@@ -42,6 +42,7 @@ use crate::config::{CommMode, FaultEvent, FaultKind, Method, RacePolicy, TrainCo
 use crate::data::partition::Shard;
 use crate::gaspi::liveness::admit_presence;
 use crate::gaspi::sched::plan_send_into;
+use crate::gaspi::transport::shmem::CtlRegion;
 use crate::gaspi::{AdaptiveController, ChunkLayout, DirtyMap, LivenessView, ReadOutcome, World};
 use crate::kernels::ExtPresence;
 use crate::metrics::TracePoint;
@@ -51,6 +52,55 @@ use crate::util::rng::Xoshiro256pp;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
+
+/// The synchronized start, abstracted over process boundaries: worker
+/// threads in one process share a [`Barrier`]; worker *processes*
+/// (shmem transport) rendezvous through the run directory's control
+/// region instead.  Either way, alg. 5's "all nodes start together"
+/// holds and wall-clock numbers stay comparable.
+pub enum StartGate {
+    Thread(Barrier),
+    Shm(Arc<CtlRegion>),
+}
+
+impl StartGate {
+    pub fn wait(&self) {
+        match self {
+            StartGate::Thread(b) => {
+                b.wait();
+            }
+            StartGate::Shm(c) => c.barrier_wait(),
+        }
+    }
+}
+
+/// The paper's global samples-touched counter `I`, abstracted the same
+/// way: one process-local atomic for threaded runs, the shared control
+/// region's counter for multi-process runs.
+pub enum SampleCounter {
+    Local(AtomicU64),
+    Shm(Arc<CtlRegion>),
+}
+
+impl SampleCounter {
+    pub fn add(&self, n: u64) {
+        match self {
+            SampleCounter::Local(a) => {
+                a.fetch_add(n, Ordering::Relaxed);
+            }
+            SampleCounter::Shm(c) => {
+                c.add_samples(n);
+            }
+        }
+    }
+
+    pub fn load(&self) -> u64 {
+        match self {
+            SampleCounter::Local(a) => a.load(Ordering::Relaxed),
+            SampleCounter::Shm(c) => c.samples(),
+        }
+    }
+}
 
 /// What a worker thread returns.
 pub struct WorkerResult {
@@ -80,10 +130,10 @@ pub struct WorkerCtx {
     pub model: Arc<dyn Model>,
     /// Shared evaluation prefix (worker 0 traces against it).
     pub eval_data: Arc<crate::data::Dataset>,
-    pub barrier: Arc<Barrier>,
+    pub barrier: Arc<StartGate>,
     pub start: Arc<OnceInstant>,
     /// Global samples-touched counter (the paper's I, shared).
-    pub global_samples: Arc<AtomicU64>,
+    pub global_samples: Arc<SampleCounter>,
     /// This rank's pending fault events, sorted by `at_iter`
     /// (empty for fault-free runs).
     pub faults: Vec<FaultEvent>,
@@ -101,6 +151,12 @@ pub struct WorkerCtx {
     /// incarnation died (straggle events fire once, so the supervisor
     /// re-applies the effect instead of replaying the event).
     pub straggle_us: Option<u64>,
+    /// Learned communication state carried across a restore:
+    /// `(ctrl_chunks, dirty_mask)` from the checkpoint.  `ctrl_chunks = 0`
+    /// (or `None`) means start fresh; otherwise the adaptive controller
+    /// resumes at the learned chunk count instead of re-paying its
+    /// warm-up, and the dirty map resumes the checkpointed mask.
+    pub resume_comm: Option<(u32, u64)>,
     /// A restored worker re-enters the *same* world mid-run: it must not
     /// wait on the start barrier again (its original crew released it
     /// long ago).
@@ -142,6 +198,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         ckpt,
         rng_state,
         straggle_us,
+        resume_comm,
         restored,
     } = ctx;
 
@@ -181,25 +238,39 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
     let mut trace = Vec::new();
     let communicate = cfg.method == Method::Asgd;
     let stats = world.stats.clone();
-    let my_segment = world.segments[rank].clone();
+    let my_segment = world.segment(rank).clone();
     // adaptive mode: dirty bitmap + feedback controller (sender side
-    // only — the receive path stays at the physical granularity above)
+    // only — the receive path stays at the physical granularity above).
+    // A restored worker with carried comm state resumes the controller
+    // at its learned chunk count and the dirty map at the checkpointed
+    // mask instead of re-learning from scratch.
     let (mut controller, mut dirty) = match cfg.comm {
         CommMode::Adaptive {
             min_chunks,
             max_chunks,
-        } => (
-            Some(AdaptiveController::new(
-                min_chunks,
-                max_chunks,
-                cfg.adapt_interval,
-            )),
-            Some(DirtyMap::all_dirty(n_chunks)),
-        ),
+        } => match resume_comm {
+            Some((chunks, mask)) if chunks > 0 => (
+                Some(AdaptiveController::resume(
+                    min_chunks,
+                    max_chunks,
+                    cfg.adapt_interval,
+                    chunks as usize,
+                )),
+                Some(DirtyMap::from_mask(mask, n_chunks)),
+            ),
+            _ => (
+                Some(AdaptiveController::new(
+                    min_chunks,
+                    max_chunks,
+                    cfg.adapt_interval,
+                )),
+                Some(DirtyMap::all_dirty(n_chunks)),
+            ),
+        },
         _ => (None, None),
     };
     if let Some(ctrl) = &controller {
-        my_segment.advertise_layout(ctrl.chunks());
+        world.advertise_layout(rank, ctrl.chunks());
     }
     let mut plan: Vec<std::ops::Range<usize>> = Vec::new();
     // per-block counters run for any block-structured transport: chunked
@@ -233,7 +304,17 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
     if communicate {
         // first beat: peers' leases start from a live word, and a
         // restored worker announces its new incarnation immediately
-        my_segment.publish_heartbeat();
+        world.publish_heartbeat(rank);
+        if restored {
+            // gossip seeding: a late joiner adopts the crew's settled
+            // suspicions (quorum-gated) instead of paying `lease_polls`
+            // of warm-up per corpse before it can mask dead senders
+            let live = liveness.as_mut().expect("liveness exists when communicating");
+            let seeded = live.seed_from_gossip(&world, stats.rank(rank));
+            if seeded > 0 {
+                log::debug!("rank {rank}: adopted {seeded} gossiped suspicion(s) at rebirth");
+            }
+        }
     }
 
     let mut died: Option<(u64, FaultKind)> = None;
@@ -250,6 +331,10 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                     rng: rng.state(),
                     shard_epochs,
                     shard_cursor: shard_cursor as u64,
+                    // carry the learned communication state so a restore
+                    // resumes the feedback loop instead of re-learning
+                    ctrl_chunks: controller.as_ref().map_or(0, |c| c.chunks() as u32),
+                    dirty: dirty.as_ref().map_or(0, |d| d.mask()),
                     state: w.clone(),
                 };
                 store.store(rank, snap.encode());
@@ -382,7 +467,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
             .step(x, labels, &mut w, &exts, &presence, &mut scratch)
             .expect("stepper failed");
         stats.rank(rank).good.add(out.n_good as u64);
-        global_samples.fetch_add(cfg.minibatch as u64, Ordering::Relaxed);
+        global_samples.add(cfg.minibatch as u64);
 
         // ---- dirty tracking (adaptive mode): the step touched exactly
         // the gradient's support plus the merge-touched blocks ----------
@@ -407,8 +492,13 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         if communicate && (t + 1) % cfg.send_interval as u64 == 0 {
             // liveness beat: rides every send event, wait-free, on the
             // segment's metadata plane (even when dirty skipping ends up
-            // putting nothing — alive is alive)
-            my_segment.publish_heartbeat();
+            // putting nothing — alive is alive).  The suspicion mask is
+            // gossiped on the same cadence so late joiners can adopt the
+            // crew's settled verdicts (advisory only — see liveness docs).
+            world.publish_heartbeat(rank);
+            if let Some(live) = liveness.as_ref() {
+                world.publish_suspicion(rank, live.suspicion_mask());
+            }
             rng.sample_recipients(world.ranks(), rank, cfg.fanout, &mut recipients);
             if !recipients.is_empty() {
                 if let (Some(ctrl), Some(d)) = (controller.as_mut(), dirty.as_mut()) {
@@ -433,7 +523,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                         // new grouping; the segment's layout word records
                         // it (epoch bump) for observers.  Block
                         // boundaries never move — only the grouping.
-                        my_segment.advertise_layout(new_chunks);
+                        world.advertise_layout(rank, new_chunks);
                         stats.rank(rank).relayouts.add(1);
                     }
                 } else if chunked {
@@ -464,7 +554,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
             let objective = model.eval(&eval_data, &w, cfg.eval_samples);
             let truth_error = model.truth_error(&eval_data, &w).unwrap_or(f64::NAN);
             trace.push(TracePoint {
-                global_iters: global_samples.load(Ordering::Relaxed) as f64,
+                global_iters: global_samples.load() as f64,
                 time_s: t0.elapsed().as_secs_f64(),
                 objective,
                 truth_error,
@@ -480,7 +570,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         // clean completion: announce retirement so peers never lease a
         // finished rank into suspicion (fault-free runs end with zero
         // liveness noise; a crash skips this — corpses stay suspect)
-        my_segment.publish_retirement();
+        world.publish_retirement(rank);
     }
     WorkerResult {
         rank,

@@ -47,9 +47,19 @@
 //!   precisely how the taxonomy tells "finished and silent" from "dead
 //!   and silent" without a single extra message.
 //!
+//! * **Suspicion is gossiped, but stays advisory.**  Each view publishes
+//!   its current suspicion set as a bitmask word in its own segment
+//!   ([`LivenessView::suspicion_mask`]); a late joiner or reborn rank
+//!   reads all peers' masks once at start-up
+//!   ([`LivenessView::seed_from_gossip`]) and pre-suspects any rank a
+//!   quorum of independent accusers already condemned — skipping its own
+//!   `lease_polls` warm-up on a known corpse.  Seeding is still just a
+//!   local suspicion: the first heartbeat advance un-suspects as usual,
+//!   so stale gossip costs deferred merges, never correctness.
+//!
 //! Counter identity (pinned in tests): every resolution was first a
 //! suspicion, so `false_suspicion + recovered <= suspected` per view and
-//! in the world totals.
+//! in the world totals (gossip-seeded suspicions tick `suspected` too).
 
 use super::segment::{HEARTBEAT_BEAT_BITS, HEARTBEAT_RETIRED_BIT};
 use super::stats::CommStats;
@@ -155,13 +165,69 @@ impl LivenessView {
             if r == self.me {
                 continue;
             }
-            match self.observe(r, world.segments[r].heartbeat()) {
+            match self.observe(r, world.segment(r).heartbeat()) {
                 Some(Transition::Suspected) => stats.suspected.add(1),
                 Some(Transition::FalseSuspicion) => stats.false_suspicion.add(1),
                 Some(Transition::Recovered) => stats.recovered.add(1),
                 None => {}
             }
         }
+    }
+
+    /// This view's suspicion set as a gossip bitmask (bit `p` = rank `p`
+    /// suspected; ranks >= 64 are not gossiped — the shared u64 policy).
+    /// Published into the owner's segment alongside each heartbeat.
+    pub fn suspicion_mask(&self) -> u64 {
+        let mut mask = 0u64;
+        for (p, lease) in self.peers.iter().enumerate().take(64) {
+            if lease.suspected {
+                mask |= 1 << p;
+            }
+        }
+        mask
+    }
+
+    /// Start-up gossip seeding for late joiners and reborn ranks: read
+    /// every peer's published suspicion mask and pre-suspect any rank
+    /// that a quorum of *independent* accusers (neither us nor the
+    /// accused; two where the world is big enough to have two) currently
+    /// condemns — so a fresh view masks a known corpse immediately
+    /// instead of sitting through its own `lease_polls` warm-up.
+    ///
+    /// The seed records the corpse's *current* heartbeat word as
+    /// last-seen: any later advance (a rebirth, or a wrongly-accused
+    /// straggler beating) is a word change and resolves the suspicion
+    /// through the normal [`Self::observe`] path.  Retired ranks are
+    /// never seeded (cleanly finished, not dead).  Returns the number of
+    /// seeded suspicions; each ticks `suspected` (preserving the
+    /// resolution identity) and `gossip_seeded`.
+    pub fn seed_from_gossip(&mut self, world: &World, stats: &CommStats) -> usize {
+        let n = self.peers.len();
+        let quorum = 2.min(n.saturating_sub(2)).max(1);
+        let mut seeded = 0;
+        for p in 0..n.min(64) {
+            if p == self.me || self.peers[p].suspected {
+                continue;
+            }
+            let word = world.segment(p).heartbeat();
+            if word & HEARTBEAT_RETIRED_BIT != 0 {
+                continue;
+            }
+            let votes = (0..n)
+                .filter(|&q| q != self.me && q != p)
+                .filter(|&q| world.segment(q).suspicion() & (1 << p) != 0)
+                .count();
+            if votes >= quorum {
+                let lease = &mut self.peers[p];
+                lease.last = word;
+                lease.stalled = self.lease_polls;
+                lease.suspected = true;
+                stats.suspected.add(1);
+                stats.gossip_seeded.add(1);
+                seeded += 1;
+            }
+        }
+        seeded
     }
 
     /// Is `rank` currently suspected by this view?
@@ -376,16 +442,16 @@ mod tests {
         let w = World::new(3, 1, 4, Topology::flat(3));
         let stats = CommStats::default();
         let mut v = LivenessView::new(3, 0, 2);
-        w.segments[1].publish_heartbeat();
-        w.segments[2].publish_heartbeat();
+        w.publish_heartbeat(1);
+        w.publish_heartbeat(2);
         v.refresh(&w, &stats); // first sighting of both
         v.refresh(&w, &stats); // stall 1
         v.refresh(&w, &stats); // stall 2 -> both suspected
         assert_eq!(stats.suspected.get(), 2);
         assert!(v.is_suspected(1) && v.is_suspected(2));
         // rank 1 keeps beating (false suspicion), rank 2 is reborn
-        w.segments[1].publish_heartbeat();
-        w.segments[2].begin_incarnation();
+        w.publish_heartbeat(1);
+        w.begin_incarnation(2);
         v.refresh(&w, &stats);
         assert_eq!(stats.false_suspicion.get(), 1);
         assert_eq!(stats.recovered.get(), 1);
@@ -393,5 +459,61 @@ mod tests {
         assert!(
             stats.false_suspicion.get() + stats.recovered.get() <= stats.suspected.get()
         );
+    }
+
+    #[test]
+    fn suspicion_mask_mirrors_the_view() {
+        let mut v = LivenessView::new(4, 0, 1);
+        assert_eq!(v.suspicion_mask(), 0);
+        v.observe(2, word(0, 1));
+        assert_eq!(v.observe(2, word(0, 1)), Some(Transition::Suspected));
+        assert_eq!(v.suspicion_mask(), 1 << 2);
+        assert_eq!(v.observe(2, word(0, 2)), Some(Transition::FalseSuspicion));
+        assert_eq!(v.suspicion_mask(), 0);
+    }
+
+    /// The gossip satellite end-to-end on the world: two survivors
+    /// publish "rank 3 is dead"; a fresh view (a reborn rank) seeds the
+    /// suspicion immediately — no `lease_polls` warm-up — and the
+    /// resolution identity still holds when the corpse is reborn.
+    #[test]
+    fn gossip_seeds_a_known_corpse_without_warmup() {
+        let w = World::new(4, 1, 4, Topology::flat(4));
+        w.publish_heartbeat(3); // the corpse beat once, then died
+        w.publish_suspicion(1, 1 << 3);
+        w.publish_suspicion(2, 1 << 3);
+        let stats = CommStats::default();
+        let mut v = LivenessView::new(4, 0, 50); // huge lease: warm-up would take 50 polls
+        assert_eq!(v.seed_from_gossip(&w, &stats), 1);
+        assert!(v.is_suspected(3), "seeded without a single lease poll");
+        assert!(!v.is_suspected(1) && !v.is_suspected(2));
+        assert_eq!(stats.suspected.get(), 1);
+        assert_eq!(stats.gossip_seeded.get(), 1);
+        // seeding is idempotent
+        assert_eq!(v.seed_from_gossip(&w, &stats), 0);
+        // the seed recorded the corpse's current word: a later advance
+        // (rebirth) resolves through the normal observe path
+        w.begin_incarnation(3);
+        v.refresh(&w, &stats);
+        assert!(!v.is_suspected(3));
+        assert_eq!(stats.recovered.get(), 1);
+        assert!(stats.false_suspicion.get() + stats.recovered.get() <= stats.suspected.get());
+    }
+
+    #[test]
+    fn gossip_needs_a_quorum_and_never_seeds_retired_ranks() {
+        let w = World::new(4, 1, 4, Topology::flat(4));
+        let stats = CommStats::default();
+        // one accuser is not a quorum in a 4-rank world
+        w.publish_suspicion(1, 1 << 3);
+        let mut v = LivenessView::new(4, 0, 2);
+        assert_eq!(v.seed_from_gossip(&w, &stats), 0);
+        assert!(!v.is_suspected(3));
+        // a second accuser meets it — but a retired rank is never seeded
+        w.publish_suspicion(2, 1 << 3);
+        w.publish_retirement(3);
+        assert_eq!(v.seed_from_gossip(&w, &stats), 0);
+        assert!(!v.is_suspected(3), "cleanly retired is not dead");
+        assert_eq!(stats.gossip_seeded.get(), 0);
     }
 }

@@ -6,11 +6,10 @@
 //! no handshake, no acknowledgement, no lock.  The receiver discovers new
 //! data whenever it chooses to look.
 //!
-//! This module reproduces those semantics in-process (the repro
-//! substitution of DESIGN.md §3): every rank owns a [`segment::Segment`]
-//! of N versioned slots; [`segment::Segment::write_remote`] is a
-//! wait-free deposit that behaves like an RDMA put, including the failure
-//! modes §4.4 analyses:
+//! This module reproduces those semantics behind a [`transport::Transport`]
+//! abstraction: every rank owns a [`segment::Segment`] of N versioned
+//! slots; a put is a wait-free deposit that behaves like an RDMA put,
+//! including the failure modes §4.4 analyses:
 //!
 //! * **lost message** — a second write lands on the same slot before the
 //!   receiver read the first; the first is silently gone;
@@ -38,41 +37,74 @@
 //!   segment under a new heartbeat incarnation; peers observe the
 //!   incarnation advance and un-suspect it (`recovered`) without any
 //!   message or handshake.
+//! * **known corpse (gossip)** — every rank publishes its current
+//!   suspicion set as a bitmask word in its own segment
+//!   ([`segment::Segment::publish_suspicion`]); a late joiner or reborn
+//!   rank reads its peers' masks once at start-up and, on a quorum of
+//!   two independent accusers, pre-suspects the corpse without sitting
+//!   through its own `lease_polls` warm-up
+//!   ([`liveness::LivenessView::seed_from_gossip`]).
 //!
 //! No method in this module ever blocks or spins on another rank —
 //! communication is "free" in the paper's sense; the price is exactly the
 //! uncertainty catalogued above.
+//!
+//! # The wire format is a versioned contract
+//!
+//! Everything above is defined on *words in a flat region*, not on Rust
+//! objects — the region layout (documented in [`segment`] and
+//! `docs/WIRE.md`, versioned by [`segment::WIRE_VERSION`]) is what the
+//! three transports share:
+//!
+//! | word                | layout                                            |
+//! |---------------------|---------------------------------------------------|
+//! | seqlock `version`   | odd = writer inside; settles even, monotone       |
+//! | `clean` mark        | version of the last provably-sole settle          |
+//! | layout word         | `epoch << 32 \| chunks` (epoch bumps on change)   |
+//! | heartbeat word      | `retired.1 \| incarnation.15 \| beats.48`         |
+//! | suspicion word      | gossip bitmask, bit `p` = "I suspect rank `p`"    |
+//!
+//! The `inproc` backend hosts regions on the heap, `shmem` in files
+//! mapped by several processes, `socket` mirrors them over TCP frames —
+//! see [`transport`] for the catalogue and the accounting contract.
 
 pub mod liveness;
 pub mod sched;
 pub mod segment;
 pub mod stats;
 pub mod topology;
+pub mod transport;
 
 pub use liveness::{heartbeat_parts, LivenessView, Transition};
 pub use sched::{AdaptiveController, DirtyMap};
 pub use segment::{ChunkLayout, ReadOutcome, Segment, SlotSnapshot, MAX_GROUP_BLOCKS};
 pub use stats::{CommStats, WorldStats};
 pub use topology::Topology;
+pub use transport::{Inproc, Shmem, Socket, Transport};
 
 use std::sync::Arc;
 
-/// The communication world: one segment per rank plus shared counters.
+/// The communication world: per-rank segments behind a [`Transport`],
+/// plus shared counters.  All send paths go through the put wrappers
+/// here (which tick the sender-side counters); all receive paths go
+/// through [`World::segment`] (the transport's local view of a rank).
 pub struct World {
-    pub segments: Vec<Arc<Segment>>,
+    transport: Arc<dyn Transport>,
     pub stats: Arc<WorldStats>,
     pub topology: Topology,
 }
 
 impl World {
-    /// Build a world of `ranks` ranks, each with `n_slots` external-buffer
-    /// slots of `state_len` f32 words (one block per slot).
+    /// Build an in-process world of `ranks` ranks, each with `n_slots`
+    /// external-buffer slots of `state_len` f32 words (one block per
+    /// slot).
     pub fn new(ranks: usize, n_slots: usize, state_len: usize, topology: Topology) -> Self {
         Self::new_chunked(ranks, n_slots, state_len, 1, topology)
     }
 
-    /// Build a world whose slots are split into `chunks` independently
-    /// versioned blocks (arXiv:1510.01155 communication-load balancing).
+    /// Build an in-process world whose slots are split into `chunks`
+    /// independently versioned blocks (arXiv:1510.01155 communication-
+    /// load balancing).
     pub fn new_chunked(
         ranks: usize,
         n_slots: usize,
@@ -81,23 +113,42 @@ impl World {
         topology: Topology,
     ) -> Self {
         let stats = Arc::new(WorldStats::new(ranks));
-        let segments = (0..ranks)
-            .map(|r| Arc::new(Segment::new_chunked(r, n_slots, state_len, chunks)))
-            .collect();
+        let transport = Inproc::new(ranks, n_slots, state_len, chunks, stats);
+        Self::with_transport(transport, topology)
+    }
+
+    /// Build a world over an explicit transport (the `shmem` and
+    /// `socket` paths; also how `asgd worker --attach` joins a run).
+    /// The world shares the transport's stats arc, so receiver-side
+    /// counters ticked inside the transport and sender-side counters
+    /// ticked here land in the same ledger.
+    pub fn with_transport(transport: Arc<dyn Transport>, topology: Topology) -> Self {
+        let stats = transport.stats().clone();
         Self {
-            segments,
+            transport,
             stats,
             topology,
         }
     }
 
+    /// Backend name (`"inproc" | "shmem" | "socket"`).
+    pub fn kind(&self) -> &'static str {
+        self.transport.kind()
+    }
+
     pub fn ranks(&self) -> usize {
-        self.segments.len()
+        self.transport.ranks()
     }
 
     /// Block layout shared by every segment in this world.
     pub fn layout(&self) -> ChunkLayout {
-        self.segments[0].layout()
+        self.transport.segment(0).layout()
+    }
+
+    /// Rank `rank`'s segment as visible to this process (authentic
+    /// region or socket mirror) — the receive/poll/lease path.
+    pub fn segment(&self, rank: usize) -> &Arc<Segment> {
+        self.transport.segment(rank)
     }
 
     /// One-sided put of `payload` into a random slot of rank `to`
@@ -106,14 +157,10 @@ impl World {
     /// caller's RNG stays in control of determinism.
     pub fn put_state(&self, from: usize, to: usize, iter: u64, payload: &[f32], slot: usize) {
         debug_assert_ne!(from, to, "alg. 5 line 9: recipient != self");
-        let seg = &self.segments[to];
-        let lost = seg.write_remote(slot, from as u32, iter, payload);
         let tx = self.stats.rank(from);
         tx.sent.add(1);
         tx.bytes_sent.add(4 * payload.len() as u64);
-        if lost {
-            self.stats.rank(to).overwritten.add(1);
-        }
+        self.transport.put_state(from, to, iter, payload, slot);
     }
 
     /// One-sided put of a single state block into slot `slot`, block
@@ -130,15 +177,11 @@ impl World {
         slot: usize,
     ) {
         debug_assert_ne!(from, to, "alg. 5 line 9: recipient != self");
-        let seg = &self.segments[to];
-        let lost = seg.write_block(slot, block, from as u32, iter, payload);
         let tx = self.stats.rank(from);
         tx.sent.add(1);
         tx.chunk_sent.add(1);
         tx.bytes_sent.add(4 * payload.len() as u64);
-        if lost {
-            self.stats.rank(to).chunk_lost.add(1);
-        }
+        self.transport.put_block(from, to, iter, block, payload, slot);
     }
 
     /// One-sided put of a contiguous *group* of state blocks as a single
@@ -157,16 +200,43 @@ impl World {
         slot: usize,
     ) {
         debug_assert_ne!(from, to, "alg. 5 line 9: recipient != self");
-        let seg = &self.segments[to];
-        let n_blocks = blocks.len() as u64;
-        let lost = seg.write_group(slot, blocks, from as u32, iter, payload);
         let tx = self.stats.rank(from);
         tx.sent.add(1);
-        tx.chunk_sent.add(n_blocks);
+        tx.chunk_sent.add(blocks.len() as u64);
         tx.bytes_sent.add(4 * payload.len() as u64);
-        if lost > 0 {
-            self.stats.rank(to).chunk_lost.add(lost);
-        }
+        self.transport.put_group(from, to, iter, blocks, payload, slot);
+    }
+
+    /// Advance rank `rank`'s heartbeat word (owner-only; broadcast
+    /// in-band on the socket backend).
+    pub fn publish_heartbeat(&self, rank: usize) -> u64 {
+        self.transport.publish_heartbeat(rank)
+    }
+
+    /// Mark rank `rank` cleanly retired (owner-only).
+    pub fn publish_retirement(&self, rank: usize) -> u64 {
+        self.transport.publish_retirement(rank)
+    }
+
+    /// Open a new heartbeat incarnation for rank `rank` (supervisor-only).
+    pub fn begin_incarnation(&self, rank: usize) -> u64 {
+        self.transport.begin_incarnation(rank)
+    }
+
+    /// Advertise rank `rank`'s logical grouping; returns the layout epoch.
+    pub fn advertise_layout(&self, rank: usize, chunks: usize) -> u64 {
+        self.transport.advertise_layout(rank, chunks)
+    }
+
+    /// Publish rank `rank`'s gossip mask (owner-only).
+    pub fn publish_suspicion(&self, rank: usize, mask: u64) {
+        self.transport.publish_suspicion(rank, mask);
+    }
+
+    /// Drain in-flight puts (socket backend); a no-op on direct-store
+    /// backends.  Called before final aggregation and stats assertions.
+    pub fn quiesce(&self) {
+        self.transport.quiesce();
     }
 }
 
@@ -177,11 +247,12 @@ mod tests {
     #[test]
     fn world_builds_and_puts() {
         let w = World::new(4, 2, 8, Topology::flat(4));
+        assert_eq!(w.kind(), "inproc");
         let payload = vec![1.0f32; 8];
         w.put_state(0, 1, 7, &payload, 0);
         assert_eq!(w.stats.rank(0).sent.get(), 1);
         assert_eq!(w.stats.rank(0).bytes_sent.get(), 32);
-        let snap = w.segments[1].read_slot(0, 0);
+        let snap = w.segment(1).read_slot(0, 0);
         match snap.outcome {
             ReadOutcome::Fresh => assert_eq!(snap.data, payload),
             other => panic!("expected fresh read, got {other:?}"),
@@ -206,7 +277,7 @@ mod tests {
             4 * (l.chunk_len(1) + l.chunk_len(3)) as u64
         );
 
-        let seg = &w.segments[1];
+        let seg = w.segment(1);
         let mut buf = vec![0.0f32; l.chunk_len(1)];
         let (out, sender, iter, _) = seg.read_block_into(0, 1, 0, &mut buf);
         assert_eq!(out, ReadOutcome::Fresh);
@@ -235,12 +306,12 @@ mod tests {
         // each member block reads fresh independently
         for c in 1..4 {
             let mut buf = vec![0.0f32; l.chunk_len(c)];
-            let (out, sender, _, _) = w.segments[1].read_block_into(0, c, 0, &mut buf);
+            let (out, sender, _, _) = w.segment(1).read_block_into(0, c, 0, &mut buf);
             assert_eq!(out, ReadOutcome::Fresh);
             assert_eq!(sender, 0);
         }
         let mut buf = vec![0.0f32; l.chunk_len(0)];
-        assert_eq!(w.segments[1].read_block_into(0, 0, 0, &mut buf).0, ReadOutcome::Stale);
+        assert_eq!(w.segment(1).read_block_into(0, 0, 0, &mut buf).0, ReadOutcome::Stale);
     }
 
     /// Send-skip regression over the real substrate (mirror of PR 1's
@@ -273,7 +344,7 @@ mod tests {
         assert_eq!(t.chunk_skipped, 5 * 7, "the other 7 blocks skipped per event");
         // the schedule identity: every block of every event accounted for
         assert_eq!(t.chunk_sent + t.chunk_skipped, 5 * 8);
-        let seg = &w.segments[1];
+        let seg = w.segment(1);
         let mut buf = vec![0.0f32; phys.chunk_len(0)];
         assert_eq!(seg.read_block_into(0, 0, 0, &mut buf).0, ReadOutcome::Fresh);
         for c in 1..8 {
@@ -291,5 +362,21 @@ mod tests {
         // unread -> second put into the same block is a lost block
         w.put_chunk(0, 1, 2, 0, &p, 0);
         assert_eq!(w.stats.rank(1).chunk_lost.get(), 1);
+    }
+
+    /// The metadata plane routes through the transport: publishes land
+    /// on the owner's segment and are observable via `segment()`.
+    #[test]
+    fn metadata_plane_routes_through_world() {
+        let w = World::new(2, 1, 4, Topology::flat(2));
+        assert_eq!(w.publish_heartbeat(1), 1);
+        assert_eq!(w.segment(1).heartbeat(), 1);
+        let reborn = w.begin_incarnation(1);
+        assert_eq!(w.segment(1).heartbeat(), reborn);
+        w.publish_suspicion(0, 0b10);
+        assert_eq!(w.segment(0).suspicion(), 0b10);
+        let retired = w.publish_retirement(1);
+        assert_eq!(w.segment(1).heartbeat(), retired);
+        w.quiesce(); // no-op on inproc, must not hang
     }
 }

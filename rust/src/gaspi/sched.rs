@@ -121,6 +121,20 @@ impl DirtyMap {
     pub fn count_dirty(&self) -> usize {
         self.bits.count_ones() as usize
     }
+
+    /// The raw bitmask (checkpoint encoding).
+    pub fn mask(&self) -> u64 {
+        self.bits
+    }
+
+    /// Rebuild a map from a checkpointed bitmask; out-of-range bits are
+    /// clipped, so a mask saved under a different block count degrades
+    /// to "fewer blocks dirty", never to out-of-bounds marks.
+    pub fn from_mask(bits: u64, n_blocks: usize) -> Self {
+        let mut d = Self::all_dirty(n_blocks);
+        d.bits = bits & Self::full_mask(n_blocks);
+        d
+    }
 }
 
 /// Plan one send event: fill `out` with the dirty groups (each a
@@ -187,6 +201,17 @@ impl AdaptiveController {
     /// Current logical chunk count.
     pub fn chunks(&self) -> usize {
         self.cur
+    }
+
+    /// Rebuild a controller at a previously-learned chunk count (the
+    /// checkpoint-restore path): a restored sender resumes where its
+    /// feedback loop left off instead of re-learning from `min_chunks`.
+    /// The saved count is clamped into the configured bounds, so a
+    /// checkpoint taken under different bounds stays valid.
+    pub fn resume(min_chunks: usize, max_chunks: usize, interval: usize, chunks: usize) -> Self {
+        let mut c = Self::new(min_chunks, max_chunks, interval);
+        c.cur = chunks.clamp(min_chunks, max_chunks);
+        c
     }
 
     /// Record one send event; every `interval` events the chunk count is
@@ -340,6 +365,29 @@ mod tests {
         let mut c = AdaptiveController::new(1, 8, 1);
         // no torn reads at all, but 80% of sent blocks clobbered unread
         assert_eq!(c.on_send_event(|| snap(0, 10, 80, 100)), Some(2));
+    }
+
+    #[test]
+    fn resumed_controller_keeps_its_learned_count() {
+        let c = AdaptiveController::resume(1, 16, 4, 8);
+        assert_eq!(c.chunks(), 8, "restored sender resumes at its learned count");
+        // out-of-bounds checkpoints clamp instead of panicking
+        assert_eq!(AdaptiveController::resume(2, 8, 1, 64).chunks(), 8);
+        assert_eq!(AdaptiveController::resume(2, 8, 1, 0).chunks(), 2);
+    }
+
+    #[test]
+    fn dirty_map_mask_roundtrips_through_checkpoint() {
+        let mut d = DirtyMap::all_dirty(8);
+        d.clear(0..8);
+        d.mark(1);
+        d.mark(6);
+        let restored = DirtyMap::from_mask(d.mask(), 8);
+        assert_eq!(restored.mask(), d.mask());
+        assert!(restored.is_dirty(1) && restored.is_dirty(6));
+        assert_eq!(restored.count_dirty(), 2);
+        // a mask wider than the map clips instead of marking out of range
+        assert_eq!(DirtyMap::from_mask(u64::MAX, 4).count_dirty(), 4);
     }
 
     #[test]

@@ -11,14 +11,74 @@
 //! like concurrent RDMA puts into the same remote buffer (§4.4, fig. 2
 //! III).  With `chunks = 1` (the default) a slot is exactly the original
 //! full-state seqlock.
+//!
+//! # Wire format (versioned contract, see `docs/WIRE.md`)
+//!
+//! Since the transport refactor a segment is not a Rust object graph but
+//! a *flat word region* with a fixed layout — the same bytes whether the
+//! region is process-private heap (`inproc`), a `/dev/shm` mapping shared
+//! across processes (`shmem`), or the local mirror a socket receive
+//! thread applies frames into.  All multi-word values are little-endian
+//! host words; the metadata plane is `AtomicU64`, the payload plane
+//! `AtomicU32`.
+//!
+//! ```text
+//! header (9 x u64):   magic "ASGDWIRE" | wire version | owner rank
+//!                     | state_len | n_slots | chunks
+//!                     | layout word    (epoch << 32 | chunks)
+//!                     | heartbeat word (retired.1 | incarnation.15 | beats.48)
+//!                     | suspicion word (gossip bitmask, bit p = rank p)
+//! per slot, per block (7 x u64): version | active | clean | sender
+//!                     | iter | writes | consumed
+//! payload (n_slots x state_len x u32): f32 bit patterns
+//! ```
+//!
+//! Any layout change bumps [`WIRE_VERSION`]; attachers and socket peers
+//! refuse loudly on a mismatch rather than misread shared words.
 
+use crate::util::shm::SharedMap;
+use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// Magic word identifying a mapped segment region ("ASGDWIRE", LE).
+pub const WIRE_MAGIC: u64 = u64::from_le_bytes(*b"ASGDWIRE");
+
+/// Version of the segment word layout *and* the socket frame encoding.
+/// Bumped on any incompatible change; every attach/connect validates it.
+pub const WIRE_VERSION: u64 = 1;
 
 /// Upper bound on blocks per coalesced group put (and on the adaptive
 /// physical block count): the dirty bitmap and the merge touch mask pack
 /// block selection into a `u64`, mirroring the `n_buffers <= 64` gate-mask
 /// policy.  `TrainConfig::validate` enforces this at the config level.
 pub const MAX_GROUP_BLOCKS: usize = 64;
+
+// ---- header word indices (the versioned contract) ----------------------
+const H_MAGIC: usize = 0;
+const H_VERSION: usize = 1;
+const H_RANK: usize = 2;
+const H_STATE_LEN: usize = 3;
+const H_SLOTS: usize = 4;
+const H_CHUNKS: usize = 5;
+const H_LAYOUT: usize = 6;
+const H_HEARTBEAT: usize = 7;
+const H_SUSPICION: usize = 8;
+const SEG_HEADER_WORDS: usize = 9;
+
+// ---- per-block metadata word offsets ------------------------------------
+const F_VERSION: usize = 0;
+const F_ACTIVE: usize = 1;
+const F_CLEAN: usize = 2;
+const F_SENDER: usize = 3;
+const F_ITER: usize = 4;
+const F_WRITES: usize = 5;
+const F_CONSUMED: usize = 6;
+const BLOCK_META_WORDS: usize = 7;
+
+/// u64 words in the metadata plane (header + all block descriptors).
+fn meta_words(n_slots: usize, chunks: usize) -> usize {
+    SEG_HEADER_WORDS + n_slots * chunks * BLOCK_META_WORDS
+}
 
 /// How a `state_len`-word state vector is split into contiguous blocks.
 ///
@@ -115,90 +175,47 @@ pub struct SlotSnapshot {
     pub data: Vec<f32>,
 }
 
-/// Per-block seqlock metadata.
-struct Block {
-    version: AtomicU64,
-    /// Writers currently inside this block.  Two concurrent writers each
-    /// bump `version` on entry, which can make it *even* again while both
-    /// are still storing — a plain seqlock parity check would then flag a
-    /// mixed payload `Fresh`.  The counter closes that hole without
-    /// blocking: readers treat `active > 0` as mid-write.
-    active: AtomicU64,
-    /// Version at which the block last settled from a *provably sole*
-    /// writer (one whose seqlock window contained no other bump).  A
-    /// payload is only `Fresh` when the observed version equals this
-    /// mark: overlapped writers can fully exit and leave a settled,
-    /// sender-mixed payload that no read-window check can detect, and
-    /// such a settle never records a clean mark.  Stale marks from
-    /// delayed stores are harmless — they can only mismatch the current
-    /// version and force a conservative `Torn`.
-    clean: AtomicU64,
-    sender: AtomicU32,
-    iter: AtomicU64,
-    /// Completed writes into this block (lost-message accounting).
-    writes: AtomicU64,
-    /// Value of `writes` when the current payload was last consumed.
-    consumed: AtomicU64,
-}
-
-impl Block {
-    fn new() -> Self {
-        Self {
-            version: AtomicU64::new(0),
-            active: AtomicU64::new(0),
-            clean: AtomicU64::new(0),
-            sender: AtomicU32::new(u32::MAX),
-            iter: AtomicU64::new(0),
-            writes: AtomicU64::new(0),
-            consumed: AtomicU64::new(0),
-        }
-    }
-}
-
-struct Slot {
-    blocks: Vec<Block>,
-    data: Vec<AtomicU32>,
-}
-
-impl Slot {
-    fn new(state_len: usize, chunks: usize) -> Self {
-        Self {
-            blocks: (0..chunks).map(|_| Block::new()).collect(),
-            data: (0..state_len).map(|_| AtomicU32::new(0)).collect(),
-        }
-    }
+/// What keeps a segment's word region alive.  Underscore fields: held
+/// for ownership only, all access goes through the cached raw pointers.
+struct Backing {
+    _heap: Option<Box<[AtomicU64]>>,
+    _map: Option<SharedMap>,
 }
 
 /// A rank's registered memory segment: `n_slots` external buffers of
 /// `state_len` f32 words each (fig. 2: the per-thread "external buffer"),
 /// each split into `layout.chunks` independently versioned blocks.
+///
+/// The segment is a *view over a flat word region* in the wire format
+/// documented at the module level.  [`Segment::new_chunked`] hosts the
+/// region on the process heap (the `inproc` transport);
+/// [`Segment::create_mapped`]/[`Segment::attach_mapped`] host it in a
+/// shared file mapping (the `shmem` transport); the socket transport
+/// hosts heap regions as local mirrors of remote segments.  All seqlock,
+/// layout, heartbeat and suspicion semantics are identical in every case
+/// because they are defined on the words, not on the host.
 pub struct Segment {
     pub rank: usize,
     pub state_len: usize,
     layout: ChunkLayout,
-    slots: Vec<Slot>,
-    /// The owner's advertised *logical* grouping, `(epoch << 32) | chunks`
-    /// (adaptive communication).  The data plane always stays at the
-    /// fixed physical granularity of `layout` — that is the whole
-    /// re-layout transition protocol: a logical re-layout only changes
-    /// how the sender groups physical blocks into coalesced puts, never
-    /// the block boundaries a reader interprets, so a reader holding the
-    /// old layout can never misread word ranges.  The epoch versions the
-    /// grouping for observers (stats, benches, adaptation audits).
-    layout_word: AtomicU64,
-    /// The owner's liveness heartbeat, `(incarnation << 48) | beats`
-    /// (see [`crate::gaspi::liveness`]).  Published wait-free by the
-    /// segment's owner on every send event — it rides the same metadata
-    /// plane as the layout word, no new synchronization primitive — and
-    /// read wait-free by every peer's lease poll, exactly like a slot.
-    /// The incarnation half is bumped only by the supervisor when it
-    /// re-spawns the owner after a crash, which is what lets observers
-    /// tell a *reborn* worker (incarnation advanced: it really died and
-    /// was restored) from a merely *slow* one (same incarnation: the
-    /// suspicion was false).
-    heartbeat_word: AtomicU64,
+    n_slots: usize,
+    /// Metadata plane: header + per-block descriptor words.
+    meta: *const AtomicU64,
+    /// Payload plane: `n_slots * state_len` f32 bit patterns.
+    data: *const AtomicU32,
+    _backing: Backing,
 }
 
+// SAFETY: every access to the region goes through `&AtomicU64` /
+// `&AtomicU32` references derived from the cached base pointers; the
+// backing (heap box or shared mapping) is owned and outlives the
+// pointers.  Concurrent mutation is the *point* of the type and is
+// mediated entirely by atomics.
+unsafe impl Send for Segment {}
+unsafe impl Sync for Segment {}
+
+/// The heartbeat-word bit split and the retirement flag.
+///
 /// Bits of the heartbeat word holding the beat counter; bits 48..63
 /// hold the incarnation number and bit 63 the retirement flag.  2^48
 /// send events per incarnation is unreachable in practice, so the plain
@@ -212,29 +229,188 @@ pub const HEARTBEAT_BEAT_BITS: u32 = 48;
 pub const HEARTBEAT_RETIRED_BIT: u64 = 1 << 63;
 
 impl Segment {
+    /// Bytes of the flat region for a given shape, rounded up to a u64
+    /// boundary (the size of the `shmem` backing file).
+    pub fn byte_len(n_slots: usize, state_len: usize, chunks: usize) -> usize {
+        let bytes = meta_words(n_slots, chunks) * 8 + n_slots * state_len * 4;
+        (bytes + 7) & !7
+    }
+
     /// Full-state slots (one block per slot) — the original substrate.
     pub fn new(rank: usize, n_slots: usize, state_len: usize) -> Self {
         Self::new_chunked(rank, n_slots, state_len, 1)
     }
 
-    /// Slots split into `chunks` independently versioned blocks.
+    /// Slots split into `chunks` independently versioned blocks, hosted
+    /// on the process heap (the `inproc` transport and socket mirrors).
     pub fn new_chunked(rank: usize, n_slots: usize, state_len: usize, chunks: usize) -> Self {
         assert!(n_slots >= 1 && state_len >= 1);
         let layout = ChunkLayout::new(state_len, chunks);
+        let words = meta_words(n_slots, chunks) + n_slots * state_len.div_ceil(2);
+        let heap: Box<[AtomicU64]> = (0..words).map(|_| AtomicU64::new(0)).collect();
+        let base = heap.as_ptr() as *mut u8;
+        let seg = Self::over_region(
+            rank,
+            layout,
+            n_slots,
+            base,
+            Backing {
+                _heap: Some(heap),
+                _map: None,
+            },
+        );
+        seg.init_header();
+        seg
+    }
+
+    /// Host a fresh segment in `map` (creator side of the `shmem`
+    /// transport).  The mapping must be zero-filled (a newly truncated
+    /// backing file is) and at least [`Segment::byte_len`] long.
+    pub fn create_mapped(
+        rank: usize,
+        n_slots: usize,
+        state_len: usize,
+        chunks: usize,
+        map: SharedMap,
+    ) -> Result<Self> {
+        let layout = ChunkLayout::new(state_len, chunks);
+        ensure!(n_slots >= 1, "segment needs at least one slot");
+        ensure!(
+            map.len() >= Self::byte_len(n_slots, state_len, chunks),
+            "mapping of {} bytes too small for segment shape (need {})",
+            map.len(),
+            Self::byte_len(n_slots, state_len, chunks)
+        );
+        let base = map.ptr();
+        let seg = Self::over_region(
+            rank,
+            layout,
+            n_slots,
+            base,
+            Backing {
+                _heap: None,
+                _map: Some(map),
+            },
+        );
+        seg.init_header();
+        Ok(seg)
+    }
+
+    /// Attach to a segment another process created (worker side of the
+    /// `shmem` transport).  Refuses loudly on any header mismatch —
+    /// magic, wire version, owner rank, or shape — rather than misread
+    /// shared words.
+    pub fn attach_mapped(
+        rank: usize,
+        n_slots: usize,
+        state_len: usize,
+        chunks: usize,
+        map: SharedMap,
+    ) -> Result<Self> {
+        let layout = ChunkLayout::new(state_len, chunks);
+        ensure!(
+            map.len() >= Self::byte_len(n_slots, state_len, chunks),
+            "mapping of {} bytes too small for segment shape",
+            map.len()
+        );
+        let base = map.ptr();
+        let seg = Self::over_region(
+            rank,
+            layout,
+            n_slots,
+            base,
+            Backing {
+                _heap: None,
+                _map: Some(map),
+            },
+        );
+        let check = [
+            (H_MAGIC, WIRE_MAGIC, "magic"),
+            (H_VERSION, WIRE_VERSION, "wire version"),
+            (H_RANK, rank as u64, "owner rank"),
+            (H_STATE_LEN, state_len as u64, "state_len"),
+            (H_SLOTS, n_slots as u64, "n_slots"),
+            (H_CHUNKS, chunks as u64, "chunks"),
+        ];
+        for (word, expect, what) in check {
+            let got = seg.hdr(word).load(Ordering::Acquire);
+            ensure!(
+                got == expect,
+                "segment attach refused: {what} mismatch (found {got:#x}, expected {expect:#x}) \
+                 — stale run directory or incompatible peer (wire version {WIRE_VERSION})"
+            );
+        }
+        Ok(seg)
+    }
+
+    fn over_region(
+        rank: usize,
+        layout: ChunkLayout,
+        n_slots: usize,
+        base: *mut u8,
+        backing: Backing,
+    ) -> Self {
+        debug_assert_eq!(base as usize % 8, 0, "segment region must be u64-aligned");
+        let meta = base as *const AtomicU64;
+        let data =
+            unsafe { base.add(meta_words(n_slots, layout.chunks) * 8) } as *const AtomicU32;
         Self {
             rank,
-            state_len,
+            state_len: layout.state_len,
             layout,
-            slots: (0..n_slots)
-                .map(|_| Slot::new(state_len, layout.n_chunks()))
-                .collect(),
-            layout_word: AtomicU64::new(chunks as u64),
-            heartbeat_word: AtomicU64::new(0),
+            n_slots,
+            meta,
+            data,
+            _backing: backing,
         }
     }
 
+    /// Write the header of a fresh (all-zero) region.  The magic lands
+    /// last with `Release`: an attacher that sees it sees everything.
+    fn init_header(&self) {
+        self.hdr(H_RANK).store(self.rank as u64, Ordering::Relaxed);
+        self.hdr(H_STATE_LEN)
+            .store(self.state_len as u64, Ordering::Relaxed);
+        self.hdr(H_SLOTS).store(self.n_slots as u64, Ordering::Relaxed);
+        self.hdr(H_CHUNKS)
+            .store(self.layout.chunks as u64, Ordering::Relaxed);
+        self.hdr(H_LAYOUT)
+            .store(self.layout.chunks as u64, Ordering::Relaxed);
+        // "no write yet" reads as sender u32::MAX, like the old in-heap
+        // block initializer
+        for slot in 0..self.n_slots {
+            for block in 0..self.layout.chunks {
+                self.bmeta(slot, block, F_SENDER)
+                    .store(u64::from(u32::MAX), Ordering::Relaxed);
+            }
+        }
+        self.hdr(H_VERSION).store(WIRE_VERSION, Ordering::Relaxed);
+        self.hdr(H_MAGIC).store(WIRE_MAGIC, Ordering::Release);
+    }
+
+    #[inline]
+    fn hdr(&self, word: usize) -> &AtomicU64 {
+        debug_assert!(word < SEG_HEADER_WORDS);
+        unsafe { &*self.meta.add(word) }
+    }
+
+    #[inline]
+    fn bmeta(&self, slot: usize, block: usize, field: usize) -> &AtomicU64 {
+        debug_assert!(
+            slot < self.n_slots && block < self.layout.chunks && field < BLOCK_META_WORDS
+        );
+        let idx = SEG_HEADER_WORDS + (slot * self.layout.chunks + block) * BLOCK_META_WORDS + field;
+        unsafe { &*self.meta.add(idx) }
+    }
+
+    #[inline]
+    fn word(&self, slot: usize, w: usize) -> &AtomicU32 {
+        debug_assert!(slot < self.n_slots && w < self.state_len);
+        unsafe { &*self.data.add(slot * self.state_len + w) }
+    }
+
     pub fn n_slots(&self) -> usize {
-        self.slots.len()
+        self.n_slots
     }
 
     pub fn layout(&self) -> ChunkLayout {
@@ -256,29 +432,32 @@ impl Segment {
         v1.max(v2).saturating_sub(1)
     }
 
-    fn write_block_inner(
-        block: &Block,
-        data: &[AtomicU32],
+    fn write_block_raw(
+        &self,
+        slot: usize,
+        block: usize,
         sender: u32,
         iter: u64,
         payload: &[f32],
     ) -> bool {
-        debug_assert_eq!(payload.len(), data.len());
-        let writes_before = block.writes.load(Ordering::Relaxed);
-        let consumed = block.consumed.load(Ordering::Relaxed);
+        let range = self.layout.bounds(block);
+        debug_assert_eq!(payload.len(), range.len());
+        let writes_before = self.bmeta(slot, block, F_WRITES).load(Ordering::Relaxed);
+        let consumed = self.bmeta(slot, block, F_CONSUMED).load(Ordering::Relaxed);
         // enter: mark a writer inside, version becomes odd (wait-free —
         // concurrent writers proceed and interleave; readers detect them
         // through `active` even when two entries make the version even)
-        block.active.fetch_add(1, Ordering::AcqRel);
-        let v_in = block.version.fetch_add(1, Ordering::AcqRel) + 1;
-        block.sender.store(sender, Ordering::Relaxed);
-        block.iter.store(iter, Ordering::Relaxed);
-        for (dst, &src) in data.iter().zip(payload) {
-            dst.store(src.to_bits(), Ordering::Relaxed);
+        self.bmeta(slot, block, F_ACTIVE).fetch_add(1, Ordering::AcqRel);
+        let v_in = self.bmeta(slot, block, F_VERSION).fetch_add(1, Ordering::AcqRel) + 1;
+        self.bmeta(slot, block, F_SENDER)
+            .store(u64::from(sender), Ordering::Relaxed);
+        self.bmeta(slot, block, F_ITER).store(iter, Ordering::Relaxed);
+        for (i, &src) in payload.iter().enumerate() {
+            self.word(slot, range.start + i).store(src.to_bits(), Ordering::Relaxed);
         }
         // leave: version even again once every writer has left
-        let v_out = block.version.fetch_add(1, Ordering::AcqRel) + 1;
-        let remaining = block.active.fetch_sub(1, Ordering::AcqRel) - 1;
+        let v_out = self.bmeta(slot, block, F_VERSION).fetch_add(1, Ordering::AcqRel) + 1;
+        let remaining = self.bmeta(slot, block, F_ACTIVE).fetch_sub(1, Ordering::AcqRel) - 1;
         if remaining == 0 && v_out == v_in + 1 {
             // sole writer for the whole window (any other writer's entry
             // or exit would have bumped the version in between, and
@@ -288,9 +467,9 @@ impl Segment {
             // from an earlier sole writer must never regress a newer one
             // (clean marks are sole-settle versions, so the max is always
             // the newest clean settle).
-            block.clean.fetch_max(v_out, Ordering::AcqRel);
+            self.bmeta(slot, block, F_CLEAN).fetch_max(v_out, Ordering::AcqRel);
         }
-        block.writes.fetch_add(1, Ordering::Relaxed);
+        self.bmeta(slot, block, F_WRITES).fetch_add(1, Ordering::Relaxed);
         // lost-message accounting (approximate under races, stats only):
         // the previous payload was never consumed.
         writes_before > consumed
@@ -307,11 +486,9 @@ impl Segment {
     /// segment this is `chunks` consecutive block puts.
     pub fn write_remote(&self, slot: usize, sender: u32, iter: u64, payload: &[f32]) -> bool {
         debug_assert_eq!(payload.len(), self.state_len);
-        let s = &self.slots[slot];
         let mut lost = false;
         for (c, range) in self.layout.iter_bounds().enumerate() {
-            let data = &s.data[range.clone()];
-            lost |= Self::write_block_inner(&s.blocks[c], data, sender, iter, &payload[range]);
+            lost |= self.write_block_raw(slot, c, sender, iter, &payload[range]);
         }
         lost
     }
@@ -327,10 +504,7 @@ impl Segment {
         iter: u64,
         payload: &[f32],
     ) -> bool {
-        let range = self.layout.bounds(block);
-        debug_assert_eq!(payload.len(), range.len());
-        let s = &self.slots[slot];
-        Self::write_block_inner(&s.blocks[block], &s.data[range], sender, iter, payload)
+        self.write_block_raw(slot, block, sender, iter, payload)
     }
 
     /// Wait-free one-sided put of a contiguous *group* of blocks as one
@@ -356,32 +530,34 @@ impl Segment {
         );
         let words = self.layout.blocks_bounds(blocks.clone());
         debug_assert_eq!(payload.len(), words.len());
-        let s = &self.slots[slot];
         let mut v_in = [0u64; MAX_GROUP_BLOCKS];
         let mut lost = 0u64;
         // enter every member block before any store: a reader of any of
         // them sees a writer inside for the whole coalesced put
-        for (j, b) in s.blocks[blocks.clone()].iter().enumerate() {
-            if b.writes.load(Ordering::Relaxed) > b.consumed.load(Ordering::Relaxed) {
+        for (j, b) in blocks.clone().enumerate() {
+            if self.bmeta(slot, b, F_WRITES).load(Ordering::Relaxed)
+                > self.bmeta(slot, b, F_CONSUMED).load(Ordering::Relaxed)
+            {
                 lost += 1;
             }
-            b.active.fetch_add(1, Ordering::AcqRel);
-            v_in[j] = b.version.fetch_add(1, Ordering::AcqRel) + 1;
-            b.sender.store(sender, Ordering::Relaxed);
-            b.iter.store(iter, Ordering::Relaxed);
+            self.bmeta(slot, b, F_ACTIVE).fetch_add(1, Ordering::AcqRel);
+            v_in[j] = self.bmeta(slot, b, F_VERSION).fetch_add(1, Ordering::AcqRel) + 1;
+            self.bmeta(slot, b, F_SENDER)
+                .store(u64::from(sender), Ordering::Relaxed);
+            self.bmeta(slot, b, F_ITER).store(iter, Ordering::Relaxed);
         }
-        for (dst, &src) in s.data[words].iter().zip(payload) {
-            dst.store(src.to_bits(), Ordering::Relaxed);
+        for (i, &src) in payload.iter().enumerate() {
+            self.word(slot, words.start + i).store(src.to_bits(), Ordering::Relaxed);
         }
         // leave in the same order; the sole-settle (clean mark) check is
-        // per block, exactly as in `write_block_inner`
-        for (j, b) in s.blocks[blocks.clone()].iter().enumerate() {
-            let v_out = b.version.fetch_add(1, Ordering::AcqRel) + 1;
-            let remaining = b.active.fetch_sub(1, Ordering::AcqRel) - 1;
+        // per block, exactly as in `write_block_raw`
+        for (j, b) in blocks.clone().enumerate() {
+            let v_out = self.bmeta(slot, b, F_VERSION).fetch_add(1, Ordering::AcqRel) + 1;
+            let remaining = self.bmeta(slot, b, F_ACTIVE).fetch_sub(1, Ordering::AcqRel) - 1;
             if remaining == 0 && v_out == v_in[j] + 1 {
-                b.clean.fetch_max(v_out, Ordering::AcqRel);
+                self.bmeta(slot, b, F_CLEAN).fetch_max(v_out, Ordering::AcqRel);
             }
-            b.writes.fetch_add(1, Ordering::Relaxed);
+            self.bmeta(slot, b, F_WRITES).fetch_add(1, Ordering::Relaxed);
         }
         lost
     }
@@ -392,21 +568,33 @@ impl Segment {
     /// calls this, so a plain load/store pair suffices.
     pub fn advertise_layout(&self, chunks: usize) -> u64 {
         debug_assert!((1..=self.layout.n_chunks()).contains(&chunks));
-        let cur = self.layout_word.load(Ordering::Acquire);
+        let cur = self.hdr(H_LAYOUT).load(Ordering::Acquire);
         let (epoch, cur_chunks) = (cur >> 32, cur & u64::from(u32::MAX));
         if cur_chunks == chunks as u64 {
             return epoch;
         }
         let next = epoch + 1;
-        self.layout_word
+        self.hdr(H_LAYOUT)
             .store((next << 32) | chunks as u64, Ordering::Release);
         next
     }
 
     /// `(epoch, chunks)` of the owner's advertised logical grouping.
     pub fn current_layout(&self) -> (u64, usize) {
-        let w = self.layout_word.load(Ordering::Acquire);
+        let w = self.hdr(H_LAYOUT).load(Ordering::Acquire);
         (w >> 32, (w & u64::from(u32::MAX)) as usize)
+    }
+
+    /// Raw layout word (socket frame serialization).
+    pub(crate) fn layout_word_raw(&self) -> u64 {
+        self.hdr(H_LAYOUT).load(Ordering::Acquire)
+    }
+
+    /// Mirror-apply a peer's layout word (socket receive thread only:
+    /// per-sender frames arrive in order over one connection, so a plain
+    /// store cannot regress the word).
+    pub(crate) fn set_layout_word(&self, w: u64) {
+        self.hdr(H_LAYOUT).store(w, Ordering::Release);
     }
 
     /// Publish one liveness beat (owner-only, wait-free).  Called on
@@ -415,12 +603,17 @@ impl Segment {
     /// peers' leases expire on their own schedule.  Returns the word now
     /// in force.
     pub fn publish_heartbeat(&self) -> u64 {
-        self.heartbeat_word.fetch_add(1, Ordering::Release) + 1
+        self.hdr(H_HEARTBEAT).fetch_add(1, Ordering::Release) + 1
     }
 
     /// The owner's current heartbeat word (peer-side lease poll read).
     pub fn heartbeat(&self) -> u64 {
-        self.heartbeat_word.load(Ordering::Acquire)
+        self.hdr(H_HEARTBEAT).load(Ordering::Acquire)
+    }
+
+    /// Mirror-apply a peer's heartbeat word (socket receive thread only).
+    pub(crate) fn set_heartbeat_word(&self, w: u64) {
+        self.hdr(H_HEARTBEAT).store(w, Ordering::Release);
     }
 
     /// Mark this segment's owner as cleanly retired (called by the
@@ -428,7 +621,7 @@ impl Segment {
     /// word change, so a pending suspicion resolves on the next lease
     /// poll, and the static retired word never expires a lease again.
     pub fn publish_retirement(&self) -> u64 {
-        self.heartbeat_word
+        self.hdr(H_HEARTBEAT)
             .fetch_or(HEARTBEAT_RETIRED_BIT, Ordering::Release)
             | HEARTBEAT_RETIRED_BIT
     }
@@ -441,19 +634,33 @@ impl Segment {
     /// writer can exist when this runs (the previous owner is dead and
     /// the replacement not yet spawned), so load+store suffices.
     pub fn begin_incarnation(&self) -> u64 {
-        let w = self.heartbeat_word.load(Ordering::Acquire) & !HEARTBEAT_RETIRED_BIT;
+        let w = self.hdr(H_HEARTBEAT).load(Ordering::Acquire) & !HEARTBEAT_RETIRED_BIT;
         let inc = (w >> HEARTBEAT_BEAT_BITS) + 1;
         let beats = (w & ((1u64 << HEARTBEAT_BEAT_BITS) - 1)) + 1;
         let next = (inc << HEARTBEAT_BEAT_BITS) | beats;
-        self.heartbeat_word.store(next, Ordering::Release);
+        self.hdr(H_HEARTBEAT).store(next, Ordering::Release);
         next
+    }
+
+    /// Publish the owner's gossip mask: bit `p` set means "I currently
+    /// suspect rank `p`" (ranks >= 64 are never gossiped — same u64
+    /// policy as the dirty map and gate masks).  Owner-only, wait-free;
+    /// late joiners and reborn ranks read every peer's mask once at
+    /// start-up to skip the lease warm-up on a known corpse.
+    pub fn publish_suspicion(&self, mask: u64) {
+        self.hdr(H_SUSPICION).store(mask, Ordering::Release);
+    }
+
+    /// The owner's current gossip mask (peer-side read).
+    pub fn suspicion(&self) -> u64 {
+        self.hdr(H_SUSPICION).load(Ordering::Acquire)
     }
 
     /// Diagnostic accessor for the stress suite: the block's clean mark
     /// (the version of its last provably-sole settle).  Invariant under
     /// test: this value never regresses.
     pub fn clean_mark(&self, slot: usize, block: usize) -> u64 {
-        self.slots[slot].blocks[block].clean.load(Ordering::Acquire)
+        self.bmeta(slot, block, F_CLEAN).load(Ordering::Acquire)
     }
 
     /// Snapshot one block of a slot into `buf` (which must have the
@@ -474,9 +681,7 @@ impl Segment {
     ) -> (ReadOutcome, u32, u64, u64) {
         let range = self.layout.bounds(block);
         debug_assert_eq!(buf.len(), range.len());
-        let s = &self.slots[slot];
-        let b = &s.blocks[block];
-        let v1 = b.version.load(Ordering::Acquire);
+        let v1 = self.bmeta(slot, block, F_VERSION).load(Ordering::Acquire);
         if v1 == 0 || v1 == last_version {
             // versions only move forward, so v1 == last_version means no
             // writer has entered since the snapshot that reported it
@@ -492,23 +697,26 @@ impl Segment {
         // *even*, which is why parity alone is not enough; writers that
         // overlapped *each other* before the window are caught by the
         // clean-mark check below.)
-        let active = b.active.load(Ordering::Acquire);
-        for (dst, w) in buf.iter_mut().zip(&s.data[range]) {
-            *dst = f32::from_bits(w.load(Ordering::Relaxed));
+        let active = self.bmeta(slot, block, F_ACTIVE).load(Ordering::Acquire);
+        for (i, dst) in buf.iter_mut().enumerate() {
+            *dst = f32::from_bits(self.word(slot, range.start + i).load(Ordering::Relaxed));
         }
-        let sender = b.sender.load(Ordering::Relaxed);
-        let iter = b.iter.load(Ordering::Relaxed);
-        let v2 = b.version.load(Ordering::Acquire);
+        let sender = self.bmeta(slot, block, F_SENDER).load(Ordering::Relaxed) as u32;
+        let iter = self.bmeta(slot, block, F_ITER).load(Ordering::Relaxed);
+        let v2 = self.bmeta(slot, block, F_VERSION).load(Ordering::Acquire);
         // `Fresh` additionally requires the payload to be a *clean*
         // settle (`clean == v1`): overlapped writers can fully exit and
         // leave a settled, mixed payload, which only the absence of a
         // clean mark reveals.  A clean mark that merely hasn't landed
         // yet costs one conservative Torn and a re-poll, never a loss.
-        let clean = b.clean.load(Ordering::Acquire);
+        let clean = self.bmeta(slot, block, F_CLEAN).load(Ordering::Acquire);
         if v1 % 2 == 1 || v1 != v2 || active != 0 || clean != v1 {
             (ReadOutcome::Torn, sender, iter, Self::torn_version(v1, v2))
         } else {
-            b.consumed.store(b.writes.load(Ordering::Relaxed), Ordering::Relaxed);
+            self.bmeta(slot, block, F_CONSUMED).store(
+                self.bmeta(slot, block, F_WRITES).load(Ordering::Relaxed),
+                Ordering::Relaxed,
+            );
             (ReadOutcome::Fresh, sender, iter, v1)
         }
     }
@@ -522,7 +730,7 @@ impl Segment {
             "read_slot needs a single-block segment; use read_block_into"
         );
         // allocation-free fast path for the common Stale poll
-        let v = self.slots[slot].blocks[0].version.load(Ordering::Acquire);
+        let v = self.bmeta(slot, 0, F_VERSION).load(Ordering::Acquire);
         if v == 0 || v == last_version {
             return SlotSnapshot {
                 outcome: ReadOutcome::Stale,
@@ -566,16 +774,14 @@ impl Segment {
 
     /// Version of a slot's block 0 right now (reader bookkeeping).
     pub fn slot_version(&self, slot: usize) -> u64 {
-        self.slots[slot].blocks[0].version.load(Ordering::Acquire)
+        self.bmeta(slot, 0, F_VERSION).load(Ordering::Acquire)
     }
 
     /// Total completed block writes into a slot (a full-state put on a
     /// `chunks`-block segment counts `chunks` times).
     pub fn slot_writes(&self, slot: usize) -> u64 {
-        self.slots[slot]
-            .blocks
-            .iter()
-            .map(|b| b.writes.load(Ordering::Relaxed))
+        (0..self.layout.chunks)
+            .map(|b| self.bmeta(slot, b, F_WRITES).load(Ordering::Relaxed))
             .sum()
     }
 }
@@ -956,5 +1162,74 @@ mod tests {
                 w.join().unwrap();
             }
         }
+    }
+
+    #[test]
+    fn suspicion_word_roundtrips() {
+        let seg = Segment::new(3, 1, 4);
+        assert_eq!(seg.suspicion(), 0, "fresh segment gossips nothing");
+        seg.publish_suspicion(0b101);
+        assert_eq!(seg.suspicion(), 0b101);
+        seg.publish_suspicion(0);
+        assert_eq!(seg.suspicion(), 0);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_segments_share_the_wire_format() {
+        use crate::util::shm;
+        let dir = std::env::temp_dir().join(format!("asgd-seg-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("seg-000.seg");
+        let (n_slots, state_len, chunks) = (2usize, 10usize, 3usize);
+        let len = Segment::byte_len(n_slots, state_len, chunks) as u64;
+        let f = shm::create_backing_file(&path, len).unwrap();
+        let creator = Segment::create_mapped(
+            0,
+            n_slots,
+            state_len,
+            chunks,
+            shm::SharedMap::map_file(&f, len as usize).unwrap(),
+        )
+        .unwrap();
+        // a second, independent mapping of the same file (what another
+        // process would hold) observes writes through the first
+        let g = shm::open_backing_file(&path, len).unwrap();
+        let attached = Segment::attach_mapped(
+            0,
+            n_slots,
+            state_len,
+            chunks,
+            shm::SharedMap::map_file(&g, len as usize).unwrap(),
+        )
+        .unwrap();
+        let payload: Vec<f32> = (0..state_len).map(|i| i as f32).collect();
+        creator.write_remote(1, 4, 17, &payload);
+        let l = attached.layout();
+        for c in 0..chunks {
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            let (out, sender, iter, _) = attached.read_block_into(1, c, 0, &mut buf);
+            assert_eq!(out, ReadOutcome::Fresh);
+            assert_eq!((sender, iter), (4, 17));
+            assert_eq!(buf, payload[l.bounds(c)]);
+        }
+        // metadata plane crosses the mapping too
+        creator.publish_heartbeat();
+        creator.publish_suspicion(0b10);
+        assert_eq!(attached.heartbeat(), 1);
+        assert_eq!(attached.suspicion(), 0b10);
+        // attach refuses loudly on a shape or identity mismatch
+        let h = shm::open_backing_file(&path, len).unwrap();
+        let err = Segment::attach_mapped(
+            1, // wrong owner rank
+            n_slots,
+            state_len,
+            chunks,
+            shm::SharedMap::map_file(&h, len as usize).unwrap(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("owner rank"), "{err}");
+        drop((creator, attached));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -63,6 +63,11 @@ pub struct CommStats {
     /// heartbeat resumed under a new incarnation (it crashed and was
     /// restored from checkpoint by the supervisor).
     pub recovered: Counter,
+    /// Liveness: suspicions this rank adopted from peer gossip at
+    /// start-up ([`crate::gaspi::liveness::LivenessView::seed_from_gossip`])
+    /// instead of earning through its own lease warm-up.  Every seed also
+    /// ticks `suspected`, so the resolution identity is unchanged.
+    pub gossip_seeded: Counter,
     /// Delivered blocks whose sender was suspected at read time: kept
     /// out of the merge (the gate never waits on — or merges from — a
     /// corpse).  Fresh deliveries are deferred (re-polled until the
@@ -92,6 +97,7 @@ pub struct StatsSnapshot {
     pub suspected: u64,
     pub false_suspicion: u64,
     pub recovered: u64,
+    pub gossip_seeded: u64,
     pub dead_masked: u64,
     pub restores: u64,
 }
@@ -115,6 +121,7 @@ impl CommStats {
             suspected: self.suspected.get(),
             false_suspicion: self.false_suspicion.get(),
             recovered: self.recovered.get(),
+            gossip_seeded: self.gossip_seeded.get(),
             dead_masked: self.dead_masked.get(),
             restores: self.restores.get(),
         }
@@ -163,6 +170,7 @@ impl WorldStats {
             t.suspected += s.suspected;
             t.false_suspicion += s.false_suspicion;
             t.recovered += s.recovered;
+            t.gossip_seeded += s.gossip_seeded;
             t.dead_masked += s.dead_masked;
             t.restores += s.restores;
         }

@@ -1,0 +1,115 @@
+//! The in-process transport: every rank's segment on this process's
+//! heap, puts as direct atomic stores.  This is exactly the substrate
+//! the repo ran on before the transport split — the whole pre-existing
+//! test, stress and bench suite is its conformance oracle.
+
+use super::{apply_block, apply_group, apply_state, Transport};
+use crate::gaspi::segment::Segment;
+use crate::gaspi::stats::WorldStats;
+use std::ops::Range;
+use std::sync::Arc;
+
+/// Heap-hosted segments, one per rank.
+pub struct Inproc {
+    segments: Vec<Arc<Segment>>,
+    stats: Arc<WorldStats>,
+}
+
+impl Inproc {
+    pub fn new(
+        ranks: usize,
+        n_slots: usize,
+        state_len: usize,
+        chunks: usize,
+        stats: Arc<WorldStats>,
+    ) -> Arc<Self> {
+        let segments = (0..ranks)
+            .map(|r| Arc::new(Segment::new_chunked(r, n_slots, state_len, chunks)))
+            .collect();
+        Arc::new(Self { segments, stats })
+    }
+}
+
+impl Transport for Inproc {
+    fn kind(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn ranks(&self) -> usize {
+        self.segments.len()
+    }
+
+    fn segment(&self, rank: usize) -> &Arc<Segment> {
+        &self.segments[rank]
+    }
+
+    fn stats(&self) -> &Arc<WorldStats> {
+        &self.stats
+    }
+
+    fn put_state(&self, from: usize, to: usize, iter: u64, payload: &[f32], slot: usize) {
+        apply_state(&self.segments[to], &self.stats, to, from as u32, iter, payload, slot);
+    }
+
+    fn put_block(
+        &self,
+        from: usize,
+        to: usize,
+        iter: u64,
+        block: usize,
+        payload: &[f32],
+        slot: usize,
+    ) {
+        apply_block(
+            &self.segments[to],
+            &self.stats,
+            to,
+            from as u32,
+            iter,
+            block,
+            payload,
+            slot,
+        );
+    }
+
+    fn put_group(
+        &self,
+        from: usize,
+        to: usize,
+        iter: u64,
+        blocks: Range<usize>,
+        payload: &[f32],
+        slot: usize,
+    ) {
+        apply_group(
+            &self.segments[to],
+            &self.stats,
+            to,
+            from as u32,
+            iter,
+            blocks,
+            payload,
+            slot,
+        );
+    }
+
+    fn publish_heartbeat(&self, rank: usize) -> u64 {
+        self.segments[rank].publish_heartbeat()
+    }
+
+    fn publish_retirement(&self, rank: usize) -> u64 {
+        self.segments[rank].publish_retirement()
+    }
+
+    fn begin_incarnation(&self, rank: usize) -> u64 {
+        self.segments[rank].begin_incarnation()
+    }
+
+    fn advertise_layout(&self, rank: usize, chunks: usize) -> u64 {
+        self.segments[rank].advertise_layout(chunks)
+    }
+
+    fn publish_suspicion(&self, rank: usize, mask: u64) {
+        self.segments[rank].publish_suspicion(mask);
+    }
+}

@@ -1,0 +1,161 @@
+//! Transport abstraction under [`crate::gaspi::World`]: who hosts the
+//! segment words and how a one-sided put reaches them.
+//!
+//! The seqlock block protocol is defined on a flat word region (see
+//! [`crate::gaspi::segment`] and `docs/WIRE.md`), so "where the region
+//! lives" and "how stores reach it" factor out of the protocol.  A
+//! [`Transport`] owns exactly that factor:
+//!
+//! * [`inproc`](Inproc) — every rank's region on this process's heap;
+//!   a put is a direct atomic store.  Byte-for-byte the substrate the
+//!   whole existing suite runs on; the conformance oracle.
+//! * [`shmem`](Shmem) — every rank's region in a `/dev/shm`-backed file
+//!   mapping shared across *processes*; a put is still a direct atomic
+//!   store, now genuinely one-sided across address spaces (the repro
+//!   analogue of GPI-2's registered RDMA segments).
+//! * [`socket`](Socket) — puts serialized as length-prefixed frames
+//!   over TCP and applied into a local *mirror* region by a receive
+//!   thread; metadata words (layout, heartbeat, suspicion) travel
+//!   in-band as `META` frames.  Version-negotiated on connect,
+//!   refuse-loudly on mismatch.
+//!
+//! The accounting split is part of the contract: *sender-side* counters
+//! (`sent`, `bytes_sent`, `chunk_sent`) are ticked by [`World`]'s put
+//! wrappers at issue time, *receiver-side* loss counters (`overwritten`,
+//! `chunk_lost`) are ticked by the transport at the moment the write
+//! actually lands — synchronously for direct-store backends,
+//! in the receive thread for `socket`.  Totals therefore obey the same
+//! identities on every backend once [`Transport::quiesce`] has drained
+//! in-flight frames.
+//!
+//! [`World`]: crate::gaspi::World
+
+pub mod inproc;
+pub mod shmem;
+pub mod socket;
+
+pub use inproc::Inproc;
+pub use shmem::Shmem;
+pub use socket::Socket;
+
+use super::segment::Segment;
+use super::stats::WorldStats;
+use std::ops::Range;
+use std::sync::Arc;
+
+/// One communication substrate: segment hosting + put delivery + the
+/// metadata plane.  All methods are wait-free for the caller on the
+/// direct-store backends; on `socket` a put enqueues a frame (the
+/// receiver applies it asynchronously, like a NIC draining a send queue).
+pub trait Transport: Send + Sync {
+    /// Backend name as spelled in config (`"inproc" | "shmem" | "socket"`).
+    fn kind(&self) -> &'static str;
+
+    /// Number of ranks in the world.
+    fn ranks(&self) -> usize;
+
+    /// Rank `rank`'s segment *as visible to this process*: the authentic
+    /// region on direct-store backends, the local mirror on `socket`.
+    /// All receive paths (polling, lease reads, gossip) go through this.
+    fn segment(&self, rank: usize) -> &Arc<Segment>;
+
+    /// The shared counters this transport ticks receiver-side losses on.
+    fn stats(&self) -> &Arc<WorldStats>;
+
+    /// Deliver a full-state put into slot `slot` of rank `to`.
+    fn put_state(&self, from: usize, to: usize, iter: u64, payload: &[f32], slot: usize);
+
+    /// Deliver a single-block put.
+    fn put_block(
+        &self,
+        from: usize,
+        to: usize,
+        iter: u64,
+        block: usize,
+        payload: &[f32],
+        slot: usize,
+    );
+
+    /// Deliver a coalesced group put covering `blocks`.
+    fn put_group(
+        &self,
+        from: usize,
+        to: usize,
+        iter: u64,
+        blocks: Range<usize>,
+        payload: &[f32],
+        slot: usize,
+    );
+
+    /// Advance rank `rank`'s heartbeat word (owner-only).
+    fn publish_heartbeat(&self, rank: usize) -> u64;
+
+    /// Set rank `rank`'s clean-retirement flag (owner-only).
+    fn publish_retirement(&self, rank: usize) -> u64;
+
+    /// Open a new incarnation of rank `rank` (supervisor-only).
+    fn begin_incarnation(&self, rank: usize) -> u64;
+
+    /// Advertise rank `rank`'s logical grouping; returns the layout epoch.
+    fn advertise_layout(&self, rank: usize, chunks: usize) -> u64;
+
+    /// Publish rank `rank`'s gossip mask (owner-only).
+    fn publish_suspicion(&self, rank: usize, mask: u64);
+
+    /// Wait until every put issued so far is visible receiver-side.
+    /// A no-op on direct-store backends; `socket` drains its frame
+    /// queues.  Called before final aggregation and stats assertions.
+    fn quiesce(&self) {}
+}
+
+/// Receiver-side accounting for a direct-store full put (shared by the
+/// `inproc` and `shmem` backends and the socket applier).
+#[inline]
+pub(crate) fn apply_state(
+    seg: &Segment,
+    stats: &WorldStats,
+    to: usize,
+    from: u32,
+    iter: u64,
+    payload: &[f32],
+    slot: usize,
+) {
+    if seg.write_remote(slot, from, iter, payload) {
+        stats.rank(to).overwritten.add(1);
+    }
+}
+
+/// Receiver-side accounting for a direct-store block put.
+#[inline]
+pub(crate) fn apply_block(
+    seg: &Segment,
+    stats: &WorldStats,
+    to: usize,
+    from: u32,
+    iter: u64,
+    block: usize,
+    payload: &[f32],
+    slot: usize,
+) {
+    if seg.write_block(slot, block, from, iter, payload) {
+        stats.rank(to).chunk_lost.add(1);
+    }
+}
+
+/// Receiver-side accounting for a direct-store group put.
+#[inline]
+pub(crate) fn apply_group(
+    seg: &Segment,
+    stats: &WorldStats,
+    to: usize,
+    from: u32,
+    iter: u64,
+    blocks: Range<usize>,
+    payload: &[f32],
+    slot: usize,
+) {
+    let lost = seg.write_group(slot, blocks, from, iter, payload);
+    if lost > 0 {
+        stats.rank(to).chunk_lost.add(lost);
+    }
+}

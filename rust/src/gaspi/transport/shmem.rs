@@ -1,0 +1,376 @@
+//! The cross-process memory-mapped transport: every rank's segment in a
+//! file mapping (conventionally under `/dev/shm`, so the pages are RAM),
+//! puts as direct atomic stores *across address spaces* — the repro
+//! analogue of GPI-2's registered RDMA segments with remote completion.
+//!
+//! A run directory holds one `seg-NNN.asgdseg` file per rank in the wire
+//! format of [`crate::gaspi::segment`] plus one `ctl.asgdctl` control
+//! file ([`CtlRegion`]) carrying the cross-process start barrier and the
+//! shared global-sample counter.  The coordinator *creates* the files
+//! and spawns one `asgd worker --attach` child per rank; each child
+//! *attaches* (header-validated, refuse-loudly) and then runs the exact
+//! same seqlock/heartbeat/lease code as the in-process backend — the
+//! words don't know which process is storing to them.
+
+use super::{apply_block, apply_group, apply_state, Transport};
+use crate::gaspi::segment::{Segment, WIRE_VERSION};
+use crate::gaspi::stats::WorldStats;
+use crate::util::shm::{self, SharedMap};
+use anyhow::{ensure, Context, Result};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// File name of rank `rank`'s segment inside a run directory.
+pub fn seg_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("seg-{rank:03}.asgdseg"))
+}
+
+/// File name of the control region inside a run directory.
+pub fn ctl_path(dir: &Path) -> PathBuf {
+    dir.join("ctl.asgdctl")
+}
+
+/// Memory-mapped segments, one per rank, shared across processes.
+pub struct Shmem {
+    segments: Vec<Arc<Segment>>,
+    stats: Arc<WorldStats>,
+    dir: PathBuf,
+    /// The creator unlinks the backing files on drop; attachers never do.
+    owner: bool,
+}
+
+impl Shmem {
+    /// Create the run directory's segment files and map them (the
+    /// coordinator side).  Files are created zero-filled and initialized
+    /// to the wire format before any child can attach.
+    pub fn create(
+        dir: &Path,
+        ranks: usize,
+        n_slots: usize,
+        state_len: usize,
+        chunks: usize,
+        stats: Arc<WorldStats>,
+    ) -> Result<Arc<Self>> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating shmem run directory {}", dir.display()))?;
+        let len = Segment::byte_len(n_slots, state_len, chunks) as u64;
+        let mut segments = Vec::with_capacity(ranks);
+        for r in 0..ranks {
+            let f = shm::create_backing_file(&seg_path(dir, r), len)?;
+            let map = SharedMap::map_file(&f, len as usize)?;
+            segments.push(Arc::new(Segment::create_mapped(
+                r, n_slots, state_len, chunks, map,
+            )?));
+        }
+        Ok(Arc::new(Self {
+            segments,
+            stats,
+            dir: dir.to_path_buf(),
+            owner: true,
+        }))
+    }
+
+    /// Attach to an existing run directory (the `asgd worker --attach`
+    /// side).  Every segment header is validated against the expected
+    /// shape; any mismatch refuses loudly.
+    pub fn attach(
+        dir: &Path,
+        ranks: usize,
+        n_slots: usize,
+        state_len: usize,
+        chunks: usize,
+        stats: Arc<WorldStats>,
+    ) -> Result<Arc<Self>> {
+        let len = Segment::byte_len(n_slots, state_len, chunks) as u64;
+        let mut segments = Vec::with_capacity(ranks);
+        for r in 0..ranks {
+            let f = shm::open_backing_file(&seg_path(dir, r), len)?;
+            let map = SharedMap::map_file(&f, len as usize)?;
+            segments.push(Arc::new(Segment::attach_mapped(
+                r, n_slots, state_len, chunks, map,
+            )?));
+        }
+        Ok(Arc::new(Self {
+            segments,
+            stats,
+            dir: dir.to_path_buf(),
+            owner: false,
+        }))
+    }
+
+    /// The run directory this transport maps.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+impl Drop for Shmem {
+    fn drop(&mut self) {
+        if self.owner {
+            for r in 0..self.segments.len() {
+                let _ = std::fs::remove_file(seg_path(&self.dir, r));
+            }
+        }
+    }
+}
+
+impl Transport for Shmem {
+    fn kind(&self) -> &'static str {
+        "shmem"
+    }
+
+    fn ranks(&self) -> usize {
+        self.segments.len()
+    }
+
+    fn segment(&self, rank: usize) -> &Arc<Segment> {
+        &self.segments[rank]
+    }
+
+    fn stats(&self) -> &Arc<WorldStats> {
+        &self.stats
+    }
+
+    fn put_state(&self, from: usize, to: usize, iter: u64, payload: &[f32], slot: usize) {
+        apply_state(&self.segments[to], &self.stats, to, from as u32, iter, payload, slot);
+    }
+
+    fn put_block(
+        &self,
+        from: usize,
+        to: usize,
+        iter: u64,
+        block: usize,
+        payload: &[f32],
+        slot: usize,
+    ) {
+        apply_block(
+            &self.segments[to],
+            &self.stats,
+            to,
+            from as u32,
+            iter,
+            block,
+            payload,
+            slot,
+        );
+    }
+
+    fn put_group(
+        &self,
+        from: usize,
+        to: usize,
+        iter: u64,
+        blocks: Range<usize>,
+        payload: &[f32],
+        slot: usize,
+    ) {
+        apply_group(
+            &self.segments[to],
+            &self.stats,
+            to,
+            from as u32,
+            iter,
+            blocks,
+            payload,
+            slot,
+        );
+    }
+
+    fn publish_heartbeat(&self, rank: usize) -> u64 {
+        self.segments[rank].publish_heartbeat()
+    }
+
+    fn publish_retirement(&self, rank: usize) -> u64 {
+        self.segments[rank].publish_retirement()
+    }
+
+    fn begin_incarnation(&self, rank: usize) -> u64 {
+        self.segments[rank].begin_incarnation()
+    }
+
+    fn advertise_layout(&self, rank: usize, chunks: usize) -> u64 {
+        self.segments[rank].advertise_layout(chunks)
+    }
+
+    fn publish_suspicion(&self, rank: usize, mask: u64) {
+        self.segments[rank].publish_suspicion(mask);
+    }
+}
+
+// ---- cross-process control region --------------------------------------
+
+const CTL_MAGIC: u64 = u64::from_le_bytes(*b"ASGDCTL1");
+const C_MAGIC: usize = 0;
+const C_VERSION: usize = 1;
+const C_WORKERS: usize = 2;
+const C_BARRIER: usize = 3;
+const C_SAMPLES: usize = 4;
+const CTL_WORDS: usize = 5;
+
+/// The shared control words of a multi-process run: a one-shot start
+/// barrier (every worker bumps the counter and spins until it reaches
+/// the worker count — the cross-process analogue of the in-process
+/// `std::sync::Barrier` start gate) and the global sample counter the
+/// epoch accounting reads.
+pub struct CtlRegion {
+    map: SharedMap,
+    workers: u64,
+}
+
+impl CtlRegion {
+    /// Create the control file in `dir` (coordinator side).
+    pub fn create(dir: &Path, workers: usize) -> Result<Arc<Self>> {
+        let f = shm::create_backing_file(&ctl_path(dir), (CTL_WORDS * 8) as u64)?;
+        let map = SharedMap::map_file(&f, CTL_WORDS * 8)?;
+        let ctl = Self {
+            map,
+            workers: workers as u64,
+        };
+        ctl.word(C_WORKERS).store(workers as u64, Ordering::Relaxed);
+        ctl.word(C_VERSION).store(WIRE_VERSION, Ordering::Relaxed);
+        ctl.word(C_MAGIC).store(CTL_MAGIC, Ordering::Release);
+        Ok(Arc::new(ctl))
+    }
+
+    /// Attach to an existing control file (worker side); refuses loudly
+    /// on identity or shape mismatch.
+    pub fn attach(dir: &Path, workers: usize) -> Result<Arc<Self>> {
+        let f = shm::open_backing_file(&ctl_path(dir), (CTL_WORDS * 8) as u64)?;
+        let map = SharedMap::map_file(&f, CTL_WORDS * 8)?;
+        let ctl = Self {
+            map,
+            workers: workers as u64,
+        };
+        ensure!(
+            ctl.word(C_MAGIC).load(Ordering::Acquire) == CTL_MAGIC,
+            "control region attach refused: bad magic (stale run directory?)"
+        );
+        ensure!(
+            ctl.word(C_VERSION).load(Ordering::Acquire) == WIRE_VERSION,
+            "control region attach refused: wire version mismatch (expected {WIRE_VERSION})"
+        );
+        let found = ctl.word(C_WORKERS).load(Ordering::Acquire);
+        ensure!(
+            found == workers as u64,
+            "control region attach refused: sized for {found} workers, expected {workers}"
+        );
+        Ok(Arc::new(ctl))
+    }
+
+    #[inline]
+    fn word(&self, i: usize) -> &AtomicU64 {
+        debug_assert!(i < CTL_WORDS);
+        unsafe { &*(self.map.ptr() as *const AtomicU64).add(i) }
+    }
+
+    /// One-shot start barrier: returns once all `workers` processes have
+    /// arrived.  Spin-waits (start-up only, never on the training path).
+    pub fn barrier_wait(&self) {
+        self.word(C_BARRIER).fetch_add(1, Ordering::AcqRel);
+        while self.word(C_BARRIER).load(Ordering::Acquire) < self.workers {
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+    }
+
+    /// Add to the shared global-sample counter; returns the new total.
+    pub fn add_samples(&self, n: u64) -> u64 {
+        self.word(C_SAMPLES).fetch_add(n, Ordering::Relaxed) + n
+    }
+
+    /// Current global sample total.
+    pub fn samples(&self) -> u64 {
+        self.word(C_SAMPLES).load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use crate::gaspi::segment::ReadOutcome;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("asgd-shmem-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Creator and attacher (what two processes would hold) observe one
+    /// another's puts and metadata through the file mappings.
+    #[test]
+    fn create_and_attach_share_puts_and_metadata() {
+        let dir = tmpdir("roundtrip");
+        let (ranks, n_slots, state_len, chunks) = (2usize, 2usize, 8usize, 2usize);
+        let creator = Shmem::create(
+            &dir,
+            ranks,
+            n_slots,
+            state_len,
+            chunks,
+            Arc::new(WorldStats::new(ranks)),
+        )
+        .unwrap();
+        let attached = Shmem::attach(
+            &dir,
+            ranks,
+            n_slots,
+            state_len,
+            chunks,
+            Arc::new(WorldStats::new(ranks)),
+        )
+        .unwrap();
+        // a put through one mapping reads Fresh through the other
+        let payload: Vec<f32> = (0..state_len).map(|i| i as f32).collect();
+        creator.put_state(0, 1, 5, &payload, 0);
+        let l = attached.segment(1).layout();
+        for c in 0..chunks {
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            let (out, sender, iter, _) = attached.segment(1).read_block_into(0, c, 0, &mut buf);
+            assert_eq!(out, ReadOutcome::Fresh);
+            assert_eq!((sender, iter), (0, 5));
+            assert_eq!(buf, payload[l.bounds(c)]);
+        }
+        // metadata plane crosses too
+        creator.publish_heartbeat(0);
+        creator.publish_suspicion(0, 0b10);
+        assert_eq!(attached.segment(0).heartbeat(), 1);
+        assert_eq!(attached.segment(0).suspicion(), 0b10);
+        // attach with the wrong shape refuses loudly
+        let err = Shmem::attach(
+            &dir,
+            ranks,
+            n_slots,
+            state_len + 1,
+            chunks,
+            Arc::new(WorldStats::new(ranks)),
+        );
+        assert!(err.is_err());
+        drop(attached);
+        drop(creator); // owner: unlinks the files
+        assert!(!seg_path(&dir, 0).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ctl_region_barrier_and_samples_cross_mappings() {
+        let dir = tmpdir("ctl");
+        let a = CtlRegion::create(&dir, 2).unwrap();
+        let b = CtlRegion::attach(&dir, 2).unwrap();
+        let t = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                b.barrier_wait();
+                b.add_samples(40)
+            })
+        };
+        a.barrier_wait(); // returns only once both mappings arrived
+        a.add_samples(2);
+        t.join().unwrap();
+        assert_eq!(a.samples(), 42);
+        assert_eq!(b.samples(), 42);
+        assert!(CtlRegion::attach(&dir, 3).is_err(), "worker-count mismatch refuses");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,632 @@
+//! The socket transport: one-sided puts serialized as length-prefixed
+//! TCP frames and applied into local *mirror* segments by per-connection
+//! receive threads — the repro analogue of Ethernet GASPI (the paper's
+//! fallback interconnect), where "one-sided" means the application never
+//! handshakes even though a progress engine moves the bytes.
+//!
+//! # Frame encoding (versioned with [`WIRE_VERSION`], see `docs/WIRE.md`)
+//!
+//! Every frame is `u32 LE body length` + body; the first body byte is
+//! the kind:
+//!
+//! ```text
+//! HELLO (1): magic u64 | wire version u64 | state_len u64
+//!            | n_slots u64 | chunks u64 | from u32
+//! FULL  (2): from u32 | slot u32 | iter u64 | state_len x u32 (f32 bits)
+//! GROUP (3): from u32 | slot u32 | block_start u32 | block_count u32
+//!            | iter u64 | covered words x u32 (f32 bits)
+//! META  (4): from u32 | layout word u64 | heartbeat word u64
+//!            | suspicion word u64
+//! ```
+//!
+//! A connection opens with exactly one `HELLO`; the acceptor validates
+//! magic, wire version and world shape and answers one byte — `0xA5`
+//! (accepted) or `0x5A` followed by a length-prefixed reason string,
+//! after which the client refuses loudly.  This is the negotiation the
+//! issue requires: two builds with different wire versions fail at
+//! connect time with a message, never by silently misreading frames.
+//!
+//! Data frames carry their sender in-band; the connection itself pins
+//! the *receiver* (each applier thread serves one sender->receiver
+//! link).  Frames from one sender arrive in order over its single
+//! connection, so mirror metadata can be plain-stored without fencing
+//! against reordering.  Puts are asynchronous: the sender returns once
+//! the frame is queued (like an RDMA doorbell), and [`Socket::quiesce`]
+//! drains the in-flight window before stats are asserted.
+
+use super::{apply_block, apply_group, apply_state, Transport};
+use crate::gaspi::segment::{Segment, WIRE_MAGIC, WIRE_VERSION};
+use crate::gaspi::stats::WorldStats;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+const FRAME_HELLO: u8 = 1;
+const FRAME_FULL: u8 = 2;
+const FRAME_GROUP: u8 = 3;
+const FRAME_META: u8 = 4;
+const HELLO_ACCEPT: u8 = 0xA5;
+const HELLO_REJECT: u8 = 0x5A;
+
+/// TCP-framed transport hosting all ranks of a loopback world in one
+/// process: every put really crosses the kernel's TCP stack, every
+/// metadata publish really broadcasts `META` frames.  Segments are the
+/// authentic regions for locally-hosted ranks (all of them in loopback
+/// mode), so incoming `META` frames for local ranks are validated and
+/// dropped — the local word is already authoritative.
+pub struct Socket {
+    segments: Vec<Arc<Segment>>,
+    stats: Arc<WorldStats>,
+    /// Outgoing links `[from][to]`; `None` on the diagonal.
+    links: Vec<Vec<Option<Mutex<TcpStream>>>>,
+    frames_sent: AtomicU64,
+    frames_applied: Arc<AtomicU64>,
+    appliers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Socket {
+    /// Build a full-mesh loopback world: one listener per rank on
+    /// `127.0.0.1`, one connection per ordered rank pair, one applier
+    /// thread per connection.  Fails loudly if any HELLO is refused.
+    pub fn loopback(
+        ranks: usize,
+        n_slots: usize,
+        state_len: usize,
+        chunks: usize,
+        stats: Arc<WorldStats>,
+    ) -> Result<Arc<Self>> {
+        let segments: Vec<Arc<Segment>> = (0..ranks)
+            .map(|r| Arc::new(Segment::new_chunked(r, n_slots, state_len, chunks)))
+            .collect();
+        let frames_applied = Arc::new(AtomicU64::new(0));
+        // every rank is hosted here, so appliers drop META for all ranks
+        let local = Arc::new(vec![true; ranks]);
+
+        let mut addrs = Vec::with_capacity(ranks);
+        let mut acceptors = Vec::with_capacity(ranks);
+        for to in 0..ranks {
+            let listener =
+                TcpListener::bind("127.0.0.1:0").context("binding loopback listener")?;
+            addrs.push(listener.local_addr()?);
+            let segments = segments.clone();
+            let stats = stats.clone();
+            let applied = frames_applied.clone();
+            let local = local.clone();
+            acceptors.push(std::thread::spawn(move || -> Vec<JoinHandle<()>> {
+                let mut handles = Vec::new();
+                for _ in 0..ranks.saturating_sub(1) {
+                    let Ok((mut conn, _)) = listener.accept() else {
+                        log::error!("socket transport: accept failed on rank {to}");
+                        break;
+                    };
+                    let _ = conn.set_nodelay(true);
+                    match answer_hello(&mut conn, n_slots, state_len, chunks, ranks) {
+                        Ok(_from) => {
+                            let segments = segments.clone();
+                            let stats = stats.clone();
+                            let applied = applied.clone();
+                            let local = local.clone();
+                            handles.push(std::thread::spawn(move || {
+                                applier_loop(conn, to, segments, stats, applied, local)
+                            }));
+                        }
+                        Err(e) => log::error!("socket transport: HELLO refused on rank {to}: {e}"),
+                    }
+                }
+                handles
+            }));
+        }
+
+        let mut links: Vec<Vec<Option<Mutex<TcpStream>>>> = Vec::with_capacity(ranks);
+        for from in 0..ranks {
+            let mut row = Vec::with_capacity(ranks);
+            for (to, addr) in addrs.iter().enumerate() {
+                if to == from {
+                    row.push(None);
+                    continue;
+                }
+                let mut s = TcpStream::connect(addr)
+                    .with_context(|| format!("connecting rank {from} -> {to}"))?;
+                s.set_nodelay(true)?;
+                offer_hello(&mut s, from, WIRE_VERSION, n_slots, state_len, chunks)
+                    .with_context(|| format!("HELLO rank {from} -> {to}"))?;
+                row.push(Some(Mutex::new(s)));
+            }
+            links.push(row);
+        }
+
+        let mut appliers = Vec::new();
+        for a in acceptors {
+            appliers.extend(a.join().expect("acceptor thread panicked"));
+        }
+
+        Ok(Arc::new(Self {
+            segments,
+            stats,
+            links,
+            frames_sent: AtomicU64::new(0),
+            frames_applied,
+            appliers: Mutex::new(appliers),
+        }))
+    }
+
+    /// Queue one data/meta frame on the `from -> to` link.  A send
+    /// failure is logged, not fatal: communication is de-facto optional,
+    /// and a dead link's frames are exactly "lost messages" (§4.4).
+    fn send(&self, from: usize, to: usize, body: &[u8]) {
+        let Some(link) = &self.links[from][to] else {
+            return;
+        };
+        let mut s = link.lock().unwrap();
+        let ok = s
+            .write_all(&(body.len() as u32).to_le_bytes())
+            .and_then(|_| s.write_all(body));
+        match ok {
+            Ok(()) => {
+                self.frames_sent.fetch_add(1, Ordering::Release);
+            }
+            Err(e) => log::warn!("socket transport: send {from} -> {to} failed: {e}"),
+        }
+    }
+
+    /// Broadcast rank `rank`'s current metadata words to every peer.
+    fn broadcast_meta(&self, rank: usize) {
+        let seg = &self.segments[rank];
+        let mut body = Vec::with_capacity(1 + 4 + 24);
+        body.push(FRAME_META);
+        push_u32(&mut body, rank as u32);
+        push_u64(&mut body, seg.layout_word_raw());
+        push_u64(&mut body, seg.heartbeat());
+        push_u64(&mut body, seg.suspicion());
+        for to in 0..self.segments.len() {
+            if to != rank {
+                self.send(rank, to, &body);
+            }
+        }
+    }
+}
+
+impl Drop for Socket {
+    fn drop(&mut self) {
+        // closing the outgoing streams EOFs every applier...
+        self.links.clear();
+        // ...which then exit and can be joined
+        for h in self.appliers.get_mut().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Transport for Socket {
+    fn kind(&self) -> &'static str {
+        "socket"
+    }
+
+    fn ranks(&self) -> usize {
+        self.segments.len()
+    }
+
+    fn segment(&self, rank: usize) -> &Arc<Segment> {
+        &self.segments[rank]
+    }
+
+    fn stats(&self) -> &Arc<WorldStats> {
+        &self.stats
+    }
+
+    fn put_state(&self, from: usize, to: usize, iter: u64, payload: &[f32], slot: usize) {
+        let mut body = Vec::with_capacity(17 + payload.len() * 4);
+        body.push(FRAME_FULL);
+        push_u32(&mut body, from as u32);
+        push_u32(&mut body, slot as u32);
+        push_u64(&mut body, iter);
+        for &x in payload {
+            body.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        self.send(from, to, &body);
+    }
+
+    fn put_block(
+        &self,
+        from: usize,
+        to: usize,
+        iter: u64,
+        block: usize,
+        payload: &[f32],
+        slot: usize,
+    ) {
+        self.put_group(from, to, iter, block..block + 1, payload, slot);
+    }
+
+    fn put_group(
+        &self,
+        from: usize,
+        to: usize,
+        iter: u64,
+        blocks: Range<usize>,
+        payload: &[f32],
+        slot: usize,
+    ) {
+        let mut body = Vec::with_capacity(25 + payload.len() * 4);
+        body.push(FRAME_GROUP);
+        push_u32(&mut body, from as u32);
+        push_u32(&mut body, slot as u32);
+        push_u32(&mut body, blocks.start as u32);
+        push_u32(&mut body, blocks.len() as u32);
+        push_u64(&mut body, iter);
+        for &x in payload {
+            body.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        self.send(from, to, &body);
+    }
+
+    fn publish_heartbeat(&self, rank: usize) -> u64 {
+        let w = self.segments[rank].publish_heartbeat();
+        self.broadcast_meta(rank);
+        w
+    }
+
+    fn publish_retirement(&self, rank: usize) -> u64 {
+        let w = self.segments[rank].publish_retirement();
+        self.broadcast_meta(rank);
+        w
+    }
+
+    fn begin_incarnation(&self, rank: usize) -> u64 {
+        let w = self.segments[rank].begin_incarnation();
+        self.broadcast_meta(rank);
+        w
+    }
+
+    fn advertise_layout(&self, rank: usize, chunks: usize) -> u64 {
+        let epoch = self.segments[rank].advertise_layout(chunks);
+        self.broadcast_meta(rank);
+        epoch
+    }
+
+    fn publish_suspicion(&self, rank: usize, mask: u64) {
+        self.segments[rank].publish_suspicion(mask);
+        self.broadcast_meta(rank);
+    }
+
+    /// Drain the in-flight frame window: wait until every frame queued
+    /// so far has been applied receiver-side.  Bounded (~30 s) so a
+    /// wedged link degrades to a loud log line, never a hang.
+    fn quiesce(&self) {
+        let target = self.frames_sent.load(Ordering::Acquire);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while self.frames_applied.load(Ordering::Acquire) < target {
+            if std::time::Instant::now() > deadline {
+                log::error!(
+                    "socket transport: quiesce timed out ({} of {target} frames applied)",
+                    self.frames_applied.load(Ordering::Acquire)
+                );
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+}
+
+// ---- connection handshake ----------------------------------------------
+
+/// Client side of the HELLO exchange; bails with the server's reason on
+/// rejection.  `wire_version` is a parameter (not the constant) so the
+/// mismatch path is testable.
+fn offer_hello(
+    s: &mut TcpStream,
+    from: usize,
+    wire_version: u64,
+    n_slots: usize,
+    state_len: usize,
+    chunks: usize,
+) -> Result<()> {
+    let mut body = Vec::with_capacity(1 + 5 * 8 + 4);
+    body.push(FRAME_HELLO);
+    push_u64(&mut body, WIRE_MAGIC);
+    push_u64(&mut body, wire_version);
+    push_u64(&mut body, state_len as u64);
+    push_u64(&mut body, n_slots as u64);
+    push_u64(&mut body, chunks as u64);
+    push_u32(&mut body, from as u32);
+    s.write_all(&(body.len() as u32).to_le_bytes())?;
+    s.write_all(&body)?;
+    let mut verdict = [0u8; 1];
+    s.read_exact(&mut verdict).context("reading HELLO verdict")?;
+    match verdict[0] {
+        HELLO_ACCEPT => Ok(()),
+        HELLO_REJECT => {
+            let reason = read_frame(s, 4096).context("reading HELLO rejection reason")?;
+            bail!("peer refused connection: {}", String::from_utf8_lossy(&reason));
+        }
+        other => bail!("garbled HELLO verdict byte {other:#x}"),
+    }
+}
+
+/// Server side of the HELLO exchange: validate, answer the verdict byte
+/// (+ reason frame on rejection), return the declared sender rank.
+fn answer_hello(
+    conn: &mut TcpStream,
+    n_slots: usize,
+    state_len: usize,
+    chunks: usize,
+    ranks: usize,
+) -> Result<u32> {
+    let verdict = validate_hello(conn, n_slots, state_len, chunks, ranks);
+    match verdict {
+        Ok(from) => {
+            conn.write_all(&[HELLO_ACCEPT])?;
+            Ok(from)
+        }
+        Err(e) => {
+            let reason = format!("{e:#}");
+            let _ = conn.write_all(&[HELLO_REJECT]);
+            let _ = conn.write_all(&(reason.len() as u32).to_le_bytes());
+            let _ = conn.write_all(reason.as_bytes());
+            Err(e)
+        }
+    }
+}
+
+fn validate_hello(
+    conn: &mut TcpStream,
+    n_slots: usize,
+    state_len: usize,
+    chunks: usize,
+    ranks: usize,
+) -> Result<u32> {
+    let body = read_frame(conn, 128).context("reading HELLO")?;
+    let mut off = 0usize;
+    ensure!(take_u8(&body, &mut off)? == FRAME_HELLO, "first frame must be HELLO");
+    let magic = take_u64(&body, &mut off)?;
+    ensure!(magic == WIRE_MAGIC, "bad magic {magic:#x} (not an asgd peer)");
+    let version = take_u64(&body, &mut off)?;
+    ensure!(
+        version == WIRE_VERSION,
+        "wire version mismatch: peer speaks {version}, this build speaks {WIRE_VERSION}"
+    );
+    let shape = [
+        (take_u64(&body, &mut off)?, state_len as u64, "state_len"),
+        (take_u64(&body, &mut off)?, n_slots as u64, "n_slots"),
+        (take_u64(&body, &mut off)?, chunks as u64, "chunks"),
+    ];
+    for (got, expect, what) in shape {
+        ensure!(got == expect, "world shape mismatch: peer {what} = {got}, ours = {expect}");
+    }
+    let from = take_u32(&body, &mut off)?;
+    ensure!((from as usize) < ranks, "peer rank {from} outside world of {ranks}");
+    Ok(from)
+}
+
+// ---- receive path -------------------------------------------------------
+
+/// Apply frames from one sender->`to` connection until EOF (the sender
+/// dropped its link) or a malformed frame (logged, connection dropped —
+/// refuse loudly rather than misapply).
+fn applier_loop(
+    mut conn: TcpStream,
+    to: usize,
+    segments: Vec<Arc<Segment>>,
+    stats: Arc<WorldStats>,
+    applied: Arc<AtomicU64>,
+    local: Arc<Vec<bool>>,
+) {
+    // generous sanity cap: the largest legal frame is a FULL put
+    let max_frame = 64 + segments[to].state_len * 4;
+    loop {
+        let body = match read_frame(&mut conn, max_frame) {
+            Ok(b) => b,
+            Err(_) => return, // EOF on link close is the normal shutdown
+        };
+        if let Err(e) = apply_frame(&body, to, &segments, &stats, &local) {
+            log::error!("socket transport: dropping link into rank {to}: {e}");
+            return;
+        }
+        applied.fetch_add(1, Ordering::Release);
+    }
+}
+
+fn apply_frame(
+    body: &[u8],
+    to: usize,
+    segments: &[Arc<Segment>],
+    stats: &WorldStats,
+    local: &[bool],
+) -> Result<()> {
+    let seg = &segments[to];
+    let layout = seg.layout();
+    let mut off = 0usize;
+    match take_u8(body, &mut off)? {
+        FRAME_FULL => {
+            let from = take_u32(body, &mut off)?;
+            let slot = take_u32(body, &mut off)? as usize;
+            let iter = take_u64(body, &mut off)?;
+            let payload = take_f32s(body, &mut off, layout.state_len)?;
+            ensure!(slot < seg.n_slots(), "FULL frame slot {slot} out of range");
+            apply_state(seg, stats, to, from, iter, &payload, slot);
+        }
+        FRAME_GROUP => {
+            let from = take_u32(body, &mut off)?;
+            let slot = take_u32(body, &mut off)? as usize;
+            let start = take_u32(body, &mut off)? as usize;
+            let count = take_u32(body, &mut off)? as usize;
+            let iter = take_u64(body, &mut off)?;
+            ensure!(
+                slot < seg.n_slots() && count >= 1 && start + count <= layout.n_chunks(),
+                "GROUP frame {start}+{count} outside layout of {} blocks",
+                layout.n_chunks()
+            );
+            let blocks = start..start + count;
+            let words = layout.blocks_bounds(blocks.clone()).len();
+            let payload = take_f32s(body, &mut off, words)?;
+            if count == 1 {
+                apply_block(seg, stats, to, from, iter, start, &payload, slot);
+            } else {
+                apply_group(seg, stats, to, from, iter, blocks, &payload, slot);
+            }
+        }
+        FRAME_META => {
+            let from = take_u32(body, &mut off)? as usize;
+            let layout_w = take_u64(body, &mut off)?;
+            let heartbeat_w = take_u64(body, &mut off)?;
+            let suspicion_w = take_u64(body, &mut off)?;
+            ensure!(from < segments.len(), "META frame rank {from} out of range");
+            // apply only into *mirrors*: for a locally-hosted rank the
+            // local word is authoritative (in loopback mode that is every
+            // rank, so META traffic is validated and dropped here)
+            if !local[from] {
+                segments[from].set_layout_word(layout_w);
+                segments[from].set_heartbeat_word(heartbeat_w);
+                segments[from].publish_suspicion(suspicion_w);
+            }
+        }
+        other => bail!("unknown frame kind {other}"),
+    }
+    ensure!(off == body.len(), "frame has {} trailing bytes", body.len() - off);
+    Ok(())
+}
+
+// ---- byte helpers -------------------------------------------------------
+
+fn push_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn take_u8(b: &[u8], off: &mut usize) -> Result<u8> {
+    ensure!(*off < b.len(), "truncated frame");
+    *off += 1;
+    Ok(b[*off - 1])
+}
+
+fn take_u32(b: &[u8], off: &mut usize) -> Result<u32> {
+    ensure!(*off + 4 <= b.len(), "truncated frame");
+    let v = u32::from_le_bytes(b[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    Ok(v)
+}
+
+fn take_u64(b: &[u8], off: &mut usize) -> Result<u64> {
+    ensure!(*off + 8 <= b.len(), "truncated frame");
+    let v = u64::from_le_bytes(b[*off..*off + 8].try_into().unwrap());
+    *off += 8;
+    Ok(v)
+}
+
+fn take_f32s(b: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>> {
+    ensure!(*off + 4 * n <= b.len(), "frame payload truncated (want {n} words)");
+    let out = b[*off..*off + 4 * n]
+        .chunks_exact(4)
+        .map(|w| f32::from_bits(u32::from_le_bytes(w.try_into().unwrap())))
+        .collect();
+    *off += 4 * n;
+    Ok(out)
+}
+
+fn read_frame(s: &mut TcpStream, max: usize) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    s.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    ensure!(len <= max, "frame of {len} bytes exceeds cap {max}");
+    let mut body = vec![0u8; len];
+    s.read_exact(&mut body)?;
+    Ok(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gaspi::segment::ReadOutcome;
+
+    #[test]
+    fn loopback_puts_cross_tcp() {
+        let stats = Arc::new(WorldStats::new(3));
+        let t = Socket::loopback(3, 2, 10, 2, stats.clone()).unwrap();
+        let payload: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        t.put_state(0, 1, 7, &payload, 0);
+        let l = t.segment(1).layout();
+        let b1: Vec<f32> = payload[l.bounds(1)].to_vec();
+        t.put_block(2, 1, 9, 1, &b1, 1);
+        t.quiesce();
+        for c in 0..2 {
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            let (out, sender, iter, _) = t.segment(1).read_block_into(0, c, 0, &mut buf);
+            assert_eq!(out, ReadOutcome::Fresh, "block {c}");
+            assert_eq!((sender, iter), (0, 7));
+            assert_eq!(buf, payload[l.bounds(c)]);
+        }
+        let mut buf = vec![0.0f32; l.chunk_len(1)];
+        let (out, sender, iter, _) = t.segment(1).read_block_into(1, 1, 0, &mut buf);
+        assert_eq!(out, ReadOutcome::Fresh);
+        assert_eq!((sender, iter), (2, 9));
+        assert_eq!(buf, b1);
+    }
+
+    #[test]
+    fn loopback_group_put_and_lost_accounting() {
+        let stats = Arc::new(WorldStats::new(2));
+        let t = Socket::loopback(2, 1, 12, 4, stats.clone()).unwrap();
+        let l = t.segment(1).layout();
+        let words = l.blocks_bounds(1..3);
+        let payload = vec![2.5f32; words.len()];
+        t.put_group(0, 1, 3, 1..3, &payload, 0);
+        t.quiesce();
+        for c in 1..3 {
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            assert_eq!(t.segment(1).read_block_into(0, c, 0, &mut buf).0, ReadOutcome::Fresh);
+        }
+        // unread blocks clobbered by a second group put count as lost,
+        // ticked by the applier thread on the receiver's counters
+        t.put_group(0, 1, 4, 1..3, &payload, 0);
+        t.quiesce();
+        assert_eq!(stats.rank(1).chunk_lost.get(), 2);
+    }
+
+    #[test]
+    fn meta_frames_broadcast_on_publish() {
+        let stats = Arc::new(WorldStats::new(2));
+        let t = Socket::loopback(2, 1, 4, 1, stats).unwrap();
+        // heartbeat advances locally; the broadcast META is validated and
+        // dropped by the peer's applier (rank 0 is locally hosted there)
+        assert_eq!(t.publish_heartbeat(0), 1);
+        t.publish_suspicion(0, 0b10);
+        t.quiesce();
+        assert_eq!(t.segment(0).heartbeat(), 1);
+        assert_eq!(t.segment(0).suspicion(), 0b10);
+    }
+
+    #[test]
+    fn hello_refuses_wire_version_mismatch() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            answer_hello(&mut conn, 1, 8, 1, 2)
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        let err = offer_hello(&mut client, 0, WIRE_VERSION + 1, 1, 8, 1).unwrap_err();
+        assert!(err.to_string().contains("wire version"), "{err:#}");
+        assert!(server.join().unwrap().is_err(), "server must refuse too");
+    }
+
+    #[test]
+    fn hello_refuses_shape_mismatch() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut conn, _) = listener.accept().unwrap();
+            answer_hello(&mut conn, 1, 8, 1, 2)
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        let err = offer_hello(&mut client, 0, WIRE_VERSION, 1, 9, 1).unwrap_err();
+        assert!(err.to_string().contains("state_len"), "{err:#}");
+        assert!(server.join().unwrap().is_err());
+    }
+}

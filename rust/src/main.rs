@@ -24,6 +24,8 @@ fn main() {
 fn run(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "train" => cmd_train(args),
+        "restore" => cmd_restore(args),
+        "worker" => asgd::coordinator::procs::run_child(args),
         "fig" => cmd_fig(args),
         "datagen" => cmd_datagen(args),
         "calibrate" => cmd_calibrate(),
@@ -39,6 +41,17 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = train_config(args)?;
     println!("config: {}", cfg.describe());
     let report = asgd::coordinator::run_training(&cfg)?;
+    print_report(args, &report)
+}
+
+fn cmd_restore(args: &Args) -> Result<()> {
+    let cfg = train_config(args)?;
+    println!("restore: {}", cfg.describe());
+    let report = asgd::coordinator::resume_training(&cfg)?;
+    print_report(args, &report)
+}
+
+fn print_report(args: &Args, report: &asgd::metrics::RunReport) -> Result<()> {
     println!();
     println!("method            {}", report.method);
     println!("workers           {}", report.workers);
@@ -74,8 +87,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(dir) = args.get("out") {
         let dir = PathBuf::from(dir);
-        asgd::metrics::export::write_trace(&report, dir.join("trace.csv"))?;
-        asgd::metrics::export::write_report(&report, dir.join("report.json"))?;
+        asgd::metrics::export::write_trace(report, dir.join("trace.csv"))?;
+        asgd::metrics::export::write_report(report, dir.join("report.json"))?;
         println!("wrote {}/trace.csv and report.json", dir.display());
     }
     Ok(())

@@ -8,6 +8,7 @@ pub mod csv;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod shm;
 pub mod timer;
 
 /// Mean of a slice (0.0 for empty input).

@@ -1,0 +1,159 @@
+//! Shared-memory file mapping for the `shmem` transport — std plus a
+//! two-symbol `mmap`/`munmap` FFI shim (no external crates; the symbols
+//! live in the libc every Rust binary already links on unix).
+//!
+//! A [`SharedMap`] is a `MAP_SHARED` read-write mapping of a regular
+//! file (conventionally under `/dev/shm`, so the "file" is RAM).  Two
+//! processes mapping the same file see each other's atomic stores with
+//! ordinary `Ordering` semantics — which is exactly what lets the
+//! seqlock segment protocol ([`crate::gaspi::segment`]) run unchanged
+//! across process boundaries.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::path::Path;
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const PROT_WRITE: c_int = 2;
+    pub const MAP_SHARED: c_int = 1;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// An owned `MAP_SHARED` mapping.  The underlying file can be closed
+/// after mapping; the mapping (and the shared physical pages) stay
+/// alive until drop.
+pub struct SharedMap {
+    ptr: *mut u8,
+    len: usize,
+}
+
+// The region is only ever accessed through atomic types; the raw
+// pointer itself is freely sendable.
+unsafe impl Send for SharedMap {}
+unsafe impl Sync for SharedMap {}
+
+impl SharedMap {
+    /// Map `len` bytes of `file` shared read-write.
+    #[cfg(unix)]
+    pub fn map_file(file: &File, len: usize) -> Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        ensure!(len > 0, "cannot map an empty region");
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            bail!("mmap({len} bytes) failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Self {
+            ptr: ptr as *mut u8,
+            len,
+        })
+    }
+
+    #[cfg(not(unix))]
+    pub fn map_file(_file: &File, _len: usize) -> Result<Self> {
+        bail!("the shmem transport needs a unix mmap; this platform has none")
+    }
+
+    /// Base address (page-aligned, so safely aligned for any atomic).
+    pub fn ptr(&self) -> *mut u8 {
+        self.ptr
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for SharedMap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        unsafe {
+            let _ = sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+        }
+    }
+}
+
+/// Create (truncate) a backing file of exactly `len` bytes.  The kernel
+/// zero-fills it, which is the segment protocol's initial state.
+pub fn create_backing_file(path: &Path, len: u64) -> Result<File> {
+    let f = OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(path)
+        .with_context(|| format!("creating shared segment file {}", path.display()))?;
+    f.set_len(len)
+        .with_context(|| format!("sizing {} to {len} bytes", path.display()))?;
+    Ok(f)
+}
+
+/// Open an existing backing file, refusing loudly on a size mismatch
+/// (a mismatched mapping would alias garbage, not fail).
+pub fn open_backing_file(path: &Path, expect_len: u64) -> Result<File> {
+    let f = OpenOptions::new()
+        .read(true)
+        .write(true)
+        .open(path)
+        .with_context(|| format!("opening shared segment file {}", path.display()))?;
+    let actual = f.metadata()?.len();
+    ensure!(
+        actual == expect_len,
+        "shared segment file {} is {actual} bytes, expected {expect_len} \
+         (stale run directory or mismatched world shape?)",
+        path.display()
+    );
+    Ok(f)
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn two_mappings_of_one_file_share_stores() {
+        let dir = std::env::temp_dir().join(format!("asgd-shm-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("words.bin");
+        let f = create_backing_file(&path, 64).unwrap();
+        let a = SharedMap::map_file(&f, 64).unwrap();
+        let g = open_backing_file(&path, 64).unwrap();
+        let b = SharedMap::map_file(&g, 64).unwrap();
+        let wa = unsafe { &*(a.ptr() as *const AtomicU64) };
+        let wb = unsafe { &*(b.ptr() as *const AtomicU64) };
+        assert_eq!(wb.load(Ordering::Acquire), 0, "fresh file reads zero");
+        wa.store(0xDEAD_BEEF, Ordering::Release);
+        assert_eq!(wb.load(Ordering::Acquire), 0xDEAD_BEEF);
+        assert!(open_backing_file(&path, 128).is_err(), "size mismatch must refuse");
+        drop((a, b));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

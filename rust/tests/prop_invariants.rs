@@ -621,7 +621,7 @@ fn prop_message_accounting_balances() {
     let mut received = 0;
     for r in 0..4 {
         for slot in 0..2 {
-            if world.segments[r].read_slot(slot, 0).outcome == ReadOutcome::Fresh {
+            if world.segment(r).read_slot(slot, 0).outcome == ReadOutcome::Fresh {
                 received += 1;
             }
         }

@@ -349,7 +349,7 @@ fn stress_heartbeat_leases_suspect_resume_and_rebirth() {
             let stop = stop.clone();
             std::thread::spawn(move || {
                 while !stop.load(Ordering::Relaxed) {
-                    world.segments[1].publish_heartbeat();
+                    world.publish_heartbeat(1);
                     std::thread::yield_now();
                 }
             })
@@ -362,12 +362,12 @@ fn stress_heartbeat_leases_suspect_resume_and_rebirth() {
                 // beat, go silent for a long stretch, then resume under
                 // the same incarnation until told to stop
                 for _ in 0..50 {
-                    world.segments[2].publish_heartbeat();
+                    world.publish_heartbeat(2);
                     std::thread::yield_now();
                 }
                 std::thread::sleep(std::time::Duration::from_millis(30));
                 while !stop.load(Ordering::Relaxed) {
-                    world.segments[2].publish_heartbeat();
+                    world.publish_heartbeat(2);
                     std::thread::yield_now();
                 }
             })
@@ -377,7 +377,7 @@ fn stress_heartbeat_leases_suspect_resume_and_rebirth() {
             let world = world.clone();
             std::thread::spawn(move || {
                 for _ in 0..20 {
-                    world.segments[3].publish_heartbeat();
+                    world.publish_heartbeat(3);
                     std::thread::yield_now();
                 }
                 // ...and never again
@@ -389,15 +389,15 @@ fn stress_heartbeat_leases_suspect_resume_and_rebirth() {
             let stop = stop.clone();
             std::thread::spawn(move || {
                 for _ in 0..20 {
-                    world.segments[4].publish_heartbeat();
+                    world.publish_heartbeat(4);
                     std::thread::yield_now();
                 }
                 std::thread::sleep(std::time::Duration::from_millis(30));
                 // the supervisor's restore path: new incarnation, then
                 // the replacement keeps beating
-                world.segments[4].begin_incarnation();
+                world.begin_incarnation(4);
                 while !stop.load(Ordering::Relaxed) {
-                    world.segments[4].publish_heartbeat();
+                    world.publish_heartbeat(4);
                     std::thread::yield_now();
                 }
             })
@@ -415,7 +415,7 @@ fn stress_heartbeat_leases_suspect_resume_and_rebirth() {
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
         loop {
             for r in 1..5usize {
-                if let Some(t) = view.observe(r, world.segments[r].heartbeat()) {
+                if let Some(t) = view.observe(r, world.segment(r).heartbeat()) {
                     events.push((r, t));
                 }
                 // the worker's presence decision, on the shared path:
@@ -465,7 +465,7 @@ fn stress_heartbeat_leases_suspect_resume_and_rebirth() {
         // forever, so no amount of further polling resolves it
         for _ in 0..200 {
             assert_eq!(
-                view.observe(3, world.segments[3].heartbeat()),
+                view.observe(3, world.segment(3).heartbeat()),
                 None,
                 "seed {seed}: a corpse must never resolve"
             );
@@ -482,8 +482,8 @@ fn stress_heartbeat_leases_suspect_resume_and_rebirth() {
         // the instant the loop broke, one more beat resolves them
         for r in [2usize, 4] {
             if view.is_suspected(r) {
-                world.segments[r].publish_heartbeat();
-                let t = view.observe(r, world.segments[r].heartbeat());
+                world.publish_heartbeat(r);
+                let t = view.observe(r, world.segment(r).heartbeat());
                 assert!(
                     matches!(t, Some(Transition::FalseSuspicion | Transition::Recovered)),
                     "seed {seed}: resumed rank {r} did not resolve"

@@ -1,0 +1,580 @@
+//! Transport conformance suite: every backend (`inproc`, `shmem`,
+//! `socket`) must present the *same* seqlock protocol, accounting
+//! identities, and metadata plane through [`World`] — the contract
+//! `docs/WIRE.md` pins.  The existing in-process suites are the oracle
+//! for `inproc`; this file re-runs the load-bearing invariants against
+//! all three substrates:
+//!
+//! * Fresh reads are sender-pure, reported versions are monotone, and a
+//!   sole writer always recovers Fresh delivery after a storm;
+//! * sender-side counters are exact and receiver-side loss is bounded
+//!   once [`World::quiesce`] has drained in-flight frames;
+//! * the metadata plane (heartbeat, retirement, incarnation, layout
+//!   epoch, gossip mask) round-trips owner -> observer;
+//! * lease resolution obeys `false_suspicion + recovered <= suspected`,
+//!   a pauser resolves as a false suspicion, a reborn rank as recovered,
+//!   and a corpse never resolves;
+//! * gossip seeding pre-suspects a quorum-condemned corpse without the
+//!   `lease_polls` warm-up, on every backend;
+//! * (`shmem` only) two mappings of the same segment files are coherent;
+//! * (end-to-end) a multi-process `shmem` run survives a kill+restore
+//!   fault, and `asgd restore` resumes a durable-checkpoint run.
+//!
+//! `ASGD_CONF_QUICK=1` shrinks iteration counts for CI smoke lanes.
+//! The e2e tests need the built binary (`ASGD_BIN` or `target/...`) and
+//! skip with a loud eprintln when it is missing.
+
+use asgd::gaspi::stats::WorldStats;
+use asgd::gaspi::{
+    LivenessView, ReadOutcome, Shmem, Socket, Topology, Transition, World,
+};
+use asgd::util::rng::Xoshiro256pp;
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Payload word encoding shared with the seqlock stress suite: a
+/// sender-pure block is constant and decodes back to its metadata.
+const STRIDE: u64 = 100_000;
+
+fn encode(sender: u32, iter: u64) -> f32 {
+    (u64::from(sender) * STRIDE + iter) as f32
+}
+
+fn quick() -> bool {
+    std::env::var_os("ASGD_CONF_QUICK").is_some()
+}
+
+fn iters(full: u64) -> u64 {
+    if quick() {
+        (full / 8).max(50)
+    } else {
+        full
+    }
+}
+
+/// A self-cleaning scratch directory (no tempfile dependency).
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let p = std::env::temp_dir().join(format!("asgd-conf-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        Self(p)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+struct Backend {
+    name: &'static str,
+    world: Arc<World>,
+    /// Keeps the shmem run directory alive (and cleaned) for the test.
+    _dir: Option<TempDir>,
+}
+
+/// Every backend over the same geometry.  `tag` keeps parallel tests'
+/// shmem directories apart.
+fn backends(
+    tag: &str,
+    ranks: usize,
+    n_slots: usize,
+    state_len: usize,
+    chunks: usize,
+) -> Vec<Backend> {
+    let mut v = vec![Backend {
+        name: "inproc",
+        world: Arc::new(World::new_chunked(
+            ranks,
+            n_slots,
+            state_len,
+            chunks,
+            Topology::flat(ranks),
+        )),
+        _dir: None,
+    }];
+    let dir = TempDir::new(tag);
+    let shmem = Shmem::create(
+        &dir.0,
+        ranks,
+        n_slots,
+        state_len,
+        chunks,
+        Arc::new(WorldStats::new(ranks)),
+    )
+    .expect("creating shmem backend");
+    v.push(Backend {
+        name: "shmem",
+        world: Arc::new(World::with_transport(shmem, Topology::flat(ranks))),
+        _dir: Some(dir),
+    });
+    let socket = Socket::loopback(
+        ranks,
+        n_slots,
+        state_len,
+        chunks,
+        Arc::new(WorldStats::new(ranks)),
+    )
+        .expect("creating loopback socket backend");
+    v.push(Backend {
+        name: "socket",
+        world: Arc::new(World::with_transport(socket, Topology::flat(ranks))),
+        _dir: None,
+    });
+    v
+}
+
+fn check_pure(buf: &[f32], sender: u32, iter: u64, ctx: &str) {
+    let expect = encode(sender, iter);
+    for (i, &v) in buf.iter().enumerate() {
+        assert!(
+            v == expect,
+            "{ctx}: Fresh block not sender-pure at word {i}: got {v}, want {expect}"
+        );
+    }
+}
+
+/// Fresh-is-sender-pure + version monotonicity + post-storm recovery +
+/// exact sender accounting, per backend.  Writers go through the
+/// [`World`] put wrappers (ticking sender counters exactly as the
+/// worker's send path does); the reader uses the receive path.
+#[test]
+fn conformance_fresh_reads_are_sender_pure_and_senders_account_exactly() {
+    let (ranks, n_slots, state_len, chunks) = (3usize, 2usize, 96usize, 8usize);
+    let per_writer = iters(800);
+    for b in backends("pure", ranks, n_slots, state_len, chunks) {
+        let writers: Vec<_> = (1..ranks as u32)
+            .map(|id| {
+                let world = b.world.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Xoshiro256pp::seed_from_u64(900 + u64::from(id));
+                    let l = world.layout();
+                    for i in 0..per_writer {
+                        let slot = rng.index(n_slots);
+                        let c = rng.index(l.n_chunks());
+                        let payload = vec![encode(id, i); l.chunk_len(c)];
+                        world.put_chunk(id as usize, 0, i, c, &payload, slot);
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let world = b.world.clone();
+            let name = b.name;
+            std::thread::spawn(move || {
+                let mut rng = Xoshiro256pp::seed_from_u64(1900);
+                let l = world.layout();
+                let mut versions = vec![0u64; n_slots * l.n_chunks()];
+                for _ in 0..2 * per_writer {
+                    let slot = rng.index(n_slots);
+                    let c = rng.index(l.n_chunks());
+                    let idx = slot * l.n_chunks() + c;
+                    let mut buf = vec![0.0f32; l.chunk_len(c)];
+                    let (out, sender, iter, v) =
+                        world.segment(0).read_block_into(slot, c, versions[idx], &mut buf);
+                    assert!(v >= versions[idx], "{name}: reported version regressed");
+                    versions[idx] = v;
+                    if out == ReadOutcome::Fresh {
+                        check_pure(&buf, sender, iter, name);
+                    }
+                }
+            })
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        reader.join().unwrap();
+        b.world.quiesce();
+        let total = b.world.stats.total();
+        // sender-side exactness: one chunk_sent per put, no more, no less
+        let puts = (ranks as u64 - 1) * per_writer;
+        assert_eq!(total.chunk_sent, puts, "{}: sender accounting drifted", b.name);
+        assert_eq!(total.sent, puts, "{}: every block put is one message", b.name);
+        // receiver-side loss is bounded by what was ever sent
+        assert!(total.chunk_lost <= puts, "{}: lost more than sent", b.name);
+        // post-storm recovery: sole writes settle Fresh on every block
+        let l = b.world.layout();
+        for c in 0..l.n_chunks() {
+            let payload = vec![encode(9, 4242); l.chunk_len(c)];
+            b.world.put_chunk(1, 0, 4242, c, &payload, 0);
+        }
+        b.world.quiesce();
+        for c in 0..l.n_chunks() {
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            let (out, sender, iter, _) = b.world.segment(0).read_block_into(0, c, 0, &mut buf);
+            assert_eq!(out, ReadOutcome::Fresh, "{}: block {c} stuck after storm", b.name);
+            // the settle writes rode the same world path: sender id 9
+            // was encoded into the payload, rank 1 performed the put
+            check_pure(&buf, sender, iter, b.name);
+            assert_eq!(iter, 4242, "{}: stale settle read", b.name);
+        }
+    }
+}
+
+/// Full-state puts (the unchunked path) deliver Fresh sender-pure slots
+/// on every backend, and `overwritten` only ever counts real losses.
+#[test]
+fn conformance_full_state_puts_deliver_fresh_slots() {
+    let (ranks, n_slots, state_len) = (2usize, 2usize, 32usize);
+    let rounds = iters(400);
+    for b in backends("full", ranks, n_slots, state_len, 1) {
+        for i in 0..rounds {
+            let payload = vec![encode(1, i); state_len];
+            b.world.put_state(1, 0, i, &payload, (i % n_slots as u64) as usize);
+        }
+        b.world.quiesce();
+        let total = b.world.stats.total();
+        assert_eq!(total.sent, rounds, "{}: sender accounting drifted", b.name);
+        assert!(total.overwritten < rounds, "{}: every put overwrote?", b.name);
+        for slot in 0..n_slots {
+            let snap = b.world.segment(0).read_slot(slot, 0);
+            assert_eq!(snap.outcome, ReadOutcome::Fresh, "{}: slot {slot} not fresh", b.name);
+            check_pure(&snap.data, 1, snap.iter, b.name);
+        }
+    }
+}
+
+/// The metadata plane round-trips owner -> observer on every backend:
+/// heartbeat advance, clean retirement, incarnation rebirth, layout
+/// epoch versioning, and the gossip suspicion word.
+#[test]
+fn conformance_metadata_plane_roundtrips() {
+    for b in backends("meta", 4, 1, 16, 4) {
+        let w = &b.world;
+        let hb1 = w.publish_heartbeat(1);
+        w.quiesce();
+        assert_eq!(w.segment(1).heartbeat(), hb1, "{}: heartbeat lost", b.name);
+        let hb2 = w.publish_heartbeat(1);
+        assert!(hb2 != hb1, "{}: heartbeat did not advance", b.name);
+
+        let ret = w.publish_retirement(2);
+        w.quiesce();
+        assert_eq!(w.segment(2).heartbeat(), ret, "{}: retirement lost", b.name);
+        // a retired rank never expires a lease: the observer's view
+        // polls it forever without a Suspected transition
+        let mut view = LivenessView::new(4, 0, 2);
+        for _ in 0..20 {
+            assert_eq!(view.observe(2, w.segment(2).heartbeat()), None, "{}", b.name);
+        }
+        assert!(!view.is_suspected(2), "{}: retired rank suspected", b.name);
+
+        let reborn = w.begin_incarnation(3);
+        w.quiesce();
+        assert_eq!(w.segment(3).heartbeat(), reborn, "{}: incarnation lost", b.name);
+        assert!(reborn != 0, "{}: rebirth produced the zero word", b.name);
+
+        let e1 = w.advertise_layout(1, 2);
+        let e2 = w.advertise_layout(1, 4);
+        w.quiesce();
+        let (epoch, cur) = w.segment(1).current_layout();
+        assert_eq!((epoch, cur), (e2, 4), "{}: layout word drifted", b.name);
+        assert_eq!(e2, e1 + 1, "{}: re-layout must bump the epoch", b.name);
+
+        w.publish_suspicion(1, 0b1010);
+        w.quiesce();
+        assert_eq!(w.segment(1).suspicion(), 0b1010, "{}: gossip word lost", b.name);
+    }
+}
+
+/// Lease-resolution conformance: a pauser resolves as a false suspicion,
+/// a reborn rank as recovered, a corpse never resolves, and the identity
+/// `false_suspicion + recovered <= suspected` holds at every poll — on
+/// every backend.  Ranks: 0 observer, 1 pauser, 2 corpse, 3 reborn.
+#[test]
+fn conformance_lease_resolution_identities() {
+    for b in backends("lease", 4, 1, 8, 1) {
+        let world = b.world.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let pauser = {
+            let (world, stop) = (world.clone(), stop.clone());
+            std::thread::spawn(move || {
+                for _ in 0..50 {
+                    world.publish_heartbeat(1);
+                    std::thread::yield_now();
+                }
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                while !stop.load(Ordering::Relaxed) {
+                    world.publish_heartbeat(1);
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let corpse = {
+            let world = world.clone();
+            std::thread::spawn(move || {
+                for _ in 0..20 {
+                    world.publish_heartbeat(2);
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let reborn = {
+            let (world, stop) = (world.clone(), stop.clone());
+            std::thread::spawn(move || {
+                for _ in 0..20 {
+                    world.publish_heartbeat(3);
+                    std::thread::yield_now();
+                }
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                world.begin_incarnation(3);
+                while !stop.load(Ordering::Relaxed) {
+                    world.publish_heartbeat(3);
+                    std::thread::yield_now();
+                }
+            })
+        };
+        let mut view = LivenessView::new(4, 0, 16);
+        let mut events: Vec<(usize, Transition)> = Vec::new();
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            for r in 1..4usize {
+                if let Some(t) = view.observe(r, world.segment(r).heartbeat()) {
+                    events.push((r, t));
+                }
+            }
+            let fs = events.iter().filter(|(_, t)| *t == Transition::FalseSuspicion).count();
+            let rec = events.iter().filter(|(_, t)| *t == Transition::Recovered).count();
+            let susp = events.iter().filter(|(_, t)| *t == Transition::Suspected).count();
+            assert!(fs + rec <= susp, "{}: resolution identity broken", b.name);
+            let paused = events.iter().any(|&(r, t)| r == 1 && t == Transition::FalseSuspicion);
+            let rebirth = events.iter().any(|&(r, t)| r == 3 && t == Transition::Recovered);
+            if paused && rebirth && view.is_suspected(2) {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "{}: deadline without pause={paused} rebirth={rebirth} corpse={}",
+                b.name,
+                view.is_suspected(2)
+            );
+        }
+        stop.store(true, Ordering::Relaxed);
+        pauser.join().unwrap();
+        corpse.join().unwrap();
+        reborn.join().unwrap();
+        for _ in 0..100 {
+            assert_eq!(
+                view.observe(2, world.segment(2).heartbeat()),
+                None,
+                "{}: a corpse must never resolve",
+                b.name
+            );
+        }
+        assert!(view.is_suspected(2), "{}: corpse un-suspected", b.name);
+    }
+}
+
+/// Gossip seeding conformance: a fresh view (a late joiner or a reborn
+/// rank) pre-suspects a quorum-condemned corpse immediately — no
+/// `lease_polls` warm-up — and a later rebirth still resolves it
+/// through the ordinary observe path.  Identity counters tick.
+#[test]
+fn conformance_gossip_seeding_skips_warmup() {
+    for b in backends("gossip", 4, 1, 8, 1) {
+        let w = &b.world;
+        w.publish_heartbeat(2); // the corpse beat once, then died
+        // two independent accusers (quorum = 2 at n = 4) condemn rank 2
+        w.publish_suspicion(1, 1 << 2);
+        w.publish_suspicion(3, 1 << 2);
+        w.quiesce();
+        let mut view = LivenessView::new(4, 0, 16);
+        let seeded = view.seed_from_gossip(w, w.stats.rank(0));
+        assert_eq!(seeded, 1, "{}: quorum-condemned corpse not seeded", b.name);
+        assert!(view.is_suspected(2), "{}: seed did not suspect", b.name);
+        assert!(!view.is_suspected(1) && !view.is_suspected(3), "{}: over-seeded", b.name);
+        assert_eq!(w.stats.rank(0).gossip_seeded.get(), 1, "{}: counter silent", b.name);
+        assert_eq!(w.stats.rank(0).suspected.get(), 1, "{}: identity broken", b.name);
+        // a lone accuser is below quorum: nothing more gets seeded
+        w.publish_suspicion(1, (1 << 2) | (1 << 3));
+        w.quiesce();
+        assert_eq!(view.seed_from_gossip(w, w.stats.rank(0)), 0, "{}", b.name);
+        assert!(!view.is_suspected(3), "{}: seeded below quorum", b.name);
+        // rebirth resolves the seeded suspicion through observe()
+        w.begin_incarnation(2);
+        w.publish_heartbeat(2);
+        w.quiesce();
+        let t = view.observe(2, w.segment(2).heartbeat());
+        assert_eq!(t, Some(Transition::Recovered), "{}: rebirth unresolved", b.name);
+    }
+}
+
+/// Two mappings of the same shmem files are one memory: puts and
+/// metadata published through one process's world are visible through
+/// the other attachment with no extra protocol.
+#[test]
+fn shmem_dual_mappings_are_coherent() {
+    let dir = TempDir::new("dual");
+    let (ranks, n_slots, state_len, chunks) = (2usize, 1usize, 16usize, 4usize);
+    let owner = Shmem::create(
+        &dir.0,
+        ranks,
+        n_slots,
+        state_len,
+        chunks,
+        Arc::new(WorldStats::new(ranks)),
+    )
+        .expect("creating owner mapping");
+    let wa = World::with_transport(owner, Topology::flat(ranks));
+    let attached = Shmem::attach(
+        &dir.0,
+        ranks,
+        n_slots,
+        state_len,
+        chunks,
+        Arc::new(WorldStats::new(ranks)),
+    )
+        .expect("attaching second mapping");
+    let wb = World::with_transport(attached, Topology::flat(ranks));
+
+    let l = wa.layout();
+    let payload = vec![encode(1, 7); l.chunk_len(2)];
+    wa.put_chunk(1, 0, 7, 2, &payload, 0);
+    let mut buf = vec![0.0f32; l.chunk_len(2)];
+    let (out, sender, iter, _) = wb.segment(0).read_block_into(0, 2, 0, &mut buf);
+    assert_eq!(out, ReadOutcome::Fresh, "write invisible through second mapping");
+    assert_eq!((sender, iter), (1, 7));
+    check_pure(&buf, 1, 7, "dual-mapping");
+    // receive-side accounting lands in the *reader's* ledger
+    assert_eq!(wb.stats.rank(0).good.get() + wb.stats.rank(0).received.get(), 0,
+        "read_block_into ticks no counters (worker owns that)");
+
+    let hb = wa.publish_heartbeat(1);
+    assert_eq!(wb.segment(1).heartbeat(), hb, "heartbeat invisible through second mapping");
+    wa.publish_suspicion(1, 5);
+    assert_eq!(wb.segment(1).suspicion(), 5, "gossip invisible through second mapping");
+    wb.advertise_layout(0, 2);
+    assert_eq!(wa.segment(0).current_layout().1, 2, "layout invisible through first mapping");
+}
+
+// ---- end-to-end: real worker processes --------------------------------
+
+fn asgd_binary() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("ASGD_BIN") {
+        return Some(PathBuf::from(p));
+    }
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    ["release", "debug"]
+        .iter()
+        .map(|p| root.join("target").join(p).join("asgd"))
+        .find(|p| p.exists())
+}
+
+/// Pull `"key": <number>` out of report.json (the exporter writes flat
+/// numeric fields; no JSON parser dependency needed).
+fn json_num(report: &str, key: &str) -> f64 {
+    let pat = format!("\"{key}\"");
+    let at = report.find(&pat).unwrap_or_else(|| panic!("{key} missing in {report}"));
+    let rest = &report[at + pat.len()..];
+    let rest = rest.trim_start_matches([':', ' ']);
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e' || c == '+'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().unwrap_or_else(|_| panic!("{key} not numeric in {report}"))
+}
+
+/// The acceptance scenario: a multi-process shmem run in which a worker
+/// *process* is killed mid-run and restored from its durable checkpoint
+/// — end-to-end through the real binary, real children, real mmap.
+#[test]
+fn multiprocess_shmem_kill_and_restore_end_to_end() {
+    let Some(bin) = asgd_binary() else {
+        eprintln!(
+            "SKIP multiprocess_shmem_kill_and_restore_end_to_end: asgd binary not built \
+             (run `cargo build --release` first or set ASGD_BIN)"
+        );
+        return;
+    };
+    let ckpt = TempDir::new("e2e-ckpt");
+    let out = TempDir::new("e2e-out");
+    let run = TempDir::new("e2e-run");
+    let iters = if quick() { "80" } else { "150" };
+    let status = Command::new(&bin)
+        .env("ASGD_BIN", &bin)
+        .args([
+            "train",
+            "--workers", "4",
+            "--iters", iters,
+            "--n-samples", "4096",
+            "--transport", "shmem",
+            "--transport-dir", run.0.to_str().unwrap(),
+            "--ckpt-interval", "10",
+            "--ckpt-dir", ckpt.0.to_str().unwrap(),
+            "--faults", "restart@2:30:15",
+            "--lease-polls", "8",
+            "--out", out.0.to_str().unwrap(),
+        ])
+        .status()
+        .expect("launching asgd train");
+    assert!(status.success(), "multi-process kill+restore run failed: {status}");
+    let report = std::fs::read_to_string(out.0.join("report.json")).expect("report.json");
+    assert_eq!(json_num(&report, "restores") as u64, 1, "exactly one restore performed");
+    assert_eq!(json_num(&report, "workers") as u64, 4);
+    assert!(json_num(&report, "final_objective").is_finite());
+    assert!(json_num(&report, "msgs_sent") > 0.0, "processes never communicated");
+    // durable checkpoints really landed on disk, one file per rank
+    let n_ckpts = std::fs::read_dir(&ckpt.0)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref().unwrap().path().extension().map(|x| x == "ackp").unwrap_or(false)
+        })
+        .count();
+    assert_eq!(n_ckpts, 4, "every rank checkpoints durably");
+}
+
+/// `asgd restore` resumes a durable-checkpoint run end-to-end: the
+/// checkpoints a completed run left behind restart cleanly (state, RNG
+/// stream, shard cursor, learned comm state all decode), through real
+/// worker processes again.
+#[test]
+fn restore_entry_point_resumes_from_durable_checkpoints() {
+    let Some(bin) = asgd_binary() else {
+        eprintln!(
+            "SKIP restore_entry_point_resumes_from_durable_checkpoints: asgd binary not \
+             built (run `cargo build --release` first or set ASGD_BIN)"
+        );
+        return;
+    };
+    let ckpt = TempDir::new("res-ckpt");
+    let run = TempDir::new("res-run");
+    let base = [
+        "--workers", "2",
+        "--iters", "60",
+        "--n-samples", "4096",
+        "--comm", "adaptive",
+        "--ckpt-interval", "10",
+    ];
+    let status = Command::new(&bin)
+        .args(["train"])
+        .args(base)
+        .args(["--ckpt-dir", ckpt.0.to_str().unwrap()])
+        .status()
+        .expect("launching asgd train");
+    assert!(status.success(), "seed run failed: {status}");
+    // the completed run's checkpoints restart — threaded inproc first
+    let status = Command::new(&bin)
+        .args(["restore"])
+        .args(base)
+        .args(["--ckpt-dir", ckpt.0.to_str().unwrap()])
+        .status()
+        .expect("launching asgd restore");
+    assert!(status.success(), "inproc restore failed: {status}");
+    // ...and once more as real processes over shmem
+    let status = Command::new(&bin)
+        .env("ASGD_BIN", &bin)
+        .args(["restore"])
+        .args(base)
+        .args([
+            "--ckpt-dir", ckpt.0.to_str().unwrap(),
+            "--transport", "shmem",
+            "--transport-dir", run.0.to_str().unwrap(),
+        ])
+        .status()
+        .expect("launching asgd restore --transport shmem");
+    assert!(status.success(), "shmem restore failed: {status}");
+}
