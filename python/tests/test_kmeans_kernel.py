@@ -8,6 +8,8 @@ signal for the hot-path artifact.
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed; property tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import kmeans_pallas, ref

@@ -1,10 +1,28 @@
 //! Paper benchmark: figures 13/14/15/16/17 ablations — communication
 //! frequency, silent mode, gate modes, race policies, and the two final
-//! aggregations, all at a fixed sample budget.
+//! aggregations, all at a fixed sample budget — plus the staleness-rule
+//! ablation: convergence per wallclock under a deterministic 10x
+//! straggler, `staleness = "none"` vs `"scaled"` (delay-compensated
+//! merging, arXiv:1508.05711) vs `"momentum"`.
+//!
+//! Results land in `BENCH_ablation.json` (override with
+//! `ASGD_BENCH_ABLATION_OUT`), merged read-modify-write like
+//! `BENCH_hotpath.json`.  `ASGD_BENCH_QUICK=1` shrinks sizes and runs
+//! the staleness arm only (the CI smoke); the full run adds the classic
+//! gate/silent/frequency/aggregation/race sweep.
 
-use asgd::config::{AggMode, GateMode, Method, RacePolicy, TrainConfig};
+use asgd::config::{AggMode, FaultPlan, GateMode, Method, RacePolicy, StalenessMode, TrainConfig};
 use asgd::coordinator::run_training;
+use asgd::util::benchjson;
+use asgd::util::json::JsonBuilder;
 use asgd::util::timer::BenchRunner;
+use std::path::PathBuf;
+
+fn out_path() -> PathBuf {
+    std::env::var_os("ASGD_BENCH_ABLATION_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("BENCH_ablation.json"))
+}
 
 fn base() -> TrainConfig {
     let mut cfg = TrainConfig::asgd_default(50, 10, 250);
@@ -21,12 +39,43 @@ fn base() -> TrainConfig {
     cfg
 }
 
-fn main() {
+/// The straggler arm's base: the `paper_faults` problem size, where a
+/// 300 us/iter sticky straggle is ~10x the fast ranks' per-iteration
+/// cost.  Rank 1 straggles from iteration 0; every arm runs the same
+/// iteration count under the same deterministic fault plan, so
+/// comparing final objectives *is* comparing loss at equal wallclock.
+fn straggle_cfg(quick: bool) -> TrainConfig {
+    let mut cfg = TrainConfig::asgd_default(10, 10, 64);
+    cfg.workers = 4;
+    cfg.iters = if quick { 120 } else { 400 };
+    cfg.eps = 0.15;
+    cfg.eval_every = usize::MAX / 2;
+    cfg.data.n_samples = if quick { 24_000 } else { 60_000 };
+    cfg.faults = FaultPlan::parse("straggle@1:0:300").unwrap();
+    cfg
+}
+
+/// Median-of-3 (final objective, wallclock) over perturbed seeds.
+fn run3(cfg: &TrainConfig) -> (f64, f64) {
+    let mut objs = Vec::new();
+    let mut walls = Vec::new();
+    for round in 0..3u64 {
+        let mut c = cfg.clone();
+        c.seed = cfg.seed.wrapping_add(round * 7919);
+        let r = run_training(&c).expect("ablation run failed");
+        assert!(r.final_objective.is_finite());
+        objs.push(r.final_objective);
+        walls.push(r.wallclock_s);
+    }
+    objs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    walls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (objs[1], walls[1])
+}
+
+fn classic_sweep(results: &mut Vec<(String, f64)>) {
     let mut runner = BenchRunner::quick();
     let budget = (4 * 150 * 250) as f64;
-    println!("== paper_ablation: gate/silent/frequency/aggregation/race ablations ==");
 
-    let mut results: Vec<(String, f64)> = Vec::new();
     let mut run = |name: &str, cfg: &TrainConfig, runner: &mut BenchRunner| {
         let mut obj = 0.0;
         runner.bench(name, budget, || {
@@ -73,5 +122,81 @@ fn main() {
         asgd <= ungated * 1.02,
         "parzen gate should not hurt: gated {asgd} vs ungated {ungated}"
     );
+}
+
+fn main() {
+    let quick = benchjson::quick_mode();
+    println!("== paper_ablation: gate/silent/frequency/aggregation/race + staleness ==");
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    if !quick {
+        classic_sweep(&mut results);
+    }
+
+    // ---- staleness under a 10x straggler -------------------------------
+    let tau = 4.0f32;
+    let beta = 0.5f32;
+    let cfg = straggle_cfg(quick);
+
+    let (none_obj, none_wall) = run3(&cfg);
+    println!("   staleness=none      : objective {none_obj:.5} in {none_wall:.3}s");
+
+    let mut scaled_cfg = cfg.clone();
+    scaled_cfg.staleness = StalenessMode::Scaled { tau };
+    let (scaled_obj, scaled_wall) = run3(&scaled_cfg);
+    println!(
+        "   staleness=scaled    : objective {scaled_obj:.5} in {scaled_wall:.3}s \
+         ({:.3}x none)",
+        scaled_obj / none_obj
+    );
+
+    let mut mom_cfg = cfg.clone();
+    mom_cfg.staleness = StalenessMode::Momentum { beta };
+    let (mom_obj, mom_wall) = run3(&mom_cfg);
+    println!(
+        "   staleness=momentum  : objective {mom_obj:.5} in {mom_wall:.3}s \
+         ({:.3}x none)",
+        mom_obj / none_obj
+    );
+
+    // the claim: downweighting the measured lag never loses to ignoring
+    // it at equal wallclock (same iters, same deterministic straggle;
+    // wallclocks must agree to within scheduler noise for the
+    // comparison to mean anything)
+    assert!(
+        scaled_obj <= none_obj * 1.02,
+        "scaled staleness should not lose to none under a straggler: \
+         {scaled_obj} vs {none_obj}"
+    );
+    assert!(
+        scaled_wall <= none_wall * 1.5 && none_wall <= scaled_wall * 1.5,
+        "wallclocks diverged ({scaled_wall}s vs {none_wall}s): \
+         not a loss-at-equal-wallclock comparison"
+    );
+
+    let arm = |obj: f64, wall: f64| {
+        JsonBuilder::new()
+            .num("objective_median_of_3", obj)
+            .num("wallclock_median_of_3_s", wall)
+            .num("ratio_vs_none", obj / none_obj)
+            .build()
+    };
+    let mut section = JsonBuilder::new()
+        .str("straggle", "straggle@1:0:300 (~10x)")
+        .num("iters", cfg.iters as f64)
+        .num("workers", cfg.workers as f64)
+        .num("tau", tau as f64)
+        .num("beta", beta as f64)
+        .num("quick", quick as u8 as f64)
+        .val("none", arm(none_obj, none_wall))
+        .val("scaled", arm(scaled_obj, scaled_wall))
+        .val("momentum", arm(mom_obj, mom_wall));
+    for (name, obj) in &results {
+        section = section.num(&format!("classic:{name}"), *obj);
+    }
+    let path = out_path();
+    benchjson::write_section_at(&path, "staleness_straggler", section.build())
+        .expect("writing BENCH_ablation.json");
+    println!("   [staleness_straggler] results merged into {}", path.display());
     println!("paper_ablation OK");
 }

@@ -177,6 +177,14 @@ pub fn train_config(args: &Args) -> Result<crate::config::TrainConfig> {
     if let Some(v) = args.get("race") {
         cfg.race = RacePolicy::parse(v)?;
     }
+    if let Some(staleness) = StalenessMode::resolve(
+        args.get("staleness"),
+        args.get_f32("stale-tau")?,
+        args.get_f32("stale-beta")?,
+        cfg.staleness,
+    )? {
+        cfg.staleness = staleness;
+    }
     if let Some(v) = args.get_u64("seed")? {
         cfg.seed = v;
     }
@@ -263,6 +271,10 @@ TRAIN OPTIONS (defaults in parentheses):
   --aggregation A        first | tree-mean                      (first)
   --backend B            native | xla                           (native)
   --race R               discard | accept                       (discard)
+  --staleness S          none | scaled | momentum               (none)
+  --stale-tau T          scaled: lag at which a contribution's
+                         merge weight halves                    (4)
+  --stale-beta B         momentum: velocity decay in [0, 1)     (0.5)
   --seed S --n-samples N --eval-every E --artifacts DIR
   --data KIND            synthetic | hog | linear               (synthetic)
   --out DIR              write trace.csv + report.json to DIR
@@ -349,6 +361,27 @@ mod tests {
         assert!(train_config(&parse("train --faults boom@1:2")).is_err());
         assert!(train_config(&parse("train --workers 4 --faults kill@4:10")).is_err());
         assert!(train_config(&parse("train --faults restart@1:10")).is_err()); // no ckpt
+    }
+
+    #[test]
+    fn staleness_flags_roundtrip() {
+        let cfg = train_config(&parse("train --staleness scaled --stale-tau 2.5")).unwrap();
+        assert_eq!(cfg.staleness, crate::config::StalenessMode::Scaled { tau: 2.5 });
+        // bare knobs imply their mode; bare modes take defaults
+        let cfg = train_config(&parse("train --stale-beta 0.75")).unwrap();
+        assert_eq!(cfg.staleness, crate::config::StalenessMode::Momentum { beta: 0.75 });
+        let cfg = train_config(&parse("train --staleness scaled")).unwrap();
+        assert_eq!(cfg.staleness, crate::config::StalenessMode::Scaled { tau: 4.0 });
+        let cfg = train_config(&parse("train")).unwrap();
+        assert_eq!(cfg.staleness, crate::config::StalenessMode::None);
+        // contradictory flags are refused, not silently dropped
+        assert!(train_config(&parse("train --staleness none --stale-tau 4")).is_err());
+        assert!(train_config(&parse("train --stale-tau 4 --stale-beta 0.5")).is_err());
+        // dormant knobs are refused by validation (the ISSUE's example)
+        assert!(train_config(&parse("train --method batch --staleness momentum")).is_err());
+        // out-of-range values are refused by validation
+        assert!(train_config(&parse("train --stale-beta 1.0")).is_err());
+        assert!(train_config(&parse("train --stale-tau 0")).is_err());
     }
 
     #[test]

@@ -154,6 +154,122 @@ impl RacePolicy {
     }
 }
 
+/// What the merge does with the measured staleness of an external
+/// contribution (arXiv:1508.05711).
+///
+/// Every delivered block carries the sender's iteration counter
+/// (`F_ITER` in the wire format); the receiver's own iteration minus
+/// that stamp is the delivery's *lag*.  The paper's §4.4 taxonomy only
+/// *tolerates* stale states; these modes *use* the measured lag:
+///
+/// * `None` — ignore the lag (the 2015 paper's behaviour).
+/// * `Scaled { tau }` — delay-compensated merging: a contribution with
+///   lag `l` enters the merge mean with weight `1 / (1 + l/tau)` instead
+///   of 1, so fresh states dominate and a 10x straggler's ancient states
+///   stop dragging the mean backwards.  `tau` is the lag (in sender
+///   iterations) at which a contribution's weight halves.
+/// * `Momentum { beta }` — fast-ASGD style: the worker keeps a velocity
+///   buffer `v` across merges; after each merge the displacement the
+///   merge produced on top of the local step `p` is folded through
+///   `v = beta*v + (w - p); w = p + v`, smoothing bursty stale
+///   corrections over time (a stale poll glides: `v *= beta; w += v`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StalenessMode {
+    /// Measured lag is recorded (stats histogram) but not acted on.
+    None,
+    /// Scale a lagging contribution by `1 / (1 + lag/tau)`.
+    Scaled { tau: f32 },
+    /// Carry a momentum buffer across merges with decay `beta`.
+    Momentum { beta: f32 },
+}
+
+impl StalenessMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StalenessMode::None => "none",
+            StalenessMode::Scaled { .. } => "scaled",
+            StalenessMode::Momentum { .. } => "momentum",
+        }
+    }
+
+    /// Parse a mode name; `tau` is used when the mode is scaled and
+    /// `beta` when it is momentum.
+    pub fn parse(s: &str, tau: f32, beta: f32) -> Result<Self> {
+        Ok(match s {
+            "none" | "off" => StalenessMode::None,
+            "scaled" | "scale" | "delay" => StalenessMode::Scaled { tau },
+            "momentum" | "mom" => StalenessMode::Momentum { beta },
+            other => bail!("unknown staleness mode {other:?} (none|scaled|momentum)"),
+        })
+    }
+
+    /// Resolve the `staleness`/`stale_tau`/`stale_beta` knobs the same
+    /// way for every config source (TOML and CLI), mirroring
+    /// [`CommMode::resolve`]: an explicit mode wins, a bare tau implies
+    /// scaled, a bare beta implies momentum, and mixing knobs across
+    /// modes is a contradiction (refused, not silently dropped).
+    /// `current` supplies values the caller did not give, so a later
+    /// layer does not silently reset an already-configured knob.
+    pub fn resolve(
+        mode: Option<&str>,
+        tau: Option<f32>,
+        beta: Option<f32>,
+        current: StalenessMode,
+    ) -> Result<Option<Self>> {
+        let inherited_tau = match current {
+            StalenessMode::Scaled { tau } => tau,
+            _ => 4.0,
+        };
+        let inherited_beta = match current {
+            StalenessMode::Momentum { beta } => beta,
+            _ => 0.5,
+        };
+        match (mode, tau, beta) {
+            (Some(m), t, b) => {
+                let parsed =
+                    Self::parse(m, t.unwrap_or(inherited_tau), b.unwrap_or(inherited_beta))?;
+                match parsed {
+                    StalenessMode::None if t.is_some() || b.is_some() => {
+                        bail!("staleness=none contradicts stale_tau/stale_beta; drop one")
+                    }
+                    StalenessMode::Scaled { .. } if b.is_some() => {
+                        bail!("staleness=scaled takes stale_tau, not stale_beta; drop one")
+                    }
+                    StalenessMode::Momentum { .. } if t.is_some() => {
+                        bail!("staleness=momentum takes stale_beta, not stale_tau; drop one")
+                    }
+                    _ => {}
+                }
+                Ok(Some(parsed))
+            }
+            (None, Some(t), Some(b)) => {
+                bail!("stale_tau={t} contradicts stale_beta={b}; pick scaled or momentum")
+            }
+            (None, Some(t), None) => {
+                if let StalenessMode::Momentum { .. } = current {
+                    // a bare knob must not silently switch a mode an
+                    // earlier layer configured explicitly
+                    bail!(
+                        "stale_tau={t} contradicts the configured staleness=momentum; \
+                         pass staleness=scaled to switch modes"
+                    );
+                }
+                Ok(Some(StalenessMode::Scaled { tau: t }))
+            }
+            (None, None, Some(b)) => {
+                if let StalenessMode::Scaled { .. } = current {
+                    bail!(
+                        "stale_beta={b} contradicts the configured staleness=scaled; \
+                         pass staleness=momentum to switch modes"
+                    );
+                }
+                Ok(Some(StalenessMode::Momentum { beta: b }))
+            }
+            (None, None, None) => Ok(None),
+        }
+    }
+}
+
 /// How worker states travel over the one-sided substrate.
 ///
 /// `Chunked` reproduces the communication-load balancing of Keuper &
@@ -494,6 +610,9 @@ pub struct TrainConfig {
     pub gate: GateMode,
     pub aggregation: AggMode,
     pub race: RacePolicy,
+    /// What the merge does with each delivery's measured iteration lag
+    /// ([`StalenessMode`]; default ignores it, like the 2015 paper).
+    pub staleness: StalenessMode,
     pub backend: BackendKind,
     pub seed: u64,
     pub data: DataConfig,
@@ -534,6 +653,7 @@ impl TrainConfig {
             gate: GateMode::FullState,
             aggregation: AggMode::ReturnFirst,
             race: RacePolicy::DiscardTorn,
+            staleness: StalenessMode::None,
             backend: BackendKind::Native,
             seed: 42,
             data: DataConfig::synthetic(200_000, dim, k),
@@ -721,6 +841,36 @@ impl TrainConfig {
                 self.comm.name()
             );
         }
+        match self.staleness {
+            StalenessMode::None => {}
+            mode => {
+                if self.method != Method::Asgd {
+                    // only alg. 5 merges external buffers; a staleness
+                    // rule under batch/sgd/silent would be dormant
+                    bail!(
+                        "staleness={} is not supported for method={} \
+                         (only asgd merges external states)",
+                        mode.name(),
+                        self.method.name()
+                    );
+                }
+                match mode {
+                    StalenessMode::Scaled { tau } => {
+                        if !(tau > 0.0) || !tau.is_finite() {
+                            bail!("staleness=scaled needs stale_tau > 0 (got {tau})");
+                        }
+                    }
+                    StalenessMode::Momentum { beta } => {
+                        if !(0.0..1.0).contains(&beta) {
+                            // beta = 1 never decays: the velocity integrates
+                            // every displacement forever and diverges
+                            bail!("staleness=momentum needs 0 <= stale_beta < 1 (got {beta})");
+                        }
+                    }
+                    StalenessMode::None => unreachable!(),
+                }
+            }
+        }
         if !(self.eps > 0.0) {
             bail!("eps must be > 0 (paper: Require eps > 0)");
         }
@@ -768,8 +918,13 @@ impl TrainConfig {
             TransportKind::Inproc => String::new(),
             t => format!(" transport={}", t.name()),
         };
+        let staleness = match self.staleness {
+            StalenessMode::None => String::new(),
+            StalenessMode::Scaled { tau } => format!(" staleness=scaled:{tau}"),
+            StalenessMode::Momentum { beta } => format!(" staleness=momentum:{beta}"),
+        };
         format!(
-            "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}{}{}{}",
+            "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}{}{}{}{}",
             self.method.name(),
             self.model.name(),
             self.workers,
@@ -780,6 +935,7 @@ impl TrainConfig {
             self.aggregation.name(),
             self.backend.name(),
             comm,
+            staleness,
             transport,
             faults
         )
@@ -808,6 +964,21 @@ impl TrainConfig {
             .str("faults", &self.faults.to_dsl())
             .str("gate", self.gate.name())
             .str("aggregation", self.aggregation.name())
+            .str("staleness", self.staleness.name())
+            .num(
+                "stale_tau",
+                match self.staleness {
+                    StalenessMode::Scaled { tau } => tau as f64,
+                    _ => 0.0,
+                },
+            )
+            .num(
+                "stale_beta",
+                match self.staleness {
+                    StalenessMode::Momentum { beta } => beta as f64,
+                    _ => 0.0,
+                },
+            )
             .str("backend", self.backend.name())
             .num("seed", self.seed as f64)
             .num("n_samples", self.data.n_samples as f64)
@@ -919,6 +1090,26 @@ impl TrainConfig {
         if let Some(v) = t.get("race") {
             cfg.race = RacePolicy::parse(v.as_str().context("race must be a string")?)?;
         }
+        let stale_mode = match t.get("staleness") {
+            None => None,
+            Some(v) => Some(v.as_str().context("staleness must be a string")?),
+        };
+        let opt_f32 = |key: &str| -> Result<Option<f32>> {
+            match t.get(key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(
+                    v.as_f64().with_context(|| format!("{key} must be a number"))? as f32,
+                )),
+            }
+        };
+        if let Some(staleness) = StalenessMode::resolve(
+            stale_mode,
+            opt_f32("stale_tau")?,
+            opt_f32("stale_beta")?,
+            cfg.staleness,
+        )? {
+            cfg.staleness = staleness;
+        }
         if let Some(v) = t.get("artifact_dir") {
             cfg.artifact_dir = v.as_str().context("artifact_dir must be a string")?.to_string();
         }
@@ -1024,6 +1215,16 @@ impl TrainConfig {
         let _ = writeln!(s, "gate = \"{}\"", self.gate.name());
         let _ = writeln!(s, "aggregation = \"{}\"", self.aggregation.name());
         let _ = writeln!(s, "race = \"{}\"", self.race.name());
+        let _ = writeln!(s, "staleness = \"{}\"", self.staleness.name());
+        match self.staleness {
+            StalenessMode::None => {}
+            StalenessMode::Scaled { tau } => {
+                let _ = writeln!(s, "stale_tau = {tau:?}");
+            }
+            StalenessMode::Momentum { beta } => {
+                let _ = writeln!(s, "stale_beta = {beta:?}");
+            }
+        }
         let _ = writeln!(s, "backend = \"{}\"", self.backend.name());
         let _ = writeln!(s, "seed = {}", self.seed);
         let _ = writeln!(s, "eval_every = {}", self.eval_every);
@@ -1385,6 +1586,124 @@ mod tests {
     }
 
     #[test]
+    fn staleness_resolve_inherits_and_refuses() {
+        let scaled = StalenessMode::Scaled { tau: 8.0 };
+        let momentum = StalenessMode::Momentum { beta: 0.9 };
+        // a bare mode keeps an already-configured value...
+        assert_eq!(
+            StalenessMode::resolve(Some("scaled"), None, None, scaled).unwrap(),
+            Some(scaled)
+        );
+        assert_eq!(
+            StalenessMode::resolve(Some("momentum"), None, None, momentum).unwrap(),
+            Some(momentum)
+        );
+        // ...defaults otherwise, and an explicit value always wins
+        assert_eq!(
+            StalenessMode::resolve(Some("scaled"), None, None, StalenessMode::None).unwrap(),
+            Some(StalenessMode::Scaled { tau: 4.0 })
+        );
+        assert_eq!(
+            StalenessMode::resolve(Some("momentum"), None, None, StalenessMode::None).unwrap(),
+            Some(StalenessMode::Momentum { beta: 0.5 })
+        );
+        assert_eq!(
+            StalenessMode::resolve(Some("scaled"), Some(2.0), None, scaled).unwrap(),
+            Some(StalenessMode::Scaled { tau: 2.0 })
+        );
+        // bare knobs imply their mode; absent knobs leave the mode alone
+        assert_eq!(
+            StalenessMode::resolve(None, Some(3.0), None, StalenessMode::None).unwrap(),
+            Some(StalenessMode::Scaled { tau: 3.0 })
+        );
+        assert_eq!(
+            StalenessMode::resolve(None, None, Some(0.8), StalenessMode::None).unwrap(),
+            Some(StalenessMode::Momentum { beta: 0.8 })
+        );
+        assert_eq!(
+            StalenessMode::resolve(None, None, None, scaled).unwrap(),
+            None
+        );
+        // contradictions are refused, not silently dropped
+        assert!(StalenessMode::resolve(Some("none"), Some(4.0), None, StalenessMode::None).is_err());
+        assert!(StalenessMode::resolve(Some("scaled"), None, Some(0.5), StalenessMode::None).is_err());
+        assert!(StalenessMode::resolve(Some("momentum"), Some(4.0), None, StalenessMode::None).is_err());
+        assert!(StalenessMode::resolve(None, Some(4.0), Some(0.5), StalenessMode::None).is_err());
+        // ...including across config layers: a bare knob never silently
+        // switches a mode an earlier layer configured
+        assert!(StalenessMode::resolve(None, Some(4.0), None, momentum).is_err());
+        assert!(StalenessMode::resolve(None, None, Some(0.5), scaled).is_err());
+        // an explicit mode still switches deliberately
+        assert_eq!(
+            StalenessMode::resolve(Some("scaled"), Some(2.0), None, momentum).unwrap(),
+            Some(StalenessMode::Scaled { tau: 2.0 })
+        );
+        assert!(StalenessMode::parse("sideways", 4.0, 0.5).is_err());
+    }
+
+    #[test]
+    fn staleness_mode_roundtrips_through_toml() {
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\nstaleness = \"scaled\"\nstale_tau = 2.5\n\
+             [data]\nn_samples = 100000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.staleness, StalenessMode::Scaled { tau: 2.5 });
+        // bare knobs imply their mode
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\nstale_beta = 0.75\n[data]\nn_samples = 100000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.staleness, StalenessMode::Momentum { beta: 0.75 });
+        // tau + beta is a contradiction
+        assert!(TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\nstale_tau = 4.0\nstale_beta = 0.5\n\
+             [data]\nn_samples = 100000\n",
+        )
+        .is_err());
+        // the json snapshot and description carry the knobs
+        let mut cfg = TrainConfig::asgd_default(10, 10, 500);
+        cfg.staleness = StalenessMode::Scaled { tau: 2.5 };
+        let j = cfg.to_json();
+        assert_eq!(j.get("staleness").unwrap().as_str(), Some("scaled"));
+        assert_eq!(j.get("stale_tau").unwrap().as_f64(), Some(2.5));
+        assert!(cfg.describe().contains("staleness=scaled:2.5"));
+        // the default stays out of the one-line description
+        let cfg = TrainConfig::asgd_default(10, 10, 500);
+        assert!(!cfg.describe().contains("staleness="));
+    }
+
+    #[test]
+    fn validation_bounds_staleness_knobs() {
+        // momentum under batch is a dormant knob (the ISSUE's example):
+        // alg. 1 never merges external states
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.method = Method::Batch;
+        c.staleness = StalenessMode::Momentum { beta: 0.5 };
+        assert!(c.validate().is_err());
+        // ...and so is any staleness rule under the non-merging methods
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.method = Method::AsgdSilent;
+        c.staleness = StalenessMode::Scaled { tau: 4.0 };
+        assert!(c.validate().is_err());
+        // bounds: tau > 0, 0 <= beta < 1
+        let mut c = TrainConfig::asgd_default(10, 10, 500);
+        c.staleness = StalenessMode::Scaled { tau: 0.0 };
+        assert!(c.validate().is_err());
+        c.staleness = StalenessMode::Scaled { tau: f32::NAN };
+        assert!(c.validate().is_err());
+        c.staleness = StalenessMode::Momentum { beta: 1.0 };
+        assert!(c.validate().is_err());
+        c.staleness = StalenessMode::Momentum { beta: -0.1 };
+        assert!(c.validate().is_err());
+        // the valid shapes pass
+        c.staleness = StalenessMode::Scaled { tau: 4.0 };
+        c.validate().unwrap();
+        c.staleness = StalenessMode::Momentum { beta: 0.0 };
+        c.validate().unwrap();
+    }
+
+    #[test]
     fn toml_roundtrip() {
         let cfg = TrainConfig::from_toml_str(
             r#"
@@ -1503,6 +1822,7 @@ cluster_std = 0.8
         cfg.gate = GateMode::Off;
         cfg.aggregation = AggMode::TreeMean;
         cfg.race = RacePolicy::AcceptTorn;
+        cfg.staleness = StalenessMode::Scaled { tau: 3.5 };
         cfg.eps = 0.05;
         cfg.seed = 777;
         cfg.eval_every = 13;
@@ -1516,6 +1836,7 @@ cluster_std = 0.8
         cfg.workers = 4;
         cfg.comm = CommMode::Chunked { chunks: 4 };
         cfg.model = ModelKind::LinReg;
+        cfg.staleness = StalenessMode::Momentum { beta: 0.25 };
         cfg.data.kind = DataKind::Linear { noise: 0.25 };
         let reparsed = TrainConfig::from_toml_str(&cfg.to_toml()).unwrap();
         assert_eq!(format!("{cfg:?}"), format!("{reparsed:?}"));

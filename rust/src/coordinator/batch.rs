@@ -112,6 +112,7 @@ pub fn run_batch(
         global_samples: global_samples.load(Ordering::Relaxed),
         trace,
         comm: Default::default(),
+        staleness: Vec::new(),
         state: final_state,
     }
 }

@@ -293,6 +293,7 @@ pub fn run_elastic(
         global_samples: global_samples.load(),
         trace,
         comm: world.stats.total(),
+        staleness: world.stats.staleness_by_peer(),
         state: final_state,
     })
 }

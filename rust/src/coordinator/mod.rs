@@ -176,6 +176,7 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
         global_samples: global_samples.load(),
         trace,
         comm: world.stats.total(),
+        staleness: world.stats.staleness_by_peer(),
         state: final_state,
     })
 }
@@ -315,6 +316,7 @@ pub fn resume_training(cfg: &TrainConfig) -> Result<RunReport> {
         global_samples: global_samples.load(),
         trace,
         comm: world.stats.total(),
+        staleness: world.stats.staleness_by_peer(),
         state: final_state,
     })
 }

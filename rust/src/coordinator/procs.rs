@@ -37,7 +37,7 @@ use crate::ckpt::{fnv1a, Checkpoint, CkptStore};
 use crate::cli::Args;
 use crate::config::{FaultEvent, FaultKind, TrainConfig};
 use crate::data::{partition::partition_rank, Dataset};
-use crate::gaspi::stats::{StatsSnapshot, WorldStats};
+use crate::gaspi::stats::{StatsSnapshot, WorldStats, STALE_BUCKETS};
 use crate::gaspi::transport::shmem::CtlRegion;
 use crate::gaspi::{Shmem, Topology, World};
 use crate::metrics::{RunReport, TracePoint};
@@ -51,8 +51,9 @@ use std::process::Child;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// Magic leading every worker result file ("ASGDRES1", little-endian).
-const RESULT_MAGIC: u64 = u64::from_le_bytes(*b"ASGDRES1");
+/// Magic leading every worker result file ("ASGDRES2", little-endian).
+/// v2 appends the per-peer staleness histogram after the stat words.
+const RESULT_MAGIC: u64 = u64::from_le_bytes(*b"ASGDRES2");
 
 /// Per-rank terminal status tracked by the parent (mirror of the
 /// elastic supervisor's bookkeeping).
@@ -202,6 +203,7 @@ fn drive(
     let mut iters_per_rank = vec![0u64; n];
     let mut trace: Vec<TracePoint> = Vec::new();
     let mut comm = StatsSnapshot::default();
+    let mut stale_rows: Vec<[u64; STALE_BUCKETS]> = Vec::new();
     let mut outstanding = n;
     while outstanding > 0 {
         // reap whichever child exits next (poll: std has no wait-any)
@@ -225,6 +227,7 @@ fn drive(
             }
             // each incarnation's ledger is fresh; snapshots sum
             add_snapshot(&mut comm, &res.stats);
+            add_stale_rows(&mut stale_rows, &res.staleness);
             for _ in 0..res.events_consumed {
                 consumed[rank] += 1;
                 if let Some(ev) = pending[rank].pop_front() {
@@ -269,6 +272,7 @@ fn drive(
 
     world.quiesce();
     add_snapshot(&mut comm, &world.stats.total());
+    add_stale_rows(&mut stale_rows, &world.stats.staleness_by_peer());
     let wallclock = t0.elapsed().as_secs_f64();
     let weights = vec![1.0f32; n];
     let slices: Vec<Option<&[f32]>> = states
@@ -290,6 +294,7 @@ fn drive(
         global_samples: ctl.samples(),
         trace,
         comm,
+        staleness: stale_rows,
         state: final_state,
     };
     // the owner's Drop unlinks the segment files; the run directory
@@ -391,7 +396,7 @@ pub fn run_child(args: &Args) -> Result<()> {
     };
     let res = run_worker(ctx);
     world.quiesce();
-    let encoded = encode_result(&res, &world.stats.total())?;
+    let encoded = encode_result(&res, &world.stats.total(), &world.stats.staleness_by_peer())?;
     let path = result_path(&dir, rank);
     let tmp = dir.join(format!("result-{rank:03}.bin.tmp"));
     std::fs::write(&tmp, &encoded)
@@ -405,6 +410,7 @@ pub fn run_child(args: &Args) -> Result<()> {
 //
 // magic u64 | rank u32 | iters u64 | death u8 + at u64 + after_ms u64 |
 // events_consumed u32 | state (len u64 + f32 bits) | 19 stat words |
+// staleness (n_peers u64 + STALE_BUCKETS u64 per peer) |
 // trace (count u64 + 4 f64 per point) | fnv1a-64 checksum
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -415,7 +421,11 @@ fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn encode_result(res: &WorkerResult, stats: &StatsSnapshot) -> Result<Vec<u8>> {
+fn encode_result(
+    res: &WorkerResult,
+    stats: &StatsSnapshot,
+    staleness: &[[u64; STALE_BUCKETS]],
+) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(128 + 4 * res.state.len() + 32 * res.trace.len());
     put_u64(&mut out, RESULT_MAGIC);
     put_u32(&mut out, res.rank as u32);
@@ -437,6 +447,12 @@ fn encode_result(res: &WorkerResult, stats: &StatsSnapshot) -> Result<Vec<u8>> {
     for v in snapshot_words(stats) {
         put_u64(&mut out, v);
     }
+    put_u64(&mut out, staleness.len() as u64);
+    for row in staleness {
+        for &c in row {
+            put_u64(&mut out, c);
+        }
+    }
     put_u64(&mut out, res.trace.len() as u64);
     for p in &res.trace {
         put_u64(&mut out, p.global_iters.to_bits());
@@ -456,6 +472,7 @@ struct ProcResult {
     events_consumed: usize,
     state: Vec<f32>,
     stats: StatsSnapshot,
+    staleness: Vec<[u64; STALE_BUCKETS]>,
     trace: Vec<TracePoint>,
 }
 
@@ -515,6 +532,15 @@ fn decode_result(bytes: &[u8]) -> Result<ProcResult> {
         *w = r.u64()?;
     }
     let stats = snapshot_from_words(&words);
+    let n_peers = r.u64()? as usize;
+    let mut staleness = Vec::with_capacity(n_peers.min(1024));
+    for _ in 0..n_peers {
+        let mut row = [0u64; STALE_BUCKETS];
+        for c in &mut row {
+            *c = r.u64()?;
+        }
+        staleness.push(row);
+    }
     let n_trace = r.u64()? as usize;
     let mut trace = Vec::with_capacity(n_trace);
     for _ in 0..n_trace {
@@ -526,7 +552,7 @@ fn decode_result(bytes: &[u8]) -> Result<ProcResult> {
         });
     }
     ensure!(r.off == body.len(), "trailing bytes in result file");
-    Ok(ProcResult { iters, death, events_consumed, state, stats, trace })
+    Ok(ProcResult { iters, death, events_consumed, state, stats, staleness, trace })
 }
 
 fn read_result(dir: &Path, rank: usize) -> Result<ProcResult> {
@@ -586,6 +612,20 @@ fn snapshot_from_words(w: &[u64; 19]) -> StatsSnapshot {
     }
 }
 
+/// Staleness histograms sum row-wise across incarnations, like the
+/// counter snapshots: every delivery was recorded by exactly one
+/// receiver process.
+fn add_stale_rows(into: &mut Vec<[u64; STALE_BUCKETS]>, rows: &[[u64; STALE_BUCKETS]]) {
+    if into.len() < rows.len() {
+        into.resize(rows.len(), [0u64; STALE_BUCKETS]);
+    }
+    for (acc, row) in into.iter_mut().zip(rows) {
+        for (a, &c) in acc.iter_mut().zip(row) {
+            *a += c;
+        }
+    }
+}
+
 /// Per-process ledgers sum to the global totals (the accounting is
 /// ticked exactly once, by the process that did the work).
 fn add_snapshot(into: &mut StatsSnapshot, s: &StatsSnapshot) {
@@ -618,16 +658,21 @@ mod tests {
         (res, stats)
     }
 
+    fn sample_staleness() -> Vec<[u64; STALE_BUCKETS]> {
+        vec![[5, 1, 0, 0, 2, 0, 0, 0], [0, 0, 0, 0, 0, 0, 0, 9]]
+    }
+
     #[test]
     fn result_file_roundtrips() {
         let (res, stats) = sample_result();
-        let bytes = encode_result(&res, &stats).unwrap();
+        let bytes = encode_result(&res, &stats, &sample_staleness()).unwrap();
         let back = decode_result(&bytes).unwrap();
         assert_eq!(back.iters, 37);
         assert_eq!(back.death, Some((37, FaultKind::Restart { after_ms: 15 })));
         assert_eq!(back.events_consumed, 2);
         assert_eq!(back.state, res.state);
         assert_eq!(back.stats, stats);
+        assert_eq!(back.staleness, sample_staleness());
         assert_eq!(back.trace.len(), 1);
         assert_eq!(back.trace[0].objective, 3.5);
     }
@@ -635,7 +680,7 @@ mod tests {
     #[test]
     fn result_file_refuses_corruption() {
         let (res, stats) = sample_result();
-        let bytes = encode_result(&res, &stats).unwrap();
+        let bytes = encode_result(&res, &stats, &sample_staleness()).unwrap();
         let mut bad = bytes.clone();
         bad[20] ^= 1;
         assert!(decode_result(&bad).is_err(), "checksum must catch a bit flip");
@@ -653,5 +698,16 @@ mod tests {
         assert_eq!(acc.torn, 2);
         assert_eq!(acc.good, 5);
         assert_eq!(acc.restores, 4);
+    }
+
+    #[test]
+    fn stale_rows_sum_and_grow() {
+        let mut acc: Vec<[u64; STALE_BUCKETS]> = Vec::new();
+        add_stale_rows(&mut acc, &[[1, 0, 0, 0, 0, 0, 0, 0]]);
+        add_stale_rows(&mut acc, &sample_staleness());
+        assert_eq!(acc.len(), 2, "accumulator grows to the widest incarnation");
+        assert_eq!(acc[0][0], 6);
+        assert_eq!(acc[0][4], 2);
+        assert_eq!(acc[1][7], 9);
     }
 }

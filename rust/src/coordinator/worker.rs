@@ -38,7 +38,9 @@
 //! elastic supervisor decides what happens next).
 
 use crate::ckpt::{Checkpoint, CkptStore};
-use crate::config::{CommMode, FaultEvent, FaultKind, Method, RacePolicy, TrainConfig};
+use crate::config::{
+    CommMode, FaultEvent, FaultKind, Method, RacePolicy, StalenessMode, TrainConfig,
+};
 use crate::data::partition::Shard;
 use crate::gaspi::liveness::admit_presence;
 use crate::gaspi::sched::plan_send_into;
@@ -214,6 +216,17 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
     // Stays all-clear for silent/SimuParallelSGD (no externals, ever).
     let mut presence = ExtPresence::new(cfg.n_buffers, n_chunks);
     let chunked = n_chunks > 1;
+    // staleness = scaled: per-(buffer, block) lag weights, indexed like
+    // the presence mask (`slot * n_chunks + c`).  Cells under a clear
+    // presence bit are never read, so only admitted deliveries write
+    // them; the other modes leave the vec empty (= uniform merge).
+    let stale_tau = match cfg.staleness {
+        StalenessMode::Scaled { tau } => Some(tau),
+        _ => None,
+    };
+    if stale_tau.is_some() {
+        scratch.ext_weights = vec![1.0f32; cfg.n_buffers * n_chunks];
+    }
     // one seqlock version per (slot, block)
     let mut block_versions = vec![0u64; cfg.n_buffers * n_chunks];
     // version at which each block last reported Torn: the torn-version
@@ -387,7 +400,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                     let idx = slot * n_chunks + c;
                     let buf = &mut ext[layout.bounds(c)];
                     let prev = block_versions[idx];
-                    let (outcome, sender, _iter, version) =
+                    let (outcome, sender, iter, version) =
                         my_segment.read_block_into(slot, c, prev, buf);
                     block_versions[idx] = version;
                     match outcome {
@@ -404,6 +417,18 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                             if admit_presence(live, &mut presence, slot, c, sender) {
                                 any_fresh = true;
                                 torn_seen[idx] = u64::MAX;
+                                // measured delivery lag: own iteration
+                                // minus the sender's iteration at write
+                                // time (clamped — a sender that ran ahead
+                                // is simply "not stale")
+                                let lag = t.saturating_sub(iter);
+                                rx.staleness.record(sender as usize, lag);
+                                if let Some(tau) = stale_tau {
+                                    // delay-compensated weight, 1 at
+                                    // lag 0, 1/2 at lag tau
+                                    scratch.ext_weights[idx] =
+                                        1.0 / (1.0 + lag as f32 / tau);
+                                }
                                 if block_accounting {
                                     rx.chunk_received.add(1);
                                 }
@@ -436,7 +461,14 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                                     // in; a suspected one drops the mix —
                                     // torn merges are best-effort by
                                     // definition, so no deferral here)
-                                    if !admit_presence(live, &mut presence, slot, c, sender) {
+                                    if admit_presence(live, &mut presence, slot, c, sender) {
+                                        // a torn mix has no trustworthy
+                                        // iter word — merge at full
+                                        // weight, record no lag
+                                        if stale_tau.is_some() {
+                                            scratch.ext_weights[idx] = 1.0;
+                                        }
+                                    } else {
                                         rx.dead_masked.add(1);
                                     }
                                 }

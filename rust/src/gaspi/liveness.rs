@@ -203,7 +203,14 @@ impl LivenessView {
     /// resolution identity) and `gossip_seeded`.
     pub fn seed_from_gossip(&mut self, world: &World, stats: &CommStats) -> usize {
         let n = self.peers.len();
-        let quorum = 2.min(n.saturating_sub(2)).max(1);
+        // A true quorum needs two independent accusers whenever the
+        // world can furnish two (n >= 3 leaves at least one candidate
+        // besides us and the accused; at n >= 4 there are two, and at
+        // n == 3 the single candidate can never reach quorum — a lone
+        // accusation must not seed).  The old `2.min(n-2).max(1)`
+        // degenerated to quorum 1 at n == 3, letting one possibly
+        // partitioned rank condemn a healthy peer by gossip alone.
+        let quorum = if n >= 3 { 2 } else { 1 };
         let mut seeded = 0;
         for p in 0..n.min(64) {
             if p == self.me || self.peers[p].suspected {
@@ -515,5 +522,28 @@ mod tests {
         assert_eq!(v.seed_from_gossip(&w, &stats), 0);
         assert!(!v.is_suspected(3), "cleanly retired is not dead");
         assert_eq!(stats.gossip_seeded.get(), 0);
+    }
+
+    /// Small-world quorum: at n == 3 the only independent candidate is a
+    /// single rank, and its lone accusation must never seed (the old
+    /// `2.min(n-2).max(1)` formula degenerated to quorum 1 here).  At
+    /// n == 2 there are no independent accusers at all, so nothing can
+    /// seed by construction.
+    #[test]
+    fn gossip_quorum_holds_in_small_worlds() {
+        let w = World::new(3, 1, 4, Topology::flat(3));
+        let stats = CommStats::default();
+        w.publish_heartbeat(2);
+        // rank 1 is the only possible accuser of rank 2 from rank 0's
+        // view — one vote, and it must not be enough
+        w.publish_suspicion(1, 1 << 2);
+        let mut v = LivenessView::new(3, 0, 50);
+        assert_eq!(v.seed_from_gossip(&w, &stats), 0);
+        assert!(!v.is_suspected(2), "a lone accuser must not condemn at n = 3");
+        assert_eq!(stats.gossip_seeded.get(), 0);
+
+        let w2 = World::new(2, 1, 4, Topology::flat(2));
+        let mut v2 = LivenessView::new(2, 0, 50);
+        assert_eq!(v2.seed_from_gossip(&w2, &stats), 0, "n = 2 has no independent accusers");
     }
 }

@@ -76,6 +76,79 @@ pub struct CommStats {
     /// Elastic supervision: times this rank's worker was restored from
     /// its last checkpoint and re-spawned into the same segment.
     pub restores: Counter,
+    /// Per-peer staleness histogram over the deliveries this rank
+    /// admitted: each Fresh (or accepted-torn) block's lag — the
+    /// receiver's iteration minus the sender's `F_ITER` stamp — lands in
+    /// the sender's row ([`StaleHist`]).
+    pub staleness: StaleHist,
+}
+
+/// Number of logarithmic lag buckets: 0, 1, 2-3, 4-7, 8-15, 16-31,
+/// 32-63, >= 64.
+pub const STALE_BUCKETS: usize = 8;
+
+/// Peers tracked per histogram — the same 64-rank ceiling the gossip
+/// masks and merge bitmasks already impose; deliveries from higher
+/// ranks alias into the last row rather than growing the table.
+pub const STALE_PEERS: usize = 64;
+
+/// Which histogram bucket a measured lag lands in.
+#[inline]
+pub fn stale_bucket(lag: u64) -> usize {
+    if lag == 0 {
+        0
+    } else {
+        ((63 - lag.leading_zeros()) as usize).min(6) + 1
+    }
+}
+
+/// A fixed `STALE_PEERS x STALE_BUCKETS` table of relaxed counters:
+/// row = sending peer, column = log2 lag bucket.
+pub struct StaleHist {
+    cells: Vec<Counter>,
+}
+
+impl Default for StaleHist {
+    fn default() -> Self {
+        Self {
+            cells: (0..STALE_PEERS * STALE_BUCKETS).map(|_| Counter::default()).collect(),
+        }
+    }
+}
+
+impl StaleHist {
+    /// Record one delivery from `sender` with the given lag.
+    #[inline]
+    pub fn record(&self, sender: usize, lag: u64) {
+        let row = sender.min(STALE_PEERS - 1);
+        self.cells[row * STALE_BUCKETS + stale_bucket(lag)].add(1);
+    }
+
+    /// One sender's bucket counts.
+    pub fn row(&self, sender: usize) -> [u64; STALE_BUCKETS] {
+        let row = sender.min(STALE_PEERS - 1);
+        let mut out = [0u64; STALE_BUCKETS];
+        for (b, o) in out.iter_mut().enumerate() {
+            *o = self.cells[row * STALE_BUCKETS + b].get();
+        }
+        out
+    }
+
+    /// Add another histogram's counts into this one (cell-wise).
+    pub fn merge_from(&self, other: &StaleHist) {
+        for (mine, theirs) in self.cells.iter().zip(&other.cells) {
+            mine.add(theirs.get());
+        }
+    }
+
+    /// Add raw bucket counts for one sender row (the shmem result-file
+    /// path, where counts cross the process boundary as plain words).
+    pub fn add_row(&self, sender: usize, counts: &[u64; STALE_BUCKETS]) {
+        let row = sender.min(STALE_PEERS - 1);
+        for (b, &c) in counts.iter().enumerate() {
+            self.cells[row * STALE_BUCKETS + b].add(c);
+        }
+    }
 }
 
 /// Aggregated view of one rank's counters.
@@ -183,6 +256,26 @@ impl WorldStats {
         let n = self.ranks.len().max(1) as f64;
         (t.sent as f64 / n, t.received as f64 / n, t.good as f64 / n)
     }
+
+    /// Per-peer staleness totals, summed over every receiving rank and
+    /// trimmed to the world size: `out[p][b]` counts admitted deliveries
+    /// *from* sender `p` whose measured lag fell in bucket `b` (see
+    /// [`stale_bucket`]).  The histogram travels outside
+    /// [`StatsSnapshot`] (which stays `Copy`).
+    pub fn staleness_by_peer(&self) -> Vec<[u64; STALE_BUCKETS]> {
+        let n = self.ranks.len().min(STALE_PEERS);
+        (0..n)
+            .map(|p| {
+                let mut row = [0u64; STALE_BUCKETS];
+                for r in &self.ranks {
+                    for (acc, v) in row.iter_mut().zip(r.staleness.row(p)) {
+                        *acc += v;
+                    }
+                }
+                row
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -232,6 +325,56 @@ mod tests {
         assert_eq!(t.chunk_lost, 1);
         assert_eq!(t.chunk_skipped, 6);
         assert_eq!(t.relayouts, 3);
+    }
+
+    #[test]
+    fn stale_buckets_are_log2() {
+        assert_eq!(stale_bucket(0), 0);
+        assert_eq!(stale_bucket(1), 1);
+        assert_eq!(stale_bucket(2), 2);
+        assert_eq!(stale_bucket(3), 2);
+        assert_eq!(stale_bucket(4), 3);
+        assert_eq!(stale_bucket(7), 3);
+        assert_eq!(stale_bucket(8), 4);
+        assert_eq!(stale_bucket(31), 5);
+        assert_eq!(stale_bucket(32), 6);
+        assert_eq!(stale_bucket(63), 6);
+        assert_eq!(stale_bucket(64), 7);
+        assert_eq!(stale_bucket(u64::MAX), 7);
+    }
+
+    #[test]
+    fn staleness_histogram_sums_across_receivers() {
+        let ws = WorldStats::new(3);
+        // rank 0 and rank 2 both admit deliveries from sender 1
+        ws.rank(0).staleness.record(1, 0);
+        ws.rank(0).staleness.record(1, 5);
+        ws.rank(2).staleness.record(1, 5);
+        ws.rank(2).staleness.record(0, 64);
+        let by_peer = ws.staleness_by_peer();
+        assert_eq!(by_peer.len(), 3, "trimmed to world size");
+        assert_eq!(by_peer[1][0], 1);
+        assert_eq!(by_peer[1][3], 2); // lag 5 -> bucket 4-7
+        assert_eq!(by_peer[0][7], 1); // lag 64 -> the >= 64 tail
+        assert_eq!(by_peer[2], [0u64; STALE_BUCKETS]);
+        // out-of-range senders alias into the last row, never panic
+        ws.rank(0).staleness.record(4096, 1);
+        assert_eq!(ws.rank(0).staleness.row(STALE_PEERS - 1)[1], 1);
+    }
+
+    #[test]
+    fn staleness_histogram_merges_and_adds_rows() {
+        let a = StaleHist::default();
+        let b = StaleHist::default();
+        a.record(2, 3);
+        b.record(2, 3);
+        b.record(2, 100);
+        a.merge_from(&b);
+        assert_eq!(a.row(2)[2], 2);
+        assert_eq!(a.row(2)[7], 1);
+        let c = StaleHist::default();
+        c.add_row(2, &a.row(2));
+        assert_eq!(c.row(2), a.row(2));
     }
 
     #[test]

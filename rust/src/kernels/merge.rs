@@ -24,6 +24,36 @@
 use crate::kernels::presence::ExtPresence;
 use crate::kernels::simd;
 
+/// What the merge does with each contribution's measured delivery lag
+/// (the staleness arc: [`crate::config::StalenessMode`] resolved against
+/// the receive loop's per-delivery lag measurements).
+#[derive(Debug)]
+pub enum MergeStaleness<'a> {
+    /// Every accepted buffer enters the mean with weight 1 — the paper's
+    /// rule, bit-identical to the pre-staleness merge.
+    Uniform,
+    /// Delay-compensated merging (arXiv:1508.05711): buffer `nb`'s
+    /// contribution to transport block `pb` is scaled by
+    /// `weights[nb * presence.n_blocks() + pb]` and the mean divides by
+    /// the selected weight sum plus one.  The receive loop fills the
+    /// weights as `1/(1 + lag/tau)`; a weight of exactly 1.0 reproduces
+    /// [`MergeStaleness::Uniform`] bit-for-bit.
+    Weighted {
+        /// `[n_buffers * n_blocks]`, buffer-major.
+        weights: &'a [f32],
+    },
+    /// Fast-ASGD-style momentum carry: after the uniform merge, the
+    /// merge-induced displacement is folded through a velocity buffer
+    /// (`v = beta*v + (w_merged - w_step); w = w_step + v`), so stale
+    /// polls glide along the decayed velocity instead of stalling.
+    Momentum {
+        /// Velocity decay in `[0, 1)`.
+        beta: f32,
+        /// Caller-owned `[state_len]` buffer, persistent across merges.
+        velocity: &'a mut [f32],
+    },
+}
+
 /// Outcome of a merge.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct MergeOut {
@@ -74,6 +104,7 @@ fn merge_blocks_impl<I>(
     eps: f32,
     blocks: I,
     gated: bool,
+    staleness: MergeStaleness<'_>,
     scratch_prop: &mut [f32],
 ) -> MergeOut
 where
@@ -86,6 +117,13 @@ where
     let n_buf = exts.len() / len;
     debug_assert!(n_buf <= 64, "gate mask is a u64");
     debug_assert_eq!(presence.n_buffers(), n_buf);
+    if let MergeStaleness::Weighted { weights } = &staleness {
+        debug_assert!(weights.len() >= n_buf * presence.n_blocks());
+    }
+    if let MergeStaleness::Momentum { velocity, .. } = &staleness {
+        debug_assert_eq!(velocity.len(), len);
+    }
+    let momentum = matches!(staleness, MergeStaleness::Momentum { .. });
 
     let mut out = MergeOut {
         n_active: presence.n_active_buffers(),
@@ -96,13 +134,20 @@ where
     // block's selection is empty and the whole merge is one plain SGD
     // step — O(state_len) with no `exts` traffic at all (the pre-mask
     // path re-scanned n_buf * state_len words to conclude the same).
+    // Under momentum the state still glides: w == w_step here, so the
+    // fold reduces to `v *= beta; w += v`.
     if !presence.any() {
         simd::sgd_step(w, delta, eps);
+        if let MergeStaleness::Momentum { beta, velocity } = staleness {
+            scratch_prop.copy_from_slice(w);
+            simd::momentum_fold(w, scratch_prop, velocity, beta);
+        }
         return out;
     }
 
-    if gated {
-        // w_prop = w - eps*delta (fig. 4: the locally-projected state)
+    if gated || momentum {
+        // w_prop = w - eps*delta (fig. 4: the locally-projected state);
+        // momentum needs it even ungated — it is the fold's `w_step`.
         scratch_prop.copy_from_slice(w);
         simd::sgd_step(scratch_prop, delta, eps);
     }
@@ -151,20 +196,57 @@ where
             // the adaptive transport, which caps blocks at 64)
             touched |= if block_idx < 64 { 1 << block_idx } else { u64::MAX };
         }
-        // eq. (6): mean = (sel_sum + w)/(n_sel + 1);
-        // w_next = w - eps*(w - mean + delta) — fused SIMD pass
-        let inv = 1.0f32 / (n_sel as f32 + 1.0);
         let (start, end) = (range.start, range.end);
-        simd::merge_update(
-            &mut w[start..end],
-            &delta[start..end],
-            exts,
-            len,
-            start,
-            mask,
-            inv,
-            eps,
-        );
+        if let MergeStaleness::Weighted { weights } = &staleness {
+            // delay-compensated eq. (6): each accepted buffer enters the
+            // selection scaled by its lag weight, and the mean divides by
+            // the selected weight sum plus one (ascending-nb sum order,
+            // matching the kernel's selection order).
+            let nblk = presence.n_blocks();
+            let mut wts = [1.0f32; 64];
+            let mut wsum = 0.0f32;
+            let mut bits = mask;
+            while bits != 0 {
+                let nb = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let wt = weights[nb * nblk + pb];
+                wts[nb] = wt;
+                wsum += wt;
+            }
+            let inv = 1.0f32 / (wsum + 1.0);
+            simd::merge_update_scaled(
+                &mut w[start..end],
+                &delta[start..end],
+                exts,
+                len,
+                start,
+                mask,
+                &wts,
+                inv,
+                eps,
+            );
+        } else {
+            // eq. (6): mean = (sel_sum + w)/(n_sel + 1);
+            // w_next = w - eps*(w - mean + delta) — fused SIMD pass
+            let inv = 1.0f32 / (n_sel as f32 + 1.0);
+            simd::merge_update(
+                &mut w[start..end],
+                &delta[start..end],
+                exts,
+                len,
+                start,
+                mask,
+                inv,
+                eps,
+            );
+        }
+    }
+    if let MergeStaleness::Momentum { beta, velocity } = staleness {
+        // fold the merge-induced displacement through the velocity: the
+        // first merge (v = 0) reproduces the uniform result up to one
+        // rounding of the displacement, later merges smooth bursty stale
+        // corrections.
+        simd::momentum_fold(w, scratch_prop, velocity, beta);
     }
     out.n_good = contributed.count_ones() as usize;
     out.touched = touched;
@@ -194,6 +276,7 @@ pub fn asgd_merge(
         eps,
         std::iter::once(0..len),
         true,
+        MergeStaleness::Uniform,
         scratch_prop,
     )
 }
@@ -217,6 +300,7 @@ pub fn asgd_merge_ungated(
         eps,
         std::iter::once(0..len),
         false,
+        MergeStaleness::Uniform,
         scratch_prop,
     )
 }
@@ -241,7 +325,41 @@ pub fn asgd_merge_blocked<I>(
 where
     I: IntoIterator<Item = std::ops::Range<usize>>,
 {
-    merge_blocks_impl(w, delta, exts, presence, eps, blocks, true, scratch_prop)
+    merge_blocks_impl(
+        w,
+        delta,
+        exts,
+        presence,
+        eps,
+        blocks,
+        true,
+        MergeStaleness::Uniform,
+        scratch_prop,
+    )
+}
+
+/// Staleness-aware blocked merge: [`asgd_merge_blocked`] /
+/// [`asgd_merge_blocked_ungated`] (selected by `gated`) with the
+/// contribution rule chosen by `staleness`.  With
+/// [`MergeStaleness::Uniform`] this is exactly the corresponding plain
+/// wrapper; the optimizer layer funnels every gate mode through here so
+/// the staleness rule composes with all of them.
+#[allow(clippy::too_many_arguments)]
+pub fn asgd_merge_blocked_stale<I>(
+    w: &mut [f32],
+    delta: &[f32],
+    exts: &[f32],
+    presence: &ExtPresence,
+    eps: f32,
+    blocks: I,
+    gated: bool,
+    staleness: MergeStaleness<'_>,
+    scratch_prop: &mut [f32],
+) -> MergeOut
+where
+    I: IntoIterator<Item = std::ops::Range<usize>>,
+{
+    merge_blocks_impl(w, delta, exts, presence, eps, blocks, gated, staleness, scratch_prop)
 }
 
 /// Ungated per-block merge: every present block is accepted — the
@@ -258,7 +376,17 @@ pub fn asgd_merge_blocked_ungated<I>(
 where
     I: IntoIterator<Item = std::ops::Range<usize>>,
 {
-    merge_blocks_impl(w, delta, exts, presence, eps, blocks, false, scratch_prop)
+    merge_blocks_impl(
+        w,
+        delta,
+        exts,
+        presence,
+        eps,
+        blocks,
+        false,
+        MergeStaleness::Uniform,
+        scratch_prop,
+    )
 }
 
 /// Per-center variant (§4.4): the gate is evaluated independently per
@@ -620,5 +748,168 @@ mod tests {
         }
         // row 0 must differ (merged)
         assert!((w[0] - w_prop[0]).abs() > 1e-6);
+    }
+
+    /// All-unit weights reproduce the uniform merge bit-for-bit — the
+    /// invariant that lets the staleness-aware path inherit the pinned
+    /// merge oracle whenever nothing measured as stale.
+    #[test]
+    fn unit_weighted_merge_is_bitwise_uniform() {
+        let mut rng = Xoshiro256pp::seed_from_u64(17);
+        for &(len, n_buf) in &[(10usize, 1usize), (64, 4), (33, 3)] {
+            let w0 = rand_vec(&mut rng, len, 1.0);
+            let delta = rand_vec(&mut rng, len, 0.1);
+            let exts = rand_vec(&mut rng, len * n_buf, 1.0);
+            let presence = ExtPresence::all_present(n_buf, 1);
+            let weights = vec![1.0f32; n_buf];
+            let mut scratch = vec![0.0; len];
+            let mut w_uni = w0.clone();
+            let a = asgd_merge(&mut w_uni, &delta, &exts, &presence, 0.05, &mut scratch);
+            let mut w_wtd = w0.clone();
+            let b = asgd_merge_blocked_stale(
+                &mut w_wtd,
+                &delta,
+                &exts,
+                &presence,
+                0.05,
+                std::iter::once(0..len),
+                true,
+                MergeStaleness::Weighted { weights: &weights },
+                &mut scratch,
+            );
+            assert_eq!((a.n_good, a.touched), (b.n_good, b.touched));
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&w_uni), bits(&w_wtd), "len={len} n={n_buf}");
+        }
+    }
+
+    /// The weighted mean matches a direct transcription of the
+    /// delay-compensated rule: mean = (sum wt*ext + w)/(sum wt + 1).
+    #[test]
+    fn weighted_merge_matches_transcription() {
+        let mut rng = Xoshiro256pp::seed_from_u64(19);
+        let (len, n_buf) = (12usize, 3usize);
+        let w0 = rand_vec(&mut rng, len, 1.0);
+        let delta = rand_vec(&mut rng, len, 0.1);
+        let exts = rand_vec(&mut rng, len * n_buf, 1.0);
+        let eps = 0.05f32;
+        let weights = [1.0f32, 0.5, 0.2];
+        let presence = ExtPresence::all_present(n_buf, 1);
+        let mut scratch = vec![0.0; len];
+        let mut w = w0.clone();
+        let out = asgd_merge_blocked_stale(
+            &mut w,
+            &delta,
+            &exts,
+            &presence,
+            eps,
+            std::iter::once(0..len),
+            false, // ungated: every present buffer contributes
+            MergeStaleness::Weighted { weights: &weights },
+            &mut scratch,
+        );
+        assert_eq!(out.n_good, n_buf);
+        let wsum: f32 = weights.iter().sum();
+        for i in 0..len {
+            let sel: f32 = (0..n_buf).map(|nb| weights[nb] * exts[nb * len + i]).sum();
+            let mean = (sel + w0[i]) / (wsum + 1.0);
+            let want = w0[i] - eps * ((w0[i] - mean) + delta[i]);
+            assert!((w[i] - want).abs() < 1e-5, "{} vs {want} at {i}", w[i]);
+        }
+    }
+
+    /// A heavily down-weighted stale buffer moves the state strictly less
+    /// than the same buffer at full weight.
+    #[test]
+    fn downweighted_buffer_moves_the_state_less() {
+        let len = 8usize;
+        let w0 = vec![1.0f32; len];
+        let delta = vec![0.0f32; len];
+        let ext = vec![0.0f32; len]; // pulls toward the origin
+        let presence = ExtPresence::all_present(1, 1);
+        let mut scratch = vec![0.0; len];
+        let mut run = |wt: f32| {
+            let weights = [wt];
+            let mut w = w0.clone();
+            asgd_merge_blocked_stale(
+                &mut w,
+                &delta,
+                &ext,
+                &presence,
+                0.5,
+                std::iter::once(0..len),
+                false,
+                MergeStaleness::Weighted { weights: &weights },
+                &mut scratch,
+            );
+            w[0]
+        };
+        let fresh = run(1.0);
+        let stale = run(0.1);
+        // both pull below w0, the stale one much less
+        assert!(fresh < stale && stale < 1.0, "fresh={fresh} stale={stale}");
+    }
+
+    /// Momentum semantics: first merge (v = 0) is the uniform merge up to
+    /// displacement rounding, and the velocity it leaves behind is the
+    /// merge displacement; a stale poll then glides by beta * v.
+    #[test]
+    fn momentum_first_merge_then_glide() {
+        let mut rng = Xoshiro256pp::seed_from_u64(29);
+        let len = 16usize;
+        let w0 = rand_vec(&mut rng, len, 1.0);
+        let delta = rand_vec(&mut rng, len, 0.1);
+        let eps = 0.1f32;
+        // a buffer the gate accepts: exactly the projected state
+        let ext: Vec<f32> = w0.iter().zip(&delta).map(|(a, b)| a - eps * b).collect();
+        let presence = ExtPresence::all_present(1, 1);
+        let mut scratch = vec![0.0; len];
+        let beta = 0.5f32;
+
+        let mut w_uni = w0.clone();
+        asgd_merge(&mut w_uni, &delta, &ext, &presence, eps, &mut scratch);
+
+        let mut w_mom = w0.clone();
+        let mut velocity = vec![0.0f32; len];
+        asgd_merge_blocked_stale(
+            &mut w_mom,
+            &delta,
+            &ext,
+            &presence,
+            eps,
+            std::iter::once(0..len),
+            true,
+            MergeStaleness::Momentum { beta, velocity: &mut velocity },
+            &mut scratch,
+        );
+        let w_step: Vec<f32> = w0.iter().zip(&delta).map(|(a, b)| a - eps * b).collect();
+        for i in 0..len {
+            assert!((w_mom[i] - w_uni[i]).abs() < 1e-6, "first merge diverged at {i}");
+            let disp = w_uni[i] - w_step[i];
+            assert!((velocity[i] - disp).abs() < 1e-6, "velocity at {i}");
+        }
+
+        // stale poll: no deliveries — the state takes the plain step and
+        // then glides along beta * v
+        let w_before = w_mom.clone();
+        let v_before = velocity.clone();
+        let absent = ExtPresence::new(1, 1);
+        asgd_merge_blocked_stale(
+            &mut w_mom,
+            &delta,
+            &ext,
+            &absent,
+            eps,
+            std::iter::once(0..len),
+            true,
+            MergeStaleness::Momentum { beta, velocity: &mut velocity },
+            &mut scratch,
+        );
+        for i in 0..len {
+            let step = w_before[i] - eps * delta[i];
+            let want = step + beta * v_before[i];
+            assert!((w_mom[i] - want).abs() < 1e-5, "glide at {i}: {} vs {want}", w_mom[i]);
+            assert!((velocity[i] - beta * v_before[i]).abs() < 1e-6);
+        }
     }
 }

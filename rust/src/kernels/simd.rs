@@ -215,6 +215,87 @@ pub fn merge_update(
     scalar::merge_update(w, delta, exts, stride, base, mask, inv, eps)
 }
 
+/// Staleness-weighted variant of [`merge_update`] (delay-compensated
+/// merging, arXiv:1508.05711): buffer `nb`'s contribution enters the
+/// selection sum scaled by `wts[nb]` instead of 1,
+///
+/// ```text
+/// sel    = sum over set bits nb of mask, ascending: wts[nb] * exts[nb*stride + base + i]
+/// mean   = (sel + w[i]) * inv
+/// w[i]  -= eps * ((w[i] - mean) + delta[i])
+/// ```
+///
+/// The caller folds the weight sum into `inv` (`1 / (sum of selected
+/// wts + 1)`).  With every selected weight exactly 1.0 this is
+/// bit-identical to [`merge_update`] (an f32 multiply by 1.0 is exact),
+/// which the parity tests pin.  Per-lane op order is identical across
+/// arms: mul + add, no FMA, no reassociation.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn merge_update_scaled(
+    w: &mut [f32],
+    delta: &[f32],
+    exts: &[f32],
+    stride: usize,
+    base: usize,
+    mask: u64,
+    wts: &[f32; 64],
+    inv: f32,
+    eps: f32,
+) {
+    debug_assert_eq!(w.len(), delta.len());
+    if mask != 0 {
+        let hi = 63 - mask.leading_zeros() as usize;
+        debug_assert!(hi * stride + base + w.len() <= exts.len());
+    }
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2Fma {
+        // SAFETY: see `dot`.
+        unsafe { avx2::merge_update_scaled(w, delta, exts, stride, base, mask, wts, inv, eps) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa() == Isa::Neon {
+        // SAFETY: see `dot`.
+        unsafe { neon::merge_update_scaled(w, delta, exts, stride, base, mask, wts, inv, eps) };
+        return;
+    }
+    scalar::merge_update_scaled(w, delta, exts, stride, base, mask, wts, inv, eps)
+}
+
+/// The momentum carry across merges (fast-ASGD style): given the plain
+/// local-step state `p` and the merged state in `w`, fold the merge's
+/// displacement through the velocity buffer,
+///
+/// ```text
+/// v[i] = beta * v[i] + (w[i] - p[i])
+/// w[i] = p[i] + v[i]
+/// ```
+///
+/// With `v = 0` the first merge reproduces `w` up to one rounding of the
+/// displacement (`p + (w - p)` is not exact in f32); on a stale-poll
+/// iteration (`w == p`) the state keeps gliding along the decayed
+/// velocity.  Per-lane op order is identical across arms: sub, mul, add,
+/// add — no FMA.
+#[inline]
+pub fn momentum_fold(w: &mut [f32], p: &[f32], v: &mut [f32], beta: f32) {
+    debug_assert_eq!(w.len(), p.len());
+    debug_assert_eq!(w.len(), v.len());
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2Fma {
+        // SAFETY: see `dot`.
+        unsafe { avx2::momentum_fold(w, p, v, beta) };
+        return;
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa() == Isa::Neon {
+        // SAFETY: see `dot`.
+        unsafe { neon::momentum_fold(w, p, v, beta) };
+        return;
+    }
+    scalar::momentum_fold(w, p, v, beta)
+}
+
 // ---------------------------------------------------------------------------
 // Tiled micro-GEMM (PR 4)
 // ---------------------------------------------------------------------------
@@ -469,6 +550,43 @@ pub mod scalar {
         }
     }
 
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub fn merge_update_scaled(
+        w: &mut [f32],
+        delta: &[f32],
+        exts: &[f32],
+        stride: usize,
+        base: usize,
+        mask: u64,
+        wts: &[f32; 64],
+        inv: f32,
+        eps: f32,
+    ) {
+        for i in 0..w.len() {
+            let mut sel = 0.0f32;
+            let mut bits = mask;
+            while bits != 0 {
+                let nb = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                sel += wts[nb] * exts[nb * stride + base + i];
+            }
+            let mean = (sel + w[i]) * inv;
+            let delta_bar = (w[i] - mean) + delta[i];
+            w[i] -= eps * delta_bar;
+        }
+    }
+
+    #[inline]
+    pub fn momentum_fold(w: &mut [f32], p: &[f32], v: &mut [f32], beta: f32) {
+        for i in 0..w.len() {
+            let disp = w[i] - p[i];
+            let vi = beta * v[i] + disp;
+            v[i] = vi;
+            w[i] = p[i] + vi;
+        }
+    }
+
     /// Reference NT gemm: the 4-accumulator [`dot`] per (sample, center)
     /// pair — bit-identical to the pre-tile per-sample transcription.
     pub fn gemm_nt(x: &[f32], w: &[f32], b: usize, k: usize, d: usize, scores: &mut [f32]) {
@@ -676,6 +794,86 @@ pub mod avx2 {
                 inv,
                 eps,
             );
+        }
+    }
+
+    /// # Safety
+    /// See [`merge_update`].  No FMA, no reassociation: per-lane ops
+    /// (mul + add) replicate the scalar arm exactly.
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn merge_update_scaled(
+        w: &mut [f32],
+        delta: &[f32],
+        exts: &[f32],
+        stride: usize,
+        base: usize,
+        mask: u64,
+        wts: &[f32; 64],
+        inv: f32,
+        eps: f32,
+    ) {
+        let n = w.len();
+        let vinv = _mm256_set1_ps(inv);
+        let veps = _mm256_set1_ps(eps);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vw = _mm256_loadu_ps(w.as_ptr().add(i));
+            let vd = _mm256_loadu_ps(delta.as_ptr().add(i));
+            let mut vsel = _mm256_setzero_ps();
+            let mut bits = mask;
+            while bits != 0 {
+                let nb = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let ve = _mm256_loadu_ps(exts.as_ptr().add(nb * stride + base + i));
+                let vwt = _mm256_set1_ps(wts[nb]);
+                vsel = _mm256_add_ps(vsel, _mm256_mul_ps(vwt, ve));
+            }
+            let vmean = _mm256_mul_ps(_mm256_add_ps(vsel, vw), vinv);
+            let vdb = _mm256_add_ps(_mm256_sub_ps(vw, vmean), vd);
+            let out = _mm256_sub_ps(vw, _mm256_mul_ps(veps, vdb));
+            _mm256_storeu_ps(w.as_mut_ptr().add(i), out);
+            i += 8;
+        }
+        if i < n {
+            super::scalar::merge_update_scaled(
+                &mut w[i..],
+                &delta[i..],
+                exts,
+                stride,
+                base + i,
+                mask,
+                wts,
+                inv,
+                eps,
+            );
+        }
+    }
+
+    /// # Safety
+    /// See [`dot`].  No FMA: per-lane ops (sub, mul, add, add) replicate
+    /// the scalar arm exactly.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn momentum_fold(w: &mut [f32], p: &[f32], v: &mut [f32], beta: f32) {
+        let n = w.len();
+        let vbeta = _mm256_set1_ps(beta);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let vw = _mm256_loadu_ps(w.as_ptr().add(i));
+            let vp = _mm256_loadu_ps(p.as_ptr().add(i));
+            let vv = _mm256_loadu_ps(v.as_ptr().add(i));
+            let disp = _mm256_sub_ps(vw, vp);
+            let vel = _mm256_add_ps(_mm256_mul_ps(vbeta, vv), disp);
+            _mm256_storeu_ps(v.as_mut_ptr().add(i), vel);
+            _mm256_storeu_ps(w.as_mut_ptr().add(i), _mm256_add_ps(vp, vel));
+            i += 8;
+        }
+        while i < n {
+            let disp = w[i] - p[i];
+            let vi = beta * v[i] + disp;
+            v[i] = vi;
+            w[i] = p[i] + vi;
+            i += 1;
         }
     }
 
@@ -969,6 +1167,81 @@ pub mod neon {
         }
     }
 
+    /// # Safety
+    /// See [`merge_update`].  No FMA, no reassociation: per-lane ops
+    /// (mul + add) replicate the scalar arm exactly.
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn merge_update_scaled(
+        w: &mut [f32],
+        delta: &[f32],
+        exts: &[f32],
+        stride: usize,
+        base: usize,
+        mask: u64,
+        wts: &[f32; 64],
+        inv: f32,
+        eps: f32,
+    ) {
+        let n = w.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vw = vld1q_f32(w.as_ptr().add(i));
+            let vd = vld1q_f32(delta.as_ptr().add(i));
+            let mut vsel = vdupq_n_f32(0.0);
+            let mut bits = mask;
+            while bits != 0 {
+                let nb = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                let ve = vld1q_f32(exts.as_ptr().add(nb * stride + base + i));
+                vsel = vaddq_f32(vsel, vmulq_n_f32(ve, wts[nb]));
+            }
+            let vmean = vmulq_n_f32(vaddq_f32(vsel, vw), inv);
+            let vdb = vaddq_f32(vsubq_f32(vw, vmean), vd);
+            vst1q_f32(w.as_mut_ptr().add(i), vsubq_f32(vw, vmulq_n_f32(vdb, eps)));
+            i += 4;
+        }
+        if i < n {
+            super::scalar::merge_update_scaled(
+                &mut w[i..],
+                &delta[i..],
+                exts,
+                stride,
+                base + i,
+                mask,
+                wts,
+                inv,
+                eps,
+            );
+        }
+    }
+
+    /// # Safety
+    /// See [`dot`].  No FMA: per-lane ops (sub, mul, add, add) replicate
+    /// the scalar arm exactly.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn momentum_fold(w: &mut [f32], p: &[f32], v: &mut [f32], beta: f32) {
+        let n = w.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let vw = vld1q_f32(w.as_ptr().add(i));
+            let vp = vld1q_f32(p.as_ptr().add(i));
+            let vv = vld1q_f32(v.as_ptr().add(i));
+            let disp = vsubq_f32(vw, vp);
+            let vel = vaddq_f32(vmulq_n_f32(vv, beta), disp);
+            vst1q_f32(v.as_mut_ptr().add(i), vel);
+            vst1q_f32(w.as_mut_ptr().add(i), vaddq_f32(vp, vel));
+            i += 4;
+        }
+        while i < n {
+            let disp = w[i] - p[i];
+            let vi = beta * v[i] + disp;
+            v[i] = vi;
+            w[i] = p[i] + vi;
+            i += 1;
+        }
+    }
+
     /// The register-blocked micro kernel over a packed `[d, kp]` panel —
     /// the NEON mirror of the AVX2 kernel at 4-lane width.
     ///
@@ -1140,7 +1413,35 @@ mod tests {
                     bits(&wv),
                     "merge_update rem={rem} mask={mask:b} not bit-identical"
                 );
+
+                let mut wts = [1.0f32; 64];
+                for (nb, wt) in wts.iter_mut().enumerate() {
+                    *wt = 1.0 / (1.0 + nb as f32 * 0.3);
+                }
+                let mut ws = a.clone();
+                let mut wv = a.clone();
+                scalar::merge_update_scaled(&mut ws, &delta, &exts, len, 0, mask, &wts, inv, 0.07);
+                unsafe {
+                    avx2::merge_update_scaled(&mut wv, &delta, &exts, len, 0, mask, &wts, inv, 0.07)
+                };
+                assert_eq!(
+                    bits(&ws),
+                    bits(&wv),
+                    "merge_update_scaled rem={rem} mask={mask:b} not bit-identical"
+                );
             }
+
+            // momentum_fold: bit-identical by contract
+            let p = rand_vec(&mut rng, len);
+            let v0 = rand_vec(&mut rng, len);
+            let mut ws = a.clone();
+            let mut vs = v0.clone();
+            let mut wv = a.clone();
+            let mut vv = v0.clone();
+            scalar::momentum_fold(&mut ws, &p, &mut vs, 0.6);
+            unsafe { avx2::momentum_fold(&mut wv, &p, &mut vv, 0.6) };
+            assert_eq!(bits(&ws), bits(&wv), "momentum_fold rem={rem} not bit-identical");
+            assert_eq!(bits(&vs), bits(&vv), "momentum_fold velocity rem={rem} differs");
 
             // gate_dists: element ops identical, accumulator order differs
             let e = rand_vec(&mut rng, len);
@@ -1241,7 +1542,35 @@ mod tests {
                     bits(&wv),
                     "merge_update rem={rem} mask={mask:b} not bit-identical"
                 );
+
+                let mut wts = [1.0f32; 64];
+                for (nb, wt) in wts.iter_mut().enumerate() {
+                    *wt = 1.0 / (1.0 + nb as f32 * 0.3);
+                }
+                let mut ws = a.clone();
+                let mut wv = a.clone();
+                scalar::merge_update_scaled(&mut ws, &delta, &exts, len, 0, mask, &wts, inv, 0.07);
+                unsafe {
+                    neon::merge_update_scaled(&mut wv, &delta, &exts, len, 0, mask, &wts, inv, 0.07)
+                };
+                assert_eq!(
+                    bits(&ws),
+                    bits(&wv),
+                    "merge_update_scaled rem={rem} mask={mask:b} not bit-identical"
+                );
             }
+
+            // momentum_fold: bit-identical by contract
+            let p = rand_vec(&mut rng, len);
+            let v0 = rand_vec(&mut rng, len);
+            let mut ws = a.clone();
+            let mut vs = v0.clone();
+            let mut wv = a.clone();
+            let mut vv = v0.clone();
+            scalar::momentum_fold(&mut ws, &p, &mut vs, 0.6);
+            unsafe { neon::momentum_fold(&mut wv, &p, &mut vv, 0.6) };
+            assert_eq!(bits(&ws), bits(&wv), "momentum_fold rem={rem} not bit-identical");
+            assert_eq!(bits(&vs), bits(&vv), "momentum_fold velocity rem={rem} differs");
 
             let e = rand_vec(&mut rng, len);
             let gs = scalar::gate_dists(&a, &b, &e);
@@ -1300,6 +1629,53 @@ mod tests {
             merge_update(&mut w1, &b, &exts, len, 0, 0b101, 1.0 / 3.0, 0.1);
             scalar::merge_update(&mut w2, &b, &exts, len, 0, 0b101, 1.0 / 3.0, 0.1);
             assert_eq!(bits(&w1), bits(&w2), "merge_update dispatch len={len}");
+
+            let mut wts = [1.0f32; 64];
+            wts[0] = 0.5;
+            wts[2] = 0.25;
+            let mut w1 = a.clone();
+            let mut w2 = a.clone();
+            let inv = 1.0 / (0.5 + 0.25 + 1.0);
+            merge_update_scaled(&mut w1, &b, &exts, len, 0, 0b101, &wts, inv, 0.1);
+            scalar::merge_update_scaled(&mut w2, &b, &exts, len, 0, 0b101, &wts, inv, 0.1);
+            assert_eq!(bits(&w1), bits(&w2), "merge_update_scaled dispatch len={len}");
+
+            let v0 = rand_vec(&mut rng, len);
+            let mut w1 = a.clone();
+            let mut v1 = v0.clone();
+            let mut w2 = a.clone();
+            let mut v2 = v0.clone();
+            momentum_fold(&mut w1, &b, &mut v1, 0.5);
+            scalar::momentum_fold(&mut w2, &b, &mut v2, 0.5);
+            assert_eq!(bits(&w1), bits(&w2), "momentum_fold dispatch len={len}");
+            assert_eq!(bits(&v1), bits(&v2), "momentum_fold velocity dispatch len={len}");
+        }
+    }
+
+    /// With every selected weight exactly 1.0, the scaled merge is
+    /// bit-identical to the uniform one (x1.0 is exact in IEEE 754) —
+    /// the invariant that lets `staleness = "scaled"` share the pinned
+    /// merge oracle when nothing is stale.
+    #[test]
+    fn scaled_merge_at_unit_weights_is_the_uniform_merge() {
+        let mut rng = Xoshiro256pp::seed_from_u64(23);
+        let wts = [1.0f32; 64];
+        for len in [1usize, 8, 13, 64, 100] {
+            let a = rand_vec(&mut rng, len);
+            let delta = rand_vec(&mut rng, len);
+            let exts = rand_vec(&mut rng, 5 * len);
+            for mask in [0u64, 0b1, 0b10110] {
+                let inv = 1.0 / (mask.count_ones() as f32 + 1.0);
+                let mut wu = a.clone();
+                let mut wsc = a.clone();
+                merge_update(&mut wu, &delta, &exts, len, 0, mask, inv, 0.07);
+                merge_update_scaled(&mut wsc, &delta, &exts, len, 0, mask, &wts, inv, 0.07);
+                assert_eq!(
+                    bits(&wu),
+                    bits(&wsc),
+                    "unit-weight scaled merge len={len} mask={mask:b} diverged"
+                );
+            }
         }
     }
 

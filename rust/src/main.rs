@@ -85,6 +85,18 @@ fn print_report(args: &Args, report: &asgd::metrics::RunReport) -> Result<()> {
             report.comm.restores
         );
     }
+    // per-peer staleness histogram: log2 lag buckets (0, 1, 2-3, 4-7, ...
+    // 64+) over every admitted Fresh block delivery from that sender
+    if report.staleness.iter().any(|row| row.iter().any(|&c| c > 0)) {
+        println!("staleness         lag buckets 0 | 1 | 2-3 | 4-7 | 8-15 | 16-31 | 32-63 | 64+");
+        for (peer, row) in report.staleness.iter().enumerate() {
+            if row.iter().all(|&c| c == 0) {
+                continue;
+            }
+            let cells: Vec<String> = row.iter().map(|c| c.to_string()).collect();
+            println!("  from rank {peer:<4}  {}", cells.join(" | "));
+        }
+    }
     if let Some(dir) = args.get("out") {
         let dir = PathBuf::from(dir);
         asgd::metrics::export::write_trace(report, dir.join("trace.csv"))?;

@@ -44,6 +44,16 @@ pub fn report_json(report: &RunReport) -> Json {
         .num("recovered", report.comm.recovered as f64)
         .num("dead_masked", report.comm.dead_masked as f64)
         .num("restores", report.comm.restores as f64)
+        .val(
+            "staleness",
+            Json::Arr(
+                report
+                    .staleness
+                    .iter()
+                    .map(|row| Json::Arr(row.iter().map(|&c| Json::Num(c as f64)).collect()))
+                    .collect(),
+            ),
+        )
         .build()
 }
 
@@ -77,6 +87,7 @@ mod tests {
                 objective: 2.0,
                 truth_error: 0.3,
             }],
+            staleness: vec![[1, 0, 2, 0, 0, 0, 0, 0], [0, 3, 0, 0, 0, 0, 0, 0]],
             ..Default::default()
         };
         let dir = std::env::temp_dir().join(format!("asgd_export_{}", std::process::id()));
@@ -89,6 +100,13 @@ mod tests {
         let j = Json::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
         assert_eq!(j.get("method").unwrap().as_str(), Some("asgd"));
         assert_eq!(j.get("msgs_sent").unwrap().as_f64(), Some(0.0));
+        let hist = j.get("staleness").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), 2);
+        let row0 = hist[0].as_arr().unwrap();
+        assert_eq!(row0.len(), 8);
+        assert_eq!(row0[0].as_f64(), Some(1.0));
+        assert_eq!(row0[2].as_f64(), Some(2.0));
+        assert_eq!(hist[1].as_arr().unwrap()[1].as_f64(), Some(3.0));
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -4,7 +4,7 @@
 pub mod error;
 pub mod export;
 
-use crate::gaspi::stats::StatsSnapshot;
+use crate::gaspi::stats::{StatsSnapshot, STALE_BUCKETS};
 
 /// One point of a convergence trace (figs. 8/13/14/15).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -37,6 +37,11 @@ pub struct RunReport {
     pub global_samples: u64,
     pub trace: Vec<TracePoint>,
     pub comm: StatsSnapshot,
+    /// Per-peer staleness histogram: row `p` counts deliveries *sent by*
+    /// rank `p`, bucketed by log2 of the measured iteration lag
+    /// ([`crate::gaspi::stats::stale_bucket`]), summed over receivers.
+    /// Empty when the run never communicated.
+    pub staleness: Vec<[u64; STALE_BUCKETS]>,
     /// Final state vector (the returned model).
     pub state: Vec<f32>,
 }

@@ -9,12 +9,9 @@
 //!   aggregation in [`crate::coordinator::aggregate`]
 //! * alg. 5 ASGD        -> [`AsgdUpdate::apply`]
 
-use crate::config::GateMode;
+use crate::config::{GateMode, StalenessMode};
 use crate::gaspi::ChunkLayout;
-use crate::kernels::merge::{
-    asgd_merge, asgd_merge_blocked, asgd_merge_blocked_ungated, asgd_merge_percenter,
-    asgd_merge_ungated, MergeOut,
-};
+use crate::kernels::merge::{asgd_merge_blocked_stale, MergeOut, MergeStaleness};
 use crate::kernels::{simd, ExtPresence};
 
 /// Plain SGD step: `w -= eps * grad` (alg. 2 line 3 / alg. 4 line 6).
@@ -38,6 +35,10 @@ pub struct AsgdUpdate {
     /// the gate is evaluated per transport block (arXiv:1510.01155)
     /// instead of on the whole state.
     pub comm_chunks: usize,
+    /// What the merge does with each delivery's measured iteration lag
+    /// ([`crate::config::StalenessMode`]): nothing, delay-compensated
+    /// down-weighting, or a momentum carry across merges.
+    pub staleness: StalenessMode,
 }
 
 impl AsgdUpdate {
@@ -45,6 +46,14 @@ impl AsgdUpdate {
     /// buffer snapshot, `presence` says which `(buffer, transport block)`
     /// slots of it hold delivered payloads (clear bits are never read),
     /// `scratch` a `state_len` buffer.
+    ///
+    /// `ext_weights` carries the receive loop's per-delivery lag weights
+    /// (`[n_buffers * n_blocks]`, buffer-major) and is only read under
+    /// `staleness = scaled` — an empty slice means "nothing measured as
+    /// stale" and falls back to the uniform merge.  `velocity` is the
+    /// momentum buffer, lazily sized to `state_len` on the first
+    /// momentum merge and untouched in the other modes.
+    #[allow(clippy::too_many_arguments)]
     pub fn apply(
         &self,
         w: &mut [f32],
@@ -52,38 +61,68 @@ impl AsgdUpdate {
         exts: &[f32],
         presence: &ExtPresence,
         scratch: &mut [f32],
+        ext_weights: &[f32],
+        velocity: &mut Vec<f32>,
     ) -> MergeOut {
+        let len = w.len();
+        let staleness = match self.staleness {
+            StalenessMode::None => MergeStaleness::Uniform,
+            StalenessMode::Scaled { .. } => {
+                if ext_weights.is_empty() {
+                    MergeStaleness::Uniform
+                } else {
+                    MergeStaleness::Weighted { weights: ext_weights }
+                }
+            }
+            StalenessMode::Momentum { beta } => {
+                if velocity.len() != len {
+                    velocity.resize(len, 0.0);
+                }
+                MergeStaleness::Momentum { beta, velocity: velocity.as_mut_slice() }
+            }
+        };
         if self.comm_chunks > 1 {
             // chunked transport: gate on the transport block boundaries
             // (a buffer may hold fresh data in only some blocks).
-            let layout = ChunkLayout::new(w.len(), self.comm_chunks);
-            return match self.gate {
-                GateMode::Off => asgd_merge_blocked_ungated(
-                    w,
-                    delta,
-                    exts,
-                    presence,
-                    self.eps,
-                    layout.iter_bounds(),
-                    scratch,
-                ),
-                _ => asgd_merge_blocked(
-                    w,
-                    delta,
-                    exts,
-                    presence,
-                    self.eps,
-                    layout.iter_bounds(),
-                    scratch,
-                ),
-            };
+            let layout = ChunkLayout::new(len, self.comm_chunks);
+            return asgd_merge_blocked_stale(
+                w,
+                delta,
+                exts,
+                presence,
+                self.eps,
+                layout.iter_bounds(),
+                self.gate != GateMode::Off,
+                staleness,
+                scratch,
+            );
         }
         match self.gate {
-            GateMode::FullState => asgd_merge(w, delta, exts, presence, self.eps, scratch),
             GateMode::PerCenter => {
-                asgd_merge_percenter(w, delta, exts, presence, self.eps, self.k, self.d, scratch)
+                debug_assert_eq!(len, self.k * self.d);
+                asgd_merge_blocked_stale(
+                    w,
+                    delta,
+                    exts,
+                    presence,
+                    self.eps,
+                    (0..self.k).map(|c| c * self.d..(c + 1) * self.d),
+                    true,
+                    staleness,
+                    scratch,
+                )
             }
-            GateMode::Off => asgd_merge_ungated(w, delta, exts, presence, self.eps, scratch),
+            gate => asgd_merge_blocked_stale(
+                w,
+                delta,
+                exts,
+                presence,
+                self.eps,
+                std::iter::once(0..len),
+                gate != GateMode::Off,
+                staleness,
+                scratch,
+            ),
         }
     }
 }
@@ -128,8 +167,16 @@ mod tests {
         let presence = ExtPresence::all_present(2, 1);
         for gate in [GateMode::FullState, GateMode::PerCenter, GateMode::Off] {
             let mut w = vec![1.0f32; 4];
-            let upd = AsgdUpdate { gate, eps: 0.1, k: 2, d: 2, comm_chunks: 1 };
-            let out = upd.apply(&mut w, &delta, &exts, &presence, &mut scratch);
+            let upd = AsgdUpdate {
+                gate,
+                eps: 0.1,
+                k: 2,
+                d: 2,
+                comm_chunks: 1,
+                staleness: StalenessMode::None,
+            };
+            let out =
+                upd.apply(&mut w, &delta, &exts, &presence, &mut scratch, &[], &mut Vec::new());
             assert!(out.n_active == 2);
             if gate == GateMode::Off {
                 assert_eq!(out.n_good, 2, "off mode accepts all active");
@@ -146,10 +193,24 @@ mod tests {
         let mut scratch = vec![0.0; 2];
         let mut w_full = vec![1.0f32; 2];
         let mut w_off = vec![1.0f32; 2];
-        AsgdUpdate { gate: GateMode::FullState, eps: 0.1, k: 1, d: 2, comm_chunks: 1 }
-            .apply(&mut w_full, &delta, &exts, &presence, &mut scratch);
-        AsgdUpdate { gate: GateMode::Off, eps: 0.1, k: 1, d: 2, comm_chunks: 1 }
-            .apply(&mut w_off, &delta, &exts, &presence, &mut scratch);
+        AsgdUpdate {
+            gate: GateMode::FullState,
+            eps: 0.1,
+            k: 1,
+            d: 2,
+            comm_chunks: 1,
+            staleness: StalenessMode::None,
+        }
+        .apply(&mut w_full, &delta, &exts, &presence, &mut scratch, &[], &mut Vec::new());
+        AsgdUpdate {
+            gate: GateMode::Off,
+            eps: 0.1,
+            k: 1,
+            d: 2,
+            comm_chunks: 1,
+            staleness: StalenessMode::None,
+        }
+        .apply(&mut w_off, &delta, &exts, &presence, &mut scratch, &[], &mut Vec::new());
         assert_ne!(w_full, w_off);
     }
 
@@ -168,14 +229,99 @@ mod tests {
         let presence = ExtPresence::all_present(1, 2);
         let mut scratch = vec![0.0; len];
         let mut w = w0.clone();
-        let upd = AsgdUpdate { gate: GateMode::FullState, eps, k: 1, d: len, comm_chunks: 2 };
-        let out = upd.apply(&mut w, &delta, &ext, &presence, &mut scratch);
+        let upd = AsgdUpdate {
+            gate: GateMode::FullState,
+            eps,
+            k: 1,
+            d: len,
+            comm_chunks: 2,
+            staleness: StalenessMode::None,
+        };
+        let out = upd.apply(&mut w, &delta, &ext, &presence, &mut scratch, &[], &mut Vec::new());
         assert_eq!(out.n_good, 1);
         // rejected block 1 is the plain step; accepted block 0 differs
         for j in 2..len {
             assert!((w[j] - w_prop[j]).abs() < 1e-6);
         }
         assert!((w[0] - w_prop[0]).abs() > 1e-6);
+    }
+
+    /// The staleness field routes: empty weights fall back to the
+    /// uniform merge, populated weights change the result, momentum
+    /// lazily sizes its velocity and matches the uniform merge on the
+    /// first application.
+    #[test]
+    fn staleness_modes_dispatch() {
+        let len = 4usize;
+        let delta = vec![0.1f32; len];
+        let eps = 0.5f32;
+        let w0 = vec![0.0f32; len];
+        let w_prop: Vec<f32> = w0.iter().zip(&delta).map(|(a, b)| a - eps * b).collect();
+        let ext = w_prop.clone(); // accepted by the gate
+        let presence = ExtPresence::all_present(1, 1);
+        let mut scratch = vec![0.0; len];
+        let mk = |staleness| AsgdUpdate {
+            gate: GateMode::FullState,
+            eps,
+            k: 1,
+            d: len,
+            comm_chunks: 1,
+            staleness,
+        };
+
+        let mut w_none = w0.clone();
+        mk(StalenessMode::None).apply(
+            &mut w_none,
+            &delta,
+            &ext,
+            &presence,
+            &mut scratch,
+            &[],
+            &mut Vec::new(),
+        );
+
+        // scaled with empty weights == uniform
+        let mut w_scaled = w0.clone();
+        mk(StalenessMode::Scaled { tau: 4.0 }).apply(
+            &mut w_scaled,
+            &delta,
+            &ext,
+            &presence,
+            &mut scratch,
+            &[],
+            &mut Vec::new(),
+        );
+        assert_eq!(w_none, w_scaled);
+
+        // scaled with a real down-weight differs
+        let mut w_down = w0.clone();
+        mk(StalenessMode::Scaled { tau: 4.0 }).apply(
+            &mut w_down,
+            &delta,
+            &ext,
+            &presence,
+            &mut scratch,
+            &[0.2],
+            &mut Vec::new(),
+        );
+        assert_ne!(w_none, w_down);
+
+        // momentum: velocity sized lazily, first merge ~= uniform
+        let mut w_mom = w0.clone();
+        let mut velocity = Vec::new();
+        mk(StalenessMode::Momentum { beta: 0.5 }).apply(
+            &mut w_mom,
+            &delta,
+            &ext,
+            &presence,
+            &mut scratch,
+            &[],
+            &mut velocity,
+        );
+        assert_eq!(velocity.len(), len);
+        for (a, b) in w_mom.iter().zip(&w_none) {
+            assert!((a - b).abs() < 1e-6);
+        }
     }
 
     #[test]

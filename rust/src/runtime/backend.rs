@@ -40,6 +40,14 @@ pub struct IterOut {
 pub struct StepScratch {
     pub grad: Vec<f32>,
     pub prop: Vec<f32>,
+    /// Per-delivery lag weights for `staleness = scaled`
+    /// (`[n_buffers * n_blocks]`, buffer-major), filled by the receive
+    /// loop from the measured `F_ITER` lag; empty means "uniform merge".
+    pub ext_weights: Vec<f32>,
+    /// Momentum velocity for `staleness = momentum`, lazily sized by
+    /// [`AsgdUpdate::apply`] on the first momentum merge and persistent
+    /// across iterations (reset only with the scratch itself).
+    pub velocity: Vec<f32>,
     /// Shaped input staging for the XLA steppers, round-tripped through
     /// [`XlaHandle::execute_reusing`] so the hot path refills the same
     /// buffers every iteration (no per-step `to_vec` of x/w/exts).
@@ -96,10 +104,10 @@ impl Stepper for NativeStepper {
         scratch: &mut StepScratch,
     ) -> Result<IterOut> {
         scratch.ensure(w.len());
-        // split borrow: grad and prop are separate fields
-        let StepScratch { grad, prop, .. } = scratch;
+        // split borrow: the scratch fields are disjoint
+        let StepScratch { grad, prop, ext_weights, velocity, .. } = scratch;
         let loss = self.model.grad(x, labels, w, grad);
-        let out = self.update.apply(w, grad, exts, presence, prop);
+        let out = self.update.apply(w, grad, exts, presence, prop, ext_weights, velocity);
         Ok(IterOut {
             loss,
             n_good: out.n_good,
@@ -314,6 +322,7 @@ impl XlaGradStepper {
                 k: 1,
                 d: cfg.model.state_len(d),
                 comm_chunks: cfg.comm.chunks(),
+                staleness: cfg.staleness,
             },
             b,
             d,
@@ -371,12 +380,12 @@ impl Stepper for XlaGradStepper {
         let loss = out.pop().expect("loss")[0] as f64;
         let w_next = out.pop().expect("w_next");
         // recover Delta_M from the plain step: delta = (w - w_next)/eps
-        let StepScratch { grad, prop, .. } = scratch;
+        let StepScratch { grad, prop, ext_weights, velocity, .. } = scratch;
         let inv = 1.0 / self.eps;
         for i in 0..w.len() {
             grad[i] = (w[i] - w_next[i]) * inv;
         }
-        let m = self.update.apply(w, grad, exts, presence, prop);
+        let m = self.update.apply(w, grad, exts, presence, prop, ext_weights, velocity);
         Ok(IterOut {
             loss,
             n_good: m.n_good,
@@ -414,6 +423,7 @@ pub fn build_stepper(cfg: &TrainConfig, model: Arc<dyn Model>) -> Result<Arc<dyn
             _ => cfg.model.state_len(cfg.data.dim),
         },
         comm_chunks: cfg.comm.chunks(),
+        staleness: cfg.staleness,
     };
     match cfg.backend {
         BackendKind::Native => Ok(Arc::new(NativeStepper { model, update })),
@@ -431,6 +441,16 @@ pub fn build_stepper(cfg: &TrainConfig, model: Arc<dyn Model>) -> Result<Arc<dyn
                             "comm={} needs --backend native for K-Means \
                              (the fused XLA artifact gates full states)",
                             cfg.comm.name()
+                        );
+                    }
+                    if cfg.staleness != crate::config::StalenessMode::None {
+                        // the fused artifact merges internally and never
+                        // sees the measured lag — refuse rather than
+                        // silently ignore the knob
+                        bail!(
+                            "staleness={} needs --backend native for K-Means \
+                             (the fused XLA artifact merges without lag weighting)",
+                            cfg.staleness.name()
                         );
                     }
                     let s = XlaStepper::from_config(cfg, &manifest, handle)?;

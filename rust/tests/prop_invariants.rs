@@ -4,7 +4,7 @@
 //! Each property runs `CASES` randomized instances; failures print the
 //! case seed so they replay deterministically.
 
-use asgd::config::{AggMode, CommMode, GateMode, Method, RacePolicy, TrainConfig};
+use asgd::config::{AggMode, CommMode, GateMode, Method, RacePolicy, StalenessMode, TrainConfig};
 use asgd::coordinator::run_training;
 use asgd::data::partition::partition;
 use asgd::data::synthetic;
@@ -423,6 +423,7 @@ fn prop_dirty_bitmap_covers_every_write_since_last_send() {
             k: 1,
             d: state_len,
             comm_chunks: n_blocks,
+            staleness: StalenessMode::None,
         };
         let mut w: Vec<f32> = (0..state_len).map(|_| rng.next_normal() as f32).collect();
         // reference copy of the state as of the last send, per block
@@ -449,7 +450,7 @@ fn prop_dirty_bitmap_covers_every_write_since_last_send() {
                     presence.set(nb, c);
                 }
             }
-            let out = update.apply(&mut w, &grad, &exts, &presence, &mut scratch);
+            let out = update.apply(&mut w, &grad, &exts, &presence, &mut scratch, &[], &mut Vec::new());
             dirty.mark_after_step(&phys, &grad, out.touched);
             // soundness: everything that moved since the last send is
             // in a dirty block

@@ -322,6 +322,99 @@ fn stress_sole_writer_recovers_fresh_after_group_chaos() {
     }
 }
 
+/// Iter-stamp arm (the staleness contract in docs/WIRE.md §iter): for
+/// any `Fresh` read the delivered iteration word is monotone
+/// non-decreasing per (block, sender) — a receiver computing the lag
+/// `own_iter - iter` can trust a later snapshot never time-travels
+/// backwards — and a coalesced group write is coherent: the newer
+/// seqlock version never arrives carrying an older iteration from the
+/// same sender, and after the storm a sole group put delivers its own
+/// iter on every covered block.
+#[test]
+fn stress_fresh_iter_stamps_never_regress_per_sender() {
+    const SENDERS: usize = 3;
+    for seed in [61u64, 62] {
+        let state_len = 96;
+        let chunks = 8;
+        let iters = 900u64;
+        let seg = Arc::new(Segment::new_chunked(0, 1, state_len, chunks));
+        let writers: Vec<_> = (1..=SENDERS as u32)
+            .map(|id| {
+                let seg = seg.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Xoshiro256pp::seed_from_u64(seed * 9000 + u64::from(id));
+                    let l = seg.layout();
+                    for i in 0..iters {
+                        // mix single-block puts and coalesced groups, so
+                        // both write paths feed the same iter word
+                        if rng.index(2) == 0 {
+                            let c = rng.index(l.n_chunks());
+                            let payload = vec![encode(id, i); l.chunk_len(c)];
+                            seg.write_block(0, c, id, i, &payload);
+                        } else {
+                            let logical = 1 + rng.index(l.n_chunks());
+                            let grouping = ChunkLayout::new(l.n_chunks(), logical);
+                            let g = rng.index(grouping.n_chunks());
+                            let blocks = grouping.bounds(g);
+                            let words = l.blocks_bounds(blocks.clone());
+                            let payload = vec![encode(id, i); words.len()];
+                            seg.write_group(0, blocks, id, i, &payload);
+                        }
+                    }
+                })
+            })
+            .collect();
+        let l = seg.layout();
+        let mut versions = vec![0u64; l.n_chunks()];
+        // last Fresh (version, iter) per (block, sender)
+        let mut last = vec![[None::<(u64, u64)>; SENDERS + 1]; l.n_chunks()];
+        let mut rng = Xoshiro256pp::seed_from_u64(seed * 10_000);
+        for _ in 0..4 * iters {
+            let c = rng.index(l.n_chunks());
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            let (out, sender, iter, v) = seg.read_block_into(0, c, versions[c], &mut buf);
+            assert!(v >= versions[c], "seed {seed}: version regressed");
+            versions[c] = v;
+            if out != ReadOutcome::Fresh {
+                continue;
+            }
+            // sender-purity ties the iter word to the payload: the
+            // decoded words must agree with the metadata it rode with
+            check_fresh_block(&buf, sender, iter, &format!("seed {seed} iter-arm"));
+            let s = sender as usize;
+            assert!(s <= SENDERS, "seed {seed}: unknown sender {s}");
+            if let Some((pv, pi)) = last[c][s] {
+                assert!(
+                    iter >= pi,
+                    "seed {seed}: Fresh iter regressed {pi} -> {iter} \
+                     (block {c}, sender {s}, versions {pv} -> {v})"
+                );
+            }
+            last[c][s] = Some((v, iter));
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        // group coherence after the storm: one sole coalesced put must
+        // deliver *its* iter on every covered block — a newer version
+        // never ships an older iteration alongside
+        let final_iter = iters + 5;
+        let words = l.blocks_bounds(0..l.n_chunks());
+        let payload = vec![encode(7, final_iter); words.len()];
+        seg.write_group(0, 0..l.n_chunks(), 7, final_iter, &payload);
+        for c in 0..l.n_chunks() {
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            let (out, sender, iter, _) = seg.read_block_into(0, c, 0, &mut buf);
+            assert_eq!(out, ReadOutcome::Fresh, "seed {seed}: block {c} not fresh after storm");
+            assert_eq!(
+                (sender, iter),
+                (7, final_iter),
+                "seed {seed}: group write delivered a foreign or older iter on block {c}"
+            );
+        }
+    }
+}
+
 /// Heartbeat arm: live publishers at wildly different cadences, one that
 /// pauses and resumes, one that dies for good, and one that dies and is
 /// reborn (incarnation bump) — all while an observer lease-polls with a
