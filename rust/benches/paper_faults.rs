@@ -17,13 +17,18 @@
 //!   run never waits on it and any suspicion resolves as false.
 //! * **kill-leader** — rank 0 (the trace owner and alg. 5 line 10's
 //!   return rank) dies; aggregation degrades to the survivors.
+//! * **lossy-network** — socket transport under a deterministic wire
+//!   plan: 10% frame loss on every link into rank 0 plus one mid-run
+//!   `netdown`+reconnect; convergence stays in the band of the
+//!   fault-free *socket* run and the reconnect rides the incarnation
+//!   mechanism (`reconnects >= 1`).
 //!
 //! Trajectories land in `BENCH_faults.json` (override with
 //! `ASGD_BENCH_FAULTS_OUT`), merged read-modify-write like
 //! `BENCH_hotpath.json`.  `ASGD_BENCH_QUICK=1` shrinks sizes and runs
 //! the crash + restart scenarios only (the CI smoke arm).
 
-use asgd::config::{AggMode, FaultPlan, TrainConfig};
+use asgd::config::{AggMode, FaultPlan, TrainConfig, TransportKind};
 use asgd::coordinator::run_training;
 use asgd::metrics::RunReport;
 use asgd::util::benchjson;
@@ -84,6 +89,11 @@ fn scenario_json(name: &str, obj: f64, baseline: f64, r: &RunReport) -> Json {
         .num("recovered", r.comm.recovered as f64)
         .num("dead_masked", r.comm.dead_masked as f64)
         .num("restores", r.comm.restores as f64)
+        .num("frames_failed", r.comm.frames_failed as f64)
+        .num("frames_retried", r.comm.frames_retried as f64)
+        .num("frames_dropped_injected", r.comm.frames_dropped_injected as f64)
+        .num("link_down", r.comm.link_down as f64)
+        .num("reconnects", r.comm.reconnects as f64)
         .build()
 }
 
@@ -168,6 +178,53 @@ fn main() {
     // (resp. 120) iterations, restored spans add re-executed work
     assert!(r.total_iters >= 4 * iters);
     scenarios.push(scenario_json("rolling_restarts", obj, baseline, &r));
+
+    // ---- lossy network (socket transport) ------------------------------
+    // the band is measured against the fault-free *socket* run: the
+    // question is what the injected loss costs, not what TCP costs
+    let mut sock = cfg.clone();
+    sock.transport = TransportKind::Socket;
+    let (sock_baseline, sock_r) = run3(&sock);
+    println!(
+        "   socket-baseline : objective {sock_baseline:.5} ({} iters)",
+        sock_r.total_iters
+    );
+    let mut lossy = sock.clone();
+    lossy.faults = FaultPlan::parse(&format!(
+        "netdrop@1-0:0:10,netdrop@2-0:0:10,netdrop@3-0:0:10,netdown@1-0:{}:40",
+        iters / 2
+    ))
+    .unwrap();
+    let (obj, r) = run3(&lossy);
+    println!(
+        "   lossy-network   : objective {obj:.5} ({:.2}x socket baseline), dropped {}, \
+         failed {}, link-down {}, reconnects {}",
+        obj / sock_baseline,
+        r.comm.frames_dropped_injected,
+        r.comm.frames_failed,
+        r.comm.link_down,
+        r.comm.reconnects
+    );
+    assert_band("lossy-network", obj, sock_baseline);
+    assert!(
+        r.comm.frames_dropped_injected > 0,
+        "the 10% drop plan must claim at least one frame"
+    );
+    assert!(
+        r.comm.frames_failed + r.comm.frames_dropped_injected > 0,
+        "loss must be measured, never silent"
+    );
+    assert!(r.comm.link_down >= 1, "netdown must condemn the link");
+    assert!(
+        r.comm.reconnects >= 1,
+        "the downed link must rejoin under a new incarnation"
+    );
+    assert!(
+        r.comm.reconnects <= r.comm.link_down,
+        "a link can only be re-established after it went down"
+    );
+    assert_resolution_identity("lossy-network", &r);
+    scenarios.push(scenario_json("lossy_network", obj, sock_baseline, &r));
 
     if !quick {
         // ---- one 10x straggler ------------------------------------------

@@ -266,7 +266,10 @@ TRAIN OPTIONS (defaults in parentheses):
   --transport-dir DIR    shmem: run directory for the mapped segments
                          (fresh /dev/shm dir per run)
   --faults PLAN          fault injection, e.g. \"kill@3:50, restart@1:30:50,
-                         pause@0:20:100, straggle@2:10:2000\" (KIND@RANK:ITER[:PARAM])
+                         pause@0:20:100, straggle@2:10:2000\" (KIND@RANK:ITER[:PARAM]);
+                         wire faults (socket transport): \"netdrop@1-0:20:10,
+                         netdelay@2-0:0:2, netdup@1-2:0:50, nettrunc@0-1:40,
+                         netdown@3-0:60:40\" (NETKIND@FROM-TO:ITER[:PARAM])
   --gate G               full | per-center | off                (full)
   --aggregation A        first | tree-mean                      (first)
   --backend B            native | xla                           (native)
@@ -361,6 +364,16 @@ mod tests {
         assert!(train_config(&parse("train --faults boom@1:2")).is_err());
         assert!(train_config(&parse("train --workers 4 --faults kill@4:10")).is_err());
         assert!(train_config(&parse("train --faults restart@1:10")).is_err()); // no ckpt
+        // wire-level events ride the same flag, gated on the socket transport
+        let cfg = train_config(&parse(
+            "train --workers 4 --transport socket --faults netdrop@1-0:0:10,netdown@2-0:50:40",
+        ))
+        .unwrap();
+        assert_eq!(cfg.faults.net_events.len(), 2);
+        assert!(
+            train_config(&parse("train --workers 4 --faults netdrop@1-0:0:10")).is_err(),
+            "net faults need a frame layer (socket)"
+        );
     }
 
     #[test]

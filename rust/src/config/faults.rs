@@ -37,10 +37,40 @@
 //!   "seeded straggler": reproducible in distribution, not in exact
 //!   nanoseconds).
 //!
+//! Wire-level events extend the same DSL to the *links* of the socket
+//! transport (the one backend where real message loss can happen).  A
+//! link is addressed `FROM-TO` (the ordered sender->receiver pair) and
+//! the iteration is the *sender's* frame-stamp watermark, so activation
+//! is deterministic in structure like the worker events above:
+//!
+//! ```text
+//! faults = "netdrop@1-0:20:10, netdelay@2-0:0:2, netdup@1-2:0:50,
+//!           nettrunc@0-1:40, netdown@3-0:60:40"
+//! ```
+//!
+//! * `netdrop@FROM-TO:ITER:PCT` — from the sender's iteration `ITER`
+//!   on, drop `PCT`% of data frames on that link (seeded per-link RNG;
+//!   reproducible in distribution).  Dropped frames tick
+//!   `frames_dropped_injected` on the sender's ledger.
+//! * `netdelay@FROM-TO:ITER:MS` — from `ITER` on, delay every frame on
+//!   the link by `MS` milliseconds before it reaches the wire.
+//! * `netdup@FROM-TO:ITER:PCT` — from `ITER` on, write `PCT`% of data
+//!   frames twice; the seqlock versioning makes the duplicate apply
+//!   idempotently (same `(sender, iter)` payload, one extra write).
+//! * `nettrunc@FROM-TO:ITER` — one-shot: the first data frame at or
+//!   after `ITER` is truncated to half its body (with a consistent
+//!   length prefix).  The receiver refuses the malformed frame loudly
+//!   and drops the connection — exercising the reconnect path.
+//! * `netdown@FROM-TO:ITER[:MS]` — one-shot: the link is condemned at
+//!   `ITER` and every reconnect attempt fails for `MS` milliseconds
+//!   (default 0), after which the link re-offers HELLO and rejoins
+//!   under a bumped incarnation (`reconnects` ticks).
+//!
 //! [`crate::config::TrainConfig::validate`] refuses out-of-range ranks,
-//! `restart` without checkpointing, plans that kill every rank, and
-//! fault injection under the blocking BATCH baseline — the same
-//! refuse-loudly policy as `send_interval == 0`.
+//! `restart` without checkpointing, plans that kill every rank, `net*`
+//! events on any transport but `socket`, and fault injection under the
+//! blocking BATCH baseline — the same refuse-loudly policy as
+//! `send_interval == 0`.
 
 use anyhow::{bail, Context, Result};
 
@@ -86,29 +116,134 @@ pub struct FaultEvent {
     pub kind: FaultKind,
 }
 
+/// What an injected wire-level fault does to a link's frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetFaultKind {
+    /// Drop `pct`% of data frames (modal: active to end of run).
+    Drop { pct: u8 },
+    /// Delay every frame by `ms` milliseconds (modal).
+    Delay { ms: u64 },
+    /// Write `pct`% of data frames twice (modal).
+    Dup { pct: u8 },
+    /// Truncate one data frame to half its body (one-shot; the receiver
+    /// refuses it loudly and drops the connection).
+    Trunc,
+    /// Condemn the link; reconnect attempts fail for `outage_ms`
+    /// (one-shot).
+    Down { outage_ms: u64 },
+}
+
+impl NetFaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetFaultKind::Drop { .. } => "netdrop",
+            NetFaultKind::Delay { .. } => "netdelay",
+            NetFaultKind::Dup { .. } => "netdup",
+            NetFaultKind::Trunc => "nettrunc",
+            NetFaultKind::Down { .. } => "netdown",
+        }
+    }
+}
+
+/// One scheduled wire-level fault on the ordered `from -> to` link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NetFaultEvent {
+    pub from: usize,
+    pub to: usize,
+    /// Activation watermark: the event arms once the link has carried a
+    /// data frame stamped with the *sender's* iteration >= `at_iter`.
+    pub at_iter: u64,
+    pub kind: NetFaultKind,
+}
+
 /// An ordered fault-injection plan (empty = fault-free run).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct FaultPlan {
     pub events: Vec<FaultEvent>,
+    /// Wire-level events, applied at the socket transport's frame layer.
+    pub net_events: Vec<NetFaultEvent>,
 }
 
 impl FaultPlan {
     pub fn is_empty(&self) -> bool {
-        self.events.is_empty()
+        self.events.is_empty() && self.net_events.is_empty()
     }
 
     /// Parse the DSL (see module docs).  Whitespace around commas is
     /// ignored; an empty string is the empty plan.
     pub fn parse(s: &str) -> Result<Self> {
         let mut events = Vec::new();
+        let mut net_events = Vec::new();
         for part in s.split(',') {
             let part = part.trim();
             if part.is_empty() {
                 continue;
             }
-            events.push(Self::parse_event(part).with_context(|| format!("fault {part:?}"))?);
+            if part.starts_with("net") {
+                net_events
+                    .push(Self::parse_net_event(part).with_context(|| format!("fault {part:?}"))?);
+            } else {
+                events.push(Self::parse_event(part).with_context(|| format!("fault {part:?}"))?);
+            }
         }
-        Ok(Self { events })
+        Ok(Self { events, net_events })
+    }
+
+    fn parse_net_event(part: &str) -> Result<NetFaultEvent> {
+        let (kind_s, addr) = part
+            .split_once('@')
+            .context("expected NETKIND@FROM-TO:ITER[:PARAM]")?;
+        let mut fields = addr.split(':');
+        let link = fields.next().context("missing link address")?;
+        let (from_s, to_s) = link
+            .split_once('-')
+            .context("link must be FROM-TO (an ordered sender-receiver pair)")?;
+        let from: usize = from_s.parse().context("link FROM rank must be an integer")?;
+        let to: usize = to_s.parse().context("link TO rank must be an integer")?;
+        let at_iter: u64 = fields
+            .next()
+            .context("missing iteration (NETKIND@FROM-TO:ITER)")?
+            .parse()
+            .context("iteration must be an integer")?;
+        let param = fields.next();
+        if fields.next().is_some() {
+            bail!("too many ':' fields");
+        }
+        let parse_param = |what: &str| -> Result<u64> {
+            param
+                .with_context(|| format!("{kind_s} requires a parameter ({what})"))?
+                .parse()
+                .with_context(|| format!("{what} must be an integer"))
+        };
+        let parse_pct = |what: &str| -> Result<u8> {
+            let pct = parse_param(what)?;
+            if !(1..=100).contains(&pct) {
+                // 0% would be a dormant event, > 100% a lie
+                bail!("{what} must be in 1..=100 (got {pct})");
+            }
+            Ok(pct as u8)
+        };
+        let kind = match kind_s {
+            "netdrop" => NetFaultKind::Drop { pct: parse_pct("drop percentage")? },
+            "netdelay" => NetFaultKind::Delay { ms: parse_param("per-frame delay (ms)")? },
+            "netdup" => NetFaultKind::Dup { pct: parse_pct("duplication percentage")? },
+            "nettrunc" => {
+                if param.is_some() {
+                    bail!("nettrunc takes no parameter");
+                }
+                NetFaultKind::Trunc
+            }
+            "netdown" => NetFaultKind::Down {
+                outage_ms: match param {
+                    Some(p) => p.parse().context("outage duration (ms) must be an integer")?,
+                    None => 0,
+                },
+            },
+            other => bail!(
+                "unknown fault kind {other:?} (netdrop|netdelay|netdup|nettrunc|netdown)"
+            ),
+        };
+        Ok(NetFaultEvent { from, to, at_iter, kind })
     }
 
     fn parse_event(part: &str) -> Result<FaultEvent> {
@@ -162,23 +297,46 @@ impl FaultPlan {
 
     /// Canonical DSL round-trip (logs, `describe()`, JSON provenance).
     pub fn to_dsl(&self) -> String {
-        self.events
-            .iter()
-            .map(|e| {
-                let FaultEvent { rank, at_iter, kind } = e;
-                match kind {
-                    FaultKind::Kill => format!("kill@{rank}:{at_iter}"),
-                    FaultKind::Restart { after_ms } => {
-                        format!("restart@{rank}:{at_iter}:{after_ms}")
-                    }
-                    FaultKind::Pause { ms } => format!("pause@{rank}:{at_iter}:{ms}"),
-                    FaultKind::Straggle { delay_us } => {
-                        format!("straggle@{rank}:{at_iter}:{delay_us}")
-                    }
+        let worker = self.events.iter().map(|e| {
+            let FaultEvent { rank, at_iter, kind } = e;
+            match kind {
+                FaultKind::Kill => format!("kill@{rank}:{at_iter}"),
+                FaultKind::Restart { after_ms } => {
+                    format!("restart@{rank}:{at_iter}:{after_ms}")
                 }
-            })
-            .collect::<Vec<_>>()
-            .join(",")
+                FaultKind::Pause { ms } => format!("pause@{rank}:{at_iter}:{ms}"),
+                FaultKind::Straggle { delay_us } => {
+                    format!("straggle@{rank}:{at_iter}:{delay_us}")
+                }
+            }
+        });
+        let net = self.net_events.iter().map(|e| {
+            let NetFaultEvent { from, to, at_iter, kind } = e;
+            match kind {
+                NetFaultKind::Drop { pct } => format!("netdrop@{from}-{to}:{at_iter}:{pct}"),
+                NetFaultKind::Delay { ms } => format!("netdelay@{from}-{to}:{at_iter}:{ms}"),
+                NetFaultKind::Dup { pct } => format!("netdup@{from}-{to}:{at_iter}:{pct}"),
+                NetFaultKind::Trunc => format!("nettrunc@{from}-{to}:{at_iter}"),
+                NetFaultKind::Down { outage_ms } => {
+                    format!("netdown@{from}-{to}:{at_iter}:{outage_ms}")
+                }
+            }
+        });
+        worker.chain(net).collect::<Vec<_>>().join(",")
+    }
+
+    /// The `from -> to` link's wire-level events, sorted by activation
+    /// iteration (ties keep plan order).  The link's sender thread arms
+    /// them front to back against its frame-stamp watermark.
+    pub fn for_link(&self, from: usize, to: usize) -> Vec<NetFaultEvent> {
+        let mut evs: Vec<NetFaultEvent> = self
+            .net_events
+            .iter()
+            .copied()
+            .filter(|e| e.from == from && e.to == to)
+            .collect();
+        evs.sort_by_key(|e| e.at_iter);
+        evs
     }
 
     /// This rank's events, sorted by firing iteration (ties keep plan
@@ -267,6 +425,85 @@ mod tests {
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must be refused");
         }
+    }
+
+    #[test]
+    fn net_dsl_roundtrips() {
+        let s = "netdrop@1-0:20:10,netdelay@2-0:0:2,netdup@1-2:0:50,nettrunc@0-1:40,\
+                 netdown@3-0:60:40";
+        let plan = FaultPlan::parse(s).unwrap();
+        assert!(plan.events.is_empty());
+        assert!(!plan.is_empty(), "net-only plans are still plans");
+        assert_eq!(plan.net_events.len(), 5);
+        assert_eq!(
+            plan.net_events[0],
+            NetFaultEvent { from: 1, to: 0, at_iter: 20, kind: NetFaultKind::Drop { pct: 10 } }
+        );
+        assert_eq!(
+            plan.net_events[1],
+            NetFaultEvent { from: 2, to: 0, at_iter: 0, kind: NetFaultKind::Delay { ms: 2 } }
+        );
+        assert_eq!(
+            plan.net_events[2],
+            NetFaultEvent { from: 1, to: 2, at_iter: 0, kind: NetFaultKind::Dup { pct: 50 } }
+        );
+        assert_eq!(
+            plan.net_events[3],
+            NetFaultEvent { from: 0, to: 1, at_iter: 40, kind: NetFaultKind::Trunc }
+        );
+        assert_eq!(
+            plan.net_events[4],
+            NetFaultEvent {
+                from: 3,
+                to: 0,
+                at_iter: 60,
+                kind: NetFaultKind::Down { outage_ms: 40 }
+            }
+        );
+        assert_eq!(FaultPlan::parse(&plan.to_dsl()).unwrap(), plan);
+        // mixed worker + net plans round-trip too (worker events first)
+        let mixed = FaultPlan::parse("netdrop@1-0:0:5,kill@2:10").unwrap();
+        assert_eq!(mixed.events.len(), 1);
+        assert_eq!(mixed.net_events.len(), 1);
+        assert_eq!(mixed.to_dsl(), "kill@2:10,netdrop@1-0:0:5");
+        // default netdown outage
+        let p = FaultPlan::parse("netdown@0-1:5").unwrap();
+        assert_eq!(p.net_events[0].kind, NetFaultKind::Down { outage_ms: 0 });
+    }
+
+    #[test]
+    fn bad_net_dsl_is_refused() {
+        for bad in [
+            "netboom@1-0:5:1",   // unknown net kind
+            "netdrop@1:5:10",    // rank, not a link
+            "netdrop@1-0:5",     // drop needs a pct
+            "netdrop@1-0:5:0",   // 0% is a dormant event
+            "netdrop@1-0:5:101", // > 100%
+            "netdup@1-0:5:200",  // > 100%
+            "netdelay@1-0:5",    // delay needs ms
+            "nettrunc@1-0:5:9",  // trunc takes no parameter
+            "netdown@1-0:5:x",   // non-integer outage
+            "netdrop@x-0:5:10",  // non-integer FROM
+            "netdrop@1-0:5:10:9", // too many fields
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must be refused");
+        }
+    }
+
+    #[test]
+    fn per_link_views_sort_and_filter() {
+        let plan =
+            FaultPlan::parse("netdrop@1-0:40:10,netdelay@1-0:10:3,netdup@2-0:5:50").unwrap();
+        let l10 = plan.for_link(1, 0);
+        assert_eq!(l10.len(), 2);
+        assert_eq!(l10[0].at_iter, 10);
+        assert_eq!(l10[1].at_iter, 40);
+        assert!(plan.for_link(0, 1).is_empty(), "links are ordered pairs");
+        assert_eq!(plan.for_link(2, 0).len(), 1);
+        // net events never touch the worker-event machinery
+        assert!(plan.for_rank(1).is_empty());
+        assert!(plan.killed_ranks().is_empty());
+        assert!(!plan.needs_checkpoints());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 pub mod faults;
 pub mod toml;
 
-pub use faults::{FaultEvent, FaultKind, FaultPlan};
+pub use faults::{FaultEvent, FaultKind, FaultPlan, NetFaultEvent, NetFaultKind};
 
 use crate::util::json::JsonBuilder;
 use anyhow::{bail, Context, Result};
@@ -820,6 +820,52 @@ impl TrainConfig {
                     self.workers
                 );
             }
+            for e in &self.faults.net_events {
+                if self.transport != TransportKind::Socket {
+                    // only the socket backend has a frame layer to
+                    // inject into; on direct-store transports the event
+                    // would lie dormant — refused like any other
+                    bail!(
+                        "net fault {}@{}-{}:{} needs transport=socket \
+                         (transport={} has no frame layer)",
+                        e.kind.name(),
+                        e.from,
+                        e.to,
+                        e.at_iter,
+                        self.transport.name()
+                    );
+                }
+                if e.from >= self.workers || e.to >= self.workers {
+                    bail!(
+                        "net fault {}@{}-{}:{} addresses a link outside 0..{} workers",
+                        e.kind.name(),
+                        e.from,
+                        e.to,
+                        e.at_iter,
+                        self.workers
+                    );
+                }
+                if e.from == e.to {
+                    bail!(
+                        "net fault {}@{}-{}:{} addresses the diagonal — a rank has no \
+                         link to itself",
+                        e.kind.name(),
+                        e.from,
+                        e.to,
+                        e.at_iter
+                    );
+                }
+                if e.at_iter >= self.iters as u64 {
+                    bail!(
+                        "net fault {}@{}-{}:{} never fires (iterations run 0..{})",
+                        e.kind.name(),
+                        e.from,
+                        e.to,
+                        e.at_iter,
+                        self.iters
+                    );
+                }
+            }
         }
         let blocky = matches!(
             self.comm,
@@ -1401,6 +1447,58 @@ mod tests {
         c.faults = FaultPlan::parse("kill@1:10").unwrap();
         let err = c.validate().unwrap_err();
         assert!(format!("{err}").contains("batch"), "{err:#}");
+    }
+
+    /// Net fault events follow the same dormant-knob policy: they only
+    /// mean something at the socket transport's frame layer, and an
+    /// event that addresses a bad link or can never fire is refused.
+    #[test]
+    fn validation_gates_net_fault_events() {
+        let base = || {
+            let mut c = TrainConfig::asgd_default(10, 10, 500);
+            c.workers = 4;
+            c.iters = 100;
+            c.transport = TransportKind::Socket;
+            c
+        };
+        let mut c = base();
+        c.faults = FaultPlan::parse("netdrop@1-0:10:10,netdown@2-0:50:40").unwrap();
+        c.validate().unwrap();
+
+        // a frame-layer event without a frame layer is dormant: refused
+        let mut c = base();
+        c.transport = TransportKind::Inproc;
+        c.faults = FaultPlan::parse("netdrop@1-0:10:10").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("transport=socket"), "{err:#}");
+
+        // out-of-range link ranks, the diagonal, and never-firing events
+        let mut c = base();
+        c.faults = FaultPlan::parse("netdrop@4-0:10:10").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.faults = FaultPlan::parse("netdrop@1-4:10:10").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.faults = FaultPlan::parse("netdrop@1-1:10:10").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("diagonal"), "{err:#}");
+        let mut c = base();
+        c.faults = FaultPlan::parse("netdrop@1-0:100:10").unwrap();
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("never fires"), "{err:#}");
+
+        // the DSL threads through describe()/to_json() like worker events
+        let c = {
+            let mut c = base();
+            c.faults = FaultPlan::parse("netdown@2-0:50:40").unwrap();
+            c
+        };
+        assert!(c.describe().contains("faults=[netdown@2-0:50:40]"));
+        assert_eq!(
+            c.to_json().get("faults").unwrap().as_str(),
+            Some("netdown@2-0:50:40")
+        );
     }
 
     #[test]

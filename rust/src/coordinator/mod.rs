@@ -50,8 +50,16 @@ pub(crate) fn build_world(cfg: &TrainConfig, state_len: usize) -> Result<Arc<Wor
         }
         TransportKind::Socket => {
             let stats = Arc::new(WorldStats::new(n));
-            let transport = Socket::loopback(n, n_slots, state_len, chunks, stats)
-                .context("building loopback socket transport")?;
+            let transport = Socket::loopback_with_faults(
+                n,
+                n_slots,
+                state_len,
+                chunks,
+                stats,
+                cfg.faults.net_events.clone(),
+                cfg.seed,
+            )
+            .context("building loopback socket transport")?;
             Arc::new(World::with_transport(transport, topology))
         }
         TransportKind::Shmem => {

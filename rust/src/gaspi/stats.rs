@@ -76,6 +76,31 @@ pub struct CommStats {
     /// Elastic supervision: times this rank's worker was restored from
     /// its last checkpoint and re-spawned into the same segment.
     pub restores: Counter,
+    /// Socket transport: frames this rank *issued* that provably never
+    /// reached the wire — refused at a Down link, dropped by a full
+    /// outbound queue, or lost to a write failure that no retry could
+    /// recover.  Sender-side puts still tick `sent`/`chunk_sent` (those
+    /// count issues, not deliveries); this counter is the measured gap.
+    pub frames_failed: Counter,
+    /// Socket transport: frames re-sent over a freshly established
+    /// connection after their first write failed (the Degraded state's
+    /// recovery path).  A retried frame that lands ticks only this, not
+    /// `frames_failed`.
+    pub frames_retried: Counter,
+    /// Socket transport: frames discarded (or deliberately truncated) by
+    /// an injected wire-level fault (`netdrop`/`nettrunc` events) — the
+    /// deterministic loss of a `FaultPlan`, kept apart from organic
+    /// failures so scenarios can assert both independently.
+    pub frames_dropped_injected: Counter,
+    /// Socket transport: times one of this rank's outgoing links was
+    /// declared Down (connection condemned after a failed write+retry or
+    /// an injected `netdown`).  One tick per transition, not per frame.
+    pub link_down: Counter,
+    /// Socket transport: times one of this rank's Down links was
+    /// re-established — connect + HELLO re-offer accepted — after which
+    /// the rank rejoins under a bumped heartbeat incarnation (peers see
+    /// a rebirth, not a silent gap).
+    pub reconnects: Counter,
     /// Per-peer staleness histogram over the deliveries this rank
     /// admitted: each Fresh (or accepted-torn) block's lag — the
     /// receiver's iteration minus the sender's `F_ITER` stamp — lands in
@@ -173,6 +198,11 @@ pub struct StatsSnapshot {
     pub gossip_seeded: u64,
     pub dead_masked: u64,
     pub restores: u64,
+    pub frames_failed: u64,
+    pub frames_retried: u64,
+    pub frames_dropped_injected: u64,
+    pub link_down: u64,
+    pub reconnects: u64,
 }
 
 impl CommStats {
@@ -197,6 +227,11 @@ impl CommStats {
             gossip_seeded: self.gossip_seeded.get(),
             dead_masked: self.dead_masked.get(),
             restores: self.restores.get(),
+            frames_failed: self.frames_failed.get(),
+            frames_retried: self.frames_retried.get(),
+            frames_dropped_injected: self.frames_dropped_injected.get(),
+            link_down: self.link_down.get(),
+            reconnects: self.reconnects.get(),
         }
     }
 }
@@ -246,6 +281,11 @@ impl WorldStats {
             t.gossip_seeded += s.gossip_seeded;
             t.dead_masked += s.dead_masked;
             t.restores += s.restores;
+            t.frames_failed += s.frames_failed;
+            t.frames_retried += s.frames_retried;
+            t.frames_dropped_injected += s.frames_dropped_injected;
+            t.link_down += s.link_down;
+            t.reconnects += s.reconnects;
         }
         t
     }
@@ -394,5 +434,24 @@ mod tests {
         assert_eq!(t.restores, 1);
         // every resolved suspicion (false or rebirth) had to be raised
         assert!(t.false_suspicion + t.recovered <= t.suspected);
+    }
+
+    #[test]
+    fn frame_and_link_counters_aggregate() {
+        let ws = WorldStats::new(3);
+        ws.rank(0).frames_failed.add(3);
+        ws.rank(1).frames_failed.add(1);
+        ws.rank(0).frames_retried.add(2);
+        ws.rank(1).frames_dropped_injected.add(5);
+        ws.rank(2).link_down.add(1);
+        ws.rank(2).reconnects.add(1);
+        let t = ws.total();
+        assert_eq!(t.frames_failed, 4);
+        assert_eq!(t.frames_retried, 2);
+        assert_eq!(t.frames_dropped_injected, 5);
+        assert_eq!(t.link_down, 1);
+        assert_eq!(t.reconnects, 1);
+        // a link can only be re-established after it went down
+        assert!(t.reconnects <= t.link_down);
     }
 }

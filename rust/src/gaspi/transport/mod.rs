@@ -28,6 +28,19 @@
 //! identities on every backend once [`Transport::quiesce`] has drained
 //! in-flight frames.
 //!
+//! On a lossy backend a third class closes the gap between the two:
+//! `sent`/`chunk_sent` count *issues*, and a frame that provably never
+//! reached the wire (refused at a dead link, dropped by a full outbound
+//! queue, or lost to a write failure no retry recovered) ticks
+//! `frames_failed` on the *sender's* ledger at the moment the loss is
+//! known.  Deterministic `FaultPlan` loss ticks
+//! `frames_dropped_injected` instead, so scenarios can assert injected
+//! and organic loss independently; `frames_retried`, `link_down` and
+//! `reconnects` count the supervision traffic itself.  The direct-store
+//! backends never tick any of these — a store cannot fail — so the
+//! issue-equals-delivery identity of the original contract is exactly
+//! the `frames_failed == 0` special case.
+//!
 //! [`World`]: crate::gaspi::World
 
 pub mod inproc;

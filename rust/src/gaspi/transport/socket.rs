@@ -33,17 +33,48 @@
 //! against reordering.  Puts are asynchronous: the sender returns once
 //! the frame is queued (like an RDMA doorbell), and [`Socket::quiesce`]
 //! drains the in-flight window before stats are asserted.
+//!
+//! # Link supervision (`docs/WIRE.md` §"Link lifecycle")
+//!
+//! Every ordered peer pair is a supervised [`Link`]: a bounded outbound
+//! queue drained by a dedicated sender thread running a small state
+//! machine — `Up -> Degraded -> Down -> Reconnecting -> Up`.  A failed
+//! write condemns the stream (a partial length-prefix write would
+//! desync framing, so a broken connection is never written again),
+//! takes one immediate reconnect-and-resend attempt (`Degraded`,
+//! `frames_retried`), and on failure declares the link `Down`
+//! (`link_down`) and enters exponential backoff with jitter.  A
+//! successful reconnect re-offers `HELLO` — re-validating wire version
+//! and world shape — and rejoins under a **bumped heartbeat
+//! incarnation** (`reconnects`), so the lease machinery in
+//! [`crate::gaspi::liveness`] sees a rebirth, never a silent gap.  A
+//! link whose backoff budget is exhausted is permanently dead: its
+//! frames are skipped and counted (`frames_failed`) and training
+//! continues on the survivors, exactly the "lost messages" tolerance of
+//! §4.4.
+//!
+//! Deterministic wire-level faults (`netdrop`/`netdelay`/`netdup`/
+//! `nettrunc`/`netdown` events of a [`crate::config::FaultPlan`]) are
+//! injected here, in the sender thread, at the frame layer — the one
+//! place every outgoing byte passes through — armed against the
+//! sender's own iteration watermark and counted on the sender's ledger
+//! (`frames_dropped_injected`).
 
 use super::{apply_block, apply_group, apply_state, Transport};
+use crate::config::NetFaultEvent;
+use crate::config::NetFaultKind;
 use crate::gaspi::segment::{Segment, WIRE_MAGIC, WIRE_VERSION};
 use crate::gaspi::stats::WorldStats;
+use crate::util::rng::Xoshiro256pp;
 use anyhow::{bail, ensure, Context, Result};
-use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::ops::Range;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 const FRAME_HELLO: u8 = 1;
 const FRAME_FULL: u8 = 2;
@@ -51,6 +82,129 @@ const FRAME_GROUP: u8 = 3;
 const FRAME_META: u8 = 4;
 const HELLO_ACCEPT: u8 = 0xA5;
 const HELLO_REJECT: u8 = 0x5A;
+
+/// Outbound frames a link buffers before backpressure-by-loss kicks in
+/// (an overflowing queue drops the new frame and ticks `frames_failed`
+/// — bounded memory beats an unbounded pile-up behind a slow link).
+const QUEUE_CAP: usize = 1024;
+/// Per-attempt connect deadline (loopback connects in microseconds; a
+/// real peer that takes longer than this is treated as unreachable).
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(1000);
+/// Read deadline on the HELLO verdict / HELLO frame exchange.
+const HELLO_TIMEOUT: Duration = Duration::from_secs(5);
+/// Per-write deadline: a send that cannot make progress for this long
+/// counts as a write failure and condemns the stream.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(5);
+/// Applier read poll: how often a parked reader wakes to check the
+/// shutdown flag (an idle link has no deadline — silence is legal).
+const READ_POLL: Duration = Duration::from_millis(100);
+/// Mid-frame stall budget: once a frame's first byte arrived, the rest
+/// must follow within this window or the peer is half-open and the
+/// connection is dropped (satellite: no applier parks forever).
+const READ_STALL: Duration = Duration::from_secs(10);
+/// Reconnect backoff: exponential from `BASE`, capped at `MAX`, with
+/// ±50% jitter, for at most `ATTEMPTS` tries before the link is
+/// declared permanently dead.
+const RECONNECT_BASE_MS: u64 = 10;
+const RECONNECT_MAX_MS: u64 = 500;
+const RECONNECT_ATTEMPTS: u32 = 20;
+/// Quiesce gives the world this long to drain before logging and
+/// returning anyway (degrade loudly, never hang).
+const QUIESCE_DEADLINE: Duration = Duration::from_secs(30);
+/// Under injected or organic loss the written/applied identity cannot
+/// hold; quiesce instead waits for the applied count to go quiet for
+/// this long.
+const SETTLE_WINDOW: Duration = Duration::from_millis(150);
+
+/// The sender thread's view of its link: drives logging only — the
+/// *observable* contract is the counter protocol (`link_down`,
+/// `reconnects`, `frames_retried`, `frames_failed`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum LinkState {
+    Up,
+    Degraded,
+    Down,
+    Reconnecting,
+}
+
+/// One queued outbound frame; `iter` is the sender's iteration stamp
+/// for data frames (`None` for META), driving fault-event activation.
+struct QFrame {
+    body: Vec<u8>,
+    iter: Option<u64>,
+}
+
+struct LinkQ {
+    frames: VecDeque<QFrame>,
+    /// Reconnect budget exhausted: the link is permanently down, new
+    /// frames are refused at [`Socket::send`] (ticking `frames_failed`).
+    dead: bool,
+    /// Transport shutdown: the sender drains what is queued and exits.
+    shutdown: bool,
+    /// Sender thread parked with an empty queue (quiesce phase 1).
+    idle: bool,
+}
+
+/// A supervised ordered `from -> to` link: the bounded queue plus the
+/// address its sender thread reconnects to.
+struct Link {
+    from: usize,
+    to: usize,
+    addr: SocketAddr,
+    q: Mutex<LinkQ>,
+    cv: Condvar,
+}
+
+impl Link {
+    fn new(from: usize, to: usize, addr: SocketAddr) -> Self {
+        Self {
+            from,
+            to,
+            addr,
+            q: Mutex::new(LinkQ {
+                frames: VecDeque::new(),
+                dead: false,
+                shutdown: false,
+                idle: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// World shape carried by every HELLO (initial and re-offer).  Pinned
+/// at construction: adaptive relayouts change the *logical* chunk
+/// count, not the handshake contract, so a reconnect after a relayout
+/// still validates against the shape the world was built with.
+#[derive(Clone, Copy)]
+struct Shape {
+    n_slots: usize,
+    state_len: usize,
+    chunks: usize,
+}
+
+/// Everything a sender thread needs to supervise its link.
+struct SenderCtx {
+    link: Arc<Link>,
+    /// The sending rank's own segment — reconnect bumps its heartbeat
+    /// incarnation so peers see a rebirth.
+    seg_from: Arc<Segment>,
+    stats: Arc<WorldStats>,
+    frames_written: Arc<AtomicU64>,
+    shutdown: Arc<AtomicBool>,
+    shape: Shape,
+}
+
+/// Everything an applier thread needs to serve one inbound connection.
+struct ApplyCtx {
+    to: usize,
+    shape: Shape,
+    segments: Vec<Arc<Segment>>,
+    stats: Arc<WorldStats>,
+    applied: Arc<AtomicU64>,
+    local: Arc<Vec<bool>>,
+    shutdown: Arc<AtomicBool>,
+}
 
 /// TCP-framed transport hosting all ranks of a loopback world in one
 /// process: every put really crosses the kernel's TCP stack, every
@@ -61,17 +215,24 @@ const HELLO_REJECT: u8 = 0x5A;
 pub struct Socket {
     segments: Vec<Arc<Segment>>,
     stats: Arc<WorldStats>,
-    /// Outgoing links `[from][to]`; `None` on the diagonal.
-    links: Vec<Vec<Option<Mutex<TcpStream>>>>,
-    frames_sent: AtomicU64,
+    /// Supervised links `[from][to]`; `None` on the diagonal.
+    links: Vec<Vec<Option<Arc<Link>>>>,
+    /// Frames that actually reached a healthy stream (the quiesce
+    /// target); an injected or organic loss deliberately does not tick
+    /// this, which is how quiesce knows the identity cannot hold.
+    frames_written: Arc<AtomicU64>,
     frames_applied: Arc<AtomicU64>,
-    appliers: Mutex<Vec<JoinHandle<()>>>,
+    shutdown: Arc<AtomicBool>,
+    senders: Mutex<Vec<JoinHandle<()>>>,
+    acceptors: Mutex<Vec<JoinHandle<()>>>,
+    appliers: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl Socket {
     /// Build a full-mesh loopback world: one listener per rank on
-    /// `127.0.0.1`, one connection per ordered rank pair, one applier
-    /// thread per connection.  Fails loudly if any HELLO is refused.
+    /// `127.0.0.1`, one supervised connection per ordered rank pair,
+    /// one applier thread per connection.  Fails loudly if any initial
+    /// HELLO is refused.
     pub fn loopback(
         ranks: usize,
         n_slots: usize,
@@ -79,49 +240,59 @@ impl Socket {
         chunks: usize,
         stats: Arc<WorldStats>,
     ) -> Result<Arc<Self>> {
+        Self::loopback_with_faults(ranks, n_slots, state_len, chunks, stats, Vec::new(), 0)
+    }
+
+    /// [`Self::loopback`] plus a deterministic wire-level fault plan:
+    /// each link's sender thread arms its own events against its frame
+    /// watermark, rolling a per-link generator seeded from `seed` (so a
+    /// plan reproduces in distribution across runs of the same seed).
+    pub fn loopback_with_faults(
+        ranks: usize,
+        n_slots: usize,
+        state_len: usize,
+        chunks: usize,
+        stats: Arc<WorldStats>,
+        net_events: Vec<NetFaultEvent>,
+        seed: u64,
+    ) -> Result<Arc<Self>> {
+        let shape = Shape { n_slots, state_len, chunks };
         let segments: Vec<Arc<Segment>> = (0..ranks)
             .map(|r| Arc::new(Segment::new_chunked(r, n_slots, state_len, chunks)))
             .collect();
+        let frames_written = Arc::new(AtomicU64::new(0));
         let frames_applied = Arc::new(AtomicU64::new(0));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let appliers = Arc::new(Mutex::new(Vec::new()));
         // every rank is hosted here, so appliers drop META for all ranks
         let local = Arc::new(vec![true; ranks]);
 
+        // one long-lived acceptor per rank: initial connections and
+        // later reconnects are served by the same loop
         let mut addrs = Vec::with_capacity(ranks);
         let mut acceptors = Vec::with_capacity(ranks);
         for to in 0..ranks {
             let listener =
                 TcpListener::bind("127.0.0.1:0").context("binding loopback listener")?;
             addrs.push(listener.local_addr()?);
-            let segments = segments.clone();
-            let stats = stats.clone();
-            let applied = frames_applied.clone();
-            let local = local.clone();
-            acceptors.push(std::thread::spawn(move || -> Vec<JoinHandle<()>> {
-                let mut handles = Vec::new();
-                for _ in 0..ranks.saturating_sub(1) {
-                    let Ok((mut conn, _)) = listener.accept() else {
-                        log::error!("socket transport: accept failed on rank {to}");
-                        break;
-                    };
-                    let _ = conn.set_nodelay(true);
-                    match answer_hello(&mut conn, n_slots, state_len, chunks, ranks) {
-                        Ok(_from) => {
-                            let segments = segments.clone();
-                            let stats = stats.clone();
-                            let applied = applied.clone();
-                            let local = local.clone();
-                            handles.push(std::thread::spawn(move || {
-                                applier_loop(conn, to, segments, stats, applied, local)
-                            }));
-                        }
-                        Err(e) => log::error!("socket transport: HELLO refused on rank {to}: {e}"),
-                    }
-                }
-                handles
-            }));
+            listener
+                .set_nonblocking(true)
+                .context("acceptor listener nonblocking")?;
+            let ctx = ApplyCtx {
+                to,
+                shape,
+                segments: segments.clone(),
+                stats: stats.clone(),
+                applied: frames_applied.clone(),
+                local: local.clone(),
+                shutdown: shutdown.clone(),
+            };
+            let appliers = appliers.clone();
+            acceptors.push(std::thread::spawn(move || acceptor_loop(listener, ctx, appliers)));
         }
 
-        let mut links: Vec<Vec<Option<Mutex<TcpStream>>>> = Vec::with_capacity(ranks);
+        let mut links: Vec<Vec<Option<Arc<Link>>>> = Vec::with_capacity(ranks);
+        let mut senders = Vec::new();
         for from in 0..ranks {
             let mut row = Vec::with_capacity(ranks);
             for (to, addr) in addrs.iter().enumerate() {
@@ -129,62 +300,76 @@ impl Socket {
                     row.push(None);
                     continue;
                 }
-                let mut s = TcpStream::connect(addr)
+                // the initial connection must succeed: a world that
+                // cannot form its mesh refuses loudly at build time
+                let stream = connect_once(*addr, from, shape)
                     .with_context(|| format!("connecting rank {from} -> {to}"))?;
-                s.set_nodelay(true)?;
-                offer_hello(&mut s, from, WIRE_VERSION, n_slots, state_len, chunks)
-                    .with_context(|| format!("HELLO rank {from} -> {to}"))?;
-                row.push(Some(Mutex::new(s)));
+                let link = Arc::new(Link::new(from, to, *addr));
+                row.push(Some(link.clone()));
+                let ctx = SenderCtx {
+                    link,
+                    seg_from: segments[from].clone(),
+                    stats: stats.clone(),
+                    frames_written: frames_written.clone(),
+                    shutdown: shutdown.clone(),
+                    shape,
+                };
+                let faults: Vec<NetFaultEvent> = {
+                    let mut evs: Vec<NetFaultEvent> = net_events
+                        .iter()
+                        .copied()
+                        .filter(|e| e.from == from && e.to == to)
+                        .collect();
+                    evs.sort_by_key(|e| e.at_iter);
+                    evs
+                };
+                let link_seed = seed
+                    ^ (((from as u64) << 32) | to as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                senders.push(std::thread::spawn(move || {
+                    sender_loop(stream, ctx, FaultInjector::new(faults, link_seed))
+                }));
             }
             links.push(row);
-        }
-
-        let mut appliers = Vec::new();
-        for a in acceptors {
-            appliers.extend(a.join().expect("acceptor thread panicked"));
         }
 
         Ok(Arc::new(Self {
             segments,
             stats,
             links,
-            frames_sent: AtomicU64::new(0),
+            frames_written,
             frames_applied,
-            appliers: Mutex::new(appliers),
+            shutdown,
+            senders: Mutex::new(senders),
+            acceptors: Mutex::new(acceptors),
+            appliers,
         }))
     }
 
-    /// Queue one data/meta frame on the `from -> to` link.  A send
-    /// failure is logged, not fatal: communication is de-facto optional,
-    /// and a dead link's frames are exactly "lost messages" (§4.4).
-    fn send(&self, from: usize, to: usize, body: &[u8]) {
+    /// Queue one frame on the `from -> to` link.  A refused frame (dead
+    /// link, full queue, shutdown) ticks `frames_failed` on the
+    /// sender's ledger — the measured gap between `sent`/`chunk_sent`
+    /// (issues) and delivery, never a silent drop.
+    fn send(&self, from: usize, to: usize, body: Vec<u8>, iter: Option<u64>) {
         let Some(link) = &self.links[from][to] else {
             return;
         };
-        let mut s = link.lock().unwrap();
-        let ok = s
-            .write_all(&(body.len() as u32).to_le_bytes())
-            .and_then(|_| s.write_all(body));
-        match ok {
-            Ok(()) => {
-                self.frames_sent.fetch_add(1, Ordering::Release);
-            }
-            Err(e) => log::warn!("socket transport: send {from} -> {to} failed: {e}"),
+        let mut q = link.q.lock().unwrap();
+        if q.dead || q.shutdown || q.frames.len() >= QUEUE_CAP {
+            drop(q);
+            self.stats.rank(from).frames_failed.add(1);
+            return;
         }
+        q.frames.push_back(QFrame { body, iter });
+        drop(q);
+        link.cv.notify_one();
     }
 
     /// Broadcast rank `rank`'s current metadata words to every peer.
     fn broadcast_meta(&self, rank: usize) {
-        let seg = &self.segments[rank];
-        let mut body = Vec::with_capacity(1 + 4 + 24);
-        body.push(FRAME_META);
-        push_u32(&mut body, rank as u32);
-        push_u64(&mut body, seg.layout_word_raw());
-        push_u64(&mut body, seg.heartbeat());
-        push_u64(&mut body, seg.suspicion());
+        let body = meta_body(rank, &self.segments[rank]);
         for to in 0..self.segments.len() {
             if to != rank {
-                self.send(rank, to, &body);
+                self.send(rank, to, body.clone(), None);
             }
         }
     }
@@ -192,11 +377,30 @@ impl Socket {
 
 impl Drop for Socket {
     fn drop(&mut self) {
-        // closing the outgoing streams EOFs every applier...
-        self.links.clear();
-        // ...which then exit and can be joined
-        for h in self.appliers.get_mut().unwrap().drain(..) {
-            let _ = h.join();
+        // flag first, then wake every parked sender so the drain starts
+        self.shutdown.store(true, Ordering::Release);
+        for link in self.links.iter().flatten().flatten() {
+            link.q.lock().unwrap().shutdown = true;
+            link.cv.notify_all();
+        }
+        // joins surface a poisoned thread as a reasoned error line, not
+        // a coordinator abort: shutdown keeps its best-effort contract
+        for h in self.senders.get_mut().unwrap().drain(..) {
+            if h.join().is_err() {
+                log::error!("socket transport: sender thread panicked during shutdown");
+            }
+        }
+        for h in self.acceptors.get_mut().unwrap().drain(..) {
+            if h.join().is_err() {
+                log::error!("socket transport: acceptor thread panicked during shutdown");
+            }
+        }
+        // senders are gone, so their streams are closed: appliers see
+        // EOF (or the shutdown flag at the next read poll) and exit
+        for h in self.appliers.lock().unwrap().drain(..) {
+            if h.join().is_err() {
+                log::error!("socket transport: applier thread panicked during shutdown");
+            }
         }
     }
 }
@@ -227,7 +431,7 @@ impl Transport for Socket {
         for &x in payload {
             body.extend_from_slice(&x.to_bits().to_le_bytes());
         }
-        self.send(from, to, &body);
+        self.send(from, to, body, Some(iter));
     }
 
     fn put_block(
@@ -261,7 +465,7 @@ impl Transport for Socket {
         for &x in payload {
             body.extend_from_slice(&x.to_bits().to_le_bytes());
         }
-        self.send(from, to, &body);
+        self.send(from, to, body, Some(iter));
     }
 
     fn publish_heartbeat(&self, rank: usize) -> u64 {
@@ -293,22 +497,370 @@ impl Transport for Socket {
         self.broadcast_meta(rank);
     }
 
-    /// Drain the in-flight frame window: wait until every frame queued
-    /// so far has been applied receiver-side.  Bounded (~30 s) so a
-    /// wedged link degrades to a loud log line, never a hang.
+    /// Drain the in-flight frame window.  Phase 1 waits for every
+    /// link's queue to empty and its sender to park (or be dead).
+    /// Phase 2 then closes the written/applied gap: on a loss-free run
+    /// the identity `applied >= written` is waited out strictly; once
+    /// any loss is on the books (injected or organic) the identity
+    /// cannot hold, so quiesce instead waits for the applied count to
+    /// go quiet for [`SETTLE_WINDOW`].  Bounded by
+    /// [`QUIESCE_DEADLINE`], so a wedged link degrades to a loud log
+    /// line, never a hang.
     fn quiesce(&self) {
-        let target = self.frames_sent.load(Ordering::Acquire);
-        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
-        while self.frames_applied.load(Ordering::Acquire) < target {
-            if std::time::Instant::now() > deadline {
+        let deadline = Instant::now() + QUIESCE_DEADLINE;
+        'drain: loop {
+            if Instant::now() > deadline {
+                log::error!("socket transport: quiesce timed out draining outbound queues");
+                return;
+            }
+            for link in self.links.iter().flatten().flatten() {
+                let q = link.q.lock().unwrap();
+                let settled = q.dead || (q.frames.is_empty() && q.idle);
+                drop(q);
+                if !settled {
+                    std::thread::sleep(Duration::from_millis(1));
+                    continue 'drain;
+                }
+            }
+            break;
+        }
+        let target = self.frames_written.load(Ordering::Acquire);
+        let t = self.stats.total();
+        let lossy = t.frames_failed + t.frames_dropped_injected + t.link_down > 0;
+        if !lossy {
+            while self.frames_applied.load(Ordering::Acquire) < target {
+                if Instant::now() > deadline {
+                    log::error!(
+                        "socket transport: quiesce timed out ({} of {target} frames applied)",
+                        self.frames_applied.load(Ordering::Acquire)
+                    );
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            return;
+        }
+        let mut last = self.frames_applied.load(Ordering::Acquire);
+        let mut quiet_since = Instant::now();
+        while last < target {
+            if Instant::now() > deadline {
                 log::error!(
-                    "socket transport: quiesce timed out ({} of {target} frames applied)",
-                    self.frames_applied.load(Ordering::Acquire)
+                    "socket transport: quiesce timed out settling ({last} of {target} applied)"
                 );
                 return;
             }
-            std::thread::sleep(std::time::Duration::from_millis(1));
+            std::thread::sleep(Duration::from_millis(5));
+            let now = self.frames_applied.load(Ordering::Acquire);
+            if now != last {
+                last = now;
+                quiet_since = Instant::now();
+            } else if quiet_since.elapsed() >= SETTLE_WINDOW {
+                return; // gone quiet below target: the gap is the loss
+            }
         }
+    }
+}
+
+// ---- sender side: link supervision + fault injection --------------------
+
+/// Deterministic per-link wire-fault state: events sorted by activation
+/// iteration, armed front-to-back against the link's frame watermark.
+struct FaultInjector {
+    events: Vec<NetFaultEvent>,
+    next: usize,
+    watermark: u64,
+    drop_pct: u8,
+    delay_ms: u64,
+    dup_pct: u8,
+    rng: Xoshiro256pp,
+}
+
+impl FaultInjector {
+    fn new(events: Vec<NetFaultEvent>, seed: u64) -> Self {
+        Self {
+            events,
+            next: 0,
+            watermark: 0,
+            drop_pct: 0,
+            delay_ms: 0,
+            dup_pct: 0,
+            rng: Xoshiro256pp::seed_from_u64(seed),
+        }
+    }
+
+    /// Advance the watermark past a data frame's stamp and fire every
+    /// event now due: modal kinds arm, one-shot kinds are returned as
+    /// `(netdown outage, nettrunc)`.  META frames (`iter == None`)
+    /// neither advance the watermark nor trigger one-shots.
+    fn advance(&mut self, iter: Option<u64>) -> (Option<u64>, bool) {
+        let Some(i) = iter else { return (None, false) };
+        self.watermark = self.watermark.max(i);
+        let (mut down, mut trunc) = (None, false);
+        while self.next < self.events.len() && self.events[self.next].at_iter <= self.watermark {
+            match self.events[self.next].kind {
+                NetFaultKind::Drop { pct } => self.drop_pct = pct,
+                NetFaultKind::Delay { ms } => self.delay_ms = ms,
+                NetFaultKind::Dup { pct } => self.dup_pct = pct,
+                NetFaultKind::Trunc => trunc = true,
+                NetFaultKind::Down { outage_ms } => down = Some(outage_ms),
+            }
+            self.next += 1;
+        }
+        (down, trunc)
+    }
+
+    /// Does an armed `netdrop` claim this data frame?
+    fn roll_drop(&mut self, iter: Option<u64>) -> bool {
+        iter.is_some() && self.drop_pct > 0 && self.rng.next_below(100) < self.drop_pct as u64
+    }
+
+    /// Does an armed `netdup` double this data frame?
+    fn roll_dup(&mut self, iter: Option<u64>) -> bool {
+        iter.is_some() && self.dup_pct > 0 && self.rng.next_below(100) < self.dup_pct as u64
+    }
+}
+
+/// The supervised sender: drain the link's queue, inject faults, write
+/// frames, recover from failures, and — when the reconnect budget is
+/// spent — degrade the link to dead and keep draining (discard + count)
+/// until shutdown.
+fn sender_loop(stream: TcpStream, ctx: SenderCtx, mut inj: FaultInjector) {
+    let mut backoff_rng = Xoshiro256pp::seed_from_u64(
+        0x5EED ^ (((ctx.link.from as u64) << 32) | ctx.link.to as u64),
+    );
+    let mut stream = Some(stream);
+    while let Some(frame) = dequeue(&ctx.link) {
+        match stream.take() {
+            Some(s) => {
+                stream = deliver(s, &frame, &mut inj, &mut backoff_rng, &ctx);
+                if stream.is_none() {
+                    mark_dead(&ctx);
+                }
+            }
+            // dead link: deliveries are skipped, training continues on
+            // the survivors (frames that raced the dead flag land here)
+            None => ctx.stats.rank(ctx.link.from).frames_failed.add(1),
+        }
+    }
+}
+
+/// Pop the next outbound frame, parking (with the `idle` flag raised)
+/// while the queue is empty.  Returns `None` only at shutdown with the
+/// queue fully drained — queued frames are always delivered or counted.
+fn dequeue(link: &Link) -> Option<QFrame> {
+    let mut q = link.q.lock().unwrap();
+    loop {
+        if let Some(f) = q.frames.pop_front() {
+            q.idle = false;
+            return Some(f);
+        }
+        if q.shutdown {
+            q.idle = true;
+            return None;
+        }
+        q.idle = true;
+        q = link.cv.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+    }
+}
+
+/// Push one frame through the fault gauntlet and onto the wire.
+/// Returns the stream to keep using — the same one, a freshly
+/// reconnected one, or `None` if the link just died.
+fn deliver(
+    mut s: TcpStream,
+    frame: &QFrame,
+    inj: &mut FaultInjector,
+    backoff_rng: &mut Xoshiro256pp,
+    ctx: &SenderCtx,
+) -> Option<TcpStream> {
+    let me = ctx.stats.rank(ctx.link.from);
+    let (down, trunc) = inj.advance(frame.iter);
+
+    if let Some(outage_ms) = down {
+        // injected partition: condemn the stream, sit out the outage,
+        // then rejoin through the full reconnect path
+        log_state(ctx, LinkState::Down, "injected netdown");
+        me.link_down.add(1);
+        me.frames_failed.add(1); // the triggering frame is lost
+        drop(s);
+        sleep_interruptible(Duration::from_millis(outage_ms), &ctx.shutdown);
+        return reconnect_with_backoff(ctx, backoff_rng);
+    }
+
+    if trunc {
+        // write a syntactically complete wire frame whose body is cut
+        // in half: the receiver's parser refuses it loudly and drops
+        // the connection, exercising the organic recovery path
+        let half = frame.body.len() / 2;
+        me.frames_dropped_injected.add(1);
+        let wrote = s
+            .write_all(&(half as u32).to_le_bytes())
+            .and_then(|_| s.write_all(&frame.body[..half]));
+        if wrote.is_err() {
+            log_state(ctx, LinkState::Degraded, "write failed on truncated frame");
+            return recover(ctx, backoff_rng, None);
+        }
+        return Some(s);
+    }
+
+    if inj.roll_drop(frame.iter) {
+        me.frames_dropped_injected.add(1);
+        return Some(s);
+    }
+    if inj.delay_ms > 0 {
+        sleep_interruptible(Duration::from_millis(inj.delay_ms), &ctx.shutdown);
+    }
+    let copies = if inj.roll_dup(frame.iter) { 2 } else { 1 };
+    for _ in 0..copies {
+        if let Err(e) = write_frame(&mut s, &frame.body) {
+            log_state(ctx, LinkState::Degraded, &format!("write failed: {e}"));
+            return recover(ctx, backoff_rng, Some(&frame.body));
+        }
+        ctx.frames_written.fetch_add(1, Ordering::Release);
+    }
+    Some(s)
+}
+
+/// Degraded-state recovery: one immediate reconnect (and resend, when a
+/// frame was lost mid-write) — on failure the link is Down and enters
+/// backoff.  A condemned stream is never written again: a partial
+/// length-prefix write would desync the framing, so retry always means
+/// a fresh connection.
+fn recover(
+    ctx: &SenderCtx,
+    backoff_rng: &mut Xoshiro256pp,
+    resend: Option<&[u8]>,
+) -> Option<TcpStream> {
+    let me = ctx.stats.rank(ctx.link.from);
+    if let Ok(mut s) = connect_once(ctx.link.addr, ctx.link.from, ctx.shape) {
+        match resend {
+            None => {
+                log_state(ctx, LinkState::Up, "immediate reconnect succeeded");
+                return Some(s);
+            }
+            Some(body) => {
+                if write_frame(&mut s, body).is_ok() {
+                    me.frames_retried.add(1);
+                    ctx.frames_written.fetch_add(1, Ordering::Release);
+                    log_state(ctx, LinkState::Up, "immediate reconnect + resend succeeded");
+                    return Some(s);
+                }
+            }
+        }
+    }
+    log_state(ctx, LinkState::Down, "immediate reconnect failed");
+    me.link_down.add(1);
+    if resend.is_some() {
+        me.frames_failed.add(1); // no retry could recover this frame
+    }
+    reconnect_with_backoff(ctx, backoff_rng)
+}
+
+/// Exponential backoff with ±50% jitter: `BASE * 2^n` capped at `MAX`,
+/// at most [`RECONNECT_ATTEMPTS`] tries.  A successful reconnect has
+/// already re-offered HELLO (wire version and shape re-validated); the
+/// rank then rejoins under a bumped heartbeat incarnation and announces
+/// it with a META frame, so peers observe a rebirth.
+fn reconnect_with_backoff(ctx: &SenderCtx, rng: &mut Xoshiro256pp) -> Option<TcpStream> {
+    log_state(ctx, LinkState::Reconnecting, "entering backoff");
+    let mut wait_ms = RECONNECT_BASE_MS;
+    for attempt in 0..RECONNECT_ATTEMPTS {
+        if ctx.shutdown.load(Ordering::Acquire) {
+            return None;
+        }
+        match connect_once(ctx.link.addr, ctx.link.from, ctx.shape) {
+            Ok(mut s) => {
+                let me = ctx.stats.rank(ctx.link.from);
+                me.reconnects.add(1);
+                // rebirth: the lease machinery must see a new
+                // incarnation, not a silent gap in the old one
+                ctx.seg_from.begin_incarnation();
+                let body = meta_body(ctx.link.from, &ctx.seg_from);
+                if write_frame(&mut s, &body).is_ok() {
+                    ctx.frames_written.fetch_add(1, Ordering::Release);
+                }
+                log_state(ctx, LinkState::Up, "reconnected under a new incarnation");
+                return Some(s);
+            }
+            Err(e) => log::debug!(
+                "socket transport: link {} -> {} reconnect attempt {attempt} failed: {e:#}",
+                ctx.link.from,
+                ctx.link.to
+            ),
+        }
+        let jitter = wait_ms / 2 + rng.next_below(wait_ms.max(1));
+        sleep_interruptible(Duration::from_millis(jitter), &ctx.shutdown);
+        wait_ms = (wait_ms * 2).min(RECONNECT_MAX_MS);
+    }
+    None
+}
+
+/// The link's reconnect budget is spent: refuse future frames at the
+/// queue, count what is already buffered as failed, and log once.
+fn mark_dead(ctx: &SenderCtx) {
+    let drained = {
+        let mut q = ctx.link.q.lock().unwrap();
+        q.dead = true;
+        let n = q.frames.len() as u64;
+        q.frames.clear();
+        n
+    };
+    if drained > 0 {
+        ctx.stats.rank(ctx.link.from).frames_failed.add(drained);
+    }
+    log::error!(
+        "socket transport: link {} -> {} permanently down after {RECONNECT_ATTEMPTS} \
+         reconnect attempts; its deliveries will be skipped",
+        ctx.link.from,
+        ctx.link.to
+    );
+}
+
+fn log_state(ctx: &SenderCtx, state: LinkState, why: &str) {
+    log::warn!(
+        "socket transport: link {} -> {} is {state:?}: {why}",
+        ctx.link.from,
+        ctx.link.to
+    );
+}
+
+/// One connect + HELLO offer with every deadline armed: connect,
+/// write and HELLO-read timeouts, so no supervision step can park
+/// forever on a half-open peer.
+fn connect_once(addr: SocketAddr, from: usize, shape: Shape) -> Result<TcpStream> {
+    let mut s = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT).context("connect")?;
+    s.set_nodelay(true)?;
+    s.set_write_timeout(Some(WRITE_TIMEOUT))?;
+    s.set_read_timeout(Some(HELLO_TIMEOUT))?;
+    offer_hello(&mut s, from, WIRE_VERSION, shape.n_slots, shape.state_len, shape.chunks)
+        .context("HELLO offer")?;
+    Ok(s)
+}
+
+fn write_frame(s: &mut TcpStream, body: &[u8]) -> std::io::Result<()> {
+    s.write_all(&(body.len() as u32).to_le_bytes())?;
+    s.write_all(body)
+}
+
+/// Rank `rank`'s current metadata words as a META frame body.
+fn meta_body(rank: usize, seg: &Segment) -> Vec<u8> {
+    let mut body = Vec::with_capacity(1 + 4 + 24);
+    body.push(FRAME_META);
+    push_u32(&mut body, rank as u32);
+    push_u64(&mut body, seg.layout_word_raw());
+    push_u64(&mut body, seg.heartbeat());
+    push_u64(&mut body, seg.suspicion());
+    body
+}
+
+fn sleep_interruptible(total: Duration, shutdown: &AtomicBool) {
+    let deadline = Instant::now() + total;
+    while Instant::now() < deadline {
+        if shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let left = deadline.saturating_duration_since(Instant::now());
+        std::thread::sleep(left.min(Duration::from_millis(5)));
     }
 }
 
@@ -404,29 +956,92 @@ fn validate_hello(
 
 // ---- receive path -------------------------------------------------------
 
-/// Apply frames from one sender->`to` connection until EOF (the sender
-/// dropped its link) or a malformed frame (logged, connection dropped —
-/// refuse loudly rather than misapply).
-fn applier_loop(
-    mut conn: TcpStream,
-    to: usize,
-    segments: Vec<Arc<Segment>>,
-    stats: Arc<WorldStats>,
-    applied: Arc<AtomicU64>,
-    local: Arc<Vec<bool>>,
-) {
-    // generous sanity cap: the largest legal frame is a FULL put
-    let max_frame = 64 + segments[to].state_len * 4;
+/// Serve one rank's listener for the life of the world: initial
+/// connections and post-failure reconnects are the same accept.  Each
+/// accepted connection gets its own handshake + applier thread, so a
+/// peer stalling in HELLO cannot block other reconnects.
+fn acceptor_loop(listener: TcpListener, ctx: ApplyCtx, appliers: Arc<Mutex<Vec<JoinHandle<()>>>>) {
     loop {
-        let body = match read_frame(&mut conn, max_frame) {
-            Ok(b) => b,
-            Err(_) => return, // EOF on link close is the normal shutdown
-        };
-        if let Err(e) = apply_frame(&body, to, &segments, &stats, &local) {
-            log::error!("socket transport: dropping link into rank {to}: {e}");
+        if ctx.shutdown.load(Ordering::Acquire) {
             return;
         }
-        applied.fetch_add(1, Ordering::Release);
+        match listener.accept() {
+            Ok((conn, _)) => {
+                let ctx = ApplyCtx {
+                    to: ctx.to,
+                    shape: ctx.shape,
+                    segments: ctx.segments.clone(),
+                    stats: ctx.stats.clone(),
+                    applied: ctx.applied.clone(),
+                    local: ctx.local.clone(),
+                    shutdown: ctx.shutdown.clone(),
+                };
+                let h = std::thread::spawn(move || serve_connection(conn, ctx));
+                appliers.lock().unwrap().push(h);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(e) => {
+                log::error!("socket transport: accept failed on rank {}: {e}", ctx.to);
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Handshake one inbound connection, then apply its frames until the
+/// peer closes, stalls past the read deadline, or shutdown.
+fn serve_connection(mut conn: TcpStream, ctx: ApplyCtx) {
+    // the listener is nonblocking; the accepted stream must not be
+    if conn.set_nonblocking(false).is_err() {
+        return;
+    }
+    let _ = conn.set_nodelay(true);
+    if conn.set_read_timeout(Some(HELLO_TIMEOUT)).is_err() {
+        return;
+    }
+    let Shape { n_slots, state_len, chunks } = ctx.shape;
+    match answer_hello(&mut conn, n_slots, state_len, chunks, ctx.segments.len()) {
+        Ok(_from) => {
+            if conn.set_read_timeout(Some(READ_POLL)).is_err() {
+                return;
+            }
+            applier_loop(conn, &ctx);
+        }
+        Err(e) => log::error!("socket transport: HELLO refused on rank {}: {e:#}", ctx.to),
+    }
+}
+
+enum Fr {
+    Frame(Vec<u8>),
+    Eof,
+}
+
+/// Apply frames from one sender->`to` connection until EOF (the sender
+/// dropped its link), a read deadline (half-open peer), or a malformed
+/// frame (logged, connection dropped — refuse loudly rather than
+/// misapply).
+fn applier_loop(mut conn: TcpStream, ctx: &ApplyCtx) {
+    // generous sanity cap: the largest legal frame is a FULL put
+    let max_frame = 64 + ctx.segments[ctx.to].state_len * 4;
+    loop {
+        match read_frame_deadline(&mut conn, max_frame, &ctx.shutdown) {
+            Ok(Fr::Eof) => return, // link close is the normal shutdown
+            Ok(Fr::Frame(body)) => {
+                if let Err(e) = apply_frame(&body, ctx.to, &ctx.segments, &ctx.stats, &ctx.local) {
+                    log::error!("socket transport: dropping link into rank {}: {e:#}", ctx.to);
+                    return;
+                }
+                ctx.applied.fetch_add(1, Ordering::Release);
+            }
+            Err(e) => {
+                if !ctx.shutdown.load(Ordering::Acquire) {
+                    log::warn!("socket transport: dropping link into rank {}: {e:#}", ctx.to);
+                }
+                return;
+            }
+        }
     }
 }
 
@@ -530,6 +1145,8 @@ fn take_f32s(b: &[u8], off: &mut usize, n: usize) -> Result<Vec<f32>> {
     Ok(out)
 }
 
+/// Blocking frame read for the HELLO exchange, where the stream's own
+/// read timeout bounds the wait.
 fn read_frame(s: &mut TcpStream, max: usize) -> Result<Vec<u8>> {
     let mut len = [0u8; 4];
     s.read_exact(&mut len)?;
@@ -540,9 +1157,73 @@ fn read_frame(s: &mut TcpStream, max: usize) -> Result<Vec<u8>> {
     Ok(body)
 }
 
+/// Deadline-aware frame read for the applier loop.  An *idle* link may
+/// stay silent forever (legal — sends are event-driven), so waiting at
+/// a frame boundary only polls the shutdown flag; but once a frame's
+/// first byte has arrived, the rest must follow within [`READ_STALL`]
+/// or the peer is half-open and the read bails.
+fn read_frame_deadline(s: &mut TcpStream, max: usize, shutdown: &AtomicBool) -> Result<Fr> {
+    let mut len = [0u8; 4];
+    if !read_full(s, &mut len, shutdown, true)? {
+        return Ok(Fr::Eof);
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    ensure!(len <= max, "frame of {len} bytes exceeds cap {max}");
+    let mut body = vec![0u8; len];
+    read_full(s, &mut body, shutdown, false)?;
+    Ok(Fr::Frame(body))
+}
+
+/// Fill `buf`, tolerating read-timeout polls.  Returns `Ok(false)` for
+/// a clean close (EOF/reset with zero bytes consumed at a frame
+/// boundary); every other shortfall is an error.
+fn read_full(
+    s: &mut TcpStream,
+    buf: &mut [u8],
+    shutdown: &AtomicBool,
+    at_boundary: bool,
+) -> Result<bool> {
+    let mut filled = 0usize;
+    let mut stalled_since: Option<Instant> = None;
+    while filled < buf.len() {
+        match s.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if at_boundary && filled == 0 {
+                    return Ok(false);
+                }
+                bail!("peer closed mid-frame ({filled} of {} bytes)", buf.len());
+            }
+            Ok(n) => {
+                filled += n;
+                stalled_since = None;
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if shutdown.load(Ordering::Acquire) {
+                    bail!("transport shutdown");
+                }
+                if at_boundary && filled == 0 {
+                    continue; // idle link: no deadline between frames
+                }
+                let since = stalled_since.get_or_insert_with(Instant::now);
+                if since.elapsed() > READ_STALL {
+                    bail!("peer stalled mid-frame for {READ_STALL:?} (half-open link)");
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == ErrorKind::ConnectionReset && at_boundary && filled == 0 => {
+                return Ok(false); // condemned stream: clean close
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(true)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::FaultPlan;
+    use crate::gaspi::liveness::heartbeat_parts;
     use crate::gaspi::segment::ReadOutcome;
 
     #[test]
@@ -628,5 +1309,51 @@ mod tests {
         let err = offer_hello(&mut client, 0, WIRE_VERSION, 1, 9, 1).unwrap_err();
         assert!(err.to_string().contains("state_len"), "{err:#}");
         assert!(server.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn injected_drop_loses_every_data_frame() {
+        let stats = Arc::new(WorldStats::new(2));
+        let plan = FaultPlan::parse("netdrop@0-1:0:100").unwrap();
+        let t = Socket::loopback_with_faults(2, 1, 8, 1, stats.clone(), plan.net_events, 42)
+            .unwrap();
+        let payload = vec![1.0f32; 8];
+        for i in 1..=5 {
+            t.put_state(0, 1, i, &payload, 0);
+        }
+        t.quiesce();
+        assert_eq!(stats.rank(0).frames_dropped_injected.get(), 5);
+        assert_eq!(stats.rank(0).frames_failed.get(), 0, "injected loss is not a failure");
+        let l = t.segment(1).layout();
+        let mut buf = vec![0.0f32; l.chunk_len(0)];
+        let (out, ..) = t.segment(1).read_block_into(0, 0, 0, &mut buf);
+        assert_ne!(out, ReadOutcome::Fresh, "every data frame was dropped");
+    }
+
+    #[test]
+    fn netdown_reconnects_as_rebirth() {
+        let stats = Arc::new(WorldStats::new(2));
+        let plan = FaultPlan::parse("netdown@0-1:3:30").unwrap();
+        let t = Socket::loopback_with_faults(2, 2, 8, 1, stats.clone(), plan.net_events, 7)
+            .unwrap();
+        let (inc_before, _) = heartbeat_parts(t.segment(0).heartbeat());
+        let payload = vec![3.0f32; 8];
+        for i in 1..=6 {
+            t.put_state(0, 1, i, &payload, 0);
+        }
+        t.quiesce();
+        let s = stats.rank(0);
+        assert!(s.link_down.get() >= 1, "netdown must condemn the link");
+        assert!(s.reconnects.get() >= 1, "the link must rejoin");
+        assert!(s.reconnects.get() <= s.link_down.get());
+        assert!(s.frames_failed.get() >= 1, "the triggering frame is lost");
+        let (inc_after, _) = heartbeat_parts(t.segment(0).heartbeat());
+        assert!(inc_after > inc_before, "reconnect must bump the incarnation (rebirth)");
+        // frames queued behind the outage flush after the reconnect
+        let l = t.segment(1).layout();
+        let mut buf = vec![0.0f32; l.chunk_len(0)];
+        let (out, sender, iter, _) = t.segment(1).read_block_into(0, 0, 0, &mut buf);
+        assert_eq!(out, ReadOutcome::Fresh);
+        assert_eq!((sender, iter), (0, 6));
     }
 }

@@ -85,6 +85,17 @@ fn print_report(args: &Args, report: &asgd::metrics::RunReport) -> Result<()> {
             report.comm.restores
         );
     }
+    let net = &report.comm;
+    if net.frames_failed + net.frames_retried + net.frames_dropped_injected + net.link_down > 0 {
+        println!(
+            "network           failed {}  retried {}  injected {}  link-down {}  reconnects {}",
+            net.frames_failed,
+            net.frames_retried,
+            net.frames_dropped_injected,
+            net.link_down,
+            net.reconnects
+        );
+    }
     // per-peer staleness histogram: log2 lag buckets (0, 1, 2-3, 4-7, ...
     // 64+) over every admitted Fresh block delivery from that sender
     if report.staleness.iter().any(|row| row.iter().any(|&c| c > 0)) {

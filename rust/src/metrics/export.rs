@@ -44,6 +44,11 @@ pub fn report_json(report: &RunReport) -> Json {
         .num("recovered", report.comm.recovered as f64)
         .num("dead_masked", report.comm.dead_masked as f64)
         .num("restores", report.comm.restores as f64)
+        .num("frames_failed", report.comm.frames_failed as f64)
+        .num("frames_retried", report.comm.frames_retried as f64)
+        .num("frames_dropped_injected", report.comm.frames_dropped_injected as f64)
+        .num("link_down", report.comm.link_down as f64)
+        .num("reconnects", report.comm.reconnects as f64)
         .val(
             "staleness",
             Json::Arr(
