@@ -22,11 +22,23 @@
 //!   `netdown`+reconnect; convergence stays in the band of the
 //!   fault-free *socket* run and the reconnect rides the incarnation
 //!   mechanism (`reconnects >= 1`).
+//! * **poison-nan** — one rank's state is NaN-poisoned mid-run; the
+//!   always-on receive scan rejects every poisoned delivery
+//!   (`non_finite_rejected`), the sender is quarantined, and the final
+//!   objective stays finite and in band.
+//! * **corrupt-network** — socket transport with 10% payload bit flips
+//!   into rank 0; every damaged frame is caught by the wire checksum
+//!   (`frames_corrupt`) and convergence stays in the socket band.
+//! * **blowup-rollback** — the leader's state is multiplied by 1e20 one
+//!   iteration after a checkpoint; peers reject the blown deliveries by
+//!   norm, the divergence watchdog abandons the trajectory
+//!   (`rollbacks >= 1`), and the restore replays the clean half.
 //!
 //! Trajectories land in `BENCH_faults.json` (override with
 //! `ASGD_BENCH_FAULTS_OUT`), merged read-modify-write like
-//! `BENCH_hotpath.json`.  `ASGD_BENCH_QUICK=1` shrinks sizes and runs
-//! the crash + restart scenarios only (the CI smoke arm).
+//! `BENCH_hotpath.json`.  `ASGD_BENCH_QUICK=1` shrinks sizes and skips
+//! the straggler and kill-leader arms (the CI smoke lane keeps the
+//! crash, restart, wire-fault and numeric-integrity scenarios).
 
 use asgd::config::{AggMode, FaultPlan, TrainConfig, TransportKind};
 use asgd::coordinator::run_training;
@@ -94,6 +106,12 @@ fn scenario_json(name: &str, obj: f64, baseline: f64, r: &RunReport) -> Json {
         .num("frames_dropped_injected", r.comm.frames_dropped_injected as f64)
         .num("link_down", r.comm.link_down as f64)
         .num("reconnects", r.comm.reconnects as f64)
+        .num("frames_corrupt", r.comm.frames_corrupt as f64)
+        .num("non_finite_rejected", r.comm.non_finite_rejected as f64)
+        .num("norm_rejected", r.comm.norm_rejected as f64)
+        .num("quarantined", r.comm.quarantined as f64)
+        .num("requalified", r.comm.requalified as f64)
+        .num("rollbacks", r.comm.rollbacks as f64)
         .build()
 }
 
@@ -225,6 +243,93 @@ fn main() {
     );
     assert_resolution_identity("lossy-network", &r);
     scenarios.push(scenario_json("lossy_network", obj, sock_baseline, &r));
+
+    // ---- corrupt network (bit flips on the wire) ------------------------
+    // same socket baseline as the lossy arm: the question is what the
+    // injected damage costs after the checksum has filtered it out
+    let mut corrupt = sock.clone();
+    corrupt.faults =
+        FaultPlan::parse("netcorrupt@1-0:0:10,netcorrupt@2-0:0:10,netcorrupt@3-0:0:10").unwrap();
+    let (obj, r) = run3(&corrupt);
+    println!(
+        "   corrupt-network : objective {obj:.5} ({:.2}x socket baseline), caught {}",
+        obj / sock_baseline,
+        r.comm.frames_corrupt
+    );
+    assert_band("corrupt-network", obj, sock_baseline);
+    assert!(
+        r.comm.frames_corrupt > 0,
+        "the 10% flip plan must be caught by the checksum at least once"
+    );
+    assert_eq!(
+        r.comm.link_down, 0,
+        "a corrupt payload is discarded, never escalated to a link failure"
+    );
+    assert_resolution_identity("corrupt-network", &r);
+    scenarios.push(scenario_json("corrupt_network", obj, sock_baseline, &r));
+
+    // ---- poison (NaN state broadcast) -----------------------------------
+    // the receive scan is always-on: no guard knob is set here, yet every
+    // poisoned delivery must be rejected and the poisoner quarantined
+    let mut poison = cfg.clone();
+    poison.faults = FaultPlan::parse(&format!("poison@1:{}:nan", iters / 3)).unwrap();
+    let (obj, r) = run3(&poison);
+    println!(
+        "   poison-nan      : objective {obj:.5} ({:.2}x baseline), rejected {}, quarantined {}",
+        obj / baseline,
+        r.comm.non_finite_rejected,
+        r.comm.quarantined
+    );
+    assert_band("poison-nan", obj, baseline);
+    assert!(
+        r.comm.non_finite_rejected > 0,
+        "a NaN state must be caught by the receive scan"
+    );
+    assert!(
+        r.comm.quarantined >= 1,
+        "the poisoner must enter quarantine after repeated rejections"
+    );
+    assert!(
+        r.comm.requalified <= r.comm.quarantined,
+        "requalifications cannot outrun quarantine entries"
+    );
+    assert_resolution_identity("poison-nan", &r);
+    scenarios.push(scenario_json("poison_nan", obj, baseline, &r));
+
+    // ---- divergence rollback (blowup on the leader) ---------------------
+    // cadence engineering: the iters/2 checkpoint lands healthy, the
+    // blowup hits one iteration later, and the 3*iters/4 trace point
+    // trips the watchdog (window 1) before the next checkpoint could
+    // store a poisoned state — the restore then replays the clean half
+    let mut blowup = cfg.clone();
+    blowup.guard_factor = 8.0;
+    blowup.rollback_factor = 3.0;
+    blowup.rollback_window = 1;
+    blowup.ckpt_interval = (iters / 2) as usize;
+    blowup.faults = FaultPlan::parse(&format!("poison@0:{}:blowup", iters / 2 + 1)).unwrap();
+    let (obj, r) = run3(&blowup);
+    println!(
+        "   blowup-rollback : objective {obj:.5} ({:.2}x baseline), rollbacks {}, \
+         norm-rejected {}",
+        obj / baseline,
+        r.comm.rollbacks,
+        r.comm.norm_rejected
+    );
+    assert_band("blowup-rollback", obj, baseline);
+    assert!(
+        r.comm.rollbacks >= 1,
+        "the watchdog must abandon the diverging trajectory"
+    );
+    assert!(
+        r.comm.norm_rejected > 0,
+        "peers must reject the blown-up deliveries by norm"
+    );
+    assert!(
+        r.comm.restores >= 1,
+        "a rollback restores the leader from its checkpoint"
+    );
+    assert_resolution_identity("blowup-rollback", &r);
+    scenarios.push(scenario_json("blowup_rollback", obj, baseline, &r));
 
     if !quick {
         // ---- one 10x straggler ------------------------------------------

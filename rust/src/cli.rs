@@ -150,6 +150,22 @@ pub fn train_config(args: &Args) -> Result<crate::config::TrainConfig> {
         // no clamping: validate() rejects 0 loudly
         cfg.lease_polls = v;
     }
+    if let Some(v) = args.get_f32("guard-factor")? {
+        // no clamping: validate() bounds the integrity knobs loudly
+        cfg.guard_factor = v;
+    }
+    if let Some(v) = args.get_usize("quarantine-clean")? {
+        cfg.quarantine_clean = v;
+    }
+    if let Some(v) = args.get_f32("rollback-factor")? {
+        cfg.rollback_factor = v;
+    }
+    if let Some(v) = args.get_usize("rollback-window")? {
+        cfg.rollback_window = v;
+    }
+    if let Some(v) = args.get_usize("rollback-budget")? {
+        cfg.rollback_budget = v;
+    }
     if let Some(v) = args.get_usize("ckpt-interval")? {
         cfg.ckpt_interval = v;
     }
@@ -259,6 +275,16 @@ TRAIN OPTIONS (defaults in parentheses):
   --max-chunks N         adaptive: chunk-count ceiling          (16)
   --adapt-interval S     adaptive: send events per re-derive    (16)
   --lease-polls N        liveness: polls before suspecting a peer (128)
+  --guard-factor G       reject received blocks whose norm exceeds G x
+                         the own-norm EMA; 0 = off, else G > 1       (0)
+  --quarantine-clean N   clean deliveries before a quarantined peer
+                         is re-admitted to the merge                 (4)
+  --rollback-factor R    roll back to the last checkpoint when the
+                         objective exceeds R x best-seen (needs
+                         --ckpt-interval); 0 = off, else R > 1       (0)
+  --rollback-window K    consecutive bad trace points that trigger
+                         the rollback                                (3)
+  --rollback-budget N    rollbacks allowed before giving up          (2)
   --ckpt-interval N      checkpoint every N iterations, 0 = off (0)
   --ckpt-dir DIR         durable checkpoints (rank-NNN.ackp files); what
                          `asgd restore` resumes from               (off)
@@ -266,10 +292,12 @@ TRAIN OPTIONS (defaults in parentheses):
   --transport-dir DIR    shmem: run directory for the mapped segments
                          (fresh /dev/shm dir per run)
   --faults PLAN          fault injection, e.g. \"kill@3:50, restart@1:30:50,
-                         pause@0:20:100, straggle@2:10:2000\" (KIND@RANK:ITER[:PARAM]);
+                         pause@0:20:100, straggle@2:10:2000,
+                         poison@1:40:nan\" (KIND@RANK:ITER[:PARAM]);
                          wire faults (socket transport): \"netdrop@1-0:20:10,
                          netdelay@2-0:0:2, netdup@1-2:0:50, nettrunc@0-1:40,
-                         netdown@3-0:60:40\" (NETKIND@FROM-TO:ITER[:PARAM])
+                         netdown@3-0:60:40, netcorrupt@0-1:30:10\"
+                         (NETKIND@FROM-TO:ITER[:PARAM])
   --gate G               full | per-center | off                (full)
   --aggregation A        first | tree-mean                      (first)
   --backend B            native | xla                           (native)
@@ -373,6 +401,42 @@ mod tests {
         assert!(
             train_config(&parse("train --workers 4 --faults netdrop@1-0:0:10")).is_err(),
             "net faults need a frame layer (socket)"
+        );
+    }
+
+    #[test]
+    fn integrity_flags_roundtrip() {
+        let cfg = train_config(&parse(
+            "train --guard-factor 8 --quarantine-clean 2 --rollback-factor 4 \
+             --rollback-window 2 --rollback-budget 3 --ckpt-interval 10",
+        ))
+        .unwrap();
+        assert_eq!(cfg.guard_factor, 8.0);
+        assert_eq!(cfg.quarantine_clean, 2);
+        assert_eq!(cfg.rollback_factor, 4.0);
+        assert_eq!(cfg.rollback_window, 2);
+        assert_eq!(cfg.rollback_budget, 3);
+        // refuse-loudly: sub-unity thresholds, zero streaks, and a
+        // watchdog with no checkpoint to restore from
+        assert!(train_config(&parse("train --guard-factor 0.5")).is_err());
+        assert!(train_config(&parse("train --quarantine-clean 0")).is_err());
+        assert!(train_config(&parse("train --rollback-factor 4")).is_err()); // no ckpt
+        assert!(train_config(&parse(
+            "train --rollback-factor 4 --ckpt-interval 10 --rollback-window 0"
+        ))
+        .is_err());
+        // the poison fault rides the same --faults flag
+        let cfg = train_config(&parse("train --workers 4 --faults poison@1:40:blowup")).unwrap();
+        assert_eq!(cfg.faults.events.len(), 1);
+        assert_eq!(cfg.faults.to_dsl(), "poison@1:40:blowup");
+        // ...and netcorrupt is socket-gated like the other wire faults
+        let cfg = train_config(&parse(
+            "train --workers 4 --transport socket --faults netcorrupt@0-1:30:10",
+        ))
+        .unwrap();
+        assert_eq!(cfg.faults.net_events.len(), 1);
+        assert!(
+            train_config(&parse("train --workers 4 --faults netcorrupt@0-1:30:10")).is_err()
         );
     }
 

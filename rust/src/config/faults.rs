@@ -36,6 +36,13 @@
 //!   ±50% by a generator seeded from the run seed (the paper-style
 //!   "seeded straggler": reproducible in distribution, not in exact
 //!   nanoseconds).
+//! * `poison@RANK:ITER[:nan|inf|blowup]` — at iteration `ITER` the
+//!   worker corrupts its *own* local state in place (default `nan`),
+//!   then keeps running and sending: a sick-but-alive rank.  `nan`/`inf`
+//!   plant non-finite values; `blowup` multiplies the state by a large
+//!   finite factor (a numerically diverging peer).  The event is
+//!   non-terminal — detection and containment are the receivers' job
+//!   (numeric guards + quarantine), never the faulted rank's.
 //!
 //! Wire-level events extend the same DSL to the *links* of the socket
 //! transport (the one backend where real message loss can happen).  A
@@ -65,6 +72,12 @@
 //!   `ITER` and every reconnect attempt fails for `MS` milliseconds
 //!   (default 0), after which the link re-offers HELLO and rejoins
 //!   under a bumped incarnation (`reconnects` ticks).
+//! * `netcorrupt@FROM-TO:ITER:PCT` — from `ITER` on, flip a few seeded
+//!   payload bits in `PCT`% of data frames after the checksum is
+//!   stamped (simulated in-flight bit rot).  The damaged frame still
+//!   reaches the wire — detection is the receiver's checksum verify
+//!   (`frames_corrupt`), which discards the frame without condemning
+//!   the connection.
 //!
 //! [`crate::config::TrainConfig::validate`] refuses out-of-range ranks,
 //! `restart` without checkpointing, plans that kill every rank, `net*`
@@ -88,6 +101,31 @@ pub enum FaultKind {
     /// From this iteration on, sleep ~`delay_us` per iteration (seeded
     /// ±50% jitter).
     Straggle { delay_us: u64 },
+    /// Corrupt the rank's own local state in place and keep running —
+    /// a sick-but-alive peer whose sends must be caught downstream.
+    Poison { mode: PoisonMode },
+}
+
+/// How a `poison` event damages the faulted rank's state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoisonMode {
+    /// Plant NaNs across the state.
+    Nan,
+    /// Plant infinities across the state.
+    Inf,
+    /// Multiply the state by a large finite factor (numeric divergence
+    /// without non-finite values — only the norm guard can catch it).
+    Blowup,
+}
+
+impl PoisonMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PoisonMode::Nan => "nan",
+            PoisonMode::Inf => "inf",
+            PoisonMode::Blowup => "blowup",
+        }
+    }
 }
 
 impl FaultKind {
@@ -97,6 +135,7 @@ impl FaultKind {
             FaultKind::Restart { .. } => "restart",
             FaultKind::Pause { .. } => "pause",
             FaultKind::Straggle { .. } => "straggle",
+            FaultKind::Poison { .. } => "poison",
         }
     }
 
@@ -131,6 +170,10 @@ pub enum NetFaultKind {
     /// Condemn the link; reconnect attempts fail for `outage_ms`
     /// (one-shot).
     Down { outage_ms: u64 },
+    /// Flip seeded payload bits in `pct`% of data frames after their
+    /// checksum is stamped (modal; the receiver's verify must catch
+    /// every damaged frame).
+    Corrupt { pct: u8 },
 }
 
 impl NetFaultKind {
@@ -141,6 +184,7 @@ impl NetFaultKind {
             NetFaultKind::Dup { .. } => "netdup",
             NetFaultKind::Trunc => "nettrunc",
             NetFaultKind::Down { .. } => "netdown",
+            NetFaultKind::Corrupt { .. } => "netcorrupt",
         }
     }
 }
@@ -239,8 +283,10 @@ impl FaultPlan {
                     None => 0,
                 },
             },
+            "netcorrupt" => NetFaultKind::Corrupt { pct: parse_pct("corruption percentage")? },
             other => bail!(
-                "unknown fault kind {other:?} (netdrop|netdelay|netdup|nettrunc|netdown)"
+                "unknown fault kind {other:?} \
+                 (netdrop|netdelay|netdup|nettrunc|netdown|netcorrupt)"
             ),
         };
         Ok(NetFaultEvent { from, to, at_iter, kind })
@@ -290,7 +336,15 @@ impl FaultPlan {
             "straggle" => FaultKind::Straggle {
                 delay_us: parse_param("per-iteration delay (us)")?,
             },
-            other => bail!("unknown fault kind {other:?} (kill|restart|pause|straggle)"),
+            "poison" => FaultKind::Poison {
+                mode: match param {
+                    None | Some("nan") => PoisonMode::Nan,
+                    Some("inf") => PoisonMode::Inf,
+                    Some("blowup") => PoisonMode::Blowup,
+                    Some(other) => bail!("unknown poison mode {other:?} (nan|inf|blowup)"),
+                },
+            },
+            other => bail!("unknown fault kind {other:?} (kill|restart|pause|straggle|poison)"),
         };
         Ok(FaultEvent { rank, at_iter, kind })
     }
@@ -308,6 +362,9 @@ impl FaultPlan {
                 FaultKind::Straggle { delay_us } => {
                     format!("straggle@{rank}:{at_iter}:{delay_us}")
                 }
+                FaultKind::Poison { mode } => {
+                    format!("poison@{rank}:{at_iter}:{}", mode.name())
+                }
             }
         });
         let net = self.net_events.iter().map(|e| {
@@ -319,6 +376,9 @@ impl FaultPlan {
                 NetFaultKind::Trunc => format!("nettrunc@{from}-{to}:{at_iter}"),
                 NetFaultKind::Down { outage_ms } => {
                     format!("netdown@{from}-{to}:{at_iter}:{outage_ms}")
+                }
+                NetFaultKind::Corrupt { pct } => {
+                    format!("netcorrupt@{from}-{to}:{at_iter}:{pct}")
                 }
             }
         });
@@ -410,6 +470,24 @@ mod tests {
     }
 
     #[test]
+    fn poison_dsl_roundtrips_and_is_non_terminal() {
+        let plan = FaultPlan::parse("poison@1:30:nan,poison@2:40:inf,poison@0:50:blowup").unwrap();
+        assert_eq!(
+            plan.events[0],
+            FaultEvent { rank: 1, at_iter: 30, kind: FaultKind::Poison { mode: PoisonMode::Nan } }
+        );
+        assert_eq!(plan.events[1].kind, FaultKind::Poison { mode: PoisonMode::Inf });
+        assert_eq!(plan.events[2].kind, FaultKind::Poison { mode: PoisonMode::Blowup });
+        assert_eq!(FaultPlan::parse(&plan.to_dsl()).unwrap(), plan);
+        // default mode is nan; the sick rank keeps running (non-terminal)
+        let p = FaultPlan::parse("poison@1:30").unwrap();
+        assert_eq!(p.events[0].kind, FaultKind::Poison { mode: PoisonMode::Nan });
+        assert!(!p.events[0].kind.is_terminal());
+        assert!(p.killed_ranks().is_empty());
+        assert!(!p.needs_checkpoints());
+    }
+
+    #[test]
     fn bad_dsl_is_refused() {
         for bad in [
             "boom@1:5",          // unknown kind
@@ -422,6 +500,8 @@ mod tests {
             "restart@1:2:z",     // non-integer delay
             "kill@1:2:3:4",      // too many fields
             "kill",              // no address
+            "poison@1:2:boom",   // unknown poison mode
+            "poison@1:2:nan:3",  // too many fields
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must be refused");
         }
@@ -469,6 +549,13 @@ mod tests {
         // default netdown outage
         let p = FaultPlan::parse("netdown@0-1:5").unwrap();
         assert_eq!(p.net_events[0].kind, NetFaultKind::Down { outage_ms: 0 });
+        // netcorrupt is modal with a percentage, like netdrop
+        let p = FaultPlan::parse("netcorrupt@1-0:20:10").unwrap();
+        assert_eq!(
+            p.net_events[0],
+            NetFaultEvent { from: 1, to: 0, at_iter: 20, kind: NetFaultKind::Corrupt { pct: 10 } }
+        );
+        assert_eq!(p.to_dsl(), "netcorrupt@1-0:20:10");
     }
 
     #[test]
@@ -485,6 +572,9 @@ mod tests {
             "netdown@1-0:5:x",   // non-integer outage
             "netdrop@x-0:5:10",  // non-integer FROM
             "netdrop@1-0:5:10:9", // too many fields
+            "netcorrupt@1-0:5",  // corrupt needs a pct
+            "netcorrupt@1-0:5:0", // 0% is a dormant event
+            "netcorrupt@1-0:5:101", // > 100%
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must be refused");
         }

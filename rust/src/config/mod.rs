@@ -4,7 +4,7 @@
 pub mod faults;
 pub mod toml;
 
-pub use faults::{FaultEvent, FaultKind, FaultPlan, NetFaultEvent, NetFaultKind};
+pub use faults::{FaultEvent, FaultKind, FaultPlan, NetFaultEvent, NetFaultKind, PoisonMode};
 
 use crate::util::json::JsonBuilder;
 use anyhow::{bail, Context, Result};
@@ -588,6 +588,26 @@ pub struct TrainConfig {
     /// buffers are masked out of the merge ([`crate::gaspi::liveness`]).
     /// Must be >= 1 (0 would suspect everyone on the first poll).
     pub lease_polls: usize,
+    /// Numeric receive guard: reject a delivered block whose max-abs
+    /// norm exceeds `guard_factor` times the running EMA of this
+    /// worker's own block norms (0.0 = guard off; values > 0 must be
+    /// finite and > 1).  Non-finite payloads are always rejected
+    /// regardless of this knob.
+    pub guard_factor: f32,
+    /// Consecutive clean deliveries a quarantined peer must produce
+    /// before its buffers are admitted to the merge again (>= 1).
+    pub quarantine_clean: usize,
+    /// Divergence watchdog: a trace-point objective that is non-finite
+    /// or more than `rollback_factor` times the best seen so far counts
+    /// against the leader's bad streak (0.0 = watchdog off; values > 0
+    /// must be finite and > 1, and require `ckpt_interval >= 1` so
+    /// there is a checkpoint to roll back to).
+    pub rollback_factor: f32,
+    /// Consecutive bad trace points before the watchdog triggers (>= 1).
+    pub rollback_window: usize,
+    /// Maximum rollbacks per run before the watchdog gives up and lets
+    /// the run burn to completion (>= 1; bounds retry loops).
+    pub rollback_budget: usize,
     /// Checkpoint every this many iterations (0 = checkpointing off).
     /// Required >= 1 whenever the fault plan contains `restart` events.
     pub ckpt_interval: usize,
@@ -645,6 +665,11 @@ impl TrainConfig {
             comm: CommMode::Full,
             adapt_interval: 16,
             lease_polls: 128,
+            guard_factor: 0.0,
+            quarantine_clean: 4,
+            rollback_factor: 0.0,
+            rollback_window: 3,
+            rollback_budget: 2,
             ckpt_interval: 0,
             ckpt_dir: None,
             transport: TransportKind::Inproc,
@@ -736,6 +761,42 @@ impl TrainConfig {
             // a zero lease would suspect every peer on the first poll and
             // mask all communication — refuse loudly, like send_interval
             bail!("lease_polls must be >= 1 (0 suspects every peer immediately)");
+        }
+        if self.guard_factor != 0.0 && !(self.guard_factor.is_finite() && self.guard_factor > 1.0)
+        {
+            // a threshold at or below 1x the own-norm baseline would
+            // reject ordinary peer states; NaN would reject nothing
+            bail!(
+                "guard_factor must be 0 (off) or a finite value > 1 (got {})",
+                self.guard_factor
+            );
+        }
+        if self.quarantine_clean == 0 {
+            // the requalification streak is a countdown; 0 would re-admit
+            // a poisoning peer on the very delivery that quarantined it
+            bail!("quarantine_clean must be >= 1");
+        }
+        if self.rollback_factor != 0.0 {
+            if !(self.rollback_factor.is_finite() && self.rollback_factor > 1.0) {
+                bail!(
+                    "rollback_factor must be 0 (off) or a finite value > 1 (got {})",
+                    self.rollback_factor
+                );
+            }
+            if self.ckpt_interval == 0 {
+                // a watchdog with nothing to roll back to would lie
+                // dormant — refused like ckpt_dir without an interval
+                bail!(
+                    "rollback_factor > 0 needs ckpt_interval >= 1 \
+                     (nothing to restore from)"
+                );
+            }
+        }
+        if self.rollback_window == 0 {
+            bail!("rollback_window must be >= 1");
+        }
+        if self.rollback_budget == 0 {
+            bail!("rollback_budget must be >= 1");
         }
         if self.transport != TransportKind::Inproc && self.method == Method::Batch {
             // alg. 1 never touches the one-sided substrate: a transport
@@ -917,8 +978,10 @@ impl TrainConfig {
                 }
             }
         }
-        if !(self.eps > 0.0) {
-            bail!("eps must be > 0 (paper: Require eps > 0)");
+        if !(self.eps > 0.0) || !self.eps.is_finite() {
+            // `> 0.0` alone passes +inf (and an inf step size NaNs the
+            // state on the first update); NaN already fails the compare
+            bail!("eps must be a finite value > 0 (paper: Require eps > 0)");
         }
         if self.n_buffers == 0 && self.method == Method::Asgd {
             bail!("asgd needs >= 1 external buffer");
@@ -941,6 +1004,28 @@ impl TrainConfig {
                 "shard size {shard} < minibatch {} — more data or fewer workers",
                 self.minibatch
             );
+        }
+        // Generator floats reach the kernels unchecked otherwise: a NaN
+        // cluster_std poisons every sample before the first iteration.
+        match self.data.kind {
+            DataKind::Synthetic {
+                cluster_std,
+                min_dist,
+                ..
+            } => {
+                if !(cluster_std > 0.0) || !cluster_std.is_finite() {
+                    bail!("cluster_std must be a finite value > 0 (got {cluster_std})");
+                }
+                if !(min_dist > 0.0) || !min_dist.is_finite() {
+                    bail!("min_dist must be a finite value > 0 (got {min_dist})");
+                }
+            }
+            DataKind::Linear { noise } => {
+                if !(noise >= 0.0) || !noise.is_finite() {
+                    bail!("noise must be a finite value >= 0 (got {noise})");
+                }
+            }
+            DataKind::Hog { .. } => {}
         }
         Ok(())
     }
@@ -969,8 +1054,18 @@ impl TrainConfig {
             StalenessMode::Scaled { tau } => format!(" staleness=scaled:{tau}"),
             StalenessMode::Momentum { beta } => format!(" staleness=momentum:{beta}"),
         };
+        let guard = if self.guard_factor > 0.0 {
+            format!(" guard={}", self.guard_factor)
+        } else {
+            String::new()
+        };
+        let rollback = if self.rollback_factor > 0.0 {
+            format!(" rollback={}x{}", self.rollback_factor, self.rollback_window)
+        } else {
+            String::new()
+        };
         format!(
-            "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}{}{}{}{}",
+            "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}{}{}{}{}{}{}",
             self.method.name(),
             self.model.name(),
             self.workers,
@@ -982,6 +1077,8 @@ impl TrainConfig {
             self.backend.name(),
             comm,
             staleness,
+            guard,
+            rollback,
             transport,
             faults
         )
@@ -1003,6 +1100,11 @@ impl TrainConfig {
             .num("min_chunks", self.comm.chunk_span().0 as f64)
             .num("max_chunks", self.comm.chunk_span().1 as f64)
             .num("lease_polls", self.lease_polls as f64)
+            .num("guard_factor", self.guard_factor as f64)
+            .num("quarantine_clean", self.quarantine_clean as f64)
+            .num("rollback_factor", self.rollback_factor as f64)
+            .num("rollback_window", self.rollback_window as f64)
+            .num("rollback_budget", self.rollback_budget as f64)
             .num("ckpt_interval", self.ckpt_interval as f64)
             .str("ckpt_dir", self.ckpt_dir.as_deref().unwrap_or(""))
             .str("transport", self.transport.name())
@@ -1101,6 +1203,10 @@ impl TrainConfig {
         cfg.adapt_interval = get_usize("adapt_interval", cfg.adapt_interval)?;
         // no clamping: validate() rejects lease_polls == 0 loudly
         cfg.lease_polls = get_usize("lease_polls", cfg.lease_polls)?;
+        // no clamping either: validate() bounds the integrity knobs
+        cfg.quarantine_clean = get_usize("quarantine_clean", cfg.quarantine_clean)?;
+        cfg.rollback_window = get_usize("rollback_window", cfg.rollback_window)?;
+        cfg.rollback_budget = get_usize("rollback_budget", cfg.rollback_budget)?;
         cfg.ckpt_interval = get_usize("ckpt_interval", cfg.ckpt_interval)?;
         if let Some(v) = t.get("ckpt_dir") {
             cfg.ckpt_dir = Some(v.as_str().context("ckpt_dir must be a string")?.to_string());
@@ -1155,6 +1261,12 @@ impl TrainConfig {
             cfg.staleness,
         )? {
             cfg.staleness = staleness;
+        }
+        if let Some(v) = opt_f32("guard_factor")? {
+            cfg.guard_factor = v;
+        }
+        if let Some(v) = opt_f32("rollback_factor")? {
+            cfg.rollback_factor = v;
         }
         if let Some(v) = t.get("artifact_dir") {
             cfg.artifact_dir = v.as_str().context("artifact_dir must be a string")?.to_string();
@@ -1247,6 +1359,11 @@ impl TrainConfig {
         }
         let _ = writeln!(s, "adapt_interval = {}", self.adapt_interval);
         let _ = writeln!(s, "lease_polls = {}", self.lease_polls);
+        let _ = writeln!(s, "guard_factor = {:?}", self.guard_factor);
+        let _ = writeln!(s, "quarantine_clean = {}", self.quarantine_clean);
+        let _ = writeln!(s, "rollback_factor = {:?}", self.rollback_factor);
+        let _ = writeln!(s, "rollback_window = {}", self.rollback_window);
+        let _ = writeln!(s, "rollback_budget = {}", self.rollback_budget);
         let _ = writeln!(s, "ckpt_interval = {}", self.ckpt_interval);
         if let Some(dir) = &self.ckpt_dir {
             let _ = writeln!(s, "ckpt_dir = \"{dir}\"");
@@ -1527,6 +1644,115 @@ mod tests {
         // a garbled plan is a parse error, not a silent empty plan
         assert!(TrainConfig::from_toml_str(
             "[train]\nworkers = 4\nfaults = \"boom@1:2\"\n[data]\nn_samples = 100000\n"
+        )
+        .is_err());
+    }
+
+    /// The numeric-integrity knobs follow the same refuse-loudly policy:
+    /// a guard threshold at or below the baseline, a zero requalification
+    /// streak, or a watchdog with no checkpoint to roll back to are
+    /// config errors, not runtime surprises.
+    #[test]
+    fn validation_bounds_numeric_integrity_knobs() {
+        let base = || TrainConfig::asgd_default(10, 10, 500);
+        // guard_factor: 0 means off; anything else must be finite and > 1
+        let mut c = base();
+        c.guard_factor = 8.0;
+        c.validate().unwrap();
+        c.guard_factor = 1.0;
+        assert!(c.validate().is_err());
+        c.guard_factor = f32::NAN;
+        assert!(c.validate().is_err());
+        c.guard_factor = f32::INFINITY;
+        assert!(c.validate().is_err());
+        c.guard_factor = -2.0;
+        assert!(c.validate().is_err());
+        // the streak / window / budget knobs are countdowns: >= 1
+        let mut c = base();
+        c.quarantine_clean = 0;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.rollback_window = 0;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.rollback_budget = 0;
+        assert!(c.validate().is_err());
+        // the watchdog without a checkpoint would lie dormant: refused
+        let mut c = base();
+        c.rollback_factor = 4.0;
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("ckpt_interval"), "{err:#}");
+        c.ckpt_interval = 10;
+        c.validate().unwrap();
+        c.rollback_factor = f32::INFINITY;
+        assert!(c.validate().is_err());
+        c.rollback_factor = 0.5;
+        assert!(c.validate().is_err());
+    }
+
+    /// Float-knob audit (PR 9): `> 0.0`-style checks pass +inf, and the
+    /// data-generator floats used to reach the kernels unchecked — a NaN
+    /// cluster_std poisons every sample before the first iteration.
+    #[test]
+    fn validation_audits_float_knobs_for_finiteness() {
+        let base = || TrainConfig::asgd_default(10, 10, 500);
+        let mut c = base();
+        c.eps = f32::INFINITY;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.eps = f32::NAN;
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.data.kind = DataKind::Synthetic {
+            k_true: 10,
+            cluster_std: f32::NAN,
+            min_dist: 8.0,
+        };
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.data.kind = DataKind::Synthetic {
+            k_true: 10,
+            cluster_std: 1.0,
+            min_dist: f32::INFINITY,
+        };
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.data.kind = DataKind::Linear { noise: f32::NAN };
+        assert!(c.validate().is_err());
+        let mut c = base();
+        c.data.kind = DataKind::Linear { noise: 0.0 }; // noiseless is fine
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn integrity_knobs_roundtrip_through_toml() {
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\nguard_factor = 8.0\nquarantine_clean = 2\n\
+             rollback_factor = 4.0\nrollback_window = 2\nrollback_budget = 3\n\
+             ckpt_interval = 10\n[data]\nn_samples = 100000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.guard_factor, 8.0);
+        assert_eq!(cfg.quarantine_clean, 2);
+        assert_eq!(cfg.rollback_factor, 4.0);
+        assert_eq!(cfg.rollback_window, 2);
+        assert_eq!(cfg.rollback_budget, 3);
+        // the serializer carries them back — the multiprocess driver's
+        // config handoff depends on this round trip
+        let again = TrainConfig::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(again.guard_factor, 8.0);
+        assert_eq!(again.quarantine_clean, 2);
+        assert_eq!(again.rollback_factor, 4.0);
+        assert_eq!(again.rollback_window, 2);
+        assert_eq!(again.rollback_budget, 3);
+        let j = cfg.to_json();
+        assert_eq!(j.get("guard_factor").unwrap().as_f64(), Some(8.0));
+        assert_eq!(j.get("rollback_budget").unwrap().as_f64(), Some(3.0));
+        assert!(cfg.describe().contains("guard=8"));
+        assert!(cfg.describe().contains("rollback=4x2"));
+        // bad values are refused via TOML too, not silently clamped
+        assert!(TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\nguard_factor = 0.5\n[data]\nn_samples = 100000\n"
         )
         .is_err());
     }

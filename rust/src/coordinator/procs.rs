@@ -51,9 +51,15 @@ use std::process::Child;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// Magic leading every worker result file ("ASGDRES2", little-endian).
-/// v2 appends the per-peer staleness histogram after the stat words.
-const RESULT_MAGIC: u64 = u64::from_le_bytes(*b"ASGDRES2");
+/// Magic leading every worker result file ("ASGDRES3", little-endian).
+/// v2 appended the per-peer staleness histogram after the stat words;
+/// v3 widens the stat vector to the full [`StatsSnapshot`] field set
+/// (wire/integrity counters included).
+const RESULT_MAGIC: u64 = u64::from_le_bytes(*b"ASGDRES3");
+
+/// Stat words in a result file: one per [`StatsSnapshot`] field, in
+/// declaration order.
+const STAT_WORDS: usize = 31;
 
 /// Per-rank terminal status tracked by the parent (mirror of the
 /// elastic supervisor's bookkeeping).
@@ -220,7 +226,23 @@ fn drive(
             let (rank, _child) = crew.0.remove(i);
             progressed = true;
             ensure!(status.success(), "worker process {rank} exited with {status}");
-            let res = read_result(&dir, rank)?;
+            let res = match read_result(&dir, rank) {
+                Ok(res) => res,
+                Err(e) => {
+                    // a damaged result file loses one rank's contribution,
+                    // not the whole run: mark the rank dead and let the
+                    // final aggregation run over the survivors, with the
+                    // loss on the ledger instead of an abort
+                    log::error!(
+                        "worker process {rank}: result file is corrupt ({e:#}); \
+                         dropping its contribution and aggregating survivors only"
+                    );
+                    comm.corrupt_results += 1;
+                    states[rank] = RankState::Dead;
+                    outstanding -= 1;
+                    continue;
+                }
+            };
             iters_per_rank[rank] += res.iters;
             if rank == 0 {
                 trace.extend(res.trace.iter().copied());
@@ -356,16 +378,25 @@ pub fn run_child(args: &Args) -> Result<()> {
             std::thread::sleep(std::time::Duration::from_millis(delay_ms));
         }
         match ckpt.as_ref().and_then(|s| s.load(rank)) {
-            Some(bytes) => {
-                let snap = Checkpoint::decode(&bytes)
-                    .with_context(|| format!("restoring rank {rank}"))?;
-                shard.fast_forward(snap.shard_epochs, snap.shard_cursor as usize);
-                w_init = snap.state;
-                start_iter = snap.iter;
-                rng_state = Some(snap.rng);
-                resume_comm = Some((snap.ctrl_chunks, snap.dirty));
-                world.stats.rank(rank).restores.add(1);
-            }
+            Some(bytes) => match Checkpoint::decode(&bytes) {
+                Ok(snap) => {
+                    shard.fast_forward(snap.shard_epochs, snap.shard_cursor as usize);
+                    w_init = snap.state;
+                    start_iter = snap.iter;
+                    rng_state = Some(snap.rng);
+                    resume_comm = Some((snap.ctrl_chunks, snap.dirty));
+                    world.stats.rank(rank).restores.add(1);
+                }
+                Err(e) => {
+                    // a damaged checkpoint must not kill the rank for
+                    // good: restart the shard from w_0 (loudly — the
+                    // rank loses progress, the run keeps its worker)
+                    log::error!(
+                        "rank {rank}: durable checkpoint is corrupt ({e:#}); \
+                         restarting from scratch"
+                    );
+                }
+            },
             None if fresh_ok => log::info!("rank {rank}: no checkpoint on disk; starting fresh"),
             None => bail!("rank {rank} died before its first durable checkpoint"),
         }
@@ -409,7 +440,7 @@ pub fn run_child(args: &Args) -> Result<()> {
 // ---- result-file codec ------------------------------------------------
 //
 // magic u64 | rank u32 | iters u64 | death u8 + at u64 + after_ms u64 |
-// events_consumed u32 | state (len u64 + f32 bits) | 19 stat words |
+// events_consumed u32 | state (len u64 + f32 bits) | STAT_WORDS words |
 // staleness (n_peers u64 + STALE_BUCKETS u64 per peer) |
 // trace (count u64 + 4 f64 per point) | fnv1a-64 checksum
 
@@ -527,7 +558,7 @@ fn decode_result(bytes: &[u8]) -> Result<ProcResult> {
     for _ in 0..state_len {
         state.push(f32::from_bits(r.u32()?));
     }
-    let mut words = [0u64; 19];
+    let mut words = [0u64; STAT_WORDS];
     for w in &mut words {
         *w = r.u64()?;
     }
@@ -564,7 +595,7 @@ fn read_result(dir: &Path, rank: usize) -> Result<ProcResult> {
 
 /// The snapshot's counters as a fixed word vector (codec + summation
 /// share one field order: declaration order of [`StatsSnapshot`]).
-fn snapshot_words(s: &StatsSnapshot) -> [u64; 19] {
+fn snapshot_words(s: &StatsSnapshot) -> [u64; STAT_WORDS] {
     [
         s.sent,
         s.bytes_sent,
@@ -585,10 +616,22 @@ fn snapshot_words(s: &StatsSnapshot) -> [u64; 19] {
         s.gossip_seeded,
         s.dead_masked,
         s.restores,
+        s.frames_failed,
+        s.frames_retried,
+        s.frames_dropped_injected,
+        s.link_down,
+        s.reconnects,
+        s.frames_corrupt,
+        s.non_finite_rejected,
+        s.norm_rejected,
+        s.quarantined,
+        s.requalified,
+        s.rollbacks,
+        s.corrupt_results,
     ]
 }
 
-fn snapshot_from_words(w: &[u64; 19]) -> StatsSnapshot {
+fn snapshot_from_words(w: &[u64; STAT_WORDS]) -> StatsSnapshot {
     StatsSnapshot {
         sent: w[0],
         bytes_sent: w[1],
@@ -609,6 +652,18 @@ fn snapshot_from_words(w: &[u64; 19]) -> StatsSnapshot {
         gossip_seeded: w[16],
         dead_masked: w[17],
         restores: w[18],
+        frames_failed: w[19],
+        frames_retried: w[20],
+        frames_dropped_injected: w[21],
+        link_down: w[22],
+        reconnects: w[23],
+        frames_corrupt: w[24],
+        non_finite_rejected: w[25],
+        norm_rejected: w[26],
+        quarantined: w[27],
+        requalified: w[28],
+        rollbacks: w[29],
+        corrupt_results: w[30],
     }
 }
 
@@ -654,7 +709,21 @@ mod tests {
             death: Some((37, FaultKind::Restart { after_ms: 15 })),
             events_consumed: 2,
         };
-        let stats = StatsSnapshot { sent: 7, chunk_lost: 3, restores: 1, ..Default::default() };
+        let stats = StatsSnapshot {
+            sent: 7,
+            chunk_lost: 3,
+            restores: 1,
+            // v3 words: the wire/integrity counters must survive the
+            // process boundary too (PR 8's socket counters silently
+            // did not — the codec stopped at restores)
+            frames_retried: 2,
+            reconnects: 1,
+            frames_corrupt: 4,
+            non_finite_rejected: 2,
+            quarantined: 1,
+            rollbacks: 1,
+            ..Default::default()
+        };
         (res, stats)
     }
 
@@ -672,6 +741,8 @@ mod tests {
         assert_eq!(back.events_consumed, 2);
         assert_eq!(back.state, res.state);
         assert_eq!(back.stats, stats);
+        assert_eq!(back.stats.frames_corrupt, 4);
+        assert_eq!(back.stats.rollbacks, 1);
         assert_eq!(back.staleness, sample_staleness());
         assert_eq!(back.trace.len(), 1);
         assert_eq!(back.trace[0].objective, 3.5);

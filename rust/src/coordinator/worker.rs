@@ -36,16 +36,40 @@
 //! deterministically at this rank's own iteration counter (a kill or
 //! restart exits the loop with [`WorkerResult::death`] set — the
 //! elastic supervisor decides what happens next).
+//!
+//! Numeric integrity (PR 9) rides it too, in three layers:
+//!
+//! * **Receive guards.**  Every Fresh payload is scanned in one integer
+//!   pass ([`scan_finite_max`]) before admission: a non-finite value or
+//!   an ∞-norm beyond `guard_factor` x the running EMA of this rank's
+//!   *own* block norms rejects the delivery (`non_finite_rejected` /
+//!   `norm_rejected`) and quarantines the sender in the liveness view
+//!   (`quarantined`; `quarantine_clean` consecutive clean deliveries
+//!   requalify it).  Unlike suspicion masking, a rejected delivery is
+//!   *consumed*, not deferred — re-polling poison would re-offer the
+//!   same bad bytes forever.
+//! * **Poison faults.**  `poison@RANK:ITER[:nan|inf|blowup]` corrupts
+//!   this rank's own state in place and keeps running — the receivers'
+//!   guards, not the sick rank, must contain the damage.
+//! * **Divergence rollback.**  The leader's trace doubles as a
+//!   watchdog: an objective that is non-finite, or stays above
+//!   `rollback_factor` x the best seen for `rollback_window`
+//!   consecutive trace points, exits the loop as a zero-delay restart
+//!   (`rollbacks`) and rides the elastic supervisor's normal
+//!   restore-from-checkpoint path — bounded by `rollback_budget`.
+//!   Checkpoints are health-gated so the restore point is never a state
+//!   the guards would themselves reject.
 
 use crate::ckpt::{Checkpoint, CkptStore};
 use crate::config::{
-    CommMode, FaultEvent, FaultKind, Method, RacePolicy, StalenessMode, TrainConfig,
+    CommMode, FaultEvent, FaultKind, Method, PoisonMode, RacePolicy, StalenessMode, TrainConfig,
 };
 use crate::data::partition::Shard;
 use crate::gaspi::liveness::admit_presence;
 use crate::gaspi::sched::plan_send_into;
 use crate::gaspi::transport::shmem::CtlRegion;
 use crate::gaspi::{AdaptiveController, ChunkLayout, DirtyMap, LivenessView, ReadOutcome, World};
+use crate::kernels::simd::{scan_finite_max, NON_FINITE_BITS};
 use crate::kernels::ExtPresence;
 use crate::metrics::TracePoint;
 use crate::models::Model;
@@ -294,8 +318,25 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
     // lease-based liveness: one view per worker, refreshed every poll
     // (see gaspi::liveness for the contract).  Only meaningful when the
     // run communicates — silent workers neither beat nor suspect.
-    let mut liveness =
-        communicate.then(|| LivenessView::new(world.ranks(), rank, cfg.lease_polls as u64));
+    let mut liveness = communicate.then(|| {
+        LivenessView::new(world.ranks(), rank, cfg.lease_polls as u64)
+            .with_quarantine_clean(cfg.quarantine_clean as u64)
+    });
+    // numeric guards (PR 9): the non-finite scan is always on for
+    // communicating runs; the norm-explosion guard engages only when
+    // guard_factor > 0, comparing deliveries against an EMA of this
+    // rank's *own* block ∞-norms — the only scale baseline that needs
+    // no coordination.  0.0 = "no baseline yet" (the guard stays open).
+    let guard_on = communicate && cfg.guard_factor > 0.0;
+    let mut norm_ema = vec![0.0f32; if guard_on { n_chunks } else { 0 }];
+    // divergence watchdog (PR 9): only the tracing rank evaluates the
+    // objective, so only it can watch for divergence.  `state_healthy`
+    // gates checkpoints; the budget is read off the shared `rollbacks`
+    // counter so it spans incarnations.
+    let watchdog_on = rank == 0 && cfg.rollback_factor > 0.0 && ckpt.is_some();
+    let mut best_obj = f64::INFINITY;
+    let mut bad_streak = 0usize;
+    let mut budget_logged = false;
     // fault machinery: pending events (sorted by at_iter), the sticky
     // straggler delay once its event fired, and a dedicated jitter RNG —
     // the worker RNG must stay untouched so checkpoints capture exactly
@@ -337,20 +378,41 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         // fault check, so even a crash at t = 0 has a restore point) ----
         if let Some(store) = &ckpt {
             if cfg.ckpt_interval > 0 && t % cfg.ckpt_interval as u64 == 0 {
-                let (shard_epochs, shard_cursor) = shard.draw_position();
-                let snap = Checkpoint {
-                    rank: rank as u32,
-                    iter: t,
-                    rng: rng.state(),
-                    shard_epochs,
-                    shard_cursor: shard_cursor as u64,
-                    // carry the learned communication state so a restore
-                    // resumes the feedback loop instead of re-learning
-                    ctrl_chunks: controller.as_ref().map_or(0, |c| c.chunks() as u32),
-                    dirty: dirty.as_ref().map_or(0, |d| d.mask()),
-                    state: w.clone(),
-                };
-                store.store(rank, snap.encode());
+                // numeric health gate (PR 9): never checkpoint a state
+                // the guards would reject from a peer — a rollback must
+                // restore *good* state, and skipping a write is always
+                // safe (the previous checkpoint stays the restore point)
+                let healthy = bad_streak == 0
+                    && if guard_on {
+                        (0..n_chunks).all(|c| {
+                            let s = scan_finite_max(&w[layout.bounds(c)]);
+                            s < NON_FINITE_BITS
+                                && (norm_ema[c] == 0.0
+                                    || f32::from_bits(s) <= cfg.guard_factor * norm_ema[c])
+                        })
+                    } else {
+                        scan_finite_max(&w) < NON_FINITE_BITS
+                    };
+                if healthy {
+                    let (shard_epochs, shard_cursor) = shard.draw_position();
+                    let snap = Checkpoint {
+                        rank: rank as u32,
+                        iter: t,
+                        rng: rng.state(),
+                        shard_epochs,
+                        shard_cursor: shard_cursor as u64,
+                        // carry the learned communication state so a restore
+                        // resumes the feedback loop instead of re-learning
+                        ctrl_chunks: controller.as_ref().map_or(0, |c| c.chunks() as u32),
+                        dirty: dirty.as_ref().map_or(0, |d| d.mask()),
+                        state: w.clone(),
+                    };
+                    store.store(rank, snap.encode());
+                } else {
+                    log::warn!(
+                        "rank {rank}: skipping checkpoint at iteration {t} (state unhealthy)"
+                    );
+                }
             }
         }
 
@@ -372,6 +434,32 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                     std::thread::sleep(Duration::from_millis(ms));
                 }
                 FaultKind::Straggle { delay_us } => straggle_us = Some(delay_us),
+                FaultKind::Poison { mode } => {
+                    // sick rank: corrupt the local state in place and
+                    // keep running — the receivers' guards, not this
+                    // worker, must contain the damage (every 7th word
+                    // so any block of >= 7 words carries poison; blowup
+                    // scales everything, staying finite but absurd)
+                    log::warn!("rank {rank}: injecting {} poison before iteration {t}",
+                        mode.name());
+                    match mode {
+                        PoisonMode::Nan => {
+                            for v in w.iter_mut().step_by(7) {
+                                *v = f32::NAN;
+                            }
+                        }
+                        PoisonMode::Inf => {
+                            for v in w.iter_mut().step_by(7) {
+                                *v = f32::INFINITY;
+                            }
+                        }
+                        PoisonMode::Blowup => {
+                            for v in w.iter_mut() {
+                                *v *= 1.0e20;
+                            }
+                        }
+                    }
+                }
             }
         }
         if let Some(delay_us) = straggle_us {
@@ -405,40 +493,84 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                     block_versions[idx] = version;
                     match outcome {
                         ReadOutcome::Fresh => {
-                            // a suspected sender's block is *deferred*,
-                            // not consumed: the presence bit stays clear
-                            // (the gate never evaluates a corpse's state)
-                            // and the reader's version bookkeeping is
-                            // rolled back, so the payload is re-polled
-                            // next iteration and delivered normally the
-                            // moment the suspicion resolves — a false
-                            // suspicion delays a merge, it never loses
-                            // the message
-                            if admit_presence(live, &mut presence, slot, c, sender) {
-                                any_fresh = true;
-                                torn_seen[idx] = u64::MAX;
-                                // measured delivery lag: own iteration
-                                // minus the sender's iteration at write
-                                // time (clamped — a sender that ran ahead
-                                // is simply "not stale")
-                                let lag = t.saturating_sub(iter);
-                                rx.staleness.record(sender as usize, lag);
-                                if let Some(tau) = stale_tau {
-                                    // delay-compensated weight, 1 at
-                                    // lag 0, 1/2 at lag tau
-                                    scratch.ext_weights[idx] =
-                                        1.0 / (1.0 + lag as f32 / tau);
+                            // numeric guards (PR 9): scan the payload
+                            // before anything else.  Unlike the
+                            // suspicion masking below, a rejected
+                            // delivery is *consumed* (version kept),
+                            // not deferred — re-polling poison would
+                            // just re-offer the same bad bytes every
+                            // iteration until the sender recovers.
+                            let scan = scan_finite_max(buf);
+                            let mut rejected = false;
+                            if scan >= NON_FINITE_BITS {
+                                rx.non_finite_rejected.add(1);
+                                rejected = true;
+                            } else if guard_on {
+                                let norm = f32::from_bits(scan);
+                                if norm_ema[c] > 0.0
+                                    && norm > cfg.guard_factor * norm_ema[c]
+                                {
+                                    rx.norm_rejected.add(1);
+                                    rejected = true;
                                 }
-                                if block_accounting {
-                                    rx.chunk_received.add(1);
+                            }
+                            if rejected {
+                                if live.quarantine(sender) {
+                                    rx.quarantined.add(1);
+                                    log::warn!(
+                                        "rank {rank}: quarantining rank {sender} \
+                                         (poisoned payload in block {c})"
+                                    );
                                 }
                             } else {
-                                block_versions[idx] = prev;
-                                if masked_seen[idx] != version {
-                                    // count each masked delivery once,
-                                    // not once per deferred re-poll
-                                    masked_seen[idx] = version;
-                                    rx.dead_masked.add(1);
+                                if live.record_clean(sender) {
+                                    rx.requalified.add(1);
+                                    log::info!(
+                                        "rank {rank}: rank {sender} requalified \
+                                         after consecutive clean deliveries"
+                                    );
+                                }
+                                // a suspected sender's block is *deferred*,
+                                // not consumed: the presence bit stays clear
+                                // (the gate never evaluates a corpse's state)
+                                // and the reader's version bookkeeping is
+                                // rolled back, so the payload is re-polled
+                                // next iteration and delivered normally the
+                                // moment the suspicion resolves — a false
+                                // suspicion delays a merge, it never loses
+                                // the message
+                                if admit_presence(live, &mut presence, slot, c, sender) {
+                                    any_fresh = true;
+                                    torn_seen[idx] = u64::MAX;
+                                    // measured delivery lag: own iteration
+                                    // minus the sender's iteration at write
+                                    // time (clamped — a sender that ran ahead
+                                    // is simply "not stale")
+                                    let lag = t.saturating_sub(iter);
+                                    rx.staleness.record(sender as usize, lag);
+                                    if let Some(tau) = stale_tau {
+                                        // delay-compensated weight, 1 at
+                                        // lag 0, 1/2 at lag tau
+                                        scratch.ext_weights[idx] =
+                                            1.0 / (1.0 + lag as f32 / tau);
+                                    }
+                                    if block_accounting {
+                                        rx.chunk_received.add(1);
+                                    }
+                                } else if live.is_quarantined(sender) {
+                                    // clean payload from a still-quarantined
+                                    // sender: it advanced the clean streak
+                                    // above but stays masked, and is consumed
+                                    // — only *new* deliveries may count
+                                    // toward requalification
+                                } else {
+                                    block_versions[idx] = prev;
+                                    if masked_seen[idx] != version {
+                                        // count each masked delivery once,
+                                        // not once per deferred re-poll
+                                        masked_seen[idx] = version;
+                                        rx.dead_masked.add(1);
+                                    }
                                 }
                             }
                         }
@@ -460,8 +592,15 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                                     // reported sender is the last writer
                                     // in; a suspected one drops the mix —
                                     // torn merges are best-effort by
-                                    // definition, so no deferral here)
-                                    if admit_presence(live, &mut presence, slot, c, sender) {
+                                    // definition, so no deferral here).
+                                    // A torn mix is still scanned: poison
+                                    // never enters the merge, but sender
+                                    // attribution on a torn read is
+                                    // unreliable, so no quarantine
+                                    if scan_finite_max(buf) >= NON_FINITE_BITS {
+                                        rx.non_finite_rejected.add(1);
+                                    } else if admit_presence(live, &mut presence, slot, c, sender)
+                                    {
                                         // a torn mix has no trustworthy
                                         // iter word — merge at full
                                         // weight, record no lag
@@ -510,6 +649,26 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                 // backend without merge/gradient visibility: everything
                 // may have moved, so everything is dirty (sound, no skips)
                 d.mark_all();
+            }
+        }
+
+        // ---- own-norm baseline (PR 9): fold this iteration's own block
+        // ∞-norms into the EMA the norm guard measures against.  A norm
+        // that would itself trip the guard is left out — the baseline
+        // must not chase the very explosion it exists to detect.
+        if guard_on {
+            for c in 0..n_chunks {
+                let scan = scan_finite_max(&w[layout.bounds(c)]);
+                if scan >= NON_FINITE_BITS {
+                    continue;
+                }
+                let own = f32::from_bits(scan);
+                let e = &mut norm_ema[c];
+                if *e == 0.0 {
+                    *e = own;
+                } else if own <= cfg.guard_factor * *e {
+                    *e = 0.9 * *e + 0.1 * own;
+                }
             }
         }
 
@@ -591,6 +750,47 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                 objective,
                 truth_error,
             });
+            // ---- divergence watchdog (PR 9): the trace doubles as the
+            // rollback trigger.  A non-finite objective can never
+            // recover on its own, so it trips the window immediately; a
+            // finite one must stay `rollback_factor` beyond the best
+            // seen for `rollback_window` consecutive trace points.
+            if watchdog_on {
+                if !objective.is_finite() {
+                    bad_streak = cfg.rollback_window;
+                } else if best_obj.is_finite()
+                    && objective > cfg.rollback_factor as f64 * best_obj
+                {
+                    bad_streak += 1;
+                } else {
+                    bad_streak = 0;
+                    best_obj = best_obj.min(objective);
+                }
+                if bad_streak >= cfg.rollback_window {
+                    let rxs = stats.rank(rank);
+                    if rxs.rollbacks.get() < cfg.rollback_budget as u64 {
+                        rxs.rollbacks.add(1);
+                        log::warn!(
+                            "rank {rank}: objective diverged ({objective:.3e} vs best \
+                             {best_obj:.3e}) at iteration {t}; rolling back to the last \
+                             good checkpoint"
+                        );
+                        // ride the elastic supervisor's restore path as a
+                        // zero-delay restart: same incarnation-rebirth
+                        // machinery, no new recovery semantics
+                        died = Some((t, FaultKind::Restart { after_ms: 0 }));
+                        break 'iters;
+                    }
+                    if !budget_logged {
+                        budget_logged = true;
+                        log::error!(
+                            "rank {rank}: divergence persists but the rollback budget \
+                             ({}) is exhausted; burning to completion",
+                            cfg.rollback_budget
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -57,9 +57,25 @@
 //!   local suspicion: the first heartbeat advance un-suspects as usual,
 //!   so stale gossip costs deferred merges, never correctness.
 //!
-//! Counter identity (pinned in tests): every resolution was first a
+//! * **Quarantine is numeric, not temporal (PR 9).**  A peer whose
+//!   delivered payload fails the receive-path numeric guards (non-finite
+//!   values or a norm explosion) is *quarantined*
+//!   ([`LivenessView::quarantine`]): masked out of the merge exactly
+//!   like a suspected rank, but the rejected delivery is consumed, not
+//!   deferred — re-polling poison until the sender recovers would just
+//!   re-offer the same bad bytes.  `quarantine_clean` consecutive clean
+//!   deliveries re-admit the sender ([`LivenessView::record_clean`]); a
+//!   rebirth clears the state outright (the poisoned process is gone,
+//!   the checkpoint it restored from was written healthy); and the
+//!   quarantine set is folded into the gossiped suspicion word, so late
+//!   joiners pre-mask a known-sick rank the same way they pre-mask a
+//!   known corpse.
+//!
+//! Counter identities (pinned in tests): every resolution was first a
 //! suspicion, so `false_suspicion + recovered <= suspected` per view and
-//! in the world totals (gossip-seeded suspicions tick `suspected` too).
+//! in the world totals (gossip-seeded suspicions tick `suspected` too);
+//! likewise every requalification was first a quarantine, so
+//! `requalified <= quarantined`.
 
 use super::segment::{HEARTBEAT_BEAT_BITS, HEARTBEAT_RETIRED_BIT};
 use super::stats::CommStats;
@@ -96,7 +112,16 @@ struct PeerLease {
     /// Consecutive polls without a change.
     stalled: u64,
     suspected: bool,
+    /// Numeric quarantine: the peer delivered a payload that failed the
+    /// receive-path guards and is masked until it proves itself clean.
+    quarantined: bool,
+    /// Consecutive clean deliveries observed while quarantined.
+    clean: u64,
 }
+
+/// Default number of consecutive clean deliveries a quarantined rank
+/// must produce before it is re-admitted (the `quarantine_clean` knob).
+pub const DEFAULT_QUARANTINE_CLEAN: u64 = 4;
 
 /// One worker's local, lease-based view of which peers are alive.
 ///
@@ -106,6 +131,8 @@ struct PeerLease {
 pub struct LivenessView {
     me: usize,
     lease_polls: u64,
+    /// Clean deliveries required to leave quarantine (>= 1).
+    quarantine_clean: u64,
     peers: Vec<PeerLease>,
 }
 
@@ -120,8 +147,18 @@ impl LivenessView {
         Self {
             me,
             lease_polls,
+            quarantine_clean: DEFAULT_QUARANTINE_CLEAN,
             peers: vec![PeerLease::default(); ranks],
         }
+    }
+
+    /// Override the quarantine exit threshold (the `quarantine_clean`
+    /// config knob).  `n == 0` would re-admit a poisoner without a
+    /// single clean delivery; `TrainConfig::validate` refuses it first.
+    pub fn with_quarantine_clean(mut self, n: u64) -> Self {
+        assert!(n >= 1, "quarantine_clean must be >= 1");
+        self.quarantine_clean = n;
+        self
     }
 
     /// Feed one observed heartbeat word for `rank`.  Pure bookkeeping
@@ -137,6 +174,12 @@ impl LivenessView {
             p.last = word;
             p.stalled = 0;
             p.suspected = false;
+            if rebirth {
+                // the poisoned process is gone; the incarnation that
+                // replaced it restored from a checkpoint written healthy
+                p.quarantined = false;
+                p.clean = 0;
+            }
             return match (was, rebirth) {
                 (true, true) => Some(Transition::Recovered),
                 (true, false) => Some(Transition::FalseSuspicion),
@@ -175,12 +218,17 @@ impl LivenessView {
     }
 
     /// This view's suspicion set as a gossip bitmask (bit `p` = rank `p`
-    /// suspected; ranks >= 64 are not gossiped — the shared u64 policy).
-    /// Published into the owner's segment alongside each heartbeat.
+    /// suspected *or* quarantined; ranks >= 64 are not gossiped — the
+    /// shared u64 policy).  Published into the owner's segment alongside
+    /// each heartbeat.  Folding quarantine into the same word means a
+    /// late joiner pre-masks a known-sick rank exactly as it pre-masks a
+    /// known corpse — and since a seeded suspicion resolves on the first
+    /// heartbeat advance, stale quarantine gossip costs deferred merges,
+    /// never correctness.
     pub fn suspicion_mask(&self) -> u64 {
         let mut mask = 0u64;
         for (p, lease) in self.peers.iter().enumerate().take(64) {
-            if lease.suspected {
+            if lease.suspected || lease.quarantined {
                 mask |= 1 << p;
             }
         }
@@ -247,14 +295,65 @@ impl LivenessView {
         self.peers.iter().filter(|p| p.suspected).count()
     }
 
+    /// Put `sender` into numeric quarantine: its deliveries stay masked
+    /// until `quarantine_clean` consecutive clean ones arrive.  A
+    /// poisoned delivery from an already-quarantined rank resets the
+    /// clean streak ("consecutive" is literal).  Returns whether the
+    /// rank was *newly* quarantined — the caller ticks `quarantined` on
+    /// true, so the counter means "quarantine entries", not "rejected
+    /// deliveries" (those have their own counters).
+    pub fn quarantine(&mut self, sender: u32) -> bool {
+        let Some(p) = self.peers.get_mut(sender as usize) else {
+            return false;
+        };
+        p.clean = 0;
+        if p.quarantined {
+            false
+        } else {
+            p.quarantined = true;
+            true
+        }
+    }
+
+    /// Record one clean delivery from `sender`.  No-op for healthy
+    /// ranks; for a quarantined one it advances the clean streak and, at
+    /// `quarantine_clean`, lifts the quarantine.  Returns whether this
+    /// delivery requalified the rank (the caller ticks `requalified`).
+    pub fn record_clean(&mut self, sender: u32) -> bool {
+        let Some(p) = self.peers.get_mut(sender as usize) else {
+            return false;
+        };
+        if !p.quarantined {
+            return false;
+        }
+        p.clean += 1;
+        if p.clean >= self.quarantine_clean {
+            p.quarantined = false;
+            p.clean = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Is `rank` currently quarantined by this view?
+    pub fn is_quarantined(&self, rank: usize) -> bool {
+        self.peers[rank].quarantined
+    }
+
+    /// Number of peers currently quarantined.
+    pub fn n_quarantined(&self) -> usize {
+        self.peers.iter().filter(|p| p.quarantined).count()
+    }
+
     /// Receive-path admission: may a delivered block from `sender` enter
-    /// the presence mask?  `false` for suspected senders — the block
-    /// stays masked out of the merge.  A sender rank outside the world
-    /// (never the case for real puts) is admitted: liveness only ever
-    /// *removes* information.
+    /// the presence mask?  `false` for suspected or quarantined senders
+    /// — the block stays masked out of the merge.  A sender rank outside
+    /// the world (never the case for real puts) is admitted: liveness
+    /// only ever *removes* information.
     pub fn admit(&self, sender: u32) -> bool {
         match self.peers.get(sender as usize) {
-            Some(p) => !p.suspected,
+            Some(p) => !p.suspected && !p.quarantined,
             None => true,
         }
     }
@@ -522,6 +621,59 @@ mod tests {
         assert_eq!(v.seed_from_gossip(&w, &stats), 0);
         assert!(!v.is_suspected(3), "cleanly retired is not dead");
         assert_eq!(stats.gossip_seeded.get(), 0);
+    }
+
+    /// The quarantine round-trip on the production admit path (PR 9):
+    /// poison → masked through [`admit_presence`] → N consecutive clean
+    /// deliveries → re-admitted.  One interleaved poison resets the
+    /// streak ("consecutive" is literal).
+    #[test]
+    fn quarantine_round_trips_through_the_production_admit_path() {
+        let mut v = LivenessView::new(3, 0, 50).with_quarantine_clean(3);
+        let mut presence = ExtPresence::new(2, 4);
+        // clean before any quarantine: admitted, record_clean is a no-op
+        assert!(admit_presence(&v, &mut presence, 0, 0, 2));
+        assert!(!v.record_clean(2));
+        // poison: newly quarantined once, every delivery masked
+        assert!(v.quarantine(2));
+        assert!(!v.quarantine(2), "re-poisoning is not a new quarantine entry");
+        assert!(v.is_quarantined(2));
+        assert!(!admit_presence(&v, &mut presence, 1, 0, 2));
+        assert!(!presence.present(1, 0), "quarantined sender must stay masked");
+        // two clean deliveries, then a relapse: the streak resets
+        assert!(!v.record_clean(2));
+        assert!(!v.record_clean(2));
+        v.quarantine(2);
+        // three consecutive clean deliveries requalify on the third
+        assert!(!v.record_clean(2));
+        assert!(!v.record_clean(2));
+        assert!(v.record_clean(2), "third consecutive clean delivery requalifies");
+        assert!(!v.is_quarantined(2));
+        assert!(admit_presence(&v, &mut presence, 1, 0, 2));
+        assert!(presence.present(1, 0));
+        // suspicion and quarantine mask independently
+        assert_eq!(v.n_quarantined(), 0);
+    }
+
+    /// Quarantine folds into the gossiped suspicion word, and a rebirth
+    /// (new incarnation) clears it outright — the poisoned process is
+    /// gone, so the clean-streak ritual would be theater.
+    #[test]
+    fn quarantine_gossips_and_clears_on_rebirth() {
+        let mut v = LivenessView::new(4, 0, 50);
+        v.observe(2, word(0, 1));
+        assert_eq!(v.suspicion_mask(), 0);
+        v.quarantine(2);
+        assert_eq!(v.suspicion_mask(), 1 << 2, "quarantine rides the gossip word");
+        assert!(!v.is_suspected(2), "quarantined is not suspected");
+        // same-incarnation beats do NOT clear quarantine (the sick
+        // process is still the one beating)
+        assert_eq!(v.observe(2, word(0, 2)), None);
+        assert!(v.is_quarantined(2));
+        // a rebirth does
+        assert_eq!(v.observe(2, word(1, 3)), None);
+        assert!(!v.is_quarantined(2), "rebirth clears quarantine");
+        assert_eq!(v.suspicion_mask(), 0);
     }
 
     /// Small-world quorum: at n == 3 the only independent candidate is a

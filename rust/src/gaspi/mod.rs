@@ -45,6 +45,29 @@
 //!   through its own `lease_polls` warm-up
 //!   ([`liveness::LivenessView::seed_from_gossip`]).
 //!
+//! The numeric-integrity subsystem (PR 9) extends it once more, from
+//! workers that *stop* to workers (and wires) that keep going with
+//! **wrong numbers**:
+//!
+//! * **corrupt message** — payload bytes damaged in flight; caught by
+//!   the wire-v2 FNV-1a-64 frame checksum before any mirror store
+//!   (`frames_corrupt`), discarded without condemning the link — a
+//!   damaged payload can never read Fresh (`docs/WIRE.md` §5.2).
+//! * **poisoned worker** — a rank whose *state* is wrong (NaN/Inf or a
+//!   norm explosion) while its heartbeat and checksums stay perfectly
+//!   healthy; receivers reject each delivery via the receive-path
+//!   guards (`non_finite_rejected`, `norm_rejected`) and quarantine
+//!   the sender in their liveness view ([`liveness::LivenessView`],
+//!   `quarantined`) until enough consecutive clean deliveries
+//!   requalify it (`requalified`) — masked exactly like a corpse, but
+//!   reversibly.
+//! * **diverged trajectory** — the damage already merged before any
+//!   guard existed to stop it, or the optimizer itself blew up; the
+//!   leader's trace doubles as a watchdog and abandons the trajectory
+//!   by riding the elastic supervisor's restore-from-checkpoint path
+//!   (`rollbacks`), bounded by a budget so a genuinely broken run
+//!   still terminates.
+//!
 //! No method in this module ever blocks or spins on another rank —
 //! communication is "free" in the paper's sense; the price is exactly the
 //! uncertainty catalogued above.

@@ -45,7 +45,9 @@ pub const WIRE_MAGIC: u64 = u64::from_le_bytes(*b"ASGDWIRE");
 
 /// Version of the segment word layout *and* the socket frame encoding.
 /// Bumped on any incompatible change; every attach/connect validates it.
-pub const WIRE_VERSION: u64 = 1;
+/// v2: FULL/GROUP socket frames carry a trailing FNV-1a-64 payload
+/// checksum word (see `docs/WIRE.md` §5).
+pub const WIRE_VERSION: u64 = 2;
 
 /// Upper bound on blocks per coalesced group put (and on the adaptive
 /// physical block count): the dirty bitmap and the merge touch mask pack

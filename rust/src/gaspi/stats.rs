@@ -101,6 +101,38 @@ pub struct CommStats {
     /// the rank rejoins under a bumped heartbeat incarnation (peers see
     /// a rebirth, not a silent gap).
     pub reconnects: Counter,
+    /// Socket transport: received frames whose payload checksum did not
+    /// match — the bytes were damaged between the sender's FNV-1a stamp
+    /// and the receiver's verify.  The frame is discarded before any
+    /// mirror store, so a corrupt payload can never read Fresh; one tick
+    /// per damaged frame, on the *receiver's* ledger.
+    pub frames_corrupt: Counter,
+    /// Numeric guard: Fresh deliveries rejected because the payload
+    /// contained a non-finite value (NaN/Inf).  The delivery is consumed
+    /// but never admitted to the merge, and the sender enters quarantine.
+    pub non_finite_rejected: Counter,
+    /// Numeric guard: Fresh deliveries rejected because the block's
+    /// infinity-norm exceeded `guard_factor` x the receiver's running
+    /// EMA of its own block norms (a finite but exploding state).
+    pub norm_rejected: Counter,
+    /// Quarantine: peers this rank placed under numeric quarantine after
+    /// a poisoned delivery.  One tick per entry into the state, not per
+    /// masked delivery (those tick the rejection counters above).
+    pub quarantined: Counter,
+    /// Quarantine: peers re-admitted after delivering `quarantine_clean`
+    /// consecutive clean payloads.
+    pub requalified: Counter,
+    /// Divergence watchdog: times the trace owner abandoned a diverging
+    /// trajectory (objective non-finite, or past `rollback_factor` x the
+    /// best seen for `rollback_window` consecutive trace points) and
+    /// restored from the last good checkpoint.
+    pub rollbacks: Counter,
+    /// Multiprocess driver: worker result files whose checksum or
+    /// structure failed to verify.  The parent drops that rank's
+    /// contribution (survivor-only aggregation) instead of failing the
+    /// surviving ranks; one tick per unreadable file, on the parent's
+    /// ledger.
+    pub corrupt_results: Counter,
     /// Per-peer staleness histogram over the deliveries this rank
     /// admitted: each Fresh (or accepted-torn) block's lag — the
     /// receiver's iteration minus the sender's `F_ITER` stamp — lands in
@@ -203,6 +235,13 @@ pub struct StatsSnapshot {
     pub frames_dropped_injected: u64,
     pub link_down: u64,
     pub reconnects: u64,
+    pub frames_corrupt: u64,
+    pub non_finite_rejected: u64,
+    pub norm_rejected: u64,
+    pub quarantined: u64,
+    pub requalified: u64,
+    pub rollbacks: u64,
+    pub corrupt_results: u64,
 }
 
 impl CommStats {
@@ -232,6 +271,13 @@ impl CommStats {
             frames_dropped_injected: self.frames_dropped_injected.get(),
             link_down: self.link_down.get(),
             reconnects: self.reconnects.get(),
+            frames_corrupt: self.frames_corrupt.get(),
+            non_finite_rejected: self.non_finite_rejected.get(),
+            norm_rejected: self.norm_rejected.get(),
+            quarantined: self.quarantined.get(),
+            requalified: self.requalified.get(),
+            rollbacks: self.rollbacks.get(),
+            corrupt_results: self.corrupt_results.get(),
         }
     }
 }
@@ -286,6 +332,13 @@ impl WorldStats {
             t.frames_dropped_injected += s.frames_dropped_injected;
             t.link_down += s.link_down;
             t.reconnects += s.reconnects;
+            t.frames_corrupt += s.frames_corrupt;
+            t.non_finite_rejected += s.non_finite_rejected;
+            t.norm_rejected += s.norm_rejected;
+            t.quarantined += s.quarantined;
+            t.requalified += s.requalified;
+            t.rollbacks += s.rollbacks;
+            t.corrupt_results += s.corrupt_results;
         }
         t
     }
@@ -453,5 +506,25 @@ mod tests {
         assert_eq!(t.reconnects, 1);
         // a link can only be re-established after it went down
         assert!(t.reconnects <= t.link_down);
+    }
+
+    #[test]
+    fn integrity_counters_aggregate() {
+        let ws = WorldStats::new(3);
+        ws.rank(0).frames_corrupt.add(4);
+        ws.rank(1).non_finite_rejected.add(2);
+        ws.rank(1).norm_rejected.add(1);
+        ws.rank(1).quarantined.add(1);
+        ws.rank(2).requalified.add(1);
+        ws.rank(0).rollbacks.add(1);
+        let t = ws.total();
+        assert_eq!(t.frames_corrupt, 4);
+        assert_eq!(t.non_finite_rejected, 2);
+        assert_eq!(t.norm_rejected, 1);
+        assert_eq!(t.quarantined, 1);
+        assert_eq!(t.requalified, 1);
+        assert_eq!(t.rollbacks, 1);
+        // a peer can only requalify after entering quarantine
+        assert!(t.requalified <= t.quarantined);
     }
 }

@@ -13,11 +13,21 @@
 //! HELLO (1): magic u64 | wire version u64 | state_len u64
 //!            | n_slots u64 | chunks u64 | from u32
 //! FULL  (2): from u32 | slot u32 | iter u64 | state_len x u32 (f32 bits)
+//!            | FNV-1a-64 payload checksum u64
 //! GROUP (3): from u32 | slot u32 | block_start u32 | block_count u32
 //!            | iter u64 | covered words x u32 (f32 bits)
+//!            | FNV-1a-64 payload checksum u64
 //! META  (4): from u32 | layout word u64 | heartbeat word u64
 //!            | suspicion word u64
 //! ```
+//!
+//! The checksum word (wire v2) is FNV-1a-64 over the payload bytes of
+//! the frame — the f32-bit words, exactly as they appear on the wire.
+//! A receiver verifies it before any mirror store: a mismatch ticks
+//! `frames_corrupt` on the *receiver's* ledger and discards the frame
+//! without condemning the connection (damaged payload bytes parse
+//! fine; only a malformed frame structure drops the link), so a
+//! corrupted payload can never read Fresh.
 //!
 //! A connection opens with exactly one `HELLO`; the acceptor validates
 //! magic, wire version and world shape and answers one byte — `0xA5`
@@ -54,13 +64,15 @@
 //! §4.4.
 //!
 //! Deterministic wire-level faults (`netdrop`/`netdelay`/`netdup`/
-//! `nettrunc`/`netdown` events of a [`crate::config::FaultPlan`]) are
+//! `nettrunc`/`netdown`/`netcorrupt` events of a
+//! [`crate::config::FaultPlan`]) are
 //! injected here, in the sender thread, at the frame layer — the one
 //! place every outgoing byte passes through — armed against the
 //! sender's own iteration watermark and counted on the sender's ledger
 //! (`frames_dropped_injected`).
 
 use super::{apply_block, apply_group, apply_state, Transport};
+use crate::ckpt::fnv1a;
 use crate::config::NetFaultEvent;
 use crate::config::NetFaultKind;
 use crate::gaspi::segment::{Segment, WIRE_MAGIC, WIRE_VERSION};
@@ -423,14 +435,17 @@ impl Transport for Socket {
     }
 
     fn put_state(&self, from: usize, to: usize, iter: u64, payload: &[f32], slot: usize) {
-        let mut body = Vec::with_capacity(17 + payload.len() * 4);
+        let mut body = Vec::with_capacity(25 + payload.len() * 4);
         body.push(FRAME_FULL);
         push_u32(&mut body, from as u32);
         push_u32(&mut body, slot as u32);
         push_u64(&mut body, iter);
+        let pay_start = body.len();
         for &x in payload {
             body.extend_from_slice(&x.to_bits().to_le_bytes());
         }
+        let sum = fnv1a(&body[pay_start..]);
+        push_u64(&mut body, sum);
         self.send(from, to, body, Some(iter));
     }
 
@@ -455,16 +470,19 @@ impl Transport for Socket {
         payload: &[f32],
         slot: usize,
     ) {
-        let mut body = Vec::with_capacity(25 + payload.len() * 4);
+        let mut body = Vec::with_capacity(33 + payload.len() * 4);
         body.push(FRAME_GROUP);
         push_u32(&mut body, from as u32);
         push_u32(&mut body, slot as u32);
         push_u32(&mut body, blocks.start as u32);
         push_u32(&mut body, blocks.len() as u32);
         push_u64(&mut body, iter);
+        let pay_start = body.len();
         for &x in payload {
             body.extend_from_slice(&x.to_bits().to_le_bytes());
         }
+        let sum = fnv1a(&body[pay_start..]);
+        push_u64(&mut body, sum);
         self.send(from, to, body, Some(iter));
     }
 
@@ -572,6 +590,7 @@ struct FaultInjector {
     drop_pct: u8,
     delay_ms: u64,
     dup_pct: u8,
+    corrupt_pct: u8,
     rng: Xoshiro256pp,
 }
 
@@ -584,6 +603,7 @@ impl FaultInjector {
             drop_pct: 0,
             delay_ms: 0,
             dup_pct: 0,
+            corrupt_pct: 0,
             rng: Xoshiro256pp::seed_from_u64(seed),
         }
     }
@@ -603,6 +623,7 @@ impl FaultInjector {
                 NetFaultKind::Dup { pct } => self.dup_pct = pct,
                 NetFaultKind::Trunc => trunc = true,
                 NetFaultKind::Down { outage_ms } => down = Some(outage_ms),
+                NetFaultKind::Corrupt { pct } => self.corrupt_pct = pct,
             }
             self.next += 1;
         }
@@ -617,6 +638,39 @@ impl FaultInjector {
     /// Does an armed `netdup` double this data frame?
     fn roll_dup(&mut self, iter: Option<u64>) -> bool {
         iter.is_some() && self.dup_pct > 0 && self.rng.next_below(100) < self.dup_pct as u64
+    }
+
+    /// Does an armed `netcorrupt` damage this data frame?
+    fn roll_corrupt(&mut self, iter: Option<u64>) -> bool {
+        iter.is_some()
+            && self.corrupt_pct > 0
+            && self.rng.next_below(100) < self.corrupt_pct as u64
+    }
+
+    /// XOR a seeded nonzero bit mask into one payload byte — after the
+    /// checksum was stamped, so the damage is exactly what the
+    /// receiver's verify must catch.  The frame structure (kind, header
+    /// fields, length prefix, checksum word) is left intact: this
+    /// models in-flight bit rot on the bytes, not a framing bug.  The
+    /// mask being nonzero guarantees the payload really changed, so
+    /// every injected corruption is detectable (`frames_corrupt` can be
+    /// asserted against the injected count).
+    fn corrupt_payload(&mut self, body: &[u8]) -> Vec<u8> {
+        let mut out = body.to_vec();
+        // payload region: after the fixed header, before the trailing
+        // checksum word (FULL header = 17 bytes, GROUP header = 25)
+        let start = match body[0] {
+            FRAME_GROUP => 25,
+            _ => 17,
+        };
+        let end = out.len().saturating_sub(8);
+        if start >= end {
+            return out;
+        }
+        let byte = start + self.rng.next_below((end - start) as u64) as usize;
+        let mask = 1 + self.rng.next_below(255) as u8;
+        out[byte] ^= mask;
+        out
     }
 }
 
@@ -710,9 +764,15 @@ fn deliver(
     if inj.delay_ms > 0 {
         sleep_interruptible(Duration::from_millis(inj.delay_ms), &ctx.shutdown);
     }
+    let corrupted = if inj.roll_corrupt(frame.iter) {
+        Some(inj.corrupt_payload(&frame.body))
+    } else {
+        None
+    };
+    let wire_body = corrupted.as_deref().unwrap_or(&frame.body);
     let copies = if inj.roll_dup(frame.iter) { 2 } else { 1 };
     for _ in 0..copies {
-        if let Err(e) = write_frame(&mut s, &frame.body) {
+        if let Err(e) = write_frame(&mut s, wire_body) {
             log_state(ctx, LinkState::Degraded, &format!("write failed: {e}"));
             return recover(ctx, backoff_rng, Some(&frame.body));
         }
@@ -1060,8 +1120,12 @@ fn apply_frame(
             let from = take_u32(body, &mut off)?;
             let slot = take_u32(body, &mut off)? as usize;
             let iter = take_u64(body, &mut off)?;
+            let pay_start = off;
             let payload = take_f32s(body, &mut off, layout.state_len)?;
             ensure!(slot < seg.n_slots(), "FULL frame slot {slot} out of range");
+            if !verify_payload(body, pay_start, off, &mut off, to, from, stats)? {
+                return Ok(());
+            }
             apply_state(seg, stats, to, from, iter, &payload, slot);
         }
         FRAME_GROUP => {
@@ -1077,7 +1141,11 @@ fn apply_frame(
             );
             let blocks = start..start + count;
             let words = layout.blocks_bounds(blocks.clone()).len();
+            let pay_start = off;
             let payload = take_f32s(body, &mut off, words)?;
+            if !verify_payload(body, pay_start, off, &mut off, to, from, stats)? {
+                return Ok(());
+            }
             if count == 1 {
                 apply_block(seg, stats, to, from, iter, start, &payload, slot);
             } else {
@@ -1103,6 +1171,33 @@ fn apply_frame(
     }
     ensure!(off == body.len(), "frame has {} trailing bytes", body.len() - off);
     Ok(())
+}
+
+/// Wire v2 payload integrity: consume the trailing checksum word and
+/// verify it against the payload bytes `pay_start..pay_end`.  A missing
+/// or short word is a malformed frame (error: the connection drops); a
+/// present-but-wrong word is damaged payload (tick `frames_corrupt` on
+/// the receiver's ledger, discard the frame, keep the connection).
+fn verify_payload(
+    body: &[u8],
+    pay_start: usize,
+    pay_end: usize,
+    off: &mut usize,
+    to: usize,
+    from: u32,
+    stats: &WorldStats,
+) -> Result<bool> {
+    let claimed = take_u64(body, off)?;
+    let actual = fnv1a(&body[pay_start..pay_end]);
+    if claimed != actual {
+        stats.rank(to).frames_corrupt.add(1);
+        log::warn!(
+            "socket transport: rank {to} discarding corrupt frame from rank {from} \
+             (checksum {claimed:#018x}, payload hashes to {actual:#018x})"
+        );
+        return Ok(false);
+    }
+    Ok(true)
 }
 
 // ---- byte helpers -------------------------------------------------------
@@ -1328,6 +1423,47 @@ mod tests {
         let mut buf = vec![0.0f32; l.chunk_len(0)];
         let (out, ..) = t.segment(1).read_block_into(0, 0, 0, &mut buf);
         assert_ne!(out, ReadOutcome::Fresh, "every data frame was dropped");
+    }
+
+    #[test]
+    fn injected_corruption_is_caught_by_the_checksum() {
+        let stats = Arc::new(WorldStats::new(2));
+        let plan = FaultPlan::parse("netcorrupt@0-1:0:100").unwrap();
+        let t = Socket::loopback_with_faults(2, 1, 12, 4, stats.clone(), plan.net_events, 42)
+            .unwrap();
+        let l = t.segment(1).layout();
+        let payload = vec![1.5f32; 12];
+        for i in 1..=3 {
+            t.put_state(0, 1, i, &payload, 0);
+        }
+        let words = l.blocks_bounds(1..3);
+        t.put_group(0, 1, 4, 1..3, &vec![2.5f32; words.len()], 0);
+        t.quiesce();
+        // every data frame was damaged on the wire and every damaged
+        // frame was caught: detection is proven, not assumed
+        assert_eq!(stats.rank(1).frames_corrupt.get(), 4);
+        assert_eq!(stats.rank(0).frames_dropped_injected.get(), 0, "corrupt frames still fly");
+        assert_eq!(stats.rank(0).frames_failed.get(), 0);
+        for c in 0..4 {
+            let mut buf = vec![0.0f32; l.chunk_len(c)];
+            let (out, ..) = t.segment(1).read_block_into(0, c, 0, &mut buf);
+            assert_ne!(out, ReadOutcome::Fresh, "no corrupted payload may read Fresh");
+        }
+    }
+
+    #[test]
+    fn clean_frames_pass_the_checksum() {
+        let stats = Arc::new(WorldStats::new(2));
+        let t = Socket::loopback(2, 1, 8, 2, stats.clone()).unwrap();
+        let payload: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        t.put_state(0, 1, 5, &payload, 0);
+        t.quiesce();
+        assert_eq!(stats.rank(1).frames_corrupt.get(), 0);
+        let l = t.segment(1).layout();
+        let mut buf = vec![0.0f32; l.chunk_len(0)];
+        let (out, sender, iter, _) = t.segment(1).read_block_into(0, 0, 0, &mut buf);
+        assert_eq!(out, ReadOutcome::Fresh);
+        assert_eq!((sender, iter), (0, 5));
     }
 
     #[test]

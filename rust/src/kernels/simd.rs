@@ -12,7 +12,10 @@
 //!    (PR 4): cache/register-blocked `sample x center` score tiles that
 //!    every mini-batch consumer (K-Means stats, linear-model dots, the
 //!    MLP forward/backprop) now runs through instead of one
-//!    sample-x-center dot at a time.
+//!    sample-x-center dot at a time,
+//! 7. [`scan_finite_max`] — the numeric-integrity scan (PR 9): one
+//!    integer pass over a delivered block that classifies it as
+//!    finite/non-finite and yields its ∞-norm.
 //!
 //! Dispatch is decided once per process: AVX2+FMA via
 //! `core::arch::x86_64` when `is_x86_feature_detected!` says so, NEON
@@ -294,6 +297,35 @@ pub fn momentum_fold(w: &mut [f32], p: &[f32], v: &mut [f32], beta: f32) {
         return;
     }
     scalar::momentum_fold(w, p, v, beta)
+}
+
+/// The magnitude-bits threshold at and above which [`scan_finite_max`]'s
+/// result encodes a non-finite element: `0x7F80_0000` is the bit pattern
+/// of +Inf, and every NaN payload sits above it.
+pub const NON_FINITE_BITS: u32 = 0x7F80_0000;
+
+/// Single-pass integrity scan over a block: the maximum of
+/// `to_bits(x) & 0x7FFF_FFFF` over every element.  Stripping the sign
+/// makes the IEEE 754 bit pattern order by magnitude (exponent-major),
+/// so the one integer max answers both guard questions at once — a
+/// result `>= `[`NON_FINITE_BITS`] means the block holds at least one
+/// NaN or ±Inf, and anything below decodes via `f32::from_bits` to the
+/// block's exact ∞-norm `max_i |x[i]|`.  Pure integer lane max, so every
+/// arm is bit-identical by construction; the empty slice returns 0
+/// (finite, zero norm).
+#[inline]
+pub fn scan_finite_max(x: &[f32]) -> u32 {
+    #[cfg(target_arch = "x86_64")]
+    if isa() == Isa::Avx2Fma {
+        // SAFETY: see `dot`.
+        return unsafe { avx2::scan_finite_max(x) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if isa() == Isa::Neon {
+        // SAFETY: see `dot`.
+        return unsafe { neon::scan_finite_max(x) };
+    }
+    scalar::scan_finite_max(x)
 }
 
 // ---------------------------------------------------------------------------
@@ -587,6 +619,18 @@ pub mod scalar {
         }
     }
 
+    /// Reference integrity scan: max of the sign-stripped bit patterns.
+    pub fn scan_finite_max(x: &[f32]) -> u32 {
+        let mut max = 0u32;
+        for v in x {
+            let m = v.to_bits() & 0x7FFF_FFFF;
+            if m > max {
+                max = m;
+            }
+        }
+        max
+    }
+
     /// Reference NT gemm: the 4-accumulator [`dot`] per (sample, center)
     /// pair — bit-identical to the pre-tile per-sample transcription.
     pub fn gemm_nt(x: &[f32], w: &[f32], b: usize, k: usize, d: usize, scores: &mut [f32]) {
@@ -875,6 +919,35 @@ pub mod avx2 {
             w[i] = p[i] + vi;
             i += 1;
         }
+    }
+
+    /// # Safety
+    /// See [`dot`].  Pure integer lane max over the sign-stripped f32
+    /// bit patterns — bit-identical to the scalar arm by construction.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scan_finite_max(x: &[f32]) -> u32 {
+        let n = x.len();
+        let mask = _mm256_set1_epi32(0x7FFF_FFFFu32 as i32);
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v = _mm256_loadu_si256(x.as_ptr().add(i) as *const __m256i);
+            acc = _mm256_max_epu32(acc, _mm256_and_si256(v, mask));
+            i += 8;
+        }
+        let hi = _mm256_extracti128_si256(acc, 1);
+        let mut m4 = _mm_max_epu32(_mm256_castsi256_si128(acc), hi);
+        m4 = _mm_max_epu32(m4, _mm_shuffle_epi32(m4, 0b00_00_11_10));
+        m4 = _mm_max_epu32(m4, _mm_shuffle_epi32(m4, 0b00_00_00_01));
+        let mut max = _mm_cvtsi128_si32(m4) as u32;
+        while i < n {
+            let m = x[i].to_bits() & 0x7FFF_FFFF;
+            if m > max {
+                max = m;
+            }
+            i += 1;
+        }
+        max
     }
 
     /// The register-blocked micro kernel over a packed `[d, kp]` panel:
@@ -1242,6 +1315,31 @@ pub mod neon {
         }
     }
 
+    /// # Safety
+    /// See [`dot`].  Pure integer lane max over the sign-stripped f32
+    /// bit patterns — bit-identical to the scalar arm by construction.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scan_finite_max(x: &[f32]) -> u32 {
+        let n = x.len();
+        let mask = vdupq_n_u32(0x7FFF_FFFF);
+        let mut acc = vdupq_n_u32(0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = vld1q_u32(x.as_ptr().add(i) as *const u32);
+            acc = vmaxq_u32(acc, vandq_u32(v, mask));
+            i += 4;
+        }
+        let mut max = vmaxvq_u32(acc);
+        while i < n {
+            let m = x[i].to_bits() & 0x7FFF_FFFF;
+            if m > max {
+                max = m;
+            }
+            i += 1;
+        }
+        max
+    }
+
     /// The register-blocked micro kernel over a packed `[d, kp]` panel —
     /// the NEON mirror of the AVX2 kernel at 4-lane width.
     ///
@@ -1451,6 +1549,19 @@ mod tests {
                 assert!((s - v).abs() < 1e-6 * s.abs().max(1.0), "gate rem={rem}: {s} vs {v}");
             }
 
+            // scan_finite_max: pure integer max, bit-identical — probe
+            // with a sign flip and (on one remainder) an injected NaN
+            let mut probe = a.clone();
+            probe[0] = -probe[0];
+            if rem == 3 {
+                probe[len / 2] = f32::NAN;
+            }
+            assert_eq!(
+                scalar::scan_finite_max(&probe),
+                unsafe { avx2::scan_finite_max(&probe) },
+                "scan_finite_max rem={rem}"
+            );
+
             // gemm micro kernel: sweep k and b remainders at this d
             // remainder (panel padding + partial stores + the 1-row tail)
             let d = len;
@@ -1579,6 +1690,19 @@ mod tests {
                 assert!((s - v).abs() < 1e-6 * s.abs().max(1.0), "gate rem={rem}: {s} vs {v}");
             }
 
+            // scan_finite_max: pure integer max, bit-identical — probe
+            // with a sign flip and (on one remainder) an injected NaN
+            let mut probe = a.clone();
+            probe[0] = -probe[0];
+            if rem == 3 {
+                probe[len / 2] = f32::NAN;
+            }
+            assert_eq!(
+                scalar::scan_finite_max(&probe),
+                unsafe { neon::scan_finite_max(&probe) },
+                "scan_finite_max rem={rem}"
+            );
+
             let d = len;
             for kk in [4usize, 5, 9, 16 + rem] {
                 for bb in [1usize, 3, 4, 7] {
@@ -1650,6 +1774,33 @@ mod tests {
             assert_eq!(bits(&w1), bits(&w2), "momentum_fold dispatch len={len}");
             assert_eq!(bits(&v1), bits(&v2), "momentum_fold velocity dispatch len={len}");
         }
+    }
+
+    /// [`scan_finite_max`] classifies and measures correctly on whatever
+    /// arm is active: finite blocks decode to the exact ∞-norm, any
+    /// NaN/Inf pushes the result to [`NON_FINITE_BITS`] or beyond, and
+    /// the sign of an element never matters.
+    #[test]
+    fn scan_finite_max_classifies_and_measures() {
+        let mut rng = Xoshiro256pp::seed_from_u64(61);
+        for len in [1usize, 3, 7, 8, 9, 24, 31, 100] {
+            let v = rand_vec(&mut rng, len);
+            let got = scan_finite_max(&v);
+            assert_eq!(got, scalar::scan_finite_max(&v), "dispatch parity len={len}");
+            assert!(got < NON_FINITE_BITS, "finite block misclassified len={len}");
+            let want = v.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            assert_eq!(f32::from_bits(got), want, "inf-norm len={len}");
+            for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                let mut p = v.clone();
+                p[len / 2] = bad;
+                assert!(scan_finite_max(&p) >= NON_FINITE_BITS, "missed {bad} at len={len}");
+            }
+            let neg: Vec<f32> = v.iter().map(|x| -x).collect();
+            assert_eq!(scan_finite_max(&neg), got, "sign sensitivity len={len}");
+        }
+        assert_eq!(scan_finite_max(&[]), 0, "empty block");
+        assert_eq!(scan_finite_max(&[-0.0]), 0, "negative zero");
+        assert_eq!(f32::from_bits(scan_finite_max(&[3.5, -7.25, 1.0])), 7.25);
     }
 
     /// With every selected weight exactly 1.0, the scaled merge is

@@ -96,6 +96,23 @@ fn print_report(args: &Args, report: &asgd::metrics::RunReport) -> Result<()> {
             net.reconnects
         );
     }
+    let integrity = net.frames_corrupt
+        + net.non_finite_rejected
+        + net.norm_rejected
+        + net.quarantined
+        + net.rollbacks;
+    if integrity > 0 {
+        println!(
+            "integrity         corrupt frames {}  non-finite {}  norm {}  quarantined {}  \
+             requalified {}  rollbacks {}",
+            net.frames_corrupt,
+            net.non_finite_rejected,
+            net.norm_rejected,
+            net.quarantined,
+            net.requalified,
+            net.rollbacks
+        );
+    }
     // per-peer staleness histogram: log2 lag buckets (0, 1, 2-3, 4-7, ...
     // 64+) over every admitted Fresh block delivery from that sender
     if report.staleness.iter().any(|row| row.iter().any(|&c| c > 0)) {

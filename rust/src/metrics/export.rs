@@ -49,6 +49,13 @@ pub fn report_json(report: &RunReport) -> Json {
         .num("frames_dropped_injected", report.comm.frames_dropped_injected as f64)
         .num("link_down", report.comm.link_down as f64)
         .num("reconnects", report.comm.reconnects as f64)
+        .num("frames_corrupt", report.comm.frames_corrupt as f64)
+        .num("non_finite_rejected", report.comm.non_finite_rejected as f64)
+        .num("norm_rejected", report.comm.norm_rejected as f64)
+        .num("quarantined", report.comm.quarantined as f64)
+        .num("requalified", report.comm.requalified as f64)
+        .num("rollbacks", report.comm.rollbacks as f64)
+        .num("corrupt_results", report.comm.corrupt_results as f64)
         .val(
             "staleness",
             Json::Arr(

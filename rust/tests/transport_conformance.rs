@@ -407,7 +407,9 @@ fn conformance_gossip_seeding_skips_warmup() {
 /// Lossy-link conformance (socket only — the one backend with a frame
 /// layer): under each injected wire fault the protocol's observable
 /// contract must not bend.  Fresh reads stay sender-pure and versions
-/// monotone while frames are dropped, delayed, duplicated or truncated;
+/// monotone while frames are dropped, delayed, duplicated, truncated or
+/// bit-flipped (the `corrupt` arm: every damaged payload is caught by
+/// the FNV-1a checksum and discarded before any mirror store);
 /// a duplicated frame is idempotent under the seqlock (same
 /// `(sender, iter)` payload, one extra version bump, never a torn or
 /// impure read); a truncated frame is refused loudly receiver-side and
@@ -424,6 +426,7 @@ fn conformance_lossy_links_keep_fresh_reads_pure() {
         ("delay", "netdelay@1-0:0:2"),
         ("dup", "netdup@1-0:0:50"),
         ("trunc", "nettrunc@1-0:40"),
+        ("corrupt", "netcorrupt@1-0:0:35"),
     ] {
         let plan = FaultPlan::parse(dsl).unwrap();
         let stats = Arc::new(WorldStats::new(ranks));
@@ -522,6 +525,20 @@ fn conformance_lossy_links_keep_fresh_reads_pure() {
                     "trunc: delivery resumed without the recovery path ticking"
                 );
             }
+            "corrupt" => {
+                // every flipped frame is a guaranteed checksum mismatch
+                // (the injector XORs a nonzero mask into one payload
+                // byte), so detection is exact: the receiver caught
+                // damage, discarded it before any mirror store — the
+                // reader's purity assertions above prove no corrupted
+                // payload ever read Fresh — and the link never tore down
+                assert!(
+                    total.frames_corrupt > 0,
+                    "corrupt: a 35% plan over {per_writer} puts caught nothing"
+                );
+                assert_eq!(total.frames_failed, 0, "corrupt: discard is not a send failure");
+                assert_eq!(total.link_down, 0, "corrupt: a bad payload must not condemn the link");
+            }
             _ => unreachable!(),
         }
         // the lease resolution identity holds on every backend, faulted
@@ -530,6 +547,68 @@ fn conformance_lossy_links_keep_fresh_reads_pure() {
         assert!(
             total.false_suspicion + total.recovered <= total.suspected,
             "{arm}: resolution identity broken"
+        );
+    }
+}
+
+/// Numeric quarantine round-trips on the production admit path, on
+/// every backend: a poisoned delivery travels the wire, the receive
+/// scan flags it, the sender is quarantined (masked out of the presence
+/// gate by the same [`admit_presence`] call the worker uses), N-1 clean
+/// deliveries are not enough, and the Nth consecutive clean delivery
+/// re-admits it.
+#[test]
+fn conformance_quarantine_round_trips_on_the_admit_path() {
+    use asgd::gaspi::liveness::admit_presence;
+    use asgd::kernels::presence::ExtPresence;
+    use asgd::kernels::simd::{scan_finite_max, NON_FINITE_BITS};
+    let state_len = 16usize;
+    for b in backends("quar", 3, 1, state_len, 1) {
+        let w = &b.world;
+        let mut view = LivenessView::new(3, 0, 64).with_quarantine_clean(3);
+        let mut presence = ExtPresence::new(1, 1);
+
+        // one poisoned delivery from rank 1
+        let mut payload = vec![1.0f32; state_len];
+        payload[7] = f32::NAN;
+        w.put_state(1, 0, 5, &payload, 0);
+        w.quiesce();
+        let snap = w.segment(0).read_slot(0, 0);
+        assert_eq!(snap.outcome, ReadOutcome::Fresh, "{}: poison lost in transit", b.name);
+        assert!(
+            scan_finite_max(&snap.data) >= NON_FINITE_BITS,
+            "{}: the scan must flag the poisoned payload",
+            b.name
+        );
+        assert!(view.quarantine(1), "{}: first poison enters quarantine", b.name);
+        assert!(!view.quarantine(1), "{}: re-entry is not a second entry", b.name);
+        assert!(
+            !admit_presence(&view, &mut presence, 0, 0, 1),
+            "{}: quarantined sender reached the presence gate",
+            b.name
+        );
+
+        // clean deliveries: two are not enough at quarantine_clean = 3...
+        let clean = vec![2.0f32; state_len];
+        for i in 0..2u64 {
+            w.put_state(1, 0, 6 + i, &clean, 0);
+            w.quiesce();
+            let snap = w.segment(0).read_slot(0, 0);
+            assert_eq!(snap.outcome, ReadOutcome::Fresh, "{}", b.name);
+            assert!(scan_finite_max(&snap.data) < NON_FINITE_BITS, "{}", b.name);
+            assert!(!view.record_clean(1), "{}: requalified early", b.name);
+            assert!(!admit_presence(&view, &mut presence, 0, 0, 1), "{}", b.name);
+        }
+        // ...the third consecutive one re-admits, on the same call the
+        // worker's receive path makes
+        w.put_state(1, 0, 9, &clean, 0);
+        w.quiesce();
+        assert!(view.record_clean(1), "{}: third clean delivery requalifies", b.name);
+        assert!(!view.is_quarantined(1), "{}", b.name);
+        assert!(
+            admit_presence(&view, &mut presence, 0, 0, 1),
+            "{}: requalified sender still masked",
+            b.name
         );
     }
 }
