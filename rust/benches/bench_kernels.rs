@@ -15,6 +15,10 @@
 //!   pipeline; the tiled arm must win by >= 1.5x at a compute-bound
 //!   shape (b=512 k=64 d=64) and not regress at the paper shape
 //!   (b=500 k=10 d=10) on the vector dispatch arms.
+//! * PR 10: the merge hot path run dark vs under always-on telemetry
+//!   (phase stamp + interval-1 region publish per iteration — the worst
+//!   cadence `--telemetry-interval` allows); the observability plane
+//!   must tax the hot path by <= 5%.
 //!
 //! Results land in `BENCH_hotpath.json` (`ASGD_BENCH_OUT` to relocate,
 //! `ASGD_BENCH_QUICK=1` for the CI smoke) under per-ISA section keys
@@ -400,6 +404,87 @@ fn hotpath_arms(runner: &mut BenchRunner) {
     );
 }
 
+/// The PR-10 arm pair: the tight receive+merge iteration dark vs under
+/// always-on telemetry — a phase stamp around the merge plus an
+/// interval-1 `TelemetryRegion::publish` every iteration, the worst
+/// cadence the `--telemetry-interval` knob allows.  The publish is a
+/// seqlock bump plus ~200 relaxed word stores, so it must stay within
+/// 5% of the dark loop at the large merge shape.
+fn telemetry_arms(runner: &mut BenchRunner, quick: bool) {
+    use asgd::gaspi::stats::{CommStats, Phase};
+    use asgd::metrics::telemetry::TelemetryRegion;
+    use std::time::Instant;
+
+    println!("\n== telemetry: dark hot path vs interval-1 publish + phase stamps ==");
+    let (k, d, n_buf) = (100usize, 128usize, 4usize);
+    let len = k * d;
+    let mut rng = Xoshiro256pp::seed_from_u64(31);
+    let w0 = rand_vec(&mut rng, len);
+    let delta = rand_vec(&mut rng, len);
+    let exts = rand_vec(&mut rng, n_buf * len);
+    let presence = ExtPresence::all_present(n_buf, 1);
+    let mut scratch = vec![0.0f32; len];
+    let stats = CommStats::default();
+    let tel = TelemetryRegion::heap(0, n_buf);
+
+    // near-parity arms sit inside scheduler noise on shared runners, so
+    // the pair is re-measured up to 3 rounds and the best ratio kept —
+    // a real regression fails every round, jitter does not (the same
+    // policy as the gemm paper-shape bound above)
+    let (mut overhead, mut off_ns, mut on_ns) = (f64::INFINITY, 0.0f64, 0.0f64);
+    for round in 0..3 {
+        let mut w = w0.clone();
+        let off = runner
+            .bench(&format!("telemetry off k={k} d={d} #{round}"), len as f64, || {
+                w.copy_from_slice(&w0);
+                asgd_merge(&mut w, &delta, &exts, &presence, 0.05, &mut scratch);
+            })
+            .clone();
+        let mut w = w0.clone();
+        let mut iter = 0u64;
+        let on = runner
+            .bench(&format!("telemetry on  k={k} d={d} #{round}"), len as f64, || {
+                let p0 = Instant::now();
+                w.copy_from_slice(&w0);
+                asgd_merge(&mut w, &delta, &exts, &presence, 0.05, &mut scratch);
+                stats.phases.record(Phase::PollMerge, p0.elapsed().as_nanos() as u64);
+                stats.sent.add(1);
+                iter += 1;
+                tel.publish(&stats, iter, 0.0, iter);
+            })
+            .clone();
+        let r = on.median_ns / off.median_ns;
+        if r < overhead {
+            overhead = r;
+            off_ns = off.median_ns;
+            on_ns = on.median_ns;
+        }
+        if overhead <= 1.02 {
+            break;
+        }
+    }
+    let pct = (overhead - 1.0) * 100.0;
+    println!("   dark {off_ns:.0} ns/iter vs telemetry-on {on_ns:.0} ns/iter -> {pct:+.2}%");
+    let section = JsonBuilder::new()
+        .num("k", k as f64)
+        .num("d", d as f64)
+        .num("off_median_ns", off_ns)
+        .num("on_median_ns", on_ns)
+        .num("overhead_ratio", overhead)
+        .str("simd_isa", &format!("{:?}", simd::isa()))
+        .build();
+    benchjson::write_section(&format!("bench_kernels_telemetry@{}", isa_tag()), section)
+        .expect("bench json");
+    // quick mode's 5-sample medians are noisier; the full run holds the
+    // PR-10 claim at 5%
+    let cap = if quick { 1.10 } else { 1.05 };
+    assert!(
+        overhead <= cap,
+        "interval-1 telemetry taxes the merge hot path beyond {:.0}%: {overhead:.3}x",
+        (cap - 1.0) * 100.0
+    );
+}
+
 fn main() {
     let mut rng = Xoshiro256pp::seed_from_u64(1);
     let quick = benchjson::quick_mode();
@@ -453,5 +538,6 @@ fn main() {
 
     gemm_arms(&mut runner, quick);
     hotpath_arms(&mut runner);
+    telemetry_arms(&mut runner, quick);
     println!("bench_kernels OK");
 }

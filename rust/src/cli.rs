@@ -2,20 +2,24 @@
 //!
 //! ```text
 //! asgd train   [--config F] [--method M] [--workers N] [--k K] ...
+//! asgd monitor DIR [--watch S]
 //! asgd fig     --id N | --all   [--quick] [--out DIR]
 //! asgd datagen --out FILE --n N --dim D --k K [--kind synthetic|hog]
 //! asgd calibrate
 //! ```
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::BTreeMap;
 
-/// Parsed command line: subcommand + `--key value` flags + bare flags.
+/// Parsed command line: subcommand + `--key value` flags + bare flags +
+/// positional operands (only `monitor` takes one; every other command
+/// refuses them via [`Args::expect_no_positionals`]).
 #[derive(Debug, Default)]
 pub struct Args {
     pub command: String,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
+    positionals: Vec<String>,
 }
 
 impl Args {
@@ -29,7 +33,8 @@ impl Args {
         };
         while let Some(arg) = it.next() {
             let Some(name) = arg.strip_prefix("--") else {
-                bail!("unexpected positional argument {arg:?}");
+                parsed.positionals.push(arg);
+                continue;
             };
             if let Some((k, v)) = name.split_once('=') {
                 parsed.flags.insert(k.to_string(), v.to_string());
@@ -45,6 +50,23 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// The i-th positional operand (e.g. the DIR in `asgd monitor DIR`).
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    /// Refuse stray positional operands — every command except
+    /// `monitor` takes none, and a typo like `asgd train foo` must be a
+    /// loud error, not a silently dropped word.
+    pub fn expect_no_positionals(&self) -> Result<()> {
+        ensure!(
+            self.positionals.is_empty(),
+            "unexpected positional argument {:?}",
+            self.positionals[0]
+        );
+        Ok(())
     }
 
     pub fn has(&self, key: &str) -> bool {
@@ -210,6 +232,14 @@ pub fn train_config(args: &Args) -> Result<crate::config::TrainConfig> {
     if let Some(v) = args.get_usize("eval-every")? {
         cfg.eval_every = v;
     }
+    if let Some(v) = args.get_usize("telemetry-interval")? {
+        // 0 = plane off; validate() refuses the dormant combination
+        // with --metrics-addr loudly
+        cfg.telemetry_interval = v;
+    }
+    if let Some(v) = args.get("metrics-addr") {
+        cfg.metrics_addr = Some(v.to_string());
+    }
     if let Some(v) = args.get("artifacts") {
         cfg.artifact_dir = v.to_string();
     }
@@ -250,6 +280,8 @@ asgd — Asynchronous Parallel Stochastic Gradient Descent (Keuper & Pfreundt 20
 USAGE:
   asgd train [OPTIONS]          run one training job and print the report
   asgd restore [OPTIONS]        resume a crashed run from --ckpt-dir
+  asgd monitor DIR [--watch S]  live counters from a running shmem run's
+                                telemetry regions (result files once done)
   asgd worker --attach DIR ...  one worker process (shmem transport; spawned
                                 by the supervisor, rarely typed by hand)
   asgd fig --id N [--quick]     regenerate paper figure N (or --all)
@@ -306,9 +338,20 @@ TRAIN OPTIONS (defaults in parentheses):
   --stale-tau T          scaled: lag at which a contribution's
                          merge weight halves                    (4)
   --stale-beta B         momentum: velocity decay in [0, 1)     (0.5)
+  --telemetry-interval N publish live telemetry every N send events;
+                         0 turns the plane off (no regions, no phase
+                         timers, no flight recorder)             (1)
+  --metrics-addr H:P     serve GET /metrics (Prometheus text) and
+                         /report.json over HTTP while training; port 0
+                         picks a free one                        (off)
   --seed S --n-samples N --eval-every E --artifacts DIR
   --data KIND            synthetic | hog | linear               (synthetic)
-  --out DIR              write trace.csv + report.json to DIR
+  --out DIR              write trace.csv + report.json + per-rank
+                         flight-NNN.jsonl flight dumps to DIR
+
+MONITOR OPTIONS:
+  --watch S              re-scrape and reprint every S seconds until
+                         interrupted (one snapshot when absent)
 
 FIG OPTIONS:
   --id N                 1,5,6,7,8,9,10,11,12,13,14,15,16,17
@@ -349,7 +392,41 @@ mod tests {
     fn bad_values_error() {
         let a = parse("train --workers lots");
         assert!(train_config(&a).is_err());
-        assert!(Args::parse(vec!["train".into(), "stray".into()]).is_err());
+        // positionals parse (monitor needs one) but commands that take
+        // none still refuse them loudly
+        let stray = Args::parse(vec!["train".into(), "stray".into()]).unwrap();
+        assert!(stray.expect_no_positionals().is_err());
+    }
+
+    #[test]
+    fn monitor_takes_a_positional_dir() {
+        let a = parse("monitor /dev/shm/asgd-run-7 --watch 2");
+        assert_eq!(a.command, "monitor");
+        assert_eq!(a.positional(0), Some("/dev/shm/asgd-run-7"));
+        assert_eq!(a.get_u64("watch").unwrap(), Some(2));
+        assert!(a.expect_no_positionals().is_err());
+        assert!(parse("monitor").expect_no_positionals().is_ok());
+    }
+
+    #[test]
+    fn telemetry_flags_roundtrip() {
+        let cfg = train_config(&parse(
+            "train --telemetry-interval 8 --metrics-addr 127.0.0.1:9095",
+        ))
+        .unwrap();
+        assert_eq!(cfg.telemetry_interval, 8);
+        assert_eq!(cfg.metrics_addr.as_deref(), Some("127.0.0.1:9095"));
+        // plane off alone is fine; off + listener is a dormant knob
+        let cfg = train_config(&parse("train --telemetry-interval 0")).unwrap();
+        assert_eq!(cfg.telemetry_interval, 0);
+        assert!(train_config(&parse(
+            "train --telemetry-interval 0 --metrics-addr 127.0.0.1:9095"
+        ))
+        .is_err());
+        // batch has no worker loop to scrape; portless addrs refused
+        assert!(train_config(&parse("train --method batch --metrics-addr 127.0.0.1:9095"))
+            .is_err());
+        assert!(train_config(&parse("train --metrics-addr localhost")).is_err());
     }
 
     #[test]

@@ -646,6 +646,15 @@ pub struct TrainConfig {
     pub eval_every: usize,
     /// Samples used for the error evaluation.
     pub eval_samples: usize,
+    /// Publish a telemetry-region snapshot every this many send events
+    /// (0 = telemetry plane off: no phase timers, no regions, no flight
+    /// recorder).  Default 1 — the plane is cheap enough to leave on.
+    pub telemetry_interval: usize,
+    /// `HOST:PORT` for the live scrape endpoint (`/metrics` Prometheus
+    /// text, `/report.json`).  `None` = no listener.  Requires the
+    /// telemetry plane on and a non-batch method (the batch driver has
+    /// no worker loop to scrape).
+    pub metrics_addr: Option<String>,
     pub artifact_dir: String,
 }
 
@@ -687,6 +696,8 @@ impl TrainConfig {
                 .unwrap_or(true),
             eval_every: 10,
             eval_samples: 8192,
+            telemetry_interval: 1,
+            metrics_addr: None,
             artifact_dir: crate::DEFAULT_ARTIFACT_DIR.to_string(),
         }
     }
@@ -814,6 +825,21 @@ impl TrainConfig {
         }
         if self.ckpt_dir.is_some() && self.ckpt_interval == 0 {
             bail!("ckpt_dir without ckpt_interval >= 1 would never be written to");
+        }
+        if let Some(addr) = &self.metrics_addr {
+            // the endpoint serves telemetry regions; with the plane off
+            // (or under the batch driver, which has no worker loop to
+            // publish) it would serve frozen zeros forever — refused,
+            // like any other dormant knob
+            if self.telemetry_interval == 0 {
+                bail!("metrics_addr needs telemetry_interval >= 1 (nothing would be published)");
+            }
+            if self.method == Method::Batch {
+                bail!("metrics_addr is not supported for method=batch (no worker loop to scrape)");
+            }
+            if !addr.contains(':') {
+                bail!("metrics_addr must be HOST:PORT (got {addr:?})");
+            }
         }
         if self.transport == TransportKind::Shmem
             && !self.faults.is_empty()
@@ -1064,8 +1090,12 @@ impl TrainConfig {
         } else {
             String::new()
         };
+        let metrics = match &self.metrics_addr {
+            Some(addr) => format!(" metrics={addr}"),
+            None => String::new(),
+        };
         format!(
-            "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}{}{}{}{}{}{}",
+            "{}/{} workers={} b={} eps={} iters={} gate={} agg={} backend={}{}{}{}{}{}{}{}",
             self.method.name(),
             self.model.name(),
             self.workers,
@@ -1080,6 +1110,7 @@ impl TrainConfig {
             guard,
             rollback,
             transport,
+            metrics,
             faults
         )
     }
@@ -1129,6 +1160,8 @@ impl TrainConfig {
             )
             .str("backend", self.backend.name())
             .num("seed", self.seed as f64)
+            .num("telemetry_interval", self.telemetry_interval as f64)
+            .str("metrics_addr", self.metrics_addr.as_deref().unwrap_or(""))
             .num("n_samples", self.data.n_samples as f64)
             .num("dim", self.data.dim as f64)
             .build()
@@ -1224,6 +1257,11 @@ impl TrainConfig {
         }
         cfg.eval_every = get_usize("eval_every", cfg.eval_every)?;
         cfg.eval_samples = get_usize("eval_samples", cfg.eval_samples)?;
+        cfg.telemetry_interval = get_usize("telemetry_interval", cfg.telemetry_interval)?;
+        if let Some(v) = t.get("metrics_addr") {
+            cfg.metrics_addr =
+                Some(v.as_str().context("metrics_addr must be a string")?.to_string());
+        }
         if let Some(v) = t.get("eps") {
             cfg.eps = v.as_f64().context("eps must be a number")? as f32;
         }
@@ -1392,6 +1430,10 @@ impl TrainConfig {
         let _ = writeln!(s, "seed = {}", self.seed);
         let _ = writeln!(s, "eval_every = {}", self.eval_every);
         let _ = writeln!(s, "eval_samples = {}", self.eval_samples);
+        let _ = writeln!(s, "telemetry_interval = {}", self.telemetry_interval);
+        if let Some(addr) = &self.metrics_addr {
+            let _ = writeln!(s, "metrics_addr = \"{addr}\"");
+        }
         let _ = writeln!(s, "artifact_dir = \"{}\"", self.artifact_dir);
         s.push_str("\n[data]\n");
         let _ = writeln!(s, "n_samples = {}", self.data.n_samples);
@@ -1753,6 +1795,61 @@ mod tests {
         // bad values are refused via TOML too, not silently clamped
         assert!(TrainConfig::from_toml_str(
             "[train]\nworkers = 4\nguard_factor = 0.5\n[data]\nn_samples = 100000\n"
+        )
+        .is_err());
+    }
+
+    /// The telemetry knobs follow the dormant-knob policy: a scrape
+    /// endpoint with nothing publishing to it (plane off, or the batch
+    /// driver with no worker loop) is refused, not silently idle.
+    #[test]
+    fn telemetry_knobs_roundtrip_and_are_bounded() {
+        let base = || TrainConfig::asgd_default(10, 10, 500);
+        // default: plane on at every send event, no listener
+        let c = base();
+        assert_eq!(c.telemetry_interval, 1);
+        assert!(c.metrics_addr.is_none());
+        c.validate().unwrap();
+        // plane off alone is fine (bench baselines need it)
+        let mut c = base();
+        c.telemetry_interval = 0;
+        c.validate().unwrap();
+        // ...but a listener with nothing publishing is refused
+        c.metrics_addr = Some("127.0.0.1:9095".into());
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("telemetry_interval"), "{err:#}");
+        c.telemetry_interval = 4;
+        c.validate().unwrap();
+        // batch has no worker loop to scrape
+        let mut c = base();
+        c.method = Method::Batch;
+        c.metrics_addr = Some("127.0.0.1:9095".into());
+        let err = c.validate().unwrap_err();
+        assert!(format!("{err}").contains("batch"), "{err:#}");
+        // a portless address is a config error, not a bind surprise
+        let mut c = base();
+        c.metrics_addr = Some("localhost".into());
+        assert!(c.validate().is_err());
+        // TOML / JSON / describe round trip (the shmem config handoff
+        // rides to_toml, so the knobs must survive it)
+        let cfg = TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\ntelemetry_interval = 8\n\
+             metrics_addr = \"127.0.0.1:9095\"\n[data]\nn_samples = 100000\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.telemetry_interval, 8);
+        assert_eq!(cfg.metrics_addr.as_deref(), Some("127.0.0.1:9095"));
+        let again = TrainConfig::from_toml_str(&cfg.to_toml()).unwrap();
+        assert_eq!(again.telemetry_interval, 8);
+        assert_eq!(again.metrics_addr.as_deref(), Some("127.0.0.1:9095"));
+        let j = cfg.to_json();
+        assert_eq!(j.get("telemetry_interval").unwrap().as_f64(), Some(8.0));
+        assert_eq!(j.get("metrics_addr").unwrap().as_str(), Some("127.0.0.1:9095"));
+        assert!(cfg.describe().contains("metrics=127.0.0.1:9095"));
+        // via TOML the dormant combination is refused too
+        assert!(TrainConfig::from_toml_str(
+            "[train]\nworkers = 4\ntelemetry_interval = 0\n\
+             metrics_addr = \"127.0.0.1:9095\"\n[data]\nn_samples = 100000\n"
         )
         .is_err());
     }

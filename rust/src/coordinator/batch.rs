@@ -113,6 +113,8 @@ pub fn run_batch(
         trace,
         comm: Default::default(),
         staleness: Vec::new(),
+        phases: Vec::new(),
+        flight: Vec::new(),
         state: final_state,
     }
 }

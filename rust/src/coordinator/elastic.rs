@@ -28,10 +28,11 @@
 //! semantics.
 
 use super::aggregate::survivor_aggregate;
-use super::build_world;
 use super::worker::{run_worker, OnceInstant, SampleCounter, StartGate, WorkerCtx, WorkerResult};
+use super::{build_world, settle_telemetry, start_metrics, telemetry_regions};
 use crate::ckpt::{Checkpoint, CkptStore};
 use crate::config::{FaultEvent, FaultKind, TrainConfig};
+use crate::gaspi::stats::FlightKind;
 use crate::data::{partition::partition_rank, Dataset};
 use crate::metrics::{RunReport, TracePoint};
 use crate::models::Model;
@@ -109,6 +110,8 @@ pub fn run_elastic(
 ) -> Result<RunReport> {
     let n = cfg.workers;
     let world = build_world(cfg, w0.len())?;
+    let telemetry = telemetry_regions(cfg);
+    let _metrics = start_metrics(cfg, &telemetry)?;
     let barrier = Arc::new(StartGate::Thread(Barrier::new(n)));
     let start = Arc::new(OnceInstant::default());
     let global_samples = Arc::new(SampleCounter::Local(AtomicU64::new(0)));
@@ -153,6 +156,7 @@ pub fn run_elastic(
             straggle_us: None,
             resume_comm: None,
             restored: false,
+            telemetry: telemetry.get(rank).cloned(),
         };
         handles.push(spawn_worker(ctx, tx.clone(), 0)?);
     }
@@ -221,7 +225,9 @@ pub fn run_elastic(
                 let mut shard = partition_rank(&data, n, cfg.seed, rank);
                 debug_assert_eq!(shard.worker, rank);
                 shard.fast_forward(snap.shard_epochs, snap.shard_cursor as usize);
-                world.stats.rank(rank).restores.add(1);
+                let rs = world.stats.rank(rank);
+                rs.restores.add(1);
+                rs.flight.record(FlightKind::Restore, snap.iter, crate::gaspi::stats::FLIGHT_NONE, at);
                 let ctx = WorkerCtx {
                     rank,
                     cfg: cfg.clone(),
@@ -245,6 +251,7 @@ pub fn run_elastic(
                     // dirty map instead of re-learning from the floor
                     resume_comm: Some((snap.ctrl_chunks, snap.dirty)),
                     restored: true,
+                    telemetry: telemetry.get(rank).cloned(),
                 };
                 // the restore latency (and the incarnation bump ending
                 // the peers' dead window) happens on the spawned thread:
@@ -263,6 +270,7 @@ pub fn run_elastic(
         h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
     }
     world.quiesce();
+    settle_telemetry(&telemetry, &world.stats);
     let wallclock = t0.elapsed().as_secs_f64();
 
     // ---- survivor-only aggregation (never blocks on a dead rank) ------
@@ -294,6 +302,8 @@ pub fn run_elastic(
         trace,
         comm: world.stats.total(),
         staleness: world.stats.staleness_by_peer(),
+        phases: world.stats.phases_total(),
+        flight: world.stats.flight_by_rank(),
         state: final_state,
     })
 }
@@ -380,6 +390,18 @@ mod tests {
         // rank 2 died at 20, restored from the checkpoint at 16: the
         // re-executed span shows up as extra iterations
         assert_eq!(report.total_iters, 3 * 400 + 20 + (400 - 16));
+        // the flight recorder kept the story: somebody logged the
+        // suspicion, and rank 2's ring carries the supervisor's restore
+        use crate::gaspi::stats::FlightKind;
+        assert!(report
+            .flight
+            .iter()
+            .flatten()
+            .any(|e| e.kind == FlightKind::Suspected));
+        assert!(
+            report.flight[2].iter().any(|e| e.kind == FlightKind::Restore),
+            "restore event missing from rank 2's flight ring"
+        );
         let first = report.trace.first().unwrap().objective;
         let last = report.trace.last().unwrap().objective;
         assert!(last < first, "{first} -> {last}");

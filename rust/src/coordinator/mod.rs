@@ -25,6 +25,8 @@ use crate::config::{AggMode, Method, TrainConfig, TransportKind};
 use crate::data::{partition::partition, Dataset};
 use crate::gaspi::stats::WorldStats;
 use crate::gaspi::{Socket, Topology, World};
+use crate::metrics::serve::{MetricsServer, TelSource};
+use crate::metrics::telemetry::TelemetryRegion;
 use crate::metrics::RunReport;
 use crate::models;
 use crate::runtime::build_stepper;
@@ -68,6 +70,50 @@ pub(crate) fn build_world(cfg: &TrainConfig, state_len: usize) -> Result<Arc<Wor
     })
 }
 
+/// Heap telemetry regions for in-process workers; empty when the
+/// telemetry plane is off.
+pub(crate) fn telemetry_regions(cfg: &TrainConfig) -> Vec<Arc<TelemetryRegion>> {
+    if cfg.telemetry_interval == 0 {
+        return Vec::new();
+    }
+    (0..cfg.workers)
+        .map(|r| TelemetryRegion::heap(r, cfg.workers))
+        .collect()
+}
+
+/// Start the live scrape endpoint over heap regions when the config
+/// asks for one.  The returned guard keeps the listener alive; dropping
+/// it (end of run) stops and joins the serving thread.
+pub(crate) fn start_metrics(
+    cfg: &TrainConfig,
+    telemetry: &[Arc<TelemetryRegion>],
+) -> Result<Option<MetricsServer>> {
+    match &cfg.metrics_addr {
+        Some(addr) => {
+            let server = MetricsServer::start(addr, TelSource::Live(telemetry.to_vec()))?;
+            log::info!("metrics endpoint at http://{}/metrics", server.addr());
+            Ok(Some(server))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Settle the telemetry regions after every worker joined and the world
+/// quiesced: receiver-ledger counters (`overwritten`, `blocks_lost`)
+/// are ticked by the *writer* into the receiver's ledger, so they can
+/// advance after that rank's own final publish.  One coordinator-side
+/// republish per rank makes a post-quiesce scrape agree exactly with
+/// the final [`RunReport`] totals (the conformance test pins this).
+pub(crate) fn settle_telemetry(telemetry: &[Arc<TelemetryRegion>], stats: &WorldStats) {
+    for (r, tel) in telemetry.iter().enumerate() {
+        let (iter, obj, samples) = tel
+            .read()
+            .map(|s| (s.iter, s.objective, s.samples))
+            .unwrap_or((0, f64::NAN, 0));
+        tel.publish(stats.rank(r), iter, obj, samples);
+    }
+}
+
 /// Train per the config on a freshly generated dataset.
 pub fn run_training(cfg: &TrainConfig) -> Result<RunReport> {
     let data = Arc::new(crate::data::generate(&cfg.data));
@@ -109,6 +155,8 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
     }
 
     let world = build_world(cfg, w0.len())?;
+    let telemetry = telemetry_regions(cfg);
+    let _metrics = start_metrics(cfg, &telemetry)?;
     let barrier = Arc::new(StartGate::Thread(Barrier::new(cfg.workers)));
     let start = Arc::new(OnceInstant::default());
     let global_samples = Arc::new(SampleCounter::Local(AtomicU64::new(0)));
@@ -116,8 +164,9 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
 
     let mut handles = Vec::with_capacity(cfg.workers);
     for shard in shards {
+        let rank = shard.worker;
         let ctx = WorkerCtx {
-            rank: shard.worker,
+            rank,
             cfg: cfg.clone(),
             shard,
             w0: w0.clone(),
@@ -135,6 +184,7 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
             straggle_us: None,
             resume_comm: None,
             restored: false,
+            telemetry: telemetry.get(rank).cloned(),
         };
         let name = format!("w{:03}", ctx.rank);
         handles.push(
@@ -153,6 +203,7 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
     // drain any in-flight frames (socket) so the receive-side counters
     // are settled before the report totals them; a no-op for inproc
     world.quiesce();
+    settle_telemetry(&telemetry, &world.stats);
     let wallclock = t0.elapsed().as_secs_f64();
 
     // §4.3 final aggregation.  The workers' states are aggregated over
@@ -185,6 +236,8 @@ pub fn run_training_on(cfg: &TrainConfig, data: Arc<Dataset>) -> Result<RunRepor
         trace,
         comm: world.stats.total(),
         staleness: world.stats.staleness_by_peer(),
+        phases: world.stats.phases_total(),
+        flight: world.stats.flight_by_rank(),
         state: final_state,
     })
 }
@@ -217,6 +270,8 @@ pub fn resume_training(cfg: &TrainConfig) -> Result<RunReport> {
     let stepper = build_stepper(&cfg, model.clone()).context("building stepper")?;
 
     let world = build_world(&cfg, w0.len())?;
+    let telemetry = telemetry_regions(&cfg);
+    let _metrics = start_metrics(&cfg, &telemetry)?;
     let store = Arc::new(CkptStore::disk(&dir)?);
     let start = Arc::new(OnceInstant::default());
     let global_samples = Arc::new(SampleCounter::Local(AtomicU64::new(0)));
@@ -263,6 +318,7 @@ pub fn resume_training(cfg: &TrainConfig) -> Result<RunReport> {
                     straggle_us: None,
                     resume_comm: Some((snap.ctrl_chunks, snap.dirty)),
                     restored: true,
+                    telemetry: telemetry.get(rank).cloned(),
                 }
             }
             None => WorkerCtx {
@@ -284,6 +340,7 @@ pub fn resume_training(cfg: &TrainConfig) -> Result<RunReport> {
                 straggle_us: None,
                 resume_comm: None,
                 restored: true, // skips the barrier, like every rank here
+                telemetry: telemetry.get(rank).cloned(),
             },
         };
         let name = format!("w{:03}r", rank);
@@ -300,6 +357,7 @@ pub fn resume_training(cfg: &TrainConfig) -> Result<RunReport> {
     }
     results.sort_by_key(|r| r.rank);
     world.quiesce();
+    settle_telemetry(&telemetry, &world.stats);
     let wallclock = t0.elapsed().as_secs_f64();
     let final_state = match cfg.aggregation {
         AggMode::ReturnFirst => std::mem::take(&mut results[0].state),
@@ -325,6 +383,8 @@ pub fn resume_training(cfg: &TrainConfig) -> Result<RunReport> {
         trace,
         comm: world.stats.total(),
         staleness: world.stats.staleness_by_peer(),
+        phases: world.stats.phases_total(),
+        flight: world.stats.flight_by_rank(),
         state: final_state,
     })
 }
@@ -391,6 +451,19 @@ mod tests {
         let last = report.trace.last().unwrap().objective;
         assert!(last < first, "objective did not descend: {first} -> {last}");
         assert!(report.final_error.is_finite());
+        // the default telemetry plane instruments every phase of the loop
+        let compute = crate::gaspi::stats::Phase::Compute as usize;
+        assert!(
+            report.phases[compute].iter().sum::<u64>() > 0,
+            "no compute-phase latencies recorded"
+        );
+        assert!(
+            report.phases[crate::gaspi::stats::Phase::Send as usize]
+                .iter()
+                .sum::<u64>()
+                > 0,
+            "no send-phase latencies recorded"
+        );
     }
 
     /// Regression (PR 1): the send path fired at `t % interval == 0`, so

@@ -37,9 +37,15 @@ use crate::ckpt::{fnv1a, Checkpoint, CkptStore};
 use crate::cli::Args;
 use crate::config::{FaultEvent, FaultKind, TrainConfig};
 use crate::data::{partition::partition_rank, Dataset};
-use crate::gaspi::stats::{StatsSnapshot, WorldStats, STALE_BUCKETS};
+use crate::gaspi::stats::{
+    FlightEvent, FlightKind, StatsSnapshot, WorldStats, FLIGHT_NONE, PHASES, PHASE_BUCKETS,
+    STALE_BUCKETS, STAT_WORDS,
+};
 use crate::gaspi::transport::shmem::CtlRegion;
 use crate::gaspi::{Shmem, Topology, World};
+use crate::metrics::export::write_flight_jsonl;
+use crate::metrics::serve::{MetricsServer, TelSource};
+use crate::metrics::telemetry::TelemetryRegion;
 use crate::metrics::{RunReport, TracePoint};
 use crate::models::{self, Model};
 use crate::runtime::build_stepper;
@@ -51,15 +57,14 @@ use std::process::Child;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// Magic leading every worker result file ("ASGDRES3", little-endian).
+/// Magic leading every worker result file ("ASGDRES4", little-endian).
 /// v2 appended the per-peer staleness histogram after the stat words;
-/// v3 widens the stat vector to the full [`StatsSnapshot`] field set
-/// (wire/integrity counters included).
-const RESULT_MAGIC: u64 = u64::from_le_bytes(*b"ASGDRES3");
-
-/// Stat words in a result file: one per [`StatsSnapshot`] field, in
-/// declaration order.
-const STAT_WORDS: usize = 31;
+/// v3 widened the stat vector to the full [`StatsSnapshot`] field set
+/// (wire/integrity counters included); v4 appends the phase-latency
+/// histogram rows and the flight-recorder events.  The stat word count
+/// is [`STAT_WORDS`] — generated from the `for_each_stat!` table, so
+/// the codec can no longer drift from the struct.
+const RESULT_MAGIC: u64 = u64::from_le_bytes(*b"ASGDRES4");
 
 /// Per-rank terminal status tracked by the parent (mirror of the
 /// elastic supervisor's bookkeeping).
@@ -83,7 +88,7 @@ impl Drop for Crew {
     }
 }
 
-fn result_path(dir: &Path, rank: usize) -> PathBuf {
+pub(crate) fn result_path(dir: &Path, rank: usize) -> PathBuf {
     dir.join(format!("result-{rank:03}.bin"))
 }
 
@@ -189,6 +194,17 @@ fn drive(
     std::fs::write(dir.join("config.toml"), cfg.to_toml())
         .context("writing run config for worker processes")?;
     let bin = worker_binary()?;
+    // the scrape endpoint reads the children's tel-NNN.asgdtel mappings
+    // through the directory source, re-attaching per scrape so ranks
+    // appear as their processes come up (and survive respawns)
+    let _metrics = match &cfg.metrics_addr {
+        Some(addr) => {
+            let server = MetricsServer::start(addr, TelSource::Dir(dir.clone()))?;
+            log::info!("metrics endpoint at http://{}/metrics", server.addr());
+            Some(server)
+        }
+        None => None,
+    };
     let t0 = Instant::now();
 
     // per-rank pending fault events, consumed front to back across
@@ -210,6 +226,8 @@ fn drive(
     let mut trace: Vec<TracePoint> = Vec::new();
     let mut comm = StatsSnapshot::default();
     let mut stale_rows: Vec<[u64; STALE_BUCKETS]> = Vec::new();
+    let mut phase_rows: Vec<[u64; PHASE_BUCKETS]> = vec![[0u64; PHASE_BUCKETS]; PHASES];
+    let mut flight: Vec<Vec<FlightEvent>> = vec![Vec::new(); n];
     let mut outstanding = n;
     while outstanding > 0 {
         // reap whichever child exits next (poll: std has no wait-any)
@@ -247,9 +265,13 @@ fn drive(
             if rank == 0 {
                 trace.extend(res.trace.iter().copied());
             }
-            // each incarnation's ledger is fresh; snapshots sum
-            add_snapshot(&mut comm, &res.stats);
+            // each incarnation's ledger is fresh; snapshots sum (and the
+            // histograms sum row-wise, flight events concatenate in
+            // incarnation order — each carries its own monotone stamps)
+            comm.add(&res.stats);
             add_stale_rows(&mut stale_rows, &res.staleness);
+            add_phase_rows(&mut phase_rows, &res.phases);
+            flight[rank].extend(res.flight.iter().copied());
             for _ in 0..res.events_consumed {
                 consumed[rank] += 1;
                 if let Some(ev) = pending[rank].pop_front() {
@@ -293,8 +315,14 @@ fn drive(
     }
 
     world.quiesce();
-    add_snapshot(&mut comm, &world.stats.total());
+    // fold in the parent's own ledger (its counters, rows, and any
+    // flight events the supervisor recorded against a rank)
+    comm.add(&world.stats.total());
     add_stale_rows(&mut stale_rows, &world.stats.staleness_by_peer());
+    add_phase_rows(&mut phase_rows, &world.stats.phases_total());
+    for (acc, row) in flight.iter_mut().zip(world.stats.flight_by_rank()) {
+        acc.extend(row);
+    }
     let wallclock = t0.elapsed().as_secs_f64();
     let weights = vec![1.0f32; n];
     let slices: Vec<Option<&[f32]>> = states
@@ -317,6 +345,8 @@ fn drive(
         trace,
         comm,
         staleness: stale_rows,
+        phases: phase_rows,
+        flight,
         state: final_state,
     };
     // the owner's Drop unlinks the segment files; the run directory
@@ -356,6 +386,14 @@ pub fn run_child(args: &Args) -> Result<()> {
         .context("attaching to shared-memory segments")?;
     let world = Arc::new(World::with_transport(transport, Topology::flat(n)));
     let ctl = CtlRegion::attach(&dir, n)?;
+    // this incarnation's live telemetry region: a fresh create (not an
+    // attach), so its seqlock and payload restart from zero exactly
+    // like the per-process ledger it publishes
+    let telemetry = if cfg.telemetry_interval > 0 {
+        Some(TelemetryRegion::create_mapped(&dir, rank, n)?)
+    } else {
+        None
+    };
 
     let mut shard = partition_rank(&data, n, cfg.seed, rank);
     debug_assert_eq!(shard.worker, rank);
@@ -385,7 +423,9 @@ pub fn run_child(args: &Args) -> Result<()> {
                     start_iter = snap.iter;
                     rng_state = Some(snap.rng);
                     resume_comm = Some((snap.ctrl_chunks, snap.dirty));
-                    world.stats.rank(rank).restores.add(1);
+                    let rs = world.stats.rank(rank);
+                    rs.restores.add(1);
+                    rs.flight.record(FlightKind::Restore, start_iter, FLIGHT_NONE, 0);
                 }
                 Err(e) => {
                     // a damaged checkpoint must not kill the rank for
@@ -424,10 +464,24 @@ pub fn run_child(args: &Args) -> Result<()> {
         straggle_us,
         resume_comm,
         restored,
+        telemetry,
     };
     let res = run_worker(ctx);
     world.quiesce();
-    let encoded = encode_result(&res, &world.stats.total(), &world.stats.staleness_by_peer())?;
+    // the flight ring is this incarnation's black box: dump it next to
+    // the result file (crash, rollback, and clean quiesce alike), then
+    // ship the same events through the result codec for the report
+    let events: Vec<FlightEvent> = world.stats.flight_by_rank().into_iter().flatten().collect();
+    if let Err(e) = write_flight_jsonl(&dir, rank, &events) {
+        log::warn!("rank {rank}: flight recorder dump failed: {e:#}");
+    }
+    let encoded = encode_result(
+        &res,
+        &world.stats.total(),
+        &world.stats.staleness_by_peer(),
+        &world.stats.phases_total(),
+        &events,
+    )?;
     let path = result_path(&dir, rank);
     let tmp = dir.join(format!("result-{rank:03}.bin.tmp"));
     std::fs::write(&tmp, &encoded)
@@ -442,6 +496,8 @@ pub fn run_child(args: &Args) -> Result<()> {
 // magic u64 | rank u32 | iters u64 | death u8 + at u64 + after_ms u64 |
 // events_consumed u32 | state (len u64 + f32 bits) | STAT_WORDS words |
 // staleness (n_peers u64 + STALE_BUCKETS u64 per peer) |
+// phases (rows u64 + buckets u64, then rows*buckets u64) |
+// flight (count u64 + 5 u64 per event: t_ns iter kind peer arg) |
 // trace (count u64 + 4 f64 per point) | fnv1a-64 checksum
 
 fn put_u32(out: &mut Vec<u8>, v: u32) {
@@ -456,6 +512,8 @@ fn encode_result(
     res: &WorkerResult,
     stats: &StatsSnapshot,
     staleness: &[[u64; STALE_BUCKETS]],
+    phases: &[[u64; PHASE_BUCKETS]],
+    flight: &[FlightEvent],
 ) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(128 + 4 * res.state.len() + 32 * res.trace.len());
     put_u64(&mut out, RESULT_MAGIC);
@@ -475,7 +533,7 @@ fn encode_result(
     for &w in &res.state {
         put_u32(&mut out, w.to_bits());
     }
-    for v in snapshot_words(stats) {
+    for v in stats.to_words() {
         put_u64(&mut out, v);
     }
     put_u64(&mut out, staleness.len() as u64);
@@ -483,6 +541,23 @@ fn encode_result(
         for &c in row {
             put_u64(&mut out, c);
         }
+    }
+    // v4: explicit phase dims, so a bucket-count change is a loud
+    // decode error instead of a silent frame shift
+    put_u64(&mut out, phases.len() as u64);
+    put_u64(&mut out, PHASE_BUCKETS as u64);
+    for row in phases {
+        for &c in row {
+            put_u64(&mut out, c);
+        }
+    }
+    put_u64(&mut out, flight.len() as u64);
+    for ev in flight {
+        put_u64(&mut out, ev.t_ns);
+        put_u64(&mut out, ev.iter);
+        put_u64(&mut out, ev.kind as u64);
+        put_u64(&mut out, ev.peer);
+        put_u64(&mut out, ev.arg);
     }
     put_u64(&mut out, res.trace.len() as u64);
     for p in &res.trace {
@@ -496,15 +571,18 @@ fn encode_result(
     Ok(out)
 }
 
-/// What the parent reads back per incarnation.
-struct ProcResult {
-    iters: u64,
-    death: Option<(u64, FaultKind)>,
-    events_consumed: usize,
-    state: Vec<f32>,
-    stats: StatsSnapshot,
-    staleness: Vec<[u64; STALE_BUCKETS]>,
-    trace: Vec<TracePoint>,
+/// What the parent reads back per incarnation (`pub(crate)` so `asgd
+/// monitor` can fall back to result files once a run has finished).
+pub(crate) struct ProcResult {
+    pub(crate) iters: u64,
+    pub(crate) death: Option<(u64, FaultKind)>,
+    pub(crate) events_consumed: usize,
+    pub(crate) state: Vec<f32>,
+    pub(crate) stats: StatsSnapshot,
+    pub(crate) staleness: Vec<[u64; STALE_BUCKETS]>,
+    pub(crate) phases: Vec<[u64; PHASE_BUCKETS]>,
+    pub(crate) flight: Vec<FlightEvent>,
+    pub(crate) trace: Vec<TracePoint>,
 }
 
 struct Rd<'a> {
@@ -562,7 +640,8 @@ fn decode_result(bytes: &[u8]) -> Result<ProcResult> {
     for w in &mut words {
         *w = r.u64()?;
     }
-    let stats = snapshot_from_words(&words);
+    let stats = StatsSnapshot::from_words(&words)
+        .context("stat word count mismatch in result file")?;
     let n_peers = r.u64()? as usize;
     let mut staleness = Vec::with_capacity(n_peers.min(1024));
     for _ in 0..n_peers {
@@ -571,6 +650,31 @@ fn decode_result(bytes: &[u8]) -> Result<ProcResult> {
             *c = r.u64()?;
         }
         staleness.push(row);
+    }
+    let phase_rows = r.u64()? as usize;
+    let phase_buckets = r.u64()? as usize;
+    ensure!(
+        phase_rows == PHASES && phase_buckets == PHASE_BUCKETS,
+        "result file phase histogram is {phase_rows}x{phase_buckets}, \
+         expected {PHASES}x{PHASE_BUCKETS}"
+    );
+    let mut phases = vec![[0u64; PHASE_BUCKETS]; PHASES];
+    for row in &mut phases {
+        for c in row.iter_mut() {
+            *c = r.u64()?;
+        }
+    }
+    let n_flight = r.u64()? as usize;
+    let mut flight = Vec::with_capacity(n_flight.min(4096));
+    for _ in 0..n_flight {
+        let t_ns = r.u64()?;
+        let iter = r.u64()?;
+        let kind_word = r.u64()?;
+        let kind = FlightKind::from_index(kind_word)
+            .with_context(|| format!("unknown flight-event kind {kind_word} in result file"))?;
+        let peer = r.u64()?;
+        let arg = r.u64()?;
+        flight.push(FlightEvent { t_ns, iter, kind, peer, arg });
     }
     let n_trace = r.u64()? as usize;
     let mut trace = Vec::with_capacity(n_trace);
@@ -583,88 +687,14 @@ fn decode_result(bytes: &[u8]) -> Result<ProcResult> {
         });
     }
     ensure!(r.off == body.len(), "trailing bytes in result file");
-    Ok(ProcResult { iters, death, events_consumed, state, stats, staleness, trace })
+    Ok(ProcResult { iters, death, events_consumed, state, stats, staleness, phases, flight, trace })
 }
 
-fn read_result(dir: &Path, rank: usize) -> Result<ProcResult> {
+pub(crate) fn read_result(dir: &Path, rank: usize) -> Result<ProcResult> {
     let path = result_path(dir, rank);
     let bytes = std::fs::read(&path)
         .with_context(|| format!("reading worker result {}", path.display()))?;
     decode_result(&bytes).with_context(|| format!("decoding {}", path.display()))
-}
-
-/// The snapshot's counters as a fixed word vector (codec + summation
-/// share one field order: declaration order of [`StatsSnapshot`]).
-fn snapshot_words(s: &StatsSnapshot) -> [u64; STAT_WORDS] {
-    [
-        s.sent,
-        s.bytes_sent,
-        s.received,
-        s.good,
-        s.torn,
-        s.overwritten,
-        s.stale_polls,
-        s.chunk_sent,
-        s.chunk_received,
-        s.chunk_torn,
-        s.chunk_lost,
-        s.chunk_skipped,
-        s.relayouts,
-        s.suspected,
-        s.false_suspicion,
-        s.recovered,
-        s.gossip_seeded,
-        s.dead_masked,
-        s.restores,
-        s.frames_failed,
-        s.frames_retried,
-        s.frames_dropped_injected,
-        s.link_down,
-        s.reconnects,
-        s.frames_corrupt,
-        s.non_finite_rejected,
-        s.norm_rejected,
-        s.quarantined,
-        s.requalified,
-        s.rollbacks,
-        s.corrupt_results,
-    ]
-}
-
-fn snapshot_from_words(w: &[u64; STAT_WORDS]) -> StatsSnapshot {
-    StatsSnapshot {
-        sent: w[0],
-        bytes_sent: w[1],
-        received: w[2],
-        good: w[3],
-        torn: w[4],
-        overwritten: w[5],
-        stale_polls: w[6],
-        chunk_sent: w[7],
-        chunk_received: w[8],
-        chunk_torn: w[9],
-        chunk_lost: w[10],
-        chunk_skipped: w[11],
-        relayouts: w[12],
-        suspected: w[13],
-        false_suspicion: w[14],
-        recovered: w[15],
-        gossip_seeded: w[16],
-        dead_masked: w[17],
-        restores: w[18],
-        frames_failed: w[19],
-        frames_retried: w[20],
-        frames_dropped_injected: w[21],
-        link_down: w[22],
-        reconnects: w[23],
-        frames_corrupt: w[24],
-        non_finite_rejected: w[25],
-        norm_rejected: w[26],
-        quarantined: w[27],
-        requalified: w[28],
-        rollbacks: w[29],
-        corrupt_results: w[30],
-    }
 }
 
 /// Staleness histograms sum row-wise across incarnations, like the
@@ -681,14 +711,14 @@ fn add_stale_rows(into: &mut Vec<[u64; STALE_BUCKETS]>, rows: &[[u64; STALE_BUCK
     }
 }
 
-/// Per-process ledgers sum to the global totals (the accounting is
-/// ticked exactly once, by the process that did the work).
-fn add_snapshot(into: &mut StatsSnapshot, s: &StatsSnapshot) {
-    let mut acc = snapshot_words(into);
-    for (a, b) in acc.iter_mut().zip(snapshot_words(s)) {
-        *a += b;
+/// Phase-latency histograms sum bucket-wise across incarnations (the
+/// row count is pinned to [`PHASES`] on both sides of the codec).
+fn add_phase_rows(into: &mut [[u64; PHASE_BUCKETS]], rows: &[[u64; PHASE_BUCKETS]]) {
+    for (acc, row) in into.iter_mut().zip(rows) {
+        for (a, &c) in acc.iter_mut().zip(row) {
+            *a += c;
+        }
     }
-    *into = snapshot_from_words(&acc);
 }
 
 #[cfg(test)]
@@ -731,10 +761,37 @@ mod tests {
         vec![[5, 1, 0, 0, 2, 0, 0, 0], [0, 0, 0, 0, 0, 0, 0, 9]]
     }
 
+    fn sample_phases() -> Vec<[u64; PHASE_BUCKETS]> {
+        let mut rows = vec![[0u64; PHASE_BUCKETS]; PHASES];
+        rows[1][12] = 37;
+        rows[2][9] = 4;
+        rows
+    }
+
+    fn sample_flight() -> Vec<FlightEvent> {
+        vec![
+            FlightEvent {
+                t_ns: 1_000,
+                iter: 20,
+                kind: FlightKind::Rollback,
+                peer: FLIGHT_NONE,
+                arg: 3,
+            },
+            FlightEvent { t_ns: 2_500, iter: FLIGHT_NONE, kind: FlightKind::Suspected, peer: 1, arg: 0 },
+        ]
+    }
+
+    fn encode_sample() -> (WorkerResult, StatsSnapshot, Vec<u8>) {
+        let (res, stats) = sample_result();
+        let bytes =
+            encode_result(&res, &stats, &sample_staleness(), &sample_phases(), &sample_flight())
+                .unwrap();
+        (res, stats, bytes)
+    }
+
     #[test]
     fn result_file_roundtrips() {
-        let (res, stats) = sample_result();
-        let bytes = encode_result(&res, &stats, &sample_staleness()).unwrap();
+        let (res, stats, bytes) = encode_sample();
         let back = decode_result(&bytes).unwrap();
         assert_eq!(back.iters, 37);
         assert_eq!(back.death, Some((37, FaultKind::Restart { after_ms: 15 })));
@@ -744,14 +801,19 @@ mod tests {
         assert_eq!(back.stats.frames_corrupt, 4);
         assert_eq!(back.stats.rollbacks, 1);
         assert_eq!(back.staleness, sample_staleness());
+        // v4 appendix: phase rows and flight events survive the boundary
+        assert_eq!(back.phases, sample_phases());
+        assert_eq!(back.phases[1][12], 37);
+        assert_eq!(back.flight, sample_flight());
+        assert_eq!(back.flight[0].kind, FlightKind::Rollback);
+        assert_eq!(back.flight[0].peer, FLIGHT_NONE, "sentinel peers survive");
         assert_eq!(back.trace.len(), 1);
         assert_eq!(back.trace[0].objective, 3.5);
     }
 
     #[test]
     fn result_file_refuses_corruption() {
-        let (res, stats) = sample_result();
-        let bytes = encode_result(&res, &stats, &sample_staleness()).unwrap();
+        let (_res, _stats, bytes) = encode_sample();
         let mut bad = bytes.clone();
         bad[20] ^= 1;
         assert!(decode_result(&bad).is_err(), "checksum must catch a bit flip");
@@ -763,12 +825,38 @@ mod tests {
         let a = StatsSnapshot { sent: 1, torn: 2, restores: 3, ..Default::default() };
         let b = StatsSnapshot { sent: 10, good: 5, restores: 1, ..Default::default() };
         let mut acc = StatsSnapshot::default();
-        add_snapshot(&mut acc, &a);
-        add_snapshot(&mut acc, &b);
+        acc.add(&a);
+        acc.add(&b);
         assert_eq!(acc.sent, 11);
         assert_eq!(acc.torn, 2);
         assert_eq!(acc.good, 5);
         assert_eq!(acc.restores, 4);
+    }
+
+    #[test]
+    fn monitor_falls_back_to_result_files() {
+        let dir = std::env::temp_dir().join(format!("asgd-mon-res-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (_res, _stats, bytes) = encode_sample();
+        std::fs::write(result_path(&dir, 0), &bytes).unwrap();
+        let scrape = crate::metrics::serve::monitor_scrape(&dir).unwrap();
+        assert_eq!(scrape.source, "result files");
+        assert_eq!(scrape.report.get("msgs_sent").unwrap().as_f64(), Some(7.0));
+        assert_eq!(scrape.report.get("flight_events").unwrap().as_f64(), Some(2.0));
+        let phases = scrape.report.get("phases").unwrap().as_arr().unwrap();
+        assert_eq!(phases[1].as_arr().unwrap()[12].as_f64(), Some(37.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn phase_rows_sum_bucketwise() {
+        let mut acc = vec![[0u64; PHASE_BUCKETS]; PHASES];
+        add_phase_rows(&mut acc, &sample_phases());
+        add_phase_rows(&mut acc, &sample_phases());
+        assert_eq!(acc[1][12], 74);
+        assert_eq!(acc[2][9], 8);
+        assert_eq!(acc[0][0], 0);
     }
 
     #[test]

@@ -67,10 +67,12 @@ use crate::config::{
 use crate::data::partition::Shard;
 use crate::gaspi::liveness::admit_presence;
 use crate::gaspi::sched::plan_send_into;
+use crate::gaspi::stats::{FlightKind, Phase, FLIGHT_NONE};
 use crate::gaspi::transport::shmem::CtlRegion;
 use crate::gaspi::{AdaptiveController, ChunkLayout, DirtyMap, LivenessView, ReadOutcome, World};
 use crate::kernels::simd::{scan_finite_max, NON_FINITE_BITS};
 use crate::kernels::ExtPresence;
+use crate::metrics::telemetry::TelemetryRegion;
 use crate::metrics::TracePoint;
 use crate::models::Model;
 use crate::runtime::{StepScratch, Stepper};
@@ -187,6 +189,10 @@ pub struct WorkerCtx {
     /// wait on the start barrier again (its original crew released it
     /// long ago).
     pub restored: bool,
+    /// This rank's live telemetry region, published every
+    /// `telemetry_interval` send events (plus once at loop exit);
+    /// `None` when the telemetry plane is off.
+    pub telemetry: Option<Arc<TelemetryRegion>>,
 }
 
 /// An Instant all workers agree on (set by whoever passes the barrier
@@ -226,6 +232,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         straggle_us,
         resume_comm,
         restored,
+        telemetry,
     } = ctx;
 
     let state_len = w0.len();
@@ -346,6 +353,14 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
     let mut fault_rng = Xoshiro256pp::seed_from_u64(
         cfg.seed ^ 0xFA01_7FA0.wrapping_add(rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
     );
+    // telemetry plane: phase timers run whenever the plane is on
+    // (`telemetry_interval > 0`); the region itself is published on the
+    // send-event cadence below plus once at loop exit.  With the plane
+    // off both cost exactly one branch per phase.
+    let instrument = cfg.telemetry_interval > 0;
+    let mut send_events = 0u64;
+    // the owner's last evaluated objective (rank 0 only; NaN elsewhere)
+    let mut last_obj = f64::NAN;
 
     // alg. 5 line 4: "randomly shuffle samples on node i" happened at
     // partition time; synchronize the start so wall-clock is comparable.
@@ -378,6 +393,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         // fault check, so even a crash at t = 0 has a restore point) ----
         if let Some(store) = &ckpt {
             if cfg.ckpt_interval > 0 && t % cfg.ckpt_interval as u64 == 0 {
+                let ph = instrument.then(Instant::now);
                 // numeric health gate (PR 9): never checkpoint a state
                 // the guards would reject from a peer — a rollback must
                 // restore *good* state, and skipping a write is always
@@ -412,6 +428,9 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                     log::warn!(
                         "rank {rank}: skipping checkpoint at iteration {t} (state unhealthy)"
                     );
+                }
+                if let Some(p0) = ph {
+                    stats.rank(rank).phases.record(Phase::Checkpoint, p0.elapsed().as_nanos() as u64);
                 }
             }
         }
@@ -473,6 +492,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         // words untouched.  A stale poll therefore costs O(blocks) mask
         // writes instead of O(n_buffers * state_len) zero-fill traffic.
         if communicate {
+            let ph = instrument.then(Instant::now);
             let rx = stats.rank(rank);
             // lease poll: one wait-free heartbeat read per peer.  Runs
             // before the slot sweep so a sender that just went silent is
@@ -517,6 +537,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                             if rejected {
                                 if live.quarantine(sender) {
                                     rx.quarantined.add(1);
+                                    rx.flight.record(FlightKind::Quarantined, t, sender as u64, 0);
                                     log::warn!(
                                         "rank {rank}: quarantining rank {sender} \
                                          (poisoned payload in block {c})"
@@ -525,6 +546,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                             } else {
                                 if live.record_clean(sender) {
                                     rx.requalified.add(1);
+                                    rx.flight.record(FlightKind::Requalified, t, sender as u64, 0);
                                     log::info!(
                                         "rank {rank}: rank {sender} requalified \
                                          after consecutive clean deliveries"
@@ -630,14 +652,21 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                     rx.stale_polls.add(1);
                 }
             }
+            if let Some(p0) = ph {
+                rx.phases.record(Phase::PollMerge, p0.elapsed().as_nanos() as u64);
+            }
         }
 
         // ---- local mini-batch update (fig. 4 I-IV) ---------------------
+        let ph = instrument.then(Instant::now);
         let (x, labels) = shard.next_batch(cfg.minibatch);
         let out = stepper
             .step(x, labels, &mut w, &exts, &presence, &mut scratch)
             .expect("stepper failed");
         stats.rank(rank).good.add(out.n_good as u64);
+        if let Some(p0) = ph {
+            stats.rank(rank).phases.record(Phase::Compute, p0.elapsed().as_nanos() as u64);
+        }
         global_samples.add(cfg.minibatch as u64);
 
         // ---- dirty tracking (adaptive mode): the step touched exactly
@@ -681,6 +710,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         // clobbered real payloads.  validate() guarantees
         // `send_interval >= 1`, so the modulus cannot be zero.
         if communicate && (t + 1) % cfg.send_interval as u64 == 0 {
+            let ph = instrument.then(Instant::now);
             // liveness beat: rides every send event, wait-free, on the
             // segment's metadata plane (even when dirty skipping ends up
             // putting nothing — alive is alive).  The suspicion mask is
@@ -715,7 +745,9 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                         // it (epoch bump) for observers.  Block
                         // boundaries never move — only the grouping.
                         world.advertise_layout(rank, new_chunks);
-                        stats.rank(rank).relayouts.add(1);
+                        let tx = stats.rank(rank);
+                        tx.relayouts.add(1);
+                        tx.flight.record(FlightKind::Relayout, t, FLIGHT_NONE, new_chunks as u64);
                     }
                 } else if chunked {
                     // arXiv:1510.01155 load balancing: block c of this
@@ -734,6 +766,18 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                     }
                 }
             }
+            if let Some(p0) = ph {
+                stats.rank(rank).phases.record(Phase::Send, p0.elapsed().as_nanos() as u64);
+            }
+            // telemetry publish rides the send-event cadence (outside
+            // the send phase timer: it measures training, not
+            // observability)
+            send_events += 1;
+            if let Some(tel) = &telemetry {
+                if instrument && send_events % cfg.telemetry_interval as u64 == 0 {
+                    tel.publish(stats.rank(rank), t + 1, last_obj, global_samples.load());
+                }
+            }
         }
 
         if cfg.yield_per_iter && communicate {
@@ -744,6 +788,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         if rank == 0 && (t % cfg.eval_every as u64 == 0 || t + 1 == cfg.iters as u64) {
             let objective = model.eval(&eval_data, &w, cfg.eval_samples);
             let truth_error = model.truth_error(&eval_data, &w).unwrap_or(f64::NAN);
+            last_obj = objective;
             trace.push(TracePoint {
                 global_iters: global_samples.load() as f64,
                 time_s: t0.elapsed().as_secs_f64(),
@@ -770,6 +815,7 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
                     let rxs = stats.rank(rank);
                     if rxs.rollbacks.get() < cfg.rollback_budget as u64 {
                         rxs.rollbacks.add(1);
+                        rxs.flight.record(FlightKind::Rollback, t, FLIGHT_NONE, 0);
                         log::warn!(
                             "rank {rank}: objective diverged ({objective:.3e} vs best \
                              {best_obj:.3e}) at iteration {t}; rolling back to the last \
@@ -803,6 +849,13 @@ pub fn run_worker(ctx: WorkerCtx) -> WorkerResult {
         // finished rank into suspicion (fault-free runs end with zero
         // liveness noise; a crash skips this — corpses stay suspect)
         world.publish_retirement(rank);
+    }
+    // final telemetry publish: whatever ends this incarnation — clean
+    // completion, crash fault or rollback — the region's last snapshot
+    // is this worker's complete ledger (scrapes after quiesce agree
+    // with the RunReport totals)
+    if let Some(tel) = &telemetry {
+        tel.publish(stats.rank(rank), completed, last_obj, global_samples.load());
     }
     WorkerResult {
         rank,

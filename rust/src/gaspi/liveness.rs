@@ -78,7 +78,7 @@
 //! `requalified <= quarantined`.
 
 use super::segment::{HEARTBEAT_BEAT_BITS, HEARTBEAT_RETIRED_BIT};
-use super::stats::CommStats;
+use super::stats::{CommStats, FlightKind, FLIGHT_NONE};
 use super::World;
 use crate::kernels::ExtPresence;
 
@@ -202,18 +202,30 @@ impl LivenessView {
     }
 
     /// One lease poll over every peer segment, counting transitions on
-    /// this rank's stats.  Called once per receive poll.
+    /// this rank's stats (and logging each one to the flight recorder —
+    /// transitions are rare by construction, so the ring never sees the
+    /// per-poll hot path).  Called once per receive poll.
     pub fn refresh(&mut self, world: &World, stats: &CommStats) {
         for r in 0..self.peers.len() {
             if r == self.me {
                 continue;
             }
-            match self.observe(r, world.segment(r).heartbeat()) {
-                Some(Transition::Suspected) => stats.suspected.add(1),
-                Some(Transition::FalseSuspicion) => stats.false_suspicion.add(1),
-                Some(Transition::Recovered) => stats.recovered.add(1),
-                None => {}
-            }
+            let kind = match self.observe(r, world.segment(r).heartbeat()) {
+                Some(Transition::Suspected) => {
+                    stats.suspected.add(1);
+                    FlightKind::Suspected
+                }
+                Some(Transition::FalseSuspicion) => {
+                    stats.false_suspicion.add(1);
+                    FlightKind::FalseSuspicion
+                }
+                Some(Transition::Recovered) => {
+                    stats.recovered.add(1);
+                    FlightKind::Recovered
+                }
+                None => continue,
+            };
+            stats.flight.record(kind, FLIGHT_NONE, r as u64, 0);
         }
     }
 
@@ -279,6 +291,7 @@ impl LivenessView {
                 lease.suspected = true;
                 stats.suspected.add(1);
                 stats.gossip_seeded.add(1);
+                stats.flight.record(FlightKind::GossipSeeded, FLIGHT_NONE, p as u64, votes as u64);
                 seeded += 1;
             }
         }
@@ -565,6 +578,15 @@ mod tests {
         assert!(
             stats.false_suspicion.get() + stats.recovered.get() <= stats.suspected.get()
         );
+        // every transition also landed in the flight recorder, with the
+        // accused peer attached
+        let events = stats.flight.snapshot();
+        assert!(events
+            .iter()
+            .any(|e| e.kind == FlightKind::Suspected && e.peer == 1));
+        assert!(events
+            .iter()
+            .any(|e| e.kind == FlightKind::Recovered && e.peer == 2));
     }
 
     #[test]

@@ -101,7 +101,7 @@ pub mod transport;
 pub use liveness::{heartbeat_parts, LivenessView, Transition};
 pub use sched::{AdaptiveController, DirtyMap};
 pub use segment::{ChunkLayout, ReadOutcome, Segment, SlotSnapshot, MAX_GROUP_BLOCKS};
-pub use stats::{CommStats, WorldStats};
+pub use stats::{CommStats, FlightEvent, FlightKind, Phase, WorldStats};
 pub use topology::Topology;
 pub use transport::{Inproc, Shmem, Socket, Transport};
 

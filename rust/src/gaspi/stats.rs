@@ -1,7 +1,11 @@
 //! Per-rank communication counters (fig. 12: messages sent / received /
-//! "good", plus the race statistics of §4.4).
+//! "good", plus the race statistics of §4.4), the phase-latency
+//! histograms of the worker loop, and the crash flight recorder.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
 
 /// A relaxed atomic counter.
 #[derive(Default)]
@@ -138,6 +142,15 @@ pub struct CommStats {
     /// receiver's iteration minus the sender's `F_ITER` stamp — lands in
     /// the sender's row ([`StaleHist`]).
     pub staleness: StaleHist,
+    /// Per-phase latency histogram over this rank's worker loop: each
+    /// pass through a loop phase (poll/merge, compute, send, checkpoint)
+    /// lands its wall-time in a log2 ns bucket ([`PhaseHist`]).  Travels
+    /// outside [`StatsSnapshot`] (which stays `Copy`), like `staleness`.
+    pub phases: PhaseHist,
+    /// Bounded ring of structured rare events (suspicions, quarantines,
+    /// link transitions, rollbacks, ...) with iter + monotonic-ns stamps
+    /// — the crash flight recorder ([`FlightRing`]).
+    pub flight: FlightRing,
 }
 
 /// Number of logarithmic lag buckets: 0, 1, 2-3, 4-7, 8-15, 16-31,
@@ -208,79 +221,112 @@ impl StaleHist {
     }
 }
 
-/// Aggregated view of one rank's counters.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
-pub struct StatsSnapshot {
-    pub sent: u64,
-    pub bytes_sent: u64,
-    pub received: u64,
-    pub good: u64,
-    pub torn: u64,
-    pub overwritten: u64,
-    pub stale_polls: u64,
-    pub chunk_sent: u64,
-    pub chunk_received: u64,
-    pub chunk_torn: u64,
-    pub chunk_lost: u64,
-    pub chunk_skipped: u64,
-    pub relayouts: u64,
-    pub suspected: u64,
-    pub false_suspicion: u64,
-    pub recovered: u64,
-    pub gossip_seeded: u64,
-    pub dead_masked: u64,
-    pub restores: u64,
-    pub frames_failed: u64,
-    pub frames_retried: u64,
-    pub frames_dropped_injected: u64,
-    pub link_down: u64,
-    pub reconnects: u64,
-    pub frames_corrupt: u64,
-    pub non_finite_rejected: u64,
-    pub norm_rejected: u64,
-    pub quarantined: u64,
-    pub requalified: u64,
-    pub rollbacks: u64,
-    pub corrupt_results: u64,
+/// The one table every enumeration of the counters is generated from:
+/// `field ident => export name`.  Adding a counter here (plus its
+/// [`CommStats`] field) is the whole change — the snapshot struct, the
+/// field-wise sum, the result-file codec words, the JSON export and the
+/// CLI table all derive from this list, so they can never drift apart
+/// again (PR 9 silently dropped the socket counters from the export by
+/// hand-listing them in three places).  Order is the wire order of the
+/// result-file codec: append only.
+macro_rules! for_each_stat {
+    ($apply:ident) => {
+        $apply! {
+            sent => "msgs_sent",
+            bytes_sent => "bytes_sent",
+            received => "msgs_received",
+            good => "msgs_good",
+            torn => "msgs_torn",
+            overwritten => "msgs_overwritten",
+            stale_polls => "stale_polls",
+            chunk_sent => "blocks_sent",
+            chunk_received => "blocks_received",
+            chunk_torn => "blocks_torn",
+            chunk_lost => "blocks_lost",
+            chunk_skipped => "blocks_skipped",
+            relayouts => "relayouts",
+            suspected => "suspected",
+            false_suspicion => "false_suspicion",
+            recovered => "recovered",
+            gossip_seeded => "gossip_seeded",
+            dead_masked => "dead_masked",
+            restores => "restores",
+            frames_failed => "frames_failed",
+            frames_retried => "frames_retried",
+            frames_dropped_injected => "frames_dropped_injected",
+            link_down => "link_down",
+            reconnects => "reconnects",
+            frames_corrupt => "frames_corrupt",
+            non_finite_rejected => "non_finite_rejected",
+            norm_rejected => "norm_rejected",
+            quarantined => "quarantined",
+            requalified => "requalified",
+            rollbacks => "rollbacks",
+            corrupt_results => "corrupt_results",
+        }
+    };
 }
 
-impl CommStats {
-    pub fn snapshot(&self) -> StatsSnapshot {
-        StatsSnapshot {
-            sent: self.sent.get(),
-            bytes_sent: self.bytes_sent.get(),
-            received: self.received.get(),
-            good: self.good.get(),
-            torn: self.torn.get(),
-            overwritten: self.overwritten.get(),
-            stale_polls: self.stale_polls.get(),
-            chunk_sent: self.chunk_sent.get(),
-            chunk_received: self.chunk_received.get(),
-            chunk_torn: self.chunk_torn.get(),
-            chunk_lost: self.chunk_lost.get(),
-            chunk_skipped: self.chunk_skipped.get(),
-            relayouts: self.relayouts.get(),
-            suspected: self.suspected.get(),
-            false_suspicion: self.false_suspicion.get(),
-            recovered: self.recovered.get(),
-            gossip_seeded: self.gossip_seeded.get(),
-            dead_masked: self.dead_masked.get(),
-            restores: self.restores.get(),
-            frames_failed: self.frames_failed.get(),
-            frames_retried: self.frames_retried.get(),
-            frames_dropped_injected: self.frames_dropped_injected.get(),
-            link_down: self.link_down.get(),
-            reconnects: self.reconnects.get(),
-            frames_corrupt: self.frames_corrupt.get(),
-            non_finite_rejected: self.non_finite_rejected.get(),
-            norm_rejected: self.norm_rejected.get(),
-            quarantined: self.quarantined.get(),
-            requalified: self.requalified.get(),
-            rollbacks: self.rollbacks.get(),
-            corrupt_results: self.corrupt_results.get(),
+macro_rules! define_snapshot {
+    ($($field:ident => $name:literal,)+) => {
+        /// Aggregated view of one rank's counters (field docs live on
+        /// [`CommStats`]; this struct is generated from the
+        /// `for_each_stat!` table in the same order).
+        #[derive(Clone, Copy, Debug, Default, PartialEq)]
+        pub struct StatsSnapshot {
+            $(pub $field: u64,)+
         }
-    }
+
+        /// Export name of every counter, in declaration (= codec wire)
+        /// order.
+        pub const STAT_FIELDS: &[&str] = &[$($name,)+];
+
+        impl StatsSnapshot {
+            /// `(export_name, value)` pairs in declaration order — the
+            /// JSON export, the CLI table and the Prometheus exposition
+            /// all iterate this instead of hand-listing fields.
+            pub fn fields(&self) -> Vec<(&'static str, u64)> {
+                vec![$(($name, self.$field),)+]
+            }
+
+            /// The counters as plain words in declaration order (the
+            /// result-file codec payload and the telemetry region body).
+            pub fn to_words(&self) -> Vec<u64> {
+                vec![$(self.$field,)+]
+            }
+
+            /// Rebuild from [`Self::to_words`] output; refuses a length
+            /// mismatch (a codec that shipped a different field count).
+            pub fn from_words(words: &[u64]) -> Option<Self> {
+                if words.len() != STAT_FIELDS.len() {
+                    return None;
+                }
+                let mut it = words.iter();
+                Some(Self {
+                    $($field: *it.next().unwrap(),)+
+                })
+            }
+
+            /// Field-wise accumulate (`self += other`).
+            pub fn add(&mut self, other: &StatsSnapshot) {
+                $(self.$field += other.$field;)+
+            }
+        }
+
+        impl CommStats {
+            pub fn snapshot(&self) -> StatsSnapshot {
+                StatsSnapshot {
+                    $($field: self.$field.get(),)+
+                }
+            }
+        }
+    };
 }
+
+for_each_stat!(define_snapshot);
+
+/// Number of plain words a [`StatsSnapshot`] serializes to.
+pub const STAT_WORDS: usize = STAT_FIELDS.len();
 
 /// All ranks' counters.
 pub struct WorldStats {
@@ -307,38 +353,7 @@ impl WorldStats {
     pub fn total(&self) -> StatsSnapshot {
         let mut t = StatsSnapshot::default();
         for r in &self.ranks {
-            let s = r.snapshot();
-            t.sent += s.sent;
-            t.bytes_sent += s.bytes_sent;
-            t.received += s.received;
-            t.good += s.good;
-            t.torn += s.torn;
-            t.overwritten += s.overwritten;
-            t.stale_polls += s.stale_polls;
-            t.chunk_sent += s.chunk_sent;
-            t.chunk_received += s.chunk_received;
-            t.chunk_torn += s.chunk_torn;
-            t.chunk_lost += s.chunk_lost;
-            t.chunk_skipped += s.chunk_skipped;
-            t.relayouts += s.relayouts;
-            t.suspected += s.suspected;
-            t.false_suspicion += s.false_suspicion;
-            t.recovered += s.recovered;
-            t.gossip_seeded += s.gossip_seeded;
-            t.dead_masked += s.dead_masked;
-            t.restores += s.restores;
-            t.frames_failed += s.frames_failed;
-            t.frames_retried += s.frames_retried;
-            t.frames_dropped_injected += s.frames_dropped_injected;
-            t.link_down += s.link_down;
-            t.reconnects += s.reconnects;
-            t.frames_corrupt += s.frames_corrupt;
-            t.non_finite_rejected += s.non_finite_rejected;
-            t.norm_rejected += s.norm_rejected;
-            t.quarantined += s.quarantined;
-            t.requalified += s.requalified;
-            t.rollbacks += s.rollbacks;
-            t.corrupt_results += s.corrupt_results;
+            t.add(&r.snapshot());
         }
         t
     }
@@ -368,6 +383,262 @@ impl WorldStats {
                 row
             })
             .collect()
+    }
+
+    /// Per-phase latency totals summed over every rank: `out[p][b]`
+    /// counts loop passes whose phase-`p` wall time fell in log2 ns
+    /// bucket `b` (see [`phase_bucket`]).  Like `staleness_by_peer`,
+    /// the histogram travels outside [`StatsSnapshot`].
+    pub fn phases_total(&self) -> Vec<[u64; PHASE_BUCKETS]> {
+        (0..PHASES)
+            .map(|p| {
+                let mut row = [0u64; PHASE_BUCKETS];
+                for r in &self.ranks {
+                    for (acc, v) in row.iter_mut().zip(r.phases.row(p)) {
+                        *acc += v;
+                    }
+                }
+                row
+            })
+            .collect()
+    }
+
+    /// Every rank's flight-recorder contents, indexed by rank (each
+    /// rank's events are in record order, stamps monotone per rank).
+    pub fn flight_by_rank(&self) -> Vec<Vec<FlightEvent>> {
+        self.ranks.iter().map(|r| r.flight.snapshot()).collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Phase-latency histograms
+// ---------------------------------------------------------------------
+
+/// The instrumented phases of the worker loop, in instrumentation
+/// order: poll/merge external states, local compute (gradient step),
+/// the send event (puts + metadata publishes), checkpoint writes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    PollMerge = 0,
+    Compute = 1,
+    Send = 2,
+    Checkpoint = 3,
+}
+
+/// Number of instrumented worker-loop phases.
+pub const PHASES: usize = 4;
+
+/// Export names of the phases, indexed by [`Phase`] discriminant.
+pub const PHASE_NAMES: [&str; PHASES] = ["poll_merge", "compute", "send", "checkpoint"];
+
+/// Log2 ns buckets per phase: bucket `b` holds durations in
+/// `[2^b, 2^(b+1))` ns (bucket 0 also takes 0), bucket 31 is the
+/// `>= ~2.1 s` tail — wide enough that a checkpoint fsync or a
+/// straggler-stretched compute pass never saturates.
+pub const PHASE_BUCKETS: usize = 32;
+
+/// Which histogram bucket a measured phase duration lands in.
+#[inline]
+pub fn phase_bucket(ns: u64) -> usize {
+    if ns == 0 {
+        0
+    } else {
+        ((63 - ns.leading_zeros()) as usize).min(PHASE_BUCKETS - 1)
+    }
+}
+
+/// A fixed `PHASES x PHASE_BUCKETS` table of relaxed counters:
+/// row = worker-loop phase, column = log2 ns latency bucket (the same
+/// shape as [`StaleHist`]).
+pub struct PhaseHist {
+    cells: Vec<Counter>,
+}
+
+impl Default for PhaseHist {
+    fn default() -> Self {
+        Self {
+            cells: (0..PHASES * PHASE_BUCKETS).map(|_| Counter::default()).collect(),
+        }
+    }
+}
+
+impl PhaseHist {
+    /// Record one pass through `phase` that took `ns` nanoseconds.
+    #[inline]
+    pub fn record(&self, phase: Phase, ns: u64) {
+        self.cells[phase as usize * PHASE_BUCKETS + phase_bucket(ns)].add(1);
+    }
+
+    /// One phase's bucket counts.
+    pub fn row(&self, phase: usize) -> [u64; PHASE_BUCKETS] {
+        let row = phase.min(PHASES - 1);
+        let mut out = [0u64; PHASE_BUCKETS];
+        for (b, o) in out.iter_mut().enumerate() {
+            *o = self.cells[row * PHASE_BUCKETS + b].get();
+        }
+        out
+    }
+
+    /// Add another histogram's counts into this one (cell-wise).
+    pub fn merge_from(&self, other: &PhaseHist) {
+        for (mine, theirs) in self.cells.iter().zip(&other.cells) {
+            mine.add(theirs.get());
+        }
+    }
+
+    /// Add raw bucket counts for one phase row (the shmem result-file
+    /// path, where counts cross the process boundary as plain words).
+    pub fn add_row(&self, phase: usize, counts: &[u64; PHASE_BUCKETS]) {
+        let row = phase.min(PHASES - 1);
+        for (b, &c) in counts.iter().enumerate() {
+            self.cells[row * PHASE_BUCKETS + b].add(c);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Crash flight recorder
+// ---------------------------------------------------------------------
+
+/// Kinds of structured rare events the flight recorder captures.  The
+/// discriminant is the codec index (result-file v4 and the JSONL dump
+/// both ship it as a word): append only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlightKind {
+    /// A peer's heartbeat stopped advancing for a full lease.
+    Suspected = 0,
+    /// A suspicion resolved as slow-not-dead (same incarnation).
+    FalseSuspicion = 1,
+    /// A suspicion resolved as a rebirth (new incarnation).
+    Recovered = 2,
+    /// A suspicion adopted from peer gossip at start-up.
+    GossipSeeded = 3,
+    /// A peer entered numeric quarantine after a poisoned delivery.
+    Quarantined = 4,
+    /// A quarantined peer was re-admitted after clean payloads.
+    Requalified = 5,
+    /// An adaptive logical re-layout (`arg` = new chunk count).
+    Relayout = 6,
+    /// The divergence watchdog restored from the last good checkpoint.
+    Rollback = 7,
+    /// The supervisor restored this rank's worker from checkpoint.
+    Restore = 8,
+    /// A socket link was declared Down (`peer` = remote rank).
+    LinkDown = 9,
+    /// A Down socket link was re-established (`peer` = remote rank).
+    Reconnect = 10,
+}
+
+impl FlightKind {
+    /// Every kind, indexed by discriminant.
+    pub const ALL: [FlightKind; 11] = [
+        FlightKind::Suspected,
+        FlightKind::FalseSuspicion,
+        FlightKind::Recovered,
+        FlightKind::GossipSeeded,
+        FlightKind::Quarantined,
+        FlightKind::Requalified,
+        FlightKind::Relayout,
+        FlightKind::Rollback,
+        FlightKind::Restore,
+        FlightKind::LinkDown,
+        FlightKind::Reconnect,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FlightKind::Suspected => "suspected",
+            FlightKind::FalseSuspicion => "false_suspicion",
+            FlightKind::Recovered => "recovered",
+            FlightKind::GossipSeeded => "gossip_seeded",
+            FlightKind::Quarantined => "quarantined",
+            FlightKind::Requalified => "requalified",
+            FlightKind::Relayout => "relayout",
+            FlightKind::Rollback => "rollback",
+            FlightKind::Restore => "restore",
+            FlightKind::LinkDown => "link_down",
+            FlightKind::Reconnect => "reconnect",
+        }
+    }
+
+    /// Inverse of the discriminant (codec decode); `None` for an index
+    /// a newer writer might ship.
+    pub fn from_index(i: u64) -> Option<FlightKind> {
+        Self::ALL.get(i as usize).copied()
+    }
+}
+
+/// Sentinel for "no iteration known at this site" (e.g. the socket
+/// applier threads, which run outside the worker loop) and "no peer".
+pub const FLIGHT_NONE: u64 = u64::MAX;
+
+/// Capacity of each rank's ring: old events are dropped, the tail —
+/// the part that explains a crash — is always retained.
+pub const FLIGHT_CAP: usize = 1024;
+
+/// One structured flight-recorder event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlightEvent {
+    /// Monotonic ns since this *process* first touched the recorder —
+    /// monotone within a rank's ring; epochs differ across processes.
+    pub t_ns: u64,
+    /// The rank's iteration when recorded ([`FLIGHT_NONE`] = unknown).
+    pub iter: u64,
+    /// What happened.
+    pub kind: FlightKind,
+    /// The peer rank involved ([`FLIGHT_NONE`] = none).
+    pub peer: u64,
+    /// Kind-specific argument (chunk count for relayouts, 0 otherwise).
+    pub arg: u64,
+}
+
+/// The process-wide monotonic epoch flight stamps count from.
+fn flight_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process flight epoch.
+pub fn flight_now_ns() -> u64 {
+    flight_epoch().elapsed().as_nanos() as u64
+}
+
+/// A bounded ring of [`FlightEvent`]s.  Rare-event path only (the hot
+/// loop never touches it), so a mutex-guarded deque is the right
+/// simplicity/perf trade.
+#[derive(Default)]
+pub struct FlightRing {
+    events: Mutex<VecDeque<FlightEvent>>,
+}
+
+impl FlightRing {
+    /// Record one event, stamping it now.  Drops the oldest event once
+    /// the ring holds [`FLIGHT_CAP`].
+    pub fn record(&self, kind: FlightKind, iter: u64, peer: u64, arg: u64) {
+        self.push(FlightEvent {
+            t_ns: flight_now_ns(),
+            iter,
+            kind,
+            peer,
+            arg,
+        });
+    }
+
+    /// Append a pre-stamped event (the result-file merge path, where a
+    /// child's events cross the process boundary with their original
+    /// stamps).
+    pub fn push(&self, ev: FlightEvent) {
+        let mut q = self.events.lock().unwrap_or_else(|e| e.into_inner());
+        if q.len() == FLIGHT_CAP {
+            q.pop_front();
+        }
+        q.push_back(ev);
+    }
+
+    /// Copy of the ring's contents, oldest first.
+    pub fn snapshot(&self) -> Vec<FlightEvent> {
+        let q = self.events.lock().unwrap_or_else(|e| e.into_inner());
+        q.iter().copied().collect()
     }
 }
 
@@ -526,5 +797,108 @@ mod tests {
         assert_eq!(t.rollbacks, 1);
         // a peer can only requalify after entering quarantine
         assert!(t.requalified <= t.quarantined);
+    }
+
+    #[test]
+    fn stat_field_table_pins_every_enumeration() {
+        // the identity the de-drift table guarantees: codec word count
+        // == export field count == struct field count, all one list
+        let snap = StatsSnapshot {
+            sent: 1,
+            corrupt_results: 31,
+            ..Default::default()
+        };
+        assert_eq!(STAT_WORDS, STAT_FIELDS.len());
+        assert_eq!(snap.to_words().len(), STAT_WORDS);
+        assert_eq!(snap.fields().len(), STAT_WORDS);
+        // declaration order: first field is the codec's first word and
+        // the export's first name
+        assert_eq!(snap.to_words()[0], 1);
+        assert_eq!(snap.fields()[0], ("msgs_sent", 1));
+        assert_eq!(snap.to_words()[STAT_WORDS - 1], 31);
+        assert_eq!(snap.fields()[STAT_WORDS - 1], ("corrupt_results", 31));
+        // names are unique (a duplicate would silently shadow a series)
+        let mut names: Vec<_> = STAT_FIELDS.to_vec();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), STAT_WORDS);
+        // words roundtrip; a wrong-length word list is refused
+        assert_eq!(StatsSnapshot::from_words(&snap.to_words()), Some(snap));
+        assert_eq!(StatsSnapshot::from_words(&vec![0; STAT_WORDS - 1]), None);
+        assert_eq!(StatsSnapshot::from_words(&vec![0; STAT_WORDS + 1]), None);
+    }
+
+    #[test]
+    fn snapshot_add_is_fieldwise() {
+        let mut a = StatsSnapshot {
+            sent: 2,
+            torn: 1,
+            ..Default::default()
+        };
+        let b = StatsSnapshot {
+            sent: 3,
+            rollbacks: 4,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.sent, 5);
+        assert_eq!(a.torn, 1);
+        assert_eq!(a.rollbacks, 4);
+    }
+
+    #[test]
+    fn phase_buckets_are_log2_ns() {
+        assert_eq!(phase_bucket(0), 0);
+        assert_eq!(phase_bucket(1), 0);
+        assert_eq!(phase_bucket(2), 1);
+        assert_eq!(phase_bucket(3), 1);
+        assert_eq!(phase_bucket(1024), 10);
+        assert_eq!(phase_bucket(u64::MAX), PHASE_BUCKETS - 1);
+    }
+
+    #[test]
+    fn phase_histograms_record_merge_and_aggregate() {
+        let ws = WorldStats::new(2);
+        ws.rank(0).phases.record(Phase::Compute, 1000); // bucket 9
+        ws.rank(0).phases.record(Phase::Compute, 1024); // bucket 10
+        ws.rank(1).phases.record(Phase::Compute, 1024);
+        ws.rank(1).phases.record(Phase::Checkpoint, 0);
+        let rows = ws.phases_total();
+        assert_eq!(rows.len(), PHASES);
+        assert_eq!(rows[Phase::Compute as usize][9], 1);
+        assert_eq!(rows[Phase::Compute as usize][10], 2);
+        assert_eq!(rows[Phase::Checkpoint as usize][0], 1);
+        assert_eq!(rows[Phase::PollMerge as usize], [0u64; PHASE_BUCKETS]);
+        // merge_from and add_row agree with record (the codec path)
+        let h = PhaseHist::default();
+        h.merge_from(&ws.rank(0).phases);
+        h.add_row(Phase::Compute as usize, &ws.rank(1).phases.row(Phase::Compute as usize));
+        assert_eq!(h.row(Phase::Compute as usize)[10], 2);
+    }
+
+    #[test]
+    fn flight_ring_keeps_ordered_tail() {
+        let ring = FlightRing::default();
+        ring.record(FlightKind::LinkDown, 7, 2, 0);
+        ring.record(FlightKind::Reconnect, FLIGHT_NONE, 2, 0);
+        let evs = ring.snapshot();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].kind, FlightKind::LinkDown);
+        assert_eq!(evs[0].iter, 7);
+        assert_eq!(evs[1].kind, FlightKind::Reconnect);
+        // stamps are monotone within a ring
+        assert!(evs[0].t_ns <= evs[1].t_ns);
+        // the ring is bounded: old events fall off, the tail survives
+        for i in 0..(FLIGHT_CAP as u64 + 10) {
+            ring.record(FlightKind::Suspected, i, FLIGHT_NONE, 0);
+        }
+        let evs = ring.snapshot();
+        assert_eq!(evs.len(), FLIGHT_CAP);
+        assert_eq!(evs.last().unwrap().iter, FLIGHT_CAP as u64 + 9);
+        // kind indices roundtrip through the codec mapping
+        for k in FlightKind::ALL {
+            assert_eq!(FlightKind::from_index(k as u64), Some(k));
+        }
+        assert_eq!(FlightKind::from_index(u64::MAX), None);
     }
 }

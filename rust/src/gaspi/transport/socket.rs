@@ -76,7 +76,7 @@ use crate::ckpt::fnv1a;
 use crate::config::NetFaultEvent;
 use crate::config::NetFaultKind;
 use crate::gaspi::segment::{Segment, WIRE_MAGIC, WIRE_VERSION};
-use crate::gaspi::stats::WorldStats;
+use crate::gaspi::stats::{FlightKind, WorldStats, FLIGHT_NONE};
 use crate::util::rng::Xoshiro256pp;
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::VecDeque;
@@ -735,6 +735,7 @@ fn deliver(
         // then rejoin through the full reconnect path
         log_state(ctx, LinkState::Down, "injected netdown");
         me.link_down.add(1);
+        me.flight.record(FlightKind::LinkDown, frame.iter, ctx.link.to as u64, outage_ms);
         me.frames_failed.add(1); // the triggering frame is lost
         drop(s);
         sleep_interruptible(Duration::from_millis(outage_ms), &ctx.shutdown);
@@ -810,6 +811,7 @@ fn recover(
     }
     log_state(ctx, LinkState::Down, "immediate reconnect failed");
     me.link_down.add(1);
+    me.flight.record(FlightKind::LinkDown, FLIGHT_NONE, ctx.link.to as u64, 0);
     if resend.is_some() {
         me.frames_failed.add(1); // no retry could recover this frame
     }
@@ -832,6 +834,8 @@ fn reconnect_with_backoff(ctx: &SenderCtx, rng: &mut Xoshiro256pp) -> Option<Tcp
             Ok(mut s) => {
                 let me = ctx.stats.rank(ctx.link.from);
                 me.reconnects.add(1);
+                me.flight
+                    .record(FlightKind::Reconnect, FLIGHT_NONE, ctx.link.to as u64, attempt as u64);
                 // rebirth: the lease machinery must see a new
                 // incarnation, not a silent gap in the old one
                 ctx.seg_from.begin_incarnation();

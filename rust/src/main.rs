@@ -22,9 +22,13 @@ fn main() {
 }
 
 fn run(args: &Args) -> Result<()> {
+    if args.command != "monitor" {
+        args.expect_no_positionals()?;
+    }
     match args.command.as_str() {
         "train" => cmd_train(args),
         "restore" => cmd_restore(args),
+        "monitor" => cmd_monitor(args),
         "worker" => asgd::coordinator::procs::run_child(args),
         "fig" => cmd_fig(args),
         "datagen" => cmd_datagen(args),
@@ -34,6 +38,26 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
         other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}
+
+/// `asgd monitor DIR [--watch S]`: scrape a run directory's telemetry
+/// regions (live) or result files (finished) and print the aggregate.
+fn cmd_monitor(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(
+        args.positional(0)
+            .or_else(|| args.get("dir"))
+            .ok_or_else(|| anyhow::anyhow!("monitor needs a run directory: asgd monitor DIR"))?,
+    );
+    let watch = args.get_u64("watch")?;
+    loop {
+        let scrape = asgd::metrics::serve::monitor_scrape(&dir)?;
+        println!("# {} (source: {})", dir.display(), scrape.source);
+        println!("{}", scrape.report.to_string());
+        match watch {
+            Some(s) => std::thread::sleep(std::time::Duration::from_secs(s.max(1))),
+            None => return Ok(()),
+        }
     }
 }
 
@@ -61,57 +85,15 @@ fn print_report(args: &Args, report: &asgd::metrics::RunReport) -> Result<()> {
     if report.final_error.is_finite() {
         println!("ground-truth err  {:.6e}", report.final_error);
     }
-    println!(
-        "messages          sent {}  received {}  good {}  torn {}  overwritten {}",
-        report.comm.sent, report.comm.received, report.comm.good, report.comm.torn, report.comm.overwritten
-    );
-    if report.comm.chunk_sent > 0 {
-        println!(
-            "blocks            sent {}  fresh {}  torn {}  lost {}  ({} B/put)",
-            report.comm.chunk_sent,
-            report.comm.chunk_received,
-            report.comm.chunk_torn,
-            report.comm.chunk_lost,
-            report.comm.bytes_sent / report.comm.sent.max(1)
-        );
-    }
-    if report.comm.suspected > 0 || report.comm.restores > 0 {
-        println!(
-            "liveness          suspected {}  false {}  recovered {}  masked blocks {}  restores {}",
-            report.comm.suspected,
-            report.comm.false_suspicion,
-            report.comm.recovered,
-            report.comm.dead_masked,
-            report.comm.restores
-        );
-    }
-    let net = &report.comm;
-    if net.frames_failed + net.frames_retried + net.frames_dropped_injected + net.link_down > 0 {
-        println!(
-            "network           failed {}  retried {}  injected {}  link-down {}  reconnects {}",
-            net.frames_failed,
-            net.frames_retried,
-            net.frames_dropped_injected,
-            net.link_down,
-            net.reconnects
-        );
-    }
-    let integrity = net.frames_corrupt
-        + net.non_finite_rejected
-        + net.norm_rejected
-        + net.quarantined
-        + net.rollbacks;
-    if integrity > 0 {
-        println!(
-            "integrity         corrupt frames {}  non-finite {}  norm {}  quarantined {}  \
-             requalified {}  rollbacks {}",
-            net.frames_corrupt,
-            net.non_finite_rejected,
-            net.norm_rejected,
-            net.quarantined,
-            net.requalified,
-            net.rollbacks
-        );
+    // every counter comes off the one for_each_stat! table via
+    // fields(), printed in export-key spelling — a new field can no
+    // longer be silently absent from the CLI (only zero counters are
+    // elided, and the header says how many)
+    let fields = report.comm.fields();
+    let nonzero: Vec<_> = fields.iter().filter(|(_, v)| *v > 0).collect();
+    println!("counters          {} of {} non-zero", nonzero.len(), fields.len());
+    for (name, value) in nonzero {
+        println!("  {name:<24} {value}");
     }
     // per-peer staleness histogram: log2 lag buckets (0, 1, 2-3, 4-7, ...
     // 64+) over every admitted Fresh block delivery from that sender
@@ -125,13 +107,64 @@ fn print_report(args: &Args, report: &asgd::metrics::RunReport) -> Result<()> {
             println!("  from rank {peer:<4}  {}", cells.join(" | "));
         }
     }
+    // phase-latency histograms: log2 ns buckets recorded around the
+    // worker loop's poll/merge, compute, send, and checkpoint phases
+    if report.phases.iter().any(|row| row.iter().any(|&c| c > 0)) {
+        println!("phase latency     count | ~p50 | ~p99  (log2 ns bucket upper bounds)");
+        for (p, row) in report.phases.iter().enumerate() {
+            let count: u64 = row.iter().sum();
+            if count == 0 {
+                continue;
+            }
+            println!(
+                "  {:<14}  {count} | {} | {}",
+                asgd::gaspi::stats::PHASE_NAMES[p],
+                format_ns(bucket_quantile_ns(row, 0.50)),
+                format_ns(bucket_quantile_ns(row, 0.99)),
+            );
+        }
+    }
+    let flight_total: usize = report.flight.iter().map(|v| v.len()).sum();
+    if flight_total > 0 {
+        println!("flight recorder   {flight_total} events (per-rank flight-NNN.jsonl with --out)");
+    }
     if let Some(dir) = args.get("out") {
         let dir = PathBuf::from(dir);
         asgd::metrics::export::write_trace(report, dir.join("trace.csv"))?;
         asgd::metrics::export::write_report(report, dir.join("report.json"))?;
+        for (rank, events) in report.flight.iter().enumerate() {
+            asgd::metrics::export::write_flight_jsonl(&dir, rank, events)?;
+        }
         println!("wrote {}/trace.csv and report.json", dir.display());
     }
     Ok(())
+}
+
+/// Upper bound (ns) of the log2 bucket holding quantile `q` of `row`.
+fn bucket_quantile_ns(row: &[u64], q: f64) -> u64 {
+    let total: u64 = row.iter().sum();
+    let target = ((total as f64 * q).ceil() as u64).max(1);
+    let mut cum = 0u64;
+    for (b, &c) in row.iter().enumerate() {
+        cum += c;
+        if cum >= target {
+            return 1u64 << (b + 1);
+        }
+    }
+    u64::MAX
+}
+
+/// Human-scale duration from a nanosecond bucket bound.
+fn format_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.1}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.1}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
 }
 
 fn cmd_fig(args: &Args) -> Result<()> {

@@ -2,6 +2,7 @@
 //! `results/` (provenance for EXPERIMENTS.md).
 
 use super::RunReport;
+use crate::gaspi::stats::{FlightEvent, FLIGHT_NONE};
 use crate::util::csv::CsvTable;
 use crate::util::json::{Json, JsonBuilder};
 use anyhow::Result;
@@ -17,56 +18,92 @@ pub fn write_trace<P: AsRef<Path>>(report: &RunReport, path: P) -> Result<()> {
     Ok(())
 }
 
-/// Run summary as a JSON value.
-pub fn report_json(report: &RunReport) -> Json {
+/// A count array (histogram row) as a JSON array.
+fn row_json<const N: usize>(row: &[u64; N]) -> Json {
+    Json::Arr(row.iter().map(|&c| Json::Num(c as f64)).collect())
+}
+
+/// A count sentinel ([`FLIGHT_NONE`]) as JSON null, anything else as a
+/// number.
+fn opt_num(v: u64) -> Json {
+    if v == FLIGHT_NONE {
+        Json::Null
+    } else {
+        Json::Num(v as f64)
+    }
+}
+
+/// One flight-recorder event as a JSON object (shared by the report's
+/// `flight` array and the `flight-NNN.jsonl` crash dumps, so the two
+/// spellings can never drift).
+fn flight_event_json(rank: usize, ev: &FlightEvent) -> Json {
     JsonBuilder::new()
+        .num("rank", rank as f64)
+        .num("t_ns", ev.t_ns as f64)
+        .val("iter", opt_num(ev.iter))
+        .str("kind", ev.kind.name())
+        .val("peer", opt_num(ev.peer))
+        .num("arg", ev.arg as f64)
+        .build()
+}
+
+/// One rank's flight ring as JSONL — one event object per line, oldest
+/// first (each rank's `t_ns` is monotone; epochs differ across ranks).
+pub fn flight_jsonl(rank: usize, events: &[FlightEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&flight_event_json(rank, ev).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Dump rank `rank`'s flight ring as `flight-NNN.jsonl` in `dir` — the
+/// black box a post-mortem reads after a crash, rollback, or quiesce.
+/// An empty ring writes nothing (no empty file to mislead a reader).
+pub fn write_flight_jsonl(dir: &Path, rank: usize, events: &[FlightEvent]) -> Result<()> {
+    if events.is_empty() {
+        return Ok(());
+    }
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(format!("flight-{rank:03}.jsonl")), flight_jsonl(rank, events))?;
+    Ok(())
+}
+
+/// Run summary as a JSON value.  Every counter comes off
+/// `StatsSnapshot::fields` — the `for_each_stat!` table — so the
+/// export can never drift from the struct again.
+pub fn report_json(report: &RunReport) -> Json {
+    let mut b = JsonBuilder::new()
         .str("method", &report.method)
         .num("workers", report.workers as f64)
         .num("final_objective", report.final_objective)
         .num("final_error", report.final_error)
         .num("wallclock_s", report.wallclock_s)
         .num("total_iters", report.total_iters as f64)
-        .num("global_samples", report.global_samples as f64)
-        .num("msgs_sent", report.comm.sent as f64)
-        .num("msgs_received", report.comm.received as f64)
-        .num("msgs_good", report.comm.good as f64)
-        .num("msgs_torn", report.comm.torn as f64)
-        .num("msgs_overwritten", report.comm.overwritten as f64)
-        .num("bytes_sent", report.comm.bytes_sent as f64)
-        .num("blocks_sent", report.comm.chunk_sent as f64)
-        .num("blocks_received", report.comm.chunk_received as f64)
-        .num("blocks_torn", report.comm.chunk_torn as f64)
-        .num("blocks_lost", report.comm.chunk_lost as f64)
-        .num("blocks_skipped", report.comm.chunk_skipped as f64)
-        .num("relayouts", report.comm.relayouts as f64)
-        .num("suspected", report.comm.suspected as f64)
-        .num("false_suspicion", report.comm.false_suspicion as f64)
-        .num("recovered", report.comm.recovered as f64)
-        .num("dead_masked", report.comm.dead_masked as f64)
-        .num("restores", report.comm.restores as f64)
-        .num("frames_failed", report.comm.frames_failed as f64)
-        .num("frames_retried", report.comm.frames_retried as f64)
-        .num("frames_dropped_injected", report.comm.frames_dropped_injected as f64)
-        .num("link_down", report.comm.link_down as f64)
-        .num("reconnects", report.comm.reconnects as f64)
-        .num("frames_corrupt", report.comm.frames_corrupt as f64)
-        .num("non_finite_rejected", report.comm.non_finite_rejected as f64)
-        .num("norm_rejected", report.comm.norm_rejected as f64)
-        .num("quarantined", report.comm.quarantined as f64)
-        .num("requalified", report.comm.requalified as f64)
-        .num("rollbacks", report.comm.rollbacks as f64)
-        .num("corrupt_results", report.comm.corrupt_results as f64)
-        .val(
-            "staleness",
-            Json::Arr(
-                report
-                    .staleness
-                    .iter()
-                    .map(|row| Json::Arr(row.iter().map(|&c| Json::Num(c as f64)).collect()))
-                    .collect(),
-            ),
-        )
-        .build()
+        .num("global_samples", report.global_samples as f64);
+    for (name, value) in report.comm.fields() {
+        b = b.num(name, value as f64);
+    }
+    b.val(
+        "staleness",
+        Json::Arr(report.staleness.iter().map(row_json).collect()),
+    )
+    .val("phases", Json::Arr(report.phases.iter().map(row_json).collect()))
+    .val(
+        "flight",
+        Json::Arr(
+            report
+                .flight
+                .iter()
+                .enumerate()
+                .flat_map(|(rank, events)| {
+                    events.iter().map(move |ev| flight_event_json(rank, ev))
+                })
+                .collect(),
+        ),
+    )
+    .build()
 }
 
 /// Write the run summary as JSON.
@@ -81,6 +118,7 @@ pub fn write_report<P: AsRef<Path>>(report: &RunReport, path: P) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gaspi::stats::{FlightEvent, FlightKind, PHASES, PHASE_BUCKETS};
     use crate::metrics::TracePoint;
 
     #[test]
@@ -100,6 +138,21 @@ mod tests {
                 truth_error: 0.3,
             }],
             staleness: vec![[1, 0, 2, 0, 0, 0, 0, 0], [0, 3, 0, 0, 0, 0, 0, 0]],
+            phases: {
+                let mut rows = vec![[0u64; PHASE_BUCKETS]; PHASES];
+                rows[1][10] = 5;
+                rows
+            },
+            flight: vec![
+                vec![],
+                vec![FlightEvent {
+                    t_ns: 123,
+                    iter: FLIGHT_NONE,
+                    kind: FlightKind::Reconnect,
+                    peer: 0,
+                    arg: 0,
+                }],
+            ],
             ..Default::default()
         };
         let dir = std::env::temp_dir().join(format!("asgd_export_{}", std::process::id()));
@@ -119,6 +172,59 @@ mod tests {
         assert_eq!(row0[0].as_f64(), Some(1.0));
         assert_eq!(row0[2].as_f64(), Some(2.0));
         assert_eq!(hist[1].as_arr().unwrap()[1].as_f64(), Some(3.0));
+        // the de-drift identity: every table field is an export key
+        // (PR 9's regression — gossip_seeded and stale_polls silently
+        // missing — can no longer happen)
+        for (name, _) in report.comm.fields() {
+            assert!(j.get(name).is_some(), "export dropped counter {name}");
+        }
+        let phases = j.get("phases").unwrap().as_arr().unwrap();
+        assert_eq!(phases.len(), PHASES);
+        let row1 = phases[1].as_arr().unwrap();
+        assert_eq!(row1.len(), PHASE_BUCKETS);
+        assert_eq!(row1[10].as_f64(), Some(5.0));
+        let flight = j.get("flight").unwrap().as_arr().unwrap();
+        assert_eq!(flight.len(), 1);
+        assert_eq!(flight[0].get("rank").unwrap().as_f64(), Some(1.0));
+        assert_eq!(flight[0].get("kind").unwrap().as_str(), Some("reconnect"));
+        assert_eq!(flight[0].get("iter"), Some(&Json::Null), "unknown iter is null");
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn flight_jsonl_is_one_event_per_line() {
+        let events = vec![
+            FlightEvent {
+                t_ns: 10,
+                iter: 3,
+                kind: FlightKind::Rollback,
+                peer: FLIGHT_NONE,
+                arg: 2,
+            },
+            FlightEvent {
+                t_ns: 20,
+                iter: FLIGHT_NONE,
+                kind: FlightKind::LinkDown,
+                peer: 1,
+                arg: 40,
+            },
+        ];
+        let text = flight_jsonl(5, &events);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("rank").unwrap().as_f64(), Some(5.0));
+        assert_eq!(first.get("kind").unwrap().as_str(), Some("rollback"));
+        assert_eq!(first.get("peer"), Some(&Json::Null));
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("iter"), Some(&Json::Null));
+        assert_eq!(second.get("arg").unwrap().as_f64(), Some(40.0));
+        let dir = std::env::temp_dir().join(format!("asgd_flight_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_flight_jsonl(&dir, 0, &[]).unwrap();
+        assert!(!dir.join("flight-000.jsonl").exists(), "empty ring writes no file");
+        write_flight_jsonl(&dir, 0, &events).unwrap();
+        assert!(dir.join("flight-000.jsonl").exists());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -3,8 +3,10 @@
 
 pub mod error;
 pub mod export;
+pub mod serve;
+pub mod telemetry;
 
-use crate::gaspi::stats::{StatsSnapshot, STALE_BUCKETS};
+use crate::gaspi::stats::{FlightEvent, StatsSnapshot, PHASE_BUCKETS, STALE_BUCKETS};
 
 /// One point of a convergence trace (figs. 8/13/14/15).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -42,6 +44,17 @@ pub struct RunReport {
     /// ([`crate::gaspi::stats::stale_bucket`]), summed over receivers.
     /// Empty when the run never communicated.
     pub staleness: Vec<[u64; STALE_BUCKETS]>,
+    /// Per-phase worker-loop latency histogram: row `p` counts loop
+    /// passes whose phase-`p` wall time fell in log2 ns bucket `b`
+    /// ([`crate::gaspi::stats::phase_bucket`]), summed over ranks;
+    /// rows follow [`crate::gaspi::stats::PHASE_NAMES`].  Empty when
+    /// the run had no instrumented worker loop (the batch method).
+    pub phases: Vec<[u64; PHASE_BUCKETS]>,
+    /// Flight-recorder contents, indexed by rank: each rank's rare
+    /// events (suspicions, link transitions, rollbacks, ...) in record
+    /// order with per-rank-monotone stamps.  Empty when nothing rare
+    /// happened.
+    pub flight: Vec<Vec<FlightEvent>>,
     /// Final state vector (the returned model).
     pub state: Vec<f32>,
 }

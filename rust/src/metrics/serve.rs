@@ -1,0 +1,451 @@
+//! The live scrape endpoint: a std-only HTTP/1.1 listener (vendoring
+//! constraint — no web framework) serving the telemetry plane while a
+//! run trains.
+//!
+//! * `GET /metrics` — Prometheus text exposition: every counter of the
+//!   `for_each_stat!` table as `asgd_<name>{rank="R"}`, the staleness
+//!   histogram as `asgd_staleness_deliveries{rank,peer,bucket}`, and
+//!   the phase-latency histograms as cumulative
+//!   `asgd_phase_latency_ns_bucket{rank,phase,le}` series.
+//! * `GET /report.json` — a live JSON aggregate across all rank
+//!   regions (totals under the same keys as the final `report.json`,
+//!   plus per-rank detail).
+//!
+//! The listener is a single background thread: accept, answer, close.
+//! Scrapes are read-only against the wait-free telemetry regions, so
+//! a slow (or hostile) scraper can never back-pressure training.
+
+use crate::coordinator::procs::{read_result, result_path};
+use crate::gaspi::stats::{StatsSnapshot, PHASES, PHASE_BUCKETS, PHASE_NAMES, STALE_BUCKETS};
+use crate::metrics::telemetry::{tel_ranks, TelSnapshot, TelemetryRegion};
+use crate::util::json::{Json, JsonBuilder};
+use anyhow::{ensure, Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Where a scrape reads its per-rank telemetry.
+pub enum TelSource {
+    /// Heap regions shared with in-process workers (`inproc`/`socket`).
+    Live(Vec<Arc<TelemetryRegion>>),
+    /// A shmem run directory: regions are discovered and re-attached on
+    /// every scrape, so the server tracks workers being born, killed
+    /// and restored without coordination.
+    Dir(PathBuf),
+}
+
+impl TelSource {
+    /// One consistent snapshot per scrapeable rank (ranks whose region
+    /// is missing or mid-publish past every retry are skipped, never
+    /// served torn).
+    pub fn snapshots(&self) -> Vec<TelSnapshot> {
+        match self {
+            TelSource::Live(regions) => regions.iter().filter_map(|r| r.read()).collect(),
+            TelSource::Dir(dir) => tel_ranks(dir)
+                .into_iter()
+                .filter_map(|r| TelemetryRegion::attach(dir, r).ok())
+                .filter_map(|t| t.read())
+                .collect(),
+        }
+    }
+}
+
+/// Render snapshots in the Prometheus text exposition format.
+pub fn prometheus_text(snaps: &[TelSnapshot]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(out, "# TYPE asgd_telemetry_version gauge");
+    let _ = writeln!(out, "# TYPE asgd_iter gauge");
+    let _ = writeln!(out, "# TYPE asgd_objective gauge");
+    let _ = writeln!(out, "# TYPE asgd_samples gauge");
+    for s in snaps {
+        let _ = writeln!(out, "asgd_telemetry_version{{rank=\"{}\"}} {}", s.rank, s.version);
+        let _ = writeln!(out, "asgd_iter{{rank=\"{}\"}} {}", s.rank, s.iter);
+        let _ = writeln!(out, "asgd_objective{{rank=\"{}\"}} {}", s.rank, s.objective);
+        let _ = writeln!(out, "asgd_samples{{rank=\"{}\"}} {}", s.rank, s.samples);
+    }
+    if let Some(first) = snaps.first() {
+        for (f, (name, _)) in first.stats.fields().iter().enumerate() {
+            let _ = writeln!(out, "# TYPE asgd_{name} counter");
+            for s in snaps {
+                let (_, value) = s.stats.fields()[f];
+                let _ = writeln!(out, "asgd_{name}{{rank=\"{}\"}} {value}", s.rank);
+            }
+        }
+    }
+    let _ = writeln!(out, "# TYPE asgd_staleness_deliveries counter");
+    for s in snaps {
+        for (peer, row) in s.staleness.iter().enumerate() {
+            for (bucket, &c) in row.iter().enumerate() {
+                if c > 0 {
+                    let _ = writeln!(
+                        out,
+                        "asgd_staleness_deliveries{{rank=\"{}\",peer=\"{peer}\",bucket=\"{bucket}\"}} {c}",
+                        s.rank
+                    );
+                }
+            }
+        }
+    }
+    let _ = writeln!(out, "# TYPE asgd_phase_latency_ns histogram");
+    for s in snaps {
+        for (p, row) in s.phases.iter().enumerate() {
+            let phase = PHASE_NAMES[p];
+            let mut cum = 0u64;
+            for (b, &c) in row.iter().enumerate() {
+                cum += c;
+                if c > 0 {
+                    // bucket b holds durations < 2^(b+1) ns
+                    let _ = writeln!(
+                        out,
+                        "asgd_phase_latency_ns_bucket{{rank=\"{}\",phase=\"{phase}\",le=\"{}\"}} {cum}",
+                        s.rank,
+                        1u64 << (b + 1)
+                    );
+                }
+            }
+            let _ = writeln!(
+                out,
+                "asgd_phase_latency_ns_bucket{{rank=\"{}\",phase=\"{phase}\",le=\"+Inf\"}} {cum}",
+                s.rank
+            );
+            let _ = writeln!(
+                out,
+                "asgd_phase_latency_ns_count{{rank=\"{}\",phase=\"{phase}\"}} {cum}",
+                s.rank
+            );
+        }
+    }
+    out
+}
+
+/// A count array (histogram row) as a JSON array.
+fn row_json<const N: usize>(row: &[u64; N]) -> Json {
+    Json::Arr(row.iter().map(|&c| Json::Num(c as f64)).collect())
+}
+
+/// Render snapshots as a live JSON aggregate: totals under the same
+/// counter keys as the final `report.json` (summed across ranks, so a
+/// quiesced run's scrape matches its `RunReport`), plus per-rank rows.
+pub fn live_report_json(snaps: &[TelSnapshot]) -> Json {
+    let mut total = StatsSnapshot::default();
+    let peers = snaps.iter().map(|s| s.staleness.len()).max().unwrap_or(0);
+    let mut staleness = vec![[0u64; STALE_BUCKETS]; peers];
+    let mut phases = vec![[0u64; PHASE_BUCKETS]; PHASES];
+    for s in snaps {
+        total.add(&s.stats);
+        for (p, row) in s.staleness.iter().enumerate() {
+            for (acc, v) in staleness[p].iter_mut().zip(row) {
+                *acc += v;
+            }
+        }
+        for (p, row) in s.phases.iter().enumerate() {
+            for (acc, v) in phases[p].iter_mut().zip(row) {
+                *acc += v;
+            }
+        }
+    }
+    let mut b = JsonBuilder::new().num("ranks_scraped", snaps.len() as f64);
+    for (name, value) in total.fields() {
+        b = b.num(name, value as f64);
+    }
+    b.val(
+        "staleness",
+        Json::Arr(staleness.iter().map(row_json).collect()),
+    )
+    .val("phases", Json::Arr(phases.iter().map(row_json).collect()))
+    .val(
+        "per_rank",
+        Json::Arr(
+            snaps
+                .iter()
+                .map(|s| {
+                    let mut b = JsonBuilder::new()
+                        .num("rank", s.rank as f64)
+                        .num("version", s.version as f64)
+                        .num("iter", s.iter as f64)
+                        .num("objective", s.objective)
+                        .num("samples", s.samples as f64);
+                    for (name, value) in s.stats.fields() {
+                        b = b.num(name, value as f64);
+                    }
+                    b.build()
+                })
+                .collect(),
+        ),
+    )
+    .build()
+}
+
+/// One `asgd monitor` scrape of a run directory.
+pub struct MonitorScrape {
+    /// Where the numbers came from: `"telemetry regions"` while the run
+    /// is live, `"result files"` once it has finished.
+    pub source: &'static str,
+    pub report: Json,
+}
+
+/// Scrape `dir` for `asgd monitor`: prefer the live `tel-NNN.asgdtel`
+/// regions, and fall back to the checksummed `result-NNN.bin` files a
+/// finished run leaves behind — a run stays inspectable after quiesce.
+pub fn monitor_scrape(dir: &Path) -> Result<MonitorScrape> {
+    let snaps = TelSource::Dir(dir.to_path_buf()).snapshots();
+    if !snaps.is_empty() {
+        return Ok(MonitorScrape {
+            source: "telemetry regions",
+            report: live_report_json(&snaps),
+        });
+    }
+    let mut total = StatsSnapshot::default();
+    let mut staleness: Vec<[u64; STALE_BUCKETS]> = Vec::new();
+    let mut phases = vec![[0u64; PHASE_BUCKETS]; PHASES];
+    let mut flight_events = 0usize;
+    let mut iters = 0u64;
+    let mut ranks = 0usize;
+    while result_path(dir, ranks).exists() {
+        let res = read_result(dir, ranks)?;
+        total.add(&res.stats);
+        if staleness.len() < res.staleness.len() {
+            staleness.resize(res.staleness.len(), [0u64; STALE_BUCKETS]);
+        }
+        for (acc, row) in staleness.iter_mut().zip(&res.staleness) {
+            for (a, &c) in acc.iter_mut().zip(row) {
+                *a += c;
+            }
+        }
+        for (acc, row) in phases.iter_mut().zip(&res.phases) {
+            for (a, &c) in acc.iter_mut().zip(row) {
+                *a += c;
+            }
+        }
+        flight_events += res.flight.len();
+        iters += res.iters;
+        ranks += 1;
+    }
+    ensure!(
+        ranks > 0,
+        "nothing to monitor in {}: no tel-*.asgdtel regions and no result-*.bin files \
+         (is it a run directory?)",
+        dir.display()
+    );
+    let mut b = JsonBuilder::new()
+        .num("ranks_scraped", ranks as f64)
+        .num("total_iters", iters as f64)
+        .num("flight_events", flight_events as f64);
+    for (name, value) in total.fields() {
+        b = b.num(name, value as f64);
+    }
+    let report = b
+        .val("staleness", Json::Arr(staleness.iter().map(row_json).collect()))
+        .val("phases", Json::Arr(phases.iter().map(row_json).collect()))
+        .build();
+    Ok(MonitorScrape { source: "result files", report })
+}
+
+/// The background HTTP listener.  Dropping it stops the thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`; port 0 picks a free one) and
+    /// start serving `source`.  Refuses loudly if the bind fails — a
+    /// requested-but-dead endpoint must never be silent.
+    pub fn start(addr: &str, source: TelSource) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics endpoint {addr}"))?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("asgd-metrics".into())
+            .spawn(move || {
+                while !stop_flag.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            // one scrape at a time: answer and close
+                            let _ = serve_conn(stream, &source);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(25)),
+                    }
+                }
+            })
+            .expect("spawning the metrics listener thread");
+        Ok(Self {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (useful when the caller asked for port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Answer one HTTP/1.1 request on `stream` and close it.
+fn serve_conn(mut stream: TcpStream, source: &TelSource) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    stream.set_nonblocking(false)?;
+    // read the request head (we never need a body); cap at 8 KiB so a
+    // garbage peer cannot balloon the buffer
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&buf[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() > 8192 {
+            break;
+        }
+    }
+    let request = String::from_utf8_lossy(&head);
+    let path = request
+        .lines()
+        .next()
+        .and_then(|line| line.split_whitespace().nth(1))
+        .unwrap_or("");
+    let (status, content_type, body) = match path {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            prometheus_text(&source.snapshots()),
+        ),
+        "/report.json" | "/report" => (
+            "200 OK",
+            "application/json",
+            live_report_json(&source.snapshots()).to_string(),
+        ),
+        _ => (
+            "404 Not Found",
+            "text/plain",
+            "asgd metrics: try /metrics or /report.json\n".to_string(),
+        ),
+    };
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gaspi::stats::{CommStats, Phase};
+
+    fn region_with_traffic(rank: usize) -> Arc<TelemetryRegion> {
+        let tel = TelemetryRegion::heap(rank, 2);
+        let stats = CommStats::default();
+        stats.sent.add(10 + rank as u64);
+        stats.chunk_sent.add(4);
+        stats.staleness.record(1 - rank, 3);
+        stats.phases.record(Phase::Compute, 900);
+        tel.publish(&stats, 50, 2.5, 640);
+        tel
+    }
+
+    #[test]
+    fn prometheus_text_carries_counters_and_histograms() {
+        let snaps = TelSource::Live(vec![region_with_traffic(0), region_with_traffic(1)])
+            .snapshots();
+        assert_eq!(snaps.len(), 2);
+        let text = prometheus_text(&snaps);
+        assert!(text.contains("asgd_blocks_sent{rank=\"0\"} 4"));
+        assert!(text.contains("asgd_msgs_sent{rank=\"1\"} 11"));
+        assert!(text.contains("asgd_iter{rank=\"0\"} 50"));
+        // lag 3 -> bucket 2 (2-3)
+        assert!(text.contains("asgd_staleness_deliveries{rank=\"0\",peer=\"1\",bucket=\"2\"} 1"));
+        // 900 ns -> bucket 9, upper bound 2^10
+        assert!(text
+            .contains("asgd_phase_latency_ns_bucket{rank=\"0\",phase=\"compute\",le=\"1024\"} 1"));
+        assert!(text
+            .contains("asgd_phase_latency_ns_bucket{rank=\"0\",phase=\"compute\",le=\"+Inf\"} 1"));
+        assert!(text.contains("asgd_phase_latency_ns_count{rank=\"1\",phase=\"compute\"} 1"));
+    }
+
+    #[test]
+    fn live_report_aggregates_across_ranks() {
+        let snaps = TelSource::Live(vec![region_with_traffic(0), region_with_traffic(1)])
+            .snapshots();
+        let j = live_report_json(&snaps);
+        assert_eq!(j.get("ranks_scraped").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("msgs_sent").unwrap().as_f64(), Some(21.0));
+        assert_eq!(j.get("blocks_sent").unwrap().as_f64(), Some(8.0));
+        let per_rank = j.get("per_rank").unwrap().as_arr().unwrap();
+        assert_eq!(per_rank.len(), 2);
+        assert_eq!(per_rank[1].get("msgs_sent").unwrap().as_f64(), Some(11.0));
+        let phases = j.get("phases").unwrap().as_arr().unwrap();
+        assert_eq!(phases[Phase::Compute as usize].as_arr().unwrap()[9].as_f64(), Some(2.0));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn monitor_prefers_live_regions() {
+        let dir = std::env::temp_dir().join(format!("asgd-mon-live-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // an empty directory is a loud error, not a silent zero report
+        assert!(monitor_scrape(&dir).is_err());
+        let tel = TelemetryRegion::create_mapped(&dir, 0, 2).unwrap();
+        let stats = CommStats::default();
+        stats.sent.add(3);
+        tel.publish(&stats, 5, 1.0, 10);
+        let scrape = monitor_scrape(&dir).unwrap();
+        assert_eq!(scrape.source, "telemetry regions");
+        assert_eq!(scrape.report.get("msgs_sent").unwrap().as_f64(), Some(3.0));
+        assert_eq!(scrape.report.get("ranks_scraped").unwrap().as_f64(), Some(1.0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn http_endpoint_serves_metrics_and_json() {
+        let server = MetricsServer::start(
+            "127.0.0.1:0",
+            TelSource::Live(vec![region_with_traffic(0)]),
+        )
+        .unwrap();
+        let get = |path: &str| -> String {
+            let mut s = TcpStream::connect(server.addr()).unwrap();
+            write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        };
+        let metrics = get("/metrics");
+        assert!(metrics.starts_with("HTTP/1.1 200 OK"));
+        assert!(metrics.contains("asgd_msgs_sent{rank=\"0\"} 10"));
+        let report = get("/report.json");
+        assert!(report.starts_with("HTTP/1.1 200 OK"));
+        let body = report.split("\r\n\r\n").nth(1).unwrap();
+        let j = Json::parse(body).unwrap();
+        assert_eq!(j.get("msgs_sent").unwrap().as_f64(), Some(10.0));
+        let miss = get("/nope");
+        assert!(miss.starts_with("HTTP/1.1 404"));
+        drop(server); // must join the listener thread without hanging
+    }
+}

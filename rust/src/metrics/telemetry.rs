@@ -1,0 +1,422 @@
+//! The live telemetry plane: one wait-free, seqlock-versioned region
+//! per rank carrying its full counter snapshot, staleness histogram,
+//! phase-latency histogram and current iter/objective — published by
+//! the owning worker every `telemetry_interval` send events, read by
+//! the scrape endpoint ([`crate::metrics::serve`]) and `asgd monitor`
+//! *while the run is live*.
+//!
+//! Hosting follows the transport: on `inproc`/`socket` the regions live
+//! on the process heap; on `shmem` each worker process creates a
+//! `tel-NNN.asgdtel` mapping in the run directory (via
+//! [`crate::util::shm`]), so any other process — the supervisor's HTTP
+//! listener, a read-only `asgd monitor` — can attach and scrape without
+//! the worker's cooperation.  This closes the ROADMAP follow-up that
+//! per-process ledgers used to return only at child exit.
+//!
+//! The region is a *separately versioned companion plane* (own magic +
+//! version, like the ctl region and the result files): its layout can
+//! evolve without a segment `WIRE_VERSION` bump (`docs/WIRE.md` §8,
+//! `docs/OBSERVABILITY.md`).
+//!
+//! Word layout (all words `u64` little-endian, 8-byte aligned):
+//!
+//! | word | name        | contents                                    |
+//! |------|-------------|---------------------------------------------|
+//! | 0    | `T_MAGIC`   | `"ASGDTEL1"` (stored last on create)        |
+//! | 1    | `T_VERSION` | telemetry plane version ([`TEL_VERSION`])   |
+//! | 2    | `T_RANK`    | owning rank                                 |
+//! | 3    | `T_PEERS`   | staleness rows published (= world ranks)    |
+//! | 4    | `T_SEQ`     | seqlock: odd = publish in progress          |
+//! | 5    | `T_ITER`    | owner's iteration at last publish           |
+//! | 6    | `T_OBJ`     | `f64::to_bits` of the last local objective  |
+//! | 7    | `T_SAMPLES` | samples consumed by this rank               |
+//! | 8..  | payload     | stats words, staleness rows, phase rows     |
+//!
+//! The payload is `STAT_WORDS` counter words (in `for_each_stat!`
+//! order), then `peers * STALE_BUCKETS` staleness words (row-major by
+//! sending peer), then `PHASES * PHASE_BUCKETS` phase-latency words
+//! (row-major by phase).  `T_SEQ`..`T_SAMPLES` and the payload are
+//! guarded by the seqlock; a reader either gets a consistent snapshot
+//! or nothing — never a torn one.
+
+use crate::gaspi::stats::{
+    CommStats, StatsSnapshot, PHASES, PHASE_BUCKETS, STALE_BUCKETS, STAT_WORDS,
+};
+use crate::util::shm::{self, SharedMap};
+use anyhow::{ensure, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Identity word of a telemetry region file.
+pub const TEL_MAGIC: u64 = u64::from_le_bytes(*b"ASGDTEL1");
+
+/// Version of the telemetry plane layout (independent of the segment
+/// `WIRE_VERSION`; bump on any incompatible change to this file).
+pub const TEL_VERSION: u64 = 1;
+
+const T_MAGIC: usize = 0;
+const T_VERSION: usize = 1;
+const T_RANK: usize = 2;
+const T_PEERS: usize = 3;
+const T_SEQ: usize = 4;
+const T_ITER: usize = 5;
+const T_OBJ: usize = 6;
+const T_SAMPLES: usize = 7;
+/// Header words before the payload.
+pub const TEL_HEADER: usize = 8;
+
+/// Total words of a region publishing `peers` staleness rows.
+pub fn tel_words(peers: usize) -> usize {
+    TEL_HEADER + STAT_WORDS + peers * STALE_BUCKETS + PHASES * PHASE_BUCKETS
+}
+
+/// File name of rank `rank`'s telemetry region inside a run directory.
+pub fn tel_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("tel-{rank:03}.asgdtel"))
+}
+
+/// Ranks with a telemetry region file in `dir`, ascending.
+pub fn tel_ranks(dir: &Path) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut r = 0usize;
+    while tel_path(dir, r).exists() {
+        out.push(r);
+        r += 1;
+    }
+    out
+}
+
+/// How many times a reader retries a racing snapshot before giving up
+/// (a publish is a few hundred relaxed stores, so one retry normally
+/// suffices; a dead writer parked mid-publish can never wedge a scrape).
+const READ_RETRIES: usize = 64;
+
+enum Backing {
+    /// In-process hosting (`inproc`/`socket` transports).
+    Heap(Box<[AtomicU64]>),
+    /// Cross-process hosting (`shmem`): a `tel-NNN.asgdtel` mapping.
+    Map(SharedMap),
+}
+
+/// One rank's live telemetry region (single writer: the owning worker).
+pub struct TelemetryRegion {
+    backing: Backing,
+    rank: usize,
+    peers: usize,
+}
+
+/// One consistent read of a [`TelemetryRegion`].
+#[derive(Clone, Debug)]
+pub struct TelSnapshot {
+    pub rank: usize,
+    /// Seqlock version at the read (even; monotone across publishes).
+    pub version: u64,
+    pub iter: u64,
+    pub objective: f64,
+    pub samples: u64,
+    pub stats: StatsSnapshot,
+    /// Per-peer staleness rows, `peers` entries.
+    pub staleness: Vec<[u64; STALE_BUCKETS]>,
+    /// Per-phase latency rows, [`PHASES`] entries.
+    pub phases: Vec<[u64; PHASE_BUCKETS]>,
+}
+
+impl TelemetryRegion {
+    /// Host rank `rank`'s region on the heap (the `inproc`/`socket`
+    /// path, where scraper and workers share one process).
+    pub fn heap(rank: usize, peers: usize) -> Arc<Self> {
+        let words: Box<[AtomicU64]> =
+            (0..tel_words(peers)).map(|_| AtomicU64::new(0)).collect();
+        let tel = Self {
+            backing: Backing::Heap(words),
+            rank,
+            peers,
+        };
+        tel.init_header();
+        Arc::new(tel)
+    }
+
+    /// Create rank `rank`'s region file in `dir` and map it (the worker
+    /// side of a shmem run).  The file is left behind on exit so a late
+    /// scrape still sees the final publish; `asgd monitor` falls back to
+    /// result files once the run directory is gone.
+    pub fn create_mapped(dir: &Path, rank: usize, peers: usize) -> Result<Arc<Self>> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating telemetry directory {}", dir.display()))?;
+        let len = (tel_words(peers) * 8) as u64;
+        let f = shm::create_backing_file(&tel_path(dir, rank), len)?;
+        let map = SharedMap::map_file(&f, len as usize)?;
+        let tel = Self {
+            backing: Backing::Map(map),
+            rank,
+            peers,
+        };
+        tel.init_header();
+        Ok(Arc::new(tel))
+    }
+
+    /// Attach read-only to rank `rank`'s region in `dir` (the scrape /
+    /// `asgd monitor` side); refuses loudly on identity or shape
+    /// mismatch.  The peer count is taken from the header and checked
+    /// against the file size, so an attacher needs no prior knowledge
+    /// of the world shape.
+    pub fn attach(dir: &Path, rank: usize) -> Result<Arc<Self>> {
+        let path = tel_path(dir, rank);
+        let f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .with_context(|| format!("opening telemetry region {}", path.display()))?;
+        let len = f.metadata()?.len() as usize;
+        ensure!(
+            len >= TEL_HEADER * 8 && len % 8 == 0,
+            "telemetry region {} is {len} bytes — not even a header (stale run directory?)",
+            path.display()
+        );
+        let map = SharedMap::map_file(&f, len)?;
+        let probe = Self {
+            backing: Backing::Map(map),
+            rank,
+            peers: 0,
+        };
+        ensure!(
+            probe.word(T_MAGIC).load(Ordering::Acquire) == TEL_MAGIC,
+            "telemetry region attach refused: bad magic in {} (stale run directory?)",
+            path.display()
+        );
+        let version = probe.word(T_VERSION).load(Ordering::Acquire);
+        ensure!(
+            version == TEL_VERSION,
+            "telemetry region attach refused: plane version {version}, expected {TEL_VERSION}"
+        );
+        let owner = probe.word(T_RANK).load(Ordering::Acquire);
+        ensure!(
+            owner == rank as u64,
+            "telemetry region attach refused: {} owned by rank {owner}, expected {rank}",
+            path.display()
+        );
+        let peers = probe.word(T_PEERS).load(Ordering::Acquire) as usize;
+        ensure!(
+            len == tel_words(peers) * 8,
+            "telemetry region attach refused: {} is {len} bytes but its header \
+             declares {peers} peers ({} bytes)",
+            path.display(),
+            tel_words(peers) * 8
+        );
+        Ok(Arc::new(Self { peers, ..probe }))
+    }
+
+    /// Store the identity header; the magic lands last (Release) so an
+    /// attacher that sees it sees a complete header.
+    fn init_header(&self) {
+        self.word(T_RANK).store(self.rank as u64, Ordering::Relaxed);
+        self.word(T_PEERS).store(self.peers as u64, Ordering::Relaxed);
+        self.word(T_VERSION).store(TEL_VERSION, Ordering::Relaxed);
+        self.word(T_MAGIC).store(TEL_MAGIC, Ordering::Release);
+    }
+
+    #[inline]
+    fn word(&self, i: usize) -> &AtomicU64 {
+        match &self.backing {
+            Backing::Heap(words) => &words[i],
+            Backing::Map(map) => {
+                debug_assert!(i * 8 < map.len());
+                unsafe { &*(map.ptr() as *const AtomicU64).add(i) }
+            }
+        }
+    }
+
+    /// The owning rank.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Staleness rows this region publishes.
+    pub fn peers(&self) -> usize {
+        self.peers
+    }
+
+    /// Current seqlock version (even unless a publish is in flight).
+    pub fn version(&self) -> u64 {
+        self.word(T_SEQ).load(Ordering::Acquire)
+    }
+
+    /// Publish the owner's current view (single writer: the owning
+    /// worker).  Wait-free — a few hundred relaxed stores bracketed by
+    /// the seqlock words; readers racing this either retry onto the
+    /// settled version or report nothing, never a torn snapshot.
+    pub fn publish(&self, stats: &CommStats, iter: u64, objective: f64, samples: u64) {
+        let seq = self.word(T_SEQ);
+        let v = seq.load(Ordering::Relaxed);
+        debug_assert_eq!(v & 1, 0, "single-writer region found mid-publish");
+        seq.store(v + 1, Ordering::Relaxed);
+        // the odd store must be visible before any payload store
+        fence(Ordering::Release);
+        self.word(T_ITER).store(iter, Ordering::Relaxed);
+        self.word(T_OBJ).store(objective.to_bits(), Ordering::Relaxed);
+        self.word(T_SAMPLES).store(samples, Ordering::Relaxed);
+        let mut i = TEL_HEADER;
+        for w in stats.snapshot().to_words() {
+            self.word(i).store(w, Ordering::Relaxed);
+            i += 1;
+        }
+        for p in 0..self.peers {
+            for c in stats.staleness.row(p) {
+                self.word(i).store(c, Ordering::Relaxed);
+                i += 1;
+            }
+        }
+        for ph in 0..PHASES {
+            for c in stats.phases.row(ph) {
+                self.word(i).store(c, Ordering::Relaxed);
+                i += 1;
+            }
+        }
+        debug_assert_eq!(i, tel_words(self.peers));
+        // settle even: everything above happens-before this store
+        seq.store(v + 2, Ordering::Release);
+    }
+
+    /// One consistent snapshot, or `None` if a publish raced every
+    /// retry (or the writer died mid-publish) — a torn view is never
+    /// returned.
+    pub fn read(&self) -> Option<TelSnapshot> {
+        let seq = self.word(T_SEQ);
+        for _ in 0..READ_RETRIES {
+            let v1 = seq.load(Ordering::Acquire);
+            if v1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let iter = self.word(T_ITER).load(Ordering::Relaxed);
+            let objective = f64::from_bits(self.word(T_OBJ).load(Ordering::Relaxed));
+            let samples = self.word(T_SAMPLES).load(Ordering::Relaxed);
+            let mut i = TEL_HEADER;
+            let mut stat_words = [0u64; STAT_WORDS];
+            for w in stat_words.iter_mut() {
+                *w = self.word(i).load(Ordering::Relaxed);
+                i += 1;
+            }
+            let mut staleness = Vec::with_capacity(self.peers);
+            for _ in 0..self.peers {
+                let mut row = [0u64; STALE_BUCKETS];
+                for c in row.iter_mut() {
+                    *c = self.word(i).load(Ordering::Relaxed);
+                    i += 1;
+                }
+                staleness.push(row);
+            }
+            let mut phases = Vec::with_capacity(PHASES);
+            for _ in 0..PHASES {
+                let mut row = [0u64; PHASE_BUCKETS];
+                for c in row.iter_mut() {
+                    *c = self.word(i).load(Ordering::Relaxed);
+                    i += 1;
+                }
+                phases.push(row);
+            }
+            // all payload loads must complete before the confirm load
+            fence(Ordering::Acquire);
+            let v2 = seq.load(Ordering::Relaxed);
+            if v1 != v2 {
+                continue;
+            }
+            let stats = StatsSnapshot::from_words(&stat_words)
+                .expect("telemetry payload sized by STAT_WORDS");
+            return Some(TelSnapshot {
+                rank: self.rank,
+                version: v1,
+                iter,
+                objective,
+                samples,
+                stats,
+                staleness,
+                phases,
+            });
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gaspi::stats::Phase;
+
+    fn sample_stats() -> CommStats {
+        let s = CommStats::default();
+        s.sent.add(7);
+        s.chunk_sent.add(3);
+        s.bytes_sent.add(1024);
+        s.staleness.record(1, 5);
+        s.phases.record(Phase::Compute, 1000);
+        s
+    }
+
+    #[test]
+    fn heap_region_publishes_and_reads_consistently() {
+        let tel = TelemetryRegion::heap(2, 4);
+        assert_eq!(tel.version(), 0);
+        // nothing published yet: a read still succeeds (all zeros)
+        let empty = tel.read().unwrap();
+        assert_eq!(empty.stats.sent, 0);
+        let stats = sample_stats();
+        tel.publish(&stats, 42, 1.5, 9000);
+        let snap = tel.read().unwrap();
+        assert_eq!(snap.rank, 2);
+        assert_eq!(snap.version, 2, "one publish settles at version 2");
+        assert_eq!(snap.iter, 42);
+        assert_eq!(snap.objective, 1.5);
+        assert_eq!(snap.samples, 9000);
+        assert_eq!(snap.stats.sent, 7);
+        assert_eq!(snap.stats.chunk_sent, 3);
+        assert_eq!(snap.stats.bytes_sent, 1024);
+        assert_eq!(snap.staleness.len(), 4);
+        assert_eq!(snap.staleness[1][3], 1, "lag 5 -> bucket 4-7");
+        assert_eq!(snap.phases.len(), PHASES);
+        assert_eq!(snap.phases[Phase::Compute as usize][9], 1);
+        // versions are monotone across publishes
+        stats.sent.add(1);
+        tel.publish(&stats, 43, 1.25, 9500);
+        let again = tel.read().unwrap();
+        assert_eq!(again.version, 4);
+        assert_eq!(again.stats.sent, 8);
+    }
+
+    #[test]
+    fn reader_refuses_a_mid_publish_region() {
+        let tel = TelemetryRegion::heap(0, 1);
+        // simulate a writer parked mid-publish: odd seq word
+        tel.word(T_SEQ).store(1, Ordering::Release);
+        assert!(tel.read().is_none(), "an odd seqlock must never serve a snapshot");
+        tel.word(T_SEQ).store(2, Ordering::Release);
+        assert!(tel.read().is_some());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_region_crosses_mappings_and_refuses_mismatches() {
+        let dir = std::env::temp_dir().join(format!("asgd-tel-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let writer = TelemetryRegion::create_mapped(&dir, 1, 3).unwrap();
+        let reader = TelemetryRegion::attach(&dir, 1).unwrap();
+        assert_eq!(reader.peers(), 3, "peer count travels in the header");
+        let stats = sample_stats();
+        writer.publish(&stats, 7, 0.5, 100);
+        let snap = reader.read().unwrap();
+        assert_eq!(snap.iter, 7);
+        assert_eq!(snap.stats.sent, 7);
+        assert_eq!(snap.staleness[1][3], 1);
+        // discovery sees exactly the created rank files
+        assert_eq!(tel_ranks(&dir), Vec::<usize>::new(), "rank 0 missing -> none");
+        let _r0 = TelemetryRegion::create_mapped(&dir, 0, 3).unwrap();
+        assert_eq!(tel_ranks(&dir), vec![0, 1]);
+        // wrong rank refuses loudly
+        assert!(TelemetryRegion::attach(&dir, 2).is_err());
+        // damaged magic refuses loudly
+        writer.word(T_MAGIC).store(0, Ordering::Release);
+        assert!(TelemetryRegion::attach(&dir, 1).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -17,6 +17,11 @@
 //! * gossip seeding pre-suspects a quorum-condemned corpse without the
 //!   `lease_polls` warm-up, on every backend;
 //! * (`shmem` only) two mappings of the same segment files are coherent;
+//! * the telemetry plane never serves a torn snapshot and its versions
+//!   are monotone (heap and mapped backings), the scrape endpoint agrees
+//!   with the quiesced ledger on every backend, and an injected
+//!   `netdown` outage leaves an ordered flight-recorder trail
+//!   (`link_down` strictly before the matching `reconnect`);
 //! * (end-to-end) a multi-process `shmem` run survives a kill+restore
 //!   fault, and `asgd restore` resumes a durable-checkpoint run.
 //!
@@ -24,10 +29,12 @@
 //! The e2e tests need the built binary (`ASGD_BIN` or `target/...`) and
 //! skip with a loud eprintln when it is missing.
 
-use asgd::gaspi::stats::WorldStats;
+use asgd::gaspi::stats::{FlightKind, WorldStats};
 use asgd::gaspi::{
     LivenessView, ReadOutcome, Shmem, Socket, Topology, Transition, World,
 };
+use asgd::metrics::serve::{MetricsServer, TelSource};
+use asgd::metrics::telemetry::TelemetryRegion;
 use asgd::util::rng::Xoshiro256pp;
 use std::path::PathBuf;
 use std::process::Command;
@@ -659,6 +666,196 @@ fn shmem_dual_mappings_are_coherent() {
     assert_eq!(wb.segment(1).suspicion(), 5, "gossip invisible through second mapping");
     wb.advertise_layout(0, 2);
     assert_eq!(wa.segment(0).current_layout().1, 2, "layout invisible through first mapping");
+}
+
+// ---- telemetry plane conformance --------------------------------------
+
+/// Telemetry conformance: the seqlock region never serves a torn
+/// snapshot and its version word is monotone — on both backings (heap
+/// for `inproc`/`socket` workers, a mapped `tel-NNN.asgdtel` file for
+/// `shmem`).  The writer ticks two ledger counters and publishes header
+/// words that all move in lockstep; a reader observing any mix of
+/// generations has been served a torn snapshot.
+#[test]
+fn conformance_telemetry_snapshots_are_never_torn() {
+    let generations = iters(4000);
+    let dir = TempDir::new("tel-torn");
+    let mapped_writer = TelemetryRegion::create_mapped(&dir.0, 0, 2).unwrap();
+    let mapped_reader = TelemetryRegion::attach(&dir.0, 0).unwrap();
+    let heap = TelemetryRegion::heap(0, 2);
+    for (name, writer, reader) in [
+        ("heap", heap.clone(), heap),
+        ("mapped", mapped_writer, mapped_reader),
+    ] {
+        let stats = Arc::new(WorldStats::new(1));
+        let done = Arc::new(AtomicBool::new(false));
+        let w = {
+            let (stats, done, writer) = (stats.clone(), done.clone(), writer.clone());
+            std::thread::spawn(move || {
+                let rs = stats.rank(0);
+                for g in 1..=generations {
+                    rs.sent.add(1);
+                    rs.received.add(1);
+                    writer.publish(rs, g, g as f64, g);
+                }
+                done.store(true, Ordering::Release);
+            })
+        };
+        let (mut last_version, mut last_iter, mut reads) = (0u64, 0u64, 0u64);
+        while !done.load(Ordering::Acquire) || last_iter < generations {
+            let Some(snap) = reader.read() else { continue };
+            reads += 1;
+            assert_eq!(snap.version % 2, 0, "{name}: odd (mid-write) version served");
+            assert!(snap.version >= last_version, "{name}: version regressed");
+            assert!(snap.iter >= last_iter, "{name}: published iter regressed");
+            (last_version, last_iter) = (snap.version, snap.iter);
+            // every word set published at generation g equals g: any
+            // disagreement is a torn (mixed-generation) snapshot
+            assert_eq!(snap.stats.sent, snap.iter, "{name}: torn payload (sent)");
+            assert_eq!(snap.stats.received, snap.iter, "{name}: torn payload (received)");
+            assert_eq!(snap.samples, snap.iter, "{name}: torn header (samples)");
+            assert_eq!(snap.objective, snap.iter as f64, "{name}: torn header (objective)");
+        }
+        w.join().unwrap();
+        assert!(reads > 0, "{name}: reader never completed a read");
+        assert_eq!(last_iter, generations, "{name}: final publish not visible");
+    }
+}
+
+/// One blocking HTTP/1.1 GET against the in-process metrics endpoint;
+/// returns the response body after asserting a 200.
+fn http_get(addr: std::net::SocketAddr, path: &str) -> String {
+    use std::io::{Read as _, Write as _};
+    let mut s = std::net::TcpStream::connect(addr).expect("connecting to metrics endpoint");
+    write!(s, "GET {path} HTTP/1.1\r\nHost: asgd\r\nConnection: close\r\n\r\n").unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).expect("reading scrape response");
+    let (head, body) = raw.split_once("\r\n\r\n").expect("malformed HTTP response");
+    assert!(head.starts_with("HTTP/1.1 200"), "scrape failed: {head}");
+    body.to_string()
+}
+
+/// Telemetry conformance: at quiesce a scrape through the real HTTP
+/// endpoint agrees *exactly* with the ledger the final `RunReport` is
+/// built from — same totals under the same `for_each_stat!` keys — on
+/// every backend, and the Prometheus rendering carries the same
+/// per-rank counters.
+#[test]
+fn conformance_telemetry_scrape_agrees_with_ledger_at_quiesce() {
+    let (ranks, n_slots, state_len, chunks) = (3usize, 1usize, 32usize, 4usize);
+    let rounds = iters(200);
+    for b in backends("tel-scrape", ranks, n_slots, state_len, chunks) {
+        let l = b.world.layout();
+        for i in 0..rounds {
+            for c in 0..l.n_chunks() {
+                let payload = vec![encode(1, i); l.chunk_len(c)];
+                b.world.put_chunk(1, 0, i, c, &payload, 0);
+            }
+        }
+        b.world.quiesce();
+        // the settle publish the coordinator performs after join+quiesce
+        let regions: Vec<_> = (0..ranks).map(|r| TelemetryRegion::heap(r, ranks)).collect();
+        for (r, reg) in regions.iter().enumerate() {
+            reg.publish(b.world.stats.rank(r), 0, 0.0, 0);
+        }
+        let server =
+            MetricsServer::start("127.0.0.1:0", TelSource::Live(regions)).expect("binding :0");
+        let report = http_get(server.addr(), "/report.json");
+        let j = asgd::util::json::Json::parse(&report).expect("scrape is valid JSON");
+        let total = b.world.stats.total();
+        for (name, value) in total.fields() {
+            assert_eq!(
+                j.get(name).and_then(|v| v.as_f64()),
+                Some(value as f64),
+                "{}: scrape key {name} disagrees with the quiesced ledger",
+                b.name
+            );
+        }
+        assert_eq!(
+            j.get("ranks_scraped").and_then(|v| v.as_f64()),
+            Some(ranks as f64),
+            "{}: a rank's region was not scraped",
+            b.name
+        );
+        let text = http_get(server.addr(), "/metrics");
+        let sent_1 = b.world.stats.rank(1).sent.get();
+        assert!(
+            text.contains(&format!("asgd_msgs_sent{{rank=\"1\"}} {sent_1}")),
+            "{}: /metrics lost rank 1's sender counter",
+            b.name
+        );
+        assert!(
+            text.contains("# TYPE asgd_phase_latency_ns histogram"),
+            "{}: /metrics lost the phase-latency family",
+            b.name
+        );
+    }
+}
+
+/// Flight-recorder conformance: an injected `netdown` outage leaves a
+/// black box that reconstructs it in order — `link_down` recorded
+/// strictly before the matching `reconnect` on the victim sender's own
+/// ring, stamps monotone within the ring — and the link delivers again
+/// afterwards.
+#[test]
+fn conformance_flight_recorder_orders_netdown_before_reconnect() {
+    use asgd::config::FaultPlan;
+    let (ranks, n_slots, state_len, chunks) = (2usize, 1usize, 24usize, 2usize);
+    let plan = FaultPlan::parse("netdown@1-0:5:40").unwrap();
+    let stats = Arc::new(WorldStats::new(ranks));
+    let socket = Socket::loopback_with_faults(
+        ranks,
+        n_slots,
+        state_len,
+        chunks,
+        stats.clone(),
+        plan.net_events.clone(),
+        7,
+    )
+    .expect("creating netdown loopback socket backend");
+    let world = Arc::new(World::with_transport(socket, Topology::flat(ranks)));
+    let l = world.layout();
+    // drive the link into the outage, then keep putting until a Fresh
+    // read proves delivery resumed through the reconnect path
+    let mut settled = None;
+    for t in 0..1000u64 {
+        let payload = vec![encode(1, t); l.chunk_len(0)];
+        world.put_chunk(1, 0, t, 0, &payload, 0);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        if t < 20 {
+            continue; // let the iter-5 outage trigger and elapse first
+        }
+        let mut buf = vec![0.0f32; l.chunk_len(0)];
+        let (out, _, got, _) = world.segment(0).read_block_into(0, 0, 0, &mut buf);
+        if out == ReadOutcome::Fresh && got >= 20 {
+            settled = Some(got);
+            break;
+        }
+    }
+    assert!(settled.is_some(), "link never delivered again after the outage");
+    world.quiesce();
+    let total = world.stats.total();
+    assert!(total.link_down >= 1, "outage never condemned the link");
+    assert!(total.reconnects >= 1, "link recovered without a reconnect");
+    let rings = world.stats.flight_by_rank();
+    let ring = &rings[1]; // the sender owns the 1->0 link and its ring
+    let first_down = ring.iter().position(|e| e.kind == FlightKind::LinkDown);
+    let first_recon = ring.iter().position(|e| e.kind == FlightKind::Reconnect);
+    let (Some(down), Some(recon)) = (first_down, first_recon) else {
+        panic!("flight ring missing the outage: down={first_down:?} recon={first_recon:?}");
+    };
+    assert!(
+        down < recon,
+        "causality inverted: reconnect at index {recon} before link_down at {down}"
+    );
+    for ev in ring {
+        if matches!(ev.kind, FlightKind::LinkDown | FlightKind::Reconnect) {
+            assert_eq!(ev.peer, 0, "1->0 is the only faulted link");
+        }
+    }
+    for w in ring.windows(2) {
+        assert!(w[0].t_ns <= w[1].t_ns, "flight stamps must be monotone within a rank");
+    }
 }
 
 // ---- end-to-end: real worker processes --------------------------------
